@@ -1,0 +1,108 @@
+//! Design-space exploration (ablation for DESIGN.md E7): sweep the
+//! resource budget and quantization bit-width for full MobileNetV2 on the
+//! U280 and report what the folding optimizer finds — the paper's
+//! scalability story ("the resources for each layer can be adjusted
+//! according to computation requirements").
+//!
+//! Run: `cargo run --release --example design_space` (no artifacts needed)
+
+use lutmul::fabric::device::U280;
+use lutmul::graph::arch::mobilenet_v2_full;
+use lutmul::synth::design::LayerMode;
+use lutmul::synth::fold::{optimize_folding, Budget};
+use lutmul::synth::synthesize;
+
+fn main() {
+    let arch = mobilenet_v2_full();
+    println!(
+        "MobileNetV2 @224: {} layers, {:.2} GOPs/image, {:.2}M weights\n",
+        arch.layers.len(),
+        arch.ops_per_image() as f64 / 1e9,
+        arch.total_weights() as f64 / 1e6
+    );
+
+    println!("== budget sweep (U280 fractions, W4A4) ==");
+    println!(
+        "{:>9}{:>12}{:>10}{:>10}{:>10}{:>10}{:>11}{:>9}",
+        "budget", "cycles/img", "FPS", "GOPS", "kLUT", "BRAM36", "DSP", "GOPS/W"
+    );
+    for denom in [1u64, 2, 4, 8, 16, 32, 64] {
+        let budget =
+            if denom == 1 { Budget::whole(&U280) } else { Budget::fraction(&U280, denom) };
+        let (folds, cycles) = optimize_folding(&arch, &budget);
+        let d = synthesize(&arch, &U280, &folds);
+        println!(
+            "{:>9}{:>12}{:>10.0}{:>10.1}{:>10.0}{:>10}{:>11}{:>9.2}",
+            format!("1/{denom}"),
+            cycles,
+            d.fps(),
+            d.gops(),
+            d.luts as f64 / 1e3,
+            d.bram36,
+            d.dsps,
+            d.gops_per_watt()
+        );
+    }
+
+    println!("\n== bit-width sweep (whole U280) ==");
+    println!(
+        "{:>6}{:>12}{:>10}{:>10}{:>10}{:>16}",
+        "bits", "cycles/img", "FPS", "GOPS", "kLUT", "LUTs/mult (Eq3)"
+    );
+    for bits in [2u32, 3, 4, 5, 6, 8] {
+        let mut a = arch.clone();
+        for l in a.layers.iter_mut() {
+            if l.w_bits < 8 {
+                l.w_bits = bits;
+                l.a_bits = bits;
+            }
+        }
+        let (folds, cycles) = optimize_folding(&a, &Budget::whole(&U280));
+        let d = synthesize(&a, &U280, &folds);
+        println!(
+            "{:>6}{:>12}{:>10.0}{:>10.1}{:>10.0}{:>14.1}",
+            bits,
+            cycles,
+            d.fps(),
+            d.gops(),
+            d.luts as f64 / 1e3,
+            lutmul::fabric::cost::luts_per_mult(bits)
+        );
+    }
+
+    println!("\n== per-layer plan at full budget (first 12 + folded tail summary) ==");
+    let (folds, _) = optimize_folding(&arch, &Budget::whole(&U280));
+    let d = synthesize(&arch, &U280, &folds);
+    println!("{:>14}{:>9}{:>7}{:>10}{:>8}{:>5}", "layer", "mode", "fold", "LUTs", "BRAM", "SLR");
+    for s in d.stages.iter().take(12) {
+        println!(
+            "{:>14}{:>9}{:>7}{:>10.0}{:>8.1}{:>5}",
+            s.name,
+            format!("{:?}", s.mode),
+            s.fold,
+            s.luts,
+            s.bram36,
+            s.slr
+        );
+    }
+    let tail: Vec<_> = d.stages.iter().skip(12).collect();
+    let tail_bram: f64 = tail.iter().map(|s| s.bram36).sum();
+    let tail_luts: f64 = tail.iter().map(|s| s.luts).sum();
+    let n_bram_mode = tail.iter().filter(|s| s.mode == LayerMode::BramMac).count();
+    println!(
+        "  ... {} more stages: {:.0} LUTs, {:.0} BRAM36, {} in BramMac mode (folded tail)",
+        tail.len(),
+        tail_luts,
+        tail_bram,
+        n_bram_mode
+    );
+    println!(
+        "\ntotal: {} LUT | {} BRAM36 | {} DSP | {:.0} FPS | {:.1} GOPS | {:.1} W",
+        d.luts,
+        d.bram36,
+        d.dsps,
+        d.fps(),
+        d.gops(),
+        d.power_w
+    );
+}

@@ -1,0 +1,10 @@
+//! Figure 2 reproduction (DESIGN.md E3): accuracy loss and LUTs per
+//! multiplication for 1..8-bit quantization. The accuracy column comes
+//! from the QAT sweep artifact (`make artifacts-fig2`); the LUT column is
+//! Eq. (3) and needs nothing.
+//!
+//! Run: `cargo run --release --example fig2`
+
+fn main() {
+    lutmul::reports::fig2(std::path::Path::new("artifacts/fig2_accuracy.json"));
+}

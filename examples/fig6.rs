@@ -1,0 +1,9 @@
+//! Figure 6 reproduction (DESIGN.md E5): LUT resource breakdown of
+//! MobileNetV2's second convolution layer (1x1, 32->32) under LUTMUL,
+//! vs the paper's published HLS/implementation numbers.
+//!
+//! Run: `cargo run --release --example fig6`
+
+fn main() {
+    lutmul::reports::fig6();
+}

@@ -1,0 +1,137 @@
+//! End-to-end driver (DESIGN.md E8): load the trained, streamlined
+//! MobileNetV2 artifacts, prove the whole stack composes, and serve
+//! batched inference requests.
+//!
+//!  stage 1  golden check — the PJRT runtime executes the AOT HLO (with
+//!           the Pallas LUTMUL kernels inside) and must agree bit-exactly
+//!           with the Rust reference executor and the dataflow simulator;
+//!  stage 2  accelerator timing — run the full test set through the
+//!           cycle-level dataflow pipeline, report simulated FPS/GOPS at
+//!           333 MHz and classification accuracy;
+//!  stage 3  serving — push a batched request load through the async
+//!           coordinator (router -> batcher -> worker pool) and report
+//!           latency percentiles and throughput.
+//!
+//! Needs `make artifacts`. Run:
+//!   cargo run --release --example mobilenet_serve [-- <requests>]
+
+use std::sync::Arc;
+
+use lutmul::coordinator::{argmax, Backend, Coordinator, ServeConfig};
+use lutmul::dataflow::{FoldConfig, Pipeline};
+use lutmul::graph::executor::{Datapath, Executor, Tensor};
+use lutmul::graph::network::Network;
+use lutmul::runtime::{Artifacts, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let requests: usize =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(2048);
+    let artifacts = Artifacts::new("artifacts");
+    let net = Network::load(artifacts.network_json())?;
+    let (images, labels) =
+        artifacts.load_test_set(net.meta.image_size, net.meta.image_size, net.meta.in_ch)?;
+    let size = net.meta.image_size;
+    println!(
+        "network: {} ops, W{}A{}, deployed acc (export) {:.2}% | {} test images",
+        net.ops.len(),
+        net.meta.w_bits,
+        net.meta.a_bits,
+        100.0 * net.meta.acc_int,
+        images.len()
+    );
+
+    // ---- stage 1: three-way golden check ------------------------------
+    println!("\n[1/3] golden check (PJRT HLO vs executor vs dataflow sim)");
+    let rt = Runtime::load(artifacts.model_hlo(1), 1, size, size, net.meta.in_ch, net.meta.num_classes)?;
+    let ex = Executor::new(&net, Datapath::Arithmetic);
+    let mut pipe = Pipeline::build(&net, &FoldConfig::fully_parallel(net.convs().count()), 16);
+    let n_check = 8;
+    let sim = pipe.run(&images[..n_check]);
+    for i in 0..n_check {
+        let golden = rt.run(&images[i])?;
+        let t = Tensor::from_hwc(size, size, net.meta.in_ch, images[i].clone());
+        anyhow::ensure!(golden[0] == ex.execute(&t), "executor diverged on image {i}");
+        anyhow::ensure!(golden[0] == sim.logits[i], "simulator diverged on image {i}");
+    }
+    println!("      {n_check}/{n_check} images bit-exact across all three backends");
+
+    // ---- stage 2: accelerator timing on the full test set -------------
+    println!("\n[2/3] dataflow accelerator simulation (full test set)");
+    let mut pipe = Pipeline::build(&net, &FoldConfig::fully_parallel(net.convs().count()), 16);
+    let t0 = std::time::Instant::now();
+    let rep = pipe.run(&images);
+    let host = t0.elapsed();
+    let correct = rep
+        .logits
+        .iter()
+        .zip(&labels)
+        .filter(|(l, &y)| argmax(l) == y as usize)
+        .count();
+    let ops = lutmul::graph::mobilenet_v2_small().ops_per_image();
+    let fps = rep.steady_state_fps(333.0);
+    println!(
+        "      {} images | accuracy {:.2}% | {} total cycles | steady-state {} cycles/img",
+        images.len(),
+        100.0 * correct as f64 / images.len() as f64,
+        rep.cycles,
+        rep.steady_state_cycles_per_image
+    );
+    println!(
+        "      accelerator @333MHz: {:.0} FPS, {:.1} GOPS | host sim wall time {:.2?} ({:.0} img/s)",
+        fps,
+        fps * ops as f64 / 1e9,
+        host,
+        images.len() as f64 / host.as_secs_f64()
+    );
+    let busiest = rep.stages.iter().max_by_key(|s| s.fires).unwrap();
+    println!("      busiest stage: {} ({} fires)", busiest.name, busiest.fires);
+
+    // ---- stage 3: batched serving ------------------------------------
+    println!("\n[3/3] serving {requests} requests (router -> batcher -> 2 workers)");
+    let coord = Coordinator::start(
+        Arc::new(net),
+        ServeConfig {
+            backend: Backend::Reference,
+            workers: 2,
+            max_batch: 16,
+            ..Default::default()
+        },
+    );
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::with_capacity(requests);
+    let mut rejected = 0usize;
+    let mut correct = 0usize;
+    for i in 0..requests {
+        match coord.submit(images[i % images.len()].clone()) {
+            Ok(t) => pending.push((i, t)),
+            Err(_) => rejected += 1,
+        }
+        // drain in windows to model a closed-loop client pool
+        if pending.len() >= 256 {
+            for (j, t) in pending.drain(..) {
+                let r = t.wait()?;
+                if r.class == labels[j % labels.len()] as usize {
+                    correct += 1;
+                }
+            }
+        }
+    }
+    for (j, t) in pending.drain(..) {
+        let r = t.wait()?;
+        if r.class == labels[j % labels.len()] as usize {
+            correct += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let m = coord.metrics();
+    println!(
+        "      {} served ({rejected} rejected) in {:.2?} | accuracy {:.2}%",
+        m.completed,
+        wall,
+        100.0 * correct as f64 / (requests - rejected) as f64
+    );
+    println!("      {m}");
+    coord.shutdown();
+    println!("\nOK — all layers compose (L1 Pallas kernels inside the AOT HLO, L2 model, L3 runtime).");
+    Ok(())
+}

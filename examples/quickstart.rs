@@ -1,0 +1,55 @@
+//! Quickstart: the LUTMUL idea in five minutes, no artifacts needed.
+//!
+//! 1. Embed weights into LUT6_2 primitives (Figure 5) and multiply by
+//!    *reading the LUTs*.
+//! 2. Count resources with Eq. (3) vs a general multiplier.
+//! 3. See why that beats the DSP roofline at equal resources (Figure 1).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use lutmul::fabric::cost::{luts_per_general_mult, luts_per_mult};
+use lutmul::fabric::device::U280;
+use lutmul::fabric::lutmul::ConstMultiplier;
+use lutmul::roofline;
+
+fn main() {
+    println!("== 1. Embed weights 1 and -3 into LUT6_2 primitives (Figure 5)");
+    let m = ConstMultiplier::new(1, -3, 4);
+    println!("   INIT vectors ({} physical LUT6 for 2 weights):", m.lut_count());
+    for s in m.init_strings() {
+        println!("     {s}");
+    }
+    println!("   multiplication by LUT readout (weight -3):");
+    for a in [0u32, 1, 7, 15] {
+        println!("     -3 x {a:>2} = {:>4}", m.eval(true, a));
+    }
+    assert_eq!(m.eval(true, 15), -45);
+
+    println!("\n== 2. Resource cost per 4-bit multiplication (Eq. 3)");
+    println!("   LUTMUL embedded:   {:>5.1} LUT6", luts_per_mult(4));
+    println!("   general multiplier:{:>5.1} LUT6", luts_per_general_mult(4));
+    println!(
+        "   -> {:.1}x fewer LUTs, so {:.0}x more parallel multipliers",
+        luts_per_general_mult(4) / luts_per_mult(4),
+        luts_per_general_mult(4) / luts_per_mult(4)
+    );
+
+    println!("\n== 3. Why this exceeds the DSP roofline (1/64 of U280, 333 MHz)");
+    let slice = U280.fraction(64);
+    let f = U280.max_freq_mhz * 1e6;
+    let lut_peak = roofline::lutmul_peak(&slice, 4, f);
+    let dsp_peak = roofline::dsp_peak(&slice, 4, f);
+    println!("   DSP-based peak (p=4 packing): {:>8.1} GOPS", dsp_peak / 1e9);
+    println!("   LUTMUL peak:                  {:>8.1} GOPS", lut_peak / 1e9);
+    println!(
+        "   LUTs outnumber DSPs {:.0}x on the {}; LUTMUL converts that into {:.1}x peak",
+        U280.luts as f64 / U280.dsps as f64,
+        U280.name,
+        lut_peak / dsp_peak
+    );
+
+    println!("\nNext steps:");
+    println!("  make artifacts                             # train + AOT-lower the model");
+    println!("  cargo run --release --example mobilenet_serve   # end-to-end serving");
+    println!("  cargo run --release --example table2            # reproduce Table 2");
+}

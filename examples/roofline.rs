@@ -1,0 +1,14 @@
+//! Table 1 + Figure 1 reproduction (DESIGN.md E1/E2).
+//!
+//! Run: `cargo run --release --example roofline [-- table1|fig1]`
+
+fn main() {
+    let what = std::env::args().nth(1).unwrap_or_else(|| "both".into());
+    if what == "table1" || what == "both" {
+        lutmul::reports::table1();
+        println!();
+    }
+    if what == "fig1" || what == "both" {
+        lutmul::reports::fig1();
+    }
+}

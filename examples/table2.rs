@@ -1,0 +1,9 @@
+//! Table 2 reproduction (DESIGN.md E6): MobileNet accelerator comparison —
+//! published rows from the cited papers plus our regenerated LUTMUL row
+//! (full MobileNetV2 synthesized on the U280 by the folding optimizer).
+//!
+//! Run: `cargo run --release --example table2`
+
+fn main() {
+    lutmul::reports::table2();
+}

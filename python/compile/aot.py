@@ -1,0 +1,209 @@
+"""AOT pipeline: train -> streamline -> artifacts (HLO text + network.json).
+
+Emits HLO *text* (NOT ``lowered.compiler_ir("hlo")`` protos or
+``.serialize()``): jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which the Rust side's xla_extension 0.5.1 rejects; the HLO text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (all under ``artifacts/``):
+
+  model.hlo.txt        deployed integer network, batch=1 (golden model the
+                       Rust runtime executes on the request path for
+                       verification)
+  model_b8.hlo.txt     same, batch=8 (batched verification / throughput)
+  network.json         integer network description: per-layer weight codes,
+                       multi-threshold units, shapes — the input to the
+                       Rust graph compiler / dataflow simulator
+  test_images.bin      uint8 activation codes [N, 16, 16, 3] (raw bytes)
+  test_labels.bin      uint8 labels [N]
+  fig2_accuracy.json   Figure 2 sweep results (only with --fig2)
+  params.npz           cached trained parameters (skip retraining on re-run)
+
+Python runs ONCE at build time (``make artifacts``); the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train as T
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format).
+
+    ``print_large_constants=True`` is load-bearing: the default HLO printer
+    elides big literals as ``constant({...})``, which the Rust side's old
+    text parser silently mis-fills — the weight tensors embedded in the
+    integer network would be garbage.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_int_model(net: M.IntNetwork, batch: int) -> str:
+    """Lower the deployed integer forward (Pallas kernels inside) to HLO text."""
+    size, ch = net.meta["image_size"], net.meta["in_ch"]
+    spec = jax.ShapeDtypeStruct((batch, size, size, ch), jnp.int32)
+
+    def fn(codes):
+        return (M.forward_int(net, codes, use_pallas=True),)
+
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+class _NpEncoder(json.JSONEncoder):
+    def default(self, o):
+        if isinstance(o, np.ndarray):
+            return o.tolist()
+        if isinstance(o, (np.integer,)):
+            return int(o)
+        if isinstance(o, (np.floating,)):
+            return float(o)
+        return super().default(o)
+
+
+def export_network_json(net: M.IntNetwork, path: str, extra_meta: dict | None = None):
+    meta = dict(net.meta)
+    if extra_meta:
+        meta.update(extra_meta)
+    with open(path, "w") as f:
+        json.dump({"meta": meta, "ops": net.ops}, f, cls=_NpEncoder)
+
+
+def _flatten_params(tree, prefix=""):
+    flat = {}
+    for k, v in tree.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            flat.update(_flatten_params(v, key + "/"))
+        else:
+            flat[key] = np.asarray(v)
+    return flat
+
+
+def _unflatten_params(flat):
+    tree: dict = {}
+    for key, v in flat.items():
+        parts = key.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(v)
+    return tree
+
+
+def save_checkpoint(path, params, bn_state, scales):
+    flat = _flatten_params({"params": params, "bn": bn_state})
+    flat["__scales__"] = np.array(json.dumps(scales))
+    np.savez(path, **flat)
+
+
+def load_checkpoint(path):
+    z = np.load(path, allow_pickle=False)
+    scales = json.loads(str(z["__scales__"]))
+    flat = {k: z[k] for k in z.files if k != "__scales__"}
+    tree = _unflatten_params(flat)
+    return tree["params"], tree["bn"], scales
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt")
+    ap.add_argument("--w-bits", type=int, default=4)
+    ap.add_argument("--a-bits", type=int, default=4)
+    ap.add_argument("--epochs-fp", type=int, default=15)
+    ap.add_argument("--epochs-qat", type=int, default=12)
+    ap.add_argument("--batches", type=int, nargs="+", default=[1, 8])
+    ap.add_argument("--fig2", action="store_true", help="also run the Figure 2 sweep")
+    ap.add_argument("--fig2-epochs", type=int, default=6)
+    ap.add_argument("--retrain", action="store_true", help="ignore cached params")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    art_dir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(art_dir, exist_ok=True)
+    ckpt = os.path.join(art_dir, "params.npz")
+
+    from . import datasets
+
+    data = datasets.make_dataset(seed=args.seed)
+    program = M.build_program(w_bits=args.w_bits, a_bits=args.a_bits)
+
+    if os.path.exists(ckpt) and not args.retrain:
+        print(f"loading cached params from {ckpt}")
+        params, bn_state, scales = load_checkpoint(ckpt)
+        net = M.streamline(params, bn_state, scales, program)
+        acc_int = T.evaluate_int(net, data[2], data[3], use_pallas=False)
+        acc_fp32 = acc_qat = -1.0
+    else:
+        r = T.train_model(
+            args.w_bits,
+            args.a_bits,
+            epochs_fp=args.epochs_fp,
+            epochs_qat=args.epochs_qat,
+            seed=args.seed,
+            data=data,
+        )
+        params, bn_state, scales = r["params"], r["bn_state"], r["scales"]
+        net = r["net"]
+        acc_int, acc_fp32, acc_qat = r["acc_int"], r["acc_fp32"], r["acc_qat"]
+        save_checkpoint(ckpt, params, bn_state, scales)
+
+    # HLO artifacts
+    for b in args.batches:
+        path = args.out if b == 1 else args.out.replace(".hlo.txt", f"_b{b}.hlo.txt")
+        text = lower_int_model(net, b)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars, batch={b})")
+
+    # Test set (raw bytes, read by the Rust examples/benches)
+    x_test, y_test = data[2], data[3]
+    codes = np.asarray(M.encode_input(jnp.asarray(x_test)), np.uint8)
+    codes.tofile(os.path.join(art_dir, "test_images.bin"))
+    np.asarray(y_test, np.uint8).tofile(os.path.join(art_dir, "test_labels.bin"))
+
+    # Golden logits for the first 32 test images (bit-exactness check target)
+    golden = np.asarray(
+        M.forward_int(net, M.encode_input(jnp.asarray(x_test[:32])), use_pallas=False)
+    )
+
+    export_network_json(
+        net,
+        os.path.join(art_dir, "network.json"),
+        extra_meta={
+            "w_bits": args.w_bits,
+            "a_bits": args.a_bits,
+            "acc_int": acc_int,
+            "acc_fp32": acc_fp32,
+            "acc_qat": acc_qat,
+            "n_test": int(len(y_test)),
+            "golden_logits": golden,
+        },
+    )
+    print(f"wrote network.json (deployed acc={acc_int:.4f})")
+
+    if args.fig2:
+        res = T.run_fig2_sweep(
+            epochs_fp=args.fig2_epochs, epochs_qat=args.fig2_epochs, seed=args.seed
+        )
+        with open(os.path.join(art_dir, "fig2_accuracy.json"), "w") as f:
+            json.dump(res, f, indent=2)
+        print("wrote fig2_accuracy.json")
+
+
+if __name__ == "__main__":
+    main()

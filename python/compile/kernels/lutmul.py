@@ -1,0 +1,161 @@
+"""Pallas LUTMUL kernels — the paper's compute hot-spot (Algorithm 1).
+
+The paper embeds quantized weights into FPGA LUT6 primitives so that a
+multiplication is a table lookup indexed by the activation code.  The TPU
+adaptation (see DESIGN.md section "Hardware adaptation") keeps the core
+insight — *weights-stationary product tables indexed by activation codes* —
+but restructures the lookup for the TPU memory/compute hierarchy:
+
+  * the product table ``T[co, ci, a] = w[co, ci] * a`` is precomputed at
+    compile time (the analog of LUT INIT generation, Figure 5) and kept
+    resident in VMEM across all grid steps (weights-stationary, the analog
+    of ROM-embedded weights);
+  * the per-element lookup is expressed as a **one-hot contraction**:
+    ``out[m, co] = sum_{ci, a} onehot(acts)[m, ci, a] * T[co, ci, a]``.
+    On real TPU hardware this maps onto the MXU systolic array (a matmul
+    with a widened ``CIN * A`` contraction) instead of a scalar gather,
+    which the TPU memory system would serialize; under ``interpret=True``
+    (mandatory on CPU PJRT) it executes as plain HLO.
+  * the grid streams output-pixel tiles (``block_m`` rows of the im2col
+    matrix) through VMEM — the analog of the paper's FIFO-streamed
+    activations with II=1.
+
+Correctness: bit-exact integer equality against ``ref.py`` (pytest +
+hypothesis sweep shapes/dtypes/bit-widths).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_DEFAULT_BLOCK_M = 128
+
+
+def _lutmul_matmul_kernel(acts_ref, table_ref, out_ref, *, a_size: int):
+    """One grid step: [block_m, CIN] codes x [COUT, CIN, A] table -> [block_m, COUT]."""
+    acts = acts_ref[...].astype(jnp.int32)               # [bm, CIN]
+    table = table_ref[...].astype(jnp.int32)             # [COUT, CIN, A]
+    bm, cin = acts.shape
+    cout = table.shape[0]
+    codes = jnp.arange(a_size, dtype=jnp.int32)
+    # One-hot over the activation code axis: the "address decode" of the LUT.
+    onehot = (acts[:, :, None] == codes[None, None, :]).astype(jnp.int32)
+    # Contract over (CIN, A) — a single [bm, CIN*A] x [CIN*A, COUT] matmul,
+    # which is the MXU-friendly form of the LUT readout + adder tree.
+    lhs = onehot.reshape(bm, cin * a_size)
+    rhs = table.reshape(cout, cin * a_size)
+    out_ref[...] = jax.lax.dot_general(
+        lhs,
+        rhs,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def _lutmul_depthwise_kernel(acts_ref, table_ref, out_ref, *, a_size: int):
+    """One grid step: [block_m, C, K] codes x [C, K, A] table -> [block_m, C]."""
+    acts = acts_ref[...].astype(jnp.int32)                # [bm, C, K]
+    table = table_ref[...].astype(jnp.int32)              # [C, K, A]
+    codes = jnp.arange(a_size, dtype=jnp.int32)
+    onehot = (acts[..., None] == codes[None, None, None, :]).astype(jnp.int32)
+    # out[m, c] = sum_{k, a} onehot[m, c, k, a] * table[c, k, a]
+    out_ref[...] = (onehot * table[None]).sum(axis=(2, 3)).astype(jnp.int32)
+
+
+def _pad_rows(x: jnp.ndarray, block_m: int) -> tuple[jnp.ndarray, int]:
+    m = x.shape[0]
+    padded = pl.cdiv(m, block_m) * block_m
+    if padded != m:
+        pad = [(0, padded - m)] + [(0, 0)] * (x.ndim - 1)
+        x = jnp.pad(x, pad)
+    return x, m
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def lutmul_matmul(
+    acts: jnp.ndarray,
+    table: jnp.ndarray,
+    *,
+    block_m: int = _DEFAULT_BLOCK_M,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """LUT-based matrix multiply: ``out[m, co] = sum_ci table[co, ci, acts[m, ci]]``.
+
+    Args:
+      acts: activation codes ``[M, CIN]`` (unsigned, ``< table.shape[2]``).
+      table: product table ``[COUT, CIN, A]`` (see ``ref.build_table``).
+      block_m: rows of the im2col matrix per grid step (VMEM tile).
+      interpret: must stay True on CPU PJRT (Mosaic custom-calls cannot run
+        on the CPU plugin); the lowered HLO is identical maths either way.
+
+    Returns:
+      int32 accumulators ``[M, COUT]``.
+    """
+    cout, cin, a_size = table.shape
+    acts_p, m = _pad_rows(acts.astype(jnp.int32), block_m)
+    grid = (acts_p.shape[0] // block_m,)
+    out = pl.pallas_call(
+        functools.partial(_lutmul_matmul_kernel, a_size=a_size),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, cin), lambda i: (i, 0)),
+            pl.BlockSpec((cout, cin, a_size), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, cout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((acts_p.shape[0], cout), jnp.int32),
+        interpret=interpret,
+    )(acts_p, table.astype(jnp.int32))
+    return out[:m]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def lutmul_depthwise(
+    acts: jnp.ndarray,
+    table: jnp.ndarray,
+    *,
+    block_m: int = _DEFAULT_BLOCK_M,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Depthwise LUT multiply: ``out[m, c] = sum_k table[c, k, acts[m, c, k]]``.
+
+    Args:
+      acts: activation codes ``[M, C, K]``.
+      table: product table ``[C, K, A]``.
+
+    Returns:
+      int32 accumulators ``[M, C]``.
+    """
+    c, k, a_size = table.shape
+    acts_p, m = _pad_rows(acts.astype(jnp.int32), block_m)
+    grid = (acts_p.shape[0] // block_m,)
+    out = pl.pallas_call(
+        functools.partial(_lutmul_depthwise_kernel, a_size=a_size),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, c, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((c, k, a_size), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((acts_p.shape[0], c), jnp.int32),
+        interpret=interpret,
+    )(acts_p, table.astype(jnp.int32))
+    return out[:m]
+
+
+def vmem_footprint_bytes(
+    cout: int, cin: int, a_size: int, block_m: int = _DEFAULT_BLOCK_M
+) -> int:
+    """Estimated VMEM bytes for one grid step (table + act tile + onehot + out).
+
+    Used by the performance notes in EXPERIMENTS.md to check that a layer's
+    resident table plus streaming tile fits the ~16 MiB VMEM budget.
+    """
+    table = cout * cin * a_size * 4
+    acts = block_m * cin * 4
+    onehot = block_m * cin * a_size * 4
+    out = block_m * cout * 4
+    return table + acts + onehot + out

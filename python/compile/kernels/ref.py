@@ -1,0 +1,102 @@
+"""Pure-jnp oracles for the LUTMUL kernels.
+
+These are the correctness references for the Pallas kernels in
+``lutmul.py``: a direct table *gather* implementation of Algorithm 1 of the
+paper (``mul[co][ci] = lut[co][ci][input[ci]]`` followed by an accumulate
+over ``ci``).  All arithmetic is exact integer arithmetic, so the Pallas
+kernels are required to match these bit-for-bit (``==``, not allclose).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def build_table(w_codes: jnp.ndarray, a_bits: int) -> jnp.ndarray:
+    """Precompute the weight x activation product table (the "LUT INIT").
+
+    Args:
+      w_codes: integer weight codes, shape ``[COUT, CIN]`` (signed, two's
+        complement range for the weight bit-width).
+      a_bits: activation bit-width; activations are unsigned codes in
+        ``[0, 2**a_bits)`` (the paper uses uint4 activations).
+
+    Returns:
+      ``table[co, ci, a] = w_codes[co, ci] * a`` with shape
+      ``[COUT, CIN, 2**a_bits]``, dtype int32.
+    """
+    acts = jnp.arange(2**a_bits, dtype=jnp.int32)
+    return w_codes.astype(jnp.int32)[:, :, None] * acts[None, None, :]
+
+
+def lutmul_matmul_ref(acts: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Reference LUT-based matrix multiply (Algorithm 1).
+
+    Args:
+      acts: activation codes, shape ``[M, CIN]``, values in ``[0, A)``.
+      table: product table, shape ``[COUT, CIN, A]``.
+
+    Returns:
+      accumulator ``out[m, co] = sum_ci table[co, ci, acts[m, ci]]``,
+      shape ``[M, COUT]``, dtype int32.
+    """
+    m, cin = acts.shape
+    cout, cin2, _ = table.shape
+    assert cin == cin2, (acts.shape, table.shape)
+    # Gather per (m, co, ci): table[co, ci, acts[m, ci]].
+    idx = acts.astype(jnp.int32)[:, None, :]            # [M, 1, CIN]
+    gathered = jnp.take_along_axis(
+        table.astype(jnp.int32)[None],                   # [1, COUT, CIN, A]
+        jnp.broadcast_to(idx[:, :, :, None], (m, cout, cin, 1)),
+        axis=3,
+    )[..., 0]                                            # [M, COUT, CIN]
+    return gathered.sum(axis=2).astype(jnp.int32)
+
+
+def lutmul_depthwise_ref(acts: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Reference depthwise LUT multiply.
+
+    Args:
+      acts: activation codes, shape ``[M, C, K]`` (K = kernel taps).
+      table: product table, shape ``[C, K, A]``.
+
+    Returns:
+      ``out[m, c] = sum_k table[c, k, acts[m, c, k]]``, shape ``[M, C]``.
+    """
+    m, c, k = acts.shape
+    c2, k2, _ = table.shape
+    assert (c, k) == (c2, k2), (acts.shape, table.shape)
+    gathered = jnp.take_along_axis(
+        table.astype(jnp.int32)[None],                   # [1, C, K, A]
+        acts.astype(jnp.int32)[:, :, :, None],           # [M, C, K, 1]
+        axis=3,
+    )[..., 0]                                            # [M, C, K]
+    return gathered.sum(axis=2).astype(jnp.int32)
+
+
+def multithreshold_ref(
+    acc: jnp.ndarray,
+    thresholds: jnp.ndarray,
+    signs: jnp.ndarray,
+    consts: jnp.ndarray,
+) -> jnp.ndarray:
+    """Reference multi-threshold activation unit (FINN-style streamlining).
+
+    Args:
+      acc: integer accumulators, shape ``[M, C]``.
+      thresholds: per-channel ascending thresholds, shape ``[C, L]``
+        (L = 2**out_bits - 1).
+      signs: per-channel comparison direction, shape ``[C]``; +1 compares
+        ``acc >= T`` (positive BN gain), -1 compares ``acc <= T`` (negative
+        gain), 0 means the channel is constant.
+      consts: per-channel constant codes used when ``signs == 0``.
+
+    Returns:
+      output codes in ``[0, L]``, shape ``[M, C]``, dtype int32.
+    """
+    acc = acc.astype(jnp.int32)[:, :, None]              # [M, C, 1]
+    t = thresholds.astype(jnp.int32)[None]               # [1, C, L]
+    ge = (acc >= t).sum(axis=2).astype(jnp.int32)
+    le = (acc <= t).sum(axis=2).astype(jnp.int32)
+    s = signs.astype(jnp.int32)[None]
+    return jnp.where(s > 0, ge, jnp.where(s < 0, le, consts[None].astype(jnp.int32)))

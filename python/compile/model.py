@@ -1,0 +1,499 @@
+"""L2 — Quantized MobileNetV2 (paper sections 3.2-3.6).
+
+One architecture *program* (a list of op dicts) drives three interpreters:
+
+  * ``forward_float``  — QAT training/eval forward: float convs with
+    fake-quantized (STE) weights and activations, batch-norm, residual
+    adds. Used for training and for the fp32 baseline (``quantized=False``).
+  * ``streamline``     — converts trained float params into the deployed
+    integer network (weight codes + multi-threshold units), the analog of
+    the paper's ONNX -> streamlining -> HLS step.
+  * ``forward_int``    — deployed integer forward over activation codes,
+    using the Pallas LUTMUL kernels (or the jnp oracle).  This is the
+    golden model the Rust dataflow simulator must match bit-exactly, and
+    the function AOT-lowered to HLO for the Rust PJRT runtime.
+
+The network is a scaled-down MobileNetV2: stem conv, four inverted-residual
+blocks (expand 1x1 -> depthwise 3x3 -> project 1x1, residual where
+stride=1 and shapes match), head 1x1 conv, global pooling, linear
+classifier.  First and last layers are 8-bit, the rest W{w}A{a} per the
+paper (default W4A4, channel-wise weight quantization).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import quantize as q
+from .kernels import lutmul as lk
+from .kernels import ref as kref
+
+# ---------------------------------------------------------------------------
+# Architecture program
+# ---------------------------------------------------------------------------
+
+IMAGE_SIZE = 16
+IN_CH = 3
+NUM_CLASSES = 10
+
+# (expand_ratio, out_ch, stride, residual)
+_IR_BLOCKS = [
+    (2, 24, 2, False),
+    (2, 24, 1, True),
+    (2, 32, 2, False),
+    (2, 32, 1, True),
+]
+_STEM_CH = 16
+_HEAD_CH = 64
+
+
+def build_program(
+    w_bits: int = 4,
+    a_bits: int = 4,
+    image_size: int = IMAGE_SIZE,
+    num_classes: int = NUM_CLASSES,
+) -> list[dict[str, Any]]:
+    """Build the op program for MobileNetV2-small at the given bit-widths.
+
+    First (stem) and last (classifier) layers are 8-bit weights; input is
+    8-bit; everything else is W{w_bits}A{a_bits} (paper section 4.1).
+    """
+    prog: list[dict[str, Any]] = []
+    prog.append({"op": "input", "bits": 8, "scale_key": "in"})
+
+    def conv(name, kind, cin, cout, k, stride, wb, out_bits, in_key, out_key):
+        prog.append(
+            {
+                "op": "conv",
+                "name": name,
+                "kind": kind,
+                "cin": cin,
+                "cout": cout,
+                "k": k,
+                "stride": stride,
+                "pad": (k - 1) // 2,
+                "w_bits": wb,
+                "out_bits": out_bits,
+                "in_scale_key": in_key,
+                "out_scale_key": out_key,
+            }
+        )
+
+    conv("stem", "std", IN_CH, _STEM_CH, 3, 1, 8, a_bits, "in", "stem_out")
+    cin, in_key = _STEM_CH, "stem_out"
+    for bi, (exp, cout, stride, res) in enumerate(_IR_BLOCKS):
+        mid = cin * exp
+        n = f"ir{bi}"
+        if res:
+            # Residual blocks share the activation scale across the block
+            # input, the project output, and the sum, so the residual join
+            # is an exact saturating integer add (DESIGN.md).
+            out_key = in_key
+            prog.append({"op": "res_push"})
+        else:
+            out_key = f"{n}_out"
+        conv(f"{n}_exp", "pw", cin, mid, 1, 1, w_bits, a_bits, in_key, f"{n}_mid1")
+        conv(f"{n}_dw", "dw", mid, mid, 3, stride, w_bits, a_bits, f"{n}_mid1", f"{n}_mid2")
+        conv(f"{n}_proj", "pw", mid, cout, 1, 1, w_bits, a_bits, f"{n}_mid2", out_key)
+        if res:
+            prog.append({"op": "res_add", "scale_key": out_key, "bits": a_bits})
+        cin, in_key = cout, out_key
+    conv("head", "pw", cin, _HEAD_CH, 1, 1, w_bits, a_bits, in_key, "head_out")
+    prog.append({"op": "pool_sum"})
+    prog.append(
+        {
+            "op": "dense",
+            "name": "fc",
+            "cin": _HEAD_CH,
+            "cout": num_classes,
+            "w_bits": 8,
+            "in_scale_key": "head_out",
+        }
+    )
+    return prog
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(rng: jax.Array, program: list[dict]) -> dict:
+    """He-init conv/dense weights + identity batch-norm per conv."""
+    params: dict[str, Any] = {}
+    for op in program:
+        if op["op"] == "conv":
+            k, cin, cout, kind = op["k"], op["cin"], op["cout"], op["kind"]
+            rng, sub = jax.random.split(rng)
+            if kind == "dw":
+                shape = (k, k, 1, cout)  # feature_group_count = cout
+                fan_in = k * k
+            else:
+                shape = (k, k, cin, cout)
+                fan_in = k * k * cin
+            w = jax.random.normal(sub, shape, jnp.float32) * np.sqrt(2.0 / fan_in)
+            params[op["name"]] = {
+                "w": w,
+                "gamma": jnp.ones((cout,), jnp.float32),
+                "beta": jnp.zeros((cout,), jnp.float32),
+            }
+        elif op["op"] == "dense":
+            rng, sub = jax.random.split(rng)
+            w = jax.random.normal(
+                sub, (op["cin"], op["cout"]), jnp.float32
+            ) * np.sqrt(1.0 / op["cin"])
+            params[op["name"]] = {"w": w, "b": jnp.zeros((op["cout"],), jnp.float32)}
+    return params
+
+
+def init_bn_state(program: list[dict]) -> dict:
+    state = {}
+    for op in program:
+        if op["op"] == "conv":
+            state[op["name"]] = {
+                "mean": jnp.zeros((op["cout"],), jnp.float32),
+                "var": jnp.ones((op["cout"],), jnp.float32),
+            }
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Float (training) interpreter
+# ---------------------------------------------------------------------------
+
+_BN_EPS = 1e-5
+_BN_MOMENTUM = 0.9
+
+
+def _conv_float(x, w, kind, stride, pad):
+    dn = jax.lax.conv_dimension_numbers(x.shape, w.shape, ("NHWC", "HWIO", "NHWC"))
+    groups = w.shape[3] if kind == "dw" else 1
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=dn,
+        feature_group_count=groups,
+    )
+
+
+def forward_float(
+    params: dict,
+    bn_state: dict,
+    scales: dict | None,
+    program: list[dict],
+    x: jnp.ndarray,
+    *,
+    train: bool = False,
+    quantized: bool = True,
+    record: dict | None = None,
+):
+    """Float-domain forward pass.
+
+    Args:
+      scales: activation-scale dict (``scale_key`` -> float); may be None
+        only when ``quantized=False`` (fp32 baseline / calibration pass).
+      train: use batch statistics and return an updated ``bn_state``.
+      quantized: apply STE fake-quantization to weights and activations.
+      record: if given, activations are appended per scale_key
+        (calibration pass).
+
+    Returns:
+      (logits, new_bn_state)
+    """
+    new_state = dict(bn_state)
+    res_stack: list[jnp.ndarray] = []
+
+    def maybe_record(key, t):
+        if record is not None:
+            record.setdefault(key, []).append(t)
+
+    for op in program:
+        kind = op["op"]
+        if kind == "input":
+            maybe_record(op["scale_key"], x)
+            if quantized:
+                x = q.quantize_act(x, scales[op["scale_key"]], op["bits"])
+        elif kind == "conv":
+            p = params[op["name"]]
+            w = q.quantize_weight(p["w"], op["w_bits"], channel_axis=3) if quantized else p["w"]
+            x = _conv_float(x, w, op["kind"], op["stride"], op["pad"])
+            if train:
+                mean = x.mean(axis=(0, 1, 2))
+                var = x.var(axis=(0, 1, 2))
+                new_state[op["name"]] = {
+                    "mean": _BN_MOMENTUM * bn_state[op["name"]]["mean"]
+                    + (1 - _BN_MOMENTUM) * mean,
+                    "var": _BN_MOMENTUM * bn_state[op["name"]]["var"]
+                    + (1 - _BN_MOMENTUM) * var,
+                }
+            else:
+                mean = bn_state[op["name"]]["mean"]
+                var = bn_state[op["name"]]["var"]
+            x = (x - mean) / jnp.sqrt(var + _BN_EPS) * p["gamma"] + p["beta"]
+            maybe_record(op["out_scale_key"], x)
+            if quantized:
+                x = q.quantize_act(x, scales[op["out_scale_key"]], op["out_bits"])
+            else:
+                x = jax.nn.relu(x)  # fp32 baseline: quantizer's clamp-at-0 analog
+        elif kind == "res_push":
+            res_stack.append(x)
+        elif kind == "res_add":
+            x = x + res_stack.pop()
+            maybe_record(op["scale_key"], x)
+            if quantized:
+                # Saturating re-quantization at the shared scale: the exact
+                # float-domain image of the integer clamp(a1+a2, 0, 2^b-1).
+                x = q.quantize_act(x, scales[op["scale_key"]], op["bits"])
+        elif kind == "pool_sum":
+            x = x.sum(axis=(1, 2))
+        elif kind == "dense":
+            p = params[op["name"]]
+            w = q.quantize_weight(p["w"], op["w_bits"], channel_axis=1) if quantized else p["w"]
+            n_px = _head_pixels()
+            x = (x / n_px) @ w + p["b"]
+        else:
+            raise ValueError(f"unknown op {kind}")
+    return x, new_state
+
+
+def _head_pixels() -> int:
+    """Spatial positions at the head (two stride-2 stages from IMAGE_SIZE)."""
+    side = IMAGE_SIZE // 4
+    return side * side
+
+
+def calibrate(params, bn_state, program, xs) -> dict:
+    """Fix activation scales from a float forward pass (percentile max)."""
+    record: dict[str, list] = {}
+    forward_float(
+        params, bn_state, None, program, xs, train=False, quantized=False, record=record
+    )
+    scales = {}
+    for op in program:
+        key = op.get("scale_key") or op.get("out_scale_key")
+        bits = op.get("bits") or op.get("out_bits")
+        if key is None or key not in record or key in scales:
+            continue
+        stacked = jnp.concatenate([t.reshape(-1) for t in record[key]])
+        if key == "in":
+            scales[key] = 1.0 / 255.0  # input images are exact uint8 codes
+        else:
+            scales[key] = q.calibrate_scale(stacked, bits)
+    return scales
+
+
+# ---------------------------------------------------------------------------
+# Streamlining: float params -> deployed integer network
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class IntNetwork:
+    """Deployed integer network: the exact program the Rust simulator runs."""
+
+    meta: dict
+    ops: list[dict]  # integer ops with numpy arrays attached
+
+
+def streamline(params, bn_state, scales, program) -> IntNetwork:
+    """Absorb weight/activation scales and BN into weight codes +
+    multi-threshold units (paper section 3.2 / Umuroglu & Jahre 2017)."""
+    ops: list[dict] = []
+    for op in program:
+        if op["op"] == "input":
+            ops.append({"op": "input", "bits": op["bits"], "scale": float(scales["in"])})
+        elif op["op"] == "conv":
+            p = params[op["name"]]
+            # weight codes, per-output-channel scale (channel axis 3 = OUT)
+            codes, s_w = q.weight_codes(p["w"], op["w_bits"], channel_axis=3)
+            k, kind = op["k"], op["kind"]
+            if kind == "dw":
+                w_mat = np.array(codes).reshape(k * k, op["cout"]).T  # [C, K]
+            else:
+                w_mat = (
+                    np.array(codes).reshape(k * k * op["cin"], op["cout"]).T
+                )  # [COUT, K*K*CIN], (tap, channel) minor order
+            bn = q.BatchNormParams(
+                gamma=p["gamma"],
+                beta=p["beta"],
+                mean=bn_state[op["name"]]["mean"],
+                var=bn_state[op["name"]]["var"],
+                eps=_BN_EPS,
+            )
+            thr, signs, consts = q.streamline_thresholds(
+                s_w.reshape(-1),
+                float(scales[op["in_scale_key"]]),
+                bn,
+                float(scales[op["out_scale_key"]]),
+                op["out_bits"],
+            )
+            ops.append(
+                {
+                    "op": "conv",
+                    "name": op["name"],
+                    "kind": kind,
+                    "cin": op["cin"],
+                    "cout": op["cout"],
+                    "k": k,
+                    "stride": op["stride"],
+                    "pad": op["pad"],
+                    "w_bits": op["w_bits"],
+                    "in_bits": _in_bits(program, op),
+                    "out_bits": op["out_bits"],
+                    "w_codes": w_mat.astype(np.int32),
+                    "thresholds": np.array(thr, np.int32),
+                    "signs": np.array(signs, np.int32),
+                    "consts": np.array(consts, np.int32),
+                    "out_scale": float(scales[op["out_scale_key"]]),
+                }
+            )
+        elif op["op"] == "res_push":
+            ops.append({"op": "res_push"})
+        elif op["op"] == "res_add":
+            ops.append({"op": "res_add", "bits": op["bits"]})
+        elif op["op"] == "pool_sum":
+            ops.append({"op": "pool_sum"})
+        elif op["op"] == "dense":
+            p = params[op["name"]]
+            codes, s_w = q.weight_codes(p["w"], op["w_bits"], channel_axis=1)
+            scale = (
+                np.array(s_w).reshape(-1)
+                * float(scales[op["in_scale_key"]])
+                / _head_pixels()
+            )
+            ops.append(
+                {
+                    "op": "dense",
+                    "name": op["name"],
+                    "cin": op["cin"],
+                    "cout": op["cout"],
+                    "w_bits": op["w_bits"],
+                    "w_codes": np.array(codes, np.int32),  # [CIN, COUT]
+                    "scale": scale.astype(np.float32),
+                    "bias": np.array(p["b"], np.float32),
+                }
+            )
+    meta = {
+        "image_size": IMAGE_SIZE,
+        "in_ch": IN_CH,
+        "num_classes": NUM_CLASSES,
+        "in_scale": float(scales["in"]),
+    }
+    return IntNetwork(meta=meta, ops=ops)
+
+
+def _in_bits(program, conv_op) -> int:
+    key = conv_op["in_scale_key"]
+    for op in program:
+        if op.get("scale_key") == key and op["op"] == "input":
+            return op["bits"]
+        if op.get("out_scale_key") == key and op["op"] == "conv":
+            return op["out_bits"]
+        if op.get("scale_key") == key and op["op"] == "res_add":
+            return op["bits"]
+    return 4
+
+
+# ---------------------------------------------------------------------------
+# Integer (deployed) interpreter — the golden model
+# ---------------------------------------------------------------------------
+
+
+def im2col(x: jnp.ndarray, k: int, stride: int, pad: int) -> jnp.ndarray:
+    """[N, H, W, C] codes -> [N, Ho, Wo, K*K, C] patches, (tap, channel) order.
+
+    Zero padding is exact for unsigned activation codes (code 0 == value 0).
+    """
+    n, _, _, c = x.shape
+    x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    h, w = x.shape[1], x.shape[2]
+    ho = (h - k) // stride + 1
+    wo = (w - k) // stride + 1
+    cols = []
+    for i in range(k):
+        for j in range(k):
+            cols.append(
+                jax.lax.slice(
+                    x,
+                    (0, i, j, 0),
+                    (n, i + (ho - 1) * stride + 1, j + (wo - 1) * stride + 1, c),
+                    (1, stride, stride, 1),
+                )
+            )
+    return jnp.stack(cols, axis=3)  # [N, Ho, Wo, K*K, C]
+
+
+def forward_int(
+    net: IntNetwork, codes: jnp.ndarray, *, use_pallas: bool = True, block_m: int = 128
+) -> jnp.ndarray:
+    """Deployed integer forward over uint8 input codes [N, H, W, C].
+
+    Bit-exact specification of the accelerator: the Rust dataflow simulator
+    must reproduce these activations/logits exactly.
+    """
+    x = codes.astype(jnp.int32)
+    res_stack: list[jnp.ndarray] = []
+    logits = None
+    for op in net.ops:
+        kind = op["op"]
+        if kind == "input":
+            pass  # input is already integer codes
+        elif kind == "conv":
+            n = x.shape[0]
+            k, stride, pad = op["k"], op["stride"], op["pad"]
+            patches = im2col(x, k, stride, pad)  # [N,Ho,Wo,KK,C]
+            _, ho, wo, kk, c = patches.shape
+            w_codes = jnp.asarray(op["w_codes"])
+            if op["kind"] == "dw":
+                acts = patches.transpose(0, 1, 2, 4, 3).reshape(n * ho * wo, c, kk)
+                table = kref.build_table(w_codes, op["in_bits"])  # [C, K, A]
+                acc = (
+                    lk.lutmul_depthwise(acts, table, block_m=block_m)
+                    if use_pallas
+                    else kref.lutmul_depthwise_ref(acts, table)
+                )
+                cout = c
+            else:
+                acts = patches.reshape(n * ho * wo, kk * c)
+                table = kref.build_table(w_codes, op["in_bits"])  # [COUT, KK*C, A]
+                acc = (
+                    lk.lutmul_matmul(acts, table, block_m=block_m)
+                    if use_pallas
+                    else kref.lutmul_matmul_ref(acts, table)
+                )
+                cout = op["cout"]
+            out = kref.multithreshold_ref(
+                acc,
+                jnp.asarray(op["thresholds"]),
+                jnp.asarray(op["signs"]),
+                jnp.asarray(op["consts"]),
+            )
+            x = out.reshape(n, ho, wo, cout)
+        elif kind == "res_push":
+            res_stack.append(x)
+        elif kind == "res_add":
+            lim = 2 ** op["bits"] - 1
+            x = jnp.clip(x + res_stack.pop(), 0, lim)
+        elif kind == "pool_sum":
+            x = x.sum(axis=(1, 2))
+        elif kind == "dense":
+            acc = x.astype(jnp.int32) @ jnp.asarray(op["w_codes"])
+            logits = acc.astype(jnp.float32) * jnp.asarray(op["scale"]) + jnp.asarray(
+                op["bias"]
+            )
+        else:
+            raise ValueError(kind)
+    assert logits is not None
+    return logits
+
+
+def encode_input(x: jnp.ndarray) -> jnp.ndarray:
+    """Float [0,1] images -> uint8 activation codes (scale 1/255)."""
+    return jnp.clip(jnp.round(x * 255.0), 0, 255).astype(jnp.int32)

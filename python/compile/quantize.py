@@ -1,0 +1,150 @@
+"""Quantization-aware training primitives (paper section 3.6).
+
+Implements Eq. (4)/(5) of the paper: affine quantize/dequantize with
+straight-through-estimator (STE) gradients, per-channel symmetric weight
+quantization (two's complement, e.g. int4 in [-8, 7]) and unsigned
+activation quantization (e.g. uint4 in [0, 15]); activation scales are
+fixed from a calibration pass (max-percentile), matching the deployment
+semantics of the streamlined integer network.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+def ste_round(x: jnp.ndarray) -> jnp.ndarray:
+    """round-to-nearest-even with identity (straight-through) gradient."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def weight_qrange(bits: int) -> tuple[int, int]:
+    """Two's complement signed range, e.g. bits=4 -> (-8, 7)."""
+    return -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+
+
+def act_qrange(bits: int) -> tuple[int, int]:
+    """Unsigned range, e.g. bits=4 -> (0, 15)."""
+    return 0, 2**bits - 1
+
+
+def weight_scale(w: jnp.ndarray, bits: int, channel_axis: int = 0) -> jnp.ndarray:
+    """Per-channel symmetric scale: max|w| over non-channel axes / qmax."""
+    _, qmax = weight_qrange(bits)
+    axes = tuple(i for i in range(w.ndim) if i != channel_axis)
+    amax = jnp.max(jnp.abs(w), axis=axes, keepdims=True)
+    return jnp.maximum(amax / qmax, 1e-8)
+
+
+def quantize_weight(w: jnp.ndarray, bits: int, channel_axis: int = 0) -> jnp.ndarray:
+    """Fake-quantize weights (STE): returns dequantized values for training."""
+    qmin, qmax = weight_qrange(bits)
+    s = weight_scale(w, bits, channel_axis)
+    q = jnp.clip(ste_round(w / s), qmin, qmax)
+    return q * s
+
+
+def weight_codes(w: jnp.ndarray, bits: int, channel_axis: int = 0):
+    """Integer weight codes + per-channel scale for export (deployment)."""
+    qmin, qmax = weight_qrange(bits)
+    s = weight_scale(w, bits, channel_axis)
+    codes = jnp.clip(jnp.round(w / s), qmin, qmax).astype(jnp.int32)
+    return codes, s
+
+
+def quantize_act(x: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Fake-quantize activations (STE) against a fixed calibration scale.
+
+    The clamp at 0 doubles as the non-linearity (the streamlined
+    multi-threshold unit absorbs the ReLU), so layers using this need no
+    separate activation function.
+    """
+    qmin, qmax = act_qrange(bits)
+    q = jnp.clip(ste_round(x / scale), qmin, qmax)
+    return q * scale
+
+
+def act_codes(x: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Integer activation codes (deployment semantics of quantize_act)."""
+    qmin, qmax = act_qrange(bits)
+    return jnp.clip(jnp.round(x / scale), qmin, qmax).astype(jnp.int32)
+
+
+def calibrate_scale(x: jnp.ndarray, bits: int, percentile: float = 99.9) -> float:
+    """Calibration: pick the activation scale so `percentile` of positive
+    mass is representable. Uses the positive tail only (outputs are
+    unsigned; negatives are clipped by the quantizer/ReLU)."""
+    _, qmax = act_qrange(bits)
+    pos = jnp.maximum(x, 0.0)
+    hi = jnp.percentile(pos, percentile)
+    return float(jnp.maximum(hi / qmax, 1e-6))
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchNormParams:
+    """Inference-time batchnorm: y = gamma * (x - mean) / sqrt(var+eps) + beta."""
+
+    gamma: jnp.ndarray
+    beta: jnp.ndarray
+    mean: jnp.ndarray
+    var: jnp.ndarray
+    eps: float = 1e-5
+
+    def apply(self, x: jnp.ndarray) -> jnp.ndarray:
+        inv = self.gamma / jnp.sqrt(self.var + self.eps)
+        return x * inv + (self.beta - self.mean * inv)
+
+
+def streamline_thresholds(
+    w_scale: jnp.ndarray,
+    in_scale: float,
+    bn: BatchNormParams,
+    out_scale: float,
+    out_bits: int,
+):
+    """FINN-style streamlining (paper section 3.2): absorb the per-channel
+    weight scale, input scale, and batch-norm into an integer
+    multi-threshold unit.
+
+    For a layer computing
+        code_out = clamp(round(BN(s_w * s_in * acc) / s_out), 0, 2^b - 1)
+    with integer accumulator ``acc``, the output code crosses level ``t``
+    exactly when BN(...) >= (t - 0.5) * s_out, which (for positive BN gain)
+    is ``acc >= T[t]`` with an integer threshold.  Returns
+    ``(thresholds [C, 2^b - 1] int32, signs [C] int32, consts [C] int32)``
+    matching ``ref.multithreshold_ref`` / the Rust MultiThreshold unit.
+    """
+    levels = 2**out_bits - 1
+    sd = jnp.sqrt(bn.var + bn.eps)
+    g = bn.gamma
+    sw = w_scale.reshape(-1)  # per-output-channel
+    c = sw.shape[0]
+    t_idx = jnp.arange(1, levels + 1, dtype=jnp.float32)  # crossing points
+
+    # y-domain crossing values: (t - 0.5) * s_out
+    y_cross = (t_idx - 0.5) * out_scale                     # [L]
+    # invert BN: x = mean + sd * (y - beta) / gamma
+    x_cross = bn.mean[:, None] + sd[:, None] * (
+        (y_cross[None, :] - bn.beta[:, None]) / jnp.where(g == 0, 1.0, g)[:, None]
+    )                                                        # [C, L]
+    acc_cross = x_cross / (sw[:, None] * in_scale)           # [C, L] float
+
+    pos = jnp.ceil(acc_cross)                                # acc >= ceil(.)
+    neg = jnp.floor(acc_cross)                               # acc <= floor(.)
+    # Clamp to int32 to keep the export well-defined for extreme BN params.
+    lo, hi = -(2**31) + 1, 2**31 - 2
+    pos = jnp.clip(pos, lo, hi).astype(jnp.int32)
+    neg = jnp.clip(neg, lo, hi).astype(jnp.int32)
+    # For negative gain the crossings come out descending; the unit counts
+    # acc <= T so sort ascending to keep the [C, L] layout canonical.
+    neg = jnp.sort(neg, axis=1)
+
+    signs = jnp.where(g > 0, 1, jnp.where(g < 0, -1, 0)).astype(jnp.int32)
+    consts = jnp.clip(
+        jnp.round(bn.beta / out_scale), 0, levels
+    ).astype(jnp.int32)  # gamma == 0 -> constant output channel
+    thresholds = jnp.where(signs[:, None] > 0, pos, neg)
+    return thresholds, signs, consts

@@ -1,0 +1,256 @@
+"""Quantization-aware training (paper section 3.6) + the Figure 2 sweep.
+
+Three-phase recipe (standard QAT practice, matching the paper's flow of
+"train in our quantization-aware training framework"):
+
+  A. fp32 pre-training (also yields the fp32 baseline point of Figure 2);
+  B. activation-scale calibration on the trained float network;
+  C. QAT fine-tuning with STE fake-quantization at the target bit-width.
+
+After training, the network is streamlined to the deployed integer form and
+the *deployed* accuracy (the one a bitstream would achieve) is reported.
+
+No optax on this image, so Adam is implemented inline.
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets
+from . import model as M
+
+# ---------------------------------------------------------------------------
+# Optimizer (Adam)
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(
+        lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads
+    )
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Loss / metrics
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+
+
+def _make_train_step(program, scales, quantized: bool):
+    def loss_fn(params, bn_state, xs, ys):
+        logits, new_state = M.forward_float(
+            params, bn_state, scales, program, xs, train=True, quantized=quantized
+        )
+        return cross_entropy(logits, ys), new_state
+
+    @jax.jit
+    def step(params, bn_state, opt_state, lr, xs, ys):
+        (loss, new_state), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, bn_state, xs, ys
+        )
+        params, opt_state = adam_update(params, grads, opt_state, lr)
+        return params, new_state, opt_state, loss
+
+    return step
+
+
+def evaluate_float(params, bn_state, scales, program, xs, ys, quantized, batch=256):
+    @jax.jit
+    def fwd(xb):
+        logits, _ = M.forward_float(
+            params, bn_state, scales, program, xb, train=False, quantized=quantized
+        )
+        return logits
+
+    correct = 0
+    for i in range(0, len(xs), batch):
+        logits = fwd(xs[i : i + batch])
+        correct += int((jnp.argmax(logits, 1) == ys[i : i + batch]).sum())
+    return correct / len(xs)
+
+
+def evaluate_int(net: M.IntNetwork, xs, ys, use_pallas=False, batch=256):
+    """Deployed integer-network accuracy (the Figure 2 y-axis)."""
+
+    @jax.jit
+    def fwd(codes):
+        return M.forward_int(net, codes, use_pallas=use_pallas)
+
+    correct = 0
+    for i in range(0, len(xs), batch):
+        codes = M.encode_input(jnp.asarray(xs[i : i + batch]))
+        logits = fwd(codes)
+        correct += int((jnp.argmax(logits, 1) == ys[i : i + batch]).sum())
+    return correct / len(xs)
+
+
+# ---------------------------------------------------------------------------
+# Training driver
+# ---------------------------------------------------------------------------
+
+
+def _epochs(step_fn, params, bn_state, opt_state, xs, ys, epochs, batch, lr0, seed):
+    rng = np.random.default_rng(seed)
+    n = len(xs)
+    steps_per_epoch = n // batch
+    total = max(epochs * steps_per_epoch, 1)
+    i = 0
+    last = None
+    for _ in range(epochs):
+        perm = rng.permutation(n)
+        for s in range(steps_per_epoch):
+            idx = perm[s * batch : (s + 1) * batch]
+            # cosine decay
+            lr = lr0 * 0.5 * (1 + np.cos(np.pi * i / total))
+            params, bn_state, opt_state, last = step_fn(
+                params, bn_state, opt_state, lr, jnp.asarray(xs[idx]), jnp.asarray(ys[idx])
+            )
+            i += 1
+    return params, bn_state, opt_state, last
+
+
+def train_model(
+    w_bits: int = 4,
+    a_bits: int = 4,
+    *,
+    epochs_fp: int = 15,
+    epochs_qat: int = 12,
+    batch: int = 64,
+    lr_fp: float = 3e-3,
+    lr_qat: float = 1e-3,
+    seed: int = 0,
+    data=None,
+    verbose: bool = True,
+) -> dict[str, Any]:
+    """Full A/B/C recipe at one bit-width. Returns params, states and metrics."""
+    t0 = time.time()
+    if data is None:
+        data = datasets.make_dataset(seed=seed)
+    x_train, y_train, x_test, y_test = data
+    program = M.build_program(w_bits=w_bits, a_bits=a_bits)
+    rng = jax.random.PRNGKey(seed)
+    params = M.init_params(rng, program)
+    bn_state = M.init_bn_state(program)
+
+    # Phase A: fp32 pre-training
+    step_fp = _make_train_step(program, None, quantized=False)
+    opt = adam_init(params)
+    params, bn_state, opt, _ = _epochs(
+        step_fp, params, bn_state, opt, x_train, y_train, epochs_fp, batch, lr_fp, seed
+    )
+    acc_fp32 = evaluate_float(params, bn_state, None, program, x_test, y_test, False)
+
+    # Phase B: calibration
+    scales = M.calibrate(params, bn_state, program, jnp.asarray(x_train[:256]))
+
+    # Phase C: QAT fine-tune
+    step_q = _make_train_step(program, scales, quantized=True)
+    opt = adam_init(params)
+    params, bn_state, opt, _ = _epochs(
+        step_q, params, bn_state, opt, x_train, y_train, epochs_qat, batch, lr_qat, seed + 1
+    )
+    acc_qat = evaluate_float(params, bn_state, scales, program, x_test, y_test, True)
+
+    # Streamline + deployed accuracy
+    net = M.streamline(params, bn_state, scales, program)
+    acc_int = evaluate_int(net, x_test, y_test, use_pallas=False)
+
+    if verbose:
+        print(
+            f"W{w_bits}A{a_bits}: fp32={acc_fp32:.4f} qat={acc_qat:.4f} "
+            f"deployed={acc_int:.4f}  ({time.time() - t0:.1f}s)"
+        )
+    return {
+        "params": params,
+        "bn_state": bn_state,
+        "scales": scales,
+        "program": program,
+        "net": net,
+        "acc_fp32": acc_fp32,
+        "acc_qat": acc_qat,
+        "acc_int": acc_int,
+        "data": data,
+    }
+
+
+def run_fig2_sweep(
+    bit_widths=(1, 2, 3, 4, 5, 6, 8),
+    *,
+    epochs_fp: int = 15,
+    epochs_qat: int = 12,
+    seed: int = 0,
+) -> dict[str, Any]:
+    """Figure 2 data: deployed accuracy + LUTs/multiplication per bit-width.
+
+    LUT count per n-bit multiplication follows Eq. (3) of the paper:
+    ``2n * 2^n / 64`` (with a floor of 1 physical LUT6 at n <= 2; the
+    paper's Figure 2 plots the same floor — output bits of small LUTs are
+    the limiting factor).
+    """
+    data = datasets.make_dataset(seed=seed)
+    results = {"bits": [], "acc_int": [], "acc_qat": [], "acc_fp32": None, "luts_per_mul": []}
+    for b in bit_widths:
+        r = train_model(
+            b, b, epochs_fp=epochs_fp, epochs_qat=epochs_qat, seed=seed, data=data
+        )
+        if results["acc_fp32"] is None:
+            results["acc_fp32"] = r["acc_fp32"]
+        results["bits"].append(b)
+        results["acc_int"].append(r["acc_int"])
+        results["acc_qat"].append(r["acc_qat"])
+        results["luts_per_mul"].append(max(2 * b * (2**b) / 64.0, 1.0))
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sweep", action="store_true", help="run the Figure 2 sweep")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--w-bits", type=int, default=4)
+    ap.add_argument("--a-bits", type=int, default=4)
+    ap.add_argument("--epochs-fp", type=int, default=15)
+    ap.add_argument("--epochs-qat", type=int, default=12)
+    args = ap.parse_args()
+    if args.sweep:
+        res = run_fig2_sweep(epochs_fp=args.epochs_fp, epochs_qat=args.epochs_qat)
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(res, f, indent=2)
+        print(json.dumps(res, indent=2))
+    else:
+        train_model(
+            args.w_bits,
+            args.a_bits,
+            epochs_fp=args.epochs_fp,
+            epochs_qat=args.epochs_qat,
+        )

@@ -1,0 +1,69 @@
+"""AOT pipeline: HLO text emission and checkpoint round-trip."""
+
+import json
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def small_net():
+    program = M.build_program(w_bits=4, a_bits=4)
+    rng = jax.random.PRNGKey(7)
+    params = M.init_params(rng, program)
+    bn_state = M.init_bn_state(program)
+    xs = jax.random.uniform(jax.random.PRNGKey(2), (16, M.IMAGE_SIZE, M.IMAGE_SIZE, 3))
+    scales = M.calibrate(params, bn_state, program, xs)
+    return M.streamline(params, bn_state, scales, program), params, bn_state, scales
+
+
+class TestHloEmission:
+    def test_lower_batch1(self, small_net):
+        net, *_ = small_net
+        text = aot.lower_int_model(net, 1)
+        assert text.startswith("HloModule")
+        # input parameter shape embedded in the module
+        assert "s32[1,16,16,3]" in text
+        # output tuple of f32 logits
+        assert "f32[1,10]" in text
+
+    def test_weights_are_constants(self, small_net):
+        """The lowered module must be self-contained (weights baked in) so the
+        Rust runtime needs only the activation input."""
+        net, *_ = small_net
+        text = aot.lower_int_model(net, 1)
+        # entry layout lists exactly one input operand (the activation codes)
+        header = text.splitlines()[0]
+        assert "entry_computation_layout={(s32[1,16,16,3]" in header
+        assert header.count("s32[1,16,16,3]") == 1
+
+
+class TestNetworkJson:
+    def test_roundtrip(self, small_net, tmp_path):
+        net, *_ = small_net
+        path = tmp_path / "network.json"
+        aot.export_network_json(net, str(path), extra_meta={"k": 1})
+        loaded = json.loads(path.read_text())
+        assert loaded["meta"]["k"] == 1
+        assert loaded["meta"]["image_size"] == M.IMAGE_SIZE
+        convs = [op for op in loaded["ops"] if op["op"] == "conv"]
+        assert len(convs) == 14
+        # arrays serialised as nested lists
+        assert isinstance(convs[0]["w_codes"][0], list)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, small_net, tmp_path):
+        _, params, bn_state, scales = small_net
+        path = tmp_path / "ckpt.npz"
+        aot.save_checkpoint(str(path), params, bn_state, scales)
+        p2, b2, s2 = aot.load_checkpoint(str(path))
+        assert s2 == scales
+        for name in params:
+            for k in params[name]:
+                assert np.array_equal(np.array(params[name][k]), np.array(p2[name][k]))

@@ -1,0 +1,71 @@
+"""Synthetic dataset properties: determinism, balance, learnability signal."""
+
+import numpy as np
+import pytest
+
+from compile import datasets
+
+
+@pytest.fixture(scope="module")
+def data():
+    return datasets.make_dataset(n_train=256, n_test=128, seed=3)
+
+
+class TestShapesAndRanges:
+    def test_shapes(self, data):
+        xtr, ytr, xte, yte = data
+        assert xtr.shape == (256, 16, 16, 3)
+        assert xte.shape == (128, 16, 16, 3)
+        assert ytr.shape == (256,) and yte.shape == (128,)
+
+    def test_value_range(self, data):
+        xtr, *_ = data
+        assert float(xtr.min()) >= 0.0 and float(xtr.max()) <= 1.0
+
+    def test_labels_in_range(self, data):
+        _, ytr, _, yte = data
+        for y in (ytr, yte):
+            assert y.min() >= 0 and y.max() < datasets.NUM_CLASSES
+
+
+class TestDistribution:
+    def test_class_balance(self, data):
+        _, ytr, _, _ = data
+        counts = np.bincount(ytr, minlength=10)
+        assert counts.min() >= len(ytr) // 10 - 1
+
+    def test_deterministic(self):
+        a = datasets.make_dataset(n_train=64, n_test=32, seed=7)
+        b = datasets.make_dataset(n_train=64, n_test=32, seed=7)
+        assert np.array_equal(a[0], b[0]) and np.array_equal(a[1], b[1])
+
+    def test_seed_changes_data(self):
+        a = datasets.make_dataset(n_train=64, n_test=32, seed=1)
+        b = datasets.make_dataset(n_train=64, n_test=32, seed=2)
+        assert not np.array_equal(a[0], b[0])
+
+    def test_train_test_disjoint(self, data):
+        xtr, _, xte, _ = data
+        # no test image should be bit-identical to a train image
+        tr = {xtr[i].tobytes() for i in range(len(xtr))}
+        dupes = sum(1 for i in range(len(xte)) if xte[i].tobytes() in tr)
+        assert dupes == 0
+
+
+class TestLearnability:
+    def test_classes_are_separable_by_template_correlation(self, data):
+        """A nearest-class-mean classifier on raw pixels must beat chance
+        by a wide margin — the dataset carries class signal."""
+        xtr, ytr, xte, yte = data
+        means = np.stack([xtr[ytr == c].mean(0).reshape(-1) for c in range(10)])
+        feats = xte.reshape(len(xte), -1)
+        pred = np.argmax(feats @ means.T - 0.5 * (means**2).sum(1), axis=1)
+        acc = (pred == yte).mean()
+        assert acc > 0.3, f"nearest-mean acc {acc} barely above chance"
+
+    def test_noise_present(self, data):
+        """Samples of one class differ (augmentation/noise), so the task
+        is not pure memorization."""
+        xtr, ytr, *_ = data
+        idx = np.where(ytr == 0)[0][:2]
+        assert not np.allclose(xtr[idx[0]], xtr[idx[1]])

@@ -1,0 +1,170 @@
+"""L1 correctness: Pallas LUTMUL kernels vs the pure-jnp oracle.
+
+The kernels are integer-exact, so every check is `==` (bit-for-bit), not
+allclose. Hypothesis sweeps shapes, bit-widths and block sizes.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lutmul as lk
+from compile.kernels import ref as kref
+
+
+def _rand_case(rng, m, cout, cin, w_bits, a_bits):
+    lo, hi = -(2 ** (w_bits - 1)), 2 ** (w_bits - 1)
+    w = rng.integers(lo, hi, size=(cout, cin)).astype(np.int32)
+    a = rng.integers(0, 2**a_bits, size=(m, cin)).astype(np.int32)
+    return w, a
+
+
+class TestBuildTable:
+    def test_values(self):
+        w = jnp.array([[1, -3], [7, -8]], jnp.int32)
+        t = kref.build_table(w, 4)
+        assert t.shape == (2, 2, 16)
+        assert int(t[0, 1, 5]) == -15
+        assert int(t[1, 0, 15]) == 105
+        assert int(t[1, 1, 15]) == -120  # int4 min x uint4 max fits int8
+
+    def test_zero_activation_column(self):
+        w = jnp.array([[5, -5]], jnp.int32)
+        t = kref.build_table(w, 4)
+        assert (np.array(t[:, :, 0]) == 0).all()
+
+    @pytest.mark.parametrize("a_bits", [1, 2, 4, 8])
+    def test_table_width(self, a_bits):
+        w = jnp.ones((3, 4), jnp.int32)
+        assert kref.build_table(w, a_bits).shape == (3, 4, 2**a_bits)
+
+
+class TestMatmulOracle:
+    def test_vs_numpy_brute_force(self):
+        rng = np.random.default_rng(1)
+        w, a = _rand_case(rng, 23, 7, 13, 4, 4)
+        t = kref.build_table(jnp.array(w), 4)
+        out = np.array(kref.lutmul_matmul_ref(jnp.array(a), t))
+        assert (out == a.astype(np.int64) @ w.T.astype(np.int64)).all()
+
+    def test_dw_vs_numpy(self):
+        rng = np.random.default_rng(2)
+        c, k, m = 5, 9, 17
+        w = rng.integers(-8, 8, size=(c, k)).astype(np.int32)
+        a = rng.integers(0, 16, size=(m, c, k)).astype(np.int32)
+        t = kref.build_table(jnp.array(w), 4)
+        out = np.array(kref.lutmul_depthwise_ref(jnp.array(a), t))
+        expect = (a.astype(np.int64) * w[None]).sum(axis=2)
+        assert (out == expect).all()
+
+
+class TestPallasVsOracle:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 70),
+        cout=st.integers(1, 24),
+        cin=st.integers(1, 40),
+        w_bits=st.sampled_from([2, 3, 4, 8]),
+        a_bits=st.sampled_from([1, 2, 4]),
+        block_m=st.sampled_from([8, 16, 128]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matmul(self, m, cout, cin, w_bits, a_bits, block_m, seed):
+        rng = np.random.default_rng(seed)
+        w, a = _rand_case(rng, m, cout, cin, w_bits, a_bits)
+        t = kref.build_table(jnp.array(w), a_bits)
+        ref = kref.lutmul_matmul_ref(jnp.array(a), t)
+        out = lk.lutmul_matmul(jnp.array(a), t, block_m=block_m)
+        assert out.dtype == jnp.int32
+        assert (np.array(ref) == np.array(out)).all()
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.integers(1, 50),
+        c=st.integers(1, 16),
+        k=st.sampled_from([1, 4, 9]),
+        a_bits=st.sampled_from([2, 4]),
+        block_m=st.sampled_from([8, 128]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_depthwise(self, m, c, k, a_bits, block_m, seed):
+        rng = np.random.default_rng(seed)
+        w = rng.integers(-8, 8, size=(c, k)).astype(np.int32)
+        a = rng.integers(0, 2**a_bits, size=(m, c, k)).astype(np.int32)
+        t = kref.build_table(jnp.array(w), a_bits)
+        ref = kref.lutmul_depthwise_ref(jnp.array(a), t)
+        out = lk.lutmul_depthwise(jnp.array(a), t, block_m=block_m)
+        assert (np.array(ref) == np.array(out)).all()
+
+    def test_8bit_activations(self):
+        """Stem-layer configuration: uint8 activations, int8 weights."""
+        rng = np.random.default_rng(3)
+        w = rng.integers(-128, 128, size=(16, 27)).astype(np.int32)
+        a = rng.integers(0, 256, size=(64, 27)).astype(np.int32)
+        t = kref.build_table(jnp.array(w), 8)
+        ref = kref.lutmul_matmul_ref(jnp.array(a), t)
+        out = lk.lutmul_matmul(jnp.array(a), t, block_m=32)
+        assert (np.array(ref) == np.array(out)).all()
+
+    def test_m_exactly_block(self):
+        rng = np.random.default_rng(4)
+        w, a = _rand_case(rng, 16, 4, 8, 4, 4)
+        t = kref.build_table(jnp.array(w), 4)
+        out = lk.lutmul_matmul(jnp.array(a), t, block_m=16)
+        assert (np.array(out) == np.array(kref.lutmul_matmul_ref(jnp.array(a), t))).all()
+
+    def test_extreme_weights(self):
+        """int4 boundary weights (-8, 7) with max activations."""
+        w = jnp.array([[-8, 7, -8, 7]], jnp.int32)
+        a = jnp.full((3, 4), 15, jnp.int32)
+        t = kref.build_table(w, 4)
+        out = lk.lutmul_matmul(a, t, block_m=8)
+        assert (np.array(out) == (-8 + 7 - 8 + 7) * 15).all()
+
+
+class TestMultiThreshold:
+    def test_positive_sign_counts_crossings(self):
+        acc = jnp.array([[-5], [0], [3], [100]], jnp.int32)
+        thr = jnp.array([[0, 2, 50]], jnp.int32)  # C=1, L=3
+        signs = jnp.array([1], jnp.int32)
+        consts = jnp.array([0], jnp.int32)
+        out = kref.multithreshold_ref(acc, thr, signs, consts)
+        assert out.reshape(-1).tolist() == [0, 1, 2, 3]
+
+    def test_negative_sign(self):
+        acc = jnp.array([[-5], [0], [3], [100]], jnp.int32)
+        thr = jnp.array([[-1, 1, 50]], jnp.int32)
+        signs = jnp.array([-1], jnp.int32)
+        consts = jnp.array([0], jnp.int32)
+        out = kref.multithreshold_ref(acc, thr, signs, consts)
+        # counts of acc <= t: -5 crosses all 3; 0 crosses {1,50}; 3 crosses {50}
+        assert out.reshape(-1).tolist() == [3, 2, 1, 0]
+
+    def test_const_channel(self):
+        acc = jnp.zeros((5, 1), jnp.int32)
+        thr = jnp.zeros((1, 15), jnp.int32)
+        out = kref.multithreshold_ref(
+            acc, thr, jnp.array([0], jnp.int32), jnp.array([7], jnp.int32)
+        )
+        assert (np.array(out) == 7).all()
+
+
+class TestVmemFootprint:
+    def test_monotonic_in_block(self):
+        a = lk.vmem_footprint_bytes(32, 288, 16, block_m=64)
+        b = lk.vmem_footprint_bytes(32, 288, 16, block_m=128)
+        assert b > a
+
+    def test_fits_vmem_for_all_model_layers(self):
+        """Every layer of the exported model must fit the 16 MiB VMEM budget."""
+        from compile import model as M
+
+        prog = M.build_program()
+        for op in prog:
+            if op["op"] != "conv":
+                continue
+            cin = op["k"] * op["k"] * (1 if op["kind"] == "dw" else op["cin"])
+            cout = op["cout"]
+            a = 256 if op["in_scale_key"] == "in" else 16
+            assert lk.vmem_footprint_bytes(cout, cin, a, 128) < 16 * 2**20, op["name"]

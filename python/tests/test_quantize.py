@@ -1,0 +1,145 @@
+"""Quantization primitives: Eq. (4)/(5), STE, streamlining thresholds."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quantize as q
+
+
+class TestSteRound:
+    def test_forward_is_round(self):
+        x = jnp.array([-1.5, -0.4, 0.5, 1.4, 2.5])
+        # round-to-even at halves (jnp.round semantics)
+        assert np.array(q.ste_round(x)).tolist() == [-2.0, -0.0, 0.0, 1.0, 2.0]
+
+    def test_gradient_is_identity(self):
+        g = jax.grad(lambda x: q.ste_round(x * 3.0))(1.234)
+        assert float(g) == pytest.approx(3.0)
+
+
+class TestRanges:
+    @pytest.mark.parametrize("bits,lo,hi", [(1, -1, 0), (4, -8, 7), (8, -128, 127)])
+    def test_weight_range(self, bits, lo, hi):
+        assert q.weight_qrange(bits) == (lo, hi)
+
+    @pytest.mark.parametrize("bits,hi", [(1, 1), (4, 15), (8, 255)])
+    def test_act_range(self, bits, hi):
+        assert q.act_qrange(bits) == (0, hi)
+
+
+class TestWeightQuant:
+    @settings(max_examples=20, deadline=None)
+    @given(bits=st.sampled_from([2, 3, 4, 8]), seed=st.integers(0, 1000))
+    def test_codes_in_range(self, bits, seed):
+        rng = np.random.default_rng(seed)
+        w = jnp.array(rng.normal(0, 1, (6, 10)), jnp.float32)
+        codes, s = q.weight_codes(w, bits, channel_axis=0)
+        lo, hi = q.weight_qrange(bits)
+        assert int(codes.min()) >= lo and int(codes.max()) <= hi
+        assert (np.array(s) > 0).all()
+
+    def test_roundtrip_error_bound(self):
+        rng = np.random.default_rng(0)
+        w = jnp.array(rng.normal(0, 1, (4, 32)), jnp.float32)
+        wq = q.quantize_weight(w, 4, channel_axis=0)
+        s = q.weight_scale(w, 4, channel_axis=0)
+        # symmetric quant: |w - wq| <= s/2 except at the clamped negative edge
+        assert (jnp.abs(w - wq) <= np.array(s) * 0.5 + 1e-6).all()
+
+    def test_per_channel_independence(self):
+        w = jnp.array([[0.1, -0.1], [100.0, -100.0]], jnp.float32)
+        codes, s = q.weight_codes(w, 4, channel_axis=0)
+        assert float(s.reshape(-1)[1]) == pytest.approx(100.0 / 7)
+        assert float(s.reshape(-1)[0]) == pytest.approx(0.1 / 7)
+
+
+class TestActQuant:
+    def test_clamps_negative_to_zero(self):
+        x = jnp.array([-5.0, -0.01, 0.0, 1.0])
+        out = q.quantize_act(x, 0.1, 4)
+        assert (np.array(out)[:3] == 0).all()
+
+    def test_saturates_at_qmax(self):
+        out = q.quantize_act(jnp.array([1000.0]), 0.1, 4)
+        assert float(out[0]) == pytest.approx(1.5)  # 15 * 0.1
+
+    def test_codes_match_fake_quant(self):
+        rng = np.random.default_rng(1)
+        x = jnp.array(rng.normal(0.5, 0.7, (100,)), jnp.float32)
+        s = 0.13
+        codes = q.act_codes(x, s, 4)
+        fake = q.quantize_act(x, s, 4)
+        assert np.allclose(np.array(codes) * s, np.array(fake), atol=1e-6)
+
+
+class TestStreamlineThresholds:
+    """The load-bearing transform: integer thresholds must reproduce the
+    float pipeline BN -> scale -> round/clamp for every integer acc."""
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        seed=st.integers(0, 10_000),
+        out_bits=st.sampled_from([1, 2, 4]),
+        negative_gain=st.booleans(),
+    )
+    def test_matches_float_reference(self, seed, out_bits, negative_gain):
+        rng = np.random.default_rng(seed)
+        c = 4
+        s_w = jnp.array(rng.uniform(0.01, 0.2, c), jnp.float32)
+        s_in = float(rng.uniform(0.01, 0.3))
+        s_out = float(rng.uniform(0.05, 0.5))
+        gamma = rng.uniform(0.2, 2.0, c) * (-1 if negative_gain else 1)
+        bn = q.BatchNormParams(
+            gamma=jnp.array(gamma, jnp.float32),
+            beta=jnp.array(rng.normal(0, 1, c), jnp.float32),
+            mean=jnp.array(rng.normal(0, 5, c), jnp.float32),
+            var=jnp.array(rng.uniform(0.5, 10, c), jnp.float32),
+        )
+        thr, signs, consts = q.streamline_thresholds(s_w, s_in, bn, s_out, out_bits)
+        levels = 2**out_bits - 1
+        assert thr.shape == (c, levels)
+
+        acc = jnp.arange(-300, 300, dtype=jnp.int32)[:, None].repeat(c, 1)
+        # integer path
+        from compile.kernels import ref as kref
+
+        got = kref.multithreshold_ref(acc, thr, signs, consts)
+        # float path: clamp(round(BN(s_w*s_in*acc)/s_out))
+        x = np.array(s_w)[None, :] * s_in * np.array(acc, np.float64)
+        y = np.array(bn.apply(jnp.array(x, jnp.float32)), np.float64)
+        want = np.clip(np.floor(y / s_out + 0.5), 0, levels).astype(np.int64)
+        got = np.array(got, np.int64)
+        # Allow ties (y/s_out exactly half-integer) to differ; elsewhere exact.
+        frac = np.abs(y / s_out - (np.floor(y / s_out) + 0.5))
+        mask = frac > 1e-4
+        assert (got[mask] == want[mask]).all()
+
+    def test_zero_gain_constant_channel(self):
+        c = 2
+        bn = q.BatchNormParams(
+            gamma=jnp.array([0.0, 1.0]),
+            beta=jnp.array([0.7, 0.0]),
+            mean=jnp.zeros(c),
+            var=jnp.ones(c),
+        )
+        thr, signs, consts = q.streamline_thresholds(
+            jnp.array([0.1, 0.1]), 0.1, bn, 0.1, 4
+        )
+        assert int(signs[0]) == 0 and int(signs[1]) == 1
+        assert int(consts[0]) == 7  # round(0.7 / 0.1)
+
+
+class TestCalibrate:
+    def test_scale_covers_percentile(self):
+        rng = np.random.default_rng(0)
+        x = jnp.array(rng.uniform(0, 1, 10_000), jnp.float32)
+        s = q.calibrate_scale(x, 4, percentile=100.0)
+        assert s * 15 >= float(x.max()) - 1e-5
+
+    def test_ignores_negative_tail(self):
+        x = jnp.array([-100.0, -50.0, 0.5, 1.0])
+        s = q.calibrate_scale(x, 4, percentile=100.0)
+        assert s * 15 == pytest.approx(1.0, rel=1e-4)

@@ -1,0 +1,87 @@
+"""Training infrastructure: Adam, loss, eval loops, one smoke run."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import datasets
+from compile import model as M
+from compile import train as T
+
+
+class TestAdam:
+    def test_descends_quadratic(self):
+        params = {"w": jnp.array([5.0, -3.0])}
+        state = T.adam_init(params)
+        for _ in range(300):
+            grads = {"w": 2.0 * params["w"]}  # d/dw of w^2
+            params, state = T.adam_update(params, grads, state, lr=0.05)
+        assert float(jnp.abs(params["w"]).max()) < 0.1
+
+    def test_bias_correction_first_step(self):
+        params = {"w": jnp.array([0.0])}
+        state = T.adam_init(params)
+        new, state2 = T.adam_update(params, {"w": jnp.array([1.0])}, state, lr=0.1)
+        # first step of Adam moves by ~lr regardless of gradient scale
+        assert float(new["w"][0]) == pytest.approx(-0.1, rel=1e-3)
+        assert state2["t"] == 1
+
+    def test_state_shapes_match_params(self):
+        params = {"a": jnp.zeros((3, 4)), "b": {"c": jnp.zeros(7)}}
+        state = T.adam_init(params)
+        assert state["m"]["a"].shape == (3, 4)
+        assert state["v"]["b"]["c"].shape == (7,)
+
+
+class TestLoss:
+    def test_cross_entropy_perfect_prediction(self):
+        logits = jnp.array([[100.0, 0.0, 0.0]])
+        labels = jnp.array([0])
+        assert float(T.cross_entropy(logits, labels)) < 1e-3
+
+    def test_cross_entropy_uniform(self):
+        logits = jnp.zeros((4, 10))
+        labels = jnp.array([0, 1, 2, 3])
+        assert float(T.cross_entropy(logits, labels)) == pytest.approx(np.log(10), rel=1e-5)
+
+    def test_gradient_direction(self):
+        labels = jnp.array([1])
+        g = jax.grad(lambda l: T.cross_entropy(l, labels))(jnp.zeros((1, 3)))
+        assert float(g[0, 1]) < 0  # pushing the true class up reduces loss
+        assert float(g[0, 0]) > 0
+
+
+class TestEvalLoops:
+    @pytest.fixture(scope="class")
+    def tiny(self):
+        data = datasets.make_dataset(n_train=128, n_test=64, seed=11)
+        program = M.build_program()
+        params = M.init_params(jax.random.PRNGKey(0), program)
+        bn = M.init_bn_state(program)
+        scales = M.calibrate(params, bn, program, jnp.asarray(data[0][:64]))
+        return data, program, params, bn, scales
+
+    def test_evaluate_float_bounds(self, tiny):
+        data, program, params, bn, scales = tiny
+        acc = T.evaluate_float(params, bn, scales, program, data[2], data[3], True)
+        assert 0.0 <= acc <= 1.0
+
+    def test_evaluate_int_matches_manual(self, tiny):
+        data, program, params, bn, scales = tiny
+        net = M.streamline(params, bn, scales, program)
+        acc = T.evaluate_int(net, data[2][:32], data[3][:32])
+        logits = M.forward_int(net, M.encode_input(jnp.asarray(data[2][:32])), use_pallas=False)
+        manual = float((jnp.argmax(logits, 1) == jnp.asarray(data[3][:32])).mean())
+        assert acc == pytest.approx(manual)
+
+
+@pytest.mark.slow
+class TestSmokeTraining:
+    def test_short_run_beats_chance(self):
+        data = datasets.make_dataset(n_train=512, n_test=64, seed=5)
+        r = T.train_model(4, 4, epochs_fp=6, epochs_qat=1, data=data, verbose=False)
+        # ~48 optimizer steps on the synthetic task: well above 10% chance
+        assert r["acc_fp32"] > 0.3
+        assert 0.0 <= r["acc_int"] <= 1.0
+        assert set(r) >= {"params", "bn_state", "scales", "net"}

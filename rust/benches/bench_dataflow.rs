@@ -1,0 +1,90 @@
+//! Bench — host-side performance of the L3 hot paths: the dataflow
+//! pipeline simulator, the reference executor (serving fast path), the
+//! LUT-fabric datapath, and the serving coordinator. This is the §Perf
+//! harness of EXPERIMENTS.md: the simulator must regenerate Table 2-class
+//! experiments in seconds and the coordinator must not be the bottleneck.
+//!
+//! Needs `make artifacts`. Run: `cargo bench --bench bench_dataflow`
+
+use std::sync::Arc;
+
+use lutmul::coordinator::{Backend, Coordinator, ServeConfig};
+use lutmul::dataflow::{FoldConfig, Pipeline};
+use lutmul::graph::executor::{Datapath, Executor, Tensor};
+use lutmul::graph::network::Network;
+use lutmul::runtime::{Artifacts, Runtime};
+use lutmul::util::bench::{bench, per_second};
+
+fn main() {
+    let a = Artifacts::new("artifacts");
+    let Ok(net) = Network::load(a.network_json()) else {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        return;
+    };
+    let (images, _) =
+        a.load_test_set(net.meta.image_size, net.meta.image_size, net.meta.in_ch).unwrap();
+    let n = 64usize;
+    let macs_per_img: u64 = lutmul::graph::mobilenet_v2_small().ops_per_image() / 2;
+
+    // --- reference executor (serving fast path) ---
+    let ex = Executor::new(&net, Datapath::Arithmetic);
+    let tensors: Vec<Tensor> =
+        images[..n].iter().map(|i| Tensor::from_hwc(16, 16, 3, i.clone())).collect();
+    let r = bench("executor: 64 images (arithmetic)", 20, || {
+        tensors.iter().map(|t| ex.execute(t)[0]).sum::<f32>()
+    });
+    println!(
+        "    -> {:.0} img/s | {:.1} M MAC/s host",
+        per_second(n, &r),
+        per_second(n, &r) * macs_per_img as f64 / 1e6
+    );
+
+    // --- LUT-fabric datapath (hardware-true, every mult via LUT readout) ---
+    let exf = Executor::new(&net, Datapath::LutFabric);
+    let r = bench("executor: 8 images (LUT6 fabric datapath)", 5, || {
+        tensors[..8].iter().map(|t| exf.execute(t)[0]).sum::<f32>()
+    });
+    println!("    -> {:.0} img/s", per_second(8, &r));
+
+    // --- dataflow pipeline simulator ---
+    for fold in [1usize, 4] {
+        let folds = if fold == 1 {
+            FoldConfig::fully_parallel(net.convs().count())
+        } else {
+            FoldConfig::uniform(net.convs().count(), fold)
+        };
+        let mut pipe = Pipeline::build(&net, &folds, 16);
+        let imgs = images[..n].to_vec();
+        let r = bench(&format!("pipeline sim: 64 images (fold={fold})"), 10, || {
+            pipe.run(&imgs).cycles
+        });
+        println!(
+            "    -> {:.0} img/s | {:.2} M simulated MAC-lookups/s",
+            per_second(n, &r),
+            per_second(n, &r) * macs_per_img as f64 / 1e6
+        );
+    }
+
+    // --- PJRT golden runtime ---
+    if let Ok(rt) = Runtime::load(a.model_hlo(8), 8, 16, 16, 3, net.meta.num_classes) {
+        let batch: Vec<Vec<i32>> = images[..8].to_vec();
+        let r = bench("PJRT runtime: batch of 8 (AOT HLO w/ Pallas)", 20, || {
+            rt.run_images(&batch).unwrap().len()
+        });
+        println!("    -> {:.0} img/s", per_second(8, &r));
+    }
+
+    // --- serving coordinator end to end ---
+    let coord = Coordinator::start(
+        Arc::new(net),
+        ServeConfig { backend: Backend::Reference, workers: 2, max_batch: 16, ..Default::default() },
+    );
+    let r = bench("coordinator: 256 requests end-to-end", 5, || {
+        let tickets: Vec<_> = (0..256)
+            .map(|i| coord.submit(images[i % images.len()].clone()).unwrap())
+            .collect();
+        tickets.into_iter().map(|t| t.wait().unwrap().class).sum::<usize>()
+    });
+    println!("    -> {:.0} req/s | {}", per_second(256, &r), coord.metrics());
+    coord.shutdown();
+}

@@ -1,0 +1,58 @@
+//! Bench E7 — the headline claim: LUT-mapped MACs exceed the DSP-bound
+//! peak at equal resources (Eq. 1 with LUT-derived PE counts vs DSP
+//! packing), across bit-widths and devices.
+//!
+//! Run: `cargo bench --bench bench_peak`
+
+use lutmul::fabric::device::{all_fpgas, U280};
+use lutmul::roofline::{dsp_peak, lutmul_luts_per_mac, lutmul_peak};
+use lutmul::util::bench::bench;
+
+fn main() {
+    println!("== E7: peak performance, LUTMUL vs DSP packing ==\n");
+    println!("whole-device peaks at each device's max dataflow frequency:");
+    println!(
+        "{:<14}{:>8}{:>14}{:>14}{:>8}",
+        "device", "bits", "DSP GOPS", "LUTMUL GOPS", "ratio"
+    );
+    for dev in all_fpgas() {
+        for bits in [4u32, 8] {
+            let s = dev.fraction(1);
+            let f = dev.max_freq_mhz * 1e6;
+            let d = dsp_peak(&s, bits, f) / 1e9;
+            let l = lutmul_peak(&s, bits, f) / 1e9;
+            println!("{:<14}{:>8}{:>14.0}{:>14.0}{:>8.2}", dev.name, bits, d, l, l / d);
+        }
+    }
+
+    println!("\nall-in LUT cost per LUTMUL MAC (ROM + amortized adder):");
+    for bits in [1u32, 2, 3, 4, 5, 6, 8] {
+        println!("  {bits}-bit: {:.2} LUT6", lutmul_luts_per_mac(bits));
+    }
+
+    println!("\ncrossover: smallest bit-width where DSP packing wins on U280:");
+    let s = U280.fraction(1);
+    let f = U280.max_freq_mhz * 1e6;
+    let mut crossover = None;
+    for bits in 1..=16u32 {
+        if dsp_peak(&s, bits, f) > lutmul_peak(&s, bits, f) {
+            crossover = Some(bits);
+            break;
+        }
+    }
+    match crossover {
+        Some(b) => println!("  DSP wins from {b}-bit up (LUT ROMs grow 2^n)"),
+        None => println!("  LUTMUL wins at every bit-width <= 16"),
+    }
+
+    println!();
+    bench("peak sweep: 5 devices x 2 bit-widths", 10_000, || {
+        let mut acc = 0.0;
+        for dev in all_fpgas() {
+            for bits in [4u32, 8] {
+                acc += lutmul_peak(&dev.fraction(1), bits, dev.max_freq_mhz * 1e6);
+            }
+        }
+        acc
+    });
+}

@@ -1,0 +1,28 @@
+//! Bench E1/E2 — Table 1 + Figure 1 regeneration: roofline curves for
+//! 1/64 of the U280 (LUTMUL vs DSP architectures at several bit-widths).
+//!
+//! Run: `cargo bench --bench bench_roofline`
+
+use lutmul::fabric::device::U280;
+use lutmul::roofline;
+use lutmul::util::bench::bench;
+
+fn main() {
+    println!("== E1: Table 1 ==\n");
+    lutmul::reports::table1();
+    println!("\n== E2: Figure 1 ==\n");
+    lutmul::reports::fig1();
+    println!();
+    bench("fig1: full curve set (4 architectures x 29 points)", 200, || {
+        roofline::figure1_curves(&U280, 64).len()
+    });
+
+    // ablation: the LUTMUL/DSP peak ratio across device fractions
+    println!("\nLUTMUL/DSP 4-bit peak ratio vs device fraction:");
+    for denom in [1u64, 4, 16, 64, 256] {
+        let s = U280.fraction(denom);
+        let f = U280.max_freq_mhz * 1e6;
+        let r = roofline::lutmul_peak(&s, 4, f) / roofline::dsp_peak(&s, 4, f);
+        println!("  1/{denom:<4} -> {r:.2}x");
+    }
+}

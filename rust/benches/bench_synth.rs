@@ -1,0 +1,46 @@
+//! Bench E5 — Figure 6 regeneration + synthesis-analog performance:
+//! per-layer LUT breakdowns and the folding optimizer across budgets.
+//!
+//! Run: `cargo bench --bench bench_synth`
+
+use lutmul::fabric::device::U280;
+use lutmul::graph::arch::{fig6_conv2, mobilenet_v2_full};
+use lutmul::synth::breakdown::layer_breakdown;
+use lutmul::synth::fold::{optimize_folding, Budget};
+use lutmul::synth::synthesize;
+use lutmul::util::bench::bench;
+
+fn main() {
+    println!("== E5: Figure 6 ==\n");
+    lutmul::reports::fig6();
+    println!();
+
+    bench("fig6: single-layer breakdown", 10_000, || layer_breakdown(&fig6_conv2(), 1));
+
+    let arch = mobilenet_v2_full();
+    for denom in [1u64, 8, 64] {
+        let budget =
+            if denom == 1 { Budget::whole(&U280) } else { Budget::fraction(&U280, denom) };
+        bench(&format!("fold optimizer: MobileNetV2, budget 1/{denom}"), 50, || {
+            optimize_folding(&arch, &budget).1
+        });
+    }
+    let (folds, _) = optimize_folding(&arch, &Budget::whole(&U280));
+    bench("synthesize: MobileNetV2 full design", 200, || {
+        synthesize(&arch, &U280, &folds).luts
+    });
+
+    // fold-sweep ablation for the Figure 6 layer
+    println!("\nfig6 layer LUTs vs fold (ROM is storage, compute folds away):");
+    println!("{:>6}{:>12}{:>12}{:>12}", "fold", "ROM", "adder+thr", "total");
+    for fold in [1usize, 2, 4, 8, 16, 32] {
+        let b = layer_breakdown(&fig6_conv2(), fold);
+        println!(
+            "{:>6}{:>12.0}{:>12.0}{:>12.0}",
+            fold,
+            b.impl_rom_luts,
+            b.impl_adder_luts + b.threshold_luts,
+            b.impl_total_luts
+        );
+    }
+}

@@ -1,0 +1,29 @@
+//! Bench E6 — Table 2 regeneration: synthesize the full MobileNetV2
+//! LUTMUL design (folding optimizer + resource/power/timing models) and
+//! print the comparison rows, timing the whole harness.
+//!
+//! Run: `cargo bench --bench bench_table2`
+
+use lutmul::util::bench::bench;
+
+fn main() {
+    println!("== E6: Table 2 regeneration ==\n");
+    lutmul::reports::table2();
+    println!();
+    bench("table2: optimize_folding + synthesize (whole U280)", 10, || {
+        lutmul::reports::our_design().fps()
+    });
+    bench("table2: paper-style design point (elem-serial input)", 10, || {
+        lutmul::reports::paper_style_design().fps()
+    });
+    let arch = lutmul::graph::mobilenet_v2_full();
+    bench("table2: baseline predictor (DSP packing, ZU9EG)", 100, || {
+        lutmul::baselines::dsp_packing_accelerator(
+            &arch,
+            &lutmul::fabric::device::ZU9EG,
+            8,
+            333.0,
+        )
+        .fps
+    });
+}

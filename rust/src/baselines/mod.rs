@@ -1,0 +1,276 @@
+//! Baseline accelerator models (DESIGN.md S12) and the published Table 2
+//! comparison rows.
+//!
+//! Two analytic baseline predictors exercise the same graph/roofline
+//! substrate as LUTMUL:
+//!  * [`dsp_packing_accelerator`] — a FILM-QNN/FPL'19-style PE-array
+//!    design: all MACs on DSP slices with bit-packing, weights in BRAM,
+//!    performance = min(Eq. 1 compute roof, Eq. 2 memory roof) x
+//!    utilization efficiency.
+//!  * [`gemm_overlay_accelerator`] — a Light-OPU-style instruction-driven
+//!    overlay: same compute but an instruction/scheduling overhead factor
+//!    and lower achievable frequency.
+
+
+use crate::fabric::device::FpgaDevice;
+use crate::fabric::power::estimate_power_w;
+use crate::graph::arch::ArchSpec;
+use crate::roofline;
+
+/// Performance estimate for a baseline design.
+#[derive(Debug, Clone)]
+pub struct PerfEstimate {
+    pub label: String,
+    pub fps: f64,
+    pub gops: f64,
+    pub power_w: f64,
+    pub gops_per_watt: f64,
+    pub luts: u64,
+    pub dsps: u64,
+    pub bram36: u64,
+    pub freq_mhz: f64,
+}
+
+/// Sustained-over-peak efficiency of a well-tuned PE-array accelerator on
+/// MobileNet-class workloads (depthwise layers under-utilize the array;
+/// published designs reach 20-45% of peak).
+pub const PE_ARRAY_EFFICIENCY: f64 = 0.35;
+
+/// Instruction-overlay efficiency (Light-OPU-class: generic ISA overhead
+/// on top of array under-utilization).
+pub const OVERLAY_EFFICIENCY: f64 = 0.22;
+
+/// DSP-packing PE-array baseline on a device at a bit-width.
+pub fn dsp_packing_accelerator(
+    arch: &ArchSpec,
+    device: &FpgaDevice,
+    bits: u32,
+    freq_mhz: f64,
+) -> PerfEstimate {
+    let slice = device.fraction(1);
+    let peak = roofline::dsp_peak(&slice, bits, freq_mhz * 1e6);
+    // memory roof: weights re-streamed per image (PE arrays reuse the
+    // array across layers; activations+weights traffic per inference)
+    let bytes_per_image =
+        (arch.total_weights() as f64 * bits as f64 / 8.0) + 4.0 * arch.ops_per_image() as f64 / 100.0;
+    let ai = arch.ops_per_image() as f64 / bytes_per_image;
+    let bw = device.total_bw_gbps() * 1e9;
+    let attainable = roofline::attainable(peak, bw, ai) * PE_ARRAY_EFFICIENCY;
+    let fps = attainable / arch.ops_per_image() as f64;
+    // typical PE-array resource footprint: most DSPs + control fabric
+    let luts = (device.luts as f64 * 0.45) as u64;
+    let dsps = (device.dsps as f64 * 0.9) as u64;
+    let bram = (device.bram36 as f64 * 0.6) as u64;
+    let power = estimate_power_w(device, luts, bram, dsps, freq_mhz);
+    PerfEstimate {
+        label: format!("DSP-packing W{bits} @ {}", device.name),
+        fps,
+        gops: attainable / 1e9,
+        power_w: power,
+        gops_per_watt: attainable / 1e9 / power,
+        luts,
+        dsps,
+        bram36: bram,
+        freq_mhz,
+    }
+}
+
+/// Instruction-overlay (Light-OPU-style) baseline.
+pub fn gemm_overlay_accelerator(
+    arch: &ArchSpec,
+    device: &FpgaDevice,
+    bits: u32,
+    freq_mhz: f64,
+) -> PerfEstimate {
+    let mut est = dsp_packing_accelerator(arch, device, bits, freq_mhz);
+    let scale = OVERLAY_EFFICIENCY / PE_ARRAY_EFFICIENCY;
+    est.label = format!("GEMM-overlay W{bits} @ {}", device.name);
+    est.fps *= scale;
+    est.gops *= scale;
+    est.gops_per_watt *= scale;
+    est
+}
+
+/// A published Table 2 row (from the cited papers).
+#[derive(Debug, Clone)]
+pub struct PublishedRow {
+    pub name: &'static str,
+    pub network: &'static str,
+    pub bit_width: &'static str,
+    pub top1_acc: f64,
+    pub platform: &'static str,
+    pub freq_mhz: f64,
+    pub luts: u64,
+    pub ffs: u64,
+    pub bram36: f64,
+    pub dsps: u64,
+    pub power_w: Option<f64>,
+    pub fps: f64,
+    pub gops: f64,
+    pub gops_per_watt: Option<f64>,
+}
+
+/// The published comparison rows of Table 2 (excluding LUTMUL itself,
+/// which this repository regenerates).
+pub fn table2_published() -> Vec<PublishedRow> {
+    vec![
+        PublishedRow {
+            name: "FINN",
+            network: "MobileNetV1",
+            bit_width: "W4A4",
+            top1_acc: 70.4,
+            platform: "Alveo U280",
+            freq_mhz: 333.0,
+            luts: 501_363,
+            ffs: 476_316,
+            bram36: 898.0,
+            dsps: 106,
+            power_w: Some(41.69),
+            fps: 925.0,
+            gops: 556.4,
+            gops_per_watt: Some(13.35),
+        },
+        PublishedRow {
+            name: "FPL'19",
+            network: "MobileNetV2",
+            bit_width: "W8A8",
+            top1_acc: 68.1,
+            platform: "ZU9EG",
+            freq_mhz: 333.0,
+            luts: 161_944,
+            ffs: 301_416,
+            bram36: 771.0,
+            dsps: 2070,
+            power_w: None,
+            fps: 809.8,
+            gops: 487.1,
+            gops_per_watt: None,
+        },
+        PublishedRow {
+            name: "Light-OPU",
+            network: "MobileNetV3",
+            bit_width: "W8A8",
+            top1_acc: 66.7,
+            platform: "XC7K325T",
+            freq_mhz: 200.0,
+            luts: 173_522,
+            ffs: 241_175,
+            bram36: 193.5,
+            dsps: 704,
+            power_w: Some(8.5),
+            fps: 332.6,
+            gops: 84.48,
+            gops_per_watt: Some(9.9),
+        },
+        PublishedRow {
+            name: "FPL'21",
+            network: "MobileNetV2",
+            bit_width: "W8A8",
+            top1_acc: 70.8,
+            platform: "XC7V690T",
+            freq_mhz: 150.0,
+            luts: 308_449,
+            ffs: 278_926,
+            bram36: 941.5,
+            dsps: 2160,
+            power_w: Some(11.35),
+            fps: 302.3,
+            gops: 181.8,
+            gops_per_watt: Some(16.02),
+        },
+        PublishedRow {
+            name: "Mix&Match",
+            network: "MobileNetV2",
+            bit_width: "W4A4",
+            top1_acc: 65.6,
+            platform: "XC7Z045",
+            freq_mhz: 100.0,
+            luts: 145_049,
+            ffs: 111_575,
+            bram36: 225.5,
+            dsps: 900,
+            power_w: None,
+            fps: 549.3,
+            gops: 326.9,
+            gops_per_watt: None,
+        },
+        PublishedRow {
+            name: "FILM-QNN",
+            network: "MobileNetV2",
+            bit_width: "W8A5&W4A5",
+            top1_acc: 65.7,
+            platform: "ZU9EG",
+            freq_mhz: 150.0,
+            luts: 180_100,
+            ffs: 0,
+            bram36: 440.5,
+            dsps: 2092,
+            power_w: Some(12.9),
+            fps: 537.9,
+            gops: 320.1,
+            gops_per_watt: Some(24.8),
+        },
+    ]
+}
+
+/// LUTMUL's own published row (validation target for the regenerated one).
+pub fn lutmul_published() -> PublishedRow {
+    PublishedRow {
+        name: "LUTMUL (paper)",
+        network: "MobileNetV2",
+        bit_width: "W4A4",
+        top1_acc: 70.95,
+        platform: "Alveo U280",
+        freq_mhz: 333.0,
+        luts: 529_242,
+        ffs: 503_192,
+        bram36: 1119.0,
+        dsps: 106,
+        power_w: Some(42.12),
+        fps: 1627.0,
+        gops: 978.6,
+        gops_per_watt: Some(23.23),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::device::{U280, ZU9EG};
+    use crate::graph::arch::mobilenet_v2_full;
+
+    #[test]
+    fn published_rows_complete() {
+        let rows = table2_published();
+        assert_eq!(rows.len(), 6);
+        assert!(rows.iter().all(|r| r.fps > 0.0 && r.gops > 0.0));
+    }
+
+    #[test]
+    fn dsp_baseline_in_published_regime() {
+        // A W8 DSP-packing design on ZU9EG should land in the few-hundred
+        // GOPS / several-hundred FPS regime of FPL'19 and FILM-QNN.
+        let arch = mobilenet_v2_full();
+        let est = dsp_packing_accelerator(&arch, &ZU9EG, 8, 333.0);
+        assert!(est.fps > 200.0 && est.fps < 3000.0, "fps {}", est.fps);
+        assert!(est.gops > 100.0 && est.gops < 1500.0, "gops {}", est.gops);
+    }
+
+    #[test]
+    fn overlay_slower_than_pe_array() {
+        let arch = mobilenet_v2_full();
+        let pe = dsp_packing_accelerator(&arch, &U280, 8, 300.0);
+        let ov = gemm_overlay_accelerator(&arch, &U280, 8, 300.0);
+        assert!(ov.fps < pe.fps);
+        assert!(ov.gops < pe.gops);
+    }
+
+    #[test]
+    fn paper_lutmul_beats_all_published_fps() {
+        // the Table 2 ordering the harness must reproduce
+        let lut = lutmul_published();
+        for r in table2_published() {
+            assert!(lut.fps > r.fps, "{} {} >= LUTMUL {}", r.name, r.fps, lut.fps);
+        }
+    }
+}

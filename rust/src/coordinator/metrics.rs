@@ -1,0 +1,123 @@
+//! Serving metrics: throughput, latency percentiles, GOPS.
+
+use std::time::{Duration, Instant};
+
+/// Online latency/throughput recorder shared by the serving workers.
+#[derive(Debug)]
+pub struct Metrics {
+    latencies_us: Vec<u64>,
+    started: Instant,
+    completed: u64,
+    ops_per_image: u64,
+}
+
+impl Metrics {
+    pub fn new(ops_per_image: u64) -> Self {
+        Self {
+            latencies_us: Vec::new(),
+            started: Instant::now(),
+            completed: 0,
+            ops_per_image,
+        }
+    }
+
+    pub fn record(&mut self, latency: Duration) {
+        self.latencies_us.push(latency.as_micros() as u64);
+        self.completed += 1;
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+
+    /// Requests per second since construction.
+    pub fn throughput_rps(&self) -> f64 {
+        self.completed as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    /// Achieved GOPS (model ops x images / wall time).
+    pub fn gops(&self) -> f64 {
+        self.throughput_rps() * self.ops_per_image as f64 / 1e9
+    }
+
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.latencies_us.is_empty() {
+            return 0;
+        }
+        let mut v = self.latencies_us.clone();
+        v.sort_unstable();
+        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        v[idx.min(v.len() - 1)]
+    }
+
+    pub fn summary(&self) -> MetricsSummary {
+        // single elapsed sample so gops/throughput stay consistent
+        let thr = self.throughput_rps();
+        MetricsSummary {
+            completed: self.completed,
+            throughput_rps: thr,
+            gops: thr * self.ops_per_image as f64 / 1e9,
+            p50_us: self.percentile_us(50.0),
+            p99_us: self.percentile_us(99.0),
+        }
+    }
+}
+
+/// Immutable snapshot for reporting.
+#[derive(Debug, Clone)]
+pub struct MetricsSummary {
+    pub completed: u64,
+    pub throughput_rps: f64,
+    pub gops: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+}
+
+impl std::fmt::Display for MetricsSummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} reqs | {:.1} req/s | {:.2} GOPS | p50 {} us | p99 {} us",
+            self.completed, self.throughput_rps, self.gops, self.p50_us, self.p99_us
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let mut m = Metrics::new(1000);
+        for i in 1..=100u64 {
+            m.record(Duration::from_micros(i));
+        }
+        assert_eq!(m.completed(), 100);
+        let p50 = m.percentile_us(50.0);
+        assert!((49..=51).contains(&p50), "p50 {p50}");
+        let p99 = m.percentile_us(99.0);
+        assert!((98..=100).contains(&p99), "p99 {p99}");
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = Metrics::new(1);
+        assert_eq!(m.percentile_us(99.0), 0);
+        assert_eq!(m.completed(), 0);
+    }
+
+    #[test]
+    fn gops_proportional_to_ops() {
+        let mut a = Metrics::new(1_000_000);
+        let mut b = Metrics::new(2_000_000);
+        a.record(Duration::from_micros(5));
+        b.record(Duration::from_micros(5));
+        // gops/throughput is exactly ops/1e9 within one summary snapshot
+        let sa = a.summary();
+        let sb = b.summary();
+        let ra = sa.gops / sa.throughput_rps;
+        let rb = sb.gops / sb.throughput_rps;
+        assert!((rb / ra - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,8 @@
+//! L3 serving coordinator (DESIGN.md S10): request router, dynamic
+//! batcher, worker pool, and metrics. Python is never on this path.
+
+pub mod metrics;
+pub mod server;
+
+pub use metrics::{Metrics, MetricsSummary};
+pub use server::{argmax, run_batch, Backend, Coordinator, InferenceResult, ServeConfig};

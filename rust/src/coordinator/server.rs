@@ -1,0 +1,320 @@
+//! Serving coordinator (DESIGN.md S10): request router + dynamic batcher
+//! + worker pool over the accelerator backends.
+//!
+//! The request path is pure Rust (Python never runs here): images arrive
+//! as uint8 code vectors, the batcher groups them (size- or timeout-
+//! triggered, vLLM-router style), and a pool of OS-thread workers executes
+//! batches on one of three backends:
+//!
+//!  * `Simulator` — the dataflow pipeline simulator (the paper's
+//!    accelerator, cycle-modelled);
+//!  * `Reference` — the spec-level integer executor (fast path);
+//!  * `LutFabric` — the executor with every 4-bit multiplication
+//!    performed by simulated LUT6_2 readout (hardware-true datapath).
+//!
+//! All backends are bit-exact w.r.t. the JAX golden model; the PJRT
+//! runtime (`runtime::Runtime`) provides the golden check at startup.
+//!
+//! (The offline vendored crate set has no tokio, so concurrency is
+//! std::thread + channels; the API is synchronous with a non-blocking
+//! `submit` / blocking `wait` split.)
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::dataflow::{FoldConfig, Pipeline};
+use crate::graph::executor::{Datapath, Executor, Tensor};
+use crate::graph::network::Network;
+
+use super::metrics::{Metrics, MetricsSummary};
+
+/// Inference backend selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    Simulator,
+    Reference,
+    LutFabric,
+}
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub backend: Backend,
+    pub workers: usize,
+    pub max_batch: usize,
+    /// Batching window: dispatch a partial batch after this long.
+    pub max_wait: Duration,
+    pub queue_depth: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            backend: Backend::Reference,
+            workers: 2,
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+            queue_depth: 1024,
+        }
+    }
+}
+
+/// One queued request.
+struct Request {
+    image: Vec<i32>,
+    enqueued: Instant,
+    resp: SyncSender<InferenceResult>,
+}
+
+/// Inference response.
+#[derive(Debug, Clone)]
+pub struct InferenceResult {
+    pub logits: Vec<f32>,
+    pub class: usize,
+    pub latency: Duration,
+}
+
+/// A pending response handle.
+pub struct Ticket {
+    rx: Receiver<InferenceResult>,
+}
+
+impl Ticket {
+    /// Block until the result is ready.
+    pub fn wait(self) -> anyhow::Result<InferenceResult> {
+        self.rx.recv().map_err(|_| anyhow::anyhow!("worker dropped request"))
+    }
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    tx: SyncSender<Request>,
+    metrics: Arc<Mutex<Metrics>>,
+    rejected: Arc<AtomicU64>,
+    /// joined on drop
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start the router, batcher and worker pool.
+    pub fn start(net: Arc<Network>, cfg: ServeConfig) -> Self {
+        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
+        let ops = crate::graph::arch::mobilenet_v2_small().ops_per_image();
+        let metrics = Arc::new(Mutex::new(Metrics::new(ops)));
+        let rejected = Arc::new(AtomicU64::new(0));
+        let mut threads = Vec::new();
+
+        // worker pool: one queue per worker (a shared Mutex<Receiver>
+        // would serialize the pool — the lock is held across the blocking
+        // recv); the batcher round-robins across the queues.
+        let n_workers = cfg.workers.max(1);
+        let mut worker_txs = Vec::with_capacity(n_workers);
+        for wi in 0..n_workers {
+            let (wtx, wrx) = sync_channel::<Vec<Request>>(2);
+            worker_txs.push(wtx);
+            let net = net.clone();
+            let metrics = metrics.clone();
+            let backend = cfg.backend;
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("lutmul-worker-{wi}"))
+                    .spawn(move || {
+                        // per-worker persistent backend state (avoids
+                        // rebuilding the pipeline/executor per batch)
+                        let mut worker = WorkerBackend::new(&net, backend);
+                        while let Ok(batch) = wrx.recv() {
+                            let images: Vec<Vec<i32>> =
+                                batch.iter().map(|r| r.image.clone()).collect();
+                            let results = worker.run(&images);
+                            for (req, logits) in batch.into_iter().zip(results) {
+                                let latency = req.enqueued.elapsed();
+                                let class = argmax(&logits);
+                                metrics.lock().unwrap().record(latency);
+                                let _ = req.resp.send(InferenceResult { logits, class, latency });
+                            }
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+
+        // batcher: size- or timeout-triggered dispatch
+        let max_batch = cfg.max_batch.max(1);
+        let max_wait = cfg.max_wait;
+        threads.push(
+            std::thread::Builder::new()
+                .name("lutmul-batcher".into())
+                .spawn(move || {
+                    let mut pending: Vec<Request> = Vec::with_capacity(max_batch);
+                    let mut next_worker = 0usize;
+                    let dispatch = |batch: Vec<Request>, next_worker: &mut usize| -> bool {
+                        // round-robin over the worker queues
+                        let tx = &worker_txs[*next_worker % worker_txs.len()];
+                        *next_worker += 1;
+                        tx.send(batch).is_ok()
+                    };
+                    'outer: loop {
+                        // block for the first item of a batch
+                        match rx.recv() {
+                            Ok(r) => pending.push(r),
+                            Err(_) => break,
+                        }
+                        let window_end = Instant::now() + max_wait;
+                        while pending.len() < max_batch {
+                            let now = Instant::now();
+                            if now >= window_end {
+                                break;
+                            }
+                            match rx.recv_timeout(window_end - now) {
+                                Ok(r) => pending.push(r),
+                                Err(RecvTimeoutError::Timeout) => break,
+                                Err(RecvTimeoutError::Disconnected) => {
+                                    if !pending.is_empty() {
+                                        let b = std::mem::take(&mut pending);
+                                        let _ = dispatch(b, &mut next_worker);
+                                    }
+                                    break 'outer;
+                                }
+                            }
+                        }
+                        let batch = std::mem::take(&mut pending);
+                        if !dispatch(batch, &mut next_worker) {
+                            break;
+                        }
+                    }
+                })
+                .expect("spawn batcher"),
+        );
+
+        Self { tx, metrics, rejected, threads }
+    }
+
+    /// Submit one image without blocking; returns a ticket to wait on.
+    pub fn submit(&self, image: Vec<i32>) -> anyhow::Result<Ticket> {
+        let (resp_tx, resp_rx) = sync_channel(1);
+        let req = Request { image, enqueued: Instant::now(), resp: resp_tx };
+        match self.tx.try_send(req) {
+            Ok(()) => Ok(Ticket { rx: resp_rx }),
+            Err(TrySendError::Full(_)) => {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                anyhow::bail!("queue full (backpressure)")
+            }
+            Err(TrySendError::Disconnected(_)) => anyhow::bail!("coordinator stopped"),
+        }
+    }
+
+    /// Submit and wait (convenience).
+    pub fn infer(&self, image: Vec<i32>) -> anyhow::Result<InferenceResult> {
+        self.submit(image)?.wait()
+    }
+
+    pub fn metrics(&self) -> MetricsSummary {
+        self.metrics.lock().unwrap().summary()
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting requests and join all threads.
+    pub fn shutdown(mut self) {
+        drop(self.tx);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Per-worker backend state.
+enum WorkerBackend {
+    Pipeline(Box<Pipeline>),
+    Exec { net: Arc<Network>, datapath: Datapath },
+}
+
+impl WorkerBackend {
+    fn new(net: &Arc<Network>, backend: Backend) -> Self {
+        match backend {
+            Backend::Simulator => {
+                let folds = FoldConfig::fully_parallel(net.convs().count());
+                WorkerBackend::Pipeline(Box::new(Pipeline::build(net, &folds, 16)))
+            }
+            Backend::Reference => {
+                WorkerBackend::Exec { net: net.clone(), datapath: Datapath::Arithmetic }
+            }
+            Backend::LutFabric => {
+                WorkerBackend::Exec { net: net.clone(), datapath: Datapath::LutFabric }
+            }
+        }
+    }
+
+    fn run(&mut self, images: &[Vec<i32>]) -> Vec<Vec<f32>> {
+        match self {
+            WorkerBackend::Pipeline(p) => p.run(images).logits,
+            WorkerBackend::Exec { net, datapath } => {
+                let size = net.meta.image_size;
+                let ch = net.meta.in_ch;
+                let ex = Executor::new(net, *datapath);
+                images
+                    .iter()
+                    .map(|img| ex.execute(&Tensor::from_hwc(size, size, ch, img.clone())))
+                    .collect()
+            }
+        }
+    }
+}
+
+/// Execute a batch on a chosen backend (one-shot convenience).
+pub fn run_batch(net: &Network, backend: Backend, images: &[Vec<i32>]) -> Vec<Vec<f32>> {
+    let size = net.meta.image_size;
+    let ch = net.meta.in_ch;
+    match backend {
+        Backend::Simulator => {
+            let mut pipe = Pipeline::build(net, &FoldConfig::fully_parallel(net.convs().count()), 16);
+            pipe.run(images).logits
+        }
+        Backend::Reference | Backend::LutFabric => {
+            let dp = if backend == Backend::LutFabric {
+                Datapath::LutFabric
+            } else {
+                Datapath::Arithmetic
+            };
+            let ex = Executor::new(net, dp);
+            images
+                .iter()
+                .map(|img| ex.execute(&Tensor::from_hwc(size, size, ch, img.clone())))
+                .collect()
+        }
+    }
+}
+
+/// Index of the max logit.
+pub fn argmax(v: &[f32]) -> usize {
+    v.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 3.0, -1.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+        assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn default_config_sane() {
+        let c = ServeConfig::default();
+        assert!(c.workers >= 1 && c.max_batch >= 1);
+    }
+
+    // Coordinator round-trips are in rust/tests/integration.rs (they need
+    // a full network).
+}

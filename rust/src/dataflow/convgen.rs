@@ -1,0 +1,254 @@
+//! Convolution generator (paper section 3.4): the im2col streaming unit.
+//!
+//! Consumes input pixels (one `[CIN]` code vector per cycle) in raster
+//! order, maintains line buffers, and emits im2col patches (`[K*K*CIN]`
+//! in (tap, channel) minor order — matching `python/compile/model.py::
+//! im2col`) as soon as their window is complete. Supports standard,
+//! depthwise, and pointwise convolutions with arbitrary kernel/stride/pad
+//! ("each kind of convolutional layer expects different input data
+//! sequences, necessitating specific generator settings").
+
+
+/// Static configuration of a convolution generator.
+#[derive(Debug, Clone, Copy)]
+pub struct ConvGenConfig {
+    pub in_h: usize,
+    pub in_w: usize,
+    pub cin: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvGenConfig {
+    pub fn out_h(&self) -> usize {
+        (self.in_h + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        (self.in_w + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    /// Line-buffer bits: `(k-1)` full rows plus one partial row of pixels
+    /// must be resident (the classic sliding-window buffer).
+    pub fn line_buffer_bits(&self, act_bits: u32) -> u64 {
+        (self.k as u64) * self.in_w as u64 * self.cin as u64 * act_bits as u64
+    }
+
+    /// The input pixel (raster index) whose arrival completes the window
+    /// of output `(oy, ox)` — the last in-bounds tap.
+    fn trigger_index(&self, oy: usize, ox: usize) -> usize {
+        let last_y = (oy * self.stride + self.k - 1)
+            .saturating_sub(self.pad)
+            .min(self.in_h - 1);
+        let last_x = (ox * self.stride + self.k - 1)
+            .saturating_sub(self.pad)
+            .min(self.in_w - 1);
+        last_y * self.in_w + last_x
+    }
+}
+
+/// The streaming im2col generator.
+#[derive(Debug, Clone)]
+pub struct ConvGenerator {
+    cfg: ConvGenConfig,
+    /// Sliding window of the most recent `k` rows (plus partial row).
+    rows: Vec<Vec<i32>>, // rows[y % k][x * cin + c] circularly indexed
+    pixels_seen: usize,
+    /// Raster cursor over output positions awaiting their trigger pixel.
+    next_out: usize,
+    emitted_this_image: usize,
+}
+
+impl ConvGenerator {
+    pub fn new(cfg: ConvGenConfig) -> Self {
+        assert!(cfg.k >= 1 && cfg.stride >= 1);
+        assert!(cfg.pad < cfg.k, "padding beyond kernel makes empty taps only");
+        Self {
+            rows: vec![vec![0; cfg.in_w * cfg.cin]; cfg.k],
+            cfg,
+            pixels_seen: 0,
+            next_out: 0,
+            emitted_this_image: 0,
+        }
+    }
+
+    pub fn config(&self) -> &ConvGenConfig {
+        &self.cfg
+    }
+
+    /// Total patches emitted per image.
+    pub fn patches_per_image(&self) -> usize {
+        self.cfg.out_h() * self.cfg.out_w()
+    }
+
+    /// Feed one input pixel (length `CIN`); returns every patch whose
+    /// window this pixel completes (usually 0 or 1; more at right/bottom
+    /// edges with padding).
+    pub fn push_pixel(&mut self, pixel: &[i32]) -> Vec<Vec<i32>> {
+        let cfg = self.cfg;
+        assert_eq!(pixel.len(), cfg.cin, "pixel width mismatch");
+        let idx = self.pixels_seen;
+        let (y, x) = (idx / cfg.in_w, idx % cfg.in_w);
+        let row = &mut self.rows[y % cfg.k];
+        row[x * cfg.cin..(x + 1) * cfg.cin].copy_from_slice(pixel);
+        self.pixels_seen += 1;
+
+        let mut patches = Vec::new();
+        let total_out = cfg.out_h() * cfg.out_w();
+        while self.next_out < total_out {
+            let (oy, ox) = (self.next_out / cfg.out_w(), self.next_out % cfg.out_w());
+            // Emit once the trigger pixel has passed. Strict equality is
+            // wrong at clamped bottom/right edges: several outputs share a
+            // clamped trigger, and raster order can put a *smaller*
+            // trigger after a larger one (e.g. output (H-1, 0) after
+            // (H-2, W-1) when both clamp to input row H-1).
+            if cfg.trigger_index(oy, ox) > idx {
+                break;
+            }
+            patches.push(self.extract(oy, ox));
+            self.next_out += 1;
+            self.emitted_this_image += 1;
+        }
+
+        // end of image: reset for the next one
+        if self.pixels_seen == cfg.in_h * cfg.in_w {
+            debug_assert_eq!(self.emitted_this_image, total_out, "convgen under-emitted");
+            self.pixels_seen = 0;
+            self.next_out = 0;
+            self.emitted_this_image = 0;
+        }
+        patches
+    }
+
+    /// Extract the patch for output `(oy, ox)` from the line buffers,
+    /// zero-filling out-of-bounds taps (exact for unsigned codes).
+    fn extract(&self, oy: usize, ox: usize) -> Vec<i32> {
+        let cfg = self.cfg;
+        let mut patch = vec![0i32; cfg.k * cfg.k * cfg.cin];
+        for i in 0..cfg.k {
+            let y = (oy * cfg.stride + i) as isize - cfg.pad as isize;
+            if y < 0 || y >= cfg.in_h as isize {
+                continue;
+            }
+            let row = &self.rows[(y as usize) % cfg.k];
+            for j in 0..cfg.k {
+                let x = (ox * cfg.stride + j) as isize - cfg.pad as isize;
+                if x < 0 || x >= cfg.in_w as isize {
+                    continue;
+                }
+                let tap = i * cfg.k + j;
+                let src = &row[(x as usize) * cfg.cin..(x as usize + 1) * cfg.cin];
+                patch[tap * cfg.cin..(tap + 1) * cfg.cin].copy_from_slice(src);
+            }
+        }
+        patch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Feed a whole image and collect patches; compare against a direct
+    /// im2col implementation.
+    fn run_image(cfg: ConvGenConfig, img: &[i32]) -> Vec<Vec<i32>> {
+        let mut gen = ConvGenerator::new(cfg);
+        let mut out = Vec::new();
+        for p in img.chunks(cfg.cin) {
+            out.extend(gen.push_pixel(p));
+        }
+        out
+    }
+
+    fn direct_im2col(cfg: ConvGenConfig, img: &[i32]) -> Vec<Vec<i32>> {
+        let get = |y: isize, x: isize, c: usize| -> i32 {
+            if y < 0 || x < 0 || y >= cfg.in_h as isize || x >= cfg.in_w as isize {
+                0
+            } else {
+                img[(y as usize * cfg.in_w + x as usize) * cfg.cin + c]
+            }
+        };
+        let mut out = Vec::new();
+        for oy in 0..cfg.out_h() {
+            for ox in 0..cfg.out_w() {
+                let mut patch = Vec::with_capacity(cfg.k * cfg.k * cfg.cin);
+                for i in 0..cfg.k {
+                    for j in 0..cfg.k {
+                        for c in 0..cfg.cin {
+                            patch.push(get(
+                                (oy * cfg.stride + i) as isize - cfg.pad as isize,
+                                (ox * cfg.stride + j) as isize - cfg.pad as isize,
+                                c,
+                            ));
+                        }
+                    }
+                }
+                out.push(patch);
+            }
+        }
+        out
+    }
+
+    fn test_img(cfg: &ConvGenConfig) -> Vec<i32> {
+        (0..cfg.in_h * cfg.in_w * cfg.cin).map(|i| (i % 16) as i32).collect()
+    }
+
+    #[test]
+    fn std_3x3_stride1_pad1() {
+        let cfg = ConvGenConfig { in_h: 6, in_w: 6, cin: 3, k: 3, stride: 1, pad: 1 };
+        let img = test_img(&cfg);
+        assert_eq!(run_image(cfg, &img), direct_im2col(cfg, &img));
+    }
+
+    #[test]
+    fn std_3x3_stride2() {
+        let cfg = ConvGenConfig { in_h: 8, in_w: 8, cin: 2, k: 3, stride: 2, pad: 1 };
+        let img = test_img(&cfg);
+        let got = run_image(cfg, &img);
+        assert_eq!(got.len(), cfg.out_h() * cfg.out_w());
+        assert_eq!(got, direct_im2col(cfg, &img));
+    }
+
+    #[test]
+    fn pointwise_1x1() {
+        let cfg = ConvGenConfig { in_h: 4, in_w: 4, cin: 5, k: 1, stride: 1, pad: 0 };
+        let img = test_img(&cfg);
+        let got = run_image(cfg, &img);
+        // pointwise: each patch is exactly the pixel, emitted immediately
+        assert_eq!(got.len(), 16);
+        assert_eq!(got, direct_im2col(cfg, &img));
+    }
+
+    #[test]
+    fn non_square_input() {
+        let cfg = ConvGenConfig { in_h: 5, in_w: 7, cin: 2, k: 3, stride: 1, pad: 1 };
+        let img = test_img(&cfg);
+        assert_eq!(run_image(cfg, &img), direct_im2col(cfg, &img));
+    }
+
+    #[test]
+    fn resets_between_images() {
+        let cfg = ConvGenConfig { in_h: 4, in_w: 4, cin: 1, k: 3, stride: 1, pad: 1 };
+        let img1: Vec<i32> = (0..16).collect();
+        let img2: Vec<i32> = (0..16).rev().collect();
+        let mut gen = ConvGenerator::new(cfg);
+        let mut got1 = Vec::new();
+        for p in img1.chunks(1) {
+            got1.extend(gen.push_pixel(p));
+        }
+        let mut got2 = Vec::new();
+        for p in img2.chunks(1) {
+            got2.extend(gen.push_pixel(p));
+        }
+        assert_eq!(got1, direct_im2col(cfg, &img1));
+        assert_eq!(got2, direct_im2col(cfg, &img2));
+    }
+
+    #[test]
+    fn line_buffer_sizing() {
+        let cfg = ConvGenConfig { in_h: 112, in_w: 112, cin: 32, k: 3, stride: 1, pad: 1 };
+        // 3 rows x 112 px x 32 ch x 4 bits
+        assert_eq!(cfg.line_buffer_bits(4), 3 * 112 * 32 * 4);
+    }
+}

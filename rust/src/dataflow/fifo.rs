@@ -1,0 +1,120 @@
+//! Bounded FIFO channel between dataflow stages (paper section 3.3:
+//! "employs a First In, First Out (FIFO) buffer between layers to store
+//! activations").
+//!
+//! Tracks occupancy high-water marks so the synthesis analog can size the
+//! physical FIFOs (BRAM vs LUTRAM) from simulation.
+
+use std::collections::VecDeque;
+
+/// A bounded FIFO with occupancy statistics.
+#[derive(Debug, Clone)]
+pub struct Fifo<T> {
+    q: VecDeque<T>,
+    capacity: usize,
+    high_water: usize,
+    total_pushes: u64,
+    /// Cycles a producer stalled because this FIFO was full.
+    pub backpressure_events: u64,
+}
+
+impl<T> Fifo<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "FIFO capacity must be positive");
+        Self {
+            q: VecDeque::with_capacity(capacity.min(4096)),
+            capacity,
+            high_water: 0,
+            total_pushes: 0,
+            backpressure_events: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.q.len() >= self.capacity
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Push a token; returns false (and records backpressure) when full.
+    pub fn try_push(&mut self, v: T) -> bool {
+        if self.is_full() {
+            self.backpressure_events += 1;
+            return false;
+        }
+        self.q.push_back(v);
+        self.total_pushes += 1;
+        self.high_water = self.high_water.max(self.q.len());
+        true
+    }
+
+    pub fn pop(&mut self) -> Option<T> {
+        self.q.pop_front()
+    }
+
+    pub fn peek(&self) -> Option<&T> {
+        self.q.front()
+    }
+
+    /// Maximum occupancy observed (physical depth requirement).
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
+    pub fn total_pushes(&self) -> u64 {
+        self.total_pushes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_pop_order() {
+        let mut f = Fifo::new(4);
+        assert!(f.try_push(1));
+        assert!(f.try_push(2));
+        assert_eq!(f.pop(), Some(1));
+        assert_eq!(f.pop(), Some(2));
+        assert_eq!(f.pop(), None);
+    }
+
+    #[test]
+    fn rejects_when_full_and_counts_backpressure() {
+        let mut f = Fifo::new(2);
+        assert!(f.try_push(1));
+        assert!(f.try_push(2));
+        assert!(!f.try_push(3));
+        assert_eq!(f.backpressure_events, 1);
+        assert_eq!(f.len(), 2);
+    }
+
+    #[test]
+    fn high_water_tracks_max() {
+        let mut f = Fifo::new(8);
+        for i in 0..5 {
+            f.try_push(i);
+        }
+        f.pop();
+        f.pop();
+        assert_eq!(f.high_water(), 5);
+        assert_eq!(f.len(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_capacity_panics() {
+        let _: Fifo<i32> = Fifo::new(0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Reconfigurable dataflow architecture (DESIGN.md S6-S7): streaming
+//! convolution generator, bounded FIFOs, and the cycle-level pipeline
+//! simulator that executes a streamlined network exactly as the generated
+//! accelerator would — all layers resident, activations flowing on-chip.
+
+pub mod convgen;
+pub mod multi;
+pub mod fifo;
+pub mod pipeline;
+
+pub use convgen::{ConvGenConfig, ConvGenerator};
+pub use fifo::Fifo;
+pub use pipeline::{FoldConfig, Pipeline, SimReport, StageStat};

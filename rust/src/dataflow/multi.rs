@@ -1,0 +1,210 @@
+//! Multi-FPGA scaling (paper section 3.3): "Dataflow architecture is
+//! inherently suited for design spanning multiple SLRs and can be scaled
+//! up, enabling additional FPGAs connected via network for deploying
+//! larger networks [Diaconu et al., HPEC'23]."
+//!
+//! This module partitions a synthesized design across several devices
+//! connected by network links and models the resulting pipeline:
+//! functional behaviour is unchanged (the partition only moves the FIFO
+//! between two stages onto a network hop), throughput is the slowest of
+//! {per-device stage bound, link bandwidth bound}, and latency gains the
+//! per-hop link latency.
+
+use crate::fabric::device::FpgaDevice;
+use crate::graph::arch::{ArchSpec, LayerSpec};
+use crate::synth::design::{stage_resources, choose_mode};
+
+/// A network link between consecutive devices in the chain.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkModel {
+    /// Usable bandwidth (bytes/s), e.g. 100 GbE ~ 12.5e9 * 0.8.
+    pub bandwidth_bps: f64,
+    /// One-way latency (seconds), e.g. ~2 us for a switched 100 GbE hop.
+    pub latency_s: f64,
+}
+
+impl LinkModel {
+    /// 100 GbE with typical efficiency — the OCT testbed's fabric.
+    pub fn gbe100() -> Self {
+        Self { bandwidth_bps: 12.5e9 * 0.8, latency_s: 2e-6 }
+    }
+}
+
+/// The placement of a contiguous slice of layers on one device.
+#[derive(Debug, Clone)]
+pub struct DevicePartition {
+    pub device: String,
+    pub first_layer: usize,
+    pub last_layer: usize, // inclusive
+    pub luts: f64,
+    /// Steady-state cycles/image of the slowest stage on this device.
+    pub bound_cycles: u64,
+    /// Activation bytes crossing the link *out* of this device per image.
+    pub egress_bytes: u64,
+}
+
+/// A multi-device plan.
+#[derive(Debug, Clone)]
+pub struct MultiFpgaPlan {
+    pub partitions: Vec<DevicePartition>,
+    pub link: LinkModel,
+    pub freq_mhz: f64,
+}
+
+/// Activation bytes emitted by a layer per image (codes are `a_bits` wide).
+fn egress_bytes(layer: &LayerSpec) -> u64 {
+    let px = (layer.out_hw() * layer.out_hw()) as u64;
+    px * layer.cout as u64 * layer.a_bits as u64 / 8
+}
+
+/// Greedy balanced partition of an architecture over `n` identical
+/// devices: walk layers, cutting when the running LUT total exceeds an
+/// equal share of the whole design (the same spill rule used for SLRs).
+pub fn partition(
+    arch: &ArchSpec,
+    device: &FpgaDevice,
+    n_devices: usize,
+    folds: &[usize],
+    link: LinkModel,
+) -> MultiFpgaPlan {
+    assert_eq!(folds.len(), arch.layers.len());
+    assert!(n_devices >= 1);
+    let per_layer: Vec<f64> = arch
+        .layers
+        .iter()
+        .zip(folds)
+        .map(|(l, &f)| stage_resources(l, choose_mode(l, f), f).0)
+        .collect();
+    let total: f64 = per_layer.iter().sum();
+    let share = total / n_devices as f64;
+
+    let mut partitions = Vec::new();
+    let mut first = 0usize;
+    let mut acc = 0.0f64;
+    for (i, luts) in per_layer.iter().enumerate() {
+        acc += luts;
+        let last_device = partitions.len() + 1 == n_devices;
+        if (acc >= share && !last_device) || i + 1 == arch.layers.len() {
+            let bound = arch.layers[first..=i]
+                .iter()
+                .zip(&folds[first..=i])
+                .map(|(l, &f)| (l.out_hw() * l.out_hw()) as u64 * f as u64)
+                .max()
+                .unwrap_or(1);
+            partitions.push(DevicePartition {
+                device: device.name.to_string(),
+                first_layer: first,
+                last_layer: i,
+                luts: acc,
+                bound_cycles: bound,
+                egress_bytes: egress_bytes(&arch.layers[i]),
+            });
+            first = i + 1;
+            acc = 0.0;
+        }
+    }
+    MultiFpgaPlan { partitions, link, freq_mhz: device.max_freq_mhz }
+}
+
+impl MultiFpgaPlan {
+    /// Steady-state FPS: min over {device compute bounds, link bounds}.
+    pub fn fps(&self) -> f64 {
+        let f = self.freq_mhz * 1e6;
+        let compute = self
+            .partitions
+            .iter()
+            .map(|p| f / p.bound_cycles as f64)
+            .fold(f64::INFINITY, f64::min);
+        let link = self.partitions[..self.partitions.len().saturating_sub(1)]
+            .iter()
+            .map(|p| self.link.bandwidth_bps / p.egress_bytes.max(1) as f64)
+            .fold(f64::INFINITY, f64::min);
+        compute.min(link)
+    }
+
+    /// Added end-to-end latency from the network hops.
+    pub fn added_latency_s(&self) -> f64 {
+        let hops = self.partitions.len().saturating_sub(1) as f64;
+        // store-and-forward of one image's activations per hop + wire time
+        let xfer: f64 = self.partitions[..self.partitions.len().saturating_sub(1)]
+            .iter()
+            .map(|p| p.egress_bytes as f64 / self.link.bandwidth_bps)
+            .sum();
+        hops * self.link.latency_s + xfer
+    }
+
+    /// Largest per-device LUT usage (the fit criterion).
+    pub fn max_device_luts(&self) -> f64 {
+        self.partitions.iter().map(|p| p.luts).fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::device::U280;
+    use crate::graph::arch::mobilenet_v2_full;
+    use crate::synth::fold::{optimize_folding, Budget};
+
+    fn setup() -> (ArchSpec, Vec<usize>) {
+        let arch = mobilenet_v2_full();
+        let (folds, _) = optimize_folding(&arch, &Budget::whole(&U280));
+        (arch, folds)
+    }
+
+    #[test]
+    fn partitions_cover_all_layers_contiguously() {
+        let (arch, folds) = setup();
+        for n in [1usize, 2, 3, 4] {
+            let plan = partition(&arch, &U280, n, &folds, LinkModel::gbe100());
+            assert_eq!(plan.partitions.len(), n);
+            assert_eq!(plan.partitions[0].first_layer, 0);
+            assert_eq!(plan.partitions.last().unwrap().last_layer, arch.layers.len() - 1);
+            for w in plan.partitions.windows(2) {
+                assert_eq!(w[0].last_layer + 1, w[1].first_layer, "contiguous cut");
+            }
+        }
+    }
+
+    #[test]
+    fn more_devices_reduce_per_device_footprint() {
+        let (arch, folds) = setup();
+        let one = partition(&arch, &U280, 1, &folds, LinkModel::gbe100());
+        let four = partition(&arch, &U280, 4, &folds, LinkModel::gbe100());
+        assert!(four.max_device_luts() < one.max_device_luts());
+        // balanced within ~3x (layer granularity limits perfection)
+        let min = four.partitions.iter().map(|p| p.luts).fold(f64::INFINITY, f64::min);
+        assert!(four.max_device_luts() / min.max(1.0) < 3.0);
+    }
+
+    #[test]
+    fn link_never_bottlenecks_mobilenet_on_100gbe() {
+        // activations between MobileNetV2 layers are tiny vs 100 GbE
+        let (arch, folds) = setup();
+        let plan = partition(&arch, &U280, 3, &folds, LinkModel::gbe100());
+        let f = plan.freq_mhz * 1e6;
+        let compute_fps = plan
+            .partitions
+            .iter()
+            .map(|p| f / p.bound_cycles as f64)
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(plan.fps(), compute_fps, "compute-bound, not link-bound");
+    }
+
+    #[test]
+    fn slow_link_becomes_the_bottleneck() {
+        let (arch, folds) = setup();
+        let slow = LinkModel { bandwidth_bps: 1e6, latency_s: 1e-3 };
+        let plan = partition(&arch, &U280, 2, &folds, slow);
+        let fast = partition(&arch, &U280, 2, &folds, LinkModel::gbe100());
+        assert!(plan.fps() < fast.fps());
+        assert!(plan.added_latency_s() > fast.added_latency_s());
+    }
+
+    #[test]
+    fn single_device_has_no_link_overhead() {
+        let (arch, folds) = setup();
+        let plan = partition(&arch, &U280, 1, &folds, LinkModel::gbe100());
+        assert_eq!(plan.added_latency_s(), 0.0);
+    }
+}

@@ -1,0 +1,664 @@
+//! Cycle-level dataflow pipeline simulator (paper section 3.3).
+//!
+//! Builds one hardware stage per network op — convolution stages own a
+//! [`ConvGenerator`](super::convgen::ConvGenerator) plus a (possibly
+//! folded) LUT multiplier array and a multi-threshold unit; residual
+//! bypasses become tee/join stages with their own FIFOs — and simulates
+//! the whole pipeline at pixel granularity: every stage fires when its
+//! inputs are ready and downstream FIFO space exists, taking `II = fold`
+//! cycles per output. This reproduces both the *functional* behaviour
+//! (bit-exact vs the JAX golden model) and the *timing* behaviour
+//! (throughput = clock / cycles-per-image of the slowest stage, FIFO
+//! high-water marks, backpressure).
+
+use std::collections::VecDeque;
+
+use crate::quant::saturating_res_add;
+
+use super::convgen::{ConvGenConfig, ConvGenerator};
+use super::fifo::Fifo;
+use crate::graph::network::{ConvKind, Network, Op};
+
+type Token = Vec<i32>;
+
+/// Per-layer folding: a stage computes `cout / fold` output channels per
+/// cycle, so one output pixel takes `fold` cycles (paper section 3.2:
+/// "HLS layers are folded according to performance and resource
+/// requirements").
+#[derive(Debug, Clone)]
+pub struct FoldConfig {
+    /// fold factor per conv stage, in network order. 1 = fully parallel.
+    pub folds: Vec<usize>,
+}
+
+impl FoldConfig {
+    pub fn fully_parallel(n_convs: usize) -> Self {
+        Self { folds: vec![1; n_convs] }
+    }
+
+    pub fn uniform(n_convs: usize, fold: usize) -> Self {
+        Self { folds: vec![fold.max(1); n_convs] }
+    }
+}
+
+struct ConvStage {
+    gen: ConvGenerator,
+    kind: ConvKind,
+    cout: usize,
+    cin: usize,
+    /// row-major `[cout][cols]` flattened weights (hot loop is
+    /// indirection-free; see graph::executor::PreppedConv for rationale).
+    wflat: Vec<i32>,
+    cols: usize,
+    /// row-major `[cout][levels]` flattened thresholds + signs/consts.
+    thr_flat: Vec<i32>,
+    levels: usize,
+    signs: Vec<i32>,
+    consts: Vec<i32>,
+    fold: usize,
+    pending: VecDeque<Token>,
+    busy_until: u64,
+    name: String,
+}
+
+impl ConvStage {
+    /// Branchless multi-threshold (bit-identical to `MultiThreshold::apply`).
+    #[inline]
+    fn threshold(&self, acc: i32, ch: usize) -> i32 {
+        let ts = &self.thr_flat[ch * self.levels..(ch + 1) * self.levels];
+        match self.signs[ch] {
+            s if s > 0 => ts.iter().map(|&t| (acc >= t) as i32).sum(),
+            s if s < 0 => ts.iter().map(|&t| (acc <= t) as i32).sum(),
+            _ => self.consts[ch],
+        }
+    }
+
+    fn compute(&self, patch: &[i32]) -> Token {
+        let mut out = vec![0i32; self.cout];
+        match self.kind {
+            ConvKind::Dw => {
+                // patch layout (tap, channel); filter per channel
+                let k2 = self.cols;
+                for (c, o) in out.iter_mut().enumerate() {
+                    let row = &self.wflat[c * k2..(c + 1) * k2];
+                    let mut acc = 0i32;
+                    for (tap, w) in row.iter().enumerate() {
+                        acc += w * patch[tap * self.cin + c];
+                    }
+                    *o = self.threshold(acc, c);
+                }
+            }
+            _ => {
+                for (co, o) in out.iter_mut().enumerate() {
+                    let row = &self.wflat[co * self.cols..(co + 1) * self.cols];
+                    let mut acc = 0i32;
+                    for (w, a) in row.iter().zip(patch.iter()) {
+                        acc += w * a;
+                    }
+                    *o = self.threshold(acc, co);
+                }
+            }
+        }
+        out
+    }
+}
+
+struct PoolStage {
+    pixels_per_image: usize,
+    acc: Vec<i32>,
+    seen: usize,
+}
+
+struct DenseStage {
+    w_codes: Vec<Vec<i32>>, // [CIN][COUT]
+    scale: Vec<f32>,
+    bias: Vec<f32>,
+}
+
+enum StageKind {
+    Conv(Box<ConvStage>),
+    /// Residual split: duplicate the token into main + bypass FIFOs.
+    Tee,
+    /// Residual join: saturating add of main + bypass tokens.
+    ResAdd { bits: u32 },
+    Pool(PoolStage),
+    Dense(DenseStage),
+}
+
+struct Stage {
+    kind: StageKind,
+    inputs: Vec<usize>,  // fifo ids
+    outputs: Vec<usize>, // fifo ids (empty for Dense -> logits sink)
+    fires: u64,
+    stalled_cycles: u64,
+}
+
+/// Simulation statistics for one stage.
+#[derive(Debug, Clone)]
+pub struct StageStat {
+    pub name: String,
+    pub fires: u64,
+    pub stalled_cycles: u64,
+    pub ii: usize,
+}
+
+/// FIFO sizing data from simulation.
+#[derive(Debug, Clone)]
+pub struct FifoStat {
+    pub high_water: usize,
+    pub capacity: usize,
+    pub backpressure_events: u64,
+}
+
+/// Result of a pipeline run.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Total simulated cycles to fully drain all images.
+    pub cycles: u64,
+    pub images: usize,
+    pub logits: Vec<Vec<f32>>,
+    pub stages: Vec<StageStat>,
+    pub fifos: Vec<FifoStat>,
+    /// Steady-state cycles per image (analytic: slowest stage).
+    pub steady_state_cycles_per_image: u64,
+}
+
+impl SimReport {
+    /// Frames per second at a given clock.
+    pub fn fps(&self, freq_mhz: f64) -> f64 {
+        freq_mhz * 1e6 * self.images as f64 / self.cycles as f64
+    }
+
+    /// Steady-state FPS (pipeline full, the paper's Table 2 regime).
+    pub fn steady_state_fps(&self, freq_mhz: f64) -> f64 {
+        freq_mhz * 1e6 / self.steady_state_cycles_per_image as f64
+    }
+}
+
+/// The dataflow accelerator: stages + FIFOs built from a network.
+pub struct Pipeline {
+    stages: Vec<Stage>,
+    fifos: Vec<Fifo<Token>>,
+    input_fifo: usize,
+    in_pixels: usize,
+    in_ch: usize,
+    steady_cycles: u64,
+}
+
+impl Pipeline {
+    /// Compile a streamlined network into a dataflow pipeline.
+    ///
+    /// `fifo_depth` sizes inter-stage FIFOs (pixels); `folds` sets each
+    /// conv stage's initiation interval.
+    pub fn build(net: &Network, folds: &FoldConfig, fifo_depth: usize) -> Self {
+        let mut stages: Vec<Stage> = Vec::new();
+        let mut fifos: Vec<Fifo<Token>> = vec![Fifo::new(fifo_depth)];
+        let input_fifo = 0usize;
+        let mut cur = input_fifo;
+        let mut hw = net.meta.image_size;
+        let mut res_stack: Vec<(usize, usize)> = Vec::new(); // (fifo, hw)
+        let mut conv_idx = 0usize;
+        let mut steady: u64 = 1;
+
+        for op in &net.ops {
+            match op {
+                Op::Input { .. } => {}
+                Op::Conv { name, kind, cin, cout, k, stride, pad, w_codes, .. } => {
+                    let cfg = ConvGenConfig {
+                        in_h: hw,
+                        in_w: hw,
+                        cin: *cin,
+                        k: *k,
+                        stride: *stride,
+                        pad: *pad,
+                    };
+                    let fold = folds.folds.get(conv_idx).copied().unwrap_or(1).max(1);
+                    conv_idx += 1;
+                    let mt = Network::threshold_unit(op).expect("conv has thresholds");
+                    let levels = mt.levels();
+                    let out_fifo = fifos.len();
+                    fifos.push(Fifo::new(fifo_depth));
+                    let out_px = cfg.out_h() as u64 * cfg.out_w() as u64;
+                    steady = steady.max(out_px * fold as u64).max((hw * hw) as u64);
+                    stages.push(Stage {
+                        kind: StageKind::Conv(Box::new(ConvStage {
+                            gen: ConvGenerator::new(cfg),
+                            kind: *kind,
+                            cout: *cout,
+                            cin: *cin,
+                            wflat: w_codes.iter().flatten().copied().collect(),
+                            cols: w_codes[0].len(),
+                            thr_flat: mt.thresholds.iter().flatten().copied().collect(),
+                            levels,
+                            signs: mt.signs.clone(),
+                            consts: mt.consts.clone(),
+                            fold,
+                            pending: VecDeque::new(),
+                            busy_until: 0,
+                            name: name.clone(),
+                        })),
+                        inputs: vec![cur],
+                        outputs: vec![out_fifo],
+                        fires: 0,
+                        stalled_cycles: 0,
+                    });
+                    cur = out_fifo;
+                    hw = cfg.out_h();
+                }
+                Op::ResPush {} => {
+                    let main = fifos.len();
+                    fifos.push(Fifo::new(fifo_depth));
+                    // bypass FIFO sized for a whole block's worth of pixels
+                    // plus in-flight slack (two images can overlap at the
+                    // tee while the join drains the first)
+                    let bypass = fifos.len();
+                    fifos.push(Fifo::new(2 * hw * hw + fifo_depth));
+                    stages.push(Stage {
+                        kind: StageKind::Tee,
+                        inputs: vec![cur],
+                        outputs: vec![main, bypass],
+                        fires: 0,
+                        stalled_cycles: 0,
+                    });
+                    res_stack.push((bypass, hw));
+                    cur = main;
+                }
+                Op::ResAdd { bits } => {
+                    let (bypass, _) = res_stack.pop().expect("res_add without res_push");
+                    let out = fifos.len();
+                    fifos.push(Fifo::new(fifo_depth));
+                    stages.push(Stage {
+                        kind: StageKind::ResAdd { bits: *bits },
+                        inputs: vec![cur, bypass],
+                        outputs: vec![out],
+                        fires: 0,
+                        stalled_cycles: 0,
+                    });
+                    cur = out;
+                }
+                Op::PoolSum {} => {
+                    let out = fifos.len();
+                    fifos.push(Fifo::new(fifo_depth));
+                    stages.push(Stage {
+                        kind: StageKind::Pool(PoolStage {
+                            pixels_per_image: hw * hw,
+                            acc: Vec::new(),
+                            seen: 0,
+                        }),
+                        inputs: vec![cur],
+                        outputs: vec![out],
+                        fires: 0,
+                        stalled_cycles: 0,
+                    });
+                    cur = out;
+                }
+                Op::Dense { w_codes, scale, bias, .. } => {
+                    stages.push(Stage {
+                        kind: StageKind::Dense(DenseStage {
+                            w_codes: w_codes.clone(),
+                            scale: scale.clone(),
+                            bias: bias.clone(),
+                        }),
+                        inputs: vec![cur],
+                        outputs: vec![],
+                        fires: 0,
+                        stalled_cycles: 0,
+                    });
+                }
+            }
+        }
+
+        Self {
+            stages,
+            fifos,
+            input_fifo,
+            in_pixels: net.meta.image_size * net.meta.image_size,
+            in_ch: net.meta.in_ch,
+            steady_cycles: steady,
+        }
+    }
+
+    /// Number of conv stages (for fold vector sizing).
+    pub fn n_convs(&self) -> usize {
+        self.stages
+            .iter()
+            .filter(|s| matches!(s.kind, StageKind::Conv(_)))
+            .count()
+    }
+
+    /// Run `images` (each `[H*W*C]` codes, raster order) through the
+    /// pipeline; returns logits per image plus timing statistics.
+    pub fn run(&mut self, images: &[Vec<i32>]) -> SimReport {
+        let mut logits: Vec<Vec<f32>> = Vec::with_capacity(images.len());
+        // stream of input pixels across all images
+        let in_ch = self.in_ch;
+        let mut pixel_iter =
+            images.iter().flat_map(move |img| img.chunks(in_ch)).map(|p| p.to_vec());
+        let total_pixels = images.len() * self.in_pixels;
+        let mut next_pixel: Option<Token> = pixel_iter.next();
+
+        let mut cycle: u64 = 0;
+        let max_cycles = (total_pixels as u64 + 10_000) * 64 + 1_000_000;
+        while logits.len() < images.len() {
+            cycle += 1;
+            assert!(cycle < max_cycles, "pipeline deadlock at cycle {cycle}");
+
+            // source: one pixel per cycle into the input FIFO
+            if let Some(px) = next_pixel.as_ref() {
+                if self.fifos[self.input_fifo].try_push(px.clone()) {
+                    next_pixel = pixel_iter.next();
+                }
+                // on failure: keep the pixel for next cycle (backpressure)
+            }
+
+            // stages fire downstream-first so space frees within a cycle
+            for si in (0..self.stages.len()).rev() {
+                self.fire_stage(si, cycle, &mut logits);
+            }
+        }
+
+        SimReport {
+            cycles: cycle,
+            images: images.len(),
+            logits,
+            stages: self
+                .stages
+                .iter()
+                .map(|s| StageStat {
+                    name: match &s.kind {
+                        StageKind::Conv(c) => c.name.clone(),
+                        StageKind::Tee => "tee".into(),
+                        StageKind::ResAdd { .. } => "res_add".into(),
+                        StageKind::Pool(_) => "pool".into(),
+                        StageKind::Dense(_) => "dense".into(),
+                    },
+                    fires: s.fires,
+                    stalled_cycles: s.stalled_cycles,
+                    ii: match &s.kind {
+                        StageKind::Conv(c) => c.fold,
+                        _ => 1,
+                    },
+                })
+                .collect(),
+            fifos: self
+                .fifos
+                .iter()
+                .map(|f| FifoStat {
+                    high_water: f.high_water(),
+                    capacity: f.capacity(),
+                    backpressure_events: f.backpressure_events,
+                })
+                .collect(),
+            steady_state_cycles_per_image: self.steady_cycles,
+        }
+    }
+
+    fn fire_stage(&mut self, si: usize, cycle: u64, logits: &mut Vec<Vec<f32>>) {
+        let (inputs, outputs) = {
+            let s = &self.stages[si];
+            (s.inputs.clone(), s.outputs.clone())
+        };
+        let mut fired = false;
+        let mut stalled = false;
+        // NB: `self.stages[si].kind` and `self.fifos[..]` are disjoint
+        // fields, so both can be borrowed mutably at once.
+        match &mut self.stages[si].kind {
+            StageKind::Conv(cs) => {
+                // 1) emit a computed patch if the multiplier array is free
+                if !cs.pending.is_empty() && cycle >= cs.busy_until {
+                    if !self.fifos[outputs[0]].is_full() {
+                        let patch = cs.pending.pop_front().unwrap();
+                        let out = cs.compute(&patch);
+                        let ok = self.fifos[outputs[0]].try_push(out);
+                        debug_assert!(ok);
+                        cs.busy_until = cycle + cs.fold as u64;
+                        fired = true;
+                    } else {
+                        stalled = true;
+                    }
+                }
+                // 2) ingest one input pixel per cycle (line-buffer write)
+                //    unless the patch queue is backed up
+                if cs.pending.len() < 4 {
+                    if let Some(px) = self.fifos[inputs[0]].pop() {
+                        let patches = cs.gen.push_pixel(&px);
+                        cs.pending.extend(patches);
+                    }
+                }
+            }
+            StageKind::Tee => {
+                if !self.fifos[outputs[0]].is_full() && !self.fifos[outputs[1]].is_full() {
+                    if let Some(px) = self.fifos[inputs[0]].pop() {
+                        self.fifos[outputs[0]].try_push(px.clone());
+                        self.fifos[outputs[1]].try_push(px);
+                        fired = true;
+                    }
+                }
+            }
+            StageKind::ResAdd { bits } => {
+                let bits = *bits;
+                if !self.fifos[inputs[0]].is_empty()
+                    && !self.fifos[inputs[1]].is_empty()
+                    && !self.fifos[outputs[0]].is_full()
+                {
+                    let a = self.fifos[inputs[0]].pop().unwrap();
+                    let b = self.fifos[inputs[1]].pop().unwrap();
+                    let sum: Token = a
+                        .iter()
+                        .zip(b.iter())
+                        .map(|(&x, &y)| saturating_res_add(x, y, bits))
+                        .collect();
+                    self.fifos[outputs[0]].try_push(sum);
+                    fired = true;
+                }
+            }
+            StageKind::Pool(ps) => {
+                if !self.fifos[outputs[0]].is_full() {
+                    if let Some(px) = self.fifos[inputs[0]].pop() {
+                        if ps.acc.is_empty() {
+                            ps.acc = vec![0; px.len()];
+                        }
+                        for (a, v) in ps.acc.iter_mut().zip(px.iter()) {
+                            *a += v;
+                        }
+                        ps.seen += 1;
+                        fired = true;
+                        if ps.seen == ps.pixels_per_image {
+                            let acc = std::mem::take(&mut ps.acc);
+                            ps.seen = 0;
+                            self.fifos[outputs[0]].try_push(acc);
+                        }
+                    }
+                }
+            }
+            StageKind::Dense(ds) => {
+                if let Some(pooled) = self.fifos[inputs[0]].pop() {
+                    let cout = ds.scale.len();
+                    let out: Vec<f32> = (0..cout)
+                        .map(|co| {
+                            let acc: i64 = pooled
+                                .iter()
+                                .enumerate()
+                                .map(|(ci, &a)| a as i64 * ds.w_codes[ci][co] as i64)
+                                .sum();
+                            // FMA to match XLA's fused lowering (see executor.rs)
+                            (acc as f32).mul_add(ds.scale[co], ds.bias[co])
+                        })
+                        .collect();
+                    logits.push(out);
+                    fired = true;
+                }
+            }
+        }
+        if fired {
+            self.stages[si].fires += 1;
+        }
+        if stalled {
+            self.stages[si].stalled_cycles += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::executor::{Datapath, Executor, Tensor};
+    use crate::graph::network::{Meta, Op};
+
+    /// Build a small random network exercising every op type.
+    fn random_net(seed: u64) -> Network {
+        let mut s = seed;
+        let mut rnd = move |m: i32| {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((s >> 33) as i32).rem_euclid(m)
+        };
+        let thr = |cout: usize, rnd: &mut dyn FnMut(i32) -> i32| -> (Vec<Vec<i32>>, Vec<i32>, Vec<i32>) {
+            let mut t = Vec::new();
+            let mut signs = Vec::new();
+            for _ in 0..cout {
+                let base = rnd(40) - 20;
+                let step = 1 + rnd(5);
+                t.push((0..15).map(|i| base + i * step).collect());
+                signs.push(if rnd(4) == 0 { -1 } else { 1 });
+            }
+            (t, signs, vec![0; cout])
+        };
+        let conv = |name: &str,
+                    kind: ConvKind,
+                    cin: usize,
+                    cout: usize,
+                    k: usize,
+                    stride: usize,
+                    rnd: &mut dyn FnMut(i32) -> i32| {
+            let cols = if kind == ConvKind::Dw { k * k } else { k * k * cin };
+            let w: Vec<Vec<i32>> =
+                (0..cout).map(|_| (0..cols).map(|_| rnd(16) - 8).collect()).collect();
+            let (t, signs, consts) = thr(cout, rnd);
+            Op::Conv {
+                name: name.into(),
+                kind,
+                cin,
+                cout,
+                k,
+                stride,
+                pad: (k - 1) / 2,
+                w_bits: 4,
+                in_bits: 4,
+                out_bits: 4,
+                w_codes: w,
+                thresholds: t,
+                signs,
+                consts,
+                out_scale: 0.1,
+            }
+        };
+        let mut ops = vec![Op::Input { bits: 4, scale: 1.0 / 15.0 }];
+        ops.push(conv("c0", ConvKind::Std, 3, 6, 3, 1, &mut rnd));
+        ops.push(Op::ResPush {});
+        ops.push(conv("c1", ConvKind::Pw, 6, 8, 1, 1, &mut rnd));
+        ops.push(conv("c2", ConvKind::Dw, 8, 8, 3, 1, &mut rnd));
+        ops.push(conv("c3", ConvKind::Pw, 8, 6, 1, 1, &mut rnd));
+        ops.push(Op::ResAdd { bits: 4 });
+        ops.push(conv("c4", ConvKind::Std, 6, 5, 3, 2, &mut rnd));
+        ops.push(Op::PoolSum {});
+        ops.push(Op::Dense {
+            name: "fc".into(),
+            cin: 5,
+            cout: 3,
+            w_bits: 8,
+            w_codes: (0..5).map(|_| (0..3).map(|_| rnd(256) - 128).collect()).collect(),
+            scale: vec![0.01; 3],
+            bias: vec![0.5, -0.5, 0.0],
+        });
+        Network {
+            meta: Meta {
+                image_size: 8,
+                in_ch: 3,
+                num_classes: 3,
+                in_scale: 1.0 / 15.0,
+                w_bits: 4,
+                a_bits: 4,
+                acc_int: 0.0,
+                n_test: 0,
+                golden_logits: vec![],
+            },
+            ops,
+        }
+    }
+
+    fn random_images(n: usize, size: usize, ch: usize, seed: u64) -> Vec<Vec<i32>> {
+        let mut s = seed;
+        (0..n)
+            .map(|_| {
+                (0..size * size * ch)
+                    .map(|_| {
+                        s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+                        ((s >> 40) as i32).rem_euclid(16)
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pipeline_matches_reference_executor() {
+        let net = random_net(7);
+        let images = random_images(3, 8, 3, 11);
+        let ex = Executor::new(&net, Datapath::Arithmetic);
+        let folds = FoldConfig::fully_parallel(6);
+        let mut pipe = Pipeline::build(&net, &folds, 8);
+        let report = pipe.run(&images);
+        assert_eq!(report.logits.len(), 3);
+        for (img, got) in images.iter().zip(&report.logits) {
+            let t = Tensor::from_hwc(8, 8, 3, img.clone());
+            let want = ex.execute(&t);
+            assert_eq!(got, &want);
+        }
+    }
+
+    #[test]
+    fn folding_preserves_function_but_slows_pipeline() {
+        let net = random_net(21);
+        let images = random_images(2, 8, 3, 5);
+        let fast = Pipeline::build(&net, &FoldConfig::fully_parallel(6), 8).run(&images);
+        let slow = Pipeline::build(&net, &FoldConfig::uniform(6, 4), 8).run(&images);
+        assert_eq!(fast.logits, slow.logits, "folding must not change results");
+        assert!(slow.cycles > fast.cycles, "fold 4 must be slower");
+    }
+
+    #[test]
+    fn throughput_improves_with_pipelining() {
+        // steady-state: cycles for 8 images << 8 x cycles for 1 image
+        let net = random_net(3);
+        let one = Pipeline::build(&net, &FoldConfig::fully_parallel(6), 8)
+            .run(&random_images(1, 8, 3, 1));
+        let eight = Pipeline::build(&net, &FoldConfig::fully_parallel(6), 8)
+            .run(&random_images(8, 8, 3, 1));
+        assert!(
+            eight.cycles < one.cycles * 8,
+            "pipelining: {} !< {}",
+            eight.cycles,
+            one.cycles * 8
+        );
+    }
+
+    #[test]
+    fn fifo_stats_populated() {
+        let net = random_net(9);
+        let mut pipe = Pipeline::build(&net, &FoldConfig::fully_parallel(6), 4);
+        let report = pipe.run(&random_images(2, 8, 3, 2));
+        assert!(report.fifos.iter().any(|f| f.high_water > 0));
+        assert!(report.stages.iter().all(|s| s.fires > 0));
+    }
+
+    #[test]
+    fn steady_state_bound_sane() {
+        let net = random_net(13);
+        let report =
+            Pipeline::build(&net, &FoldConfig::fully_parallel(6), 8).run(&random_images(4, 8, 3, 3));
+        // steady state cycles per image >= dominant stage pixel count
+        assert!(report.steady_state_cycles_per_image >= 64);
+        assert!(report.fps(333.0) > 0.0);
+        assert!(report.steady_state_fps(333.0) >= report.fps(333.0) * 0.5);
+    }
+}

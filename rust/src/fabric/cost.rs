@@ -1,0 +1,130 @@
+//! LUT cost models: Eq. (3) of the paper plus literature-calibrated costs
+//! for general multipliers and adder logic.
+
+/// LUT6 count for one n-bit multiplication via LUTMUL embedding — Eq. (3):
+/// `#LUTs = (2n * 2^n) / (1 * 2^6)`.
+///
+/// For n >= 3 this is exact ROM sizing (a `2n`-bit-wide, `2^n`-deep table
+/// sliced into 6-input LUTs). Small n floors at 1 physical LUT per *pair*
+/// of output bits because a LUT6_2 cannot emit fewer than its two ports —
+/// the same floor the paper's Figure 2 plots for 1-2 bit weights.
+pub fn luts_per_mult(n_bits: u32) -> f64 {
+    let raw = (2.0 * n_bits as f64) * (1u64 << n_bits) as f64 / 64.0;
+    raw.max(1.0)
+}
+
+/// LUT6 count for a general (non-constant) n x n-bit multiplier on soft
+/// logic. The paper cites 13-28 LUT6 for 4-bit; the model below is the
+/// standard partial-product estimate `~1.1 n^2` that lands in that range
+/// and scales sensibly (Vivado synthesis of `a*b` multipliers).
+pub fn luts_per_general_mult(n_bits: u32) -> f64 {
+    (1.1 * (n_bits * n_bits) as f64).max(13.0_f64.min((n_bits * n_bits) as f64))
+}
+
+/// LUT6 count for a `width`-bit 2-input adder: one LUT per result bit
+/// (carry chains ride the dedicated CARRY8 logic, not LUTs, but each bit
+/// consumes the LUT in front of it).
+pub fn luts_per_adder(width: u32) -> f64 {
+    width as f64
+}
+
+/// Accumulator width needed to sum `n_terms` products of `prod_bits`-bit
+/// values without overflow.
+pub fn accumulator_width(prod_bits: u32, n_terms: u32) -> u32 {
+    prod_bits + (32 - (n_terms.max(1)).leading_zeros())
+}
+
+/// LUT cost of a balanced adder *tree* reducing `n_terms` values of
+/// `prod_bits` bits down to one accumulator. Widths grow one bit per
+/// level. An HLS `II=1` pipeline instantiates every adder (paper
+/// section 4.3: "HLS instantiates an adder for each addition operation").
+pub fn adder_tree_luts(prod_bits: u32, n_terms: u32) -> f64 {
+    if n_terms <= 1 {
+        return 0.0;
+    }
+    let mut total = 0.0;
+    let mut terms = n_terms;
+    let mut width = prod_bits;
+    while terms > 1 {
+        let adders = terms / 2;
+        width += 1;
+        total += adders as f64 * luts_per_adder(width);
+        terms = adders + (terms % 2);
+    }
+    total
+}
+
+/// Post-implementation (Vivado `opt_design`) shrink factor for adder
+/// trees: Vivado merges chains into ternary adders and packs carry logic.
+/// Calibrated against Figure 6: the second conv layer's 992 additions
+/// (32 output channels x 31 adds over int8+ products) synthesize to
+/// ~11.9k LUTs at HLS and implement at 2645 LUTs -> factor ~0.22.
+pub const VIVADO_ADDER_SHRINK: f64 = 0.22;
+
+/// Post-implementation overhead factor on ROM LUTs: Vivado re-packs the
+/// HLS-estimated `Eq.(3)` ROMs together with address decode and weight-
+/// select fabric. Calibrated against Figure 6 (1024 weights: 1829 LUT at
+/// HLS -> 3277 LUT as ROM after implementation: x1.6 on Eq. 3's 2048).
+pub const VIVADO_ROM_FACTOR: f64 = 1.6;
+
+/// HLS-reported multiplier LUTs relative to Eq. (3) (logic optimization
+/// trims constant product bits; Figure 6 reports 1829/2048 = 0.893).
+pub const HLS_MULT_FACTOR: f64 = 0.893;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq3_paper_values() {
+        // 4-bit: 8 * 16 / 64 = 2 LUTs per multiplication (paper headline)
+        assert_eq!(luts_per_mult(4), 2.0);
+        // 8-bit: 16 * 256 / 64 = 64
+        assert_eq!(luts_per_mult(8), 64.0);
+        // 3-bit: 6 * 8 / 64 = 0.75 -> floors at 1 physical LUT
+        assert_eq!(luts_per_mult(3), 1.0);
+        assert_eq!(luts_per_mult(1), 1.0);
+        assert_eq!(luts_per_mult(2), 1.0);
+    }
+
+    #[test]
+    fn general_mult_matches_cited_range() {
+        let g = luts_per_general_mult(4);
+        assert!(g >= 13.0 && g <= 28.0, "paper cites 13-28 LUTs, got {g}");
+        // LUTMUL advantage: 6.5-14x fewer (paper: "6-14x more LUT6")
+        let ratio = g / luts_per_mult(4);
+        assert!(ratio >= 6.0 && ratio <= 14.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn accumulator_widths() {
+        assert_eq!(accumulator_width(8, 1), 9);
+        // 288 int8 products (3x3x32 conv): 8 + ceil(log2(288)) ~ 17 bits
+        assert_eq!(accumulator_width(8, 288), 17);
+    }
+
+    #[test]
+    fn adder_tree_grows_with_terms() {
+        let a = adder_tree_luts(8, 16);
+        let b = adder_tree_luts(8, 32);
+        assert!(b > a && a > 0.0);
+    }
+
+    #[test]
+    fn adder_tree_single_term_free() {
+        assert_eq!(adder_tree_luts(8, 1), 0.0);
+        assert_eq!(adder_tree_luts(8, 0), 0.0);
+    }
+
+    #[test]
+    fn fig6_calibration_sanity() {
+        // conv2: 32x32 1x1 conv = 1024 mults, 32 channels x 31 adds.
+        let mult_hls = 1024.0 * luts_per_mult(4) * HLS_MULT_FACTOR;
+        assert!((mult_hls - 1829.0).abs() < 6.0, "HLS mult LUTs {mult_hls} vs 1829");
+        let rom_impl = 1024.0 * luts_per_mult(4) * VIVADO_ROM_FACTOR;
+        assert!((rom_impl - 3277.0).abs() < 60.0, "impl ROM {rom_impl} vs 3277");
+        let adders_impl = 32.0 * adder_tree_luts(8, 32) * VIVADO_ADDER_SHRINK;
+        let err = (adders_impl - 2645.0).abs() / 2645.0;
+        assert!(err < 0.2, "impl adders {adders_impl} vs 2645");
+    }
+}

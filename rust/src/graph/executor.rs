@@ -1,0 +1,480 @@
+//! Reference integer executor — the spec-level interpreter of a
+//! streamlined network (DESIGN.md S5).
+//!
+//! Two multiply datapaths:
+//!  * `Arithmetic`: plain integer multiply-accumulate (fast; used by the
+//!    serving coordinator).
+//!  * `LutFabric`: every 4-bit multiplication is performed by *reading
+//!    simulated LUT6_2 primitives* built from Figure 5 INIT vectors —
+//!    the hardware-true datapath. 8-bit layers (first/last) fall back to
+//!    arithmetic, mirroring the paper where those layers use DSP packing.
+//!
+//! Both paths must agree bit-for-bit with each other and with the JAX
+//! golden model (`python/compile/model.py::forward_int`).
+
+use crate::fabric::lutmul::ConstMultiplier;
+use crate::quant::{saturating_res_add, MultiThreshold};
+
+use super::network::{ConvKind, Network, Op};
+
+/// A [H, W, C] integer activation tensor (single image).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<i32>,
+}
+
+impl Tensor {
+    pub fn zeros(h: usize, w: usize, c: usize) -> Self {
+        Self { h, w, c, data: vec![0; h * w * c] }
+    }
+
+    pub fn from_hwc(h: usize, w: usize, c: usize, data: Vec<i32>) -> Self {
+        assert_eq!(data.len(), h * w * c);
+        Self { h, w, c, data }
+    }
+
+    #[inline]
+    pub fn get(&self, y: isize, x: isize, ch: usize) -> i32 {
+        // zero padding outside bounds (exact: code 0 == value 0)
+        if y < 0 || x < 0 || y >= self.h as isize || x >= self.w as isize {
+            0
+        } else {
+            self.data[(y as usize * self.w + x as usize) * self.c + ch]
+        }
+    }
+
+    #[inline]
+    pub fn set(&mut self, y: usize, x: usize, ch: usize, v: i32) {
+        self.data[(y * self.w + x) * self.c + ch] = v;
+    }
+}
+
+/// Multiply datapath selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Datapath {
+    Arithmetic,
+    /// Read products out of simulated LUT6_2 fabric (w_bits <= 4 layers).
+    LutFabric,
+}
+
+/// Pre-built LUT fabric for one conv layer: one `ConstMultiplier` per
+/// *pair* of weights (Figure 5 packs two weights per 4 LUT6).
+pub struct LayerFabric {
+    mults: Vec<ConstMultiplier>,
+    cols: usize,
+}
+
+impl LayerFabric {
+    /// Embed a layer's weight matrix `[rows][cols]` into LUT multipliers,
+    /// pairing weights along the column (input) dimension.
+    pub fn build(w_codes: &[Vec<i32>], w_bits: u32) -> Self {
+        assert!(w_bits <= 4, "Figure 5 packing requires <= 4-bit weights");
+        let cols = w_codes[0].len();
+        let pairs = cols.div_ceil(2);
+        let mut mults = Vec::with_capacity(w_codes.len() * pairs);
+        for row in w_codes {
+            for p in 0..pairs {
+                let w0 = row[2 * p];
+                let w1 = if 2 * p + 1 < cols { row[2 * p + 1] } else { 0 };
+                mults.push(ConstMultiplier::new(w0, w1, w_bits.max(1)));
+            }
+        }
+        Self { mults, cols }
+    }
+
+    /// Product `w[row][col] * act` via LUT readout.
+    #[inline]
+    pub fn mul(&self, row: usize, col: usize, act: i32) -> i32 {
+        let pairs = self.cols.div_ceil(2);
+        let m = &self.mults[row * pairs + col / 2];
+        m.eval(col % 2 == 1, act as u32)
+    }
+
+    /// Physical LUT6 count of this layer's multiplier array.
+    pub fn lut_count(&self) -> usize {
+        self.mults.iter().map(ConstMultiplier::lut_count).sum()
+    }
+}
+
+/// Per-conv precomputed state: flattened weights + threshold unit
+/// (built once in `Executor::new`; the hot loop must not allocate).
+struct PreppedConv {
+    mt: MultiThreshold,
+    /// row-major `[rows][cols]` flattening of `w_codes`.
+    wflat: Vec<i32>,
+    cols: usize,
+    /// row-major `[channels][levels]` flattening of the thresholds.
+    thr_flat: Vec<i32>,
+    levels: usize,
+}
+
+impl PreppedConv {
+    /// Threshold application over the flattened levels — equivalent to
+    /// `MultiThreshold::apply` (asserted by the module tests) but
+    /// indirection-free and branchless (the 15-wide compare+sum
+    /// vectorizes; an early-exit loop measured slower).
+    #[inline]
+    fn threshold(&self, acc: i32, ch: usize) -> i32 {
+        let ts = &self.thr_flat[ch * self.levels..(ch + 1) * self.levels];
+        match self.mt.signs[ch] {
+            s if s > 0 => ts.iter().map(|&t| (acc >= t) as i32).sum(),
+            s if s < 0 => ts.iter().map(|&t| (acc <= t) as i32).sum(),
+            _ => self.mt.consts[ch],
+        }
+    }
+}
+
+/// The reference executor.
+pub struct Executor<'n> {
+    net: &'n Network,
+    datapath: Datapath,
+    fabrics: Vec<Option<LayerFabric>>, // one per op index
+    prepped: Vec<Option<PreppedConv>>, // one per op index
+}
+
+impl<'n> Executor<'n> {
+    pub fn new(net: &'n Network, datapath: Datapath) -> Self {
+        let fabrics = net
+            .ops
+            .iter()
+            .map(|op| match (datapath, op) {
+                (Datapath::LutFabric, Op::Conv { w_codes, w_bits, in_bits, .. })
+                    if *w_bits <= 4 && *in_bits <= 4 =>
+                {
+                    Some(LayerFabric::build(w_codes, *w_bits))
+                }
+                _ => None,
+            })
+            .collect();
+        let prepped = net
+            .ops
+            .iter()
+            .map(|op| match op {
+                Op::Conv { w_codes, thresholds, signs, consts, .. } => Some(PreppedConv {
+                    mt: MultiThreshold {
+                        thresholds: thresholds.clone(),
+                        signs: signs.clone(),
+                        consts: consts.clone(),
+                    },
+                    wflat: w_codes.iter().flatten().copied().collect(),
+                    cols: w_codes[0].len(),
+                    thr_flat: thresholds.iter().flatten().copied().collect(),
+                    levels: thresholds[0].len(),
+                }),
+                _ => None,
+            })
+            .collect();
+        Self { net, datapath, fabrics, prepped }
+    }
+
+    /// Run one image (`[H, W, C]` uint8 codes) to logits.
+    pub fn execute(&self, image: &Tensor) -> Vec<f32> {
+        self.execute_traced(image, &mut |_, _| {})
+    }
+
+    /// Run one image, invoking `trace(op_index, tensor)` after every op
+    /// that produces an activation tensor (used to cross-check the
+    /// dataflow simulator stage by stage).
+    pub fn execute_traced(
+        &self,
+        image: &Tensor,
+        trace: &mut dyn FnMut(usize, &Tensor),
+    ) -> Vec<f32> {
+        let mut x = image.clone();
+        let mut res_stack: Vec<Tensor> = Vec::new();
+        let mut pooled: Vec<i32> = Vec::new();
+        let mut logits: Vec<f32> = Vec::new();
+        for (oi, op) in self.net.ops.iter().enumerate() {
+            match op {
+                Op::Input { .. } => {}
+                Op::Conv { kind, cout, k, stride, pad, .. } => {
+                    let prep = self.prepped[oi].as_ref().expect("conv prepped");
+                    x = self.conv(&x, *kind, *cout, *k, *stride, *pad, prep, self.fabrics[oi].as_ref());
+                    trace(oi, &x);
+                }
+                Op::ResPush {} => res_stack.push(x.clone()),
+                Op::ResAdd { bits } => {
+                    let saved = res_stack.pop().expect("res_add without res_push");
+                    assert_eq!((saved.h, saved.w, saved.c), (x.h, x.w, x.c));
+                    for (a, b) in x.data.iter_mut().zip(&saved.data) {
+                        *a = saturating_res_add(*a, *b, *bits);
+                    }
+                    trace(oi, &x);
+                }
+                Op::PoolSum {} => {
+                    pooled = vec![0; x.c];
+                    for y in 0..x.h {
+                        for xx in 0..x.w {
+                            for ch in 0..x.c {
+                                pooled[ch] += x.get(y as isize, xx as isize, ch);
+                            }
+                        }
+                    }
+                }
+                Op::Dense { cout, w_codes, scale, bias, .. } => {
+                    logits = (0..*cout)
+                        .map(|co| {
+                            let acc: i64 = pooled
+                                .iter()
+                                .enumerate()
+                                .map(|(ci, &a)| a as i64 * w_codes[ci][co] as i64)
+                                .sum();
+                            // fused multiply-add: XLA CPU emits an FMA for
+                            // `acc * scale + bias`, so a separate mul+add
+                            // here would differ by 1 ULP from the golden
+                            (acc as f32).mul_add(scale[co], bias[co])
+                        })
+                        .collect();
+                }
+            }
+        }
+        assert!(!logits.is_empty(), "network has no dense head");
+        logits
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn conv(
+        &self,
+        x: &Tensor,
+        kind: ConvKind,
+        cout: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        prep: &PreppedConv,
+        fabric: Option<&LayerFabric>,
+    ) -> Tensor {
+        let ho = (x.h + 2 * pad - k) / stride + 1;
+        let wo = (x.w + 2 * pad - k) / stride + 1;
+        let mut out = Tensor::zeros(ho, wo, cout);
+        let cols = prep.cols;
+
+        // fast path: pointwise conv on the arithmetic datapath — a matmul
+        // over contiguous HWC pixels (the bulk of MobileNetV2's MACs)
+        if kind == ConvKind::Pw && k == 1 && stride == 1 && fabric.is_none() {
+            let cin = x.c;
+            for px in 0..x.h * x.w {
+                let xs = &x.data[px * cin..(px + 1) * cin];
+                let o = &mut out.data[px * cout..(px + 1) * cout];
+                for (co, slot) in o.iter_mut().enumerate() {
+                    let row = &prep.wflat[co * cols..(co + 1) * cols];
+                    let mut acc: i32 = 0;
+                    for (w, a) in row.iter().zip(xs) {
+                        acc += w * a;
+                    }
+                    *slot = prep.threshold(acc, co);
+                }
+            }
+            return out;
+        }
+
+        for oy in 0..ho {
+            for ox in 0..wo {
+                for co in 0..cout {
+                    let mut acc: i32 = 0;
+                    match kind {
+                        ConvKind::Dw => {
+                            // one filter per channel: w[co][tap]
+                            for i in 0..k {
+                                for j in 0..k {
+                                    let a = x.get(
+                                        (oy * stride + i) as isize - pad as isize,
+                                        (ox * stride + j) as isize - pad as isize,
+                                        co,
+                                    );
+                                    let tap = i * k + j;
+                                    acc += self.mul(fabric, prep, co, tap, a);
+                                }
+                            }
+                        }
+                        _ => {
+                            let cin = x.c;
+                            for i in 0..k {
+                                for j in 0..k {
+                                    for ci in 0..cin {
+                                        let a = x.get(
+                                            (oy * stride + i) as isize - pad as isize,
+                                            (ox * stride + j) as isize - pad as isize,
+                                            ci,
+                                        );
+                                        let col = (i * k + j) * cin + ci;
+                                        acc += self.mul(fabric, prep, co, col, a);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    out.set(oy, ox, co, prep.threshold(acc, co));
+                }
+            }
+        }
+        out
+    }
+
+    #[inline]
+    fn mul(&self, fabric: Option<&LayerFabric>, prep: &PreppedConv, row: usize, col: usize, a: i32) -> i32 {
+        match (self.datapath, fabric) {
+            (Datapath::LutFabric, Some(f)) => f.mul(row, col, a),
+            _ => prep.wflat[row * prep.cols + col] * a,
+        }
+    }
+}
+
+/// Decode the raw test-set bytes exported by `aot.py`.
+pub fn decode_test_images(bytes: &[u8], image_size: usize, in_ch: usize) -> Vec<Tensor> {
+    let px = image_size * image_size * in_ch;
+    bytes
+        .chunks_exact(px)
+        .map(|chunk| {
+            Tensor::from_hwc(image_size, image_size, in_ch, chunk.iter().map(|&b| b as i32).collect())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::network::{Meta, Op};
+
+    fn net_with_conv(kind: ConvKind, cin: usize, cout: usize, k: usize, stride: usize) -> Network {
+        let cols = if kind == ConvKind::Dw { k * k } else { k * k * cin };
+        // identity-ish thresholds: code = clamp(acc, 0, 15) via t=1..15
+        let thr: Vec<i32> = (1..=15).collect();
+        Network {
+            meta: Meta {
+                image_size: 4,
+                in_ch: cin,
+                num_classes: cout,
+                in_scale: 1.0,
+                w_bits: 4,
+                a_bits: 4,
+                acc_int: 0.0,
+                n_test: 0,
+                golden_logits: vec![],
+            },
+            ops: vec![
+                Op::Input { bits: 4, scale: 1.0 },
+                Op::Conv {
+                    name: "c".into(),
+                    kind,
+                    cin,
+                    cout,
+                    k,
+                    stride,
+                    pad: (k - 1) / 2,
+                    w_bits: 4,
+                    in_bits: 4,
+                    out_bits: 4,
+                    w_codes: vec![vec![1; cols]; cout],
+                    thresholds: vec![thr.clone(); cout],
+                    signs: vec![1; cout],
+                    consts: vec![0; cout],
+                    out_scale: 1.0,
+                },
+                Op::PoolSum {},
+                Op::Dense {
+                    name: "fc".into(),
+                    cin: cout,
+                    cout: 2,
+                    w_bits: 8,
+                    w_codes: vec![vec![1, -1]; cout],
+                    scale: vec![1.0, 1.0],
+                    bias: vec![0.0, 0.5],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn pointwise_identity_weights() {
+        let net = net_with_conv(ConvKind::Pw, 2, 2, 1, 1);
+        let ex = Executor::new(&net, Datapath::Arithmetic);
+        let mut img = Tensor::zeros(4, 4, 2);
+        img.set(0, 0, 0, 3);
+        img.set(0, 0, 1, 4);
+        let logits = ex.execute(&img);
+        // conv: acc = 3+4 = 7 per out channel -> code 7 (threshold count)
+        // pool: 7 per channel (only one nonzero pixel), dense: 14 vs -14+0.5
+        assert_eq!(logits, vec![14.0, -13.5]);
+    }
+
+    #[test]
+    fn lut_fabric_matches_arithmetic() {
+        let mut net = net_with_conv(ConvKind::Std, 3, 4, 3, 1);
+        // randomize weights deterministically
+        if let Op::Conv { w_codes, .. } = &mut net.ops[1] {
+            let mut seed = 12345u64;
+            for row in w_codes.iter_mut() {
+                for v in row.iter_mut() {
+                    seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+                    *v = ((seed >> 33) % 16) as i32 - 8;
+                }
+            }
+        }
+        let a = Executor::new(&net, Datapath::Arithmetic);
+        let b = Executor::new(&net, Datapath::LutFabric);
+        let mut img = Tensor::zeros(4, 4, 3);
+        for (i, v) in img.data.iter_mut().enumerate() {
+            *v = (i % 16) as i32;
+        }
+        assert_eq!(a.execute(&img), b.execute(&img));
+    }
+
+    #[test]
+    fn depthwise_stride2() {
+        let net = net_with_conv(ConvKind::Dw, 2, 2, 3, 2);
+        let ex = Executor::new(&net, Datapath::Arithmetic);
+        let mut img = Tensor::zeros(4, 4, 2);
+        for v in img.data.iter_mut() {
+            *v = 1;
+        }
+        let logits = ex.execute(&img);
+        // output 2x2; each output = count of in-bounds taps (weights 1),
+        // thresholded to itself (<=15), pooled
+        assert!(logits[0] > 0.0);
+    }
+
+    #[test]
+    fn res_add_path() {
+        // conv -> push -> conv -> add, all identity
+        let mut net = net_with_conv(ConvKind::Pw, 1, 1, 1, 1);
+        let conv = net.ops[1].clone();
+        net.ops.insert(2, Op::ResAdd { bits: 4 });
+        net.ops.insert(1, Op::ResPush {});
+        net.ops.insert(2, conv);
+        // ops: input, res_push, conv, conv, res_add, pool, dense — fix order:
+        // we want input, res_push, conv, res_add
+        let ex = Executor::new(&net, Datapath::Arithmetic);
+        let mut img = Tensor::zeros(4, 4, 1);
+        img.set(0, 0, 0, 5);
+        let logits = ex.execute(&img);
+        // first conv: 5 -> 5; second conv 5 -> 5; add: 5+5=10; pool=10
+        assert_eq!(logits[0], 10.0);
+    }
+
+    #[test]
+    fn saturating_res_add_clamps_at_15() {
+        let mut net = net_with_conv(ConvKind::Pw, 1, 1, 1, 1);
+        let conv = net.ops[1].clone();
+        net.ops.insert(1, Op::ResPush {});
+        net.ops.insert(2, conv);
+        net.ops.insert(4, Op::ResAdd { bits: 4 });
+        let ex = Executor::new(&net, Datapath::Arithmetic);
+        let mut img = Tensor::zeros(4, 4, 1);
+        img.set(0, 0, 0, 12);
+        let logits = ex.execute(&img);
+        // 12 through two convs stays 12; 12+12=24 -> clamps to 15
+        assert_eq!(logits[0], 15.0);
+    }
+
+    #[test]
+    fn decode_test_images_shapes() {
+        let bytes: Vec<u8> = (0..2 * 4 * 4 * 3).map(|i| (i % 256) as u8).collect();
+        let imgs = decode_test_images(&bytes, 4, 3);
+        assert_eq!(imgs.len(), 2);
+        assert_eq!(imgs[0].get(0, 0, 1), 1);
+    }
+}

@@ -1,0 +1,11 @@
+//! Model graph substrate (DESIGN.md S5): the streamlined integer network
+//! IR (`network`), shape-level architecture specs (`arch`) and the
+//! reference integer executor (`executor`).
+
+pub mod arch;
+pub mod executor;
+pub mod network;
+
+pub use arch::{mobilenet_v2_full, mobilenet_v2_small, ArchSpec, LayerSpec};
+pub use executor::{decode_test_images, Datapath, Executor, Tensor};
+pub use network::{ConvKind, Network, Op};

@@ -1,0 +1,349 @@
+//! Deployed integer network description — deserialized from
+//! `artifacts/network.json` (the output of the python streamlining step,
+//! DESIGN.md S16). This is the graph the accelerator generator compiles
+//! and the dataflow simulator executes.
+
+use std::path::Path;
+
+use crate::quant::MultiThreshold;
+
+/// Convolution flavor (paper section 3.4: the convolution generator
+/// supports pointwise, depthwise and standard convolutions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConvKind {
+    /// Standard dense convolution.
+    Std,
+    /// Depthwise (one filter per channel).
+    Dw,
+    /// Pointwise 1x1.
+    Pw,
+}
+
+/// One operation of the streamlined integer network.
+#[derive(Debug, Clone)]
+pub enum Op {
+    Input {
+        bits: u32,
+        scale: f64,
+    },
+    Conv {
+        name: String,
+        kind: ConvKind,
+        cin: usize,
+        cout: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        w_bits: u32,
+        in_bits: u32,
+        out_bits: u32,
+        /// `[COUT][K*K*CIN]` for std/pw ((tap, channel) minor order),
+        /// `[C][K*K]` for depthwise.
+        w_codes: Vec<Vec<i32>>,
+        thresholds: Vec<Vec<i32>>,
+        signs: Vec<i32>,
+        consts: Vec<i32>,
+        out_scale: f64,
+    },
+    ResPush {},
+    ResAdd {
+        bits: u32,
+    },
+    PoolSum {},
+    Dense {
+        name: String,
+        cin: usize,
+        cout: usize,
+        w_bits: u32,
+        /// `[CIN][COUT]`.
+        w_codes: Vec<Vec<i32>>,
+        scale: Vec<f32>,
+        bias: Vec<f32>,
+    },
+}
+
+/// Network metadata exported alongside the ops.
+#[derive(Debug, Clone)]
+pub struct Meta {
+    pub image_size: usize,
+    pub in_ch: usize,
+    pub num_classes: usize,
+    pub in_scale: f64,
+    pub w_bits: u32,
+    pub a_bits: u32,
+    pub acc_int: f64,
+    pub n_test: usize,
+    /// Golden logits for the first test images (bit-exactness target).
+    pub golden_logits: Vec<Vec<f32>>,
+}
+
+/// The full deployed network.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub meta: Meta,
+    pub ops: Vec<Op>,
+}
+
+impl Network {
+    /// Load from `artifacts/network.json`.
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.as_ref().display()))?;
+        let net = Self::from_json_str(&text)?;
+        net.validate().map_err(|e| anyhow::anyhow!("invalid network: {e}"))?;
+        Ok(net)
+    }
+
+    /// Decode the `aot.py` export format (see python/compile/aot.py).
+    pub fn from_json_str(text: &str) -> anyhow::Result<Self> {
+        use crate::util::Json;
+        let root = Json::parse(text)?;
+        let m = root.field("meta")?;
+        let getf = |k: &str, d: f64| m.get(k).and_then(|v| v.as_f64().ok()).unwrap_or(d);
+        let meta = Meta {
+            image_size: m.field("image_size")?.as_usize()?,
+            in_ch: m.field("in_ch")?.as_usize()?,
+            num_classes: m.field("num_classes")?.as_usize()?,
+            in_scale: m.field("in_scale")?.as_f64()?,
+            w_bits: getf("w_bits", 0.0) as u32,
+            a_bits: getf("a_bits", 0.0) as u32,
+            acc_int: getf("acc_int", 0.0),
+            n_test: getf("n_test", 0.0) as usize,
+            golden_logits: m
+                .get("golden_logits")
+                .map(|g| -> anyhow::Result<Vec<Vec<f32>>> {
+                    g.as_arr()?.iter().map(Json::as_f32_vec).collect()
+                })
+                .transpose()?
+                .unwrap_or_default(),
+        };
+        let mut ops = Vec::new();
+        for o in root.field("ops")?.as_arr()? {
+            let tag = o.field("op")?.as_str()?;
+            ops.push(match tag {
+                "input" => Op::Input {
+                    bits: o.field("bits")?.as_i64()? as u32,
+                    scale: o.field("scale")?.as_f64()?,
+                },
+                "conv" => Op::Conv {
+                    name: o.field("name")?.as_str()?.to_string(),
+                    kind: match o.field("kind")?.as_str()? {
+                        "std" => ConvKind::Std,
+                        "dw" => ConvKind::Dw,
+                        "pw" => ConvKind::Pw,
+                        other => anyhow::bail!("unknown conv kind {other}"),
+                    },
+                    cin: o.field("cin")?.as_usize()?,
+                    cout: o.field("cout")?.as_usize()?,
+                    k: o.field("k")?.as_usize()?,
+                    stride: o.field("stride")?.as_usize()?,
+                    pad: o.field("pad")?.as_usize()?,
+                    w_bits: o.field("w_bits")?.as_i64()? as u32,
+                    in_bits: o.field("in_bits")?.as_i64()? as u32,
+                    out_bits: o.field("out_bits")?.as_i64()? as u32,
+                    w_codes: o.field("w_codes")?.as_i32_mat()?,
+                    thresholds: o.field("thresholds")?.as_i32_mat()?,
+                    signs: o.field("signs")?.as_i32_vec()?,
+                    consts: o.field("consts")?.as_i32_vec()?,
+                    out_scale: o.field("out_scale")?.as_f64()?,
+                },
+                "res_push" => Op::ResPush {},
+                "res_add" => Op::ResAdd { bits: o.field("bits")?.as_i64()? as u32 },
+                "pool_sum" => Op::PoolSum {},
+                "dense" => Op::Dense {
+                    name: o.field("name")?.as_str()?.to_string(),
+                    cin: o.field("cin")?.as_usize()?,
+                    cout: o.field("cout")?.as_usize()?,
+                    w_bits: o.field("w_bits")?.as_i64()? as u32,
+                    w_codes: o.field("w_codes")?.as_i32_mat()?,
+                    scale: o.field("scale")?.as_f32_vec()?,
+                    bias: o.field("bias")?.as_f32_vec()?,
+                },
+                other => anyhow::bail!("unknown op tag {other}"),
+            });
+        }
+        Ok(Network { meta, ops })
+    }
+
+    /// All convolution layers in order.
+    pub fn convs(&self) -> impl Iterator<Item = &Op> {
+        self.ops.iter().filter(|op| matches!(op, Op::Conv { .. }))
+    }
+
+    /// Structural validation: shapes, code ranges, threshold consistency.
+    pub fn validate(&self) -> Result<(), String> {
+        for op in &self.ops {
+            if let Op::Conv {
+                name,
+                kind,
+                cin,
+                cout,
+                k,
+                w_bits,
+                w_codes,
+                thresholds,
+                signs,
+                consts,
+                ..
+            } = op
+            {
+                let rows = if *kind == ConvKind::Dw { *cout } else { *cout };
+                let cols = if *kind == ConvKind::Dw { k * k } else { k * k * cin };
+                if w_codes.len() != rows {
+                    return Err(format!("{name}: {} weight rows, want {rows}", w_codes.len()));
+                }
+                for (r, row) in w_codes.iter().enumerate() {
+                    if row.len() != cols {
+                        return Err(format!("{name}: row {r} has {} cols, want {cols}", row.len()));
+                    }
+                }
+                let (lo, hi) = crate::quant::weight_qrange(*w_bits);
+                let bad = w_codes.iter().flatten().any(|&w| w < lo || w > hi);
+                if bad {
+                    return Err(format!("{name}: weight code out of {w_bits}-bit range"));
+                }
+                let mt = MultiThreshold {
+                    thresholds: thresholds.clone(),
+                    signs: signs.clone(),
+                    consts: consts.clone(),
+                };
+                if mt.channels() != *cout {
+                    return Err(format!("{name}: {} threshold channels, want {cout}", mt.channels()));
+                }
+                mt.validate().map_err(|e| format!("{name}: {e}"))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// The multi-threshold unit of a conv op.
+    pub fn threshold_unit(op: &Op) -> Option<MultiThreshold> {
+        if let Op::Conv { thresholds, signs, consts, .. } = op {
+            Some(MultiThreshold {
+                thresholds: thresholds.clone(),
+                signs: signs.clone(),
+                consts: consts.clone(),
+            })
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_conv() -> Op {
+        Op::Conv {
+            name: "c".into(),
+            kind: ConvKind::Pw,
+            cin: 2,
+            cout: 2,
+            k: 1,
+            stride: 1,
+            pad: 0,
+            w_bits: 4,
+            in_bits: 4,
+            out_bits: 4,
+            w_codes: vec![vec![1, -3], vec![7, -8]],
+            thresholds: vec![vec![0; 15], vec![0; 15]],
+            signs: vec![1, 1],
+            consts: vec![0, 0],
+            out_scale: 0.1,
+        }
+    }
+
+    fn tiny_net() -> Network {
+        Network {
+            meta: Meta {
+                image_size: 2,
+                in_ch: 2,
+                num_classes: 2,
+                in_scale: 1.0 / 255.0,
+                w_bits: 4,
+                a_bits: 4,
+                acc_int: 0.0,
+                n_test: 0,
+                golden_logits: vec![],
+            },
+            ops: vec![
+                Op::Input { bits: 4, scale: 1.0 / 15.0 },
+                tiny_conv(),
+                Op::PoolSum {},
+                Op::Dense {
+                    name: "fc".into(),
+                    cin: 2,
+                    cout: 2,
+                    w_bits: 8,
+                    w_codes: vec![vec![1, 2], vec![3, 4]],
+                    scale: vec![0.1, 0.1],
+                    bias: vec![0.0, 0.0],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_decode_export_format() {
+        // exactly the structure python/compile/aot.py writes
+        let text = r#"{
+          "meta": {"image_size": 2, "in_ch": 2, "num_classes": 2,
+                   "in_scale": 0.00392, "w_bits": 4, "a_bits": 4},
+          "ops": [
+            {"op": "input", "bits": 4, "scale": 0.0667},
+            {"op": "conv", "name": "c", "kind": "pw", "cin": 2, "cout": 1,
+             "k": 1, "stride": 1, "pad": 0, "w_bits": 4, "in_bits": 4,
+             "out_bits": 4, "w_codes": [[1, -3]],
+             "thresholds": [[0,1,2,3,4,5,6,7,8,9,10,11,12,13,14]],
+             "signs": [1], "consts": [0], "out_scale": 0.1},
+            {"op": "res_push"},
+            {"op": "res_add", "bits": 4},
+            {"op": "pool_sum"},
+            {"op": "dense", "name": "fc", "cin": 1, "cout": 2, "w_bits": 8,
+             "w_codes": [[1, 2]], "scale": [0.1, 0.2], "bias": [0.0, -1.5]}
+          ]
+        }"#;
+        let net = Network::from_json_str(text).unwrap();
+        assert_eq!(net.ops.len(), 6);
+        assert!(net.validate().is_ok());
+        assert!(matches!(net.ops[2], Op::ResPush {}));
+        if let Op::Conv { w_codes, kind, .. } = &net.ops[1] {
+            assert_eq!(w_codes[0], vec![1, -3]);
+            assert_eq!(*kind, ConvKind::Pw);
+        } else {
+            panic!("expected conv");
+        }
+        if let Op::Dense { bias, .. } = &net.ops[5] {
+            assert_eq!(bias[1], -1.5);
+        } else {
+            panic!("expected dense");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_weights() {
+        let mut net = tiny_net();
+        if let Op::Conv { w_codes, .. } = &mut net.ops[1] {
+            w_codes[0][0] = 9; // outside int4
+        }
+        assert!(net.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_ragged_weights() {
+        let mut net = tiny_net();
+        if let Op::Conv { w_codes, .. } = &mut net.ops[1] {
+            w_codes[0].push(0);
+        }
+        assert!(net.validate().is_err());
+    }
+
+    #[test]
+    fn decode_rejects_unknown_tags() {
+        let text = r#"{"meta": {"image_size": 2, "in_ch": 1, "num_classes": 2,
+                       "in_scale": 1.0},
+                      "ops": [{"op": "transmogrify"}]}"#;
+        assert!(Network::from_json_str(text).is_err());
+    }
+}

@@ -1,0 +1,36 @@
+//! # LUTMUL — LUT-based efficient multiplication for NN inference
+//!
+//! Reproduction of *LUTMUL: Exceed Conventional FPGA Roofline Limit by
+//! LUT-based Efficient MULtiplication for Neural Network Inference*
+//! (Xie et al., ASPDAC 2025) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1 (build-time Python)** — the LUT-lookup multiplication kernel in
+//!   Pallas (`python/compile/kernels/lutmul.py`), bit-exact against a
+//!   pure-jnp oracle.
+//! * **L2 (build-time Python)** — quantization-aware-trained MobileNetV2
+//!   in JAX, streamlined to an integer-only network and AOT-lowered to
+//!   HLO text artifacts.
+//! * **L3 (this crate)** — the accelerator generator and runtime:
+//!   bit-exact FPGA fabric simulation ([`fabric`]), the streamlined graph
+//!   IR and reference executor ([`graph`]), the cycle-level reconfigurable
+//!   dataflow architecture ([`dataflow`]), the synthesis analog with
+//!   folding optimizer ([`synth`]), roofline analysis ([`roofline`]),
+//!   baseline accelerator models ([`baselines`]), the PJRT runtime that
+//!   executes the AOT artifacts ([`runtime`]), and the async serving
+//!   coordinator ([`coordinator`]).
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index
+//! (Table 1/2, Figures 1/2/5/6), and `EXPERIMENTS.md` for measured
+//! results vs the paper.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod util;
+pub mod dataflow;
+pub mod fabric;
+pub mod graph;
+pub mod quant;
+pub mod reports;
+pub mod roofline;
+pub mod runtime;
+pub mod synth;

@@ -1,0 +1,300 @@
+//! `lutmul` CLI — leader entrypoint for the LUTMUL reproduction.
+//!
+//! Subcommands map onto the experiment index of DESIGN.md:
+//!   * `verify`   — run the test set through the dataflow simulator and
+//!     check bit-exactness against the PJRT golden model + accuracy.
+//!   * `serve`    — start the serving coordinator and push a synthetic
+//!     request load through it, reporting latency/throughput.
+//!   * `synth`    — synthesize an architecture on a device and print the
+//!     design report (resources, FPS, GOPS, power).
+//!   * `report`   — print Table 1 / Figure 1 / Figure 2 / Figure 6 /
+//!     Table 2 reproductions.
+//!
+//! (Hand-rolled arg parsing: the offline vendored crate set has no clap.)
+
+use anyhow::Result;
+use std::sync::Arc;
+
+use lutmul::coordinator::{Backend, Coordinator, ServeConfig};
+use lutmul::dataflow::{FoldConfig, Pipeline};
+use lutmul::fabric::device::U280;
+use lutmul::graph::network::Network;
+use lutmul::graph::{mobilenet_v2_full, mobilenet_v2_small};
+use lutmul::runtime::{Artifacts, Runtime};
+use lutmul::synth::fold::{optimize_folding, Budget};
+use lutmul::synth::synthesize;
+
+const USAGE: &str = "\
+lutmul — LUTMUL accelerator generator & runtime
+
+USAGE:
+  lutmul [--artifacts DIR] <command> [options]
+
+COMMANDS:
+  verify [--n N] [--lut-fabric]      simulate the test set; verify vs PJRT
+  serve  [--requests N] [--workers N] [--max-batch N]
+  synth  [--arch full|small] [--fraction D]
+  util   [--arch full|small]          Vivado-style utilization report
+  netlist [--layer NAME]              structural Verilog for a trained layer
+  multi  [--devices N]                multi-FPGA partitioning plan
+  report <table1|fig1|fig2|fig6|table2>
+";
+
+/// Minimal flag parser: `--key value` and bare flags.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let takes_value = i + 1 < argv.len() && !argv[i + 1].starts_with("--");
+                if takes_value {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Self { positional, flags }
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let artifacts = Artifacts::new(args.get::<String>("artifacts", "artifacts".into()));
+    match args.positional.first().map(String::as_str) {
+        Some("verify") => verify(&artifacts, args.get("n", 64usize), args.has("lut-fabric")),
+        Some("serve") => serve(
+            &artifacts,
+            args.get("requests", 512usize),
+            args.get("workers", 2usize),
+            args.get("max-batch", 8usize),
+        ),
+        Some("synth") => synth(&args.get::<String>("arch", "full".into()), args.get("fraction", 1u64)),
+        Some("util") => util(&args.get::<String>("arch", "full".into())),
+        Some("netlist") => netlist(&artifacts, &args.get::<String>("layer", "ir0_exp".into())),
+        Some("multi") => multi(args.get("devices", 2usize)),
+        Some("report") => {
+            let what = args.positional.get(1).cloned().unwrap_or_default();
+            report(&artifacts, &what)
+        }
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn load_network(artifacts: &Artifacts) -> Result<Network> {
+    Network::load(artifacts.network_json())
+}
+
+fn verify(artifacts: &Artifacts, n: usize, lut_fabric: bool) -> Result<()> {
+    let net = load_network(artifacts)?;
+    let (images, labels) =
+        artifacts.load_test_set(net.meta.image_size, net.meta.image_size, net.meta.in_ch)?;
+    let n = if n == 0 { images.len() } else { n.min(images.len()) };
+    println!("loaded network ({} ops) + {} test images", net.ops.len(), n);
+
+    // dataflow simulator
+    let folds = FoldConfig::fully_parallel(net.convs().count());
+    let mut pipe = Pipeline::build(&net, &folds, 16);
+    let t0 = std::time::Instant::now();
+    let report = pipe.run(&images[..n]);
+    let sim_elapsed = t0.elapsed();
+    let correct = report
+        .logits
+        .iter()
+        .zip(&labels[..n])
+        .filter(|(l, &y)| lutmul::coordinator::argmax(l) == y as usize)
+        .count();
+    println!(
+        "simulator: {n} images in {:.2?} | {} cycles | steady-state {} cycles/img | {:.0} FPS @333MHz | acc {:.2}%",
+        sim_elapsed,
+        report.cycles,
+        report.steady_state_cycles_per_image,
+        report.steady_state_fps(333.0),
+        100.0 * correct as f64 / n as f64,
+    );
+
+    // PJRT golden model cross-check (batch 1 artifact)
+    let rt = Runtime::load(
+        artifacts.model_hlo(1),
+        1,
+        net.meta.image_size,
+        net.meta.image_size,
+        net.meta.in_ch,
+        net.meta.num_classes,
+    )?;
+    let mut mismatches = 0;
+    let check = n.min(16);
+    for i in 0..check {
+        let golden = rt.run(&images[i])?;
+        if golden[0] != report.logits[i] {
+            mismatches += 1;
+        }
+    }
+    println!("PJRT golden cross-check: {}/{check} bit-exact", check - mismatches);
+    anyhow::ensure!(mismatches == 0, "simulator diverged from the golden model");
+
+    if lut_fabric {
+        use lutmul::graph::executor::{Datapath, Executor, Tensor};
+        let ex = Executor::new(&net, Datapath::LutFabric);
+        let m = n.min(8);
+        let ok = (0..m).all(|i| {
+            let t = Tensor::from_hwc(
+                net.meta.image_size,
+                net.meta.image_size,
+                net.meta.in_ch,
+                images[i].clone(),
+            );
+            ex.execute(&t) == report.logits[i]
+        });
+        println!("LUT6-fabric datapath: {}/{m} bit-exact", if ok { m } else { 0 });
+        anyhow::ensure!(ok, "LUT fabric datapath diverged");
+    }
+    Ok(())
+}
+
+fn serve(artifacts: &Artifacts, requests: usize, workers: usize, max_batch: usize) -> Result<()> {
+    let net = Arc::new(load_network(artifacts)?);
+    let (images, _) =
+        artifacts.load_test_set(net.meta.image_size, net.meta.image_size, net.meta.in_ch)?;
+    let coord = Coordinator::start(
+        net,
+        ServeConfig { backend: Backend::Reference, workers, max_batch, ..Default::default() },
+    );
+    let t0 = std::time::Instant::now();
+    let mut tickets = Vec::with_capacity(requests);
+    let mut rejected = 0usize;
+    for i in 0..requests {
+        let img = images[i % images.len()].clone();
+        match coord.submit(img) {
+            Ok(t) => tickets.push(t),
+            Err(_) => rejected += 1,
+        }
+    }
+    let mut ok = 0usize;
+    for t in tickets {
+        if t.wait().is_ok() {
+            ok += 1;
+        }
+    }
+    println!(
+        "served {ok}/{requests} requests ({rejected} rejected) in {:.2?} | {}",
+        t0.elapsed(),
+        coord.metrics()
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+fn synth(arch: &str, fraction: u64) -> Result<()> {
+    let spec = match arch {
+        "small" => mobilenet_v2_small(),
+        _ => mobilenet_v2_full(),
+    };
+    let budget =
+        if fraction <= 1 { Budget::whole(&U280) } else { Budget::fraction(&U280, fraction) };
+    let (folds, cycles) = optimize_folding(&spec, &budget);
+    let d = synthesize(&spec, &U280, &folds);
+    println!("design: {} on {} (budget 1/{fraction})", d.arch_name, d.device);
+    println!(
+        "  LUT {} | FF {} | BRAM36 {} | DSP {} | {:.0} MHz",
+        d.luts, d.ffs, d.bram36, d.dsps, d.freq_mhz
+    );
+    println!(
+        "  {} cycles/img (target {cycles}) | {:.0} FPS | {:.1} GOPS | {:.1} W | {:.2} GOPS/W",
+        d.cycles_per_image,
+        d.fps(),
+        d.gops(),
+        d.power_w,
+        d.gops_per_watt()
+    );
+    println!("  per-stage (name mode fold II luts slr):");
+    for s in &d.stages {
+        println!(
+            "    {:12} {:?} fold={} II={} luts={:.0} slr={}",
+            s.name, s.mode, s.fold, s.ii, s.luts, s.slr
+        );
+    }
+    Ok(())
+}
+
+fn util(arch: &str) -> Result<()> {
+    let spec = match arch {
+        "small" => mobilenet_v2_small(),
+        _ => mobilenet_v2_full(),
+    };
+    let (folds, _) = optimize_folding(&spec, &Budget::whole(&U280));
+    let d = synthesize(&spec, &U280, &folds);
+    print!("{}", lutmul::synth::utilization_report(&d, &U280));
+    Ok(())
+}
+
+fn netlist(artifacts: &Artifacts, layer: &str) -> Result<()> {
+    let net = load_network(artifacts)?;
+    for op in net.ops.iter() {
+        if let lutmul::graph::network::Op::Conv { name, w_codes, w_bits, .. } = op {
+            if name == layer {
+                anyhow::ensure!(*w_bits <= 4, "netlist emission needs <= 4-bit weights");
+                print!("{}", lutmul::fabric::netlist::emit_layer(name, w_codes, *w_bits));
+                return Ok(());
+            }
+        }
+    }
+    anyhow::bail!("layer '{layer}' not found (try ir0_exp, ir1_dw, head, ...)")
+}
+
+fn multi(devices: usize) -> Result<()> {
+    use lutmul::dataflow::multi::{partition, LinkModel};
+    let arch = mobilenet_v2_full();
+    let (folds, _) = optimize_folding(&arch, &Budget::whole(&U280));
+    let plan = partition(&arch, &U280, devices, &folds, LinkModel::gbe100());
+    println!("multi-FPGA plan: {} x {} over 100 GbE", devices, U280.name);
+    for (i, p) in plan.partitions.iter().enumerate() {
+        println!(
+            "  dev{i}: layers {:>2}..{:>2} | {:>9.0} LUT | bound {:>6} cycles | egress {:>7} B/img",
+            p.first_layer, p.last_layer, p.luts, p.bound_cycles, p.egress_bytes
+        );
+    }
+    println!(
+        "  -> {:.0} FPS steady-state, +{:.1} us pipeline latency",
+        plan.fps(),
+        plan.added_latency_s() * 1e6
+    );
+    Ok(())
+}
+
+fn report(artifacts: &Artifacts, what: &str) -> Result<()> {
+    match what {
+        "table1" => lutmul::reports::table1(),
+        "fig1" => lutmul::reports::fig1(),
+        "fig2" => lutmul::reports::fig2(&artifacts.fig2_json()),
+        "fig6" => lutmul::reports::fig6(),
+        "table2" => lutmul::reports::table2(),
+        other => anyhow::bail!("unknown report '{other}'; try table1|fig1|fig2|fig6|table2"),
+    }
+    Ok(())
+}

@@ -1,0 +1,179 @@
+//! Quantization library (DESIGN.md S4): Eq. (4)/(5) affine quantizers and
+//! the FINN-style multi-threshold activation unit produced by streamlining.
+//!
+//! Mirrors `python/compile/quantize.py`; the integer semantics here must
+//! match the JAX golden model bit-for-bit.
+
+
+/// Signed two's-complement quantization range, e.g. 4 bits -> [-8, 7].
+pub fn weight_qrange(bits: u32) -> (i32, i32) {
+    (-(1 << (bits - 1)), (1 << (bits - 1)) - 1)
+}
+
+/// Unsigned activation range, e.g. 4 bits -> [0, 15].
+pub fn act_qrange(bits: u32) -> (i32, i32) {
+    (0, (1 << bits) - 1)
+}
+
+/// Eq. (4): `quantize(x) = clamp(round(x/s + z), ymin, ymax)`.
+pub fn quantize(x: f64, scale: f64, zero_point: i32, ymin: i32, ymax: i32) -> i32 {
+    let q = (x / scale).round() as i64 + zero_point as i64;
+    q.clamp(ymin as i64, ymax as i64) as i32
+}
+
+/// Eq. (5): `dequantize(y) = s * (y - z)`.
+pub fn dequantize(y: i32, scale: f64, zero_point: i32) -> f64 {
+    scale * (y - zero_point) as f64
+}
+
+/// A per-channel multi-threshold activation unit.
+///
+/// `apply(acc, ch)` returns the output code: the number of thresholds the
+/// integer accumulator crosses (`>=` for positive batch-norm gain, `<=`
+/// for negative, constant for zero gain). This is the streamlined form of
+/// `clamp(round(BN(s_w*s_in*acc)/s_out))` — see
+/// `python/compile/quantize.py::streamline_thresholds`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MultiThreshold {
+    /// `[channels][levels]` ascending integer thresholds.
+    pub thresholds: Vec<Vec<i32>>,
+    /// +1 (count `acc >= t`), -1 (count `acc <= t`), 0 (constant channel).
+    pub signs: Vec<i32>,
+    /// Constant output code for channels with `signs == 0`.
+    pub consts: Vec<i32>,
+}
+
+impl MultiThreshold {
+    pub fn channels(&self) -> usize {
+        self.thresholds.len()
+    }
+
+    pub fn levels(&self) -> usize {
+        self.thresholds.first().map_or(0, Vec::len)
+    }
+
+    /// Output code for an integer accumulator on channel `ch`.
+    #[inline]
+    pub fn apply(&self, acc: i32, ch: usize) -> i32 {
+        match self.signs[ch] {
+            s if s > 0 => self.thresholds[ch].iter().filter(|&&t| acc >= t).count() as i32,
+            s if s < 0 => self.thresholds[ch].iter().filter(|&&t| acc <= t).count() as i32,
+            _ => self.consts[ch],
+        }
+    }
+
+    /// Validate internal consistency (shapes, codes in range).
+    pub fn validate(&self) -> Result<(), String> {
+        let c = self.thresholds.len();
+        if self.signs.len() != c || self.consts.len() != c {
+            return Err(format!(
+                "shape mismatch: {} thresholds vs {} signs vs {} consts",
+                c,
+                self.signs.len(),
+                self.consts.len()
+            ));
+        }
+        let l = self.levels();
+        for (ch, t) in self.thresholds.iter().enumerate() {
+            if t.len() != l {
+                return Err(format!("channel {ch}: ragged thresholds"));
+            }
+            if self.signs[ch] == 0 && !(0..=l as i32).contains(&self.consts[ch]) {
+                return Err(format!("channel {ch}: const code out of range"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Saturating residual-join add: `clamp(a + b, 0, 2^bits - 1)` on codes.
+/// Exact because both branches share one activation scale (DESIGN.md).
+#[inline]
+pub fn saturating_res_add(a: i32, b: i32, bits: u32) -> i32 {
+    (a + b).clamp(0, (1 << bits) - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qranges() {
+        assert_eq!(weight_qrange(4), (-8, 7));
+        assert_eq!(weight_qrange(8), (-128, 127));
+        assert_eq!(act_qrange(4), (0, 15));
+        assert_eq!(act_qrange(1), (0, 1));
+    }
+
+    #[test]
+    fn quantize_eq4() {
+        // paper Eq. 4 with s=0.5, z=0, 4-bit unsigned
+        assert_eq!(quantize(3.2, 0.5, 0, 0, 15), 6);
+        assert_eq!(quantize(-1.0, 0.5, 0, 0, 15), 0); // clamps
+        assert_eq!(quantize(100.0, 0.5, 0, 0, 15), 15);
+    }
+
+    #[test]
+    fn dequantize_eq5_roundtrip() {
+        let s = 0.13;
+        for code in 0..16 {
+            let x = dequantize(code, s, 0);
+            assert_eq!(quantize(x, s, 0, 0, 15), code);
+        }
+    }
+
+    #[test]
+    fn multithreshold_positive() {
+        let mt = MultiThreshold {
+            thresholds: vec![vec![0, 2, 50]],
+            signs: vec![1],
+            consts: vec![0],
+        };
+        assert_eq!(mt.apply(-5, 0), 0);
+        assert_eq!(mt.apply(0, 0), 1);
+        assert_eq!(mt.apply(3, 0), 2);
+        assert_eq!(mt.apply(100, 0), 3);
+    }
+
+    #[test]
+    fn multithreshold_negative() {
+        let mt = MultiThreshold {
+            thresholds: vec![vec![-1, 1, 50]],
+            signs: vec![-1],
+            consts: vec![0],
+        };
+        assert_eq!(mt.apply(-5, 0), 3);
+        assert_eq!(mt.apply(0, 0), 2);
+        assert_eq!(mt.apply(3, 0), 1);
+        assert_eq!(mt.apply(100, 0), 0);
+    }
+
+    #[test]
+    fn multithreshold_const() {
+        let mt = MultiThreshold {
+            thresholds: vec![vec![0; 15]],
+            signs: vec![0],
+            consts: vec![7],
+        };
+        assert_eq!(mt.apply(-1000, 0), 7);
+        assert_eq!(mt.apply(1000, 0), 7);
+    }
+
+    #[test]
+    fn validate_catches_ragged() {
+        let mt = MultiThreshold {
+            thresholds: vec![vec![1, 2], vec![1]],
+            signs: vec![1, 1],
+            consts: vec![0, 0],
+        };
+        assert!(mt.validate().is_err());
+    }
+
+    #[test]
+    fn res_add_saturates() {
+        assert_eq!(saturating_res_add(10, 10, 4), 15);
+        assert_eq!(saturating_res_add(3, 4, 4), 7);
+        assert_eq!(saturating_res_add(0, 0, 4), 0);
+        assert_eq!(saturating_res_add(1, 1, 1), 1);
+    }
+}

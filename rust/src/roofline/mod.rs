@@ -1,0 +1,174 @@
+//! Roofline model (DESIGN.md S9): Eq. (1) and (2) of the paper, the
+//! Table 1 device comparison, and the Figure 1 LUTMUL-vs-DSP analysis.
+
+
+use crate::fabric::cost;
+use crate::fabric::device::{FpgaDevice, FpgaSlice};
+
+/// DSP packing factor `p` by operand bit-width (paper section 2.1):
+/// p=1 for 16-bit, p=2 for 8-bit, p=4 for 4-bit MACs.
+pub fn dsp_packing_factor(bits: u32) -> f64 {
+    match bits {
+        0..=4 => 4.0,
+        5..=8 => 2.0,
+        _ => 1.0,
+    }
+}
+
+/// Eq. (1): `Peak performance = p x PEs x 2 x f` (ops/s).
+pub fn peak_performance(p: f64, pes: f64, freq_hz: f64) -> f64 {
+    p * pes * 2.0 * freq_hz
+}
+
+/// DSP-based peak for a resource slice at a bit-width (ops/s).
+pub fn dsp_peak(slice: &FpgaSlice, bits: u32, freq_hz: f64) -> f64 {
+    peak_performance(dsp_packing_factor(bits), slice.dsps as f64, freq_hz)
+}
+
+/// LUTMUL peak for a resource slice (ops/s): the number of parallel
+/// LUT-mapped MACs the LUT budget sustains. Each MAC costs Eq. (3) ROM
+/// LUTs plus its amortized share of the adder tree (calibrated factors
+/// from `fabric::cost`), so a 4-bit MAC lands at ~5.8 LUTs all-in.
+pub fn lutmul_peak(slice: &FpgaSlice, bits: u32, freq_hz: f64) -> f64 {
+    let per_mac = lutmul_luts_per_mac(bits);
+    let macs = slice.luts as f64 / per_mac;
+    peak_performance(1.0, macs, freq_hz)
+}
+
+/// All-in LUT cost of one LUTMUL MAC: ROM (Eq. 3 x implementation factor)
+/// + amortized adder-tree share (one adder per product, Vivado-shrunk).
+pub fn lutmul_luts_per_mac(bits: u32) -> f64 {
+    let rom = cost::luts_per_mult(bits) * cost::VIVADO_ROM_FACTOR;
+    // one tree node per term, width ~ accumulator width of a 64-term sum
+    let adder = cost::luts_per_adder(cost::accumulator_width(2 * bits, 64))
+        * cost::VIVADO_ADDER_SHRINK;
+    rom + adder
+}
+
+/// Eq. (2)-style memory roof: attainable ops/s at arithmetic intensity
+/// `ai` (ops/byte) with bandwidth `bw` (bytes/s).
+pub fn memory_roof(bw_bytes_per_s: f64, ai: f64) -> f64 {
+    bw_bytes_per_s * ai
+}
+
+/// One point of a roofline: attainable performance at an intensity.
+pub fn attainable(peak_ops: f64, bw_bytes_per_s: f64, ai: f64) -> f64 {
+    peak_ops.min(memory_roof(bw_bytes_per_s, ai))
+}
+
+/// The crossover intensity (ridge point) where compute becomes the bound.
+pub fn ridge_point(peak_ops: f64, bw_bytes_per_s: f64) -> f64 {
+    peak_ops / bw_bytes_per_s
+}
+
+/// A full roofline curve for Figure 1.
+#[derive(Debug, Clone)]
+pub struct RooflineCurve {
+    pub label: String,
+    pub peak_gops: f64,
+    pub ridge_ops_per_byte: f64,
+    /// (arithmetic intensity, attainable GOPS) samples.
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Figure 1: roofline for 1/64 of U280 (resources and HBM bandwidth),
+/// comparing LUTMUL against DSP-based architectures at several bit-widths.
+pub fn figure1_curves(device: &FpgaDevice, denom: u64) -> Vec<RooflineCurve> {
+    let slice = device.fraction(denom);
+    let f = device.max_freq_mhz * 1e6;
+    let bw = slice.bw_gbps * 1e9;
+    let intensities: Vec<f64> = (0..=28).map(|i| 2f64.powf(i as f64 * 0.5 - 4.0)).collect();
+    let mut curves = Vec::new();
+    let mk = |label: String, peak: f64| RooflineCurve {
+        label,
+        peak_gops: peak / 1e9,
+        ridge_ops_per_byte: ridge_point(peak, bw),
+        points: intensities
+            .iter()
+            .map(|&ai| (ai, attainable(peak, bw, ai) / 1e9))
+            .collect(),
+    };
+    curves.push(mk("LUTMUL W4A4".into(), lutmul_peak(&slice, 4, f)));
+    for bits in [4u32, 8, 16] {
+        curves.push(mk(format!("DSP W{bits}A{bits}"), dsp_peak(&slice, bits, f)));
+    }
+    curves
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::device::U280;
+
+    #[test]
+    fn packing_factors_match_paper() {
+        assert_eq!(dsp_packing_factor(16), 1.0);
+        assert_eq!(dsp_packing_factor(8), 2.0);
+        assert_eq!(dsp_packing_factor(4), 4.0);
+    }
+
+    #[test]
+    fn eq1_units() {
+        // 100 PEs, p=2, 300 MHz -> 120 GOPS
+        assert_eq!(peak_performance(2.0, 100.0, 300e6), 1.2e11);
+    }
+
+    #[test]
+    fn lutmul_beats_dsp_peak_on_u280_slice() {
+        // The headline claim: at equal resources, LUT-mapped MACs exceed
+        // the DSP-bound peak for 4-bit ops.
+        let slice = U280.fraction(64);
+        let f = 333e6;
+        let lut = lutmul_peak(&slice, 4, f);
+        let dsp = dsp_peak(&slice, 4, f);
+        assert!(
+            lut > dsp,
+            "LUTMUL {:.1} GOPS must exceed DSP {:.1} GOPS",
+            lut / 1e9,
+            dsp / 1e9
+        );
+        // and by a sane factor (the paper's Figure 1 shows ~2-4x)
+        let ratio = lut / dsp;
+        assert!(ratio > 1.5 && ratio < 8.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn memory_bound_region() {
+        // at tiny intensity the roof is the bandwidth line
+        let slice = U280.fraction(64);
+        let f = 333e6;
+        let peak = lutmul_peak(&slice, 4, f);
+        let bw = slice.bw_gbps * 1e9;
+        let low = attainable(peak, bw, 0.1);
+        assert!((low - bw * 0.1).abs() < 1e-6 * bw);
+        let high = attainable(peak, bw, 1e6);
+        assert_eq!(high, peak);
+    }
+
+    #[test]
+    fn ridge_point_monotone_in_peak() {
+        let bw = 7.2e9;
+        assert!(ridge_point(2e12, bw) > ridge_point(1e12, bw));
+    }
+
+    #[test]
+    fn figure1_has_lutmul_on_top() {
+        let curves = figure1_curves(&U280, 64);
+        assert_eq!(curves.len(), 4);
+        let lut_peak = curves[0].peak_gops;
+        for c in &curves[1..] {
+            assert!(lut_peak > c.peak_gops, "{} >= LUTMUL", c.label);
+        }
+        // every curve saturates at its own peak
+        for c in &curves {
+            let max = c.points.iter().map(|p| p.1).fold(0.0, f64::max);
+            assert!((max - c.peak_gops).abs() / c.peak_gops < 1e-9);
+        }
+    }
+
+    #[test]
+    fn luts_per_mac_all_in_cost() {
+        let c = lutmul_luts_per_mac(4);
+        assert!(c > 3.0 && c < 10.0, "4-bit MAC all-in {c} LUTs");
+    }
+}

@@ -1,0 +1,148 @@
+//! PJRT runtime (DESIGN.md S11): load AOT artifacts (HLO text emitted by
+//! `python/compile/aot.py`) and execute them on the XLA CPU client.
+//!
+//! The interchange format is HLO *text* — jax >= 0.5 emits HloModuleProto
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Python never runs on the request path: the artifacts are compiled once
+//! at startup and executed from Rust.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A compiled model artifact bound to the PJRT CPU client.
+pub struct Runtime {
+    exe: xla::PjRtLoadedExecutable,
+    /// input geometry: [batch, h, w, c] int32 codes
+    pub batch: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub num_classes: usize,
+}
+
+impl Runtime {
+    /// Load + compile an HLO text artifact for a fixed batch geometry.
+    pub fn load(
+        path: impl AsRef<Path>,
+        batch: usize,
+        h: usize,
+        w: usize,
+        c: usize,
+        num_classes: usize,
+    ) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT client: {e:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path.as_ref())
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.as_ref().display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.as_ref().display()))?;
+        Ok(Self { exe, batch, h, w, c, num_classes })
+    }
+
+    /// Execute on a batch of images (flattened `[batch, h, w, c]` codes).
+    /// Returns per-image logits.
+    pub fn run(&self, codes: &[i32]) -> Result<Vec<Vec<f32>>> {
+        let expect = self.batch * self.h * self.w * self.c;
+        anyhow::ensure!(
+            codes.len() == expect,
+            "input length {} != batch geometry {}",
+            codes.len(),
+            expect
+        );
+        let lit = xla::Literal::vec1(codes)
+            .reshape(&[self.batch as i64, self.h as i64, self.w as i64, self.c as i64])
+            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().map_err(|e| anyhow::anyhow!("tuple: {e:?}"))?;
+        let flat = out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+        anyhow::ensure!(
+            flat.len() == self.batch * self.num_classes,
+            "output length {} != {}x{}",
+            flat.len(),
+            self.batch,
+            self.num_classes
+        );
+        Ok(flat.chunks(self.num_classes).map(<[f32]>::to_vec).collect())
+    }
+
+    /// Run a batch given per-image code vectors (must match `batch`).
+    pub fn run_images(&self, images: &[Vec<i32>]) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(images.len() == self.batch, "need exactly {} images", self.batch);
+        let flat: Vec<i32> = images.iter().flatten().copied().collect();
+        self.run(&flat)
+    }
+}
+
+/// Artifact paths convention (relative to the repo root).
+pub struct Artifacts {
+    pub dir: std::path::PathBuf,
+}
+
+impl Artifacts {
+    pub fn new(dir: impl Into<std::path::PathBuf>) -> Self {
+        Self { dir: dir.into() }
+    }
+
+    pub fn network_json(&self) -> std::path::PathBuf {
+        self.dir.join("network.json")
+    }
+
+    pub fn model_hlo(&self, batch: usize) -> std::path::PathBuf {
+        if batch == 1 {
+            self.dir.join("model.hlo.txt")
+        } else {
+            self.dir.join(format!("model_b{batch}.hlo.txt"))
+        }
+    }
+
+    pub fn test_images(&self) -> std::path::PathBuf {
+        self.dir.join("test_images.bin")
+    }
+
+    pub fn test_labels(&self) -> std::path::PathBuf {
+        self.dir.join("test_labels.bin")
+    }
+
+    pub fn fig2_json(&self) -> std::path::PathBuf {
+        self.dir.join("fig2_accuracy.json")
+    }
+
+    /// Load the test set (images as code vectors + labels).
+    pub fn load_test_set(&self, h: usize, w: usize, c: usize) -> Result<(Vec<Vec<i32>>, Vec<u8>)> {
+        let img_bytes = std::fs::read(self.test_images())
+            .context("reading test_images.bin (run `make artifacts`)")?;
+        let labels = std::fs::read(self.test_labels()).context("reading test_labels.bin")?;
+        let px = h * w * c;
+        let images: Vec<Vec<i32>> = img_bytes
+            .chunks_exact(px)
+            .map(|ch| ch.iter().map(|&b| b as i32).collect())
+            .collect();
+        anyhow::ensure!(images.len() == labels.len(), "test set size mismatch");
+        Ok((images, labels))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_paths() {
+        let a = Artifacts::new("artifacts");
+        assert_eq!(a.model_hlo(1).to_str().unwrap(), "artifacts/model.hlo.txt");
+        assert_eq!(a.model_hlo(8).to_str().unwrap(), "artifacts/model_b8.hlo.txt");
+    }
+
+    // Full runtime round-trips are covered by rust/tests/runtime_golden.rs
+    // (they need the artifacts built).
+}

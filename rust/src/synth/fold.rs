@@ -1,0 +1,207 @@
+//! Folding optimizer: balance per-layer initiation intervals against the
+//! device budget (paper section 3.2: "HLS layers are folded according to
+//! performance and resource requirements ... all layers are balanced and
+//! pipelined for better throughput").
+//!
+//! Strategy: binary-search the steady-state cycles-per-image target `C`;
+//! for each candidate, every layer takes the largest fold that keeps it
+//! off the critical path (`fold <= C / out_pixels`), which minimizes its
+//! resources; feasibility = total LUT/BRAM/DSP within budget. The smallest
+//! feasible `C` gives the throughput-optimal balanced design.
+
+use crate::fabric::device::FpgaDevice;
+use crate::graph::arch::ArchSpec;
+
+use super::design::{stage_resources, choose_mode, synthesize, Design};
+
+/// Resource budget for the optimizer (absolute units).
+#[derive(Debug, Clone, Copy)]
+pub struct Budget {
+    pub luts: u64,
+    pub bram36: u64,
+    pub dsps: u64,
+}
+
+impl Budget {
+    /// A fraction of a device's *compute* resources (e.g. `1/64` of U280
+    /// for Figure 1). BRAM stays at device capacity: line buffers and
+    /// weight storage are fixed costs of the dataflow that no fold factor
+    /// removes — fractioning them would make every design point
+    /// infeasible rather than slower, which is not what the paper's
+    /// resource-slice analysis means.
+    pub fn fraction(device: &FpgaDevice, denom: u64) -> Self {
+        Self {
+            luts: device.luts / denom,
+            bram36: device.bram36,
+            dsps: device.dsps / denom,
+        }
+    }
+
+    pub fn whole(device: &FpgaDevice) -> Self {
+        // leave headroom for shell/infrastructure (the paper's design uses
+        // 529k of 1304k LUTs; the U280 shell + routing margin caps usable
+        // fabric well below 100%)
+        Self {
+            luts: (device.luts as f64 * 0.85) as u64,
+            bram36: (device.bram36 as f64 * 0.85) as u64,
+            dsps: device.dsps,
+        }
+    }
+}
+
+/// Per-layer folds for a cycles-per-image target.
+fn folds_for_target(arch: &ArchSpec, target_cycles: u64) -> Vec<usize> {
+    arch.layers
+        .iter()
+        .map(|l| {
+            let out_px = (l.out_hw() * l.out_hw()) as u64;
+            let max_fold = (target_cycles / out_px.max(1)).max(1);
+            // fold beyond the per-pixel work is useless
+            max_fold.min(l.mults_per_pixel().max(1)) as usize
+        })
+        .collect()
+}
+
+/// Total resources for an arch at given folds (mode chosen per layer).
+fn total_resources(arch: &ArchSpec, folds: &[usize]) -> (f64, f64, f64) {
+    let mut t = (0.0, 0.0, 0.0);
+    for (l, &f) in arch.layers.iter().zip(folds) {
+        let mode = choose_mode(l, f);
+        let (lu, br, ds) = stage_resources(l, mode, f);
+        t.0 += lu;
+        t.1 += br;
+        t.2 += ds;
+    }
+    t
+}
+
+fn feasible(arch: &ArchSpec, folds: &[usize], budget: &Budget) -> bool {
+    let (l, b, d) = total_resources(arch, folds);
+    l <= budget.luts as f64 && b <= budget.bram36 as f64 && d <= budget.dsps as f64
+}
+
+/// Find the smallest steady-state cycles-per-image achievable within the
+/// budget; returns the folds and the target.
+pub fn optimize_folding(arch: &ArchSpec, budget: &Budget) -> (Vec<usize>, u64) {
+    optimize_folding_with_floor(arch, budget, 0)
+}
+
+/// Like [`optimize_folding`] but with an external cycles-per-image floor —
+/// e.g. an element-serial input interface (the paper's FINN-heritage
+/// sliding-window generators ingest one activation element per cycle, so
+/// the floor is `in_px * in_ch` rather than `in_px`). A higher floor lets
+/// every layer fold deeper at no throughput cost.
+pub fn optimize_folding_with_floor(
+    arch: &ArchSpec,
+    budget: &Budget,
+    floor_cycles: u64,
+) -> (Vec<usize>, u64) {
+    // lower bound: the largest layer output (II=1 everywhere);
+    // input streaming also bounds at input_hw^2 (one pixel per cycle),
+    // plus any external interface floor.
+    let lo_bound = arch
+        .layers
+        .iter()
+        .map(|l| (l.out_hw() * l.out_hw()) as u64)
+        .max()
+        .unwrap_or(1)
+        .max((arch.input_hw * arch.input_hw) as u64)
+        .max(floor_cycles);
+    // upper bound: fully sequential
+    let hi_bound = arch
+        .layers
+        .iter()
+        .map(|l| (l.out_hw() * l.out_hw()) as u64 * l.mults_per_pixel())
+        .max()
+        .unwrap_or(1);
+
+    let mut lo = lo_bound;
+    let mut hi = hi_bound.max(lo_bound);
+    if feasible(arch, &folds_for_target(arch, lo), budget) {
+        return (folds_for_target(arch, lo), lo);
+    }
+    // binary search smallest feasible target
+    while lo + 1 < hi {
+        let mid = lo + (hi - lo) / 2;
+        if feasible(arch, &folds_for_target(arch, mid), budget) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    (folds_for_target(arch, hi), hi)
+}
+
+/// Convenience: optimize folding and synthesize on a device.
+pub fn synthesize_optimized(arch: &ArchSpec, device: &FpgaDevice, budget: &Budget) -> Design {
+    let (folds, _) = optimize_folding(arch, budget);
+    synthesize(arch, device, &folds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::device::U280;
+    use crate::graph::arch::{mobilenet_v2_full, mobilenet_v2_small};
+
+    #[test]
+    fn small_model_reaches_input_bound() {
+        let arch = mobilenet_v2_small();
+        let (folds, cycles) = optimize_folding(&arch, &Budget::whole(&U280));
+        // the tiny model is input-streaming bound: 16x16 pixels/image
+        assert_eq!(cycles, 256);
+        // layers on the critical path (out_px == 256) must be II=1;
+        // smaller layers may fold into the slack without hurting FPS
+        for (l, &f) in arch.layers.iter().zip(&folds) {
+            let out_px = (l.out_hw() * l.out_hw()) as u64;
+            assert!(out_px * f as u64 <= 256, "{} violates the target", l.name);
+        }
+    }
+
+    #[test]
+    fn full_mobilenet_fits_budget() {
+        let arch = mobilenet_v2_full();
+        let budget = Budget::whole(&U280);
+        let (folds, _) = optimize_folding(&arch, &budget);
+        assert!(feasible(&arch, &folds, &budget));
+        assert!(folds.iter().any(|&f| f > 1), "deep layers must fold");
+    }
+
+    #[test]
+    fn tighter_budget_means_slower_design() {
+        let arch = mobilenet_v2_full();
+        let (_, c_full) = optimize_folding(&arch, &Budget::whole(&U280));
+        let (_, c_frac) = optimize_folding(&arch, &Budget::fraction(&U280, 8));
+        assert!(c_frac >= c_full);
+    }
+
+    #[test]
+    fn paper_scale_throughput_shape() {
+        // Shape checks for the headline claim (paper: 1627 FPS / 978.6
+        // GOPS on U280 @333 MHz). Our balanced fold optimizer lands at
+        // the input-streaming bound (224^2 pixels/image -> ~6.6k FPS),
+        // faster than the paper's manual design — the *ordering* and the
+        // LUTMUL>FINN factor are what must reproduce (EXPERIMENTS.md E6).
+        let arch = mobilenet_v2_full();
+        let d = synthesize_optimized(&arch, &U280, &Budget::whole(&U280));
+        let fps = d.fps();
+        assert!(fps > 1000.0 && fps < 10_000.0, "FPS {fps} out of regime");
+        // beats FINN's published 925 FPS by at least the paper's 1.76x
+        assert!(fps / 925.0 > 1.76, "LUTMUL/FINN factor too small: {fps}/925");
+        // and the design actually fits the device
+        assert!(d.luts < U280.luts);
+        assert!((d.dsps as f64) < U280.dsps as f64);
+    }
+
+    #[test]
+    fn monotone_feasibility() {
+        // if C is feasible, C' > C must be feasible too (more folding
+        // shrinks resources) — the invariant the binary search relies on.
+        let arch = mobilenet_v2_full();
+        let budget = Budget::whole(&U280);
+        let (_, c) = optimize_folding(&arch, &budget);
+        for mult in [2u64, 4, 16] {
+            assert!(feasible(&arch, &folds_for_target(&arch, c * mult), &budget));
+        }
+    }
+}

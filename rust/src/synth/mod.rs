@@ -1,0 +1,20 @@
+//! Synthesis analog (DESIGN.md S8): maps an architecture spec onto FPGA
+//! resources the way the paper's HLS-template + Vivado flow does.
+//!
+//! For every layer it sizes the LUT-ROM multiplier array (Eq. 3 with the
+//! Figure 6-calibrated implementation factors), the adder tree, the
+//! multi-threshold unit and the line-buffer BRAM; the folding optimizer
+//! then balances per-layer initiation intervals against the device (or
+//! device-fraction) budget — the paper's "folded according to performance
+//! and resource requirements" step. SLR assignment follows section 3.3:
+//! stages fill one Super Logic Region before spilling into the next.
+
+pub mod breakdown;
+pub mod design;
+pub mod fold;
+pub mod report;
+
+pub use breakdown::{fig6_breakdown, LayerBreakdown};
+pub use design::{synthesize, Design, StageDesign};
+pub use fold::optimize_folding;
+pub use report::utilization_report;

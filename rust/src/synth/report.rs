@@ -1,0 +1,122 @@
+//! Vivado-style utilization report for a synthesized design — the
+//! human-readable artifact an FPGA engineer would sanity-check before
+//! `place_design` (per-SLR tables, per-mode rollups, device percentages).
+
+use std::fmt::Write as _;
+
+use crate::fabric::device::FpgaDevice;
+
+use super::design::{Design, LayerMode};
+
+/// Render a utilization report (deterministic text).
+pub fn utilization_report(design: &Design, device: &FpgaDevice) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "+--------------------------------------------------------------+");
+    let _ = writeln!(s, "| Utilization Report — {} on {}", design.arch_name, design.device);
+    let _ = writeln!(s, "| target {} MHz, {} cycles/image, {:.0} FPS", design.freq_mhz, design.cycles_per_image, design.fps());
+    let _ = writeln!(s, "+--------------------------------------------------------------+");
+
+    // device-level rollup
+    let pct = |used: f64, avail: u64| 100.0 * used / avail as f64;
+    let _ = writeln!(s, "\n1. Device totals\n----------------");
+    let _ = writeln!(s, "{:<10}{:>12}{:>12}{:>9}", "resource", "used", "available", "util%");
+    let _ = writeln!(s, "{:<10}{:>12}{:>12}{:>8.1}%", "LUT", design.luts, device.luts, pct(design.luts as f64, device.luts));
+    let _ = writeln!(s, "{:<10}{:>12}{:>12}{:>8.1}%", "FF", design.ffs, device.ffs, pct(design.ffs as f64, device.ffs));
+    let _ = writeln!(s, "{:<10}{:>12}{:>12}{:>8.1}%", "BRAM36", design.bram36, device.bram36, pct(design.bram36 as f64, device.bram36));
+    let _ = writeln!(s, "{:<10}{:>12}{:>12}{:>8.1}%", "DSP", design.dsps, device.dsps, pct(design.dsps as f64, device.dsps));
+
+    // per-SLR
+    let _ = writeln!(s, "\n2. Super Logic Regions\n----------------------");
+    let slr_cap = device.luts as f64 / device.slrs as f64;
+    for slr in 0..device.slrs {
+        let stages: Vec<_> = design.stages.iter().filter(|st| st.slr == slr).collect();
+        let luts: f64 = stages.iter().map(|st| st.luts).sum();
+        let _ = writeln!(
+            s,
+            "SLR{slr}: {:>3} stages, {:>9.0} LUTs ({:.1}% of SLR)",
+            stages.len(),
+            luts,
+            100.0 * luts / slr_cap
+        );
+    }
+
+    // per-mode rollup
+    let _ = writeln!(s, "\n3. Implementation modes\n-----------------------");
+    for mode in [LayerMode::LutRom, LayerMode::BramMac, LayerMode::Dsp] {
+        let stages: Vec<_> = design.stages.iter().filter(|st| st.mode == mode).collect();
+        if stages.is_empty() {
+            continue;
+        }
+        let luts: f64 = stages.iter().map(|st| st.luts).sum();
+        let bram: f64 = stages.iter().map(|st| st.bram36).sum();
+        let dsp: f64 = stages.iter().map(|st| st.dsps).sum();
+        let _ = writeln!(
+            s,
+            "{:<9?}: {:>3} layers | {:>9.0} LUT | {:>7.1} BRAM36 | {:>6.0} DSP",
+            mode,
+            stages.len(),
+            luts,
+            bram,
+            dsp
+        );
+    }
+
+    // critical path (throughput, not timing)
+    let _ = writeln!(s, "\n4. Throughput-critical stages\n-----------------------------");
+    let mut by_cycles: Vec<_> = design.stages.iter().collect();
+    by_cycles.sort_by_key(|st| std::cmp::Reverse(st.cycles_per_image));
+    for st in by_cycles.iter().take(5) {
+        let _ = writeln!(
+            s,
+            "{:<16} {:>9} cycles/img (fold {:>4}, {:?})",
+            st.name, st.cycles_per_image, st.fold, st.mode
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::device::U280;
+    use crate::graph::arch::mobilenet_v2_full;
+    use crate::synth::fold::{optimize_folding, Budget};
+    use crate::synth::synthesize;
+
+    fn design() -> Design {
+        let arch = mobilenet_v2_full();
+        let (folds, _) = optimize_folding(&arch, &Budget::whole(&U280));
+        synthesize(&arch, &U280, &folds)
+    }
+
+    #[test]
+    fn report_contains_all_sections() {
+        let r = utilization_report(&design(), &U280);
+        for sec in ["Device totals", "Super Logic Regions", "Implementation modes", "Throughput-critical"] {
+            assert!(r.contains(sec), "missing section {sec}");
+        }
+        assert!(r.contains("SLR0"));
+        assert!(r.contains("LUT"));
+    }
+
+    #[test]
+    fn utilization_under_100_percent() {
+        let d = design();
+        let r = utilization_report(&d, &U280);
+        assert!(d.lut_utilization(&U280) < 1.0);
+        // every printed util% is parseable and < 100
+        for line in r.lines() {
+            if let Some(p) = line.strip_suffix('%') {
+                if let Some(v) = p.rsplit(' ').next().and_then(|t| t.parse::<f64>().ok()) {
+                    assert!(v < 100.0, "{line}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let d = design();
+        assert_eq!(utilization_report(&d, &U280), utilization_report(&d, &U280));
+    }
+}

@@ -1,0 +1,75 @@
+//! Minimal benchmark harness (no criterion in the vendored crate set).
+//!
+//! `bench(name, iters, f)` runs a warmup, then `iters` timed runs, and
+//! reports min/median/mean — enough to track the §Perf iteration log in
+//! EXPERIMENTS.md. All benches are plain `fn main` binaries
+//! (`harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>12?} min {:>12?} med {:>12?} mean ({} iters)",
+            self.name, self.min, self.median, self.mean, self.iters
+        )
+    }
+}
+
+/// Time `f` over `iters` runs (after one warmup); prints and returns stats.
+pub fn bench<R>(name: &str, iters: usize, mut f: impl FnMut() -> R) -> BenchResult {
+    std::hint::black_box(f()); // warmup
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed());
+    }
+    times.sort_unstable();
+    let min = times[0];
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<Duration>() / times.len() as u32;
+    let r = BenchResult { name: name.to_string(), iters: times.len(), min, median, mean };
+    println!("{r}");
+    r
+}
+
+/// Throughput helper: items/s at the median time.
+pub fn per_second(items: usize, r: &BenchResult) -> f64 {
+    items as f64 / r.median.as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("noop", 5, || 42);
+        assert_eq!(r.iters, 5);
+        assert!(r.min <= r.median && r.median >= Duration::ZERO);
+    }
+
+    #[test]
+    fn per_second_scales() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            min: Duration::from_millis(10),
+            median: Duration::from_millis(10),
+            mean: Duration::from_millis(10),
+        };
+        assert!((per_second(100, &r) - 10_000.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,62 @@
+//! f32 ULP comparison.
+//!
+//! The integer network is bit-exact end to end; the only floating-point
+//! op is the final dense `acc * scale + bias`. XLA's CPU backend lowers
+//! it as a fused multiply-add while jax's CPU jit keeps mul+add separate,
+//! so the two golden sources legitimately differ by 1 ULP. Comparisons
+//! against the JSON golden therefore allow a configurable ULP distance
+//! (default 1); comparisons among Rust/PJRT paths stay exact.
+
+/// Distance in units-in-the-last-place between two f32s.
+pub fn ulp_distance(a: f32, b: f32) -> u32 {
+    if a == b {
+        return 0; // covers -0.0 == 0.0
+    }
+    if a.is_nan() || b.is_nan() || a.is_sign_positive() != b.is_sign_positive() {
+        return u32::MAX;
+    }
+    let ia = a.abs().to_bits();
+    let ib = b.abs().to_bits();
+    ia.abs_diff(ib)
+}
+
+/// True when every element pair is within `max_ulps`.
+pub fn slices_ulp_eq(a: &[f32], b: &[f32], max_ulps: u32) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(&x, &y)| ulp_distance(x, y) <= max_ulps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_is_zero() {
+        assert_eq!(ulp_distance(1.5, 1.5), 0);
+        assert_eq!(ulp_distance(0.0, -0.0), 0);
+    }
+
+    #[test]
+    fn adjacent_is_one() {
+        let a = 1.0f32;
+        let b = f32::from_bits(a.to_bits() + 1);
+        assert_eq!(ulp_distance(a, b), 1);
+        assert_eq!(ulp_distance(-a, -b), 1);
+    }
+
+    #[test]
+    fn sign_mismatch_is_max() {
+        assert_eq!(ulp_distance(1.0, -1.0), u32::MAX);
+        assert_eq!(ulp_distance(f32::NAN, 1.0), u32::MAX);
+    }
+
+    #[test]
+    fn slice_compare() {
+        let a = [1.0f32, 2.0, -3.0];
+        let mut b = a;
+        b[1] = f32::from_bits(b[1].to_bits() + 1);
+        assert!(slices_ulp_eq(&a, &b, 1));
+        assert!(!slices_ulp_eq(&a, &b, 0));
+        assert!(!slices_ulp_eq(&a, &b[..2], 1));
+    }
+}

@@ -1,0 +1,12 @@
+//! Small self-contained substrates: JSON interchange and deterministic
+//! property testing (the offline vendored crate set has neither
+//! `serde_json` nor `proptest`).
+
+pub mod bench;
+pub mod float;
+pub mod json;
+pub mod prop;
+
+pub use float::{slices_ulp_eq, ulp_distance};
+pub use json::Json;
+pub use prop::Rng;

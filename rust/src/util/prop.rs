@@ -1,0 +1,109 @@
+//! Tiny deterministic property-testing helper (the vendored crate set has
+//! no `proptest`). A seeded SplitMix64/LCG generator plus a `cases` runner
+//! that reports the failing seed, so any failure reproduces exactly.
+
+/// Deterministic pseudo-random generator (SplitMix64).
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed.wrapping_add(0x9e3779b97f4a7c15) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e3779b97f4a7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, n)`.
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        self.next_u64() % n
+    }
+
+    /// Uniform integer in `[lo, hi]` inclusive.
+    pub fn range_i32(&mut self, lo: i32, hi: i32) -> i32 {
+        assert!(lo <= hi);
+        lo + (self.below((hi - lo) as u64 + 1) as i32)
+    }
+
+    /// Uniform in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform float in `[lo, hi)`.
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+
+    /// Random i32 vector with entries in `[lo, hi]`.
+    pub fn vec_i32(&mut self, n: usize, lo: i32, hi: i32) -> Vec<i32> {
+        (0..n).map(|_| self.range_i32(lo, hi)).collect()
+    }
+}
+
+/// Run `n` property cases; on failure, panics with the offending seed.
+pub fn cases(n: u64, mut f: impl FnMut(&mut Rng)) {
+    for seed in 0..n {
+        let mut rng = Rng::new(seed.wrapping_mul(0x51_7c_c1_b7_27_22_0a_95));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed at case seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn ranges_respected() {
+        let mut r = Rng::new(1);
+        for _ in 0..1000 {
+            let v = r.range_i32(-8, 7);
+            assert!((-8..=7).contains(&v));
+            let f = r.range_f64(0.5, 2.0);
+            assert!((0.5..2.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn below_covers_domain() {
+        let mut r = Rng::new(3);
+        let mut seen = [false; 8];
+        for _ in 0..500 {
+            seen[r.below(8) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn cases_runs_all() {
+        let mut count = 0;
+        cases(25, |_| count += 1);
+        assert_eq!(count, 25);
+    }
+}

@@ -1,0 +1,396 @@
+//! Integration tests across modules: artifacts -> graph -> executor ->
+//! dataflow -> coordinator, plus property sweeps over the fabric and
+//! folding invariants. Requires `make artifacts` (skips gracefully if the
+//! artifacts are missing so `cargo test` works on a fresh checkout).
+
+use std::sync::Arc;
+
+use lutmul::coordinator::{argmax, run_batch, Backend, Coordinator, ServeConfig};
+use lutmul::dataflow::{FoldConfig, Pipeline};
+use lutmul::fabric::lutmul::ConstMultiplier;
+use lutmul::graph::executor::{decode_test_images, Datapath, Executor, Tensor};
+use lutmul::graph::network::Network;
+use lutmul::runtime::Artifacts;
+use lutmul::synth::fold::{optimize_folding, Budget};
+use lutmul::util::prop;
+
+fn artifacts() -> Option<(Network, Vec<Vec<i32>>, Vec<u8>)> {
+    let a = Artifacts::new("artifacts");
+    let net = Network::load(a.network_json()).ok()?;
+    let (images, labels) =
+        a.load_test_set(net.meta.image_size, net.meta.image_size, net.meta.in_ch).ok()?;
+    Some((net, images, labels))
+}
+
+#[test]
+fn trained_network_loads_and_validates() {
+    let Some((net, images, labels)) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    assert_eq!(net.meta.image_size, 16);
+    assert_eq!(net.convs().count(), 14);
+    assert_eq!(images.len(), labels.len());
+    assert!(images.len() >= 256);
+    assert!(net.validate().is_ok());
+}
+
+#[test]
+fn executor_matches_golden_logits() {
+    // aot.py embeds the JAX golden logits for the first 32 test images;
+    // the reference executor must reproduce them bit-for-bit.
+    let Some((net, images, _)) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    assert!(!net.meta.golden_logits.is_empty(), "export includes golden logits");
+    let ex = Executor::new(&net, Datapath::Arithmetic);
+    for (i, want) in net.meta.golden_logits.iter().enumerate() {
+        let t = Tensor::from_hwc(16, 16, 3, images[i].clone());
+        let got = ex.execute(&t);
+        // integer path is bit-exact; the final dense f32 op may differ by
+        // <=2 ULP vs jax-python (FMA vs mul+add — see util::float)
+        assert!(
+            lutmul::util::slices_ulp_eq(&got, want, 2),
+            "image {i} logits diverge from JAX golden: {got:?} vs {want:?}"
+        );
+    }
+}
+
+#[test]
+fn dataflow_pipeline_matches_executor_on_trained_net() {
+    let Some((net, images, _)) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let n = 12;
+    let ex = Executor::new(&net, Datapath::Arithmetic);
+    let mut pipe = Pipeline::build(&net, &FoldConfig::fully_parallel(net.convs().count()), 16);
+    let rep = pipe.run(&images[..n]);
+    for i in 0..n {
+        let t = Tensor::from_hwc(16, 16, 3, images[i].clone());
+        assert_eq!(rep.logits[i], ex.execute(&t), "image {i}");
+    }
+    // the pipeline is input-streaming bound: 256 pixels/image
+    assert_eq!(rep.steady_state_cycles_per_image, 256);
+}
+
+#[test]
+fn lut_fabric_datapath_bit_exact_on_trained_net() {
+    // every 4-bit multiplication in the net done by LUT6_2 readout
+    let Some((net, images, _)) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let a = Executor::new(&net, Datapath::Arithmetic);
+    let b = Executor::new(&net, Datapath::LutFabric);
+    for img in images.iter().take(4) {
+        let t = Tensor::from_hwc(16, 16, 3, img.clone());
+        assert_eq!(a.execute(&t), b.execute(&t));
+    }
+}
+
+#[test]
+fn deployed_accuracy_matches_export() {
+    let Some((net, images, labels)) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let ex = Executor::new(&net, Datapath::Arithmetic);
+    let correct = images
+        .iter()
+        .zip(&labels)
+        .filter(|(img, &y)| {
+            let t = Tensor::from_hwc(16, 16, 3, (*img).clone());
+            argmax(&ex.execute(&t)) == y as usize
+        })
+        .count();
+    let acc = correct as f64 / images.len() as f64;
+    // aot.py recorded the deployed accuracy at export time
+    assert!(
+        (acc - net.meta.acc_int).abs() < 1e-9,
+        "rust accuracy {acc} != exported {}",
+        net.meta.acc_int
+    );
+}
+
+#[test]
+fn coordinator_serves_correct_results() {
+    let Some((net, images, _labels)) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let net = Arc::new(net);
+    let coord = Coordinator::start(
+        net.clone(),
+        ServeConfig { workers: 2, max_batch: 4, backend: Backend::Reference, ..Default::default() },
+    );
+    let ex = Executor::new(&net, Datapath::Arithmetic);
+    let n = 24;
+    let tickets: Vec<_> =
+        (0..n).map(|i| coord.submit(images[i].clone()).expect("queue accepts")).collect();
+    for (i, t) in tickets.into_iter().enumerate() {
+        let r = t.wait().unwrap();
+        let want = ex.execute(&Tensor::from_hwc(16, 16, 3, images[i].clone()));
+        assert_eq!(r.logits, want, "request {i}");
+    }
+    let m = coord.metrics();
+    assert_eq!(m.completed, n as u64);
+    assert!(m.p99_us >= m.p50_us);
+    coord.shutdown();
+}
+
+#[test]
+fn coordinator_batches_requests() {
+    let Some((net, images, _)) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let coord = Coordinator::start(
+        Arc::new(net),
+        ServeConfig {
+            workers: 1,
+            max_batch: 8,
+            max_wait: std::time::Duration::from_millis(5),
+            ..Default::default()
+        },
+    );
+    // fire a burst; all must complete despite a single worker
+    let tickets: Vec<_> =
+        (0..64).map(|i| coord.submit(images[i % images.len()].clone()).unwrap()).collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    assert_eq!(coord.metrics().completed, 64);
+    coord.shutdown();
+}
+
+#[test]
+fn run_batch_backends_agree() {
+    let Some((net, images, _)) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let imgs = &images[..3];
+    let a = run_batch(&net, Backend::Reference, imgs);
+    let b = run_batch(&net, Backend::Simulator, imgs);
+    assert_eq!(a, b);
+}
+
+#[test]
+fn decode_test_images_roundtrip() {
+    let Some((net, images, _)) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let bytes = std::fs::read("artifacts/test_images.bin").unwrap();
+    let tensors = decode_test_images(&bytes, net.meta.image_size, net.meta.in_ch);
+    assert_eq!(tensors.len(), images.len());
+    assert_eq!(tensors[0].data, images[0]);
+}
+
+// ---------------------------------------------------------------------------
+// Property sweeps (deterministic seeds; no proptest in the vendored set)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_lut_multiplier_exact_for_all_bitwidths() {
+    prop::cases(200, |rng| {
+        let bits = *rng.choose(&[1u32, 2, 3, 4]);
+        let lim = 1i32 << (bits - 1);
+        let w0 = rng.range_i32(-lim, lim - 1);
+        let w1 = rng.range_i32(-lim, lim - 1);
+        let m = ConstMultiplier::new(w0, w1, bits);
+        let a = rng.range_i32(0, (1 << bits) - 1) as u32;
+        assert_eq!(m.eval(false, a), w0 * a as i32);
+        assert_eq!(m.eval(true, a), w1 * a as i32);
+    });
+}
+
+#[test]
+fn prop_multithreshold_monotone_in_acc() {
+    use lutmul::quant::MultiThreshold;
+    prop::cases(100, |rng| {
+        let levels = (1 << rng.range_i32(1, 4)) - 1;
+        let base = rng.range_i32(-50, 50);
+        let step = rng.range_i32(1, 9);
+        let thresholds = vec![(0..levels).map(|i| base + i * step).collect::<Vec<_>>()];
+        let sign = *rng.choose(&[1i32, -1]);
+        let mt = MultiThreshold { thresholds, signs: vec![sign], consts: vec![0] };
+        let mut prev = mt.apply(-200, 0);
+        for acc in -199..200 {
+            let cur = mt.apply(acc, 0);
+            if sign > 0 {
+                assert!(cur >= prev, "positive gain must be monotone increasing");
+            } else {
+                assert!(cur <= prev, "negative gain must be monotone decreasing");
+            }
+            assert!((0..=levels).contains(&cur));
+            prev = cur;
+        }
+    });
+}
+
+#[test]
+fn prop_folding_never_changes_results() {
+    // random small networks: any fold assignment produces identical logits
+    use lutmul::graph::network::{ConvKind, Meta, Op};
+    prop::cases(12, |rng| {
+        let cin = rng.range_i32(1, 4) as usize;
+        let cout = rng.range_i32(1, 6) as usize;
+        let k = *rng.choose(&[1usize, 3]);
+        let cols = k * k * cin;
+        let net = Network {
+            meta: Meta {
+                image_size: 6,
+                in_ch: cin,
+                num_classes: 2,
+                in_scale: 1.0,
+                w_bits: 4,
+                a_bits: 4,
+                acc_int: 0.0,
+                n_test: 0,
+                golden_logits: vec![],
+            },
+            ops: vec![
+                Op::Input { bits: 4, scale: 1.0 },
+                Op::Conv {
+                    name: "c".into(),
+                    kind: if k == 1 { ConvKind::Pw } else { ConvKind::Std },
+                    cin,
+                    cout,
+                    k,
+                    stride: 1,
+                    pad: (k - 1) / 2,
+                    w_bits: 4,
+                    in_bits: 4,
+                    out_bits: 4,
+                    w_codes: (0..cout).map(|_| rng.vec_i32(cols, -8, 7)).collect(),
+                    thresholds: (0..cout)
+                        .map(|_| {
+                            let b = rng.range_i32(-20, 20);
+                            let s = rng.range_i32(1, 4);
+                            (0..15).map(|i| b + i * s).collect()
+                        })
+                        .collect(),
+                    signs: vec![1; cout],
+                    consts: vec![0; cout],
+                    out_scale: 0.1,
+                },
+                Op::PoolSum {},
+                Op::Dense {
+                    name: "fc".into(),
+                    cin: cout,
+                    cout: 2,
+                    w_bits: 8,
+                    w_codes: (0..cout).map(|_| rng.vec_i32(2, -128, 127)).collect(),
+                    scale: vec![0.01, 0.01],
+                    bias: vec![0.0, 0.0],
+                },
+            ],
+        };
+        let images: Vec<Vec<i32>> = (0..2).map(|_| rng.vec_i32(36 * cin, 0, 15)).collect();
+        let fold = rng.range_i32(1, 6) as usize;
+        let a = Pipeline::build(&net, &FoldConfig::fully_parallel(1), 8).run(&images);
+        let b = Pipeline::build(&net, &FoldConfig::uniform(1, fold), 8).run(&images);
+        assert_eq!(a.logits, b.logits);
+    });
+}
+
+#[test]
+fn prop_fold_optimizer_feasible_and_balanced() {
+    use lutmul::graph::mobilenet_v2_full;
+    let arch = mobilenet_v2_full();
+    for denom in [1u64, 2, 4, 16] {
+        let budget = Budget::fraction(&lutmul::fabric::device::U280, denom);
+        let (folds, cycles) = optimize_folding(&arch, &budget);
+        // every layer respects the throughput target
+        for (l, &f) in arch.layers.iter().zip(&folds) {
+            let out_px = (l.out_hw() * l.out_hw()) as u64;
+            assert!(out_px * f as u64 <= cycles.max(out_px), "{}", l.name);
+        }
+    }
+}
+
+#[test]
+fn netlist_roundtrip_parses_back_to_products() {
+    // emit Verilog for a trained layer, scrape the INIT vectors back out,
+    // evaluate them as LUT6_2s, and check they compute the weight products
+    let Some((net, _, _)) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    use lutmul::fabric::lut::Lut6_2;
+    let Some(lutmul::graph::network::Op::Conv { name, w_codes, .. }) = net
+        .ops
+        .iter()
+        .find(|op| matches!(op, lutmul::graph::network::Op::Conv { w_bits: 4, .. }))
+    else {
+        panic!("no 4-bit conv in trained net");
+    };
+    let v = lutmul::fabric::netlist::emit_layer(name, w_codes, 4);
+
+    // scrape module bodies: name + 4 INIT constants each
+    let mut modules: Vec<(String, Vec<u64>)> = Vec::new();
+    let mut cur: Option<(String, Vec<u64>)> = None;
+    for line in v.lines() {
+        if let Some(rest) = line.strip_prefix("module ") {
+            let mname = rest.split(' ').next().unwrap().to_string();
+            if mname.contains("_mul_") {
+                cur = Some((mname, Vec::new()));
+            }
+        } else if let Some((_, inits)) = cur.as_mut() {
+            if let Some(pos) = line.find("64'h") {
+                let hex: String = line[pos + 4..]
+                    .chars()
+                    .take_while(|c| c.is_ascii_hexdigit() || *c == '_')
+                    .filter(|c| *c != '_')
+                    .collect();
+                inits.push(u64::from_str_radix(&hex, 16).unwrap());
+            }
+            if line.starts_with("endmodule") {
+                modules.push(cur.take().unwrap());
+            }
+        }
+    }
+    assert!(!modules.is_empty());
+    for (mname, inits) in &modules {
+        assert_eq!(inits.len(), 4, "{mname}");
+        // decode the embedded weights from the module name: l_mul_{w0}_{w1}
+        let parts: Vec<&str> = mname.rsplitn(3, '_').collect(); // [w1, w0, rest]
+        let dec = |s: &str| -> i32 {
+            if let Some(n) = s.strip_prefix('n') { -n.parse::<i32>().unwrap() } else { s.parse().unwrap() }
+        };
+        let (w1, w0) = (dec(parts[0]), dec(parts[1]));
+        let luts: Vec<Lut6_2> = inits.iter().map(|&i| Lut6_2::new(i)).collect();
+        let eval = |ws: bool, a: u8| -> i32 {
+            let addr5 = ((ws as u8) << 4) | a;
+            let mut p = 0u32;
+            for (l, lut) in luts.iter().enumerate() {
+                let (o6, o5) = lut.eval_dual(addr5);
+                if o6 { p |= 1 << (7 - 2 * l); }
+                if o5 { p |= 1 << (6 - 2 * l); }
+            }
+            ((p << 24) as i32) >> 24
+        };
+        for a in 0..16u8 {
+            assert_eq!(eval(false, a), w0 * a as i32, "{mname} ws=0 a={a}");
+            assert_eq!(eval(true, a), w1 * a as i32, "{mname} ws=1 a={a}");
+        }
+    }
+}
+
+#[test]
+fn multi_fpga_partition_of_trained_small_net() {
+    use lutmul::dataflow::multi::{partition, LinkModel};
+    use lutmul::fabric::device::U280;
+    use lutmul::graph::mobilenet_v2_small;
+    use lutmul::synth::fold::{optimize_folding, Budget};
+    let arch = mobilenet_v2_small();
+    let (folds, _) = optimize_folding(&arch, &Budget::whole(&U280));
+    for n in [1usize, 2] {
+        let plan = partition(&arch, &U280, n, &folds, LinkModel::gbe100());
+        assert_eq!(plan.partitions.len(), n);
+        assert!(plan.fps() > 0.0);
+    }
+}

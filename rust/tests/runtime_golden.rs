@@ -1,0 +1,130 @@
+//! PJRT runtime golden tests: load the AOT HLO artifacts, execute them on
+//! the XLA CPU client from Rust, and check bit-exact agreement with both
+//! the exported golden logits and every Rust execution backend.
+//!
+//! These tests require `make artifacts`; they skip gracefully otherwise.
+
+use lutmul::coordinator::argmax;
+use lutmul::dataflow::{FoldConfig, Pipeline};
+use lutmul::graph::executor::{Datapath, Executor, Tensor};
+use lutmul::graph::network::Network;
+use lutmul::runtime::{Artifacts, Runtime};
+
+fn setup() -> Option<(Network, Vec<Vec<i32>>, Vec<u8>, Artifacts)> {
+    let a = Artifacts::new("artifacts");
+    let net = Network::load(a.network_json()).ok()?;
+    let (images, labels) =
+        a.load_test_set(net.meta.image_size, net.meta.image_size, net.meta.in_ch).ok()?;
+    if !a.model_hlo(1).exists() {
+        return None;
+    }
+    Some((net, images, labels, a))
+}
+
+#[test]
+fn pjrt_executes_batch1_artifact() {
+    let Some((net, images, _, a)) = setup() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Runtime::load(a.model_hlo(1), 1, 16, 16, 3, net.meta.num_classes).unwrap();
+    let logits = rt.run(&images[0]).unwrap();
+    assert_eq!(logits.len(), 1);
+    assert_eq!(logits[0].len(), net.meta.num_classes);
+    assert!(logits[0].iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn pjrt_matches_exported_golden_logits() {
+    let Some((net, images, _, a)) = setup() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Runtime::load(a.model_hlo(1), 1, 16, 16, 3, net.meta.num_classes).unwrap();
+    for (i, want) in net.meta.golden_logits.iter().enumerate().take(8) {
+        let got = rt.run(&images[i]).unwrap();
+        // <=2 ULP: old-XLA CPU emits an FMA for the final dense op, jax's
+        // CPU jit (which produced the JSON golden) does not
+        assert!(
+            lutmul::util::slices_ulp_eq(&got[0], want, 2),
+            "image {i}: PJRT vs JAX golden: {got:?} vs {want:?}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_matches_rust_executor_and_simulator() {
+    // the full three-way agreement: AOT HLO (Pallas kernels inside) ==
+    // reference executor == dataflow pipeline, bit for bit.
+    let Some((net, images, _, a)) = setup() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Runtime::load(a.model_hlo(1), 1, 16, 16, 3, net.meta.num_classes).unwrap();
+    let ex = Executor::new(&net, Datapath::Arithmetic);
+    let mut pipe = Pipeline::build(&net, &FoldConfig::fully_parallel(net.convs().count()), 16);
+    let n = 6;
+    let sim = pipe.run(&images[..n]);
+    for i in 0..n {
+        let golden = rt.run(&images[i]).unwrap();
+        let t = Tensor::from_hwc(16, 16, 3, images[i].clone());
+        assert_eq!(golden[0], ex.execute(&t), "image {i}: PJRT vs executor");
+        assert_eq!(golden[0], sim.logits[i], "image {i}: PJRT vs simulator");
+    }
+}
+
+#[test]
+fn pjrt_batch8_artifact_consistent() {
+    let Some((net, images, _, a)) = setup() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    if !a.model_hlo(8).exists() {
+        eprintln!("skipping: batch-8 artifact missing");
+        return;
+    }
+    let rt8 = Runtime::load(a.model_hlo(8), 8, 16, 16, 3, net.meta.num_classes).unwrap();
+    let rt1 = Runtime::load(a.model_hlo(1), 1, 16, 16, 3, net.meta.num_classes).unwrap();
+    let batch = rt8.run_images(&images[..8].to_vec()).unwrap();
+    for i in 0..8 {
+        let single = rt1.run(&images[i]).unwrap();
+        assert_eq!(batch[i], single[0], "batching must not change results");
+    }
+}
+
+#[test]
+fn pjrt_accuracy_matches_export() {
+    let Some((net, images, labels, a)) = setup() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    if !a.model_hlo(8).exists() {
+        return;
+    }
+    let rt8 = Runtime::load(a.model_hlo(8), 8, 16, 16, 3, net.meta.num_classes).unwrap();
+    let n = 128;
+    let mut correct = 0usize;
+    for chunk in 0..(n / 8) {
+        let imgs: Vec<Vec<i32>> = (0..8).map(|j| images[chunk * 8 + j].clone()).collect();
+        let logits = rt8.run_images(&imgs).unwrap();
+        for (j, l) in logits.iter().enumerate() {
+            if argmax(l) == labels[chunk * 8 + j] as usize {
+                correct += 1;
+            }
+        }
+    }
+    let acc = correct as f64 / n as f64;
+    // deployed accuracy on this subset should track the export (exact
+    // equality not required: subset vs full test set)
+    assert!((acc - net.meta.acc_int).abs() < 0.08, "acc {acc} vs {}", net.meta.acc_int);
+}
+
+#[test]
+fn runtime_rejects_bad_geometry() {
+    let Some((net, _, _, a)) = setup() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Runtime::load(a.model_hlo(1), 1, 16, 16, 3, net.meta.num_classes).unwrap();
+    assert!(rt.run(&[0i32; 7]).is_err());
+}
