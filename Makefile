@@ -1,0 +1,22 @@
+# Build-time targets. `artifacts` runs the L1/L2 Python layer ONCE
+# (train -> streamline -> AOT HLO + network.json, see DESIGN.md S15/S16);
+# everything else in the repo is pure Rust and needs nothing from here.
+
+PYTHON ?= python3
+
+.PHONY: artifacts artifacts-fig2 test-python test-rust
+
+artifacts:
+	mkdir -p artifacts
+	cd python && $(PYTHON) -m compile.aot --out ../artifacts/model.hlo.txt
+
+# Figure 2 accuracy sweep on top of the regular artifacts (EXPERIMENTS.md E3)
+artifacts-fig2:
+	mkdir -p artifacts
+	cd python && $(PYTHON) -m compile.aot --out ../artifacts/model.hlo.txt --fig2
+
+test-python:
+	cd python && $(PYTHON) -m pytest -q
+
+test-rust:
+	cd rust && cargo test -q

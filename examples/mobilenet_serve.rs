@@ -1,16 +1,20 @@
-//! End-to-end driver (DESIGN.md E8): load the trained, streamlined
+//! End-to-end driver (EXPERIMENTS.md E8): load the trained, streamlined
 //! MobileNetV2 artifacts, prove the whole stack composes, and serve
 //! batched inference requests.
 //!
 //!  stage 1  golden check — the PJRT runtime executes the AOT HLO (with
 //!           the Pallas LUTMUL kernels inside) and must agree bit-exactly
-//!           with the Rust reference executor and the dataflow simulator;
+//!           with the Rust reference executor and the dataflow simulator
+//!           (skipped, with the executor/simulator cross-check kept, when
+//!           built without the `xla` feature);
 //!  stage 2  accelerator timing — run the full test set through the
 //!           cycle-level dataflow pipeline, report simulated FPS/GOPS at
 //!           333 MHz and classification accuracy;
-//!  stage 3  serving — push a batched request load through the async
+//!  stage 3  batch-major throughput — images/s vs batch size through
+//!           `Executor::run_batch`, the serving fast path (E9);
+//!  stage 4  serving — push a batched request load through the async
 //!           coordinator (router -> batcher -> worker pool) and report
-//!           latency percentiles and throughput.
+//!           latency percentiles, batch statistics and throughput.
 //!
 //! Needs `make artifacts`. Run:
 //!   cargo run --release --example mobilenet_serve [-- <requests>]
@@ -41,22 +45,43 @@ fn main() -> anyhow::Result<()> {
     );
 
     // ---- stage 1: three-way golden check ------------------------------
-    println!("\n[1/3] golden check (PJRT HLO vs executor vs dataflow sim)");
-    let rt = Runtime::load(artifacts.model_hlo(1), 1, size, size, net.meta.in_ch, net.meta.num_classes)?;
+    println!("\n[1/4] golden check (PJRT HLO vs executor vs dataflow sim)");
     let ex = Executor::new(&net, Datapath::Arithmetic);
     let mut pipe = Pipeline::build(&net, &FoldConfig::fully_parallel(net.convs().count()), 16);
     let n_check = 8;
     let sim = pipe.run(&images[..n_check]);
+    let tensors: Vec<Tensor> = images[..n_check]
+        .iter()
+        .map(|img| Tensor::from_hwc(size, size, net.meta.in_ch, img.clone()))
+        .collect();
+    let exec_logits = ex.run_batch(&tensors);
     for i in 0..n_check {
-        let golden = rt.run(&images[i])?;
-        let t = Tensor::from_hwc(size, size, net.meta.in_ch, images[i].clone());
-        anyhow::ensure!(golden[0] == ex.execute(&t), "executor diverged on image {i}");
-        anyhow::ensure!(golden[0] == sim.logits[i], "simulator diverged on image {i}");
+        anyhow::ensure!(exec_logits[i] == sim.logits[i], "simulator diverged on image {i}");
     }
-    println!("      {n_check}/{n_check} images bit-exact across all three backends");
+    match Runtime::load(artifacts.model_hlo(1), 1, size, size, net.meta.in_ch, net.meta.num_classes)
+    {
+        Ok(rt) => {
+            for i in 0..n_check {
+                let golden = rt.run(&images[i])?;
+                anyhow::ensure!(golden[0] == exec_logits[i], "executor diverged on image {i}");
+            }
+            println!("      {n_check}/{n_check} images bit-exact across all three backends");
+        }
+        // without the `xla` feature the runtime is a stub: skip the HLO
+        // leg but keep the executor/simulator cross-check
+        #[cfg(not(feature = "xla"))]
+        Err(e) => {
+            println!("      PJRT skipped ({e});");
+            println!("      executor vs simulator: {n_check}/{n_check} bit-exact");
+        }
+        // with real PJRT bindings a load failure is a broken artifact —
+        // fail loudly rather than report a hollow pass
+        #[cfg(feature = "xla")]
+        Err(e) => return Err(e),
+    }
 
     // ---- stage 2: accelerator timing on the full test set -------------
-    println!("\n[2/3] dataflow accelerator simulation (full test set)");
+    println!("\n[2/4] dataflow accelerator simulation (full test set)");
     let mut pipe = Pipeline::build(&net, &FoldConfig::fully_parallel(net.convs().count()), 16);
     let t0 = std::time::Instant::now();
     let rep = pipe.run(&images);
@@ -67,14 +92,15 @@ fn main() -> anyhow::Result<()> {
         .zip(&labels)
         .filter(|(l, &y)| argmax(l) == y as usize)
         .count();
-    let ops = lutmul::graph::mobilenet_v2_small().ops_per_image();
+    let ops = net.ops_per_image(); // GOPS denominator from the served net
     let fps = rep.steady_state_fps(333.0);
     println!(
-        "      {} images | accuracy {:.2}% | {} total cycles | steady-state {} cycles/img",
+        "      {} images | accuracy {:.2}% | {} total cycles | steady-state {} cycles/img | marginal batched image {} cycles",
         images.len(),
         100.0 * correct as f64 / images.len() as f64,
         rep.cycles,
-        rep.steady_state_cycles_per_image
+        rep.steady_state_cycles_per_image,
+        rep.incremental_cycles_per_image()
     );
     println!(
         "      accelerator @333MHz: {:.0} FPS, {:.1} GOPS | host sim wall time {:.2?} ({:.0} img/s)",
@@ -86,8 +112,31 @@ fn main() -> anyhow::Result<()> {
     let busiest = rep.stages.iter().max_by_key(|s| s.fires).unwrap();
     println!("      busiest stage: {} ({} fires)", busiest.name, busiest.fires);
 
-    // ---- stage 3: batched serving ------------------------------------
-    println!("\n[3/3] serving {requests} requests (router -> batcher -> 2 workers)");
+    // ---- stage 3: batch-major executor throughput ---------------------
+    println!("\n[3/4] batch-major throughput (Executor::run_batch, Reference)");
+    let bench_imgs: Vec<Tensor> = images
+        .iter()
+        .cycle()
+        .take(32)
+        .map(|img| Tensor::from_hwc(size, size, net.meta.in_ch, img.clone()))
+        .collect();
+    let mut base_ips = 0.0;
+    for b in [1usize, 4, 8, 16, 32] {
+        let batch = &bench_imgs[..b];
+        let iters = (64 / b).max(4);
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(ex.run_batch(batch));
+        }
+        let ips = (b * iters) as f64 / t0.elapsed().as_secs_f64();
+        if b == 1 {
+            base_ips = ips;
+        }
+        println!("      batch {b:>2}: {ips:>8.0} img/s ({:.2}x vs batch 1)", ips / base_ips);
+    }
+
+    // ---- stage 4: batched serving ------------------------------------
+    println!("\n[4/4] serving {requests} requests (router -> batcher -> 2 workers)");
     let coord = Coordinator::start(
         Arc::new(net),
         ServeConfig {

@@ -1,0 +1,85 @@
+//! Bench — batch-major serving throughput (EXPERIMENTS.md E9): images/s
+//! vs batch size for the batch-major execution path on each serving
+//! backend. No artifacts needed: runs on a synthetic network with the
+//! trained `mobilenet_v2_small` shape.
+//!
+//! The acceptance line is printed at the end: `run_batch` at batch 8 must
+//! deliver >= 2x the images/s of batch 1 on the `Reference` backend.
+//!
+//! Run: `cargo bench --bench bench_batch`
+
+use lutmul::dataflow::{FoldConfig, Pipeline};
+use lutmul::graph::executor::{Datapath, Executor, Tensor};
+use lutmul::graph::mobilenet_v2_small;
+use lutmul::graph::network::Network;
+use lutmul::util::bench::{bench, per_second};
+use lutmul::util::prop::Rng;
+
+fn main() {
+    let net = Network::synthetic(&mobilenet_v2_small(), 0xBA7C4);
+    let size = net.meta.image_size;
+    let ch = net.meta.in_ch;
+    let mut rng = Rng::new(1);
+    let images: Vec<Tensor> = (0..32)
+        .map(|_| Tensor::from_hwc(size, size, ch, rng.vec_i32(size * size * ch, 0, 15)))
+        .collect();
+    let flat: Vec<Vec<i32>> = images.iter().map(|t| t.data.clone()).collect();
+    println!(
+        "synthetic {} ({}x{}x{}), {} cores",
+        "mobilenet_v2_small",
+        size,
+        size,
+        ch,
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+
+    // --- Reference backend: images/s vs batch size ---------------------
+    println!("\nReference backend (persistent executor, run_batch):");
+    let ex = Executor::new(&net, Datapath::Arithmetic);
+    let mut ips_at = std::collections::BTreeMap::new();
+    for b in [1usize, 2, 4, 8, 16, 32] {
+        let batch = &images[..b];
+        let iters = (128 / b).clamp(8, 64);
+        let r = bench(&format!("run_batch: batch={b:<2}"), iters, || ex.run_batch(batch).len());
+        let ips = per_second(b, &r);
+        ips_at.insert(b, ips);
+        println!("    -> {ips:.0} img/s ({:.2}x vs batch=1)", ips / ips_at[&1]);
+    }
+
+    // --- LutFabric backend (hardware-true datapath) ---------------------
+    println!("\nLutFabric backend (every 4-bit mult via LUT6_2 readout):");
+    let exf = Executor::new(&net, Datapath::LutFabric);
+    let mut lut_ips = std::collections::BTreeMap::new();
+    for b in [1usize, 8] {
+        let batch = &images[..b];
+        let r = bench(&format!("run_batch: batch={b:<2}"), 4, || exf.run_batch(batch).len());
+        lut_ips.insert(b, per_second(b, &r));
+        println!("    -> {:.0} img/s", lut_ips[&b]);
+    }
+
+    // --- Simulator backend: batch pipelining in simulated cycles --------
+    println!("\nSimulator backend (cycle-level, batch-pipelined):");
+    let folds = FoldConfig::fully_parallel(net.convs().count());
+    let cold = Pipeline::build(&net, &folds, 16).run(&flat[..1]);
+    let warm = Pipeline::build(&net, &folds, 16).run(&flat[..8]);
+    println!(
+        "    cold single image: {} cycles | batch of 8: {} cycles total, marginal image {} cycles",
+        cold.cycles,
+        warm.cycles,
+        warm.incremental_cycles_per_image()
+    );
+    println!(
+        "    -> batch pipelining: {:.2}x cycles/image vs draining between images",
+        8.0 * cold.cycles as f64 / warm.cycles as f64
+    );
+
+    // --- acceptance line -------------------------------------------------
+    let speedup = ips_at[&8] / ips_at[&1];
+    println!(
+        "\nbatch=8 vs batch=1 on Reference: {:.2}x images/s (target >= 2x): {}",
+        speedup,
+        if speedup >= 2.0 { "PASS" } else { "FAIL" }
+    );
+    let lut_speedup = lut_ips[&8] / lut_ips[&1];
+    println!("batch=8 vs batch=1 on LutFabric: {lut_speedup:.2}x images/s");
+}

@@ -1,4 +1,6 @@
-//! Serving metrics: throughput, latency percentiles, GOPS.
+//! Serving metrics: throughput, latency percentiles, GOPS, and per-batch
+//! dispatch statistics (batch-size histogram + batch service-time
+//! percentiles) for the batch-major execution path (EXPERIMENTS.md E9).
 
 use std::time::{Duration, Instant};
 
@@ -9,6 +11,10 @@ pub struct Metrics {
     started: Instant,
     completed: u64,
     ops_per_image: u64,
+    /// Size of every dispatched batch, in dispatch order.
+    batch_sizes: Vec<usize>,
+    /// Backend service time per dispatched batch (queueing excluded).
+    batch_service_us: Vec<u64>,
 }
 
 impl Metrics {
@@ -18,6 +24,8 @@ impl Metrics {
             started: Instant::now(),
             completed: 0,
             ops_per_image,
+            batch_sizes: Vec::new(),
+            batch_service_us: Vec::new(),
         }
     }
 
@@ -26,8 +34,37 @@ impl Metrics {
         self.completed += 1;
     }
 
+    /// Record one dispatched batch: its size and the backend service time
+    /// (the `run_batch` call alone, not the queueing ahead of it).
+    pub fn record_batch(&mut self, size: usize, service: Duration) {
+        self.batch_sizes.push(size);
+        self.batch_service_us.push(service.as_micros() as u64);
+    }
+
     pub fn completed(&self) -> u64 {
         self.completed
+    }
+
+    /// Number of batches dispatched to workers.
+    pub fn batches(&self) -> u64 {
+        self.batch_sizes.len() as u64
+    }
+
+    /// Mean images per dispatched batch (0 if none yet).
+    pub fn mean_batch(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            return 0.0;
+        }
+        self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+    }
+
+    /// Histogram of dispatched batch sizes: `(size, count)` ascending.
+    pub fn batch_histogram(&self) -> Vec<(usize, u64)> {
+        let mut hist: std::collections::BTreeMap<usize, u64> = std::collections::BTreeMap::new();
+        for &s in &self.batch_sizes {
+            *hist.entry(s).or_insert(0) += 1;
+        }
+        hist.into_iter().collect()
     }
 
     /// Requests per second since construction.
@@ -41,13 +78,12 @@ impl Metrics {
     }
 
     pub fn percentile_us(&self, p: f64) -> u64 {
-        if self.latencies_us.is_empty() {
-            return 0;
-        }
-        let mut v = self.latencies_us.clone();
-        v.sort_unstable();
-        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
-        v[idx.min(v.len() - 1)]
+        percentile(&self.latencies_us, p)
+    }
+
+    /// Percentile over per-batch backend service times.
+    pub fn batch_service_percentile_us(&self, p: f64) -> u64 {
+        percentile(&self.batch_service_us, p)
     }
 
     pub fn summary(&self) -> MetricsSummary {
@@ -59,8 +95,23 @@ impl Metrics {
             gops: thr * self.ops_per_image as f64 / 1e9,
             p50_us: self.percentile_us(50.0),
             p99_us: self.percentile_us(99.0),
+            batches: self.batches(),
+            mean_batch: self.mean_batch(),
+            batch_p50_us: self.batch_service_percentile_us(50.0),
+            batch_p99_us: self.batch_service_percentile_us(99.0),
         }
     }
+}
+
+/// Nearest-rank percentile of an unsorted sample (0 when empty).
+fn percentile(samples: &[u64], p: f64) -> u64 {
+    if samples.is_empty() {
+        return 0;
+    }
+    let mut v = samples.to_vec();
+    v.sort_unstable();
+    let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[idx.min(v.len() - 1)]
 }
 
 /// Immutable snapshot for reporting.
@@ -71,14 +122,30 @@ pub struct MetricsSummary {
     pub gops: f64,
     pub p50_us: u64,
     pub p99_us: u64,
+    /// Batches dispatched to workers.
+    pub batches: u64,
+    /// Mean images per dispatched batch.
+    pub mean_batch: f64,
+    /// p50 of per-batch backend service time.
+    pub batch_p50_us: u64,
+    /// p99 of per-batch backend service time.
+    pub batch_p99_us: u64,
 }
 
 impl std::fmt::Display for MetricsSummary {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{} reqs | {:.1} req/s | {:.2} GOPS | p50 {} us | p99 {} us",
-            self.completed, self.throughput_rps, self.gops, self.p50_us, self.p99_us
+            "{} reqs | {:.1} req/s | {:.2} GOPS | p50 {} us | p99 {} us | {} batches (mean {:.1} img) | batch service p50 {} us p99 {} us",
+            self.completed,
+            self.throughput_rps,
+            self.gops,
+            self.p50_us,
+            self.p99_us,
+            self.batches,
+            self.mean_batch,
+            self.batch_p50_us,
+            self.batch_p99_us
         )
     }
 }
@@ -105,6 +172,10 @@ mod tests {
         let m = Metrics::new(1);
         assert_eq!(m.percentile_us(99.0), 0);
         assert_eq!(m.completed(), 0);
+        assert_eq!(m.batches(), 0);
+        assert_eq!(m.mean_batch(), 0.0);
+        assert_eq!(m.batch_service_percentile_us(99.0), 0);
+        assert!(m.batch_histogram().is_empty());
     }
 
     #[test]
@@ -119,5 +190,22 @@ mod tests {
         let ra = sa.gops / sa.throughput_rps;
         let rb = sb.gops / sb.throughput_rps;
         assert!((rb / ra - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_stats_track_dispatches() {
+        let mut m = Metrics::new(1);
+        m.record_batch(8, Duration::from_micros(400));
+        m.record_batch(8, Duration::from_micros(600));
+        m.record_batch(4, Duration::from_micros(100));
+        assert_eq!(m.batches(), 3);
+        assert!((m.mean_batch() - 20.0 / 3.0).abs() < 1e-9);
+        assert_eq!(m.batch_histogram(), vec![(4, 1), (8, 2)]);
+        let s = m.summary();
+        assert_eq!(s.batches, 3);
+        assert_eq!(s.batch_p50_us, 400);
+        assert_eq!(s.batch_p99_us, 600);
+        // summary line mentions the batch stats
+        assert!(s.to_string().contains("3 batches"));
     }
 }

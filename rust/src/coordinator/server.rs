@@ -7,10 +7,18 @@
 //! batches on one of three backends:
 //!
 //!  * `Simulator` — the dataflow pipeline simulator (the paper's
-//!    accelerator, cycle-modelled);
+//!    accelerator, cycle-modelled); a dispatched batch streams through the
+//!    pipeline back to back, successive images overlapping in flight
+//!    rather than draining between images;
 //!  * `Reference` — the spec-level integer executor (fast path);
 //!  * `LutFabric` — the executor with every 4-bit multiplication
 //!    performed by simulated LUT6_2 readout (hardware-true datapath).
+//!
+//! Batches are executed *batch-major* end to end: each worker keeps a
+//! persistent backend (executor or pipeline, built once at spawn) and
+//! hands whole batches to [`Executor::run_batch`] / [`Pipeline::run`], so
+//! a dispatch of N images amortizes per-layer state and parallelizes
+//! across cores instead of unrolling image by image (EXPERIMENTS.md E9).
 //!
 //! All backends are bit-exact w.r.t. the JAX golden model; the PJRT
 //! runtime (`runtime::Runtime`) provides the golden check at startup.
@@ -101,8 +109,8 @@ impl Coordinator {
     /// Start the router, batcher and worker pool.
     pub fn start(net: Arc<Network>, cfg: ServeConfig) -> Self {
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
-        let ops = crate::graph::arch::mobilenet_v2_small().ops_per_image();
-        let metrics = Arc::new(Mutex::new(Metrics::new(ops)));
+        // GOPS denominator from the network actually being served
+        let metrics = Arc::new(Mutex::new(Metrics::new(net.ops_per_image())));
         let rejected = Arc::new(AtomicU64::new(0));
         let mut threads = Vec::new();
 
@@ -121,18 +129,39 @@ impl Coordinator {
                 std::thread::Builder::new()
                     .name(format!("lutmul-worker-{wi}"))
                     .spawn(move || {
-                        // per-worker persistent backend state (avoids
-                        // rebuilding the pipeline/executor per batch)
-                        let mut worker = WorkerBackend::new(&net, backend);
+                        // per-worker persistent backend state, built once:
+                        // the executor's prepped weights / LUT-INIT decode
+                        // and the pipeline are reused across every batch
+                        let mut worker = WorkerBackend::new(&net, backend, n_workers);
                         while let Ok(batch) = wrx.recv() {
-                            let images: Vec<Vec<i32>> =
-                                batch.iter().map(|r| r.image.clone()).collect();
-                            let results = worker.run(&images);
-                            for (req, logits) in batch.into_iter().zip(results) {
-                                let latency = req.enqueued.elapsed();
+                            // move images out of the requests (no copies on
+                            // the hot path), keep the response halves
+                            let mut images = Vec::with_capacity(batch.len());
+                            let mut reqs = Vec::with_capacity(batch.len());
+                            for r in batch {
+                                images.push(r.image);
+                                reqs.push((r.enqueued, r.resp));
+                            }
+                            let t_exec = Instant::now();
+                            let results = worker.run(images);
+                            let service = t_exec.elapsed();
+                            // one latency sample per request, shared by the
+                            // metrics and the client-visible result
+                            let latencies: Vec<Duration> =
+                                reqs.iter().map(|(enq, _)| enq.elapsed()).collect();
+                            // one lock per batch, not per request
+                            {
+                                let mut m = metrics.lock().unwrap();
+                                m.record_batch(reqs.len(), service);
+                                for &l in &latencies {
+                                    m.record(l);
+                                }
+                            }
+                            for (((_, resp), logits), latency) in
+                                reqs.into_iter().zip(results).zip(latencies)
+                            {
                                 let class = argmax(&logits);
-                                metrics.lock().unwrap().record(latency);
-                                let _ = req.resp.send(InferenceResult { logits, class, latency });
+                                let _ = resp.send(InferenceResult { logits, class, latency });
                             }
                         }
                     })
@@ -227,66 +256,62 @@ impl Coordinator {
     }
 }
 
-/// Per-worker backend state.
-enum WorkerBackend {
+/// Per-worker backend state. Executors borrow the worker's own
+/// `Arc<Network>` and persist across batches, so per-layer weight
+/// flattening and LUT-INIT decode happen once per worker, not per batch.
+enum WorkerBackend<'n> {
     Pipeline(Box<Pipeline>),
-    Exec { net: Arc<Network>, datapath: Datapath },
+    Exec { ex: Executor<'n>, size: usize, ch: usize, threads: usize },
 }
 
-impl WorkerBackend {
-    fn new(net: &Arc<Network>, backend: Backend) -> Self {
+impl<'n> WorkerBackend<'n> {
+    /// `pool_size` is the number of concurrent workers sharing the
+    /// machine: each backend gets an equal share of the cores so the pool
+    /// never oversubscribes the CPU.
+    fn new(net: &'n Network, backend: Backend, pool_size: usize) -> Self {
+        let size = net.meta.image_size;
+        let ch = net.meta.in_ch;
+        let cores =
+            std::thread::available_parallelism().map(std::num::NonZeroUsize::get).unwrap_or(1);
+        let threads = (cores / pool_size.max(1)).max(1);
         match backend {
             Backend::Simulator => {
                 let folds = FoldConfig::fully_parallel(net.convs().count());
                 WorkerBackend::Pipeline(Box::new(Pipeline::build(net, &folds, 16)))
             }
             Backend::Reference => {
-                WorkerBackend::Exec { net: net.clone(), datapath: Datapath::Arithmetic }
+                let ex = Executor::new(net, Datapath::Arithmetic);
+                WorkerBackend::Exec { ex, size, ch, threads }
             }
             Backend::LutFabric => {
-                WorkerBackend::Exec { net: net.clone(), datapath: Datapath::LutFabric }
+                let ex = Executor::new(net, Datapath::LutFabric);
+                WorkerBackend::Exec { ex, size, ch, threads }
             }
         }
     }
 
-    fn run(&mut self, images: &[Vec<i32>]) -> Vec<Vec<f32>> {
+    /// Execute one dispatched batch, batch-major. Takes the images by
+    /// value so the executor path can move them into tensors copy-free.
+    fn run(&mut self, images: Vec<Vec<i32>>) -> Vec<Vec<f32>> {
         match self {
-            WorkerBackend::Pipeline(p) => p.run(images).logits,
-            WorkerBackend::Exec { net, datapath } => {
-                let size = net.meta.image_size;
-                let ch = net.meta.in_ch;
-                let ex = Executor::new(net, *datapath);
-                images
-                    .iter()
-                    .map(|img| ex.execute(&Tensor::from_hwc(size, size, ch, img.clone())))
-                    .collect()
+            // the pipeline streams the whole batch back to back: image i+1
+            // enters the first stage while image i is still in flight
+            WorkerBackend::Pipeline(pipe) => pipe.run(&images).logits,
+            WorkerBackend::Exec { ex, size, ch, threads } => {
+                let tensors: Vec<Tensor> = images
+                    .into_iter()
+                    .map(|img| Tensor::from_hwc(*size, *size, *ch, img))
+                    .collect();
+                ex.run_batch_with_threads(&tensors, *threads)
             }
         }
     }
 }
 
-/// Execute a batch on a chosen backend (one-shot convenience).
+/// Execute a batch on a chosen backend (one-shot convenience; builds the
+/// backend, runs the batch batch-major with all cores, and tears it down).
 pub fn run_batch(net: &Network, backend: Backend, images: &[Vec<i32>]) -> Vec<Vec<f32>> {
-    let size = net.meta.image_size;
-    let ch = net.meta.in_ch;
-    match backend {
-        Backend::Simulator => {
-            let mut pipe = Pipeline::build(net, &FoldConfig::fully_parallel(net.convs().count()), 16);
-            pipe.run(images).logits
-        }
-        Backend::Reference | Backend::LutFabric => {
-            let dp = if backend == Backend::LutFabric {
-                Datapath::LutFabric
-            } else {
-                Datapath::Arithmetic
-            };
-            let ex = Executor::new(net, dp);
-            images
-                .iter()
-                .map(|img| ex.execute(&Tensor::from_hwc(size, size, ch, img.clone())))
-                .collect()
-        }
-    }
+    WorkerBackend::new(net, backend, 1).run(images.to_vec())
 }
 
 /// Index of the max logit.

@@ -161,6 +161,12 @@ pub struct SimReport {
     pub fifos: Vec<FifoStat>,
     /// Steady-state cycles per image (analytic: slowest stage).
     pub steady_state_cycles_per_image: u64,
+    /// Cycle at which each image's logits left the dense head, in
+    /// submission order. Within a batch, images overlap in the pipeline,
+    /// so successive completions are spaced by the steady-state interval,
+    /// not by the full pipeline depth — this is what the batch-pipelined
+    /// `Simulator` serving backend exposes per request.
+    pub image_done_cycles: Vec<u64>,
 }
 
 impl SimReport {
@@ -172,6 +178,17 @@ impl SimReport {
     /// Steady-state FPS (pipeline full, the paper's Table 2 regime).
     pub fn steady_state_fps(&self, freq_mhz: f64) -> f64 {
         freq_mhz * 1e6 / self.steady_state_cycles_per_image as f64
+    }
+
+    /// Measured cycles between the last two image completions — the
+    /// marginal cost of one more image in a batch (approaches the
+    /// steady-state interval once the pipeline is full), vs `cycles` for
+    /// a cold single-image run.
+    pub fn incremental_cycles_per_image(&self) -> u64 {
+        match self.image_done_cycles.len() {
+            0 | 1 => self.cycles,
+            n => self.image_done_cycles[n - 1] - self.image_done_cycles[n - 2],
+        }
     }
 }
 
@@ -328,8 +345,14 @@ impl Pipeline {
 
     /// Run `images` (each `[H*W*C]` codes, raster order) through the
     /// pipeline; returns logits per image plus timing statistics.
+    ///
+    /// Batches are *pipelined*: the pixel source feeds image i+1 into the
+    /// first stage the cycle after image i's last pixel, so successive
+    /// images overlap in the dataflow rather than draining between images
+    /// (`SimReport::image_done_cycles` records the overlap).
     pub fn run(&mut self, images: &[Vec<i32>]) -> SimReport {
         let mut logits: Vec<Vec<f32>> = Vec::with_capacity(images.len());
+        let mut done_cycles: Vec<u64> = Vec::with_capacity(images.len());
         // stream of input pixels across all images
         let in_ch = self.in_ch;
         let mut pixel_iter =
@@ -353,7 +376,7 @@ impl Pipeline {
 
             // stages fire downstream-first so space frees within a cycle
             for si in (0..self.stages.len()).rev() {
-                self.fire_stage(si, cycle, &mut logits);
+                self.fire_stage(si, cycle, &mut logits, &mut done_cycles);
             }
         }
 
@@ -390,10 +413,17 @@ impl Pipeline {
                 })
                 .collect(),
             steady_state_cycles_per_image: self.steady_cycles,
+            image_done_cycles: done_cycles,
         }
     }
 
-    fn fire_stage(&mut self, si: usize, cycle: u64, logits: &mut Vec<Vec<f32>>) {
+    fn fire_stage(
+        &mut self,
+        si: usize,
+        cycle: u64,
+        logits: &mut Vec<Vec<f32>>,
+        done_cycles: &mut Vec<u64>,
+    ) {
         let (inputs, outputs) = {
             let s = &self.stages[si];
             (s.inputs.clone(), s.outputs.clone())
@@ -486,6 +516,7 @@ impl Pipeline {
                         })
                         .collect();
                     logits.push(out);
+                    done_cycles.push(cycle);
                     fired = true;
                 }
             }
@@ -640,6 +671,26 @@ mod tests {
             eight.cycles,
             one.cycles * 8
         );
+    }
+
+    #[test]
+    fn batch_overlaps_in_pipeline() {
+        // completion times are recorded per image, strictly increasing,
+        // and the marginal image costs far less than a cold run
+        let net = random_net(17);
+        let report =
+            Pipeline::build(&net, &FoldConfig::fully_parallel(6), 8).run(&random_images(6, 8, 3, 9));
+        assert_eq!(report.image_done_cycles.len(), 6);
+        assert!(report.image_done_cycles.windows(2).all(|w| w[0] < w[1]));
+        let cold = Pipeline::build(&net, &FoldConfig::fully_parallel(6), 8)
+            .run(&random_images(1, 8, 3, 9));
+        assert!(
+            report.incremental_cycles_per_image() < cold.cycles,
+            "pipelined marginal image ({}) must beat a cold run ({})",
+            report.incremental_cycles_per_image(),
+            cold.cycles
+        );
+        assert_eq!(cold.incremental_cycles_per_image(), cold.cycles);
     }
 
     #[test]

@@ -175,6 +175,120 @@ impl<'n> Executor<'n> {
         self.execute_traced(image, &mut |_, _| {})
     }
 
+    /// Batch-major fast path (DESIGN.md S5, EXPERIMENTS.md E9): run a
+    /// whole batch to logits, bit-exact with `images.len()` independent
+    /// [`execute`](Self::execute) calls.
+    ///
+    /// The batch is split into one contiguous chunk per available core
+    /// (scoped threads; batch 1 never spawns), and each chunk executes
+    /// *op-major*: every streamlined layer runs across all of the chunk's
+    /// images before the next layer starts, so the layer's flattened
+    /// weights, thresholds and LUT fabric are fetched once per chunk
+    /// instead of once per image. This is what turns the coordinator's
+    /// dynamic batches into arithmetic throughput rather than just
+    /// queueing fairness.
+    pub fn run_batch(&self, images: &[Tensor]) -> Vec<Vec<f32>> {
+        let cores =
+            std::thread::available_parallelism().map(std::num::NonZeroUsize::get).unwrap_or(1);
+        self.run_batch_with_threads(images, cores)
+    }
+
+    /// [`run_batch`](Self::run_batch) with an explicit thread cap. The
+    /// coordinator divides the machine's cores across its worker pool so
+    /// concurrent workers don't oversubscribe the CPU.
+    pub fn run_batch_with_threads(&self, images: &[Tensor], max_threads: usize) -> Vec<Vec<f32>> {
+        match images.len() {
+            0 => Vec::new(),
+            1 => vec![self.execute(&images[0])],
+            n => {
+                let threads = max_threads.max(1).min(n);
+                if threads <= 1 {
+                    return self.run_chunk(images);
+                }
+                let per = n.div_ceil(threads);
+                std::thread::scope(|s| {
+                    let handles: Vec<_> = images
+                        .chunks(per)
+                        .map(|chunk| s.spawn(move || self.run_chunk(chunk)))
+                        .collect();
+                    handles
+                        .into_iter()
+                        .flat_map(|h| h.join().expect("batch worker panicked"))
+                        .collect()
+                })
+            }
+        }
+    }
+
+    /// Op-major execution of one contiguous chunk of the batch. The
+    /// per-image arithmetic is the same code as `execute_traced` (the
+    /// `conv`/threshold/res-add/dense bodies), so bit-exactness vs the
+    /// sequential path holds by construction; only the loop nest order
+    /// (layers outer, images inner) and the amortized per-layer state
+    /// lookups differ.
+    fn run_chunk(&self, images: &[Tensor]) -> Vec<Vec<f32>> {
+        let n = images.len();
+        let mut xs: Vec<Tensor> = images.to_vec();
+        let mut res_stacks: Vec<Vec<Tensor>> = vec![Vec::new(); n];
+        let mut pooled: Vec<Vec<i32>> = vec![Vec::new(); n];
+        let mut logits: Vec<Vec<f32>> = vec![Vec::new(); n];
+        for (oi, op) in self.net.ops.iter().enumerate() {
+            match op {
+                Op::Input { .. } => {}
+                Op::Conv { kind, cout, k, stride, pad, .. } => {
+                    // per-layer state resolved once for the whole chunk
+                    let prep = self.prepped[oi].as_ref().expect("conv prepped");
+                    let fabric = self.fabrics[oi].as_ref();
+                    for x in xs.iter_mut() {
+                        *x = self.conv(x, *kind, *cout, *k, *stride, *pad, prep, fabric);
+                    }
+                }
+                Op::ResPush {} => {
+                    for (i, x) in xs.iter().enumerate() {
+                        res_stacks[i].push(x.clone());
+                    }
+                }
+                Op::ResAdd { bits } => {
+                    for (i, x) in xs.iter_mut().enumerate() {
+                        let saved = res_stacks[i].pop().expect("res_add without res_push");
+                        assert_eq!((saved.h, saved.w, saved.c), (x.h, x.w, x.c));
+                        for (a, b) in x.data.iter_mut().zip(&saved.data) {
+                            *a = saturating_res_add(*a, *b, *bits);
+                        }
+                    }
+                }
+                Op::PoolSum {} => {
+                    for (i, x) in xs.iter().enumerate() {
+                        let mut acc = vec![0; x.c];
+                        for px in x.data.chunks_exact(x.c) {
+                            for (a, &v) in acc.iter_mut().zip(px) {
+                                *a += v;
+                            }
+                        }
+                        pooled[i] = acc;
+                    }
+                }
+                Op::Dense { cout, w_codes, scale, bias, .. } => {
+                    for (i, p) in pooled.iter().enumerate() {
+                        logits[i] = (0..*cout)
+                            .map(|co| {
+                                let acc: i64 = p
+                                    .iter()
+                                    .enumerate()
+                                    .map(|(ci, &a)| a as i64 * w_codes[ci][co] as i64)
+                                    .sum();
+                                // FMA to match the golden (see execute_traced)
+                                (acc as f32).mul_add(scale[co], bias[co])
+                            })
+                            .collect();
+                    }
+                }
+            }
+        }
+        assert!(logits.iter().all(|l| !l.is_empty()), "network has no dense head");
+        logits
+    }
+
     /// Run one image, invoking `trace(op_index, tensor)` after every op
     /// that produces an activation tensor (used to cross-check the
     /// dataflow simulator stage by stage).
@@ -468,6 +582,51 @@ mod tests {
         let logits = ex.execute(&img);
         // 12 through two convs stays 12; 12+12=24 -> clamps to 15
         assert_eq!(logits[0], 15.0);
+    }
+
+    #[test]
+    fn run_batch_matches_sequential_execute() {
+        // batch sizes around the thread-chunking edges, both datapaths
+        let net = net_with_conv(ConvKind::Std, 3, 4, 3, 1);
+        for dp in [Datapath::Arithmetic, Datapath::LutFabric] {
+            let ex = Executor::new(&net, dp);
+            let images: Vec<Tensor> = (0..9)
+                .map(|s| {
+                    let mut img = Tensor::zeros(4, 4, 3);
+                    for (i, v) in img.data.iter_mut().enumerate() {
+                        *v = ((i + s * 7) % 16) as i32;
+                    }
+                    img
+                })
+                .collect();
+            for n in [0usize, 1, 2, 3, 9] {
+                let got = ex.run_batch(&images[..n]);
+                let want: Vec<Vec<f32>> = images[..n].iter().map(|t| ex.execute(t)).collect();
+                assert_eq!(got, want, "batch {n}, {dp:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_batch_handles_residual_state_per_image() {
+        // res-push/add state must stay per-image in the op-major loop
+        let mut net = net_with_conv(ConvKind::Pw, 1, 1, 1, 1);
+        let conv = net.ops[1].clone();
+        net.ops.insert(1, Op::ResPush {});
+        net.ops.insert(2, conv);
+        net.ops.insert(4, Op::ResAdd { bits: 4 });
+        let ex = Executor::new(&net, Datapath::Arithmetic);
+        let images: Vec<Tensor> = (0..5)
+            .map(|s| {
+                let mut img = Tensor::zeros(4, 4, 1);
+                img.set(0, 0, 0, s as i32 + 3);
+                img
+            })
+            .collect();
+        let got = ex.run_batch(&images);
+        for (i, img) in images.iter().enumerate() {
+            assert_eq!(got[i], ex.execute(img), "image {i}");
+        }
     }
 
     #[test]

@@ -170,6 +170,94 @@ impl Network {
         self.ops.iter().filter(|op| matches!(op, Op::Conv { .. }))
     }
 
+    /// Total operations per inference (2 x MACs, the roofline convention)
+    /// derived from the deployed shapes — the GOPS denominator the
+    /// serving metrics use for whatever network is actually served.
+    pub fn ops_per_image(&self) -> u64 {
+        let mut hw = self.meta.image_size;
+        let mut total: u64 = 0;
+        for op in &self.ops {
+            match op {
+                Op::Conv { cout, k, stride, pad, w_codes, .. } => {
+                    let out = (hw + 2 * pad - k) / stride + 1;
+                    total += 2 * (out * out * cout) as u64 * w_codes[0].len() as u64;
+                    hw = out;
+                }
+                Op::Dense { cin, cout, .. } => total += 2 * (cin * cout) as u64,
+                _ => {}
+            }
+        }
+        total
+    }
+
+    /// Build a synthetic deployed network from a shape spec: real layer
+    /// geometry, seeded random weights and ascending thresholds. Benches
+    /// and tests use this when the Python-trained artifacts are absent
+    /// (EXPERIMENTS.md "Test triage"), so the executor, pipeline and
+    /// coordinator can be exercised on trained-network shapes offline.
+    /// The spec's final layer (the 1x1 classifier over the pooled map)
+    /// becomes the dense head.
+    pub fn synthetic(spec: &crate::graph::arch::ArchSpec, seed: u64) -> Self {
+        use crate::util::prop::Rng;
+        let mut rng = Rng::new(seed);
+        let (head, convs) = spec.layers.split_last().expect("spec has layers");
+        let mut ops = vec![Op::Input { bits: 4, scale: 1.0 / 15.0 }];
+        for l in convs {
+            let cols = if l.kind == ConvKind::Dw { l.k * l.k } else { l.k * l.k * l.cin };
+            let (wlo, whi) = crate::quant::weight_qrange(l.w_bits);
+            let thresholds: Vec<Vec<i32>> = (0..l.cout)
+                .map(|_| {
+                    let base = rng.range_i32(-20, 20);
+                    let step = rng.range_i32(1, 5);
+                    (0..15).map(|i| base + i * step).collect()
+                })
+                .collect();
+            ops.push(Op::Conv {
+                name: l.name.clone(),
+                kind: l.kind,
+                cin: l.cin,
+                cout: l.cout,
+                k: l.k,
+                stride: l.stride,
+                pad: (l.k - 1) / 2,
+                w_bits: l.w_bits,
+                in_bits: l.a_bits,
+                out_bits: 4,
+                w_codes: (0..l.cout).map(|_| rng.vec_i32(cols, wlo, whi)).collect(),
+                thresholds,
+                signs: (0..l.cout).map(|_| if rng.below(8) == 0 { -1 } else { 1 }).collect(),
+                consts: vec![0; l.cout],
+                out_scale: 0.1,
+            });
+        }
+        ops.push(Op::PoolSum {});
+        ops.push(Op::Dense {
+            name: head.name.clone(),
+            cin: head.cin,
+            cout: head.cout,
+            w_bits: head.w_bits,
+            w_codes: (0..head.cin).map(|_| rng.vec_i32(head.cout, -128, 127)).collect(),
+            scale: (0..head.cout).map(|_| rng.range_f64(0.001, 0.02) as f32).collect(),
+            bias: (0..head.cout).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect(),
+        });
+        let net = Network {
+            meta: Meta {
+                image_size: spec.input_hw,
+                in_ch: spec.input_ch,
+                num_classes: head.cout,
+                in_scale: 1.0 / 15.0,
+                w_bits: 4,
+                a_bits: 4,
+                acc_int: 0.0,
+                n_test: 0,
+                golden_logits: vec![],
+            },
+            ops,
+        };
+        debug_assert!(net.validate().is_ok(), "synthetic network invalid");
+        net
+    }
+
     /// Structural validation: shapes, code ranges, threshold consistency.
     pub fn validate(&self) -> Result<(), String> {
         for op in &self.ops {
@@ -319,6 +407,33 @@ mod tests {
         } else {
             panic!("expected dense");
         }
+    }
+
+    #[test]
+    fn ops_per_image_from_shapes() {
+        // tiny_net: pw conv 2->2 on a 2x2 input (4 px, 2 weights/output)
+        // = 2*4*2*2 = 32 ops; dense 2x2 = 8 ops
+        assert_eq!(tiny_net().ops_per_image(), 40);
+    }
+
+    #[test]
+    fn synthetic_network_is_valid_and_deterministic() {
+        let spec = crate::graph::arch::mobilenet_v2_small();
+        let a = Network::synthetic(&spec, 7);
+        let b = Network::synthetic(&spec, 7);
+        assert!(a.validate().is_ok());
+        assert_eq!(a.ops.len(), b.ops.len());
+        assert_eq!(a.meta.image_size, 16);
+        assert_eq!(a.meta.num_classes, 10);
+        // same seed -> identical weights; shapes track the spec
+        if let (Op::Conv { w_codes: wa, .. }, Op::Conv { w_codes: wb, .. }) =
+            (&a.ops[1], &b.ops[1])
+        {
+            assert_eq!(wa, wb);
+        } else {
+            panic!("expected conv after input");
+        }
+        assert_eq!(a.convs().count(), spec.layers.len() - 1);
     }
 
     #[test]

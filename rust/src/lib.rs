@@ -19,7 +19,15 @@
 //!   executes the AOT artifacts ([`runtime`]), and the async serving
 //!   coordinator ([`coordinator`]).
 //!
-//! See `DESIGN.md` for the system inventory and the experiment index
+//! The inference path is batch-major end to end: the coordinator's
+//! dynamic batcher dispatches whole batches to persistent per-worker
+//! backends, which execute them through
+//! [`graph::executor::Executor::run_batch`] (layer-major loops, scoped
+//! threads) or stream them overlapped through the dataflow pipeline —
+//! batching buys arithmetic throughput, not just queueing fairness.
+//!
+//! See the repo-root `README.md` for build/run instructions, `DESIGN.md`
+//! for the system inventory (S1-S16) and the experiment index
 //! (Table 1/2, Figures 1/2/5/6), and `EXPERIMENTS.md` for measured
 //! results vs the paper.
 

@@ -139,24 +139,34 @@ fn verify(artifacts: &Artifacts, n: usize, lut_fabric: bool) -> Result<()> {
     );
 
     // PJRT golden model cross-check (batch 1 artifact)
-    let rt = Runtime::load(
+    match Runtime::load(
         artifacts.model_hlo(1),
         1,
         net.meta.image_size,
         net.meta.image_size,
         net.meta.in_ch,
         net.meta.num_classes,
-    )?;
-    let mut mismatches = 0;
-    let check = n.min(16);
-    for i in 0..check {
-        let golden = rt.run(&images[i])?;
-        if golden[0] != report.logits[i] {
-            mismatches += 1;
+    ) {
+        Ok(rt) => {
+            let mut mismatches = 0;
+            let check = n.min(16);
+            for i in 0..check {
+                let golden = rt.run(&images[i])?;
+                if golden[0] != report.logits[i] {
+                    mismatches += 1;
+                }
+            }
+            println!("PJRT golden cross-check: {}/{check} bit-exact", check - mismatches);
+            anyhow::ensure!(mismatches == 0, "simulator diverged from the golden model");
         }
+        // stub runtime (no `xla` feature): the simulator/executor checks
+        // below still run, only the HLO leg is skipped
+        #[cfg(not(feature = "xla"))]
+        Err(e) => println!("PJRT golden cross-check skipped ({e})"),
+        // real PJRT bindings present: a load failure is a broken artifact
+        #[cfg(feature = "xla")]
+        Err(e) => return Err(e),
     }
-    println!("PJRT golden cross-check: {}/{check} bit-exact", check - mismatches);
-    anyhow::ensure!(mismatches == 0, "simulator diverged from the golden model");
 
     if lut_fabric {
         use lutmul::graph::executor::{Datapath, Executor, Tensor};

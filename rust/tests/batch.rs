@@ -1,0 +1,212 @@
+//! Batch-major execution tests (no artifacts needed — synthetic networks
+//! on trained shapes, see EXPERIMENTS.md "Test triage"):
+//!
+//!  * `Executor::run_batch` must be bit-exact against N independent
+//!    `execute` calls on both executor datapaths and against the dataflow
+//!    pipeline simulator — the three serving backends;
+//!  * a full `max_batch` dispatch through the coordinator must return
+//!    per-request results in submission order.
+
+use std::sync::Arc;
+
+use lutmul::coordinator::{run_batch, Backend, Coordinator, ServeConfig};
+use lutmul::graph::executor::{Datapath, Executor, Tensor};
+use lutmul::graph::mobilenet_v2_small;
+use lutmul::graph::network::{ConvKind, Meta, Network, Op};
+use lutmul::util::prop::{self, Rng};
+
+fn small_net() -> Network {
+    Network::synthetic(&mobilenet_v2_small(), 0x17)
+}
+
+fn random_images(rng: &mut Rng, n: usize, size: usize, ch: usize) -> Vec<Vec<i32>> {
+    (0..n).map(|_| rng.vec_i32(size * size * ch, 0, 15)).collect()
+}
+
+fn tensors(net: &Network, images: &[Vec<i32>]) -> Vec<Tensor> {
+    let s = net.meta.image_size;
+    let c = net.meta.in_ch;
+    images.iter().map(|i| Tensor::from_hwc(s, s, c, i.clone())).collect()
+}
+
+/// Small random network with a residual block (the synthetic MobileNet
+/// spec carries no residuals, so batch-state handling is covered here).
+fn random_res_net(rng: &mut Rng) -> Network {
+    let thr = |rng: &mut Rng, cout: usize| -> Vec<Vec<i32>> {
+        (0..cout)
+            .map(|_| {
+                let base = rng.range_i32(-20, 20);
+                let step = rng.range_i32(1, 5);
+                (0..15).map(|i| base + i * step).collect()
+            })
+            .collect()
+    };
+    #[allow(clippy::too_many_arguments)]
+    let conv = |rng: &mut Rng,
+                name: &str,
+                kind: ConvKind,
+                cin: usize,
+                cout: usize,
+                k: usize,
+                stride: usize| {
+        let cols = if kind == ConvKind::Dw { k * k } else { k * k * cin };
+        Op::Conv {
+            name: name.into(),
+            kind,
+            cin,
+            cout,
+            k,
+            stride,
+            pad: (k - 1) / 2,
+            w_bits: 4,
+            in_bits: 4,
+            out_bits: 4,
+            w_codes: (0..cout).map(|_| rng.vec_i32(cols, -8, 7)).collect(),
+            thresholds: thr(rng, cout),
+            signs: vec![1; cout],
+            consts: vec![0; cout],
+            out_scale: 0.1,
+        }
+    };
+    let mut ops = vec![Op::Input { bits: 4, scale: 1.0 / 15.0 }];
+    ops.push(conv(rng, "c0", ConvKind::Std, 3, 6, 3, 1));
+    ops.push(Op::ResPush {});
+    ops.push(conv(rng, "c1", ConvKind::Pw, 6, 8, 1, 1));
+    ops.push(conv(rng, "c2", ConvKind::Dw, 8, 8, 3, 1));
+    ops.push(conv(rng, "c3", ConvKind::Pw, 8, 6, 1, 1));
+    ops.push(Op::ResAdd { bits: 4 });
+    ops.push(Op::PoolSum {});
+    ops.push(Op::Dense {
+        name: "fc".into(),
+        cin: 6,
+        cout: 3,
+        w_bits: 8,
+        w_codes: (0..6).map(|_| rng.vec_i32(3, -128, 127)).collect(),
+        scale: vec![0.01; 3],
+        bias: vec![0.5, -0.5, 0.0],
+    });
+    Network {
+        meta: Meta {
+            image_size: 8,
+            in_ch: 3,
+            num_classes: 3,
+            in_scale: 1.0 / 15.0,
+            w_bits: 4,
+            a_bits: 4,
+            acc_int: 0.0,
+            n_test: 0,
+            golden_logits: vec![],
+        },
+        ops,
+    }
+}
+
+#[test]
+fn prop_run_batch_bit_exact_vs_sequential_both_datapaths() {
+    prop::cases(8, |rng| {
+        let net = random_res_net(rng);
+        let n = 1 + rng.below(6) as usize;
+        let imgs = tensors(&net, &random_images(rng, n, 8, 3));
+        for dp in [Datapath::Arithmetic, Datapath::LutFabric] {
+            let ex = Executor::new(&net, dp);
+            let batch = ex.run_batch(&imgs);
+            let seq: Vec<Vec<f32>> = imgs.iter().map(|t| ex.execute(t)).collect();
+            assert_eq!(batch, seq, "{dp:?} batch {n}");
+        }
+    });
+}
+
+#[test]
+fn run_batch_bit_exact_on_mobilenet_shape() {
+    // trained-network shape; odd batch size exercises uneven thread chunks
+    let net = small_net();
+    let mut rng = Rng::new(42);
+    let imgs = tensors(&net, &random_images(&mut rng, 9, 16, 3));
+    let ex = Executor::new(&net, Datapath::Arithmetic);
+    let batch = ex.run_batch(&imgs);
+    assert_eq!(batch.len(), 9);
+    for (i, t) in imgs.iter().enumerate() {
+        assert_eq!(batch[i], ex.execute(t), "image {i}");
+    }
+}
+
+#[test]
+fn run_batch_edge_sizes() {
+    let net = small_net();
+    let mut rng = Rng::new(7);
+    let imgs = tensors(&net, &random_images(&mut rng, 2, 16, 3));
+    let ex = Executor::new(&net, Datapath::Arithmetic);
+    assert!(ex.run_batch(&[]).is_empty());
+    assert_eq!(ex.run_batch(&imgs[..1]), vec![ex.execute(&imgs[0])]);
+}
+
+#[test]
+fn all_three_backends_agree_on_batches() {
+    // the server-level batch API: Reference, LutFabric and the
+    // batch-pipelined Simulator must produce identical logits
+    let net = small_net();
+    let mut rng = Rng::new(3);
+    let images = random_images(&mut rng, 4, 16, 3);
+    let a = run_batch(&net, Backend::Reference, &images);
+    let b = run_batch(&net, Backend::LutFabric, &images);
+    let c = run_batch(&net, Backend::Simulator, &images);
+    assert_eq!(a, b, "Reference vs LutFabric");
+    assert_eq!(a, c, "Reference vs Simulator");
+}
+
+#[test]
+fn coordinator_full_batch_returns_submission_order() {
+    // one worker, one full max_batch dispatch: every ticket must resolve
+    // to the logits of the image submitted with it, in submission order
+    let net = Arc::new(small_net());
+    let mut rng = Rng::new(11);
+    let images = random_images(&mut rng, 8, 16, 3);
+    let coord = Coordinator::start(
+        net.clone(),
+        ServeConfig {
+            backend: Backend::Reference,
+            workers: 1,
+            max_batch: 8,
+            max_wait: std::time::Duration::from_millis(50),
+            ..Default::default()
+        },
+    );
+    let tickets: Vec<_> =
+        images.iter().map(|img| coord.submit(img.clone()).expect("queue accepts")).collect();
+    let ex = Executor::new(&net, Datapath::Arithmetic);
+    let want = tensors(&net, &images);
+    for (i, t) in tickets.into_iter().enumerate() {
+        let r = t.wait().unwrap();
+        assert_eq!(r.logits, ex.execute(&want[i]), "request {i} out of order");
+    }
+    let m = coord.metrics();
+    assert_eq!(m.completed, 8);
+    assert!(m.batches >= 1 && m.batches <= 8, "batches {}", m.batches);
+    assert!(m.mean_batch >= 1.0);
+    coord.shutdown();
+}
+
+#[test]
+fn coordinator_batches_on_simulator_backend() {
+    // the batch-pipelined simulator serves correct results under batching
+    let net = Arc::new(small_net());
+    let mut rng = Rng::new(5);
+    let images = random_images(&mut rng, 6, 16, 3);
+    let coord = Coordinator::start(
+        net.clone(),
+        ServeConfig {
+            backend: Backend::Simulator,
+            workers: 1,
+            max_batch: 4,
+            max_wait: std::time::Duration::from_millis(20),
+            ..Default::default()
+        },
+    );
+    let tickets: Vec<_> = images.iter().map(|img| coord.submit(img.clone()).unwrap()).collect();
+    let ex = Executor::new(&net, Datapath::Arithmetic);
+    let want = tensors(&net, &images);
+    for (i, t) in tickets.into_iter().enumerate() {
+        assert_eq!(t.wait().unwrap().logits, ex.execute(&want[i]), "request {i}");
+    }
+    coord.shutdown();
+}

@@ -3,6 +3,10 @@
 //! the exported golden logits and every Rust execution backend.
 //!
 //! These tests require `make artifacts`; they skip gracefully otherwise.
+//! The whole file is compiled only with the `xla` feature — without the
+//! real PJRT bindings `Runtime::load` is a stub that always errors, so
+//! these would fail spuriously (EXPERIMENTS.md "Test triage").
+#![cfg(feature = "xla")]
 
 use lutmul::coordinator::argmax;
 use lutmul::dataflow::{FoldConfig, Pipeline};
@@ -89,6 +93,29 @@ fn pjrt_batch8_artifact_consistent() {
     for i in 0..8 {
         let single = rt1.run(&images[i]).unwrap();
         assert_eq!(batch[i], single[0], "batching must not change results");
+    }
+}
+
+#[test]
+fn pjrt_run_batched_chunks_pads_and_truncates() {
+    // run_batched over a count that is not a multiple of the artifact's
+    // batch geometry: chunking, zero-padding and truncation must be
+    // invisible — per-image logits equal the batch-1 artifact's.
+    let Some((net, images, _, a)) = setup() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    if !a.model_hlo(8).exists() {
+        eprintln!("skipping: batch-8 artifact missing");
+        return;
+    }
+    let rt8 = Runtime::load(a.model_hlo(8), 8, 16, 16, 3, net.meta.num_classes).unwrap();
+    let rt1 = Runtime::load(a.model_hlo(1), 1, 16, 16, 3, net.meta.num_classes).unwrap();
+    let n = 11;
+    let batched = rt8.run_batched(&images[..n]).unwrap();
+    assert_eq!(batched.len(), n);
+    for i in 0..n {
+        assert_eq!(batched[i], rt1.run(&images[i]).unwrap()[0], "image {i}");
     }
 }
 
