@@ -4,7 +4,7 @@
 
 PYTHON ?= python3
 
-.PHONY: artifacts artifacts-fig2 test-python test-rust
+.PHONY: artifacts artifacts-fig2 test-python test-rust bench-smoke lint
 
 artifacts:
 	mkdir -p artifacts
@@ -20,3 +20,12 @@ test-python:
 
 test-rust:
 	cd rust && cargo test -q
+
+# One-iteration batch/plan bench (EXPERIMENTS.md E9/E10): prints the
+# acceptance lines (batch scaling >= 2x, plan compilation >= 3x on
+# LutFabric) without the full sweep.
+bench-smoke:
+	cd rust && cargo bench --bench bench_batch -- --smoke
+
+lint:
+	cd rust && cargo fmt --check && cargo clippy -- -D warnings

@@ -1,67 +1,118 @@
-//! Bench — batch-major serving throughput (EXPERIMENTS.md E9): images/s
-//! vs batch size for the batch-major execution path on each serving
-//! backend. No artifacts needed: runs on a synthetic network with the
-//! trained `mobilenet_v2_small` shape.
+//! Bench — batch-major serving throughput + plan compilation
+//! (EXPERIMENTS.md E9/E10): images/s vs batch size for the batch-major
+//! execution path on each serving backend, and the per-image speedup of
+//! compiled layer plans (DESIGN.md S17) over direct multiplier readout
+//! on both datapaths (the Arithmetic pair shares its multipliers either
+//! way and serves as the ~1x noise control; the LutFabric pair isolates
+//! the product-table memoization win over per-MAC LUT6_2 readout). No
+//! artifacts needed: runs on a synthetic network with the trained
+//! `mobilenet_v2_small` shape.
 //!
-//! The acceptance line is printed at the end: `run_batch` at batch 8 must
-//! deliver >= 2x the images/s of batch 1 on the `Reference` backend.
+//! Acceptance lines printed at the end (the process exits nonzero on
+//! FAIL, so CI can gate on the bench):
+//!  * `run_batch` at batch 8 must deliver >= 2x the images/s of batch 1
+//!    on the `Reference` backend (informational under `--smoke`, where
+//!    runner core counts vary);
+//!  * compiled plans must deliver >= 3x the per-image throughput of the
+//!    per-MAC LUT6_2 readout on the `LutFabric` datapath.
 //!
-//! Run: `cargo bench --bench bench_batch`
+//! Run: `cargo bench --bench bench_batch` (`-- --smoke` for a one-shot
+//! CI-sized run, also reachable as `make bench-smoke`).
 
 use lutmul::dataflow::{FoldConfig, Pipeline};
 use lutmul::graph::executor::{Datapath, Executor, Tensor};
 use lutmul::graph::mobilenet_v2_small;
 use lutmul::graph::network::Network;
-use lutmul::util::bench::{bench, per_second};
+use lutmul::graph::plan::NetworkPlan;
+use lutmul::util::bench::{bench, per_second, BenchResult};
 use lutmul::util::prop::Rng;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let net = Network::synthetic(&mobilenet_v2_small(), 0xBA7C4);
-    let size = net.meta.image_size;
-    let ch = net.meta.in_ch;
+    let io = net.io();
+    let (size, ch) = (io.image_size, io.in_ch);
     let mut rng = Rng::new(1);
     let images: Vec<Tensor> = (0..32)
         .map(|_| Tensor::from_hwc(size, size, ch, rng.vec_i32(size * size * ch, 0, 15)))
         .collect();
     let flat: Vec<Vec<i32>> = images.iter().map(|t| t.data.clone()).collect();
     println!(
-        "synthetic {} ({}x{}x{}), {} cores",
+        "synthetic {} ({}x{}x{}), {} cores{}",
         "mobilenet_v2_small",
         size,
         size,
         ch,
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        if smoke { " [smoke: 1 iter]" } else { "" }
     );
 
     // --- Reference backend: images/s vs batch size ---------------------
     println!("\nReference backend (persistent executor, run_batch):");
     let ex = Executor::new(&net, Datapath::Arithmetic);
     let mut ips_at = std::collections::BTreeMap::new();
-    for b in [1usize, 2, 4, 8, 16, 32] {
+    let batch_sizes: &[usize] = if smoke { &[1, 8] } else { &[1, 2, 4, 8, 16, 32] };
+    for &b in batch_sizes {
         let batch = &images[..b];
-        let iters = (128 / b).clamp(8, 64);
+        let iters = if smoke { 1 } else { (128 / b).clamp(8, 64) };
         let r = bench(&format!("run_batch: batch={b:<2}"), iters, || ex.run_batch(batch).len());
         let ips = per_second(b, &r);
         ips_at.insert(b, ips);
         println!("    -> {ips:.0} img/s ({:.2}x vs batch=1)", ips / ips_at[&1]);
     }
 
-    // --- LutFabric backend (hardware-true datapath) ---------------------
-    println!("\nLutFabric backend (every 4-bit mult via LUT6_2 readout):");
-    let exf = Executor::new(&net, Datapath::LutFabric);
+    // --- plan compilation: per-image speedup on both datapaths ----------
+    // "before" = NetworkPlan::compile_direct: on LutFabric, per-MAC
+    // LUT6_2 readout (the pre-memoization datapath); on Arithmetic the
+    // direct and compiled plans share the same multipliers, so that row
+    // is a CONTROL — it should read ~1.0x, and isolates the memoization
+    // win on the LutFabric row from run-to-run noise.
+    println!("\nPlan compilation (direct multiplier readout -> compiled plans), single image:");
+    let iters = if smoke { 1 } else { 16 };
+    let single = &images[..1];
+    fn per_image(label: &str, iters: usize, single: &[Tensor], e: &Executor) -> BenchResult {
+        bench(label, iters, || e.run_batch(single).len())
+    }
+    let arith_direct = Executor::from_plan(NetworkPlan::compile_direct(&net, Datapath::Arithmetic));
+    let ra0 = per_image("Arithmetic control (direct plan)   ", iters, single, &arith_direct);
+    let ra1 = per_image("Arithmetic control (compiled plan) ", iters, single, &ex);
+    let lut_direct = Executor::from_plan(NetworkPlan::compile_direct(&net, Datapath::LutFabric));
+    let lut = Executor::new(&net, Datapath::LutFabric);
+    let rl0 = per_image("LutFabric  before (per-MAC readout)", iters, single, &lut_direct);
+    let rl1 = per_image("LutFabric  after  (product tables) ", iters, single, &lut);
+    let arith_speedup = ra0.median.as_secs_f64() / ra1.median.as_secs_f64();
+    let lut_speedup = rl0.median.as_secs_f64() / rl1.median.as_secs_f64();
+    println!(
+        "    Arithmetic: {:.0} -> {:.0} img/s ({arith_speedup:.2}x, control: same multipliers, expect ~1x)",
+        per_second(1, &ra0),
+        per_second(1, &ra1)
+    );
+    println!(
+        "    LutFabric:  {:.0} -> {:.0} img/s ({lut_speedup:.2}x)",
+        per_second(1, &rl0),
+        per_second(1, &rl1)
+    );
+
+    // --- LutFabric backend batch scaling --------------------------------
+    println!("\nLutFabric backend (compiled product tables, run_batch):");
     let mut lut_ips = std::collections::BTreeMap::new();
     for b in [1usize, 8] {
         let batch = &images[..b];
-        let r = bench(&format!("run_batch: batch={b:<2}"), 4, || exf.run_batch(batch).len());
+        let r = bench(
+            &format!("run_batch: batch={b:<2}"),
+            if smoke { 1 } else { 4 },
+            || lut.run_batch(batch).len(),
+        );
         lut_ips.insert(b, per_second(b, &r));
         println!("    -> {:.0} img/s", lut_ips[&b]);
     }
 
     // --- Simulator backend: batch pipelining in simulated cycles --------
     println!("\nSimulator backend (cycle-level, batch-pipelined):");
-    let folds = FoldConfig::fully_parallel(net.convs().count());
-    let cold = Pipeline::build(&net, &folds, 16).run(&flat[..1]);
-    let warm = Pipeline::build(&net, &folds, 16).run(&flat[..8]);
+    let plan = ex.plan();
+    let folds = FoldConfig::fully_parallel(plan.n_convs());
+    let cold = Pipeline::from_plan(plan, &folds, 16).run(&flat[..1]);
+    let warm = Pipeline::from_plan(plan, &folds, 16).run(&flat[..8]);
     println!(
         "    cold single image: {} cycles | batch of 8: {} cycles total, marginal image {} cycles",
         cold.cycles,
@@ -73,13 +124,24 @@ fn main() {
         8.0 * cold.cycles as f64 / warm.cycles as f64
     );
 
-    // --- acceptance line -------------------------------------------------
+    // --- acceptance lines (the process exits nonzero on FAIL so the CI
+    // smoke step actually gates; the core-count-dependent batch-scaling
+    // target is informational under --smoke, where CI runner core counts
+    // vary) --------------------------------------------------------------
     let speedup = ips_at[&8] / ips_at[&1];
+    let batch_ok = speedup >= 2.0;
     println!(
-        "\nbatch=8 vs batch=1 on Reference: {:.2}x images/s (target >= 2x): {}",
-        speedup,
-        if speedup >= 2.0 { "PASS" } else { "FAIL" }
+        "\nbatch=8 vs batch=1 on Reference: {speedup:.2}x images/s (target >= 2x): {}",
+        if batch_ok { "PASS" } else if smoke { "FAIL (informational under --smoke)" } else { "FAIL" }
     );
-    let lut_speedup = lut_ips[&8] / lut_ips[&1];
-    println!("batch=8 vs batch=1 on LutFabric: {lut_speedup:.2}x images/s");
+    let plan_ok = lut_speedup >= 3.0;
+    println!(
+        "plan compilation on LutFabric: {lut_speedup:.2}x per-image (target >= 3x): {}",
+        if plan_ok { "PASS" } else { "FAIL" }
+    );
+    let lut_batch = lut_ips[&8] / lut_ips[&1];
+    println!("batch=8 vs batch=1 on LutFabric: {lut_batch:.2}x images/s");
+    if !plan_ok || (!batch_ok && !smoke) {
+        std::process::exit(1);
+    }
 }

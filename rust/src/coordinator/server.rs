@@ -35,6 +35,7 @@ use std::time::{Duration, Instant};
 use crate::dataflow::{FoldConfig, Pipeline};
 use crate::graph::executor::{Datapath, Executor, Tensor};
 use crate::graph::network::Network;
+use crate::graph::plan::NetworkPlan;
 
 use super::metrics::{Metrics, MetricsSummary};
 
@@ -130,8 +131,9 @@ impl Coordinator {
                     .name(format!("lutmul-worker-{wi}"))
                     .spawn(move || {
                         // per-worker persistent backend state, built once:
-                        // the executor's prepped weights / LUT-INIT decode
-                        // and the pipeline are reused across every batch
+                        // the compiled layer plans (flattened weights,
+                        // memoized LUT product tables) and the pipeline
+                        // are reused across every batch
                         let mut worker = WorkerBackend::new(&net, backend, n_workers);
                         while let Ok(batch) = wrx.recv() {
                             // move images out of the requests (no copies on
@@ -256,38 +258,40 @@ impl Coordinator {
     }
 }
 
-/// Per-worker backend state. Executors borrow the worker's own
-/// `Arc<Network>` and persist across batches, so per-layer weight
-/// flattening and LUT-INIT decode happen once per worker, not per batch.
-enum WorkerBackend<'n> {
+/// Per-worker backend state, persistent across batches: the network is
+/// compiled once per worker into owned plans (flattened weights,
+/// memoized LUT product tables), not once per batch.
+enum WorkerBackend {
     Pipeline(Box<Pipeline>),
-    Exec { ex: Executor<'n>, size: usize, ch: usize, threads: usize },
+    Exec { ex: Executor, size: usize, ch: usize, threads: usize },
 }
 
-impl<'n> WorkerBackend<'n> {
+impl WorkerBackend {
     /// `pool_size` is the number of concurrent workers sharing the
     /// machine: each backend gets an equal share of the cores so the pool
     /// never oversubscribes the CPU.
-    fn new(net: &'n Network, backend: Backend, pool_size: usize) -> Self {
-        let size = net.meta.image_size;
-        let ch = net.meta.in_ch;
+    fn new(net: &Network, backend: Backend, pool_size: usize) -> Self {
         let cores =
             std::thread::available_parallelism().map(std::num::NonZeroUsize::get).unwrap_or(1);
         let threads = (cores / pool_size.max(1)).max(1);
         match backend {
             Backend::Simulator => {
-                let folds = FoldConfig::fully_parallel(net.convs().count());
-                WorkerBackend::Pipeline(Box::new(Pipeline::build(net, &folds, 16)))
+                // compile once; the pipeline consumes the plan's geometry
+                let plan = NetworkPlan::compile(net, Datapath::Arithmetic);
+                let folds = FoldConfig::fully_parallel(plan.n_convs());
+                WorkerBackend::Pipeline(Box::new(Pipeline::from_plan(&plan, &folds, 16)))
             }
-            Backend::Reference => {
-                let ex = Executor::new(net, Datapath::Arithmetic);
-                WorkerBackend::Exec { ex, size, ch, threads }
-            }
-            Backend::LutFabric => {
-                let ex = Executor::new(net, Datapath::LutFabric);
-                WorkerBackend::Exec { ex, size, ch, threads }
-            }
+            Backend::Reference => Self::exec(net, Datapath::Arithmetic, threads),
+            Backend::LutFabric => Self::exec(net, Datapath::LutFabric, threads),
         }
+    }
+
+    /// Executor-backed worker; image geometry comes from the compiled
+    /// plan rather than `Network::meta` (DESIGN.md S17).
+    fn exec(net: &Network, datapath: Datapath, threads: usize) -> Self {
+        let ex = Executor::new(net, datapath);
+        let io = ex.plan().io;
+        WorkerBackend::Exec { ex, size: io.image_size, ch: io.in_ch, threads }
     }
 
     /// Execute one dispatched batch, batch-major. Takes the images by

@@ -1,9 +1,11 @@
 //! Cycle-level dataflow pipeline simulator (paper section 3.3).
 //!
-//! Builds one hardware stage per network op — convolution stages own a
-//! [`ConvGenerator`](super::convgen::ConvGenerator) plus a (possibly
-//! folded) LUT multiplier array and a multi-threshold unit; residual
-//! bypasses become tee/join stages with their own FIFOs — and simulates
+//! Builds one hardware stage per compiled plan op (DESIGN.md S17) —
+//! convolution stages own a
+//! [`ConvGenerator`](super::convgen::ConvGenerator) plus the layer's
+//! [`ConvPlan`](crate::graph::plan::ConvPlan) (the same record the
+//! reference executor runs); residual bypasses become tee/join stages
+//! with their own FIFOs — and simulates
 //! the whole pipeline at pixel granularity: every stage fires when its
 //! inputs are ready and downstream FIFO space exists, taking `II = fold`
 //! cycles per output. This reproduces both the *functional* behaviour
@@ -17,7 +19,9 @@ use crate::quant::saturating_res_add;
 
 use super::convgen::{ConvGenConfig, ConvGenerator};
 use super::fifo::Fifo;
-use crate::graph::network::{ConvKind, Network, Op};
+use crate::graph::kernels;
+use crate::graph::network::Network;
+use crate::graph::plan::{ConvPlan, Datapath, DensePlan, NetworkPlan, PlanOp};
 
 type Token = Vec<i32>;
 
@@ -43,76 +47,20 @@ impl FoldConfig {
 
 struct ConvStage {
     gen: ConvGenerator,
-    kind: ConvKind,
-    cout: usize,
-    cin: usize,
-    /// row-major `[cout][cols]` flattened weights (hot loop is
-    /// indirection-free; see graph::executor::PreppedConv for rationale).
-    wflat: Vec<i32>,
-    cols: usize,
-    /// row-major `[cout][levels]` flattened thresholds + signs/consts.
-    thr_flat: Vec<i32>,
-    levels: usize,
-    signs: Vec<i32>,
-    consts: Vec<i32>,
+    /// The compiled layer plan — the same record the reference executor
+    /// runs (`kernels::patch_out` is the stage body), so the simulator
+    /// consumes plan weights/thresholds/geometry instead of re-deriving
+    /// them from `Network`.
+    plan: ConvPlan,
     fold: usize,
     pending: VecDeque<Token>,
     busy_until: u64,
-    name: String,
-}
-
-impl ConvStage {
-    /// Branchless multi-threshold (bit-identical to `MultiThreshold::apply`).
-    #[inline]
-    fn threshold(&self, acc: i32, ch: usize) -> i32 {
-        let ts = &self.thr_flat[ch * self.levels..(ch + 1) * self.levels];
-        match self.signs[ch] {
-            s if s > 0 => ts.iter().map(|&t| (acc >= t) as i32).sum(),
-            s if s < 0 => ts.iter().map(|&t| (acc <= t) as i32).sum(),
-            _ => self.consts[ch],
-        }
-    }
-
-    fn compute(&self, patch: &[i32]) -> Token {
-        let mut out = vec![0i32; self.cout];
-        match self.kind {
-            ConvKind::Dw => {
-                // patch layout (tap, channel); filter per channel
-                let k2 = self.cols;
-                for (c, o) in out.iter_mut().enumerate() {
-                    let row = &self.wflat[c * k2..(c + 1) * k2];
-                    let mut acc = 0i32;
-                    for (tap, w) in row.iter().enumerate() {
-                        acc += w * patch[tap * self.cin + c];
-                    }
-                    *o = self.threshold(acc, c);
-                }
-            }
-            _ => {
-                for (co, o) in out.iter_mut().enumerate() {
-                    let row = &self.wflat[co * self.cols..(co + 1) * self.cols];
-                    let mut acc = 0i32;
-                    for (w, a) in row.iter().zip(patch.iter()) {
-                        acc += w * a;
-                    }
-                    *o = self.threshold(acc, co);
-                }
-            }
-        }
-        out
-    }
 }
 
 struct PoolStage {
     pixels_per_image: usize,
     acc: Vec<i32>,
     seen: usize,
-}
-
-struct DenseStage {
-    w_codes: Vec<Vec<i32>>, // [CIN][COUT]
-    scale: Vec<f32>,
-    bias: Vec<f32>,
 }
 
 enum StageKind {
@@ -122,7 +70,7 @@ enum StageKind {
     /// Residual join: saturating add of main + bypass tokens.
     ResAdd { bits: u32 },
     Pool(PoolStage),
-    Dense(DenseStage),
+    Dense(DensePlan),
 }
 
 struct Stage {
@@ -203,56 +151,55 @@ pub struct Pipeline {
 }
 
 impl Pipeline {
-    /// Compile a streamlined network into a dataflow pipeline.
+    /// Compile a streamlined network into a dataflow pipeline
+    /// (convenience: lowers an arithmetic [`NetworkPlan`] first).
     ///
     /// `fifo_depth` sizes inter-stage FIFOs (pixels); `folds` sets each
     /// conv stage's initiation interval.
     pub fn build(net: &Network, folds: &FoldConfig, fifo_depth: usize) -> Self {
+        Self::from_plan(&NetworkPlan::compile(net, Datapath::Arithmetic), folds, fifo_depth)
+    }
+
+    /// Build the pipeline from an already-compiled plan: stages consume
+    /// the plan's geometry (conv shapes, tee/pool pixel counts, I/O
+    /// geometry) and weights/thresholds directly instead of re-deriving
+    /// them from `Network` (DESIGN.md S17).
+    pub fn from_plan(plan: &NetworkPlan, folds: &FoldConfig, fifo_depth: usize) -> Self {
         let mut stages: Vec<Stage> = Vec::new();
         let mut fifos: Vec<Fifo<Token>> = vec![Fifo::new(fifo_depth)];
         let input_fifo = 0usize;
         let mut cur = input_fifo;
-        let mut hw = net.meta.image_size;
-        let mut res_stack: Vec<(usize, usize)> = Vec::new(); // (fifo, hw)
+        let mut res_stack: Vec<usize> = Vec::new(); // bypass fifo ids
         let mut conv_idx = 0usize;
         let mut steady: u64 = 1;
 
-        for op in &net.ops {
+        for op in &plan.ops {
             match op {
-                Op::Input { .. } => {}
-                Op::Conv { name, kind, cin, cout, k, stride, pad, w_codes, .. } => {
+                PlanOp::Input => {}
+                PlanOp::Conv(cp) => {
+                    let g = cp.geom;
                     let cfg = ConvGenConfig {
-                        in_h: hw,
-                        in_w: hw,
-                        cin: *cin,
-                        k: *k,
-                        stride: *stride,
-                        pad: *pad,
+                        in_h: g.in_h,
+                        in_w: g.in_w,
+                        cin: g.cin,
+                        k: g.k,
+                        stride: g.stride,
+                        pad: g.pad,
                     };
                     let fold = folds.folds.get(conv_idx).copied().unwrap_or(1).max(1);
                     conv_idx += 1;
-                    let mt = Network::threshold_unit(op).expect("conv has thresholds");
-                    let levels = mt.levels();
                     let out_fifo = fifos.len();
                     fifos.push(Fifo::new(fifo_depth));
-                    let out_px = cfg.out_h() as u64 * cfg.out_w() as u64;
-                    steady = steady.max(out_px * fold as u64).max((hw * hw) as u64);
+                    steady = steady
+                        .max(g.out_pixels() as u64 * fold as u64)
+                        .max(g.in_pixels() as u64);
                     stages.push(Stage {
                         kind: StageKind::Conv(Box::new(ConvStage {
                             gen: ConvGenerator::new(cfg),
-                            kind: *kind,
-                            cout: *cout,
-                            cin: *cin,
-                            wflat: w_codes.iter().flatten().copied().collect(),
-                            cols: w_codes[0].len(),
-                            thr_flat: mt.thresholds.iter().flatten().copied().collect(),
-                            levels,
-                            signs: mt.signs.clone(),
-                            consts: mt.consts.clone(),
+                            plan: cp.clone(),
                             fold,
                             pending: VecDeque::new(),
                             busy_until: 0,
-                            name: name.clone(),
                         })),
                         inputs: vec![cur],
                         outputs: vec![out_fifo],
@@ -260,16 +207,15 @@ impl Pipeline {
                         stalled_cycles: 0,
                     });
                     cur = out_fifo;
-                    hw = cfg.out_h();
                 }
-                Op::ResPush {} => {
+                PlanOp::ResPush { pixels } => {
                     let main = fifos.len();
                     fifos.push(Fifo::new(fifo_depth));
                     // bypass FIFO sized for a whole block's worth of pixels
                     // plus in-flight slack (two images can overlap at the
                     // tee while the join drains the first)
                     let bypass = fifos.len();
-                    fifos.push(Fifo::new(2 * hw * hw + fifo_depth));
+                    fifos.push(Fifo::new(2 * pixels + fifo_depth));
                     stages.push(Stage {
                         kind: StageKind::Tee,
                         inputs: vec![cur],
@@ -277,11 +223,11 @@ impl Pipeline {
                         fires: 0,
                         stalled_cycles: 0,
                     });
-                    res_stack.push((bypass, hw));
+                    res_stack.push(bypass);
                     cur = main;
                 }
-                Op::ResAdd { bits } => {
-                    let (bypass, _) = res_stack.pop().expect("res_add without res_push");
+                PlanOp::ResAdd { bits } => {
+                    let bypass = res_stack.pop().expect("res_add without res_push");
                     let out = fifos.len();
                     fifos.push(Fifo::new(fifo_depth));
                     stages.push(Stage {
@@ -293,12 +239,12 @@ impl Pipeline {
                     });
                     cur = out;
                 }
-                Op::PoolSum {} => {
+                PlanOp::PoolSum { pixels } => {
                     let out = fifos.len();
                     fifos.push(Fifo::new(fifo_depth));
                     stages.push(Stage {
                         kind: StageKind::Pool(PoolStage {
-                            pixels_per_image: hw * hw,
+                            pixels_per_image: *pixels,
                             acc: Vec::new(),
                             seen: 0,
                         }),
@@ -309,13 +255,9 @@ impl Pipeline {
                     });
                     cur = out;
                 }
-                Op::Dense { w_codes, scale, bias, .. } => {
+                PlanOp::Dense(dp) => {
                     stages.push(Stage {
-                        kind: StageKind::Dense(DenseStage {
-                            w_codes: w_codes.clone(),
-                            scale: scale.clone(),
-                            bias: bias.clone(),
-                        }),
+                        kind: StageKind::Dense(dp.clone()),
                         inputs: vec![cur],
                         outputs: vec![],
                         fires: 0,
@@ -329,8 +271,8 @@ impl Pipeline {
             stages,
             fifos,
             input_fifo,
-            in_pixels: net.meta.image_size * net.meta.image_size,
-            in_ch: net.meta.in_ch,
+            in_pixels: plan.io.image_size * plan.io.image_size,
+            in_ch: plan.io.in_ch,
             steady_cycles: steady,
         }
     }
@@ -389,11 +331,11 @@ impl Pipeline {
                 .iter()
                 .map(|s| StageStat {
                     name: match &s.kind {
-                        StageKind::Conv(c) => c.name.clone(),
+                        StageKind::Conv(c) => c.plan.name.clone(),
                         StageKind::Tee => "tee".into(),
                         StageKind::ResAdd { .. } => "res_add".into(),
                         StageKind::Pool(_) => "pool".into(),
-                        StageKind::Dense(_) => "dense".into(),
+                        StageKind::Dense(d) => d.name.clone(),
                     },
                     fires: s.fires,
                     stalled_cycles: s.stalled_cycles,
@@ -438,7 +380,7 @@ impl Pipeline {
                 if !cs.pending.is_empty() && cycle >= cs.busy_until {
                     if !self.fifos[outputs[0]].is_full() {
                         let patch = cs.pending.pop_front().unwrap();
-                        let out = cs.compute(&patch);
+                        let out = kernels::patch_out(&cs.plan, &patch);
                         let ok = self.fifos[outputs[0]].try_push(out);
                         debug_assert!(ok);
                         cs.busy_until = cycle + cs.fold as u64;
@@ -503,19 +445,9 @@ impl Pipeline {
             }
             StageKind::Dense(ds) => {
                 if let Some(pooled) = self.fifos[inputs[0]].pop() {
-                    let cout = ds.scale.len();
-                    let out: Vec<f32> = (0..cout)
-                        .map(|co| {
-                            let acc: i64 = pooled
-                                .iter()
-                                .enumerate()
-                                .map(|(ci, &a)| a as i64 * ds.w_codes[ci][co] as i64)
-                                .sum();
-                            // FMA to match XLA's fused lowering (see executor.rs)
-                            (acc as f32).mul_add(ds.scale[co], ds.bias[co])
-                        })
-                        .collect();
-                    logits.push(out);
+                    // same dense kernel as the reference executor (FMA to
+                    // match XLA's fused lowering)
+                    logits.push(kernels::dense(ds, &pooled));
                     done_cycles.push(cycle);
                     fired = true;
                 }
@@ -533,8 +465,8 @@ impl Pipeline {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::executor::{Datapath, Executor, Tensor};
-    use crate::graph::network::{Meta, Op};
+    use crate::graph::executor::{Executor, Tensor};
+    use crate::graph::network::{ConvKind, Meta, Op};
 
     /// Build a small random network exercising every op type.
     fn random_net(seed: u64) -> Network {

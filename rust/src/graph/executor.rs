@@ -1,21 +1,31 @@
-//! Reference integer executor — the spec-level interpreter of a
-//! streamlined network (DESIGN.md S5).
+//! Reference integer executor — the spec-level engine of a streamlined
+//! network (DESIGN.md S5/S17).
+//!
+//! `Executor::new` compiles the network ONCE into a
+//! [`NetworkPlan`](super::plan::NetworkPlan) — flattened weights,
+//! im2row tap offsets with an interior/border split, threshold tables,
+//! and (on the `LutFabric` datapath) per-multiplier product tables read
+//! out of the simulated LUT6_2 primitives at build time — then executes
+//! the kernel functions of [`graph::kernels`](super::kernels) over it.
 //!
 //! Two multiply datapaths:
 //!  * `Arithmetic`: plain integer multiply-accumulate (fast; used by the
 //!    serving coordinator).
-//!  * `LutFabric`: every 4-bit multiplication is performed by *reading
-//!    simulated LUT6_2 primitives* built from Figure 5 INIT vectors —
-//!    the hardware-true datapath. 8-bit layers (first/last) fall back to
-//!    arithmetic, mirroring the paper where those layers use DSP packing.
+//!  * `LutFabric`: every 4-bit multiplication comes from simulated
+//!    LUT6_2 primitives built from Figure 5 INIT vectors — memoized at
+//!    plan-build time, bit-identical to reading the fabric per MAC
+//!    (`NetworkPlan::compile_direct` keeps the per-MAC readout as the
+//!    baseline). 8-bit layers (first/last) fall back to arithmetic,
+//!    mirroring the paper where those layers use DSP packing.
 //!
 //! Both paths must agree bit-for-bit with each other and with the JAX
 //! golden model (`python/compile/model.py::forward_int`).
 
-use crate::fabric::lutmul::ConstMultiplier;
-use crate::quant::{saturating_res_add, MultiThreshold};
+use super::kernels;
+use super::network::Network;
+use super::plan::{NetworkPlan, PlanOp};
 
-use super::network::{ConvKind, Network, Op};
+pub use super::plan::Datapath;
 
 /// A [H, W, C] integer activation tensor (single image).
 #[derive(Debug, Clone, PartialEq)]
@@ -52,122 +62,30 @@ impl Tensor {
     }
 }
 
-/// Multiply datapath selection.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Datapath {
-    Arithmetic,
-    /// Read products out of simulated LUT6_2 fabric (w_bits <= 4 layers).
-    LutFabric,
+/// The reference executor: a compiled network plan plus batch drivers.
+/// Owns its plan outright — the `Network` it was compiled from can be
+/// dropped or mutated freely afterwards.
+pub struct Executor {
+    plan: NetworkPlan,
 }
 
-/// Pre-built LUT fabric for one conv layer: one `ConstMultiplier` per
-/// *pair* of weights (Figure 5 packs two weights per 4 LUT6).
-pub struct LayerFabric {
-    mults: Vec<ConstMultiplier>,
-    cols: usize,
-}
-
-impl LayerFabric {
-    /// Embed a layer's weight matrix `[rows][cols]` into LUT multipliers,
-    /// pairing weights along the column (input) dimension.
-    pub fn build(w_codes: &[Vec<i32>], w_bits: u32) -> Self {
-        assert!(w_bits <= 4, "Figure 5 packing requires <= 4-bit weights");
-        let cols = w_codes[0].len();
-        let pairs = cols.div_ceil(2);
-        let mut mults = Vec::with_capacity(w_codes.len() * pairs);
-        for row in w_codes {
-            for p in 0..pairs {
-                let w0 = row[2 * p];
-                let w1 = if 2 * p + 1 < cols { row[2 * p + 1] } else { 0 };
-                mults.push(ConstMultiplier::new(w0, w1, w_bits.max(1)));
-            }
-        }
-        Self { mults, cols }
+impl Executor {
+    /// Compile `net` for `datapath` (memoized LUT product tables on
+    /// `LutFabric`) and wrap the plan in batch drivers.
+    pub fn new(net: &Network, datapath: Datapath) -> Self {
+        Self::from_plan(NetworkPlan::compile(net, datapath))
     }
 
-    /// Product `w[row][col] * act` via LUT readout.
-    #[inline]
-    pub fn mul(&self, row: usize, col: usize, act: i32) -> i32 {
-        let pairs = self.cols.div_ceil(2);
-        let m = &self.mults[row * pairs + col / 2];
-        m.eval(col % 2 == 1, act as u32)
+    /// Run a pre-compiled plan — e.g. `NetworkPlan::compile_direct`'s
+    /// per-MAC LUT-readout baseline (bench + equivalence tests).
+    pub fn from_plan(plan: NetworkPlan) -> Self {
+        Self { plan }
     }
 
-    /// Physical LUT6 count of this layer's multiplier array.
-    pub fn lut_count(&self) -> usize {
-        self.mults.iter().map(ConstMultiplier::lut_count).sum()
-    }
-}
-
-/// Per-conv precomputed state: flattened weights + threshold unit
-/// (built once in `Executor::new`; the hot loop must not allocate).
-struct PreppedConv {
-    mt: MultiThreshold,
-    /// row-major `[rows][cols]` flattening of `w_codes`.
-    wflat: Vec<i32>,
-    cols: usize,
-    /// row-major `[channels][levels]` flattening of the thresholds.
-    thr_flat: Vec<i32>,
-    levels: usize,
-}
-
-impl PreppedConv {
-    /// Threshold application over the flattened levels — equivalent to
-    /// `MultiThreshold::apply` (asserted by the module tests) but
-    /// indirection-free and branchless (the 15-wide compare+sum
-    /// vectorizes; an early-exit loop measured slower).
-    #[inline]
-    fn threshold(&self, acc: i32, ch: usize) -> i32 {
-        let ts = &self.thr_flat[ch * self.levels..(ch + 1) * self.levels];
-        match self.mt.signs[ch] {
-            s if s > 0 => ts.iter().map(|&t| (acc >= t) as i32).sum(),
-            s if s < 0 => ts.iter().map(|&t| (acc <= t) as i32).sum(),
-            _ => self.mt.consts[ch],
-        }
-    }
-}
-
-/// The reference executor.
-pub struct Executor<'n> {
-    net: &'n Network,
-    datapath: Datapath,
-    fabrics: Vec<Option<LayerFabric>>, // one per op index
-    prepped: Vec<Option<PreppedConv>>, // one per op index
-}
-
-impl<'n> Executor<'n> {
-    pub fn new(net: &'n Network, datapath: Datapath) -> Self {
-        let fabrics = net
-            .ops
-            .iter()
-            .map(|op| match (datapath, op) {
-                (Datapath::LutFabric, Op::Conv { w_codes, w_bits, in_bits, .. })
-                    if *w_bits <= 4 && *in_bits <= 4 =>
-                {
-                    Some(LayerFabric::build(w_codes, *w_bits))
-                }
-                _ => None,
-            })
-            .collect();
-        let prepped = net
-            .ops
-            .iter()
-            .map(|op| match op {
-                Op::Conv { w_codes, thresholds, signs, consts, .. } => Some(PreppedConv {
-                    mt: MultiThreshold {
-                        thresholds: thresholds.clone(),
-                        signs: signs.clone(),
-                        consts: consts.clone(),
-                    },
-                    wflat: w_codes.iter().flatten().copied().collect(),
-                    cols: w_codes[0].len(),
-                    thr_flat: thresholds.iter().flatten().copied().collect(),
-                    levels: thresholds[0].len(),
-                }),
-                _ => None,
-            })
-            .collect();
-        Self { net, datapath, fabrics, prepped }
+    /// The compiled plan — the shared geometry source the dataflow
+    /// simulator and serving stack consume (DESIGN.md S17).
+    pub fn plan(&self) -> &NetworkPlan {
+        &self.plan
     }
 
     /// Run one image (`[H, W, C]` uint8 codes) to logits.
@@ -181,12 +99,12 @@ impl<'n> Executor<'n> {
     ///
     /// The batch is split into one contiguous chunk per available core
     /// (scoped threads; batch 1 never spawns), and each chunk executes
-    /// *op-major*: every streamlined layer runs across all of the chunk's
-    /// images before the next layer starts, so the layer's flattened
-    /// weights, thresholds and LUT fabric are fetched once per chunk
-    /// instead of once per image. This is what turns the coordinator's
-    /// dynamic batches into arithmetic throughput rather than just
-    /// queueing fairness.
+    /// *op-major*: every compiled layer plan runs across all of the
+    /// chunk's images before the next layer starts, so the plan's
+    /// flattened weights, thresholds and LUT product tables are fetched
+    /// once per chunk instead of once per image. This is what turns the
+    /// coordinator's dynamic batches into arithmetic throughput rather
+    /// than just queueing fairness.
     pub fn run_batch(&self, images: &[Tensor]) -> Vec<Vec<f32>> {
         let cores =
             std::thread::available_parallelism().map(std::num::NonZeroUsize::get).unwrap_or(1);
@@ -221,66 +139,43 @@ impl<'n> Executor<'n> {
     }
 
     /// Op-major execution of one contiguous chunk of the batch. The
-    /// per-image arithmetic is the same code as `execute_traced` (the
-    /// `conv`/threshold/res-add/dense bodies), so bit-exactness vs the
-    /// sequential path holds by construction; only the loop nest order
-    /// (layers outer, images inner) and the amortized per-layer state
-    /// lookups differ.
+    /// per-image arithmetic is the same kernel code as `execute_traced`,
+    /// so bit-exactness vs the sequential path holds by construction;
+    /// only the loop nest order (layers outer, images inner) and the
+    /// amortized per-layer plan lookups differ.
     fn run_chunk(&self, images: &[Tensor]) -> Vec<Vec<f32>> {
         let n = images.len();
         let mut xs: Vec<Tensor> = images.to_vec();
         let mut res_stacks: Vec<Vec<Tensor>> = vec![Vec::new(); n];
         let mut pooled: Vec<Vec<i32>> = vec![Vec::new(); n];
         let mut logits: Vec<Vec<f32>> = vec![Vec::new(); n];
-        for (oi, op) in self.net.ops.iter().enumerate() {
+        for op in &self.plan.ops {
             match op {
-                Op::Input { .. } => {}
-                Op::Conv { kind, cout, k, stride, pad, .. } => {
-                    // per-layer state resolved once for the whole chunk
-                    let prep = self.prepped[oi].as_ref().expect("conv prepped");
-                    let fabric = self.fabrics[oi].as_ref();
+                PlanOp::Input => {}
+                PlanOp::Conv(cp) => {
                     for x in xs.iter_mut() {
-                        *x = self.conv(x, *kind, *cout, *k, *stride, *pad, prep, fabric);
+                        *x = kernels::conv(cp, x);
                     }
                 }
-                Op::ResPush {} => {
+                PlanOp::ResPush { .. } => {
                     for (i, x) in xs.iter().enumerate() {
                         res_stacks[i].push(x.clone());
                     }
                 }
-                Op::ResAdd { bits } => {
+                PlanOp::ResAdd { bits } => {
                     for (i, x) in xs.iter_mut().enumerate() {
                         let saved = res_stacks[i].pop().expect("res_add without res_push");
-                        assert_eq!((saved.h, saved.w, saved.c), (x.h, x.w, x.c));
-                        for (a, b) in x.data.iter_mut().zip(&saved.data) {
-                            *a = saturating_res_add(*a, *b, *bits);
-                        }
+                        kernels::res_add(x, &saved, *bits);
                     }
                 }
-                Op::PoolSum {} => {
+                PlanOp::PoolSum { .. } => {
                     for (i, x) in xs.iter().enumerate() {
-                        let mut acc = vec![0; x.c];
-                        for px in x.data.chunks_exact(x.c) {
-                            for (a, &v) in acc.iter_mut().zip(px) {
-                                *a += v;
-                            }
-                        }
-                        pooled[i] = acc;
+                        pooled[i] = kernels::pool_sum(x);
                     }
                 }
-                Op::Dense { cout, w_codes, scale, bias, .. } => {
+                PlanOp::Dense(dp) => {
                     for (i, p) in pooled.iter().enumerate() {
-                        logits[i] = (0..*cout)
-                            .map(|co| {
-                                let acc: i64 = p
-                                    .iter()
-                                    .enumerate()
-                                    .map(|(ci, &a)| a as i64 * w_codes[ci][co] as i64)
-                                    .sum();
-                                // FMA to match the golden (see execute_traced)
-                                (acc as f32).mul_add(scale[co], bias[co])
-                            })
-                            .collect();
+                        logits[i] = kernels::dense(dp, p);
                     }
                 }
             }
@@ -291,7 +186,8 @@ impl<'n> Executor<'n> {
 
     /// Run one image, invoking `trace(op_index, tensor)` after every op
     /// that produces an activation tensor (used to cross-check the
-    /// dataflow simulator stage by stage).
+    /// dataflow simulator stage by stage; plan ops are index-aligned
+    /// with `Network::ops`).
     pub fn execute_traced(
         &self,
         image: &Tensor,
@@ -301,139 +197,25 @@ impl<'n> Executor<'n> {
         let mut res_stack: Vec<Tensor> = Vec::new();
         let mut pooled: Vec<i32> = Vec::new();
         let mut logits: Vec<f32> = Vec::new();
-        for (oi, op) in self.net.ops.iter().enumerate() {
+        for (oi, op) in self.plan.ops.iter().enumerate() {
             match op {
-                Op::Input { .. } => {}
-                Op::Conv { kind, cout, k, stride, pad, .. } => {
-                    let prep = self.prepped[oi].as_ref().expect("conv prepped");
-                    x = self.conv(&x, *kind, *cout, *k, *stride, *pad, prep, self.fabrics[oi].as_ref());
+                PlanOp::Input => {}
+                PlanOp::Conv(cp) => {
+                    x = kernels::conv(cp, &x);
                     trace(oi, &x);
                 }
-                Op::ResPush {} => res_stack.push(x.clone()),
-                Op::ResAdd { bits } => {
+                PlanOp::ResPush { .. } => res_stack.push(x.clone()),
+                PlanOp::ResAdd { bits } => {
                     let saved = res_stack.pop().expect("res_add without res_push");
-                    assert_eq!((saved.h, saved.w, saved.c), (x.h, x.w, x.c));
-                    for (a, b) in x.data.iter_mut().zip(&saved.data) {
-                        *a = saturating_res_add(*a, *b, *bits);
-                    }
+                    kernels::res_add(&mut x, &saved, *bits);
                     trace(oi, &x);
                 }
-                Op::PoolSum {} => {
-                    pooled = vec![0; x.c];
-                    for y in 0..x.h {
-                        for xx in 0..x.w {
-                            for ch in 0..x.c {
-                                pooled[ch] += x.get(y as isize, xx as isize, ch);
-                            }
-                        }
-                    }
-                }
-                Op::Dense { cout, w_codes, scale, bias, .. } => {
-                    logits = (0..*cout)
-                        .map(|co| {
-                            let acc: i64 = pooled
-                                .iter()
-                                .enumerate()
-                                .map(|(ci, &a)| a as i64 * w_codes[ci][co] as i64)
-                                .sum();
-                            // fused multiply-add: XLA CPU emits an FMA for
-                            // `acc * scale + bias`, so a separate mul+add
-                            // here would differ by 1 ULP from the golden
-                            (acc as f32).mul_add(scale[co], bias[co])
-                        })
-                        .collect();
-                }
+                PlanOp::PoolSum { .. } => pooled = kernels::pool_sum(&x),
+                PlanOp::Dense(dp) => logits = kernels::dense(dp, &pooled),
             }
         }
         assert!(!logits.is_empty(), "network has no dense head");
         logits
-    }
-
-    #[allow(clippy::too_many_arguments)]
-    fn conv(
-        &self,
-        x: &Tensor,
-        kind: ConvKind,
-        cout: usize,
-        k: usize,
-        stride: usize,
-        pad: usize,
-        prep: &PreppedConv,
-        fabric: Option<&LayerFabric>,
-    ) -> Tensor {
-        let ho = (x.h + 2 * pad - k) / stride + 1;
-        let wo = (x.w + 2 * pad - k) / stride + 1;
-        let mut out = Tensor::zeros(ho, wo, cout);
-        let cols = prep.cols;
-
-        // fast path: pointwise conv on the arithmetic datapath — a matmul
-        // over contiguous HWC pixels (the bulk of MobileNetV2's MACs)
-        if kind == ConvKind::Pw && k == 1 && stride == 1 && fabric.is_none() {
-            let cin = x.c;
-            for px in 0..x.h * x.w {
-                let xs = &x.data[px * cin..(px + 1) * cin];
-                let o = &mut out.data[px * cout..(px + 1) * cout];
-                for (co, slot) in o.iter_mut().enumerate() {
-                    let row = &prep.wflat[co * cols..(co + 1) * cols];
-                    let mut acc: i32 = 0;
-                    for (w, a) in row.iter().zip(xs) {
-                        acc += w * a;
-                    }
-                    *slot = prep.threshold(acc, co);
-                }
-            }
-            return out;
-        }
-
-        for oy in 0..ho {
-            for ox in 0..wo {
-                for co in 0..cout {
-                    let mut acc: i32 = 0;
-                    match kind {
-                        ConvKind::Dw => {
-                            // one filter per channel: w[co][tap]
-                            for i in 0..k {
-                                for j in 0..k {
-                                    let a = x.get(
-                                        (oy * stride + i) as isize - pad as isize,
-                                        (ox * stride + j) as isize - pad as isize,
-                                        co,
-                                    );
-                                    let tap = i * k + j;
-                                    acc += self.mul(fabric, prep, co, tap, a);
-                                }
-                            }
-                        }
-                        _ => {
-                            let cin = x.c;
-                            for i in 0..k {
-                                for j in 0..k {
-                                    for ci in 0..cin {
-                                        let a = x.get(
-                                            (oy * stride + i) as isize - pad as isize,
-                                            (ox * stride + j) as isize - pad as isize,
-                                            ci,
-                                        );
-                                        let col = (i * k + j) * cin + ci;
-                                        acc += self.mul(fabric, prep, co, col, a);
-                                    }
-                                }
-                            }
-                        }
-                    }
-                    out.set(oy, ox, co, prep.threshold(acc, co));
-                }
-            }
-        }
-        out
-    }
-
-    #[inline]
-    fn mul(&self, fabric: Option<&LayerFabric>, prep: &PreppedConv, row: usize, col: usize, a: i32) -> i32 {
-        match (self.datapath, fabric) {
-            (Datapath::LutFabric, Some(f)) => f.mul(row, col, a),
-            _ => prep.wflat[row * prep.cols + col] * a,
-        }
     }
 }
 
@@ -451,7 +233,7 @@ pub fn decode_test_images(bytes: &[u8], image_size: usize, in_ch: usize) -> Vec<
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::network::{Meta, Op};
+    use crate::graph::network::{ConvKind, Meta, Op};
 
     fn net_with_conv(kind: ConvKind, cin: usize, cout: usize, k: usize, stride: usize) -> Network {
         let cols = if kind == ConvKind::Dw { k * k } else { k * k * cin };
@@ -535,6 +317,20 @@ mod tests {
             *v = (i % 16) as i32;
         }
         assert_eq!(a.execute(&img), b.execute(&img));
+    }
+
+    #[test]
+    fn direct_lut_readout_matches_compiled_tables() {
+        // the memoized product tables ARE the per-MAC fabric readout
+        let net = net_with_conv(ConvKind::Std, 2, 3, 3, 1);
+        let compiled = Executor::new(&net, Datapath::LutFabric);
+        let direct = Executor::from_plan(NetworkPlan::compile_direct(&net, Datapath::LutFabric));
+        let mut img = Tensor::zeros(4, 4, 2);
+        for (i, v) in img.data.iter_mut().enumerate() {
+            *v = ((i * 5) % 16) as i32;
+        }
+        assert_eq!(compiled.execute(&img), direct.execute(&img));
+        assert_eq!(compiled.plan().lut_count(), direct.plan().lut_count());
     }
 
     #[test]

@@ -1,0 +1,373 @@
+//! Kernel functions over compiled layer plans (DESIGN.md S17) — the
+//! bodies the reference executor and the dataflow simulator share.
+//!
+//! Every kernel is generic over the plan's multiplier readout
+//! ([`Multipliers`] variant), monomorphized so the datapath dispatch is
+//! hoisted out of the MAC loops: the hot loop sees either a plain
+//! integer multiply, a memoized LUT product-table load, or (baseline)
+//! a per-MAC simulated LUT6_2 readout — never a per-multiply branch.
+//!
+//! Accumulation order is identical across kernels and datapaths
+//! (tap-major, channel-minor, matching `python/compile/model.py::
+//! im2col`), so all paths stay bit-for-bit interchangeable.
+
+use crate::quant::saturating_res_add;
+
+use super::executor::Tensor;
+use super::network::ConvKind;
+use super::plan::{ConvPlan, DensePlan, Multipliers};
+
+/// Run one compiled conv layer over an input activation tensor.
+pub fn conv(plan: &ConvPlan, x: &Tensor) -> Tensor {
+    // hard assert (one compare per layer, outside the MAC loops): the
+    // interior fast path indexes with plan-derived strides, so a
+    // mismatched tensor would compute garbage instead of failing loudly
+    assert_eq!(
+        (x.h, x.w, x.c),
+        (plan.geom.in_h, plan.geom.in_w, plan.geom.cin),
+        "{}: input shape disagrees with the compiled plan",
+        plan.name
+    );
+    match &plan.mults {
+        Multipliers::Weights => {
+            conv_with(plan, x, |row, col, a| plan.wflat[row * plan.cols + col] * a)
+        }
+        Multipliers::LutDirect { mults } => {
+            let pairs = plan.cols.div_ceil(2);
+            conv_with(plan, x, move |row, col, a| {
+                mults[row * pairs + col / 2].eval(col % 2 == 1, a as u32)
+            })
+        }
+        Multipliers::LutTables { products, acts, .. } => {
+            let acts = *acts;
+            conv_with(plan, x, move |row, col, a| {
+                products[(row * plan.cols + col) * acts + a as usize]
+            })
+        }
+    }
+}
+
+/// Shared conv body, monomorphized per multiplier readout.
+fn conv_with(plan: &ConvPlan, x: &Tensor, mul: impl Fn(usize, usize, i32) -> i32) -> Tensor {
+    let g = plan.geom;
+    if plan.kind == ConvKind::Pw && g.k == 1 && g.stride == 1 && g.pad == 0 {
+        return pointwise(plan, x, mul);
+    }
+    let (ho, wo) = (g.out_h(), g.out_w());
+    let mut out = Tensor::zeros(ho, wo, g.cout);
+    let dw = plan.kind == ConvKind::Dw;
+    for oy in 0..ho {
+        let y_interior = oy >= plan.oy_interior.0 && oy < plan.oy_interior.1;
+        for ox in 0..wo {
+            let o = &mut out.data[(oy * wo + ox) * g.cout..(oy * wo + ox + 1) * g.cout];
+            if y_interior && ox >= plan.ox_interior.0 && ox < plan.ox_interior.1 {
+                // interior: whole window in bounds — direct indexing off
+                // the precomputed tap offsets, no per-tap bounds check
+                let base = ((oy * g.stride - g.pad) * g.in_w + (ox * g.stride - g.pad)) * g.cin;
+                if dw {
+                    for (c, slot) in o.iter_mut().enumerate() {
+                        let mut acc = 0i32;
+                        for (tap, &off) in plan.tap_offsets.iter().enumerate() {
+                            acc += mul(c, tap, x.data[base + off + c]);
+                        }
+                        *slot = plan.threshold(acc, c);
+                    }
+                } else {
+                    for (co, slot) in o.iter_mut().enumerate() {
+                        let mut acc = 0i32;
+                        for (tap, &off) in plan.tap_offsets.iter().enumerate() {
+                            let px = &x.data[base + off..base + off + g.cin];
+                            for (ci, &a) in px.iter().enumerate() {
+                                acc += mul(co, tap * g.cin + ci, a);
+                            }
+                        }
+                        *slot = plan.threshold(acc, co);
+                    }
+                }
+            } else {
+                // border rim: zero-padded taps, bounds-checked gather
+                if dw {
+                    for (c, slot) in o.iter_mut().enumerate() {
+                        let mut acc = 0i32;
+                        for i in 0..g.k {
+                            for j in 0..g.k {
+                                let a = x.get(
+                                    (oy * g.stride + i) as isize - g.pad as isize,
+                                    (ox * g.stride + j) as isize - g.pad as isize,
+                                    c,
+                                );
+                                acc += mul(c, i * g.k + j, a);
+                            }
+                        }
+                        *slot = plan.threshold(acc, c);
+                    }
+                } else {
+                    for (co, slot) in o.iter_mut().enumerate() {
+                        let mut acc = 0i32;
+                        for i in 0..g.k {
+                            for j in 0..g.k {
+                                for ci in 0..g.cin {
+                                    let a = x.get(
+                                        (oy * g.stride + i) as isize - g.pad as isize,
+                                        (ox * g.stride + j) as isize - g.pad as isize,
+                                        ci,
+                                    );
+                                    acc += mul(co, (i * g.k + j) * g.cin + ci, a);
+                                }
+                            }
+                        }
+                        *slot = plan.threshold(acc, co);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Pointwise conv as a matmul over contiguous HWC pixels (the bulk of
+/// MobileNetV2's MACs). The arithmetic variant dots contiguous slices
+/// (vectorizes); the LUT variants go through the readout closure.
+fn pointwise(plan: &ConvPlan, x: &Tensor, mul: impl Fn(usize, usize, i32) -> i32) -> Tensor {
+    let (cin, cout) = (plan.geom.cin, plan.geom.cout);
+    let mut out = Tensor::zeros(x.h, x.w, cout);
+    let arith = matches!(plan.mults, Multipliers::Weights);
+    for px in 0..x.h * x.w {
+        let xs = &x.data[px * cin..(px + 1) * cin];
+        let o = &mut out.data[px * cout..(px + 1) * cout];
+        for (co, slot) in o.iter_mut().enumerate() {
+            let acc = if arith {
+                plan.dot(co, xs)
+            } else {
+                let mut acc = 0i32;
+                for (ci, &a) in xs.iter().enumerate() {
+                    acc += mul(co, ci, a);
+                }
+                acc
+            };
+            *slot = plan.threshold(acc, co);
+        }
+    }
+    out
+}
+
+/// One output pixel from a full im2col patch (`[K*K*CIN]`, (tap,
+/// channel) minor order) — the dataflow simulator's conv-stage body.
+pub fn patch_out(plan: &ConvPlan, patch: &[i32]) -> Vec<i32> {
+    let mut out = vec![0i32; plan.geom.cout];
+    match plan.kind {
+        ConvKind::Dw => {
+            let cin = plan.geom.cin;
+            for (c, o) in out.iter_mut().enumerate() {
+                let mut acc = 0i32;
+                for tap in 0..plan.cols {
+                    acc += plan.mul(c, tap, patch[tap * cin + c]);
+                }
+                *o = plan.threshold(acc, c);
+            }
+        }
+        _ => {
+            for (co, o) in out.iter_mut().enumerate() {
+                *o = plan.threshold(plan.dot(co, patch), co);
+            }
+        }
+    }
+    out
+}
+
+/// Global sum-pool over all pixels, per channel.
+pub fn pool_sum(x: &Tensor) -> Vec<i32> {
+    let mut acc = vec![0i32; x.c];
+    for px in x.data.chunks_exact(x.c) {
+        for (a, &v) in acc.iter_mut().zip(px) {
+            *a += v;
+        }
+    }
+    acc
+}
+
+/// Saturating residual join: `x = sat(x + saved)` element-wise on codes.
+pub fn res_add(x: &mut Tensor, saved: &Tensor, bits: u32) {
+    assert_eq!((saved.h, saved.w, saved.c), (x.h, x.w, x.c));
+    for (a, b) in x.data.iter_mut().zip(&saved.data) {
+        *a = saturating_res_add(*a, *b, bits);
+    }
+}
+
+/// Dense head over the pooled channel vector.
+pub fn dense(plan: &DensePlan, pooled: &[i32]) -> Vec<f32> {
+    (0..plan.cout)
+        .map(|co| {
+            let acc: i64 = pooled
+                .iter()
+                .enumerate()
+                .map(|(ci, &a)| a as i64 * plan.w_codes[ci][co] as i64)
+                .sum();
+            // fused multiply-add: XLA CPU emits an FMA for
+            // `acc * scale + bias`, so a separate mul+add here would
+            // differ by 1 ULP from the golden
+            (acc as f32).mul_add(plan.scale[co], plan.bias[co])
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::network::{Network, Op};
+    use crate::graph::plan::{Datapath, NetworkPlan, PlanOp};
+    use crate::util::prop::Rng;
+
+    /// One-conv network over an `hw x hw x cin` input.
+    #[allow(clippy::too_many_arguments)]
+    fn conv_net(
+        rng: &mut Rng,
+        kind: ConvKind,
+        hw: usize,
+        cin: usize,
+        cout: usize,
+        k: usize,
+        stride: usize,
+    ) -> Network {
+        use crate::graph::network::Meta;
+        let cols = if kind == ConvKind::Dw { k * k } else { k * k * cin };
+        let thresholds: Vec<Vec<i32>> = (0..cout)
+            .map(|_| {
+                let base = rng.range_i32(-10, 10);
+                (0..15).map(|i| base + i).collect()
+            })
+            .collect();
+        Network {
+            meta: Meta {
+                image_size: hw,
+                in_ch: cin,
+                num_classes: 2,
+                in_scale: 1.0,
+                w_bits: 4,
+                a_bits: 4,
+                acc_int: 0.0,
+                n_test: 0,
+                golden_logits: vec![],
+            },
+            ops: vec![
+                Op::Input { bits: 4, scale: 1.0 },
+                Op::Conv {
+                    name: "c".into(),
+                    kind,
+                    cin,
+                    cout,
+                    k,
+                    stride,
+                    pad: (k - 1) / 2,
+                    w_bits: 4,
+                    in_bits: 4,
+                    out_bits: 4,
+                    w_codes: (0..cout).map(|_| rng.vec_i32(cols, -8, 7)).collect(),
+                    thresholds,
+                    signs: vec![1; cout],
+                    consts: vec![0; cout],
+                    out_scale: 1.0,
+                },
+                Op::PoolSum {},
+                Op::Dense {
+                    name: "fc".into(),
+                    cin: cout,
+                    cout: 2,
+                    w_bits: 8,
+                    w_codes: vec![vec![1, -1]; cout],
+                    scale: vec![1.0, 1.0],
+                    bias: vec![0.0, 0.0],
+                },
+            ],
+        }
+    }
+
+    /// Naive direct convolution — the spec the kernels must match.
+    fn naive_conv(net: &Network, x: &Tensor) -> Tensor {
+        let Op::Conv { kind, cout, k, stride, pad, w_codes, thresholds, .. } = &net.ops[1] else {
+            panic!("conv_net has a conv at 1")
+        };
+        let ho = (x.h + 2 * pad - k) / stride + 1;
+        let wo = (x.w + 2 * pad - k) / stride + 1;
+        let mut out = Tensor::zeros(ho, wo, *cout);
+        for oy in 0..ho {
+            for ox in 0..wo {
+                for co in 0..*cout {
+                    let mut acc = 0i32;
+                    for i in 0..*k {
+                        for j in 0..*k {
+                            let y = (oy * stride + i) as isize - *pad as isize;
+                            let xx = (ox * stride + j) as isize - *pad as isize;
+                            if *kind == ConvKind::Dw {
+                                acc += w_codes[co][i * k + j] * x.get(y, xx, co);
+                            } else {
+                                for ci in 0..x.c {
+                                    acc += w_codes[co][(i * k + j) * x.c + ci] * x.get(y, xx, ci);
+                                }
+                            }
+                        }
+                    }
+                    let code = thresholds[co].iter().filter(|&&t| acc >= t).count() as i32;
+                    out.set(oy, ox, co, code);
+                }
+            }
+        }
+        out
+    }
+
+    fn first_conv_plan(net: &Network, dp: Datapath) -> crate::graph::plan::ConvPlan {
+        let plan = NetworkPlan::compile(net, dp);
+        plan.ops
+            .iter()
+            .find_map(|op| match op {
+                PlanOp::Conv(c) => Some(c.clone()),
+                _ => None,
+            })
+            .expect("conv plan")
+    }
+
+    #[test]
+    fn kernels_match_naive_conv_all_kinds_and_datapaths() {
+        let mut rng = Rng::new(99);
+        for (kind, hw, cin, cout, k, stride) in [
+            (ConvKind::Pw, 6, 3, 5, 1, 1),
+            (ConvKind::Std, 7, 2, 4, 3, 1), // odd width: border split exercised
+            (ConvKind::Std, 8, 3, 3, 3, 2),
+            (ConvKind::Dw, 7, 4, 4, 3, 2),
+            (ConvKind::Dw, 5, 2, 2, 3, 1),
+        ] {
+            let net = conv_net(&mut rng, kind, hw, cin, cout, k, stride);
+            let x = Tensor::from_hwc(hw, hw, cin, rng.vec_i32(hw * hw * cin, 0, 15));
+            let want = naive_conv(&net, &x);
+            for dp in [Datapath::Arithmetic, Datapath::LutFabric] {
+                let cp = first_conv_plan(&net, dp);
+                assert_eq!(conv(&cp, &x), want, "{kind:?} hw={hw} k={k} s={stride} {dp:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn patch_out_matches_conv_on_pointwise() {
+        // for a 1x1 conv the im2col patch IS the pixel, so patch_out and
+        // the tensor kernel must agree pixel by pixel
+        let mut rng = Rng::new(5);
+        let net = conv_net(&mut rng, ConvKind::Pw, 4, 3, 4, 1, 1);
+        let x = Tensor::from_hwc(4, 4, 3, rng.vec_i32(4 * 4 * 3, 0, 15));
+        let cp = first_conv_plan(&net, Datapath::LutFabric);
+        let whole = conv(&cp, &x);
+        for px in 0..16 {
+            let patch = &x.data[px * 3..(px + 1) * 3];
+            assert_eq!(patch_out(&cp, patch), whole.data[px * 4..(px + 1) * 4].to_vec());
+        }
+    }
+
+    #[test]
+    fn pool_and_res_add_bit_exact() {
+        let x = Tensor::from_hwc(2, 2, 3, vec![1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12]);
+        assert_eq!(pool_sum(&x), vec![1 + 4 + 7 + 10, 2 + 5 + 8 + 11, 3 + 6 + 9 + 12]);
+        let mut a = Tensor::from_hwc(1, 1, 2, vec![9, 3]);
+        let b = Tensor::from_hwc(1, 1, 2, vec![9, 3]);
+        res_add(&mut a, &b, 4);
+        assert_eq!(a.data, vec![15, 6]); // 18 saturates to 15
+    }
+}

@@ -1,11 +1,15 @@
-//! Model graph substrate (DESIGN.md S5): the streamlined integer network
-//! IR (`network`), shape-level architecture specs (`arch`) and the
+//! Model graph substrate (DESIGN.md S5/S17): the streamlined integer
+//! network IR (`network`), shape-level architecture specs (`arch`), the
+//! compiled layer plans + kernel engine (`plan`, `kernels`) and the
 //! reference integer executor (`executor`).
 
 pub mod arch;
 pub mod executor;
+pub mod kernels;
 pub mod network;
+pub mod plan;
 
 pub use arch::{mobilenet_v2_full, mobilenet_v2_small, ArchSpec, LayerSpec};
 pub use executor::{decode_test_images, Datapath, Executor, Tensor};
 pub use network::{ConvKind, Network, Op};
+pub use plan::{ConvGeom, ConvPlan, IoGeom, Multipliers, NetworkPlan, PlanOp};

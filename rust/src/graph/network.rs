@@ -170,6 +170,33 @@ impl Network {
         self.ops.iter().filter(|op| matches!(op, Op::Conv { .. }))
     }
 
+    /// The op at `idx` if it is a convolution, `None` otherwise — the
+    /// panic-free accessor callers match on instead of asserting
+    /// "expected conv" themselves.
+    pub fn conv_at(&self, idx: usize) -> Option<&Op> {
+        self.ops.get(idx).filter(|op| matches!(op, Op::Conv { .. }))
+    }
+
+    /// The first convolution (the layer right after `Input`), if any.
+    pub fn first_conv(&self) -> Option<&Op> {
+        self.convs().next()
+    }
+
+    /// The dense classifier head, if any.
+    pub fn dense_head(&self) -> Option<&Op> {
+        self.ops.iter().rev().find(|op| matches!(op, Op::Dense { .. }))
+    }
+
+    /// I/O geometry of the deployed network — the plan-level view of
+    /// `meta` the runtime and coordinator consume (DESIGN.md S17).
+    pub fn io(&self) -> super::plan::IoGeom {
+        super::plan::IoGeom {
+            image_size: self.meta.image_size,
+            in_ch: self.meta.in_ch,
+            num_classes: self.meta.num_classes,
+        }
+    }
+
     /// Total operations per inference (2 x MACs, the roofline convention)
     /// derived from the deployed shapes — the GOPS denominator the
     /// serving metrics use for whatever network is actually served.
@@ -304,18 +331,6 @@ impl Network {
         Ok(())
     }
 
-    /// The multi-threshold unit of a conv op.
-    pub fn threshold_unit(op: &Op) -> Option<MultiThreshold> {
-        if let Op::Conv { thresholds, signs, consts, .. } = op {
-            Some(MultiThreshold {
-                thresholds: thresholds.clone(),
-                signs: signs.clone(),
-                consts: consts.clone(),
-            })
-        } else {
-            None
-        }
-    }
 }
 
 #[cfg(test)]
@@ -396,16 +411,16 @@ mod tests {
         assert_eq!(net.ops.len(), 6);
         assert!(net.validate().is_ok());
         assert!(matches!(net.ops[2], Op::ResPush {}));
-        if let Op::Conv { w_codes, kind, .. } = &net.ops[1] {
+        // conv_at / dense_head guarantee the variant, so the patterns
+        // below are irrefutable in practice — no panic arms needed
+        let conv = net.conv_at(1).expect("op 1 decodes as a conv");
+        if let Op::Conv { w_codes, kind, .. } = conv {
             assert_eq!(w_codes[0], vec![1, -3]);
             assert_eq!(*kind, ConvKind::Pw);
-        } else {
-            panic!("expected conv");
         }
-        if let Op::Dense { bias, .. } = &net.ops[5] {
+        let dense = net.dense_head().expect("export has a dense head");
+        if let Op::Dense { bias, .. } = dense {
             assert_eq!(bias[1], -1.5);
-        } else {
-            panic!("expected dense");
         }
     }
 
@@ -426,14 +441,24 @@ mod tests {
         assert_eq!(a.meta.image_size, 16);
         assert_eq!(a.meta.num_classes, 10);
         // same seed -> identical weights; shapes track the spec
-        if let (Op::Conv { w_codes: wa, .. }, Op::Conv { w_codes: wb, .. }) =
-            (&a.ops[1], &b.ops[1])
-        {
+        let ca = a.first_conv().expect("synthetic has a conv after input");
+        let cb = b.first_conv().expect("synthetic has a conv after input");
+        if let (Op::Conv { w_codes: wa, .. }, Op::Conv { w_codes: wb, .. }) = (ca, cb) {
             assert_eq!(wa, wb);
-        } else {
-            panic!("expected conv after input");
         }
         assert_eq!(a.convs().count(), spec.layers.len() - 1);
+    }
+
+    #[test]
+    fn typed_accessors_are_panic_free() {
+        let net = tiny_net();
+        assert!(net.conv_at(1).is_some());
+        assert!(net.conv_at(0).is_none(), "input op is not a conv");
+        assert!(net.conv_at(99).is_none(), "out of range is None, not a panic");
+        assert!(matches!(net.first_conv(), Some(Op::Conv { .. })));
+        assert!(matches!(net.dense_head(), Some(Op::Dense { .. })));
+        assert_eq!(net.io().image_size, 2);
+        assert_eq!(net.io().num_classes, 2);
     }
 
     #[test]

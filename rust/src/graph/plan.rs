@@ -1,0 +1,525 @@
+//! Compiled layer plans (DESIGN.md S17): the streamlined network IR
+//! lowered ONCE at executor/pipeline construction time into flat,
+//! indirection-free per-layer state.
+//!
+//! The reference executor used to interpret every conv scalar-by-scalar
+//! with per-tap bounds checks and a per-multiply datapath branch. A
+//! [`NetworkPlan`] removes all of that from the hot loop:
+//!
+//!  * weights and thresholds are flattened row-major;
+//!  * im2row tap offsets are precomputed, with an **interior/border
+//!    split**: output pixels whose whole window is in bounds index the
+//!    input directly (no per-tap bounds check), only the border rim pays
+//!    the zero-padded gather;
+//!  * on the `LutFabric` datapath, every multiplier's product table is
+//!    **read out of the simulated LUT6_2 primitives once at plan-build
+//!    time** ([`Multipliers::LutTables`]) — same hardware-true INIT
+//!    semantics as reading the fabric per MAC, memoized. The per-MAC
+//!    readout survives as [`Multipliers::LutDirect`] (the
+//!    pre-compilation baseline and equivalence witness; see
+//!    `benches/bench_batch.rs` and `tests/plan.rs`).
+//!
+//! The plan is the shared geometry source for the whole stack: the
+//! executor runs kernels over it (`graph::kernels`), the dataflow
+//! simulator builds its stages from it (`Pipeline::from_plan`), and the
+//! runtime/coordinator read [`IoGeom`] instead of re-deriving shapes
+//! from `Network::meta`.
+
+use crate::fabric::lutmul::ConstMultiplier;
+
+use super::network::{ConvKind, Network, Op};
+
+/// Multiply datapath selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Datapath {
+    Arithmetic,
+    /// Products come from simulated LUT6_2 fabric (w_bits <= 4 layers).
+    LutFabric,
+}
+
+/// Input/output geometry of a deployed network — the plan-level view of
+/// `Meta` that the runtime, coordinator and benches consume.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IoGeom {
+    pub image_size: usize,
+    pub in_ch: usize,
+    pub num_classes: usize,
+}
+
+/// Spatial geometry of one conv layer, resolved at plan-compile time
+/// (the simulator and executor agree on shapes by construction).
+#[derive(Debug, Clone, Copy)]
+pub struct ConvGeom {
+    pub in_h: usize,
+    pub in_w: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvGeom {
+    pub fn out_h(&self) -> usize {
+        (self.in_h + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        (self.in_w + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    pub fn in_pixels(&self) -> usize {
+        self.in_h * self.in_w
+    }
+
+    pub fn out_pixels(&self) -> usize {
+        self.out_h() * self.out_w()
+    }
+
+    /// Interior output range `[lo, hi)` along one axis: outputs whose
+    /// whole k-tap window lies inside `[0, n_in)`, so kernels can index
+    /// the input directly with no per-tap bounds check.
+    fn interior(&self, n_out: usize, n_in: usize) -> (usize, usize) {
+        // o*stride - pad >= 0  and  o*stride - pad + k - 1 <= n_in - 1
+        let lo = self.pad.div_ceil(self.stride);
+        let hi = match (n_in + self.pad).checked_sub(self.k) {
+            Some(top) => (top / self.stride + 1).min(n_out),
+            None => 0,
+        };
+        (lo.min(hi), hi)
+    }
+}
+
+/// The multiplier array of one compiled conv layer.
+#[derive(Debug, Clone)]
+pub enum Multipliers {
+    /// Plain integer multiplies against `ConvPlan::wflat` — the
+    /// `Arithmetic` datapath, and >4-bit layers on `LutFabric` (the
+    /// paper keeps first/last 8-bit layers on DSP packing).
+    Weights,
+    /// Simulated LUT6_2 primitives read per multiply, one
+    /// `ConstMultiplier` per *pair* of weights (Figure 5 packs two
+    /// weights per `w_bits` LUT6). The un-memoized hardware-true path,
+    /// kept as the plan-compilation baseline and equivalence witness.
+    LutDirect { mults: Vec<ConstMultiplier> },
+    /// Per-multiplier product tables read out of the same LUT6_2
+    /// primitives once at plan-build time:
+    /// `products[(row * cols + col) * acts + act]`. Bit-identical to
+    /// `LutDirect` by construction — the table IS the memoized readout.
+    LutTables {
+        products: Vec<i32>,
+        /// Activation codes per table (`2^w_bits`, 16 for 4-bit; the
+        /// LUT path is gated on `in_bits <= w_bits` at plan build so
+        /// runtime activations always fit the table).
+        acts: usize,
+        /// Physical LUT6 behind the tables (resource accounting).
+        lut6: usize,
+    },
+}
+
+/// One convolution lowered into flat, hot-loop-ready state.
+#[derive(Debug, Clone)]
+pub struct ConvPlan {
+    pub name: String,
+    pub kind: ConvKind,
+    pub geom: ConvGeom,
+    /// Row-major `[rows][cols]` flattened weight codes
+    /// (`[COUT][K*K*CIN]` for std/pw, `[C][K*K]` for depthwise).
+    pub wflat: Vec<i32>,
+    pub cols: usize,
+    pub mults: Multipliers,
+    /// Row-major `[cout][levels]` flattened thresholds.
+    pub thr_flat: Vec<i32>,
+    pub levels: usize,
+    pub signs: Vec<i32>,
+    pub consts: Vec<i32>,
+    /// Per-tap input element offsets for interior windows, relative to
+    /// the window-origin pixel `(oy*stride - pad, ox*stride - pad)`:
+    /// `tap_offsets[i*k + j] = (i*in_w + j) * cin`.
+    pub tap_offsets: Vec<usize>,
+    /// Interior output ranges `[lo, hi)` per axis (see
+    /// [`ConvGeom::interior`]); outside them the border kernel gathers
+    /// with zero padding.
+    pub oy_interior: (usize, usize),
+    pub ox_interior: (usize, usize),
+}
+
+impl ConvPlan {
+    fn build(op: &Op, in_hw: usize, datapath: Datapath, memoize: bool) -> Self {
+        let Op::Conv {
+            name,
+            kind,
+            cin,
+            cout,
+            k,
+            stride,
+            pad,
+            w_bits,
+            in_bits,
+            w_codes,
+            thresholds,
+            signs,
+            consts,
+            ..
+        } = op
+        else {
+            unreachable!("ConvPlan::build on a non-conv op")
+        };
+        let (k, stride, pad) = (*k, *stride, *pad);
+        let geom = ConvGeom { in_h: in_hw, in_w: in_hw, cin: *cin, cout: *cout, k, stride, pad };
+        let cols = w_codes[0].len();
+        // The Figure 5 embedding addresses activations with the weight's
+        // bit count, so the LUT path additionally needs in_bits <=
+        // w_bits: a wider activation code would index past a multiplier's
+        // table (the per-MAC readout asserts the same bound). Layers
+        // outside the envelope multiply arithmetically, like the paper's
+        // DSP-packed 8-bit first/last layers.
+        let lut_ok = *w_bits <= 4 && *in_bits <= 4 && *in_bits <= *w_bits;
+        let mults = if datapath == Datapath::LutFabric && lut_ok {
+            Self::lut_multipliers(w_codes, *w_bits, memoize)
+        } else {
+            Multipliers::Weights
+        };
+        Self {
+            name: name.clone(),
+            kind: *kind,
+            geom,
+            wflat: w_codes.iter().flatten().copied().collect(),
+            cols,
+            mults,
+            thr_flat: thresholds.iter().flatten().copied().collect(),
+            levels: thresholds[0].len(),
+            signs: signs.clone(),
+            consts: consts.clone(),
+            tap_offsets: (0..k * k).map(|t| ((t / k) * geom.in_w + (t % k)) * geom.cin).collect(),
+            oy_interior: geom.interior(geom.out_h(), geom.in_h),
+            ox_interior: geom.interior(geom.out_w(), geom.in_w),
+        }
+    }
+
+    /// Embed the layer's weights into LUT6_2 multipliers (two weights per
+    /// `ConstMultiplier`, Figure 5) and, when memoizing, read every
+    /// product table out of the simulated fabric once.
+    fn lut_multipliers(w_codes: &[Vec<i32>], w_bits: u32, memoize: bool) -> Multipliers {
+        let cols = w_codes[0].len();
+        let n_bits = w_bits.max(1);
+        let pairs = cols.div_ceil(2);
+        let mut mults = Vec::with_capacity(w_codes.len() * pairs);
+        for row in w_codes {
+            for p in 0..pairs {
+                let w0 = row[2 * p];
+                let w1 = if 2 * p + 1 < cols { row[2 * p + 1] } else { 0 };
+                mults.push(ConstMultiplier::new(w0, w1, n_bits));
+            }
+        }
+        if !memoize {
+            return Multipliers::LutDirect { mults };
+        }
+        let acts = 1usize << n_bits;
+        let lut6 = mults.iter().map(ConstMultiplier::lut_count).sum();
+        let mut products = Vec::with_capacity(w_codes.len() * cols * acts);
+        for row in 0..w_codes.len() {
+            for col in 0..cols {
+                let m = &mults[row * pairs + col / 2];
+                for a in 0..acts {
+                    products.push(m.eval(col % 2 == 1, a as u32));
+                }
+            }
+        }
+        Multipliers::LutTables { products, acts, lut6 }
+    }
+
+    /// Branchless multi-threshold over the flattened levels — bit-exact
+    /// vs `MultiThreshold::apply` (the 15-wide compare+sum vectorizes;
+    /// an early-exit loop measured slower).
+    #[inline]
+    pub fn threshold(&self, acc: i32, ch: usize) -> i32 {
+        let ts = &self.thr_flat[ch * self.levels..(ch + 1) * self.levels];
+        match self.signs[ch] {
+            s if s > 0 => ts.iter().map(|&t| (acc >= t) as i32).sum(),
+            s if s < 0 => ts.iter().map(|&t| (acc <= t) as i32).sum(),
+            _ => self.consts[ch],
+        }
+    }
+
+    /// Product `w[row][col] * act` through the plan's multiplier array.
+    #[inline]
+    pub fn mul(&self, row: usize, col: usize, act: i32) -> i32 {
+        match &self.mults {
+            Multipliers::Weights => self.wflat[row * self.cols + col] * act,
+            Multipliers::LutDirect { mults } => {
+                let pairs = self.cols.div_ceil(2);
+                mults[row * pairs + col / 2].eval(col % 2 == 1, act as u32)
+            }
+            Multipliers::LutTables { products, acts, .. } => {
+                products[(row * self.cols + col) * acts + act as usize]
+            }
+        }
+    }
+
+    /// Inner product of weight row `row` with a full im2col patch
+    /// (`[cols]`, column order) through the plan's multiplier array.
+    #[inline]
+    pub fn dot(&self, row: usize, patch: &[i32]) -> i32 {
+        match &self.mults {
+            Multipliers::Weights => {
+                let wrow = &self.wflat[row * self.cols..(row + 1) * self.cols];
+                wrow.iter().zip(patch).map(|(w, a)| w * a).sum()
+            }
+            _ => (0..patch.len()).map(|col| self.mul(row, col, patch[col])).sum(),
+        }
+    }
+
+    /// Physical LUT6 count of this layer's multiplier array (0 when the
+    /// layer multiplies arithmetically).
+    pub fn lut_count(&self) -> usize {
+        match &self.mults {
+            Multipliers::Weights => 0,
+            Multipliers::LutDirect { mults } => {
+                mults.iter().map(ConstMultiplier::lut_count).sum()
+            }
+            Multipliers::LutTables { lut6, .. } => *lut6,
+        }
+    }
+}
+
+/// The dense classifier head, lowered. (`name` labels the simulator's
+/// stage stats, matching conv stages.)
+#[derive(Debug, Clone)]
+pub struct DensePlan {
+    pub name: String,
+    pub cout: usize,
+    /// `[CIN][COUT]`.
+    pub w_codes: Vec<Vec<i32>>,
+    pub scale: Vec<f32>,
+    pub bias: Vec<f32>,
+}
+
+/// One op of the compiled network, index-aligned with `Network::ops`
+/// (trace callbacks keep their op indices across the lowering).
+#[derive(Debug, Clone)]
+pub enum PlanOp {
+    Input,
+    Conv(ConvPlan),
+    /// Residual tee; `pixels` is the feature-map size at the tee (the
+    /// simulator sizes the bypass FIFO from it).
+    ResPush { pixels: usize },
+    ResAdd { bits: u32 },
+    /// Global sum-pool; `pixels` is the map size being pooled.
+    PoolSum { pixels: usize },
+    Dense(DensePlan),
+}
+
+/// A network compiled for one datapath: what the executor runs, the
+/// dataflow simulator builds stages from, and the serving stack reads
+/// geometry out of. (The datapath itself lives in each conv's
+/// [`Multipliers`] variant — that is the single source of truth.)
+#[derive(Debug, Clone)]
+pub struct NetworkPlan {
+    pub io: IoGeom,
+    pub ops: Vec<PlanOp>,
+}
+
+impl NetworkPlan {
+    /// Lower a network once into per-layer plans. On `LutFabric`, every
+    /// <=4-bit layer's products are memoized out of the simulated LUT6_2
+    /// primitives ([`Multipliers::LutTables`]).
+    pub fn compile(net: &Network, datapath: Datapath) -> Self {
+        Self::lower(net, datapath, true)
+    }
+
+    /// Like [`compile`](Self::compile), but `LutFabric` layers keep the
+    /// per-MAC LUT6_2 readout ([`Multipliers::LutDirect`]) instead of
+    /// memoized tables — the pre-compilation baseline the bench and the
+    /// equivalence tests run against.
+    pub fn compile_direct(net: &Network, datapath: Datapath) -> Self {
+        Self::lower(net, datapath, false)
+    }
+
+    fn lower(net: &Network, datapath: Datapath, memoize: bool) -> Self {
+        let mut hw = net.meta.image_size;
+        let ops = net
+            .ops
+            .iter()
+            .map(|op| match op {
+                Op::Input { .. } => PlanOp::Input,
+                Op::Conv { .. } => {
+                    let plan = ConvPlan::build(op, hw, datapath, memoize);
+                    hw = plan.geom.out_h();
+                    PlanOp::Conv(plan)
+                }
+                Op::ResPush {} => PlanOp::ResPush { pixels: hw * hw },
+                Op::ResAdd { bits } => PlanOp::ResAdd { bits: *bits },
+                Op::PoolSum {} => PlanOp::PoolSum { pixels: hw * hw },
+                Op::Dense { name, cout, w_codes, scale, bias, .. } => {
+                    PlanOp::Dense(DensePlan {
+                        name: name.clone(),
+                        cout: *cout,
+                        w_codes: w_codes.clone(),
+                        scale: scale.clone(),
+                        bias: bias.clone(),
+                    })
+                }
+            })
+            .collect();
+        Self { io: net.io(), ops }
+    }
+
+    /// All compiled conv layers in order.
+    pub fn convs(&self) -> impl Iterator<Item = &ConvPlan> {
+        self.ops.iter().filter_map(|op| match op {
+            PlanOp::Conv(c) => Some(c),
+            _ => None,
+        })
+    }
+
+    /// Number of conv stages (fold vector sizing).
+    pub fn n_convs(&self) -> usize {
+        self.convs().count()
+    }
+
+    /// Total physical LUT6 of the compiled multiplier arrays.
+    pub fn lut_count(&self) -> usize {
+        self.convs().map(ConvPlan::lut_count).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::mobilenet_v2_small;
+    use crate::util::prop::Rng;
+
+    fn geom(in_hw: usize, k: usize, stride: usize, pad: usize) -> ConvGeom {
+        ConvGeom { in_h: in_hw, in_w: in_hw, cin: 1, cout: 1, k, stride, pad }
+    }
+
+    #[test]
+    fn interior_ranges() {
+        // 3x3 s1 p1 on 8: outputs 1..7 have full windows
+        let g = geom(8, 3, 1, 1);
+        assert_eq!(g.interior(g.out_h(), g.in_h), (1, 7));
+        // pointwise: everything is interior
+        let g = geom(5, 1, 1, 0);
+        assert_eq!(g.interior(g.out_h(), g.in_h), (0, 5));
+        // 3x3 s2 p1 on 7 (odd width): out 4, interior {1, 2}
+        let g = geom(7, 3, 2, 1);
+        assert_eq!(g.out_h(), 4);
+        assert_eq!(g.interior(g.out_h(), g.in_h), (1, 3));
+        // degenerate 1x1 map under a 3x3 kernel: all border
+        let g = geom(1, 3, 1, 1);
+        let (lo, hi) = g.interior(g.out_h(), g.in_h);
+        assert!(lo >= hi, "no interior on a 1x1 map");
+    }
+
+    #[test]
+    fn interior_windows_are_actually_in_bounds() {
+        // exhaustive cross-check of the interior predicate
+        for in_hw in [1usize, 2, 3, 5, 7, 9] {
+            for k in [1usize, 3] {
+                for stride in [1usize, 2] {
+                    let pad = (k - 1) / 2;
+                    if in_hw + 2 * pad < k {
+                        continue;
+                    }
+                    let g = geom(in_hw, k, stride, pad);
+                    let (lo, hi) = g.interior(g.out_h(), g.in_h);
+                    for o in 0..g.out_h() {
+                        let full = (0..k).all(|i| {
+                            let y = (o * stride + i) as isize - pad as isize;
+                            y >= 0 && y < in_hw as isize
+                        });
+                        assert_eq!(
+                            (lo..hi).contains(&o),
+                            full,
+                            "in={in_hw} k={k} s={stride} o={o}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lut_tables_match_direct_readout_and_arithmetic() {
+        let mut rng = Rng::new(0xA11CE);
+        let w_codes: Vec<Vec<i32>> = (0..5).map(|_| rng.vec_i32(7, -8, 7)).collect();
+        let direct = ConvPlan::lut_multipliers(&w_codes, 4, false);
+        let tables = ConvPlan::lut_multipliers(&w_codes, 4, true);
+        let plan_of = |mults: Multipliers| ConvPlan {
+            name: "t".into(),
+            kind: ConvKind::Pw,
+            geom: ConvGeom { in_h: 1, in_w: 1, cin: 7, cout: 5, k: 1, stride: 1, pad: 0 },
+            wflat: w_codes.iter().flatten().copied().collect(),
+            cols: 7,
+            mults,
+            thr_flat: vec![0; 5 * 15],
+            levels: 15,
+            signs: vec![1; 5],
+            consts: vec![0; 5],
+            tap_offsets: vec![0],
+            oy_interior: (0, 1),
+            ox_interior: (0, 1),
+        };
+        let (pd, pt) = (plan_of(direct), plan_of(tables));
+        for row in 0..5 {
+            for col in 0..7 {
+                for act in 0..16 {
+                    let want = w_codes[row][col] * act;
+                    assert_eq!(pd.mul(row, col, act), want, "direct r{row} c{col} a{act}");
+                    assert_eq!(pt.mul(row, col, act), want, "tables r{row} c{col} a{act}");
+                }
+            }
+        }
+        // odd column count: the pad weight of the last pair is 0
+        assert_eq!(pd.lut_count(), pt.lut_count());
+        assert!(pt.lut_count() > 0);
+    }
+
+    #[test]
+    fn compile_tracks_shapes_and_alignment() {
+        let net = Network::synthetic(&mobilenet_v2_small(), 3);
+        let plan = NetworkPlan::compile(&net, Datapath::Arithmetic);
+        assert_eq!(plan.ops.len(), net.ops.len(), "plan ops index-align with network ops");
+        assert_eq!(plan.io.image_size, net.meta.image_size);
+        assert_eq!(plan.io.num_classes, net.meta.num_classes);
+        assert_eq!(plan.n_convs(), net.convs().count());
+        // geometry chains: each conv's input side equals the previous out
+        let mut hw = net.meta.image_size;
+        for cp in plan.convs() {
+            assert_eq!(cp.geom.in_h, hw, "{}", cp.name);
+            hw = cp.geom.out_h();
+        }
+        // arithmetic plans own no LUTs; LutFabric plans do
+        assert_eq!(plan.lut_count(), 0);
+        let lut = NetworkPlan::compile(&net, Datapath::LutFabric);
+        assert!(lut.lut_count() > 0);
+        // the 8-bit stem stays arithmetic even on the LUT datapath
+        let stem = lut.convs().next().unwrap();
+        assert!(matches!(stem.mults, Multipliers::Weights));
+    }
+
+    #[test]
+    fn wide_activations_fall_back_to_arithmetic() {
+        // in_bits > w_bits would index past a multiplier's product table
+        // (and the per-MAC readout asserts the same bound), so such
+        // layers must not take the LUT path
+        let mut net = Network::synthetic(&mobilenet_v2_small(), 11);
+        if let Op::Conv { w_bits, in_bits, w_codes, .. } = &mut net.ops[2] {
+            *w_bits = 2;
+            *in_bits = 4;
+            for row in w_codes.iter_mut() {
+                for w in row.iter_mut() {
+                    *w = (*w).clamp(-2, 1);
+                }
+            }
+        } else {
+            unreachable!("op 2 of the synthetic net is a conv");
+        }
+        let plan = NetworkPlan::compile(&net, Datapath::LutFabric);
+        let narrowed = plan.convs().nth(1).unwrap();
+        assert!(matches!(narrowed.mults, Multipliers::Weights), "w2/a4 layer stays arithmetic");
+        // 4/4 layers still map to LUTs
+        assert!(plan.lut_count() > 0);
+    }
+}

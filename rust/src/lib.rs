@@ -12,12 +12,13 @@
 //!   HLO text artifacts.
 //! * **L3 (this crate)** — the accelerator generator and runtime:
 //!   bit-exact FPGA fabric simulation ([`fabric`]), the streamlined graph
-//!   IR and reference executor ([`graph`]), the cycle-level reconfigurable
-//!   dataflow architecture ([`dataflow`]), the synthesis analog with
-//!   folding optimizer ([`synth`]), roofline analysis ([`roofline`]),
-//!   baseline accelerator models ([`baselines`]), the PJRT runtime that
-//!   executes the AOT artifacts ([`runtime`]), and the async serving
-//!   coordinator ([`coordinator`]).
+//!   IR, compiled layer plans + kernel engine, and reference executor
+//!   ([`graph`]), the cycle-level reconfigurable dataflow architecture
+//!   ([`dataflow`]), the synthesis analog with folding optimizer
+//!   ([`synth`]), roofline analysis ([`roofline`]), baseline accelerator
+//!   models ([`baselines`]), the PJRT runtime that executes the AOT
+//!   artifacts ([`runtime`]), and the async serving coordinator
+//!   ([`coordinator`]).
 //!
 //! The inference path is batch-major end to end: the coordinator's
 //! dynamic batcher dispatches whole batches to persistent per-worker
@@ -25,9 +26,13 @@
 //! [`graph::executor::Executor::run_batch`] (layer-major loops, scoped
 //! threads) or stream them overlapped through the dataflow pipeline —
 //! batching buys arithmetic throughput, not just queueing fairness.
+//! Every backend runs compiled layer plans ([`graph::plan`], DESIGN.md
+//! S17): networks are lowered once — flattened weights, interior/border
+//! im2row splits, memoized LUT6_2 product tables — and the executor,
+//! simulator and serving stack consume the same plans.
 //!
 //! See the repo-root `README.md` for build/run instructions, `DESIGN.md`
-//! for the system inventory (S1-S16) and the experiment index
+//! for the system inventory (S1-S17) and the experiment index
 //! (Table 1/2, Figures 1/2/5/6), and `EXPERIMENTS.md` for measured
 //! results vs the paper.
 

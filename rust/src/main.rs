@@ -112,8 +112,8 @@ fn load_network(artifacts: &Artifacts) -> Result<Network> {
 
 fn verify(artifacts: &Artifacts, n: usize, lut_fabric: bool) -> Result<()> {
     let net = load_network(artifacts)?;
-    let (images, labels) =
-        artifacts.load_test_set(net.meta.image_size, net.meta.image_size, net.meta.in_ch)?;
+    let io = net.io();
+    let (images, labels) = artifacts.load_test_set(io.image_size, io.image_size, io.in_ch)?;
     let n = if n == 0 { images.len() } else { n.min(images.len()) };
     println!("loaded network ({} ops) + {} test images", net.ops.len(), n);
 
@@ -138,15 +138,9 @@ fn verify(artifacts: &Artifacts, n: usize, lut_fabric: bool) -> Result<()> {
         100.0 * correct as f64 / n as f64,
     );
 
-    // PJRT golden model cross-check (batch 1 artifact)
-    match Runtime::load(
-        artifacts.model_hlo(1),
-        1,
-        net.meta.image_size,
-        net.meta.image_size,
-        net.meta.in_ch,
-        net.meta.num_classes,
-    ) {
+    // PJRT golden model cross-check (batch 1 artifact); the runtime
+    // shares the executor/simulator geometry via the plan-level IoGeom
+    match Runtime::load_for(artifacts.model_hlo(1), 1, &io) {
         Ok(rt) => {
             let mut mismatches = 0;
             let check = n.min(16);
@@ -173,12 +167,7 @@ fn verify(artifacts: &Artifacts, n: usize, lut_fabric: bool) -> Result<()> {
         let ex = Executor::new(&net, Datapath::LutFabric);
         let m = n.min(8);
         let ok = (0..m).all(|i| {
-            let t = Tensor::from_hwc(
-                net.meta.image_size,
-                net.meta.image_size,
-                net.meta.in_ch,
-                images[i].clone(),
-            );
+            let t = Tensor::from_hwc(io.image_size, io.image_size, io.in_ch, images[i].clone());
             ex.execute(&t) == report.logits[i]
         });
         println!("LUT6-fabric datapath: {}/{m} bit-exact", if ok { m } else { 0 });

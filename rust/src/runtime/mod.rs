@@ -121,6 +121,18 @@ impl Runtime {
 }
 
 impl Runtime {
+    /// [`load`](Self::load) from a network's compiled I/O geometry
+    /// (`Network::io()` / `NetworkPlan::io`, DESIGN.md S17) instead of
+    /// loose dimensions — keeps the PJRT geometry and the executor /
+    /// simulator geometry from drifting apart.
+    pub fn load_for(
+        path: impl AsRef<Path>,
+        batch: usize,
+        io: &crate::graph::plan::IoGeom,
+    ) -> Result<Self> {
+        Self::load(path, batch, io.image_size, io.image_size, io.in_ch, io.num_classes)
+    }
+
     /// Run a batch given per-image code vectors (must match `batch`).
     pub fn run_images(&self, images: &[Vec<i32>]) -> Result<Vec<Vec<f32>>> {
         anyhow::ensure!(images.len() == self.batch, "need exactly {} images", self.batch);
@@ -214,6 +226,14 @@ mod tests {
     #[test]
     fn stub_load_is_a_loud_error() {
         let e = Runtime::load("artifacts/model.hlo.txt", 1, 16, 16, 3, 10).unwrap_err();
+        assert!(e.to_string().contains("xla"), "{e}");
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_load_for_takes_io_geometry() {
+        let io = crate::graph::plan::IoGeom { image_size: 16, in_ch: 3, num_classes: 10 };
+        let e = Runtime::load_for("artifacts/model.hlo.txt", 1, &io).unwrap_err();
         assert!(e.to_string().contains("xla"), "{e}");
     }
 

@@ -1,0 +1,157 @@
+//! Plan-compilation equivalence properties (DESIGN.md S17, no artifacts
+//! needed): on randomized `Network::synthetic` configs — varying stride,
+//! padding, Dw/Pw/Std kinds and odd widths that exercise the
+//! interior/border split — the Arithmetic and LutFabric plans must agree
+//! bit-for-bit, the memoized LUT product tables must match the per-MAC
+//! LUT6_2 readout they were read from, and the dataflow pipeline built
+//! from the same plan must reproduce the executor exactly.
+
+use lutmul::dataflow::{FoldConfig, Pipeline};
+use lutmul::graph::executor::{Datapath, Executor, Tensor};
+use lutmul::graph::network::{ConvKind, Network};
+use lutmul::graph::plan::NetworkPlan;
+use lutmul::graph::{ArchSpec, LayerSpec};
+use lutmul::util::prop::{self, Rng};
+
+/// Random 4-bit conv stack + 8-bit classifier head, in the shape format
+/// `Network::synthetic` lowers (SAME padding, pad = (k-1)/2).
+fn random_spec(rng: &mut Rng) -> ArchSpec {
+    let input_hw = *rng.choose(&[5usize, 7, 9, 11, 16]); // odd widths included
+    let input_ch = 1 + rng.below(3) as usize;
+    let mut layers = Vec::new();
+    let (mut cin, mut hw) = (input_ch, input_hw);
+    let n_layers = 2 + rng.below(3) as usize;
+    for i in 0..n_layers {
+        let kind = *rng.choose(&[ConvKind::Std, ConvKind::Pw, ConvKind::Dw]);
+        let (k, stride) = match kind {
+            ConvKind::Pw => (1, 1),
+            _ => (3, 1 + rng.below(2) as usize),
+        };
+        let cout = match kind {
+            ConvKind::Dw => cin,
+            _ => 1 + rng.below(6) as usize,
+        };
+        layers.push(LayerSpec {
+            name: format!("l{i}"),
+            kind,
+            cin,
+            cout,
+            k,
+            stride,
+            in_hw: hw,
+            w_bits: 4,
+            a_bits: 4,
+        });
+        hw = hw.div_ceil(stride);
+        cin = cout;
+    }
+    layers.push(LayerSpec {
+        name: "fc".into(),
+        kind: ConvKind::Pw,
+        cin,
+        cout: 3,
+        k: 1,
+        stride: 1,
+        in_hw: 1,
+        w_bits: 8,
+        a_bits: 8,
+    });
+    ArchSpec { name: "random".into(), input_hw, input_ch, layers }
+}
+
+fn random_tensors(rng: &mut Rng, net: &Network, n: usize) -> Vec<Tensor> {
+    let (s, c) = (net.meta.image_size, net.meta.in_ch);
+    (0..n).map(|_| Tensor::from_hwc(s, s, c, rng.vec_i32(s * s * c, 0, 15))).collect()
+}
+
+#[test]
+fn prop_datapaths_and_plans_agree_bit_for_bit() {
+    prop::cases(10, |rng| {
+        let spec = random_spec(rng);
+        let net = Network::synthetic(&spec, rng.next_u64());
+        let tensors = random_tensors(rng, &net, 3);
+
+        let arith = Executor::new(&net, Datapath::Arithmetic);
+        let tables = Executor::new(&net, Datapath::LutFabric);
+        let direct = Executor::from_plan(NetworkPlan::compile_direct(&net, Datapath::LutFabric));
+        let want: Vec<Vec<f32>> = tensors.iter().map(|t| arith.execute(t)).collect();
+        for (t, w) in tensors.iter().zip(&want) {
+            assert_eq!(&tables.execute(t), w, "LutFabric tables vs Arithmetic (hw={})", net.meta.image_size);
+            assert_eq!(&direct.execute(t), w, "per-MAC LUT readout vs Arithmetic");
+        }
+        // batch path agrees on both datapaths
+        assert_eq!(arith.run_batch(&tensors), want, "Arithmetic run_batch");
+        assert_eq!(tables.run_batch(&tensors), want, "LutFabric run_batch");
+        // the LUT plans account the same physical fabric
+        assert_eq!(tables.plan().lut_count(), direct.plan().lut_count());
+        assert!(tables.plan().lut_count() > 0, "4-bit layers must map to LUTs");
+    });
+}
+
+#[test]
+fn prop_pipeline_from_plan_matches_executor() {
+    prop::cases(6, |rng| {
+        let spec = random_spec(rng);
+        let net = Network::synthetic(&spec, rng.next_u64());
+        let tensors = random_tensors(rng, &net, 2);
+        let images: Vec<Vec<i32>> = tensors.iter().map(|t| t.data.clone()).collect();
+        let ex = Executor::new(&net, Datapath::Arithmetic);
+        let plan = ex.plan();
+        let mut pipe = Pipeline::from_plan(plan, &FoldConfig::fully_parallel(plan.n_convs()), 8);
+        let report = pipe.run(&images);
+        for (got, t) in report.logits.iter().zip(&tensors) {
+            assert_eq!(got, &ex.execute(t), "pipeline vs executor (hw={})", net.meta.image_size);
+        }
+    });
+}
+
+#[test]
+fn border_split_covers_clamped_edges_deterministically() {
+    // 5x5 input, stride-2 std conv then stride-2 depthwise: the interior
+    // is a single output column/row, everything else is border rim
+    let layers = vec![
+        LayerSpec {
+            name: "s".into(),
+            kind: ConvKind::Std,
+            cin: 2,
+            cout: 4,
+            k: 3,
+            stride: 2,
+            in_hw: 5,
+            w_bits: 4,
+            a_bits: 4,
+        },
+        LayerSpec {
+            name: "d".into(),
+            kind: ConvKind::Dw,
+            cin: 4,
+            cout: 4,
+            k: 3,
+            stride: 2,
+            in_hw: 3,
+            w_bits: 4,
+            a_bits: 4,
+        },
+        LayerSpec {
+            name: "fc".into(),
+            kind: ConvKind::Pw,
+            cin: 4,
+            cout: 2,
+            k: 1,
+            stride: 1,
+            in_hw: 1,
+            w_bits: 8,
+            a_bits: 8,
+        },
+    ];
+    let spec = ArchSpec { name: "edges".into(), input_hw: 5, input_ch: 2, layers };
+    let net = Network::synthetic(&spec, 0xED6E5);
+    let mut rng = Rng::new(9);
+    let tensors = random_tensors(&mut rng, &net, 4);
+    let a = Executor::new(&net, Datapath::Arithmetic);
+    let b = Executor::new(&net, Datapath::LutFabric);
+    for t in &tensors {
+        assert_eq!(a.execute(t), b.execute(t));
+    }
+    assert_eq!(a.run_batch(&tensors), b.run_batch(&tensors));
+}
