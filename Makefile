@@ -4,7 +4,7 @@
 
 PYTHON ?= python3
 
-.PHONY: artifacts artifacts-fig2 test-python test-rust bench-smoke lint
+.PHONY: artifacts artifacts-fig2 test-python test-rust bench-smoke multi-smoke lint
 
 artifacts:
 	mkdir -p artifacts
@@ -26,6 +26,15 @@ test-rust:
 # LutFabric) without the full sweep.
 bench-smoke:
 	cd rust && cargo bench --bench bench_batch -- --smoke
+
+# Sharded-chain equivalence smoke (EXPERIMENTS.md E11): execute 2- and
+# 3-way ShardChains on the small network (synthetic twin when the
+# artifacts are absent), assert bit-exactness vs the single-device
+# pipeline and measured-vs-analytic FPS within 15%. Exits nonzero on any
+# divergence, so CI gates on it.
+multi-smoke:
+	cd rust && cargo run --release -- multi --devices 2 --run --n 8
+	cd rust && cargo run --release -- multi --devices 3 --run --n 8
 
 lint:
 	cd rust && cargo fmt --check && cargo clippy -- -D warnings

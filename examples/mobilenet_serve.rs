@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
     let ex = Executor::new(&net, Datapath::Arithmetic);
     let mut pipe = Pipeline::build(&net, &FoldConfig::fully_parallel(net.convs().count()), 16);
     let n_check = 8;
-    let sim = pipe.run(&images[..n_check]);
+    let sim = pipe.run(&images[..n_check])?;
     let tensors: Vec<Tensor> = images[..n_check]
         .iter()
         .map(|img| Tensor::from_hwc(size, size, net.meta.in_ch, img.clone()))
@@ -84,7 +84,7 @@ fn main() -> anyhow::Result<()> {
     println!("\n[2/4] dataflow accelerator simulation (full test set)");
     let mut pipe = Pipeline::build(&net, &FoldConfig::fully_parallel(net.convs().count()), 16);
     let t0 = std::time::Instant::now();
-    let rep = pipe.run(&images);
+    let rep = pipe.run(&images)?;
     let host = t0.elapsed();
     let correct = rep
         .logits

@@ -111,8 +111,8 @@ fn main() {
     println!("\nSimulator backend (cycle-level, batch-pipelined):");
     let plan = ex.plan();
     let folds = FoldConfig::fully_parallel(plan.n_convs());
-    let cold = Pipeline::from_plan(plan, &folds, 16).run(&flat[..1]);
-    let warm = Pipeline::from_plan(plan, &folds, 16).run(&flat[..8]);
+    let cold = Pipeline::from_plan(plan, &folds, 16).run(&flat[..1]).unwrap();
+    let warm = Pipeline::from_plan(plan, &folds, 16).run(&flat[..8]).unwrap();
     println!(
         "    cold single image: {} cycles | batch of 8: {} cycles total, marginal image {} cycles",
         cold.cycles,

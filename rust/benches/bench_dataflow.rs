@@ -56,13 +56,38 @@ fn main() {
         let mut pipe = Pipeline::build(&net, &folds, 16);
         let imgs = images[..n].to_vec();
         let r = bench(&format!("pipeline sim: 64 images (fold={fold})"), 10, || {
-            pipe.run(&imgs).cycles
+            pipe.run(&imgs).unwrap().cycles
         });
         println!(
             "    -> {:.0} img/s | {:.2} M simulated MAC-lookups/s",
             per_second(n, &r),
             per_second(n, &r) * macs_per_img as f64 / 1e6
         );
+    }
+
+    // --- sharded chain (DESIGN.md S18): 2 and 3 simulated devices over
+    // 100 GbE; host throughput of the whole-chain co-simulation ---
+    for devices in [2usize, 3] {
+        use lutmul::dataflow::multi::LinkModel;
+        use lutmul::dataflow::ShardChain;
+        use lutmul::graph::plan::NetworkPlan;
+        let plan = NetworkPlan::compile(&net, Datapath::Arithmetic);
+        let shards = plan.shard_evenly(devices);
+        let folds = FoldConfig::fully_parallel(plan.n_convs());
+        let mut chain = ShardChain::new(
+            &shards,
+            &folds,
+            16,
+            &LinkModel::gbe100(),
+            333.0,
+            net.meta.a_bits.max(1),
+        )
+        .expect("balanced shards chain");
+        let imgs = images[..n].to_vec();
+        let r = bench(&format!("shard chain sim: 64 images ({devices} devices)"), 10, || {
+            chain.run(&imgs).unwrap().cycles
+        });
+        println!("    -> {:.0} img/s host", per_second(n, &r));
     }
 
     // --- PJRT golden runtime ---

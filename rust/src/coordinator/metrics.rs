@@ -1,8 +1,18 @@
-//! Serving metrics: throughput, latency percentiles, GOPS, and per-batch
+//! Serving metrics: throughput, latency percentiles, GOPS, per-batch
 //! dispatch statistics (batch-size histogram + batch service-time
-//! percentiles) for the batch-major execution path (EXPERIMENTS.md E9).
+//! percentiles) for the batch-major execution path (EXPERIMENTS.md E9),
+//! and per-shard occupancy/stall counters for the sharded backend
+//! (DESIGN.md S18).
 
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
+
+/// Cumulative occupancy/stall counters for one shard of a sharded
+/// backend's chain, plus its egress link (zeroed for the tail shard,
+/// which has no downstream link) — the same record the chain itself
+/// reports (`dataflow::ShardCounters`), re-exported under the serving
+/// tier's name.
+pub use crate::dataflow::pipeline::ShardCounters as ShardOccupancy;
 
 /// Online latency/throughput recorder shared by the serving workers.
 #[derive(Debug)]
@@ -15,6 +25,10 @@ pub struct Metrics {
     batch_sizes: Vec<usize>,
     /// Backend service time per dispatched batch (queueing excluded).
     batch_service_us: Vec<u64>,
+    /// Latest cumulative per-shard snapshot of each sharded worker's
+    /// chain, keyed by worker index (empty for whole-network backends);
+    /// summaries aggregate across workers per shard index.
+    shards_by_worker: BTreeMap<usize, Vec<ShardOccupancy>>,
 }
 
 impl Metrics {
@@ -26,6 +40,7 @@ impl Metrics {
             ops_per_image,
             batch_sizes: Vec::new(),
             batch_service_us: Vec::new(),
+            shards_by_worker: BTreeMap::new(),
         }
     }
 
@@ -39,6 +54,28 @@ impl Metrics {
     pub fn record_batch(&mut self, size: usize, service: Duration) {
         self.batch_sizes.push(size);
         self.batch_service_us.push(service.as_micros() as u64);
+    }
+
+    /// Replace worker `worker`'s per-shard snapshot with its latest
+    /// cumulative counters. Counters grow over a worker's lifetime, so
+    /// the newest snapshot subsumes that worker's older ones; snapshots
+    /// are keyed per worker so a pool of sharded workers aggregates
+    /// instead of clobbering each other.
+    pub fn record_shards(&mut self, worker: usize, snapshot: Vec<ShardOccupancy>) {
+        self.shards_by_worker.insert(worker, snapshot);
+    }
+
+    /// Per-shard occupancy aggregated across the worker pool (empty
+    /// without a sharded backend): counters sum, high-water marks max.
+    pub fn shards(&self) -> Vec<ShardOccupancy> {
+        let n = self.shards_by_worker.values().map(Vec::len).max().unwrap_or(0);
+        let mut agg = vec![ShardOccupancy::default(); n];
+        for snapshot in self.shards_by_worker.values() {
+            for (a, s) in agg.iter_mut().zip(snapshot) {
+                a.absorb(s);
+            }
+        }
+        agg
     }
 
     pub fn completed(&self) -> u64 {
@@ -99,6 +136,7 @@ impl Metrics {
             mean_batch: self.mean_batch(),
             batch_p50_us: self.batch_service_percentile_us(50.0),
             batch_p99_us: self.batch_service_percentile_us(99.0),
+            shards: self.shards(),
         }
     }
 }
@@ -130,6 +168,9 @@ pub struct MetricsSummary {
     pub batch_p50_us: u64,
     /// p99 of per-batch backend service time.
     pub batch_p99_us: u64,
+    /// Per-shard occupancy/stall counters aggregated across the worker
+    /// pool (sharded backend only).
+    pub shards: Vec<ShardOccupancy>,
 }
 
 impl std::fmt::Display for MetricsSummary {
@@ -146,7 +187,16 @@ impl std::fmt::Display for MetricsSummary {
             self.mean_batch,
             self.batch_p50_us,
             self.batch_p99_us
-        )
+        )?;
+        for (i, s) in self.shards.iter().enumerate() {
+            write!(
+                f,
+                " | shard{i} {} fires, {} stall cy, fifo hw {}, link busy {} cy stall {} cy",
+                s.fires, s.stalled_cycles, s.fifo_high_water, s.link_busy_cycles,
+                s.link_stalled_cycles
+            )?;
+        }
+        Ok(())
     }
 }
 
@@ -207,5 +257,33 @@ mod tests {
         assert_eq!(s.batch_p99_us, 600);
         // summary line mentions the batch stats
         assert!(s.to_string().contains("3 batches"));
+    }
+
+    #[test]
+    fn shard_snapshots_aggregate_per_worker() {
+        let mut m = Metrics::new(1);
+        assert!(m.shards().is_empty());
+        m.record_shards(0, vec![ShardOccupancy { fires: 10, ..Default::default() }]);
+        // chain counters are cumulative, so a worker's newer snapshot
+        // subsumes its older one...
+        m.record_shards(0, vec![
+            ShardOccupancy { fires: 25, stalled_cycles: 3, fifo_high_water: 4, ..Default::default() },
+            ShardOccupancy { fires: 7, link_busy_cycles: 40, ..Default::default() },
+        ]);
+        // ...while a second worker's chain aggregates instead of clobbering
+        m.record_shards(1, vec![
+            ShardOccupancy { fires: 5, fifo_high_water: 9, ..Default::default() },
+            ShardOccupancy { fires: 2, link_busy_cycles: 10, ..Default::default() },
+        ]);
+        let agg = m.shards();
+        assert_eq!(agg.len(), 2);
+        assert_eq!(agg[0].fires, 30, "fires sum across workers");
+        assert_eq!(agg[0].stalled_cycles, 3);
+        assert_eq!(agg[0].fifo_high_water, 9, "high-water takes the max");
+        assert_eq!(agg[1].link_busy_cycles, 50);
+        let s = m.summary();
+        assert_eq!(s.shards.len(), 2);
+        assert!(s.to_string().contains("shard0 30 fires"), "{s}");
+        assert!(s.to_string().contains("shard1 9 fires"), "{s}");
     }
 }

@@ -4,5 +4,5 @@
 pub mod metrics;
 pub mod server;
 
-pub use metrics::{Metrics, MetricsSummary};
+pub use metrics::{Metrics, MetricsSummary, ShardOccupancy};
 pub use server::{argmax, run_batch, Backend, Coordinator, InferenceResult, ServeConfig};

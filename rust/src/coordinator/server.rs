@@ -12,7 +12,12 @@
 //!    rather than draining between images;
 //!  * `Reference` — the spec-level integer executor (fast path);
 //!  * `LutFabric` — the executor with every 4-bit multiplication
-//!    performed by simulated LUT6_2 readout (hardware-true datapath).
+//!    performed by simulated LUT6_2 readout (hardware-true datapath);
+//!  * `Sharded` — the network sliced across N simulated devices
+//!    (DESIGN.md S18): each worker owns a [`ShardChain`] of shard
+//!    pipelines joined by bandwidth/latency-charged links and streams
+//!    whole batches through it, reporting per-shard occupancy/stall
+//!    counters into the metrics.
 //!
 //! Batches are executed *batch-major* end to end: each worker keeps a
 //! persistent backend (executor or pipeline, built once at spawn) and
@@ -32,12 +37,14 @@ use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryS
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::dataflow::{FoldConfig, Pipeline};
+use crate::dataflow::multi::LinkModel;
+use crate::dataflow::{FoldConfig, Pipeline, ShardChain};
+use crate::fabric::device::U280;
 use crate::graph::executor::{Datapath, Executor, Tensor};
 use crate::graph::network::Network;
 use crate::graph::plan::NetworkPlan;
 
-use super::metrics::{Metrics, MetricsSummary};
+use super::metrics::{Metrics, MetricsSummary, ShardOccupancy};
 
 /// Inference backend selection.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -45,6 +52,10 @@ pub enum Backend {
     Simulator,
     Reference,
     LutFabric,
+    /// The network sliced across `devices` simulated FPGAs joined by
+    /// 100 GbE links; batches stream through a [`ShardChain`]
+    /// (DESIGN.md S18).
+    Sharded { devices: usize },
 }
 
 /// Coordinator configuration.
@@ -135,6 +146,11 @@ impl Coordinator {
                         // memoized LUT product tables) and the pipeline
                         // are reused across every batch
                         let mut worker = WorkerBackend::new(&net, backend, n_workers);
+                        // counters of backends this worker already retired
+                        // (rebuilt after a failed batch): folded into every
+                        // later snapshot so the worker's recorded shard
+                        // metrics never roll backwards
+                        let mut shard_base: Vec<ShardOccupancy> = Vec::new();
                         while let Ok(batch) = wrx.recv() {
                             // move images out of the requests (no copies on
                             // the hot path), keep the response halves
@@ -145,18 +161,56 @@ impl Coordinator {
                                 reqs.push((r.enqueued, r.resp));
                             }
                             let t_exec = Instant::now();
-                            let results = worker.run(images);
+                            let results = match worker.run(images) {
+                                Ok(r) => r,
+                                Err(e) => {
+                                    // structured sim failure: fail the
+                                    // waiting requests (their response
+                                    // channels drop) and rebuild the
+                                    // backend — a failed pipeline/chain
+                                    // still holds the dead batch's
+                                    // partial-image tokens, so reusing
+                                    // it would corrupt later results.
+                                    // Bank the dying chain's counters
+                                    // first: the rebuilt chain restarts
+                                    // from zero.
+                                    eprintln!("lutmul-worker-{wi}: batch failed: {e}");
+                                    if let Some(snap) = worker.shard_occupancy() {
+                                        if shard_base.len() < snap.len() {
+                                            shard_base
+                                                .resize(snap.len(), ShardOccupancy::default());
+                                        }
+                                        for (b, s) in shard_base.iter_mut().zip(&snap) {
+                                            b.absorb(s);
+                                        }
+                                    }
+                                    worker = WorkerBackend::new(&net, backend, n_workers);
+                                    continue;
+                                }
+                            };
                             let service = t_exec.elapsed();
                             // one latency sample per request, shared by the
                             // metrics and the client-visible result
                             let latencies: Vec<Duration> =
                                 reqs.iter().map(|(enq, _)| enq.elapsed()).collect();
-                            // one lock per batch, not per request
+                            // one lock per batch, not per request; a
+                            // poisoned lock (another worker panicked
+                            // mid-record) still yields usable counters
                             {
-                                let mut m = metrics.lock().unwrap();
+                                let mut m = metrics
+                                    .lock()
+                                    .unwrap_or_else(|e| e.into_inner());
                                 m.record_batch(reqs.len(), service);
                                 for &l in &latencies {
                                     m.record(l);
+                                }
+                                if let Some(mut snap) = worker.shard_occupancy() {
+                                    // fold in retired-backend counters so
+                                    // snapshots stay monotonic per worker
+                                    for (s, b) in snap.iter_mut().zip(&shard_base) {
+                                        s.absorb(b);
+                                    }
+                                    m.record_shards(wi, snap);
                                 }
                             }
                             for (((_, resp), logits), latency) in
@@ -242,7 +296,9 @@ impl Coordinator {
     }
 
     pub fn metrics(&self) -> MetricsSummary {
-        self.metrics.lock().unwrap().summary()
+        // recover from poisoning: one panicked worker must not wedge the
+        // operator's ability to read the summary
+        self.metrics.lock().unwrap_or_else(|e| e.into_inner()).summary()
     }
 
     pub fn rejected(&self) -> u64 {
@@ -263,6 +319,9 @@ impl Coordinator {
 /// memoized LUT product tables), not once per batch.
 enum WorkerBackend {
     Pipeline(Box<Pipeline>),
+    /// Sharded chain of shard pipelines joined by cycle-charged links
+    /// (DESIGN.md S18), built once per worker like the pipeline.
+    Chain(Box<ShardChain>),
     Exec { ex: Executor, size: usize, ch: usize, threads: usize },
 }
 
@@ -281,6 +340,24 @@ impl WorkerBackend {
                 let folds = FoldConfig::fully_parallel(plan.n_convs());
                 WorkerBackend::Pipeline(Box::new(Pipeline::from_plan(&plan, &folds, 16)))
             }
+            Backend::Sharded { devices } => {
+                // slice the compiled plan into MAC-balanced shards and
+                // join them with the default 100 GbE link model at the
+                // device clock the analytic multi-FPGA plan uses
+                let plan = NetworkPlan::compile(net, Datapath::Arithmetic);
+                let shards = plan.shard_evenly(devices.max(1));
+                let folds = FoldConfig::fully_parallel(plan.n_convs());
+                let chain = ShardChain::new(
+                    &shards,
+                    &folds,
+                    16,
+                    &LinkModel::gbe100(),
+                    U280.max_freq_mhz,
+                    net.meta.a_bits.max(1),
+                )
+                .expect("shard_evenly yields a contiguous dense-tailed chain");
+                WorkerBackend::Chain(Box::new(chain))
+            }
             Backend::Reference => Self::exec(net, Datapath::Arithmetic, threads),
             Backend::LutFabric => Self::exec(net, Datapath::LutFabric, threads),
         }
@@ -296,25 +373,43 @@ impl WorkerBackend {
 
     /// Execute one dispatched batch, batch-major. Takes the images by
     /// value so the executor path can move them into tensors copy-free.
-    fn run(&mut self, images: Vec<Vec<i32>>) -> Vec<Vec<f32>> {
+    /// Simulator/sharded backends surface structured `dataflow::SimError`
+    /// failures instead of panicking the worker.
+    fn run(&mut self, images: Vec<Vec<i32>>) -> anyhow::Result<Vec<Vec<f32>>> {
         match self {
             // the pipeline streams the whole batch back to back: image i+1
             // enters the first stage while image i is still in flight
-            WorkerBackend::Pipeline(pipe) => pipe.run(&images).logits,
+            WorkerBackend::Pipeline(pipe) => Ok(pipe.run(&images)?.logits),
+            // the chain streams the batch across every simulated device
+            WorkerBackend::Chain(chain) => Ok(chain.run(&images)?.logits),
             WorkerBackend::Exec { ex, size, ch, threads } => {
                 let tensors: Vec<Tensor> = images
                     .into_iter()
                     .map(|img| Tensor::from_hwc(*size, *size, *ch, img))
                     .collect();
-                ex.run_batch_with_threads(&tensors, *threads)
+                Ok(ex.run_batch_with_threads(&tensors, *threads))
             }
         }
+    }
+
+    /// Cumulative per-shard occupancy/stall counters (sharded backend
+    /// only), polled after each batch for the metrics —
+    /// `ShardChain::occupancy` sums counters in place, so the hot loop
+    /// never materializes the per-stage stat vectors. `ShardOccupancy`
+    /// IS the chain's own `ShardCounters`, re-exported.
+    fn shard_occupancy(&self) -> Option<Vec<ShardOccupancy>> {
+        let WorkerBackend::Chain(chain) = self else { return None };
+        Some(chain.occupancy())
     }
 }
 
 /// Execute a batch on a chosen backend (one-shot convenience; builds the
 /// backend, runs the batch batch-major with all cores, and tears it down).
-pub fn run_batch(net: &Network, backend: Backend, images: &[Vec<i32>]) -> Vec<Vec<f32>> {
+pub fn run_batch(
+    net: &Network,
+    backend: Backend,
+    images: &[Vec<i32>],
+) -> anyhow::Result<Vec<Vec<f32>>> {
     WorkerBackend::new(net, backend, 1).run(images.to_vec())
 }
 

@@ -76,6 +76,105 @@ impl<T> Fifo<T> {
     }
 }
 
+/// A bounded link between shard pipelines (DESIGN.md S18): a FIFO whose
+/// send side is paced by wire bandwidth (`cycles_per_token` between
+/// injections) and whose tokens only become visible to the receiver
+/// after the hop latency. Occupancy and stall statistics mirror
+/// [`Fifo`] so the chain can report link pressure next to FIFO
+/// pressure.
+#[derive(Debug, Clone)]
+pub struct LinkChannel<T> {
+    /// `(deliverable_cycle, token)` in send order.
+    q: VecDeque<(u64, T)>,
+    capacity: usize,
+    /// Wire occupancy per token (bandwidth model), >= 1.
+    pub cycles_per_token: u64,
+    /// One-way hop latency in cycles.
+    pub latency_cycles: u64,
+    /// First cycle at which the wire can accept the next token.
+    next_free: u64,
+    high_water: usize,
+    total_tokens: u64,
+    /// Cycles the wire spent transmitting.
+    pub busy_cycles: u64,
+    /// Send attempts rejected because the wire was busy or the buffer
+    /// full (producer-side backpressure).
+    pub stalled_cycles: u64,
+}
+
+impl<T> LinkChannel<T> {
+    pub fn new(capacity: usize, cycles_per_token: u64, latency_cycles: u64) -> Self {
+        assert!(capacity > 0, "link buffer capacity must be positive");
+        Self {
+            q: VecDeque::with_capacity(capacity.min(4096)),
+            capacity,
+            cycles_per_token: cycles_per_token.max(1),
+            latency_cycles,
+            next_free: 0,
+            high_water: 0,
+            total_tokens: 0,
+            busy_cycles: 0,
+            stalled_cycles: 0,
+        }
+    }
+
+    /// Start transmitting a token at `cycle`. Gives the token back when
+    /// the wire is still busy with the previous token or the in-flight
+    /// buffer is full (the caller retries next cycle).
+    pub fn try_send(&mut self, cycle: u64, v: T) -> Result<(), T> {
+        if self.q.len() >= self.capacity || cycle < self.next_free {
+            self.stalled_cycles += 1;
+            return Err(v);
+        }
+        self.next_free = cycle + self.cycles_per_token;
+        self.busy_cycles += self.cycles_per_token;
+        self.q.push_back((cycle + self.cycles_per_token + self.latency_cycles, v));
+        self.total_tokens += 1;
+        self.high_water = self.high_water.max(self.q.len());
+        Ok(())
+    }
+
+    /// Pop the oldest token that has fully arrived by `cycle`.
+    pub fn try_recv(&mut self, cycle: u64) -> Option<T> {
+        if self.q.front().is_some_and(|(t, _)| *t <= cycle) {
+            self.q.pop_front().map(|(_, v)| v)
+        } else {
+            None
+        }
+    }
+
+    /// Zero the wire clock so a persistent link's next drive starts from
+    /// cycle 0 instead of stalling until the previous run's `next_free`
+    /// is reached. The caller guarantees the link is drained (a
+    /// completed chain run leaves no tokens in flight); statistics keep
+    /// accumulating.
+    pub fn reset_clock(&mut self) {
+        debug_assert!(self.q.is_empty(), "resetting a link with tokens in flight");
+        self.next_free = 0;
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Maximum in-flight occupancy observed (link buffer sizing).
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
+    pub fn total_tokens(&self) -> u64 {
+        self.total_tokens
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -116,5 +215,43 @@ mod tests {
     #[should_panic]
     fn zero_capacity_panics() {
         let _: Fifo<i32> = Fifo::new(0);
+    }
+
+    #[test]
+    fn link_charges_latency_before_delivery() {
+        let mut l: LinkChannel<i32> = LinkChannel::new(4, 1, 10);
+        assert!(l.try_send(5, 7).is_ok());
+        // in flight until cycle 5 + 1 (wire) + 10 (hop)
+        assert_eq!(l.try_recv(15), None);
+        assert_eq!(l.try_recv(16), Some(7));
+        assert_eq!(l.try_recv(17), None, "drained");
+        assert_eq!(l.total_tokens(), 1);
+    }
+
+    #[test]
+    fn link_paces_sends_by_bandwidth() {
+        let mut l: LinkChannel<i32> = LinkChannel::new(8, 4, 0);
+        assert!(l.try_send(0, 1).is_ok());
+        // wire busy until cycle 4: sends at 1..3 bounce back
+        assert_eq!(l.try_send(1, 2), Err(2));
+        assert_eq!(l.try_send(3, 2), Err(2));
+        assert!(l.try_send(4, 2).is_ok());
+        assert_eq!(l.stalled_cycles, 2);
+        assert_eq!(l.busy_cycles, 8);
+        // delivery order preserved
+        assert_eq!(l.try_recv(100), Some(1));
+        assert_eq!(l.try_recv(100), Some(2));
+    }
+
+    #[test]
+    fn link_bounds_in_flight_tokens() {
+        let mut l: LinkChannel<i32> = LinkChannel::new(2, 1, 1000);
+        assert!(l.try_send(0, 1).is_ok());
+        assert!(l.try_send(1, 2).is_ok());
+        // buffer full until something arrives and is received
+        assert_eq!(l.try_send(2, 3), Err(3));
+        assert_eq!(l.high_water(), 2);
+        assert!(l.try_recv(2000).is_some());
+        assert!(l.try_send(2000, 3).is_ok());
     }
 }

@@ -1,7 +1,9 @@
-//! Reconfigurable dataflow architecture (DESIGN.md S6-S7): streaming
-//! convolution generator, bounded FIFOs, and the cycle-level pipeline
-//! simulator that executes a streamlined network exactly as the generated
-//! accelerator would — all layers resident, activations flowing on-chip.
+//! Reconfigurable dataflow architecture (DESIGN.md S6-S7, S18):
+//! streaming convolution generator, bounded FIFOs, the cycle-level
+//! pipeline simulator that executes a streamlined network exactly as the
+//! generated accelerator would — all layers resident, activations
+//! flowing on-chip — and the multi-device layer: plan shards linked by
+//! bandwidth/latency-charged channels into an executable [`ShardChain`].
 
 pub mod convgen;
 pub mod multi;
@@ -9,5 +11,8 @@ pub mod fifo;
 pub mod pipeline;
 
 pub use convgen::{ConvGenConfig, ConvGenerator};
-pub use fifo::Fifo;
-pub use pipeline::{FoldConfig, Pipeline, SimReport, StageStat};
+pub use fifo::{Fifo, LinkChannel};
+pub use pipeline::{
+    ChainReport, FoldConfig, LinkStat, Pipeline, ShardChain, ShardCounters, ShardReport,
+    SimError, SimReport, StageStat,
+};

@@ -9,9 +9,17 @@
 //! between two stages onto a network hop), throughput is the slowest of
 //! {per-device stage bound, link bandwidth bound}, and latency gains the
 //! per-hop link latency.
+//!
+//! The analytic plan is also *executable* (DESIGN.md S18):
+//! [`MultiFpgaPlan::to_shards`] lowers the partition onto a compiled
+//! [`NetworkPlan`], snapping each cut to the nearest residual-balanced
+//! op boundary, and the resulting shards drive a
+//! [`ShardChain`](super::pipeline::ShardChain) whose simulated FPS can
+//! be checked against [`MultiFpgaPlan::fps`].
 
 use crate::fabric::device::FpgaDevice;
 use crate::graph::arch::{ArchSpec, LayerSpec};
+use crate::graph::plan::{NetworkPlan, PlanShard};
 use crate::synth::design::{stage_resources, choose_mode};
 
 /// A network link between consecutive devices in the chain.
@@ -27,6 +35,19 @@ impl LinkModel {
     /// 100 GbE with typical efficiency — the OCT testbed's fabric.
     pub fn gbe100() -> Self {
         Self { bandwidth_bps: 12.5e9 * 0.8, latency_s: 2e-6 }
+    }
+
+    /// Wire cycles to move one `ch`-element token of `bits`-wide codes
+    /// at a device clock of `freq_mhz` (>= 1: a link faster than the
+    /// pipeline's one-token-per-cycle issue rate cannot help further).
+    pub fn cycles_per_token(&self, ch: usize, bits: u32, freq_mhz: f64) -> u64 {
+        let bytes = ch as f64 * bits.max(1) as f64 / 8.0;
+        (bytes * freq_mhz * 1e6 / self.bandwidth_bps).ceil().max(1.0) as u64
+    }
+
+    /// One-way hop latency in device cycles.
+    pub fn latency_cycles(&self, freq_mhz: f64) -> u64 {
+        (self.latency_s * freq_mhz * 1e6).round() as u64
     }
 }
 
@@ -107,19 +128,65 @@ pub fn partition(
 }
 
 impl MultiFpgaPlan {
-    /// Steady-state FPS: min over {device compute bounds, link bounds}.
-    pub fn fps(&self) -> f64 {
+    /// Steady-state FPS of the compute alone: the slowest device bound.
+    pub fn compute_fps(&self) -> f64 {
         let f = self.freq_mhz * 1e6;
-        let compute = self
-            .partitions
+        self.partitions
             .iter()
             .map(|p| f / p.bound_cycles as f64)
-            .fold(f64::INFINITY, f64::min);
-        let link = self.partitions[..self.partitions.len().saturating_sub(1)]
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Steady-state FPS of the inter-device links alone (infinite for a
+    /// single device).
+    pub fn link_fps(&self) -> f64 {
+        self.partitions[..self.partitions.len().saturating_sub(1)]
             .iter()
             .map(|p| self.link.bandwidth_bps / p.egress_bytes.max(1) as f64)
-            .fold(f64::INFINITY, f64::min);
-        compute.min(link)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Whether the links, not the devices, cap throughput.
+    pub fn is_link_bound(&self) -> bool {
+        self.link_fps() < self.compute_fps()
+    }
+
+    /// Steady-state FPS: min over {device compute bounds, link bounds}.
+    pub fn fps(&self) -> f64 {
+        self.compute_fps().min(self.link_fps())
+    }
+
+    /// Lower the analytic partition onto a compiled plan as executable
+    /// shards (DESIGN.md S18). Arch layer `i` maps to the plan's `i`-th
+    /// conv stage (the final arch layer is the dense head); each modeled
+    /// cut snaps *forward* to the nearest residual-balanced op boundary,
+    /// so trained networks with bypasses shard without splitting a tee
+    /// from its join. Snapped cuts that collide are merged, so the chain
+    /// may have fewer shards than the analytic plan has devices.
+    pub fn to_shards(&self, plan: &NetworkPlan) -> anyhow::Result<Vec<PlanShard>> {
+        let conv_ops: Vec<usize> = plan
+            .ops
+            .iter()
+            .enumerate()
+            .filter_map(|(i, op)| {
+                matches!(op, crate::graph::plan::PlanOp::Conv(_)).then_some(i)
+            })
+            .collect();
+        let depths = plan.res_depths();
+        let mut cuts: Vec<usize> = Vec::new();
+        for p in &self.partitions[..self.partitions.len().saturating_sub(1)] {
+            // cut after the partition's last arch layer; layers at or past
+            // the conv count live in the dense head, which cannot be cut off
+            let Some(&conv_op) = conv_ops.get(p.last_layer) else { continue };
+            let mut cut = conv_op + 1;
+            while cut < plan.ops.len() && depths[cut] != 0 {
+                cut += 1;
+            }
+            if cut < plan.ops.len() && cuts.last() != Some(&cut) {
+                cuts.push(cut);
+            }
+        }
+        plan.shard(&cuts)
     }
 
     /// Added end-to-end latency from the network hops.
@@ -206,5 +273,64 @@ mod tests {
         let (arch, folds) = setup();
         let plan = partition(&arch, &U280, 1, &folds, LinkModel::gbe100());
         assert_eq!(plan.added_latency_s(), 0.0);
+        assert!(!plan.is_link_bound(), "one device has no links to bind on");
+        assert_eq!(plan.fps(), plan.compute_fps());
+    }
+
+    #[test]
+    fn bound_split_flags_the_actual_bottleneck() {
+        let (arch, folds) = setup();
+        let fast = partition(&arch, &U280, 3, &folds, LinkModel::gbe100());
+        assert!(!fast.is_link_bound());
+        assert_eq!(fast.fps(), fast.compute_fps());
+        let slow = partition(
+            &arch,
+            &U280,
+            3,
+            &folds,
+            LinkModel { bandwidth_bps: 1e6, latency_s: 1e-3 },
+        );
+        assert!(slow.is_link_bound());
+        assert_eq!(slow.fps(), slow.link_fps());
+    }
+
+    #[test]
+    fn link_cycle_conversion() {
+        let l = LinkModel::gbe100();
+        // 2us at 333 MHz
+        assert_eq!(l.latency_cycles(333.0), 666);
+        // a link faster than one token/cycle clamps to 1
+        assert_eq!(l.cycles_per_token(3, 4, 333.0), 1);
+        // 1 MB/s link: a 16-ch 4-bit token (8 B) takes 8e-6 s = 2664 cycles
+        let slow = LinkModel { bandwidth_bps: 1e6, latency_s: 0.0 };
+        assert_eq!(slow.cycles_per_token(16, 4, 333.0), 2664);
+    }
+
+    #[test]
+    fn to_shards_tiles_the_compiled_plan() {
+        use crate::graph::mobilenet_v2_small;
+        use crate::graph::network::Network;
+        use crate::graph::plan::{Datapath, NetworkPlan};
+        let arch = mobilenet_v2_small();
+        let folds = vec![1usize; arch.layers.len()];
+        let net = Network::synthetic(&arch, 0x5A0);
+        let plan = NetworkPlan::compile(&net, Datapath::Arithmetic);
+        for n in [1usize, 2, 3] {
+            let mplan = partition(&arch, &U280, n, &folds, LinkModel::gbe100());
+            let shards = mplan.to_shards(&plan).unwrap();
+            assert!(!shards.is_empty() && shards.len() <= n);
+            assert_eq!(shards[0].start, 0);
+            assert_eq!(shards.last().unwrap().end, plan.ops.len());
+            for w in shards.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+                assert_eq!((w[0].out_pixels, w[0].out_ch), (w[1].in_pixels, w[1].in_ch));
+            }
+            assert!(shards.last().unwrap().is_tail());
+            let convs: usize = shards.iter().map(|s| s.plan.n_convs()).sum();
+            assert_eq!(convs, plan.n_convs());
+            if n > 1 {
+                assert!(shards.len() > 1, "small net has boundaries for {n} devices");
+            }
+        }
     }
 }

@@ -18,12 +18,42 @@ use std::collections::VecDeque;
 use crate::quant::saturating_res_add;
 
 use super::convgen::{ConvGenConfig, ConvGenerator};
-use super::fifo::Fifo;
+use super::fifo::{Fifo, LinkChannel};
+use super::multi::LinkModel;
 use crate::graph::kernels;
 use crate::graph::network::Network;
-use crate::graph::plan::{ConvPlan, Datapath, DensePlan, NetworkPlan, PlanOp};
+use crate::graph::plan::{ConvPlan, Datapath, DensePlan, NetworkPlan, PlanOp, PlanShard};
 
 type Token = Vec<i32>;
+
+/// Structured simulation failure: which stage diagnosed it, at which
+/// cycle, and why — malformed stage graphs (mismatched join widths, a
+/// shard wired to the wrong neighbour, a deadlocked pipeline) report
+/// instead of panicking.
+#[derive(Debug, Clone)]
+pub struct SimError {
+    pub stage: String,
+    pub cycle: u64,
+    pub detail: String,
+}
+
+impl SimError {
+    fn at(stage: impl Into<String>, cycle: u64, detail: impl Into<String>) -> Self {
+        Self { stage: stage.into(), cycle, detail: detail.into() }
+    }
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "dataflow sim error at cycle {} in stage '{}': {}",
+            self.cycle, self.stage, self.detail
+        )
+    }
+}
+
+impl std::error::Error for SimError {}
 
 /// Per-layer folding: a stage computes `cout / fold` output channels per
 /// cycle, so one output pixel takes `fold` cycles (paper section 3.2:
@@ -99,6 +129,11 @@ pub struct FifoStat {
 }
 
 /// Result of a pipeline run.
+///
+/// `cycles`, `logits` and `image_done_cycles` describe *this* run;
+/// `stages` and `fifos` are cumulative over the pipeline's lifetime
+/// (a persistent serving pipeline keeps counting across batches), so
+/// ratios like stalled/cycles are only meaningful on a fresh pipeline.
 #[derive(Debug, Clone)]
 pub struct SimReport {
     /// Total simulated cycles to fully drain all images.
@@ -140,11 +175,15 @@ impl SimReport {
     }
 }
 
-/// The dataflow accelerator: stages + FIFOs built from a network.
+/// The dataflow accelerator: stages + FIFOs built from a network (or
+/// from one shard of a sliced network, DESIGN.md S18).
 pub struct Pipeline {
     stages: Vec<Stage>,
     fifos: Vec<Fifo<Token>>,
     input_fifo: usize,
+    /// Egress FIFO of a shard that does not end in the dense head; the
+    /// whole-network pipeline (dense tail) has none.
+    output_fifo: Option<usize>,
     in_pixels: usize,
     in_ch: usize,
     steady_cycles: u64,
@@ -267,14 +306,25 @@ impl Pipeline {
             }
         }
 
+        let tail_dense = matches!(plan.ops.last(), Some(PlanOp::Dense(_)));
         Self {
             stages,
             fifos,
             input_fifo,
+            output_fifo: (!tail_dense).then_some(cur),
             in_pixels: plan.io.image_size * plan.io.image_size,
             in_ch: plan.io.in_ch,
             steady_cycles: steady,
         }
+    }
+
+    /// Build one device's pipeline from a plan shard (DESIGN.md S18).
+    /// The shard's sub-plan builds exactly like a whole plan — same
+    /// stages, FIFOs and fold semantics; a shard that does not end in
+    /// the dense head gets an egress FIFO that a [`ShardChain`] link
+    /// drains. `folds` covers this shard's conv stages only.
+    pub fn from_shard(shard: &PlanShard, folds: &FoldConfig, fifo_depth: usize) -> Self {
+        Self::from_plan(&shard.plan, folds, fifo_depth)
     }
 
     /// Number of conv stages (for fold vector sizing).
@@ -285,6 +335,102 @@ impl Pipeline {
             .count()
     }
 
+    /// Analytic steady-state cycles per image of this pipeline alone
+    /// (slowest stage, including the input-streaming floor).
+    pub fn steady_cycles(&self) -> u64 {
+        self.steady_cycles
+    }
+
+    /// Whether the ingress FIFO has no room this cycle.
+    pub fn input_full(&self) -> bool {
+        self.fifos[self.input_fifo].is_full()
+    }
+
+    /// Offer one input token (a pixel's channel vector); false when the
+    /// ingress FIFO is full — the caller keeps the token and retries.
+    pub fn try_push_input(&mut self, token: Vec<i32>) -> bool {
+        self.fifos[self.input_fifo].try_push(token)
+    }
+
+    /// Drain one token from a shard's egress FIFO (`None` for a
+    /// dense-tailed pipeline, which emits logits instead).
+    pub fn pop_output(&mut self) -> Option<Vec<i32>> {
+        let f = self.output_fifo?;
+        self.fifos[f].pop()
+    }
+
+    /// Zero the stage clocks so a persistent pipeline's next `run` (or a
+    /// chain's next drive) starts from cycle 0 instead of spinning idle
+    /// cycles until the previous run's `busy_until` marks are reached.
+    /// Statistics counters keep accumulating.
+    fn reset_timing(&mut self) {
+        for s in &mut self.stages {
+            if let StageKind::Conv(cs) = &mut s.kind {
+                cs.busy_until = 0;
+            }
+        }
+    }
+
+    /// Summed fire/stall/occupancy counters, allocation-free (the
+    /// per-stage breakdown with names lives in
+    /// [`stage_stats`](Self::stage_stats)).
+    fn counters(&self) -> (u64, u64, usize) {
+        let fires = self.stages.iter().map(|s| s.fires).sum();
+        let stalled = self.stages.iter().map(|s| s.stalled_cycles).sum();
+        let high_water = self.fifos.iter().map(Fifo::high_water).max().unwrap_or(0);
+        (fires, stalled, high_water)
+    }
+
+    /// Advance every stage by one cycle, downstream-first (so FIFO space
+    /// frees within the cycle). Completed logits and their completion
+    /// cycles append to the provided sinks.
+    fn tick(
+        &mut self,
+        cycle: u64,
+        logits: &mut Vec<Vec<f32>>,
+        done_cycles: &mut Vec<u64>,
+    ) -> Result<(), SimError> {
+        for si in (0..self.stages.len()).rev() {
+            self.fire_stage(si, cycle, logits, done_cycles)?;
+        }
+        Ok(())
+    }
+
+    /// Per-stage firing/stall statistics (cumulative over the pipeline's
+    /// lifetime).
+    pub fn stage_stats(&self) -> Vec<StageStat> {
+        self.stages
+            .iter()
+            .map(|s| StageStat {
+                name: match &s.kind {
+                    StageKind::Conv(c) => c.plan.name.clone(),
+                    StageKind::Tee => "tee".into(),
+                    StageKind::ResAdd { .. } => "res_add".into(),
+                    StageKind::Pool(_) => "pool".into(),
+                    StageKind::Dense(d) => d.name.clone(),
+                },
+                fires: s.fires,
+                stalled_cycles: s.stalled_cycles,
+                ii: match &s.kind {
+                    StageKind::Conv(c) => c.fold,
+                    _ => 1,
+                },
+            })
+            .collect()
+    }
+
+    /// Per-FIFO occupancy statistics (cumulative).
+    pub fn fifo_stats(&self) -> Vec<FifoStat> {
+        self.fifos
+            .iter()
+            .map(|f| FifoStat {
+                high_water: f.high_water(),
+                capacity: f.capacity(),
+                backpressure_events: f.backpressure_events,
+            })
+            .collect()
+    }
+
     /// Run `images` (each `[H*W*C]` codes, raster order) through the
     /// pipeline; returns logits per image plus timing statistics.
     ///
@@ -292,7 +438,22 @@ impl Pipeline {
     /// first stage the cycle after image i's last pixel, so successive
     /// images overlap in the dataflow rather than draining between images
     /// (`SimReport::image_done_cycles` records the overlap).
-    pub fn run(&mut self, images: &[Vec<i32>]) -> SimReport {
+    ///
+    /// Requires a dense-tailed plan; drive a headless shard through a
+    /// [`ShardChain`] instead. Malformed stage graphs and deadlocks
+    /// return a [`SimError`] naming the stage and cycle.
+    pub fn run(&mut self, images: &[Vec<i32>]) -> Result<SimReport, SimError> {
+        if let Some(f) = self.output_fifo {
+            return Err(SimError::at(
+                "<pipeline>",
+                0,
+                format!(
+                    "plan has no dense head (stage output drains to FIFO {f}); \
+                     drive this shard through a ShardChain"
+                ),
+            ));
+        }
+        self.reset_timing();
         let mut logits: Vec<Vec<f32>> = Vec::with_capacity(images.len());
         let mut done_cycles: Vec<u64> = Vec::with_capacity(images.len());
         // stream of input pixels across all images
@@ -306,7 +467,13 @@ impl Pipeline {
         let max_cycles = (total_pixels as u64 + 10_000) * 64 + 1_000_000;
         while logits.len() < images.len() {
             cycle += 1;
-            assert!(cycle < max_cycles, "pipeline deadlock at cycle {cycle}");
+            if cycle >= max_cycles {
+                return Err(SimError::at(
+                    "<source>",
+                    cycle,
+                    format!("pipeline deadlock: {}/{} images drained", logits.len(), images.len()),
+                ));
+            }
 
             // source: one pixel per cycle into the input FIFO
             if let Some(px) = next_pixel.as_ref() {
@@ -317,46 +484,18 @@ impl Pipeline {
             }
 
             // stages fire downstream-first so space frees within a cycle
-            for si in (0..self.stages.len()).rev() {
-                self.fire_stage(si, cycle, &mut logits, &mut done_cycles);
-            }
+            self.tick(cycle, &mut logits, &mut done_cycles)?;
         }
 
-        SimReport {
+        Ok(SimReport {
             cycles: cycle,
             images: images.len(),
             logits,
-            stages: self
-                .stages
-                .iter()
-                .map(|s| StageStat {
-                    name: match &s.kind {
-                        StageKind::Conv(c) => c.plan.name.clone(),
-                        StageKind::Tee => "tee".into(),
-                        StageKind::ResAdd { .. } => "res_add".into(),
-                        StageKind::Pool(_) => "pool".into(),
-                        StageKind::Dense(d) => d.name.clone(),
-                    },
-                    fires: s.fires,
-                    stalled_cycles: s.stalled_cycles,
-                    ii: match &s.kind {
-                        StageKind::Conv(c) => c.fold,
-                        _ => 1,
-                    },
-                })
-                .collect(),
-            fifos: self
-                .fifos
-                .iter()
-                .map(|f| FifoStat {
-                    high_water: f.high_water(),
-                    capacity: f.capacity(),
-                    backpressure_events: f.backpressure_events,
-                })
-                .collect(),
+            stages: self.stage_stats(),
+            fifos: self.fifo_stats(),
             steady_state_cycles_per_image: self.steady_cycles,
             image_done_cycles: done_cycles,
-        }
+        })
     }
 
     fn fire_stage(
@@ -365,7 +504,7 @@ impl Pipeline {
         cycle: u64,
         logits: &mut Vec<Vec<f32>>,
         done_cycles: &mut Vec<u64>,
-    ) {
+    ) -> Result<(), SimError> {
         let (inputs, outputs) = {
             let s = &self.stages[si];
             (s.inputs.clone(), s.outputs.clone())
@@ -379,7 +518,13 @@ impl Pipeline {
                 // 1) emit a computed patch if the multiplier array is free
                 if !cs.pending.is_empty() && cycle >= cs.busy_until {
                     if !self.fifos[outputs[0]].is_full() {
-                        let patch = cs.pending.pop_front().unwrap();
+                        let Some(patch) = cs.pending.pop_front() else {
+                            return Err(SimError::at(
+                                &cs.plan.name,
+                                cycle,
+                                "conv fired with an empty patch queue",
+                            ));
+                        };
                         let out = kernels::patch_out(&cs.plan, &patch);
                         let ok = self.fifos[outputs[0]].try_push(out);
                         debug_assert!(ok);
@@ -393,6 +538,17 @@ impl Pipeline {
                 //    unless the patch queue is backed up
                 if cs.pending.len() < 4 {
                     if let Some(px) = self.fifos[inputs[0]].pop() {
+                        if px.len() != cs.plan.geom.cin {
+                            return Err(SimError::at(
+                                &cs.plan.name,
+                                cycle,
+                                format!(
+                                    "input token has {} channels, stage expects {}",
+                                    px.len(),
+                                    cs.plan.geom.cin
+                                ),
+                            ));
+                        }
                         let patches = cs.gen.push_pixel(&px);
                         cs.pending.extend(patches);
                     }
@@ -413,8 +569,27 @@ impl Pipeline {
                     && !self.fifos[inputs[1]].is_empty()
                     && !self.fifos[outputs[0]].is_full()
                 {
-                    let a = self.fifos[inputs[0]].pop().unwrap();
-                    let b = self.fifos[inputs[1]].pop().unwrap();
+                    let (a, b) = match (self.fifos[inputs[0]].pop(), self.fifos[inputs[1]].pop()) {
+                        (Some(a), Some(b)) => (a, b),
+                        _ => {
+                            return Err(SimError::at(
+                                "res_add",
+                                cycle,
+                                "join fired with an empty input FIFO",
+                            ))
+                        }
+                    };
+                    if a.len() != b.len() {
+                        return Err(SimError::at(
+                            "res_add",
+                            cycle,
+                            format!(
+                                "join width mismatch: main token {} ch vs bypass {} ch",
+                                a.len(),
+                                b.len()
+                            ),
+                        ));
+                    }
                     let sum: Token = a
                         .iter()
                         .zip(b.iter())
@@ -445,6 +620,17 @@ impl Pipeline {
             }
             StageKind::Dense(ds) => {
                 if let Some(pooled) = self.fifos[inputs[0]].pop() {
+                    if pooled.len() != ds.w_codes.len() {
+                        return Err(SimError::at(
+                            &ds.name,
+                            cycle,
+                            format!(
+                                "dense head expects {} pooled channels, got {}",
+                                ds.w_codes.len(),
+                                pooled.len()
+                            ),
+                        ));
+                    }
                     // same dense kernel as the reference executor (FMA to
                     // match XLA's fused lowering)
                     logits.push(kernels::dense(ds, &pooled));
@@ -459,6 +645,377 @@ impl Pipeline {
         if stalled {
             self.stages[si].stalled_cycles += 1;
         }
+        Ok(())
+    }
+}
+
+/// Per-link transport statistics from a chain run (cumulative over the
+/// chain's lifetime, like stage stats).
+#[derive(Debug, Clone)]
+pub struct LinkStat {
+    pub tokens: u64,
+    pub busy_cycles: u64,
+    pub stalled_cycles: u64,
+    pub high_water: usize,
+    pub capacity: usize,
+    pub cycles_per_token: u64,
+    pub latency_cycles: u64,
+}
+
+/// Summed occupancy/stall counters for one shard and its egress link
+/// (zeroes for the tail shard, which has no downstream link) — the
+/// allocation-free snapshot [`ShardChain::occupancy`] returns for the
+/// serving metrics (which re-export it as `ShardOccupancy`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardCounters {
+    /// Stage firings on this shard since the chain was built.
+    pub fires: u64,
+    /// Cycles this shard's stages spent stalled on backpressure.
+    pub stalled_cycles: u64,
+    /// Highest FIFO occupancy observed on this shard.
+    pub fifo_high_water: usize,
+    /// Cycles the egress link spent transmitting.
+    pub link_busy_cycles: u64,
+    /// Egress send attempts rejected (wire busy / buffer full).
+    pub link_stalled_cycles: u64,
+}
+
+impl ShardCounters {
+    /// Element-wise accumulation (high-water takes the max; the other
+    /// counters sum) — how the serving metrics merge the per-worker
+    /// snapshots of the same shard index.
+    pub fn absorb(&mut self, other: &ShardCounters) {
+        self.fires += other.fires;
+        self.stalled_cycles += other.stalled_cycles;
+        self.fifo_high_water = self.fifo_high_water.max(other.fifo_high_water);
+        self.link_busy_cycles += other.link_busy_cycles;
+        self.link_stalled_cycles += other.link_stalled_cycles;
+    }
+}
+
+/// One shard's view in a [`ChainReport`]: the stage and FIFO statistics
+/// of its pipeline.
+#[derive(Debug, Clone)]
+pub struct ShardReport {
+    pub stages: Vec<StageStat>,
+    pub fifos: Vec<FifoStat>,
+}
+
+impl ShardReport {
+    /// Total stage firings on this shard.
+    pub fn fires(&self) -> u64 {
+        self.stages.iter().map(|s| s.fires).sum()
+    }
+
+    /// Total cycles this shard's stages spent stalled on backpressure.
+    pub fn stalled_cycles(&self) -> u64 {
+        self.stages.iter().map(|s| s.stalled_cycles).sum()
+    }
+
+    /// Highest FIFO occupancy observed on this shard.
+    pub fn fifo_high_water(&self) -> usize {
+        self.fifos.iter().map(|f| f.high_water).max().unwrap_or(0)
+    }
+}
+
+/// Result of a [`ShardChain`] run: the whole-chain analog of
+/// [`SimReport`], with per-shard and per-link breakdowns. As with
+/// `SimReport`, `cycles`/`logits`/`image_done_cycles` are per-run while
+/// `shards` and `links` accumulate over the chain's lifetime.
+#[derive(Debug, Clone)]
+pub struct ChainReport {
+    /// Total simulated cycles to fully drain all images.
+    pub cycles: u64,
+    pub images: usize,
+    pub logits: Vec<Vec<f32>>,
+    /// Cycle each image's logits left the tail shard, submission order.
+    pub image_done_cycles: Vec<u64>,
+    pub shards: Vec<ShardReport>,
+    pub links: Vec<LinkStat>,
+    /// Analytic steady-state cycles per image: slowest of {shard stage
+    /// bounds, link injection rates}.
+    pub steady_state_cycles_per_image: u64,
+}
+
+impl ChainReport {
+    /// Frames per second at a given clock.
+    pub fn fps(&self, freq_mhz: f64) -> f64 {
+        freq_mhz * 1e6 * self.images as f64 / self.cycles as f64
+    }
+
+    /// Steady-state FPS (chain full, the multi-device Table 2 regime).
+    pub fn steady_state_fps(&self, freq_mhz: f64) -> f64 {
+        freq_mhz * 1e6 / self.steady_state_cycles_per_image as f64
+    }
+
+    /// Measured cycles between the last two image completions — the
+    /// steady-state interval once the chain is full.
+    pub fn incremental_cycles_per_image(&self) -> u64 {
+        match self.image_done_cycles.len() {
+            0 | 1 => self.cycles,
+            n => self.image_done_cycles[n - 1] - self.image_done_cycles[n - 2],
+        }
+    }
+
+    /// Measured steady-state FPS from the completion interval.
+    pub fn measured_steady_fps(&self, freq_mhz: f64) -> f64 {
+        freq_mhz * 1e6 / self.incremental_cycles_per_image().max(1) as f64
+    }
+}
+
+/// N shard pipelines connected by bounded link channels whose occupancy
+/// is charged cycles from a [`LinkModel`] (bandwidth pacing + hop
+/// latency) — the *executable* form of a multi-device partition
+/// (DESIGN.md S18). Functionally bit-exact with the single-device
+/// [`Pipeline`] on the unsliced plan: the links only move tokens, they
+/// never transform them.
+pub struct ShardChain {
+    shards: Vec<Pipeline>,
+    links: Vec<LinkChannel<Token>>,
+    /// Token popped from shard i's egress, awaiting link i admission.
+    pending: Vec<Option<Token>>,
+    in_pixels: usize,
+    in_ch: usize,
+    steady_cycles: u64,
+}
+
+impl ShardChain {
+    /// Assemble a chain from contiguous shards of one plan. `folds`
+    /// covers the conv stages of the *whole* parent plan in network
+    /// order and is split across the shards here; `a_bits` is the
+    /// activation code width the links charge bandwidth for.
+    pub fn new(
+        shards: &[PlanShard],
+        folds: &FoldConfig,
+        fifo_depth: usize,
+        link: &LinkModel,
+        freq_mhz: f64,
+        a_bits: u32,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(!shards.is_empty(), "shard chain needs at least one shard");
+        let tail = shards.last().expect("non-empty");
+        anyhow::ensure!(
+            tail.is_tail(),
+            "the final shard (ops {}..{}) must end in the dense head",
+            tail.start,
+            tail.end
+        );
+        for w in shards.windows(2) {
+            anyhow::ensure!(
+                w[0].end == w[1].start,
+                "shards must tile one plan contiguously: ops {}..{} then {}..{}",
+                w[0].start,
+                w[0].end,
+                w[1].start,
+                w[1].end
+            );
+            anyhow::ensure!(
+                w[0].out_pixels == w[1].in_pixels && w[0].out_ch == w[1].in_ch,
+                "shard ops {}..{} emits {}px x {}ch but its successor expects {}px x {}ch",
+                w[0].start,
+                w[0].end,
+                w[0].out_pixels,
+                w[0].out_ch,
+                w[1].in_pixels,
+                w[1].in_ch
+            );
+        }
+        let total_convs: usize = shards.iter().map(|s| s.plan.n_convs()).sum();
+        anyhow::ensure!(
+            folds.folds.len() >= total_convs,
+            "fold vector has {} entries, chain has {total_convs} conv stages",
+            folds.folds.len()
+        );
+
+        let mut pipes = Vec::with_capacity(shards.len());
+        let mut links = Vec::with_capacity(shards.len().saturating_sub(1));
+        let mut fold_off = 0usize;
+        let mut steady: u64 = 1;
+        for (i, s) in shards.iter().enumerate() {
+            let k = s.plan.n_convs();
+            let sub = FoldConfig { folds: folds.folds[fold_off..fold_off + k].to_vec() };
+            fold_off += k;
+            let p = Pipeline::from_shard(s, &sub, fifo_depth);
+            steady = steady.max(p.steady_cycles());
+            if i + 1 < shards.len() {
+                let cpt = link.cycles_per_token(s.out_ch, a_bits, freq_mhz);
+                let lat = link.latency_cycles(freq_mhz);
+                // the link must inject out_pixels tokens per image
+                steady = steady.max(cpt * s.out_pixels as u64);
+                // in-flight capacity covers the bandwidth-delay product
+                // (the wire itself stores latency/rate tokens — a pipe,
+                // not a buffer) plus a receive-buffer's worth, so the hop
+                // latency adds delay without capping the wire rate;
+                // sustained receiver stalls still backpressure the sender
+                let bdp = (lat / cpt.max(1) + 1) as usize;
+                links.push(LinkChannel::new(fifo_depth.max(2) + bdp, cpt, lat));
+            }
+            pipes.push(p);
+        }
+        Ok(Self {
+            shards: pipes,
+            links,
+            pending: vec![None; shards.len().saturating_sub(1)],
+            in_pixels: shards[0].in_pixels,
+            in_ch: shards[0].in_ch,
+            steady_cycles: steady,
+        })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Analytic steady-state cycles per image of the whole chain.
+    pub fn steady_cycles(&self) -> u64 {
+        self.steady_cycles
+    }
+
+    /// Current per-shard statistics (cumulative; readable between runs
+    /// for serving metrics).
+    pub fn shard_stats(&self) -> Vec<ShardReport> {
+        self.shards
+            .iter()
+            .map(|p| ShardReport { stages: p.stage_stats(), fifos: p.fifo_stats() })
+            .collect()
+    }
+
+    /// Cumulative per-shard counters plus egress-link busy/stall cycles,
+    /// allocation-free — what the sharded serving worker polls after
+    /// every batch (the per-stage breakdown with names stays in
+    /// [`shard_stats`](Self::shard_stats)).
+    pub fn occupancy(&self) -> Vec<ShardCounters> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let (fires, stalled_cycles, fifo_high_water) = p.counters();
+                let (link_busy_cycles, link_stalled_cycles) = self
+                    .links
+                    .get(i)
+                    .map_or((0, 0), |l| (l.busy_cycles, l.stalled_cycles));
+                ShardCounters {
+                    fires,
+                    stalled_cycles,
+                    fifo_high_water,
+                    link_busy_cycles,
+                    link_stalled_cycles,
+                }
+            })
+            .collect()
+    }
+
+    /// Current per-link statistics (cumulative).
+    pub fn link_stats(&self) -> Vec<LinkStat> {
+        self.links
+            .iter()
+            .map(|l| LinkStat {
+                tokens: l.total_tokens(),
+                busy_cycles: l.busy_cycles,
+                stalled_cycles: l.stalled_cycles,
+                high_water: l.high_water(),
+                capacity: l.capacity(),
+                cycles_per_token: l.cycles_per_token,
+                latency_cycles: l.latency_cycles,
+            })
+            .collect()
+    }
+
+    /// Stream `images` through the chain: the pixel source feeds shard 0,
+    /// every shard advances each global cycle, and tokens cross between
+    /// shards only through the cycle-charged links. Returns the logits
+    /// (identical to the single-device pipeline's) plus per-shard and
+    /// per-link statistics.
+    ///
+    /// A chain whose `run` returned an error must be discarded: its
+    /// FIFOs, line buffers and links still hold the failed batch's
+    /// partial-image tokens (the sharded serving worker rebuilds its
+    /// backend on failure for exactly this reason).
+    pub fn run(&mut self, images: &[Vec<i32>]) -> Result<ChainReport, SimError> {
+        for p in &mut self.shards {
+            p.reset_timing();
+        }
+        // a completed run leaves the links drained, so only their wire
+        // clocks carry over; without this reset every later batch of a
+        // persistent chain would stall each link until the previous
+        // run's final cycle is reached
+        for l in &mut self.links {
+            l.reset_clock();
+        }
+        let mut logits: Vec<Vec<f32>> = Vec::with_capacity(images.len());
+        let mut done_cycles: Vec<u64> = Vec::with_capacity(images.len());
+        let in_ch = self.in_ch;
+        let mut pixel_iter =
+            images.iter().flat_map(move |img| img.chunks(in_ch)).map(|p| p.to_vec());
+        let total_pixels = images.len() * self.in_pixels;
+        let mut next_pixel: Option<Token> = pixel_iter.next();
+
+        // deadlock guard: the single-pipeline budget plus the serialized
+        // wire time and latency of every hop
+        let wire_budget: u64 = self
+            .links
+            .iter()
+            .map(|l| l.latency_cycles + l.cycles_per_token * total_pixels as u64)
+            .sum();
+        let max_cycles = (total_pixels as u64 + 10_000) * 64 + 1_000_000 + wire_budget;
+
+        let n = self.shards.len();
+        let mut cycle: u64 = 0;
+        while logits.len() < images.len() {
+            cycle += 1;
+            if cycle >= max_cycles {
+                return Err(SimError::at(
+                    "<chain>",
+                    cycle,
+                    format!(
+                        "shard chain deadlock: {}/{} images drained",
+                        logits.len(),
+                        images.len()
+                    ),
+                ));
+            }
+
+            // source: one pixel per cycle into shard 0
+            if let Some(px) = next_pixel.as_ref() {
+                if self.shards[0].try_push_input(px.clone()) {
+                    next_pixel = pixel_iter.next();
+                }
+            }
+
+            // downstream-first across shards, mirroring the intra-shard
+            // stage order, so link/FIFO space frees within a cycle
+            for i in (0..n).rev() {
+                // deliver one arrived token from the upstream link
+                if i > 0 && !self.shards[i].input_full() {
+                    if let Some(tok) = self.links[i - 1].try_recv(cycle) {
+                        let ok = self.shards[i].try_push_input(tok);
+                        debug_assert!(ok, "guarded by input_full");
+                    }
+                }
+                self.shards[i].tick(cycle, &mut logits, &mut done_cycles)?;
+                // start transmitting one egress token on the downstream link
+                if i + 1 < n {
+                    if self.pending[i].is_none() {
+                        self.pending[i] = self.shards[i].pop_output();
+                    }
+                    if let Some(tok) = self.pending[i].take() {
+                        if let Err(tok) = self.links[i].try_send(cycle, tok) {
+                            self.pending[i] = Some(tok);
+                        }
+                    }
+                }
+            }
+        }
+
+        Ok(ChainReport {
+            cycles: cycle,
+            images: images.len(),
+            logits,
+            image_done_cycles: done_cycles,
+            shards: self.shard_stats(),
+            links: self.link_stats(),
+            steady_state_cycles_per_image: self.steady_cycles,
+        })
     }
 }
 
@@ -570,7 +1127,7 @@ mod tests {
         let ex = Executor::new(&net, Datapath::Arithmetic);
         let folds = FoldConfig::fully_parallel(6);
         let mut pipe = Pipeline::build(&net, &folds, 8);
-        let report = pipe.run(&images);
+        let report = pipe.run(&images).unwrap();
         assert_eq!(report.logits.len(), 3);
         for (img, got) in images.iter().zip(&report.logits) {
             let t = Tensor::from_hwc(8, 8, 3, img.clone());
@@ -583,8 +1140,8 @@ mod tests {
     fn folding_preserves_function_but_slows_pipeline() {
         let net = random_net(21);
         let images = random_images(2, 8, 3, 5);
-        let fast = Pipeline::build(&net, &FoldConfig::fully_parallel(6), 8).run(&images);
-        let slow = Pipeline::build(&net, &FoldConfig::uniform(6, 4), 8).run(&images);
+        let fast = Pipeline::build(&net, &FoldConfig::fully_parallel(6), 8).run(&images).unwrap();
+        let slow = Pipeline::build(&net, &FoldConfig::uniform(6, 4), 8).run(&images).unwrap();
         assert_eq!(fast.logits, slow.logits, "folding must not change results");
         assert!(slow.cycles > fast.cycles, "fold 4 must be slower");
     }
@@ -594,9 +1151,9 @@ mod tests {
         // steady-state: cycles for 8 images << 8 x cycles for 1 image
         let net = random_net(3);
         let one = Pipeline::build(&net, &FoldConfig::fully_parallel(6), 8)
-            .run(&random_images(1, 8, 3, 1));
+            .run(&random_images(1, 8, 3, 1)).unwrap();
         let eight = Pipeline::build(&net, &FoldConfig::fully_parallel(6), 8)
-            .run(&random_images(8, 8, 3, 1));
+            .run(&random_images(8, 8, 3, 1)).unwrap();
         assert!(
             eight.cycles < one.cycles * 8,
             "pipelining: {} !< {}",
@@ -611,11 +1168,11 @@ mod tests {
         // and the marginal image costs far less than a cold run
         let net = random_net(17);
         let report =
-            Pipeline::build(&net, &FoldConfig::fully_parallel(6), 8).run(&random_images(6, 8, 3, 9));
+            Pipeline::build(&net, &FoldConfig::fully_parallel(6), 8).run(&random_images(6, 8, 3, 9)).unwrap();
         assert_eq!(report.image_done_cycles.len(), 6);
         assert!(report.image_done_cycles.windows(2).all(|w| w[0] < w[1]));
         let cold = Pipeline::build(&net, &FoldConfig::fully_parallel(6), 8)
-            .run(&random_images(1, 8, 3, 9));
+            .run(&random_images(1, 8, 3, 9)).unwrap();
         assert!(
             report.incremental_cycles_per_image() < cold.cycles,
             "pipelined marginal image ({}) must beat a cold run ({})",
@@ -629,7 +1186,7 @@ mod tests {
     fn fifo_stats_populated() {
         let net = random_net(9);
         let mut pipe = Pipeline::build(&net, &FoldConfig::fully_parallel(6), 4);
-        let report = pipe.run(&random_images(2, 8, 3, 2));
+        let report = pipe.run(&random_images(2, 8, 3, 2)).unwrap();
         assert!(report.fifos.iter().any(|f| f.high_water > 0));
         assert!(report.stages.iter().all(|s| s.fires > 0));
     }
@@ -638,10 +1195,143 @@ mod tests {
     fn steady_state_bound_sane() {
         let net = random_net(13);
         let report =
-            Pipeline::build(&net, &FoldConfig::fully_parallel(6), 8).run(&random_images(4, 8, 3, 3));
+            Pipeline::build(&net, &FoldConfig::fully_parallel(6), 8).run(&random_images(4, 8, 3, 3)).unwrap();
         // steady state cycles per image >= dominant stage pixel count
         assert!(report.steady_state_cycles_per_image >= 64);
         assert!(report.fps(333.0) > 0.0);
         assert!(report.steady_state_fps(333.0) >= report.fps(333.0) * 0.5);
+    }
+
+    #[test]
+    fn persistent_pipeline_does_not_accumulate_idle_cycles() {
+        // a worker reuses one pipeline across batches; without the clock
+        // reset the second run would spin until the first run's
+        // busy_until marks are reached
+        let net = random_net(29);
+        let mut pipe = Pipeline::build(&net, &FoldConfig::uniform(6, 3), 8);
+        let first = pipe.run(&random_images(2, 8, 3, 4)).unwrap();
+        let second = pipe.run(&random_images(2, 8, 3, 4)).unwrap();
+        assert_eq!(first.logits, second.logits, "same inputs, same results");
+        assert!(
+            second.cycles <= first.cycles + 16,
+            "second batch must not pay the first batch's clock: {} vs {}",
+            second.cycles,
+            first.cycles
+        );
+    }
+
+    #[test]
+    fn malformed_dense_head_diagnoses_instead_of_panicking() {
+        // shrink the dense head's weight matrix after compilation: the
+        // pooled token no longer matches, which must surface as a
+        // structured SimError naming the stage, not an index panic
+        let net = random_net(31);
+        let mut plan = NetworkPlan::compile(&net, Datapath::Arithmetic);
+        let n_ops = plan.ops.len();
+        let PlanOp::Dense(dp) = &mut plan.ops[n_ops - 1] else {
+            panic!("random_net ends in a dense head");
+        };
+        dp.w_codes.truncate(2);
+        let mut pipe = Pipeline::from_plan(&plan, &FoldConfig::fully_parallel(6), 8);
+        let err = pipe.run(&random_images(1, 8, 3, 6)).unwrap_err();
+        assert_eq!(err.stage, "fc");
+        assert!(err.detail.contains("pooled channels"), "{err}");
+        assert!(err.cycle > 0);
+    }
+
+    #[test]
+    fn headless_shard_refuses_standalone_run() {
+        let net = random_net(37);
+        let plan = NetworkPlan::compile(&net, Datapath::Arithmetic);
+        let cut = *plan.cut_points().first().expect("random_net has a valid cut");
+        let head = plan.slice(0..cut).unwrap();
+        let folds = FoldConfig::fully_parallel(head.plan.n_convs());
+        let mut pipe = Pipeline::from_shard(&head, &folds, 8);
+        let err = pipe.run(&random_images(1, 8, 3, 2)).unwrap_err();
+        assert!(err.detail.contains("ShardChain"), "{err}");
+    }
+
+    #[test]
+    fn shard_chain_is_bit_exact_with_single_pipeline_across_residuals() {
+        // random_net carries a residual bypass, so valid cuts must skip
+        // the tee..join region; every 2-way split at a valid boundary
+        // reproduces the single-device logits exactly
+        let net = random_net(41);
+        let images = random_images(4, 8, 3, 13);
+        let plan = NetworkPlan::compile(&net, Datapath::Arithmetic);
+        let folds = FoldConfig::fully_parallel(plan.n_convs());
+        let want = Pipeline::from_plan(&plan, &folds, 8).run(&images).unwrap();
+        let cuts = plan.cut_points();
+        assert!(!cuts.is_empty());
+        for &c in &cuts {
+            let shards = plan.shard(&[c]).unwrap();
+            let mut chain =
+                ShardChain::new(&shards, &folds, 8, &LinkModel::gbe100(), 333.0, 4).unwrap();
+            let got = chain.run(&images).unwrap();
+            assert_eq!(got.logits, want.logits, "cut at op {c}");
+            assert_eq!(got.image_done_cycles.len(), 4);
+            assert!(got.image_done_cycles.windows(2).all(|w| w[0] < w[1]));
+            assert_eq!(got.links.len(), 1);
+            assert!(got.links[0].tokens > 0, "tokens crossed the link");
+            // the hop latency is visible: the chain cannot be faster
+            assert!(got.cycles >= want.cycles, "cut at op {c}: {} < {}", got.cycles, want.cycles);
+        }
+    }
+
+    #[test]
+    fn persistent_chain_does_not_accumulate_link_clock() {
+        // a sharded serving worker reuses one chain across batches; the
+        // links' wire clocks must reset like the stage clocks do, or
+        // every later batch stalls until the previous run's next_free
+        let net = random_net(47);
+        let plan = NetworkPlan::compile(&net, Datapath::Arithmetic);
+        let folds = FoldConfig::fully_parallel(plan.n_convs());
+        let cut = *plan.cut_points().first().unwrap();
+        let shards = plan.shard(&[cut]).unwrap();
+        let mut chain =
+            ShardChain::new(&shards, &folds, 8, &LinkModel::gbe100(), 333.0, 4).unwrap();
+        let images = random_images(2, 8, 3, 8);
+        let first = chain.run(&images).unwrap();
+        let second = chain.run(&images).unwrap();
+        assert_eq!(first.logits, second.logits, "same inputs, same results");
+        assert!(
+            second.cycles <= first.cycles + 16,
+            "second batch must not pay the first batch's link clock: {} vs {}",
+            second.cycles,
+            first.cycles
+        );
+    }
+
+    #[test]
+    fn mismatched_shard_wiring_is_rejected_at_build() {
+        let net = random_net(43);
+        let plan = NetworkPlan::compile(&net, Datapath::Arithmetic);
+        let cuts = plan.cut_points();
+        let c = cuts[cuts.len() / 2];
+        let head = plan.slice(0..c).unwrap();
+        let folds = FoldConfig::fully_parallel(plan.n_convs());
+        // chain missing its tail
+        let err = ShardChain::new(
+            std::slice::from_ref(&head),
+            &folds,
+            8,
+            &LinkModel::gbe100(),
+            333.0,
+            4,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("dense head"), "{err}");
+        // non-contiguous shards
+        let tail = plan.slice(c..plan.ops.len()).unwrap();
+        let err = ShardChain::new(
+            &[tail.clone(), tail],
+            &folds,
+            8,
+            &LinkModel::gbe100(),
+            333.0,
+            4,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("contiguous"), "{err}");
     }
 }

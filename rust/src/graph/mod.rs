@@ -12,4 +12,4 @@ pub mod plan;
 pub use arch::{mobilenet_v2_full, mobilenet_v2_small, ArchSpec, LayerSpec};
 pub use executor::{decode_test_images, Datapath, Executor, Tensor};
 pub use network::{ConvKind, Network, Op};
-pub use plan::{ConvGeom, ConvPlan, IoGeom, Multipliers, NetworkPlan, PlanOp};
+pub use plan::{ConvGeom, ConvPlan, IoGeom, Multipliers, NetworkPlan, PlanOp, PlanShard};

@@ -281,6 +281,12 @@ impl ConvPlan {
             Multipliers::LutTables { lut6, .. } => *lut6,
         }
     }
+
+    /// Multiply-accumulates per image — the balance weight
+    /// [`NetworkPlan::shard_evenly`] cuts by.
+    pub fn macs(&self) -> u64 {
+        self.geom.out_pixels() as u64 * self.geom.cout as u64 * self.cols as u64
+    }
 }
 
 /// The dense classifier head, lowered. (`name` labels the simulator's
@@ -381,6 +387,213 @@ impl NetworkPlan {
     /// Total physical LUT6 of the compiled multiplier arrays.
     pub fn lut_count(&self) -> usize {
         self.convs().map(ConvPlan::lut_count).sum()
+    }
+
+    /// Token geometry (spatial side, channels) at every op boundary:
+    /// entry `i` is the shape entering `ops[i]`; the final entry is the
+    /// network's output shape. Pool collapses the map to a single
+    /// 1-"pixel" channel vector, matching the token the simulator's pool
+    /// stage emits.
+    pub fn boundary_geoms(&self) -> Vec<(usize, usize)> {
+        let mut geoms = Vec::with_capacity(self.ops.len() + 1);
+        let (mut hw, mut ch) = (self.io.image_size, self.io.in_ch);
+        geoms.push((hw, ch));
+        for op in &self.ops {
+            match op {
+                PlanOp::Input | PlanOp::ResPush { .. } | PlanOp::ResAdd { .. } => {}
+                PlanOp::Conv(c) => {
+                    hw = c.geom.out_h();
+                    ch = c.geom.cout;
+                }
+                PlanOp::PoolSum { .. } => hw = 1,
+                PlanOp::Dense(d) => {
+                    hw = 1;
+                    ch = d.cout;
+                }
+            }
+            geoms.push((hw, ch));
+        }
+        geoms
+    }
+
+    /// Residual bypass depth at every op boundary. A boundary with
+    /// nonzero depth sits between a tee and its join — cutting there
+    /// would put the bypass FIFO on a network link, so such boundaries
+    /// are invalid shard cuts.
+    pub fn res_depths(&self) -> Vec<i32> {
+        let mut depths = Vec::with_capacity(self.ops.len() + 1);
+        let mut d = 0i32;
+        depths.push(d);
+        for op in &self.ops {
+            match op {
+                PlanOp::ResPush { .. } => d += 1,
+                PlanOp::ResAdd { .. } => d -= 1,
+                _ => {}
+            }
+            depths.push(d);
+        }
+        depths
+    }
+
+    /// Interior op boundaries where the plan may be cut into shards:
+    /// residual-balanced, with at least one compute/pool/dense op on
+    /// each side (a shard of bare `Input` ops would be an empty
+    /// pipeline).
+    pub fn cut_points(&self) -> Vec<usize> {
+        let depths = self.res_depths();
+        let is_stage = |op: &PlanOp| {
+            !matches!(op, PlanOp::Input | PlanOp::ResPush { .. } | PlanOp::ResAdd { .. })
+        };
+        // prefix[b] = number of stage ops in ops[..b]
+        let mut prefix = Vec::with_capacity(self.ops.len() + 1);
+        let mut n = 0usize;
+        prefix.push(n);
+        for op in &self.ops {
+            n += is_stage(op) as usize;
+            prefix.push(n);
+        }
+        let total = n;
+        (1..self.ops.len())
+            .filter(|&b| depths[b] == 0 && prefix[b] > 0 && prefix[b] < total)
+            .collect()
+    }
+
+    /// Slice a contiguous op range into a standalone [`PlanShard`]
+    /// (DESIGN.md S18). Fails when the range is empty/out of bounds or
+    /// when a residual bypass crosses either end of the range.
+    pub fn slice(&self, range: std::ops::Range<usize>) -> anyhow::Result<PlanShard> {
+        let (start, end) = (range.start, range.end);
+        anyhow::ensure!(
+            start < end && end <= self.ops.len(),
+            "plan slice {start}..{end} out of bounds for {} ops",
+            self.ops.len()
+        );
+        let mut depth = 0i32;
+        for (i, op) in self.ops[start..end].iter().enumerate() {
+            match op {
+                PlanOp::ResPush { .. } => depth += 1,
+                PlanOp::ResAdd { .. } => {
+                    depth -= 1;
+                    anyhow::ensure!(
+                        depth >= 0,
+                        "op {} is a res_add whose res_push lies before the slice",
+                        start + i
+                    );
+                }
+                _ => {}
+            }
+        }
+        anyhow::ensure!(
+            depth == 0,
+            "{depth} res_push op(s) in {start}..{end} join after the slice"
+        );
+        let geoms = self.boundary_geoms();
+        let (in_hw, in_ch) = geoms[start];
+        let (out_hw, out_ch) = geoms[end];
+        Ok(PlanShard {
+            plan: NetworkPlan {
+                io: IoGeom { image_size: in_hw, in_ch, num_classes: self.io.num_classes },
+                ops: self.ops[start..end].to_vec(),
+            },
+            start,
+            end,
+            in_pixels: in_hw * in_hw,
+            in_ch,
+            out_pixels: out_hw * out_hw,
+            out_ch,
+        })
+    }
+
+    /// Slice the plan at the given interior op boundaries (sorted,
+    /// deduplicated) into `cuts.len() + 1` contiguous shards tiling the
+    /// whole plan.
+    pub fn shard(&self, cuts: &[usize]) -> anyhow::Result<Vec<PlanShard>> {
+        let mut bounds = vec![0usize];
+        for &c in cuts {
+            anyhow::ensure!(c > 0 && c < self.ops.len(), "cut {c} is not an interior boundary");
+            if *bounds.last().expect("bounds start non-empty") != c {
+                bounds.push(c);
+            }
+        }
+        anyhow::ensure!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "cuts must be sorted: {cuts:?}"
+        );
+        bounds.push(self.ops.len());
+        bounds.windows(2).map(|w| self.slice(w[0]..w[1])).collect()
+    }
+
+    /// Cut the plan into (up to) `n` contiguous shards balanced by MAC
+    /// count, cutting only at valid boundaries
+    /// ([`cut_points`](Self::cut_points)): the serving coordinator's
+    /// default placement when no analytic multi-FPGA plan
+    /// (`dataflow::multi`) is driving the split. Always yields at least
+    /// one shard; fewer than `n` when the plan has too few valid
+    /// boundaries.
+    pub fn shard_evenly(&self, n: usize) -> Vec<PlanShard> {
+        let n = n.max(1);
+        let cost: Vec<u64> = self
+            .ops
+            .iter()
+            .map(|op| match op {
+                PlanOp::Conv(c) => c.macs().max(1),
+                PlanOp::Dense(d) => (d.cout * d.w_codes.len()).max(1) as u64,
+                _ => 0,
+            })
+            .collect();
+        let total: u64 = cost.iter().sum();
+        let valid = self.cut_points();
+        let mut cuts: Vec<usize> = Vec::new();
+        let mut acc = 0u64;
+        for (i, &c) in cost.iter().enumerate() {
+            acc += c;
+            let k = cuts.len() as u64 + 1; // shards closed so far, counting this one
+            if cuts.len() + 1 < n
+                && acc * n as u64 >= total * k
+                && valid.binary_search(&(i + 1)).is_ok()
+            {
+                cuts.push(i + 1);
+            }
+        }
+        self.shard(&cuts)
+            .expect("cuts drawn from cut_points() are valid by construction")
+    }
+}
+
+/// A contiguous sub-plan (DESIGN.md S18): one device's slice of a
+/// [`NetworkPlan`], re-packaged as a standalone plan whose [`IoGeom`]
+/// describes the shard's *own* input — so every consumer of plan
+/// geometry (the pipeline builder, the coordinator, the runtime) works
+/// unchanged on a shard.
+#[derive(Debug, Clone)]
+pub struct PlanShard {
+    /// The sub-plan; `plan.io` is the shard's input geometry
+    /// (`num_classes` is inherited from the parent).
+    pub plan: NetworkPlan,
+    /// Half-open op range `[start, end)` in the parent plan.
+    pub start: usize,
+    pub end: usize,
+    /// Tokens (pixels) entering the shard per image, and their width.
+    pub in_pixels: usize,
+    pub in_ch: usize,
+    /// Tokens leaving the shard per image, and their width. For the tail
+    /// shard these describe the dense head's logits, which leave as a
+    /// result, not as link tokens.
+    pub out_pixels: usize,
+    pub out_ch: usize,
+}
+
+impl PlanShard {
+    /// Whether this shard ends in the dense head (emits logits rather
+    /// than activation tokens).
+    pub fn is_tail(&self) -> bool {
+        matches!(self.plan.ops.last(), Some(PlanOp::Dense(_)))
+    }
+
+    /// Activation bytes leaving this shard per image at `a_bits`-wide
+    /// codes — the executable counterpart of the analytic egress model.
+    pub fn egress_bytes(&self, a_bits: u32) -> u64 {
+        (self.out_pixels * self.out_ch) as u64 * a_bits.max(1) as u64 / 8
     }
 }
 
@@ -497,6 +710,79 @@ mod tests {
         // the 8-bit stem stays arithmetic even on the LUT datapath
         let stem = lut.convs().next().unwrap();
         assert!(matches!(stem.mults, Multipliers::Weights));
+    }
+
+    #[test]
+    fn boundary_geoms_chain_and_slices_inherit_them() {
+        let net = Network::synthetic(&mobilenet_v2_small(), 5);
+        let plan = NetworkPlan::compile(&net, Datapath::Arithmetic);
+        let geoms = plan.boundary_geoms();
+        assert_eq!(geoms.len(), plan.ops.len() + 1);
+        assert_eq!(geoms[0], (net.meta.image_size, net.meta.in_ch));
+        // final boundary is the classifier output
+        assert_eq!(geoms.last(), Some(&(1, net.meta.num_classes)));
+        // every interior boundary is a valid cut on this res-free net
+        let cuts = plan.cut_points();
+        assert!(!cuts.is_empty());
+        for &c in &cuts {
+            let head = plan.slice(0..c).unwrap();
+            let tail = plan.slice(c..plan.ops.len()).unwrap();
+            assert_eq!(head.start, 0);
+            assert_eq!(head.end, tail.start);
+            assert_eq!(tail.end, plan.ops.len());
+            // geometry chains across the cut
+            assert_eq!((head.out_pixels, head.out_ch), (tail.in_pixels, tail.in_ch));
+            // the shard's own IoGeom is its input shape
+            assert_eq!(tail.plan.io.image_size * tail.plan.io.image_size, tail.in_pixels);
+            assert_eq!(tail.plan.io.in_ch, tail.in_ch);
+            assert_eq!(tail.plan.io.num_classes, plan.io.num_classes);
+            assert!(tail.is_tail() && !head.is_tail());
+        }
+    }
+
+    #[test]
+    fn slice_rejects_unbalanced_residual_ranges() {
+        // input, conv, push, conv, add, pool, dense — like a residual block
+        let net = Network::synthetic(&mobilenet_v2_small(), 3);
+        let mut ops = net.ops.clone();
+        ops.insert(2, crate::graph::network::Op::ResPush {});
+        // duplicate the first conv so the push wraps a real stage
+        let conv = ops[1].clone();
+        ops.insert(3, conv);
+        ops.insert(4, crate::graph::network::Op::ResAdd { bits: 4 });
+        let net = Network { meta: net.meta.clone(), ops };
+        let plan = NetworkPlan::compile(&net, Datapath::Arithmetic);
+        // boundary 3 sits between the push (op 2) and the add (op 4)
+        assert!(plan.slice(0..3).is_err(), "push without its add must not slice");
+        assert!(plan.slice(3..plan.ops.len()).is_err(), "add without its push must not slice");
+        assert!(plan.slice(0..plan.ops.len()).is_ok(), "the whole plan is balanced");
+        assert!(!plan.cut_points().contains(&3), "cut_points must skip mid-bypass boundaries");
+        // out-of-bounds and empty ranges diagnose too
+        assert!(plan.slice(5..5).is_err());
+        assert!(plan.slice(0..plan.ops.len() + 1).is_err());
+    }
+
+    #[test]
+    fn shard_evenly_tiles_the_plan_and_balances_macs() {
+        let net = Network::synthetic(&mobilenet_v2_small(), 9);
+        let plan = NetworkPlan::compile(&net, Datapath::Arithmetic);
+        for n in [1usize, 2, 3, 4] {
+            let shards = plan.shard_evenly(n);
+            assert!(!shards.is_empty() && shards.len() <= n);
+            assert_eq!(shards[0].start, 0);
+            assert_eq!(shards.last().unwrap().end, plan.ops.len());
+            for w in shards.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "shards tile contiguously");
+                assert_eq!((w[0].out_pixels, w[0].out_ch), (w[1].in_pixels, w[1].in_ch));
+            }
+            assert!(shards.last().unwrap().is_tail());
+            // conv stages are preserved exactly once across shards
+            let convs: usize = shards.iter().map(|s| s.plan.n_convs()).sum();
+            assert_eq!(convs, plan.n_convs());
+            if n >= 2 {
+                assert!(shards.len() >= 2, "small net has enough boundaries for 2 shards");
+            }
+        }
     }
 
     #[test]

@@ -32,12 +32,15 @@ USAGE:
 
 COMMANDS:
   verify [--n N] [--lut-fabric]      simulate the test set; verify vs PJRT
-  serve  [--requests N] [--workers N] [--max-batch N]
+  serve  [--requests N] [--workers N] [--max-batch N] [--devices N]
   synth  [--arch full|small] [--fraction D]
   util   [--arch full|small]          Vivado-style utilization report
   netlist [--layer NAME]              structural Verilog for a trained layer
-  multi  [--devices N]                multi-FPGA partitioning plan
-  report <table1|fig1|fig2|fig6|table2>
+  multi  [--devices N] [--run [--n N]]
+         analytic multi-FPGA plan; --run executes the sharded chain on the
+         small network (trained artifacts when built, its synthetic twin
+         otherwise) and prints measured-vs-modeled FPS
+  report <table1|fig1|fig2|fig6|table2|multi>
 ";
 
 /// Minimal flag parser: `--key value` and bare flags.
@@ -90,11 +93,18 @@ fn main() -> Result<()> {
             args.get("requests", 512usize),
             args.get("workers", 2usize),
             args.get("max-batch", 8usize),
+            args.get("devices", 0usize),
         ),
         Some("synth") => synth(&args.get::<String>("arch", "full".into()), args.get("fraction", 1u64)),
         Some("util") => util(&args.get::<String>("arch", "full".into())),
         Some("netlist") => netlist(&artifacts, &args.get::<String>("layer", "ir0_exp".into())),
-        Some("multi") => multi(args.get("devices", 2usize)),
+        Some("multi") => {
+            if args.has("run") {
+                multi_run(&artifacts, args.get("devices", 2usize), args.get("n", 12usize))
+            } else {
+                multi(args.get("devices", 2usize))
+            }
+        }
         Some("report") => {
             let what = args.positional.get(1).cloned().unwrap_or_default();
             report(&artifacts, &what)
@@ -113,7 +123,7 @@ fn load_network(artifacts: &Artifacts) -> Result<Network> {
 fn verify(artifacts: &Artifacts, n: usize, lut_fabric: bool) -> Result<()> {
     let net = load_network(artifacts)?;
     let io = net.io();
-    let (images, labels) = artifacts.load_test_set(io.image_size, io.image_size, io.in_ch)?;
+    let (images, labels) = artifacts.load_test_set_for(&io)?;
     let n = if n == 0 { images.len() } else { n.min(images.len()) };
     println!("loaded network ({} ops) + {} test images", net.ops.len(), n);
 
@@ -121,7 +131,7 @@ fn verify(artifacts: &Artifacts, n: usize, lut_fabric: bool) -> Result<()> {
     let folds = FoldConfig::fully_parallel(net.convs().count());
     let mut pipe = Pipeline::build(&net, &folds, 16);
     let t0 = std::time::Instant::now();
-    let report = pipe.run(&images[..n]);
+    let report = pipe.run(&images[..n])?;
     let sim_elapsed = t0.elapsed();
     let correct = report
         .logits
@@ -176,13 +186,22 @@ fn verify(artifacts: &Artifacts, n: usize, lut_fabric: bool) -> Result<()> {
     Ok(())
 }
 
-fn serve(artifacts: &Artifacts, requests: usize, workers: usize, max_batch: usize) -> Result<()> {
+fn serve(
+    artifacts: &Artifacts,
+    requests: usize,
+    workers: usize,
+    max_batch: usize,
+    devices: usize,
+) -> Result<()> {
     let net = Arc::new(load_network(artifacts)?);
-    let (images, _) =
-        artifacts.load_test_set(net.meta.image_size, net.meta.image_size, net.meta.in_ch)?;
+    let (images, _) = artifacts.load_test_set_for(&net.io())?;
+    // --devices N > 0 serves from the sharded chain backend (DESIGN.md
+    // S18); the default stays the whole-network reference executor
+    let backend =
+        if devices > 0 { Backend::Sharded { devices } } else { Backend::Reference };
     let coord = Coordinator::start(
         net,
-        ServeConfig { backend: Backend::Reference, workers, max_batch, ..Default::default() },
+        ServeConfig { backend, workers, max_batch, ..Default::default() },
     );
     let t0 = std::time::Instant::now();
     let mut tickets = Vec::with_capacity(requests);
@@ -279,10 +298,120 @@ fn multi(devices: usize) -> Result<()> {
         );
     }
     println!(
-        "  -> {:.0} FPS steady-state, +{:.1} us pipeline latency",
+        "  -> {:.0} FPS steady-state ({}-bound), +{:.1} us pipeline latency",
         plan.fps(),
+        if plan.is_link_bound() { "link" } else { "compute" },
         plan.added_latency_s() * 1e6
     );
+    Ok(())
+}
+
+/// `multi --run`: execute the partition as a sharded chain
+/// (`lutmul::dataflow::ShardChain`) on real inputs and check the
+/// simulation against the analytic model (EXPERIMENTS.md E11). Uses the
+/// trained artifacts when built, the synthetic twin of the same
+/// architecture otherwise, so the smoke check runs on a fresh checkout.
+fn multi_run(artifacts: &Artifacts, devices: usize, n: usize) -> Result<()> {
+    use lutmul::dataflow::multi::{partition, LinkModel};
+    use lutmul::dataflow::ShardChain;
+    use lutmul::graph::executor::Datapath;
+    use lutmul::graph::plan::NetworkPlan;
+
+    let arch = mobilenet_v2_small();
+    let (folds, _) = optimize_folding(&arch, &Budget::whole(&U280));
+    let mplan = partition(&arch, &U280, devices, &folds, LinkModel::gbe100());
+
+    let (net, images, source) = match load_network(artifacts) {
+        Ok(net) => {
+            let (images, _) = artifacts.load_test_set_for(&net.io())?;
+            (net, images, "trained artifacts")
+        }
+        Err(_) => {
+            let net = Network::synthetic(&arch, 0x5EED);
+            let io = net.io();
+            let mut rng = lutmul::util::prop::Rng::new(0x1234_5678);
+            let px = io.image_size * io.image_size * io.in_ch;
+            let images: Vec<Vec<i32>> =
+                (0..n.max(1)).map(|_| rng.vec_i32(px, 0, 15)).collect();
+            (net, images, "synthetic network (artifacts not built)")
+        }
+    };
+    let n = n.max(1).min(images.len());
+    let images = &images[..n];
+
+    let plan = NetworkPlan::compile(&net, Datapath::Arithmetic);
+    anyhow::ensure!(
+        folds.len() >= plan.n_convs(),
+        "network has {} conv layers but the {} architecture folds only cover {} — \
+         the artifacts were built from a different model",
+        plan.n_convs(),
+        arch.name,
+        folds.len()
+    );
+    let shards = mplan.to_shards(&plan)?;
+    let conv_folds = FoldConfig { folds: folds[..plan.n_convs()].to_vec() };
+    println!(
+        "sharded chain: {} device(s) over 100 GbE | {} | {} images",
+        shards.len(),
+        source,
+        n
+    );
+    for (i, s) in shards.iter().enumerate() {
+        println!(
+            "  dev{i}: ops {:>2}..{:>2} | {:>2} convs | in {:>4} px x {:>3} ch | egress {:>6} B/img",
+            s.start,
+            s.end,
+            s.plan.n_convs(),
+            s.in_pixels,
+            s.in_ch,
+            if s.is_tail() { 0 } else { s.egress_bytes(net.meta.a_bits.max(1)) }
+        );
+    }
+
+    // single-device reference run: the chain must be bit-exact with it
+    let mut single = Pipeline::from_plan(&plan, &conv_folds, 16);
+    let want = single.run(images)?;
+    let mut chain = ShardChain::new(
+        &shards,
+        &conv_folds,
+        16,
+        &LinkModel::gbe100(),
+        U280.max_freq_mhz,
+        net.meta.a_bits.max(1),
+    )?;
+    let got = chain.run(images)?;
+    anyhow::ensure!(
+        got.logits == want.logits,
+        "sharded chain diverged from the single-device pipeline"
+    );
+    println!("  bit-exact vs single-device pipeline: {n}/{n} images");
+
+    for (i, l) in got.links.iter().enumerate() {
+        println!(
+            "  link{i}: {:>6} tokens | {:>3} cycles/token | latency {} cycles | stalled {} cycles",
+            l.tokens, l.cycles_per_token, l.latency_cycles, l.stalled_cycles
+        );
+    }
+    let f = U280.max_freq_mhz;
+    let measured = got.measured_steady_fps(f);
+    let modeled = mplan.fps();
+    println!(
+        "  measured {:.0} FPS steady-state (interval {} cycles) vs modeled {:.0} FPS ({}-bound) | ratio {:.3}",
+        measured,
+        got.incremental_cycles_per_image(),
+        modeled,
+        if mplan.is_link_bound() { "link" } else { "compute" },
+        measured / modeled
+    );
+    // the steady-state comparison needs a warm chain (a couple of images
+    // in flight) and a compute-bound plan to be meaningful
+    if !mplan.is_link_bound() && n >= 4 {
+        anyhow::ensure!(
+            (measured / modeled - 1.0).abs() <= 0.15,
+            "measured FPS {measured:.0} deviates more than 15% from the analytic {modeled:.0}"
+        );
+        println!("  within 15% of the analytic model: OK");
+    }
     Ok(())
 }
 
@@ -293,7 +422,8 @@ fn report(artifacts: &Artifacts, what: &str) -> Result<()> {
         "fig2" => lutmul::reports::fig2(&artifacts.fig2_json()),
         "fig6" => lutmul::reports::fig6(),
         "table2" => lutmul::reports::table2(),
-        other => anyhow::bail!("unknown report '{other}'; try table1|fig1|fig2|fig6|table2"),
+        "multi" => lutmul::reports::multi_scaling(),
+        other => anyhow::bail!("unknown report '{other}'; try table1|fig1|fig2|fig6|table2|multi"),
     }
     Ok(())
 }

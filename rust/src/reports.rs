@@ -3,6 +3,7 @@
 //! (see the experiment index in DESIGN.md).
 
 use crate::baselines;
+use crate::dataflow::multi::{partition, LinkModel};
 use crate::fabric::device::{u280_datasheet_int8_tops, U280, V100};
 use crate::graph::mobilenet_v2_full;
 use crate::roofline;
@@ -134,6 +135,46 @@ pub fn paper_style_design() -> Design {
     let mut d = synthesize(&arch, &U280, &folds);
     d.cycles_per_image = d.cycles_per_image.max(cycles);
     d
+}
+
+/// Multi-device scaling table (DESIGN.md S18 / EXPERIMENTS.md E11): FPS
+/// of full MobileNetV2 partitioned over 1–4 U280s, flagging whether each
+/// point is compute- or link-bound. Printed for the 100 GbE fabric the
+/// paper's testbed uses and a deliberately thin 1 GbE contrast where the
+/// links take over as the bottleneck.
+pub fn multi_scaling() {
+    let arch = mobilenet_v2_full();
+    let (folds, _) = optimize_folding(&arch, &Budget::whole(&U280));
+    println!("Multi-device scaling: MobileNetV2 across 1-4 x {}", U280.name);
+    for (label, link) in [
+        ("100 GbE", LinkModel::gbe100()),
+        ("1 GbE", LinkModel { bandwidth_bps: 125e6 * 0.8, latency_s: 20e-6 }),
+    ] {
+        println!("\n{label} links:");
+        println!(
+            "{:>8}{:>14}{:>10}{:>10}{:>12}{:>14}",
+            "devices", "max LUT/dev", "FPS", "speedup", "bound", "+latency(us)"
+        );
+        let base = partition(&arch, &U280, 1, &folds, link).fps();
+        for n in 1..=4usize {
+            let plan = partition(&arch, &U280, n, &folds, link);
+            println!(
+                "{:>8}{:>14.0}{:>10.0}{:>9.2}x{:>12}{:>14.1}",
+                n,
+                plan.max_device_luts(),
+                plan.fps(),
+                plan.fps() / base,
+                if plan.is_link_bound() { "link" } else { "compute" },
+                plan.added_latency_s() * 1e6
+            );
+        }
+    }
+    println!(
+        "\n(per-device folds held at the single-device optimum, so the table\n\
+         isolates the partition: balanced slices fit smaller devices at the\n\
+         same steady-state FPS until the link bandwidth takes over; re-run\n\
+         `lutmul multi --run` for the executable-chain cross-check)"
+    );
 }
 
 /// Table 2: accelerator comparison (published rows + our regenerated row).

@@ -196,6 +196,16 @@ impl Artifacts {
         self.dir.join("fig2_accuracy.json")
     }
 
+    /// [`load_test_set`](Self::load_test_set) from a network's compiled
+    /// I/O geometry (`Network::io()` / `NetworkPlan::io`, DESIGN.md S17)
+    /// instead of loose dimensions, mirroring [`Runtime::load_for`].
+    pub fn load_test_set_for(
+        &self,
+        io: &crate::graph::plan::IoGeom,
+    ) -> Result<(Vec<Vec<i32>>, Vec<u8>)> {
+        self.load_test_set(io.image_size, io.image_size, io.in_ch)
+    }
+
     /// Load the test set (images as code vectors + labels).
     pub fn load_test_set(&self, h: usize, w: usize, c: usize) -> Result<(Vec<Vec<i32>>, Vec<u8>)> {
         let img_bytes = std::fs::read(self.test_images())

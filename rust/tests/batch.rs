@@ -147,11 +147,14 @@ fn all_three_backends_agree_on_batches() {
     let net = small_net();
     let mut rng = Rng::new(3);
     let images = random_images(&mut rng, 4, 16, 3);
-    let a = run_batch(&net, Backend::Reference, &images);
-    let b = run_batch(&net, Backend::LutFabric, &images);
-    let c = run_batch(&net, Backend::Simulator, &images);
+    let a = run_batch(&net, Backend::Reference, &images).unwrap();
+    let b = run_batch(&net, Backend::LutFabric, &images).unwrap();
+    let c = run_batch(&net, Backend::Simulator, &images).unwrap();
     assert_eq!(a, b, "Reference vs LutFabric");
     assert_eq!(a, c, "Reference vs Simulator");
+    // the multi-device chain is the fourth face of the same plans
+    let d = run_batch(&net, Backend::Sharded { devices: 2 }, &images).unwrap();
+    assert_eq!(a, d, "Reference vs Sharded");
 }
 
 #[test]

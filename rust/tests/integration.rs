@@ -66,7 +66,7 @@ fn dataflow_pipeline_matches_executor_on_trained_net() {
     let n = 12;
     let ex = Executor::new(&net, Datapath::Arithmetic);
     let mut pipe = Pipeline::build(&net, &FoldConfig::fully_parallel(net.convs().count()), 16);
-    let rep = pipe.run(&images[..n]);
+    let rep = pipe.run(&images[..n]).unwrap();
     for i in 0..n {
         let t = Tensor::from_hwc(16, 16, 3, images[i].clone());
         assert_eq!(rep.logits[i], ex.execute(&t), "image {i}");
@@ -172,9 +172,13 @@ fn run_batch_backends_agree() {
         return;
     };
     let imgs = &images[..3];
-    let a = run_batch(&net, Backend::Reference, imgs);
-    let b = run_batch(&net, Backend::Simulator, imgs);
+    let a = run_batch(&net, Backend::Reference, imgs).unwrap();
+    let b = run_batch(&net, Backend::Simulator, imgs).unwrap();
     assert_eq!(a, b);
+    // the sharded chain (2 simulated devices over links) agrees too —
+    // on the trained net this exercises residual-balanced cut snapping
+    let c = run_batch(&net, Backend::Sharded { devices: 2 }, imgs).unwrap();
+    assert_eq!(a, c);
 }
 
 #[test]
@@ -291,8 +295,8 @@ fn prop_folding_never_changes_results() {
         };
         let images: Vec<Vec<i32>> = (0..2).map(|_| rng.vec_i32(36 * cin, 0, 15)).collect();
         let fold = rng.range_i32(1, 6) as usize;
-        let a = Pipeline::build(&net, &FoldConfig::fully_parallel(1), 8).run(&images);
-        let b = Pipeline::build(&net, &FoldConfig::uniform(1, fold), 8).run(&images);
+        let a = Pipeline::build(&net, &FoldConfig::fully_parallel(1), 8).run(&images).unwrap();
+        let b = Pipeline::build(&net, &FoldConfig::uniform(1, fold), 8).run(&images).unwrap();
         assert_eq!(a.logits, b.logits);
     });
 }

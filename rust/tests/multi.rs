@@ -1,0 +1,330 @@
+//! Multi-device sharding properties (DESIGN.md S18, no artifacts
+//! needed): randomized `ArchSpec` sweeps over `multi::partition`
+//! (contiguous, covering, within the device count, finite FPS), shard
+//! slicing that tiles the compiled plan, bit-exactness of 2- and 3-way
+//! `ShardChain`s against the single-device `Pipeline` — including
+//! residual bypasses, where cuts must snap around the tee..join region —
+//! and the measured-vs-analytic steady-state FPS check on compute-bound
+//! configurations. The serving tier rides the same machinery through
+//! `Backend::Sharded`.
+
+use std::sync::Arc;
+
+use lutmul::coordinator::{Backend, Coordinator, ServeConfig};
+use lutmul::dataflow::multi::{partition, LinkModel};
+use lutmul::dataflow::{FoldConfig, Pipeline, ShardChain};
+use lutmul::fabric::device::U280;
+use lutmul::graph::executor::{Datapath, Executor, Tensor};
+use lutmul::graph::network::{ConvKind, Network, Op};
+use lutmul::graph::plan::NetworkPlan;
+use lutmul::graph::{mobilenet_v2_small, ArchSpec, LayerSpec};
+use lutmul::synth::fold::{optimize_folding, Budget};
+use lutmul::util::prop::{self, Rng};
+
+/// Random 4-bit conv stack + 8-bit classifier head (the shape format
+/// `Network::synthetic` lowers), as in `tests/plan.rs`.
+fn random_spec(rng: &mut Rng) -> ArchSpec {
+    let input_hw = *rng.choose(&[5usize, 7, 9, 11, 16]);
+    let input_ch = 1 + rng.below(3) as usize;
+    let mut layers = Vec::new();
+    let (mut cin, mut hw) = (input_ch, input_hw);
+    let n_layers = 3 + rng.below(3) as usize;
+    for i in 0..n_layers {
+        let kind = *rng.choose(&[ConvKind::Std, ConvKind::Pw, ConvKind::Dw]);
+        let (k, stride) = match kind {
+            ConvKind::Pw => (1, 1),
+            _ => (3, 1 + rng.below(2) as usize),
+        };
+        let cout = match kind {
+            ConvKind::Dw => cin,
+            _ => 1 + rng.below(6) as usize,
+        };
+        layers.push(LayerSpec {
+            name: format!("l{i}"),
+            kind,
+            cin,
+            cout,
+            k,
+            stride,
+            in_hw: hw,
+            w_bits: 4,
+            a_bits: 4,
+        });
+        hw = hw.div_ceil(stride);
+        cin = cout;
+    }
+    layers.push(LayerSpec {
+        name: "fc".into(),
+        kind: ConvKind::Pw,
+        cin,
+        cout: 3,
+        k: 1,
+        stride: 1,
+        in_hw: 1,
+        w_bits: 8,
+        a_bits: 8,
+    });
+    ArchSpec { name: "random".into(), input_hw, input_ch, layers }
+}
+
+fn random_images(rng: &mut Rng, net: &Network, n: usize) -> Vec<Vec<i32>> {
+    let (s, c) = (net.meta.image_size, net.meta.in_ch);
+    (0..n).map(|_| rng.vec_i32(s * s * c, 0, 15)).collect()
+}
+
+/// A small network with a residual bypass: conv, tee, two convs, join,
+/// strided conv, pool, dense — the shape whose mid-bypass boundaries a
+/// shard cut must never split.
+fn residual_net(seed: u64) -> Network {
+    let spec = ArchSpec {
+        name: "res".into(),
+        input_hw: 8,
+        input_ch: 3,
+        layers: vec![
+            LayerSpec { name: "c0".into(), kind: ConvKind::Std, cin: 3, cout: 6, k: 3, stride: 1, in_hw: 8, w_bits: 4, a_bits: 4 },
+            LayerSpec { name: "c1".into(), kind: ConvKind::Pw, cin: 6, cout: 8, k: 1, stride: 1, in_hw: 8, w_bits: 4, a_bits: 4 },
+            LayerSpec { name: "c2".into(), kind: ConvKind::Pw, cin: 8, cout: 6, k: 1, stride: 1, in_hw: 8, w_bits: 4, a_bits: 4 },
+            LayerSpec { name: "c3".into(), kind: ConvKind::Std, cin: 6, cout: 5, k: 3, stride: 2, in_hw: 8, w_bits: 4, a_bits: 4 },
+            LayerSpec { name: "fc".into(), kind: ConvKind::Pw, cin: 5, cout: 3, k: 1, stride: 1, in_hw: 1, w_bits: 8, a_bits: 8 },
+        ],
+    };
+    let mut net = Network::synthetic(&spec, seed);
+    // wrap c1..c2 in a residual bypass: ops are
+    // [input, c0, c1, c2, c3, pool, dense] -> insert push before c1 and
+    // add after c2 (c1: 6ch -> 8ch -> c2: back to 6ch, so the join widths
+    // match)
+    net.ops.insert(2, Op::ResPush {});
+    net.ops.insert(5, Op::ResAdd { bits: 4 });
+    net
+}
+
+#[test]
+fn prop_partition_contiguous_covering_and_finite() {
+    prop::cases(12, |rng| {
+        let spec = random_spec(rng);
+        let folds: Vec<usize> =
+            spec.layers.iter().map(|_| 1 + rng.below(4) as usize).collect();
+        let max_devices = spec.layers.len().min(4);
+        for n in 1..=max_devices {
+            let plan = partition(&spec, &U280, n, &folds, LinkModel::gbe100());
+            // respects the device count (layer granularity can merge)
+            assert!(!plan.partitions.is_empty() && plan.partitions.len() <= n);
+            // contiguous and covering every layer exactly once
+            assert_eq!(plan.partitions[0].first_layer, 0);
+            assert_eq!(
+                plan.partitions.last().unwrap().last_layer,
+                spec.layers.len() - 1
+            );
+            for w in plan.partitions.windows(2) {
+                assert_eq!(w[0].last_layer + 1, w[1].first_layer, "contiguous cut");
+            }
+            for p in &plan.partitions {
+                assert!(p.first_layer <= p.last_layer);
+                assert!(p.bound_cycles >= 1);
+            }
+            let fps = plan.fps();
+            assert!(fps.is_finite() && fps > 0.0, "fps {fps}");
+            assert!(plan.compute_fps() >= fps && plan.link_fps() >= fps);
+        }
+    });
+}
+
+#[test]
+fn prop_analytic_partition_lowers_to_executable_shards() {
+    prop::cases(8, |rng| {
+        let spec = random_spec(rng);
+        let folds = vec![1usize; spec.layers.len()];
+        let net = Network::synthetic(&spec, rng.next_u64());
+        let plan = NetworkPlan::compile(&net, Datapath::Arithmetic);
+        for n in [1usize, 2, 3] {
+            let mplan = partition(&spec, &U280, n, &folds, LinkModel::gbe100());
+            let shards = mplan.to_shards(&plan).unwrap();
+            assert!(!shards.is_empty() && shards.len() <= n);
+            assert_eq!(shards[0].start, 0);
+            assert_eq!(shards.last().unwrap().end, plan.ops.len());
+            for w in shards.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "shards tile the plan");
+                assert_eq!(
+                    (w[0].out_pixels, w[0].out_ch),
+                    (w[1].in_pixels, w[1].in_ch),
+                    "geometry chains across the cut"
+                );
+            }
+            let convs: usize = shards.iter().map(|s| s.plan.n_convs()).sum();
+            assert_eq!(convs, plan.n_convs(), "every conv placed exactly once");
+        }
+    });
+}
+
+#[test]
+fn prop_shard_chain_bit_exact_with_single_pipeline() {
+    // the equivalence acceptance: 2- and 3-way chains reproduce the
+    // single-device pipeline exactly on randomized synthetic networks
+    prop::cases(6, |rng| {
+        let spec = random_spec(rng);
+        let net = Network::synthetic(&spec, rng.next_u64());
+        let images = random_images(rng, &net, 3);
+        let plan = NetworkPlan::compile(&net, Datapath::Arithmetic);
+        let folds = FoldConfig::fully_parallel(plan.n_convs());
+        let want = Pipeline::from_plan(&plan, &folds, 8).run(&images).unwrap();
+        for n in [2usize, 3] {
+            let shards = plan.shard_evenly(n);
+            let mut chain =
+                ShardChain::new(&shards, &folds, 8, &LinkModel::gbe100(), 333.0, 4)
+                    .unwrap();
+            let got = chain.run(&images).unwrap();
+            assert_eq!(
+                got.logits, want.logits,
+                "{n}-way chain diverged (hw={})",
+                net.meta.image_size
+            );
+            assert!(got.image_done_cycles.windows(2).all(|w| w[0] < w[1]));
+            assert_eq!(got.shards.len(), shards.len());
+            assert_eq!(got.links.len(), shards.len() - 1);
+        }
+    });
+}
+
+#[test]
+fn shard_chain_snaps_cuts_around_residual_bypasses() {
+    let net = residual_net(0xE5);
+    let images = {
+        let mut rng = Rng::new(77);
+        random_images(&mut rng, &net, 4)
+    };
+    let plan = NetworkPlan::compile(&net, Datapath::Arithmetic);
+    let folds = FoldConfig::fully_parallel(plan.n_convs());
+    let want = Pipeline::from_plan(&plan, &folds, 8).run(&images).unwrap();
+    // mid-bypass boundaries are not valid cuts
+    let cuts = plan.cut_points();
+    for b in 3..=5usize {
+        assert!(!cuts.contains(&b), "boundary {b} splits the bypass");
+    }
+    for n in [2usize, 3] {
+        let shards = plan.shard_evenly(n);
+        // the bypass never straddles a shard boundary
+        for s in &shards {
+            let pushes = s
+                .plan
+                .ops
+                .iter()
+                .filter(|op| matches!(op, lutmul::graph::plan::PlanOp::ResPush { .. }))
+                .count();
+            let adds = s
+                .plan
+                .ops
+                .iter()
+                .filter(|op| matches!(op, lutmul::graph::plan::PlanOp::ResAdd { .. }))
+                .count();
+            assert_eq!(pushes, adds, "shard {}..{} splits a bypass", s.start, s.end);
+        }
+        let mut chain =
+            ShardChain::new(&shards, &folds, 8, &LinkModel::gbe100(), 333.0, 4).unwrap();
+        let got = chain.run(&images).unwrap();
+        assert_eq!(got.logits, want.logits, "{n}-way residual chain");
+    }
+}
+
+#[test]
+fn measured_chain_fps_tracks_analytic_model_when_compute_bound() {
+    // the acceptance bound: on compute-bound configurations the simulated
+    // steady-state FPS lands within 15% of MultiFpgaPlan::fps()
+    let arch = mobilenet_v2_small();
+    let (folds, _) = optimize_folding(&arch, &Budget::whole(&U280));
+    let net = Network::synthetic(&arch, 0x5EED);
+    let plan = NetworkPlan::compile(&net, Datapath::Arithmetic);
+    let conv_folds = FoldConfig { folds: folds[..plan.n_convs()].to_vec() };
+    let mut rng = Rng::new(11);
+    let images = random_images(&mut rng, &net, 10);
+    for n in [1usize, 2, 3] {
+        let mplan = partition(&arch, &U280, n, &folds, LinkModel::gbe100());
+        assert!(!mplan.is_link_bound(), "100 GbE never binds the small net");
+        let shards = mplan.to_shards(&plan).unwrap();
+        let mut chain = ShardChain::new(
+            &shards,
+            &conv_folds,
+            16,
+            &LinkModel::gbe100(),
+            U280.max_freq_mhz,
+            4,
+        )
+        .unwrap();
+        let rep = chain.run(&images).unwrap();
+        let measured = rep.measured_steady_fps(U280.max_freq_mhz);
+        let modeled = mplan.fps();
+        let ratio = measured / modeled;
+        assert!(
+            (0.85..=1.15).contains(&ratio),
+            "{n} device(s): measured {measured:.0} FPS vs modeled {modeled:.0} FPS (ratio {ratio:.3})"
+        );
+    }
+}
+
+#[test]
+fn slow_links_throttle_the_executable_chain_too() {
+    // the analytic model says a thin link caps FPS; the executable chain
+    // must show the same throttling (tokens pace at cycles_per_token)
+    let arch = mobilenet_v2_small();
+    let folds = vec![1usize; arch.layers.len()];
+    let net = Network::synthetic(&arch, 0xBEEF);
+    let plan = NetworkPlan::compile(&net, Datapath::Arithmetic);
+    let conv_folds = FoldConfig::fully_parallel(plan.n_convs());
+    let mut rng = Rng::new(23);
+    let images = random_images(&mut rng, &net, 6);
+    let fast_link = LinkModel::gbe100();
+    let slow_link = LinkModel { bandwidth_bps: 2e8, latency_s: 2e-6 };
+    let mplan = partition(&arch, &U280, 2, &folds, slow_link);
+    let shards = mplan.to_shards(&plan).unwrap();
+    let run_with = |link: &LinkModel, images: &[Vec<i32>]| {
+        let mut chain =
+            ShardChain::new(&shards, &conv_folds, 16, link, U280.max_freq_mhz, 4).unwrap();
+        chain.run(images).unwrap()
+    };
+    let fast = run_with(&fast_link, &images);
+    let slow = run_with(&slow_link, &images);
+    assert_eq!(fast.logits, slow.logits, "link speed never changes results");
+    assert!(
+        slow.incremental_cycles_per_image() > fast.incremental_cycles_per_image(),
+        "thin link must stretch the steady-state interval: {} !> {}",
+        slow.incremental_cycles_per_image(),
+        fast.incremental_cycles_per_image()
+    );
+    assert!(slow.links[0].cycles_per_token > fast.links[0].cycles_per_token);
+}
+
+#[test]
+fn sharded_backend_serves_bit_exact_with_shard_metrics() {
+    // Backend::Sharded end to end through the coordinator: results match
+    // the reference executor and the metrics expose per-shard counters
+    let net = Arc::new(Network::synthetic(&mobilenet_v2_small(), 42));
+    let ex = Executor::new(&net, Datapath::Arithmetic);
+    let io = net.io();
+    let mut rng = Rng::new(99);
+    let images = random_images(&mut rng, &net, 8);
+    let coord = Coordinator::start(
+        net.clone(),
+        ServeConfig {
+            backend: Backend::Sharded { devices: 2 },
+            workers: 1,
+            max_batch: 4,
+            ..Default::default()
+        },
+    );
+    let tickets: Vec<_> = images
+        .iter()
+        .map(|img| coord.submit(img.clone()).expect("queue accepts"))
+        .collect();
+    for (i, t) in tickets.into_iter().enumerate() {
+        let r = t.wait().unwrap();
+        let want =
+            ex.execute(&Tensor::from_hwc(io.image_size, io.image_size, io.in_ch, images[i].clone()));
+        assert_eq!(r.logits, want, "request {i}");
+    }
+    let m = coord.metrics();
+    assert_eq!(m.completed, 8);
+    assert_eq!(m.shards.len(), 2, "two shards report occupancy");
+    assert!(m.shards.iter().all(|s| s.fires > 0), "both shards fired");
+    assert!(m.shards[0].link_busy_cycles > 0, "tokens crossed the link");
+    assert!(m.to_string().contains("shard0"), "{m}");
+    coord.shutdown();
+}

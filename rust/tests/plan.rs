@@ -98,7 +98,7 @@ fn prop_pipeline_from_plan_matches_executor() {
         let ex = Executor::new(&net, Datapath::Arithmetic);
         let plan = ex.plan();
         let mut pipe = Pipeline::from_plan(plan, &FoldConfig::fully_parallel(plan.n_convs()), 8);
-        let report = pipe.run(&images);
+        let report = pipe.run(&images).unwrap();
         for (got, t) in report.logits.iter().zip(&tensors) {
             assert_eq!(got, &ex.execute(t), "pipeline vs executor (hw={})", net.meta.image_size);
         }

@@ -68,7 +68,7 @@ fn pjrt_matches_rust_executor_and_simulator() {
     let ex = Executor::new(&net, Datapath::Arithmetic);
     let mut pipe = Pipeline::build(&net, &FoldConfig::fully_parallel(net.convs().count()), 16);
     let n = 6;
-    let sim = pipe.run(&images[..n]);
+    let sim = pipe.run(&images[..n]).unwrap();
     for i in 0..n {
         let golden = rt.run(&images[i]).unwrap();
         let t = Tensor::from_hwc(16, 16, 3, images[i].clone());
