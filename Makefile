@@ -4,7 +4,7 @@
 
 PYTHON ?= python3
 
-.PHONY: artifacts artifacts-fig2 test-python test-rust bench-smoke multi-smoke lint
+.PHONY: artifacts artifacts-fig2 test-python test-rust bench-smoke multi-smoke engine-smoke doc lint
 
 artifacts:
 	mkdir -p artifacts
@@ -35,6 +35,19 @@ bench-smoke:
 multi-smoke:
 	cd rust && cargo run --release -- multi --devices 2 --run --n 8
 	cd rust && cargo run --release -- multi --devices 3 --run --n 8
+
+# Engine backend-comparison smoke (DESIGN.md S19, EXPERIMENTS.md E12):
+# run every available InferenceBackend (executor, pipeline, 2-/3-way
+# sharded chains, PJRT when loadable, LUT-fabric datapath) on the same
+# inputs via `lutmul bench --backends all`. Prints a bit-exactness +
+# throughput table and exits nonzero on any divergence, so CI gates on
+# it. Synthetic fallback: runs on a fresh checkout without artifacts.
+engine-smoke:
+	cd rust && cargo run --release -- bench --backends all --n 6
+
+# API docs with rustdoc warnings (dangling doc links) denied.
+doc:
+	cd rust && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 lint:
 	cd rust && cargo fmt --check && cargo clippy -- -D warnings

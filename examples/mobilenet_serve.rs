@@ -1,17 +1,19 @@
 //! End-to-end driver (EXPERIMENTS.md E8): load the trained, streamlined
-//! MobileNetV2 artifacts, prove the whole stack composes, and serve
-//! batched inference requests.
+//! MobileNetV2 artifacts through the engine (DESIGN.md S19), prove the
+//! whole stack composes behind the uniform `InferenceBackend` contract,
+//! and serve batched inference requests.
 //!
 //!  stage 1  golden check — the PJRT runtime executes the AOT HLO (with
 //!           the Pallas LUTMUL kernels inside) and must agree bit-exactly
 //!           with the Rust reference executor and the dataflow simulator
 //!           (skipped, with the executor/simulator cross-check kept, when
-//!           built without the `xla` feature);
+//!           built without the `xla` feature); all three are
+//!           `InferenceBackend`s over the engine's one compiled plan;
 //!  stage 2  accelerator timing — run the full test set through the
 //!           cycle-level dataflow pipeline, report simulated FPS/GOPS at
 //!           333 MHz and classification accuracy;
 //!  stage 3  batch-major throughput — images/s vs batch size through
-//!           `Executor::run_batch`, the serving fast path (E9);
+//!           the engine's executor backend, the serving fast path (E9);
 //!  stage 4  serving — push a batched request load through the async
 //!           coordinator (router -> batcher -> worker pool) and report
 //!           latency percentiles, batch statistics and throughput.
@@ -19,22 +21,24 @@
 //! Needs `make artifacts`. Run:
 //!   cargo run --release --example mobilenet_serve [-- <requests>]
 
-use std::sync::Arc;
-
-use lutmul::coordinator::{argmax, Backend, Coordinator, ServeConfig};
-use lutmul::dataflow::{FoldConfig, Pipeline};
-use lutmul::graph::executor::{Datapath, Executor, Tensor};
-use lutmul::graph::network::Network;
-use lutmul::runtime::{Artifacts, Runtime};
+use lutmul::coordinator::{argmax, Coordinator, ServeConfig};
+use lutmul::engine::{Arch, BackendKind, Engine};
+use lutmul::runtime::Artifacts;
 
 fn main() -> anyhow::Result<()> {
     let requests: usize =
         std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(2048);
     let artifacts = Artifacts::new("artifacts");
-    let net = Network::load(artifacts.network_json())?;
-    let (images, labels) =
-        artifacts.load_test_set(net.meta.image_size, net.meta.image_size, net.meta.in_ch)?;
-    let size = net.meta.image_size;
+    // one construction path for the whole stack: trained network, plan
+    // compile, executor backend (no synthetic fallback — this driver is
+    // about the trained artifacts)
+    let mut engine = Engine::builder()
+        .arch(Arch::Small)
+        .artifacts(&artifacts)
+        .backend(BackendKind::Reference)
+        .build()?;
+    let (images, labels) = engine.labeled_test_set()?;
+    let net = engine.net().clone();
     println!(
         "network: {} ops, W{}A{}, deployed acc (export) {:.2}% | {} test images",
         net.ops.len(),
@@ -46,45 +50,39 @@ fn main() -> anyhow::Result<()> {
 
     // ---- stage 1: three-way golden check ------------------------------
     println!("\n[1/4] golden check (PJRT HLO vs executor vs dataflow sim)");
-    let ex = Executor::new(&net, Datapath::Arithmetic);
-    let mut pipe = Pipeline::build(&net, &FoldConfig::fully_parallel(net.convs().count()), 16);
     let n_check = 8;
-    let sim = pipe.run(&images[..n_check])?;
-    let tensors: Vec<Tensor> = images[..n_check]
-        .iter()
-        .map(|img| Tensor::from_hwc(size, size, net.meta.in_ch, img.clone()))
-        .collect();
-    let exec_logits = ex.run_batch(&tensors);
+    let exec_logits = engine.infer_batch(&images[..n_check])?.logits;
+    let mut pipe = engine.make_backend(BackendKind::Pipeline)?;
+    let sim = pipe.infer_batch(&images[..n_check])?;
     for i in 0..n_check {
         anyhow::ensure!(exec_logits[i] == sim.logits[i], "simulator diverged on image {i}");
     }
-    match Runtime::load(artifacts.model_hlo(1), 1, size, size, net.meta.in_ch, net.meta.num_classes)
-    {
-        Ok(rt) => {
+    match engine.make_backend(BackendKind::Pjrt { batch: 1 }) {
+        Ok(mut rt) => {
             for i in 0..n_check {
-                let golden = rt.run(&images[i])?;
-                anyhow::ensure!(golden[0] == exec_logits[i], "executor diverged on image {i}");
+                let golden = rt.infer_batch(std::slice::from_ref(&images[i]))?;
+                anyhow::ensure!(
+                    golden.logits[0] == exec_logits[i],
+                    "executor diverged on image {i}"
+                );
             }
             println!("      {n_check}/{n_check} images bit-exact across all three backends");
         }
+        // with real PJRT bindings a load failure is a broken artifact —
+        // fail loudly rather than report a hollow pass
+        Err(e) if cfg!(feature = "xla") => return Err(e),
         // without the `xla` feature the runtime is a stub: skip the HLO
         // leg but keep the executor/simulator cross-check
-        #[cfg(not(feature = "xla"))]
         Err(e) => {
             println!("      PJRT skipped ({e});");
             println!("      executor vs simulator: {n_check}/{n_check} bit-exact");
         }
-        // with real PJRT bindings a load failure is a broken artifact —
-        // fail loudly rather than report a hollow pass
-        #[cfg(feature = "xla")]
-        Err(e) => return Err(e),
     }
 
     // ---- stage 2: accelerator timing on the full test set -------------
     println!("\n[2/4] dataflow accelerator simulation (full test set)");
-    let mut pipe = Pipeline::build(&net, &FoldConfig::fully_parallel(net.convs().count()), 16);
     let t0 = std::time::Instant::now();
-    let rep = pipe.run(&images)?;
+    let rep = pipe.infer_batch(&images)?;
     let host = t0.elapsed();
     let correct = rep
         .logits
@@ -93,14 +91,15 @@ fn main() -> anyhow::Result<()> {
         .filter(|(l, &y)| argmax(l) == y as usize)
         .count();
     let ops = net.ops_per_image(); // GOPS denominator from the served net
-    let fps = rep.steady_state_fps(333.0);
+    let steady = pipe
+        .steady_cycles()
+        .unwrap_or(rep.cycles / images.len().max(1) as u64);
+    let fps = 333.0e6 / steady.max(1) as f64;
     println!(
-        "      {} images | accuracy {:.2}% | {} total cycles | steady-state {} cycles/img | marginal batched image {} cycles",
+        "      {} images | accuracy {:.2}% | {} total cycles | steady-state {steady} cycles/img",
         images.len(),
         100.0 * correct as f64 / images.len() as f64,
         rep.cycles,
-        rep.steady_state_cycles_per_image,
-        rep.incremental_cycles_per_image()
     );
     println!(
         "      accelerator @333MHz: {:.0} FPS, {:.1} GOPS | host sim wall time {:.2?} ({:.0} img/s)",
@@ -109,24 +108,17 @@ fn main() -> anyhow::Result<()> {
         host,
         images.len() as f64 / host.as_secs_f64()
     );
-    let busiest = rep.stages.iter().max_by_key(|s| s.fires).unwrap();
-    println!("      busiest stage: {} ({} fires)", busiest.name, busiest.fires);
 
     // ---- stage 3: batch-major executor throughput ---------------------
-    println!("\n[3/4] batch-major throughput (Executor::run_batch, Reference)");
-    let bench_imgs: Vec<Tensor> = images
-        .iter()
-        .cycle()
-        .take(32)
-        .map(|img| Tensor::from_hwc(size, size, net.meta.in_ch, img.clone()))
-        .collect();
+    println!("\n[3/4] batch-major throughput (engine executor backend)");
+    let bench_imgs: Vec<Vec<i32>> = images.iter().cycle().take(32).cloned().collect();
     let mut base_ips = 0.0;
     for b in [1usize, 4, 8, 16, 32] {
         let batch = &bench_imgs[..b];
         let iters = (64 / b).max(4);
         let t0 = std::time::Instant::now();
         for _ in 0..iters {
-            std::hint::black_box(ex.run_batch(batch));
+            std::hint::black_box(engine.infer_batch(batch)?.logits.len());
         }
         let ips = (b * iters) as f64 / t0.elapsed().as_secs_f64();
         if b == 1 {
@@ -138,14 +130,9 @@ fn main() -> anyhow::Result<()> {
     // ---- stage 4: batched serving ------------------------------------
     println!("\n[4/4] serving {requests} requests (router -> batcher -> 2 workers)");
     let coord = Coordinator::start(
-        Arc::new(net),
-        ServeConfig {
-            backend: Backend::Reference,
-            workers: 2,
-            max_batch: 16,
-            ..Default::default()
-        },
-    );
+        &engine,
+        ServeConfig { workers: 2, max_batch: 16, ..Default::default() },
+    )?;
     let t0 = std::time::Instant::now();
     let mut pending = Vec::with_capacity(requests);
     let mut rejected = 0usize;
@@ -181,6 +168,6 @@ fn main() -> anyhow::Result<()> {
     );
     println!("      {m}");
     coord.shutdown();
-    println!("\nOK — all layers compose (L1 Pallas kernels inside the AOT HLO, L2 model, L3 runtime).");
+    println!("\nOK — all layers compose (L1 Pallas kernels inside the AOT HLO, L2 model, L3 engine + serving).");
     Ok(())
 }

@@ -1,37 +1,46 @@
 //! Bench — host-side performance of the L3 hot paths: the dataflow
 //! pipeline simulator, the reference executor (serving fast path), the
-//! LUT-fabric datapath, and the serving coordinator. This is the §Perf
-//! harness of EXPERIMENTS.md: the simulator must regenerate Table 2-class
-//! experiments in seconds and the coordinator must not be the bottleneck.
+//! LUT-fabric datapath, the sharded chain and the serving coordinator.
+//! All surfaces are driven through the engine's uniform
+//! `InferenceBackend` contract (DESIGN.md S19). This is the §Perf
+//! harness of EXPERIMENTS.md: the simulator must regenerate Table
+//! 2-class experiments in seconds and the coordinator must not be the
+//! bottleneck.
 //!
 //! Needs `make artifacts`. Run: `cargo bench --bench bench_dataflow`
 
-use std::sync::Arc;
-
-use lutmul::coordinator::{Backend, Coordinator, ServeConfig};
-use lutmul::dataflow::{FoldConfig, Pipeline};
-use lutmul::graph::executor::{Datapath, Executor, Tensor};
-use lutmul::graph::network::Network;
-use lutmul::runtime::{Artifacts, Runtime};
+use lutmul::coordinator::{Coordinator, ServeConfig};
+use lutmul::engine::{Arch, BackendKind, Engine, Folding};
+use lutmul::graph::plan::Datapath;
+use lutmul::runtime::Artifacts;
 use lutmul::util::bench::{bench, per_second};
 
 fn main() {
     let a = Artifacts::new("artifacts");
-    let Ok(net) = Network::load(a.network_json()) else {
-        eprintln!("artifacts missing — run `make artifacts` first");
-        return;
+    // no synthetic fallback: this bench tracks the trained artifacts
+    let mut engine = match Engine::builder()
+        .arch(Arch::Small)
+        .artifacts(&a)
+        .backend(BackendKind::Reference)
+        .build()
+    {
+        Ok(e) => e,
+        Err(_) => {
+            eprintln!("artifacts missing — run `make artifacts` first");
+            return;
+        }
     };
-    let (images, _) =
-        a.load_test_set(net.meta.image_size, net.meta.image_size, net.meta.in_ch).unwrap();
+    let (images, _) = engine.labeled_test_set().unwrap();
     let n = 64usize;
+    let imgs = images[..n].to_vec();
     let macs_per_img: u64 = lutmul::graph::mobilenet_v2_small().ops_per_image() / 2;
 
     // --- reference executor (serving fast path) ---
-    let ex = Executor::new(&net, Datapath::Arithmetic);
-    let tensors: Vec<Tensor> =
-        images[..n].iter().map(|i| Tensor::from_hwc(16, 16, 3, i.clone())).collect();
-    let r = bench("executor: 64 images (arithmetic)", 20, || {
-        tensors.iter().map(|t| ex.execute(t)[0]).sum::<f32>()
+    // NB: batch-major across all cores (the serving path), NOT the
+    // pre-S19 single-threaded per-image `execute` row — img/s here is
+    // not comparable with §Perf entries recorded before PR 4
+    let r = bench("executor: 64-image batch (arithmetic, all cores)", 20, || {
+        engine.infer_batch(&imgs).unwrap().logits.len()
     });
     println!(
         "    -> {:.0} img/s | {:.1} M MAC/s host",
@@ -39,24 +48,31 @@ fn main() {
         per_second(n, &r) * macs_per_img as f64 / 1e6
     );
 
-    // --- LUT-fabric datapath (hardware-true, every mult via LUT readout) ---
-    let exf = Executor::new(&net, Datapath::LutFabric);
-    let r = bench("executor: 8 images (LUT6 fabric datapath)", 5, || {
-        tensors[..8].iter().map(|t| exf.execute(t)[0]).sum::<f32>()
+    // --- LUT-fabric datapath (hardware-true, memoized product tables) ---
+    let mut lut_engine = Engine::builder()
+        .arch(Arch::Small)
+        .artifacts(&a)
+        .datapath(Datapath::LutFabric)
+        .backend(BackendKind::Reference)
+        .build()
+        .unwrap();
+    let r = bench("executor: 8-image batch (LUT6 fabric, all cores)", 5, || {
+        lut_engine.infer_batch(&imgs[..8]).unwrap().logits.len()
     });
     println!("    -> {:.0} img/s", per_second(8, &r));
 
     // --- dataflow pipeline simulator ---
     for fold in [1usize, 4] {
-        let folds = if fold == 1 {
-            FoldConfig::fully_parallel(net.convs().count())
-        } else {
-            FoldConfig::uniform(net.convs().count(), fold)
-        };
-        let mut pipe = Pipeline::build(&net, &folds, 16);
-        let imgs = images[..n].to_vec();
+        let folding = if fold == 1 { Folding::FullyParallel } else { Folding::Uniform(fold) };
+        let mut pipe_engine = Engine::builder()
+            .arch(Arch::Small)
+            .artifacts(&a)
+            .folding(folding)
+            .backend(BackendKind::Pipeline)
+            .build()
+            .unwrap();
         let r = bench(&format!("pipeline sim: 64 images (fold={fold})"), 10, || {
-            pipe.run(&imgs).unwrap().cycles
+            pipe_engine.infer_batch(&imgs).unwrap().cycles
         });
         println!(
             "    -> {:.0} img/s | {:.2} M simulated MAC-lookups/s",
@@ -68,42 +84,30 @@ fn main() {
     // --- sharded chain (DESIGN.md S18): 2 and 3 simulated devices over
     // 100 GbE; host throughput of the whole-chain co-simulation ---
     for devices in [2usize, 3] {
-        use lutmul::dataflow::multi::LinkModel;
-        use lutmul::dataflow::ShardChain;
-        use lutmul::graph::plan::NetworkPlan;
-        let plan = NetworkPlan::compile(&net, Datapath::Arithmetic);
-        let shards = plan.shard_evenly(devices);
-        let folds = FoldConfig::fully_parallel(plan.n_convs());
-        let mut chain = ShardChain::new(
-            &shards,
-            &folds,
-            16,
-            &LinkModel::gbe100(),
-            333.0,
-            net.meta.a_bits.max(1),
-        )
-        .expect("balanced shards chain");
-        let imgs = images[..n].to_vec();
+        let mut chain = engine
+            .make_backend(BackendKind::Sharded { devices })
+            .expect("balanced shards chain");
         let r = bench(&format!("shard chain sim: 64 images ({devices} devices)"), 10, || {
-            chain.run(&imgs).unwrap().cycles
+            chain.infer_batch(&imgs).unwrap().cycles
         });
         println!("    -> {:.0} img/s host", per_second(n, &r));
     }
 
     // --- PJRT golden runtime ---
-    if let Ok(rt) = Runtime::load(a.model_hlo(8), 8, 16, 16, 3, net.meta.num_classes) {
+    if let Ok(mut rt) = engine.make_backend(BackendKind::Pjrt { batch: 8 }) {
         let batch: Vec<Vec<i32>> = images[..8].to_vec();
         let r = bench("PJRT runtime: batch of 8 (AOT HLO w/ Pallas)", 20, || {
-            rt.run_images(&batch).unwrap().len()
+            rt.infer_batch(&batch).unwrap().logits.len()
         });
         println!("    -> {:.0} img/s", per_second(8, &r));
     }
 
     // --- serving coordinator end to end ---
     let coord = Coordinator::start(
-        Arc::new(net),
-        ServeConfig { backend: Backend::Reference, workers: 2, max_batch: 16, ..Default::default() },
-    );
+        &engine,
+        ServeConfig { workers: 2, max_batch: 16, ..Default::default() },
+    )
+    .unwrap();
     let r = bench("coordinator: 256 requests end-to-end", 5, || {
         let tickets: Vec<_> = (0..256)
             .map(|i| coord.submit(images[i % images.len()].clone()).unwrap())

@@ -2,7 +2,9 @@
 //! dispatch statistics (batch-size histogram + batch service-time
 //! percentiles) for the batch-major execution path (EXPERIMENTS.md E9),
 //! and per-shard occupancy/stall counters for the sharded backend
-//! (DESIGN.md S18).
+//! (DESIGN.md S18). Workers feed the shard counters from
+//! `BatchOutput::counters` — whatever `InferenceBackend` reports them
+//! (DESIGN.md S19).
 
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};

@@ -1,8 +1,14 @@
 //! L3 serving coordinator (DESIGN.md S10): request router, dynamic
 //! batcher, worker pool, and metrics. Python is never on this path.
+//!
+//! Workers drive boxed [`InferenceBackend`]s built by the engine
+//! (DESIGN.md S19) — the coordinator has no backend-specific code of
+//! its own.
+//!
+//! [`InferenceBackend`]: crate::engine::InferenceBackend
 
 pub mod metrics;
 pub mod server;
 
 pub use metrics::{Metrics, MetricsSummary, ShardOccupancy};
-pub use server::{argmax, run_batch, Backend, Coordinator, InferenceResult, ServeConfig};
+pub use server::{argmax, Coordinator, InferenceResult, ServeConfig, Ticket};

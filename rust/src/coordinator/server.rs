@@ -1,32 +1,32 @@
 //! Serving coordinator (DESIGN.md S10): request router + dynamic batcher
-//! + worker pool over the accelerator backends.
+//! + worker pool over the engine's inference backends.
 //!
 //! The request path is pure Rust (Python never runs here): images arrive
 //! as uint8 code vectors, the batcher groups them (size- or timeout-
-//! triggered, vLLM-router style), and a pool of OS-thread workers executes
-//! batches on one of three backends:
+//! triggered, vLLM-router style), and a pool of OS-thread workers
+//! executes batches. Each worker owns a persistent boxed
+//! [`InferenceBackend`](crate::engine::InferenceBackend) built by the
+//! engine's [`BackendFactory`](crate::engine::BackendFactory) — the
+//! coordinator never matches on backend kinds; the reference executor,
+//! the batch-pipelined dataflow simulator, the LUT-fabric datapath and
+//! the multi-device shard chain (DESIGN.md S18) are all the same trait
+//! object here, and any future backend serves without touching this
+//! file.
 //!
-//!  * `Simulator` — the dataflow pipeline simulator (the paper's
-//!    accelerator, cycle-modelled); a dispatched batch streams through the
-//!    pipeline back to back, successive images overlapping in flight
-//!    rather than draining between images;
-//!  * `Reference` — the spec-level integer executor (fast path);
-//!  * `LutFabric` — the executor with every 4-bit multiplication
-//!    performed by simulated LUT6_2 readout (hardware-true datapath);
-//!  * `Sharded` — the network sliced across N simulated devices
-//!    (DESIGN.md S18): each worker owns a [`ShardChain`] of shard
-//!    pipelines joined by bandwidth/latency-charged links and streams
-//!    whole batches through it, reporting per-shard occupancy/stall
-//!    counters into the metrics.
+//! Batches are executed *batch-major* end to end: each worker keeps its
+//! backend across batches (compiled layer plans, memoized LUT product
+//! tables, pipeline line buffers are built once at startup) and hands
+//! whole batches to `infer_batch`, so a dispatch of N images amortizes
+//! per-layer state and parallelizes across cores instead of unrolling
+//! image by image (EXPERIMENTS.md E9). Sharded backends report their
+//! cumulative per-shard occupancy counters through
+//! [`BatchOutput::counters`](crate::engine::BatchOutput) into the
+//! metrics.
 //!
-//! Batches are executed *batch-major* end to end: each worker keeps a
-//! persistent backend (executor or pipeline, built once at spawn) and
-//! hands whole batches to [`Executor::run_batch`] / [`Pipeline::run`], so
-//! a dispatch of N images amortizes per-layer state and parallelizes
-//! across cores instead of unrolling image by image (EXPERIMENTS.md E9).
-//!
-//! All backends are bit-exact w.r.t. the JAX golden model; the PJRT
-//! runtime (`runtime::Runtime`) provides the golden check at startup.
+//! All backends are bit-exact w.r.t. the JAX golden model
+//! (`rust/tests/engine.rs` is the cross-backend conformance suite; the
+//! PJRT runtime provides the golden check at startup via
+//! `lutmul verify`).
 //!
 //! (The offline vendored crate set has no tokio, so concurrency is
 //! std::thread + channels; the API is synchronous with a non-blocking
@@ -37,31 +37,14 @@ use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryS
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::dataflow::multi::LinkModel;
-use crate::dataflow::{FoldConfig, Pipeline, ShardChain};
-use crate::fabric::device::U280;
-use crate::graph::executor::{Datapath, Executor, Tensor};
-use crate::graph::network::Network;
-use crate::graph::plan::NetworkPlan;
+use crate::engine::Engine;
 
 use super::metrics::{Metrics, MetricsSummary, ShardOccupancy};
 
-/// Inference backend selection.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Backend {
-    Simulator,
-    Reference,
-    LutFabric,
-    /// The network sliced across `devices` simulated FPGAs joined by
-    /// 100 GbE links; batches stream through a [`ShardChain`]
-    /// (DESIGN.md S18).
-    Sharded { devices: usize },
-}
-
-/// Coordinator configuration.
+/// Coordinator configuration. The backend itself is the engine's
+/// (`EngineBuilder::backend`); the coordinator only sizes the pool.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
-    pub backend: Backend,
     pub workers: usize,
     pub max_batch: usize,
     /// Batching window: dispatch a partial batch after this long.
@@ -72,7 +55,6 @@ pub struct ServeConfig {
 impl Default for ServeConfig {
     fn default() -> Self {
         Self {
-            backend: Backend::Reference,
             workers: 2,
             max_batch: 8,
             max_wait: Duration::from_micros(200),
@@ -113,16 +95,25 @@ pub struct Coordinator {
     tx: SyncSender<Request>,
     metrics: Arc<Mutex<Metrics>>,
     rejected: Arc<AtomicU64>,
+    /// Expected codes per image (`H*W*C` from the engine's plan): a
+    /// malformed request is bounced at `submit` instead of failing a
+    /// whole dispatched batch (and forcing a backend rebuild) deep
+    /// inside a worker.
+    image_px: usize,
     /// joined on drop
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Coordinator {
-    /// Start the router, batcher and worker pool.
-    pub fn start(net: Arc<Network>, cfg: ServeConfig) -> Self {
+    /// Start the router, batcher and worker pool over `engine`'s backend
+    /// kind. Every worker gets an independent backend from the engine's
+    /// factory (built eagerly, so a misconfigured backend — e.g. PJRT
+    /// without the `xla` feature — fails here rather than inside a
+    /// worker thread).
+    pub fn start(engine: &Engine, cfg: ServeConfig) -> anyhow::Result<Self> {
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
         // GOPS denominator from the network actually being served
-        let metrics = Arc::new(Mutex::new(Metrics::new(net.ops_per_image())));
+        let metrics = Arc::new(Mutex::new(Metrics::new(engine.net().ops_per_image())));
         let rejected = Arc::new(AtomicU64::new(0));
         let mut threads = Vec::new();
 
@@ -130,30 +121,30 @@ impl Coordinator {
         // would serialize the pool — the lock is held across the blocking
         // recv); the batcher round-robins across the queues.
         let n_workers = cfg.workers.max(1);
+        let factory = engine.backend_factory(n_workers);
         let mut worker_txs = Vec::with_capacity(n_workers);
         for wi in 0..n_workers {
             let (wtx, wrx) = sync_channel::<Vec<Request>>(2);
             worker_txs.push(wtx);
-            let net = net.clone();
             let metrics = metrics.clone();
-            let backend = cfg.backend;
+            let factory = factory.clone();
+            // per-worker persistent backend, built once: compiled layer
+            // plans (flattened weights, memoized LUT product tables) and
+            // pipeline/chain state are reused across every batch
+            let mut backend = factory()
+                .map_err(|e| e.context(format!("building the backend for lutmul-worker-{wi}")))?;
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("lutmul-worker-{wi}"))
                     .spawn(move || {
-                        // per-worker persistent backend state, built once:
-                        // the compiled layer plans (flattened weights,
-                        // memoized LUT product tables) and the pipeline
-                        // are reused across every batch
-                        let mut worker = WorkerBackend::new(&net, backend, n_workers);
                         // counters of backends this worker already retired
                         // (rebuilt after a failed batch): folded into every
                         // later snapshot so the worker's recorded shard
                         // metrics never roll backwards
                         let mut shard_base: Vec<ShardOccupancy> = Vec::new();
                         while let Ok(batch) = wrx.recv() {
-                            // move images out of the requests (no copies on
-                            // the hot path), keep the response halves
+                            // move images out of the requests, keep the
+                            // response halves
                             let mut images = Vec::with_capacity(batch.len());
                             let mut reqs = Vec::with_capacity(batch.len());
                             for r in batch {
@@ -161,21 +152,33 @@ impl Coordinator {
                                 reqs.push((r.enqueued, r.resp));
                             }
                             let t_exec = Instant::now();
-                            let results = match worker.run(images) {
-                                Ok(r) => r,
-                                Err(e) => {
-                                    // structured sim failure: fail the
-                                    // waiting requests (their response
-                                    // channels drop) and rebuild the
-                                    // backend — a failed pipeline/chain
-                                    // still holds the dead batch's
-                                    // partial-image tokens, so reusing
-                                    // it would corrupt later results.
-                                    // Bank the dying chain's counters
-                                    // first: the rebuilt chain restarts
-                                    // from zero.
-                                    eprintln!("lutmul-worker-{wi}: batch failed: {e}");
-                                    if let Some(snap) = worker.shard_occupancy() {
+                            let out = match backend.infer_batch(&images) {
+                                Ok(out) if out.logits.len() == reqs.len() => out,
+                                res => {
+                                    // a structured sim failure, or a backend
+                                    // that miscounted its results (as broken
+                                    // as one that errors): fail the waiting
+                                    // requests (their response channels
+                                    // drop) and rebuild the backend — a
+                                    // failed pipeline/chain still holds the
+                                    // dead batch's partial-image tokens, so
+                                    // reusing it would corrupt later
+                                    // results. Bank the dying backend's
+                                    // counters first: the rebuilt one
+                                    // restarts from zero.
+                                    match &res {
+                                        Ok(out) => eprintln!(
+                                            "lutmul-worker-{wi}: backend returned {} \
+                                             results for {} requests; discarding batch",
+                                            out.logits.len(),
+                                            reqs.len()
+                                        ),
+                                        Err(e) => eprintln!(
+                                            "lutmul-worker-{wi}: batch failed: {e}"
+                                        ),
+                                    }
+                                    let snap = backend.shard_occupancy();
+                                    if !snap.is_empty() {
                                         if shard_base.len() < snap.len() {
                                             shard_base
                                                 .resize(snap.len(), ShardOccupancy::default());
@@ -184,11 +187,21 @@ impl Coordinator {
                                             b.absorb(s);
                                         }
                                     }
-                                    worker = WorkerBackend::new(&net, backend, n_workers);
+                                    match factory() {
+                                        Ok(b) => backend = b,
+                                        Err(e) => {
+                                            eprintln!(
+                                                "lutmul-worker-{wi}: backend rebuild \
+                                                 failed, worker exiting: {e}"
+                                            );
+                                            return;
+                                        }
+                                    }
                                     continue;
                                 }
                             };
                             let service = t_exec.elapsed();
+                            let results = out.logits;
                             // one latency sample per request, shared by the
                             // metrics and the client-visible result
                             let latencies: Vec<Duration> =
@@ -204,9 +217,10 @@ impl Coordinator {
                                 for &l in &latencies {
                                     m.record(l);
                                 }
-                                if let Some(mut snap) = worker.shard_occupancy() {
+                                if !out.counters.is_empty() {
                                     // fold in retired-backend counters so
                                     // snapshots stay monotonic per worker
+                                    let mut snap = out.counters;
                                     for (s, b) in snap.iter_mut().zip(&shard_base) {
                                         s.absorb(b);
                                     }
@@ -273,11 +287,21 @@ impl Coordinator {
                 .expect("spawn batcher"),
         );
 
-        Self { tx, metrics, rejected, threads }
+        let io = engine.io();
+        let image_px = io.image_size * io.image_size * io.in_ch;
+        Ok(Self { tx, metrics, rejected, image_px, threads })
     }
 
     /// Submit one image without blocking; returns a ticket to wait on.
+    /// Misshapen images are rejected here, before they can poison a
+    /// batch of well-formed co-submitted requests.
     pub fn submit(&self, image: Vec<i32>) -> anyhow::Result<Ticket> {
+        anyhow::ensure!(
+            image.len() == self.image_px,
+            "image has {} codes, the served network expects {}",
+            image.len(),
+            self.image_px
+        );
         let (resp_tx, resp_rx) = sync_channel(1);
         let req = Request { image, enqueued: Instant::now(), resp: resp_tx };
         match self.tx.try_send(req) {
@@ -314,105 +338,6 @@ impl Coordinator {
     }
 }
 
-/// Per-worker backend state, persistent across batches: the network is
-/// compiled once per worker into owned plans (flattened weights,
-/// memoized LUT product tables), not once per batch.
-enum WorkerBackend {
-    Pipeline(Box<Pipeline>),
-    /// Sharded chain of shard pipelines joined by cycle-charged links
-    /// (DESIGN.md S18), built once per worker like the pipeline.
-    Chain(Box<ShardChain>),
-    Exec { ex: Executor, size: usize, ch: usize, threads: usize },
-}
-
-impl WorkerBackend {
-    /// `pool_size` is the number of concurrent workers sharing the
-    /// machine: each backend gets an equal share of the cores so the pool
-    /// never oversubscribes the CPU.
-    fn new(net: &Network, backend: Backend, pool_size: usize) -> Self {
-        let cores =
-            std::thread::available_parallelism().map(std::num::NonZeroUsize::get).unwrap_or(1);
-        let threads = (cores / pool_size.max(1)).max(1);
-        match backend {
-            Backend::Simulator => {
-                // compile once; the pipeline consumes the plan's geometry
-                let plan = NetworkPlan::compile(net, Datapath::Arithmetic);
-                let folds = FoldConfig::fully_parallel(plan.n_convs());
-                WorkerBackend::Pipeline(Box::new(Pipeline::from_plan(&plan, &folds, 16)))
-            }
-            Backend::Sharded { devices } => {
-                // slice the compiled plan into MAC-balanced shards and
-                // join them with the default 100 GbE link model at the
-                // device clock the analytic multi-FPGA plan uses
-                let plan = NetworkPlan::compile(net, Datapath::Arithmetic);
-                let shards = plan.shard_evenly(devices.max(1));
-                let folds = FoldConfig::fully_parallel(plan.n_convs());
-                let chain = ShardChain::new(
-                    &shards,
-                    &folds,
-                    16,
-                    &LinkModel::gbe100(),
-                    U280.max_freq_mhz,
-                    net.meta.a_bits.max(1),
-                )
-                .expect("shard_evenly yields a contiguous dense-tailed chain");
-                WorkerBackend::Chain(Box::new(chain))
-            }
-            Backend::Reference => Self::exec(net, Datapath::Arithmetic, threads),
-            Backend::LutFabric => Self::exec(net, Datapath::LutFabric, threads),
-        }
-    }
-
-    /// Executor-backed worker; image geometry comes from the compiled
-    /// plan rather than `Network::meta` (DESIGN.md S17).
-    fn exec(net: &Network, datapath: Datapath, threads: usize) -> Self {
-        let ex = Executor::new(net, datapath);
-        let io = ex.plan().io;
-        WorkerBackend::Exec { ex, size: io.image_size, ch: io.in_ch, threads }
-    }
-
-    /// Execute one dispatched batch, batch-major. Takes the images by
-    /// value so the executor path can move them into tensors copy-free.
-    /// Simulator/sharded backends surface structured `dataflow::SimError`
-    /// failures instead of panicking the worker.
-    fn run(&mut self, images: Vec<Vec<i32>>) -> anyhow::Result<Vec<Vec<f32>>> {
-        match self {
-            // the pipeline streams the whole batch back to back: image i+1
-            // enters the first stage while image i is still in flight
-            WorkerBackend::Pipeline(pipe) => Ok(pipe.run(&images)?.logits),
-            // the chain streams the batch across every simulated device
-            WorkerBackend::Chain(chain) => Ok(chain.run(&images)?.logits),
-            WorkerBackend::Exec { ex, size, ch, threads } => {
-                let tensors: Vec<Tensor> = images
-                    .into_iter()
-                    .map(|img| Tensor::from_hwc(*size, *size, *ch, img))
-                    .collect();
-                Ok(ex.run_batch_with_threads(&tensors, *threads))
-            }
-        }
-    }
-
-    /// Cumulative per-shard occupancy/stall counters (sharded backend
-    /// only), polled after each batch for the metrics —
-    /// `ShardChain::occupancy` sums counters in place, so the hot loop
-    /// never materializes the per-stage stat vectors. `ShardOccupancy`
-    /// IS the chain's own `ShardCounters`, re-exported.
-    fn shard_occupancy(&self) -> Option<Vec<ShardOccupancy>> {
-        let WorkerBackend::Chain(chain) = self else { return None };
-        Some(chain.occupancy())
-    }
-}
-
-/// Execute a batch on a chosen backend (one-shot convenience; builds the
-/// backend, runs the batch batch-major with all cores, and tears it down).
-pub fn run_batch(
-    net: &Network,
-    backend: Backend,
-    images: &[Vec<i32>],
-) -> anyhow::Result<Vec<Vec<f32>>> {
-    WorkerBackend::new(net, backend, 1).run(images.to_vec())
-}
-
 /// Index of the max logit.
 pub fn argmax(v: &[f32]) -> usize {
     v.iter()
@@ -439,6 +364,6 @@ mod tests {
         assert!(c.workers >= 1 && c.max_batch >= 1);
     }
 
-    // Coordinator round-trips are in rust/tests/integration.rs (they need
-    // a full network).
+    // Coordinator round-trips are in rust/tests/{engine,batch,multi}.rs
+    // (they need a full network + engine).
 }

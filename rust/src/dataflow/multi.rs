@@ -15,7 +15,11 @@
 //! [`NetworkPlan`], snapping each cut to the nearest residual-balanced
 //! op boundary, and the resulting shards drive a
 //! [`ShardChain`](super::pipeline::ShardChain) whose simulated FPS can
-//! be checked against [`MultiFpgaPlan::fps`].
+//! be checked against [`MultiFpgaPlan::fps`]. Serving and the CLI reach
+//! the chain through the engine's `BackendKind::Sharded`
+//! (DESIGN.md S19), which cuts with `NetworkPlan::shard_evenly`; this
+//! module's partition stays the analytic overlay `lutmul multi --run`
+//! cross-checks against.
 
 use crate::fabric::device::FpgaDevice;
 use crate::graph::arch::{ArchSpec, LayerSpec};

@@ -12,6 +12,10 @@
 //! (bit-exact vs the JAX golden model) and the *timing* behaviour
 //! (throughput = clock / cycles-per-image of the slowest stage, FIFO
 //! high-water marks, backpressure).
+//!
+//! The pipeline and the shard chain serve behind the engine's uniform
+//! backend contract (`engine::{PipelineBackend, ShardChainBackend}`,
+//! DESIGN.md S19).
 
 use std::collections::VecDeque;
 

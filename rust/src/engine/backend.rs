@@ -1,0 +1,231 @@
+//! The uniform inference contract (DESIGN.md S19).
+//!
+//! Every run surface of the stack — the reference integer executor, the
+//! cycle-level dataflow pipeline, the multi-device shard chain, and the
+//! PJRT runtime — implements [`InferenceBackend`], so callers (the CLI,
+//! the serving coordinator's workers, benches, tests) drive batches
+//! through one boxed trait object instead of matching on
+//! backend-specific types. LUT-based inference stacks such as NeuraLUT
+//! and PolyLUT-Add treat the LUT datapath as one interchangeable
+//! backend behind a fixed contract; this module gives rust_pallas the
+//! same seam, so a new backend (or serving mode) is a single trait
+//! impl, not a change to every caller.
+//!
+//! All backends run over the same compiled [`NetworkPlan`] (DESIGN.md
+//! S17), so bit-exactness across them holds by construction — the
+//! `lutmul bench --backends all` subcommand and the conformance suite
+//! (`rust/tests/engine.rs`) assert it on every build.
+
+use anyhow::Result;
+
+use crate::dataflow::multi::LinkModel;
+use crate::dataflow::{FoldConfig, Pipeline, ShardChain, ShardCounters};
+use crate::graph::executor::{Executor, Tensor};
+use crate::graph::plan::{IoGeom, NetworkPlan};
+use crate::runtime::Runtime;
+
+/// Uniform result of one dispatched batch, whatever backend ran it.
+#[derive(Debug, Clone, Default)]
+pub struct BatchOutput {
+    /// Per-image logits, in submission order.
+    pub logits: Vec<Vec<f32>>,
+    /// Simulated device cycles this batch consumed (0 for backends
+    /// without a cycle model: the executor and the PJRT runtime).
+    pub cycles: u64,
+    /// Cumulative per-shard occupancy/stall counters (sharded backends
+    /// only — empty otherwise).
+    pub counters: Vec<ShardCounters>,
+}
+
+/// One inference backend behind the engine's uniform contract: a batch
+/// of flat `[H*W*C]` code images in, a [`BatchOutput`] out.
+///
+/// Implementations are `Send` (the serving coordinator moves each
+/// worker's backend into its thread) and stateful across batches —
+/// persistent backends amortize their compiled plans, line buffers and
+/// LUT product tables over every batch they serve.
+pub trait InferenceBackend: Send {
+    /// Stable short name for logs and comparison tables.
+    fn name(&self) -> &str;
+
+    /// Run one batch to per-image logits. A backend whose `infer_batch`
+    /// fails must be discarded and rebuilt (a failed pipeline/chain
+    /// still holds the dead batch's partial-image tokens).
+    fn infer_batch(&mut self, images: &[Vec<i32>]) -> Result<BatchOutput>;
+
+    /// Cumulative per-shard occupancy counters (sharded backends only —
+    /// empty otherwise). Readable even after a failed batch, so the
+    /// serving worker can bank a dying chain's counters before
+    /// rebuilding it.
+    fn shard_occupancy(&self) -> Vec<ShardCounters> {
+        Vec::new()
+    }
+
+    /// Analytic steady-state cycles per image, for cycle-modeled
+    /// backends (`None` for the executor and the PJRT runtime).
+    fn steady_cycles(&self) -> Option<u64> {
+        None
+    }
+}
+
+/// The reference integer executor behind the uniform contract
+/// (spec-level, batch-major across `threads` cores).
+pub struct ExecutorBackend {
+    ex: Executor,
+    io: IoGeom,
+    threads: usize,
+    name: &'static str,
+}
+
+impl ExecutorBackend {
+    /// Wrap a shared compiled plan (no clone — a pool of executor
+    /// backends reads one copy of the weights and LUT product tables).
+    /// `threads` caps the scoped-thread fan-out of
+    /// `Executor::run_batch_with_threads` (a worker pool divides the
+    /// machine's cores so concurrent backends don't oversubscribe).
+    pub fn new(plan: std::sync::Arc<NetworkPlan>, threads: usize) -> Self {
+        let io = plan.io;
+        // the datapath lives in the plan's multiplier arrays (S17)
+        let name = if plan.lut_count() > 0 { "executor/lut-fabric" } else { "executor" };
+        Self { ex: Executor::shared(plan), io, threads: threads.max(1), name }
+    }
+}
+
+impl InferenceBackend for ExecutorBackend {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    /// Lifting each borrowed image into an owned `Tensor` costs one copy
+    /// per image — the price of the uniform borrowed-batch contract
+    /// (cycle-modeled backends stream the same borrowed images with no
+    /// copy). The per-layer work of a batch dwarfs it; see the
+    /// EXPERIMENTS.md §Perf PR 4 row.
+    fn infer_batch(&mut self, images: &[Vec<i32>]) -> Result<BatchOutput> {
+        let (s, c) = (self.io.image_size, self.io.in_ch);
+        let px = s * s * c;
+        let mut tensors = Vec::with_capacity(images.len());
+        for img in images {
+            anyhow::ensure!(
+                img.len() == px,
+                "image has {} codes, the network expects {px} ({s}x{s}x{c})",
+                img.len()
+            );
+            tensors.push(Tensor::from_hwc(s, s, c, img.clone()));
+        }
+        Ok(BatchOutput {
+            logits: self.ex.run_batch_with_threads(&tensors, self.threads),
+            cycles: 0,
+            counters: Vec::new(),
+        })
+    }
+}
+
+/// The cycle-level dataflow pipeline simulator behind the uniform
+/// contract: batches stream through with successive images overlapped
+/// in flight, and `BatchOutput::cycles` carries the simulated drain
+/// time.
+pub struct PipelineBackend {
+    pipe: Pipeline,
+}
+
+impl PipelineBackend {
+    pub fn new(plan: &NetworkPlan, folds: &FoldConfig, fifo_depth: usize) -> Self {
+        Self { pipe: Pipeline::from_plan(plan, folds, fifo_depth) }
+    }
+}
+
+impl InferenceBackend for PipelineBackend {
+    fn name(&self) -> &str {
+        "pipeline"
+    }
+
+    fn infer_batch(&mut self, images: &[Vec<i32>]) -> Result<BatchOutput> {
+        let rep = self.pipe.run(images)?;
+        Ok(BatchOutput { logits: rep.logits, cycles: rep.cycles, counters: Vec::new() })
+    }
+
+    fn steady_cycles(&self) -> Option<u64> {
+        Some(self.pipe.steady_cycles())
+    }
+}
+
+/// The multi-device shard chain behind the uniform contract: the plan
+/// cut into MAC-balanced shards (DESIGN.md S18), co-simulated over
+/// bandwidth/latency-charged links. `BatchOutput::counters` carries the
+/// cumulative per-shard occupancy snapshot after each batch.
+pub struct ShardChainBackend {
+    chain: ShardChain,
+    name: String,
+}
+
+impl ShardChainBackend {
+    /// Shard `plan` evenly across `devices` simulated FPGAs and join
+    /// them with `link` at the device clock. `folds` covers the whole
+    /// plan's conv stages in network order. A zero device count is a
+    /// hard error, not a silent clamp (same contract as the CLI flags).
+    pub fn new(
+        plan: &NetworkPlan,
+        devices: usize,
+        folds: &FoldConfig,
+        fifo_depth: usize,
+        link: &LinkModel,
+        freq_mhz: f64,
+        a_bits: u32,
+    ) -> Result<Self> {
+        anyhow::ensure!(devices >= 1, "a sharded backend needs at least 1 device, got 0");
+        let shards = plan.shard_evenly(devices);
+        let chain = ShardChain::new(&shards, folds, fifo_depth, link, freq_mhz, a_bits)?;
+        let name = format!("sharded x{}", chain.n_shards());
+        Ok(Self { chain, name })
+    }
+}
+
+impl InferenceBackend for ShardChainBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn infer_batch(&mut self, images: &[Vec<i32>]) -> Result<BatchOutput> {
+        let rep = self.chain.run(images)?;
+        Ok(BatchOutput {
+            logits: rep.logits,
+            cycles: rep.cycles,
+            counters: self.chain.occupancy(),
+        })
+    }
+
+    fn shard_occupancy(&self) -> Vec<ShardCounters> {
+        self.chain.occupancy()
+    }
+
+    fn steady_cycles(&self) -> Option<u64> {
+        Some(self.chain.steady_cycles())
+    }
+}
+
+/// The PJRT runtime behind the uniform contract: executes the AOT HLO
+/// artifact (with the Pallas LUTMUL kernels inside) batch-major via
+/// `Runtime::run_batched`. Without the `xla` cargo feature the runtime
+/// is a stub whose `load` errors, so construction fails loudly and the
+/// engine's callers report the backend as unavailable instead of
+/// silently skipping it.
+pub struct PjrtBackend {
+    rt: Runtime,
+}
+
+impl PjrtBackend {
+    pub fn load(path: impl AsRef<std::path::Path>, batch: usize, io: &IoGeom) -> Result<Self> {
+        Ok(Self { rt: Runtime::load_for(path, batch.max(1), io)? })
+    }
+}
+
+impl InferenceBackend for PjrtBackend {
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+
+    fn infer_batch(&mut self, images: &[Vec<i32>]) -> Result<BatchOutput> {
+        Ok(BatchOutput { logits: self.rt.run_batched(images)?, cycles: 0, counters: Vec::new() })
+    }
+}

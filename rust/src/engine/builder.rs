@@ -1,0 +1,489 @@
+//! [`EngineBuilder`] — one fluent construction path for the whole
+//! inference stack (DESIGN.md S19).
+//!
+//! Every entry point used to hand-assemble its own stack: arch spec →
+//! fold/budget optimization → artifact-or-synthetic network → plan
+//! compile → one of four mutually incompatible run surfaces. The
+//! builder owns each of those steps exactly once:
+//!
+//! ```no_run
+//! use lutmul::engine::{Arch, BackendKind, Engine};
+//! use lutmul::runtime::Artifacts;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let a = Artifacts::new("artifacts");
+//! let mut engine = Engine::builder()
+//!     .arch(Arch::Small)
+//!     .artifacts(&a)          // trained network.json when present...
+//!     .or_synthetic(0x5EED)   // ...its synthetic twin otherwise
+//!     .backend(BackendKind::Sharded { devices: 2 })
+//!     .build()?;
+//! let images = engine.images(4)?;
+//! let out = engine.infer_batch(&images)?;
+//! # Ok(()) }
+//! ```
+//!
+//! The resulting [`Engine`] owns the network, the compiled
+//! [`NetworkPlan`] (shared by every backend it constructs), the fold
+//! configuration, and one ready [`InferenceBackend`]. Further backends
+//! over the same plan come from [`Engine::make_backend`] (comparison
+//! tables, golden cross-checks) and [`Engine::backend_factory`] (the
+//! serving coordinator's per-worker construction + rebuild-on-failure).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::dataflow::multi::LinkModel;
+use crate::dataflow::FoldConfig;
+use crate::fabric::device::U280;
+use crate::graph::arch::ArchSpec;
+use crate::graph::network::Network;
+use crate::graph::plan::{Datapath, IoGeom, NetworkPlan};
+use crate::graph::{mobilenet_v2_full, mobilenet_v2_small};
+use crate::runtime::Artifacts;
+use crate::synth::fold::{optimize_folding, Budget};
+
+use super::backend::{
+    BatchOutput, ExecutorBackend, InferenceBackend, PipelineBackend, PjrtBackend,
+    ShardChainBackend,
+};
+
+/// Architecture selection: which MobileNetV2 shape spec drives the fold
+/// optimizer and the synthetic-network fallback.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arch {
+    /// `mobilenet_v2_small` — the trained-artifact shape.
+    Small,
+    /// `mobilenet_v2_full` — the paper's ImageNet-scale shape.
+    Full,
+}
+
+impl Arch {
+    pub fn spec(self) -> ArchSpec {
+        match self {
+            Arch::Small => mobilenet_v2_small(),
+            Arch::Full => mobilenet_v2_full(),
+        }
+    }
+}
+
+/// Which [`InferenceBackend`] the engine constructs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Whole-network reference executor (the serving fast path).
+    Reference,
+    /// Cycle-level dataflow pipeline simulator.
+    Pipeline,
+    /// The network sliced across `devices` simulated FPGAs joined by
+    /// cycle-charged links (DESIGN.md S18).
+    Sharded { devices: usize },
+    /// PJRT runtime executing the AOT HLO artifact compiled for `batch`
+    /// (needs `artifacts(..)`; loads only with the `xla` feature).
+    Pjrt { batch: usize },
+}
+
+impl BackendKind {
+    /// Stable short label (comparison tables, skip messages).
+    pub fn label(&self) -> String {
+        match *self {
+            BackendKind::Reference => "executor".into(),
+            BackendKind::Pipeline => "pipeline".into(),
+            BackendKind::Sharded { devices } => format!("sharded x{devices}"),
+            BackendKind::Pjrt { batch } => format!("pjrt b{batch}"),
+        }
+    }
+}
+
+/// Per-layer fold (initiation interval) selection.
+#[derive(Debug, Clone)]
+pub enum Folding {
+    /// II = 1 on every conv stage (the serving default).
+    FullyParallel,
+    /// Uniform fold factor on every conv stage.
+    Uniform(usize),
+    /// `synth::fold::optimize_folding` against a device budget — errors
+    /// at `build()` when the optimizer's fold vector (sized by the
+    /// `Arch` spec) cannot cover the network's conv stages, i.e. the
+    /// network was built from a different model than the spec.
+    Optimized(Budget),
+    /// An explicit fold vector the caller already computed (e.g. the
+    /// arch-level vector an analytic multi-FPGA partition was cut with,
+    /// head entry included — `lutmul multi --run` optimizes once and
+    /// feeds both the partition and the engine). Validated and
+    /// truncated to the plan's conv count like `Optimized`.
+    Explicit(FoldConfig),
+}
+
+/// How the engine obtained its network.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetworkSource {
+    /// Loaded from `artifacts/network.json`.
+    Trained,
+    /// `Network::synthetic` twin of the arch spec (artifacts absent).
+    Synthetic { seed: u64 },
+    /// Injected directly via [`EngineBuilder::network`] (tests).
+    Injected,
+}
+
+impl NetworkSource {
+    pub fn label(&self) -> &'static str {
+        match self {
+            NetworkSource::Trained => "trained artifacts",
+            NetworkSource::Synthetic { .. } => "synthetic network",
+            NetworkSource::Injected => "injected network",
+        }
+    }
+}
+
+/// Thread-safe backend constructor: each call builds an independent
+/// [`InferenceBackend`] over the engine's shared compiled plan (the
+/// serving coordinator hands one to every worker, and workers rebuild
+/// through it after a failed batch).
+pub type BackendFactory = Arc<dyn Fn() -> Result<Box<dyn InferenceBackend>> + Send + Sync>;
+
+/// Everything needed to construct backends over one compiled plan —
+/// cloned into [`BackendFactory`] closures.
+#[derive(Clone)]
+struct BackendEnv {
+    plan: Arc<NetworkPlan>,
+    folds: FoldConfig,
+    fifo_depth: usize,
+    link: LinkModel,
+    freq_mhz: f64,
+    a_bits: u32,
+    artifacts_dir: Option<PathBuf>,
+}
+
+impl BackendEnv {
+    /// `pool_size` is the number of concurrent backends sharing the
+    /// machine: executor backends split the cores evenly so a worker
+    /// pool never oversubscribes the CPU.
+    fn build(&self, kind: &BackendKind, pool_size: usize) -> Result<Box<dyn InferenceBackend>> {
+        let backend: Box<dyn InferenceBackend> = match *kind {
+            BackendKind::Reference => {
+                let cores = std::thread::available_parallelism()
+                    .map(std::num::NonZeroUsize::get)
+                    .unwrap_or(1);
+                let threads = (cores / pool_size.max(1)).max(1);
+                Box::new(ExecutorBackend::new(self.plan.clone(), threads))
+            }
+            BackendKind::Pipeline => {
+                Box::new(PipelineBackend::new(&self.plan, &self.folds, self.fifo_depth))
+            }
+            BackendKind::Sharded { devices } => Box::new(ShardChainBackend::new(
+                &self.plan,
+                devices,
+                &self.folds,
+                self.fifo_depth,
+                &self.link,
+                self.freq_mhz,
+                self.a_bits,
+            )?),
+            BackendKind::Pjrt { batch } => {
+                let dir = self.artifacts_dir.as_ref().context(
+                    "the PJRT backend needs an artifact directory (EngineBuilder::artifacts)",
+                )?;
+                let batch = batch.max(1);
+                let a = Artifacts::new(dir.clone());
+                Box::new(PjrtBackend::load(a.model_hlo(batch), batch, &self.plan.io)?)
+            }
+        };
+        Ok(backend)
+    }
+}
+
+/// Fluent builder for an [`Engine`]; see the module docs for the shape.
+pub struct EngineBuilder {
+    arch: Arch,
+    artifacts_dir: Option<PathBuf>,
+    synthetic_seed: Option<u64>,
+    injected: Option<Network>,
+    datapath: Datapath,
+    kind: BackendKind,
+    folding: Folding,
+    fifo_depth: usize,
+    link: LinkModel,
+    freq_mhz: f64,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        Self {
+            arch: Arch::Small,
+            artifacts_dir: None,
+            synthetic_seed: None,
+            injected: None,
+            datapath: Datapath::Arithmetic,
+            kind: BackendKind::Reference,
+            folding: Folding::FullyParallel,
+            fifo_depth: 16,
+            link: LinkModel::gbe100(),
+            freq_mhz: U280.max_freq_mhz,
+        }
+    }
+}
+
+impl EngineBuilder {
+    /// Architecture spec for folding and the synthetic fallback.
+    pub fn arch(mut self, arch: Arch) -> Self {
+        self.arch = arch;
+        self
+    }
+
+    /// Load the trained network (and test set / HLO artifacts) from this
+    /// artifact directory.
+    pub fn artifacts(mut self, a: &Artifacts) -> Self {
+        self.artifacts_dir = Some(a.dir.clone());
+        self
+    }
+
+    /// Fall back to the arch spec's synthetic twin (seeded) when the
+    /// artifacts are absent or fail to load.
+    pub fn or_synthetic(mut self, seed: u64) -> Self {
+        self.synthetic_seed = Some(seed);
+        self
+    }
+
+    /// Inject a network directly, bypassing artifact loading (tests and
+    /// embedders that already hold a `Network`).
+    pub fn network(mut self, net: Network) -> Self {
+        self.injected = Some(net);
+        self
+    }
+
+    /// Multiply datapath the plan is compiled for (every backend the
+    /// engine constructs shares the one compiled plan).
+    pub fn datapath(mut self, datapath: Datapath) -> Self {
+        self.datapath = datapath;
+        self
+    }
+
+    /// Which backend [`build`](Self::build) constructs (and the factory
+    /// reproduces).
+    pub fn backend(mut self, kind: BackendKind) -> Self {
+        self.kind = kind;
+        self
+    }
+
+    /// Fold selection for cycle-modeled backends (default fully
+    /// parallel).
+    pub fn folding(mut self, folding: Folding) -> Self {
+        self.folding = folding;
+        self
+    }
+
+    /// Inter-stage FIFO depth for cycle-modeled backends (default 16).
+    pub fn fifo_depth(mut self, depth: usize) -> Self {
+        self.fifo_depth = depth.max(1);
+        self
+    }
+
+    /// Inter-device link model for sharded backends (default 100 GbE).
+    pub fn link(mut self, link: LinkModel) -> Self {
+        self.link = link;
+        self
+    }
+
+    /// Resolve the network source, compile the plan once, optimize
+    /// folding, and construct the selected backend.
+    ///
+    /// The engine's own backend is built eagerly so a misconfigured
+    /// selection fails here, at the construction site. An engine used
+    /// purely as a coordinator factory carries that one idle backend —
+    /// a deliberate trade for loud-at-build errors (the plan itself is
+    /// shared, not duplicated).
+    pub fn build(self) -> Result<Engine> {
+        let spec = self.arch.spec();
+        let (net, source) = if let Some(net) = self.injected {
+            (net, NetworkSource::Injected)
+        } else if let Some(dir) = &self.artifacts_dir {
+            let a = Artifacts::new(dir.clone());
+            match Network::load(a.network_json()) {
+                Ok(net) => (net, NetworkSource::Trained),
+                Err(e) => match self.synthetic_seed {
+                    Some(seed) => {
+                        (Network::synthetic(&spec, seed), NetworkSource::Synthetic { seed })
+                    }
+                    None => {
+                        return Err(e.context(format!(
+                            "no usable network: loading {} failed and no synthetic fallback \
+                             is configured (EngineBuilder::or_synthetic)",
+                            a.network_json().display()
+                        )))
+                    }
+                },
+            }
+        } else if let Some(seed) = self.synthetic_seed {
+            (Network::synthetic(&spec, seed), NetworkSource::Synthetic { seed })
+        } else {
+            anyhow::bail!(
+                "EngineBuilder needs a network source: artifacts(..), or_synthetic(..) \
+                 or network(..)"
+            )
+        };
+
+        let plan = Arc::new(NetworkPlan::compile(&net, self.datapath));
+        let folds = match self.folding {
+            Folding::FullyParallel => FoldConfig::fully_parallel(plan.n_convs()),
+            Folding::Uniform(fold) => FoldConfig::uniform(plan.n_convs(), fold),
+            Folding::Optimized(budget) => {
+                // the optimizer folds the arch spec's layers (head
+                // included); the compiled plan's conv stages consume the
+                // leading entries
+                let (folds, _) = optimize_folding(&spec, &budget);
+                anyhow::ensure!(
+                    folds.len() >= plan.n_convs(),
+                    "the {} architecture optimizes {} fold factors but the network has {} \
+                     conv layers — the network was built from a different model than \
+                     EngineBuilder::arch selects",
+                    spec.name,
+                    folds.len(),
+                    plan.n_convs()
+                );
+                FoldConfig { folds: folds[..plan.n_convs()].to_vec() }
+            }
+            Folding::Explicit(cfg) => {
+                anyhow::ensure!(
+                    cfg.folds.len() >= plan.n_convs(),
+                    "the explicit fold vector has {} entries but the network has {} conv \
+                     layers",
+                    cfg.folds.len(),
+                    plan.n_convs()
+                );
+                FoldConfig { folds: cfg.folds[..plan.n_convs()].to_vec() }
+            }
+        };
+
+        let env = BackendEnv {
+            plan,
+            folds,
+            fifo_depth: self.fifo_depth,
+            link: self.link,
+            freq_mhz: self.freq_mhz,
+            a_bits: net.meta.a_bits.max(1),
+            artifacts_dir: self.artifacts_dir,
+        };
+        let backend = env.build(&self.kind, 1)?;
+        Ok(Engine { net: Arc::new(net), source, kind: self.kind, env, backend })
+    }
+}
+
+/// A fully assembled inference session: the network, its compiled plan,
+/// the fold configuration, and one ready [`InferenceBackend`] — plus
+/// constructors for further backends over the same plan.
+pub struct Engine {
+    net: Arc<Network>,
+    source: NetworkSource,
+    kind: BackendKind,
+    env: BackendEnv,
+    backend: Box<dyn InferenceBackend>,
+}
+
+impl Engine {
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    /// The deployed network (shared with the serving metrics, which read
+    /// `ops_per_image` for the GOPS denominator).
+    pub fn net(&self) -> &Arc<Network> {
+        &self.net
+    }
+
+    /// The one compiled plan every backend of this engine runs over.
+    pub fn plan(&self) -> &NetworkPlan {
+        &self.env.plan
+    }
+
+    /// I/O geometry of the deployed network.
+    pub fn io(&self) -> IoGeom {
+        self.env.plan.io
+    }
+
+    /// The resolved per-conv fold configuration.
+    pub fn folds(&self) -> &FoldConfig {
+        &self.env.folds
+    }
+
+    /// How the network was obtained (trained / synthetic / injected).
+    pub fn source(&self) -> NetworkSource {
+        self.source
+    }
+
+    /// The backend kind this engine was built for.
+    pub fn kind(&self) -> BackendKind {
+        self.kind
+    }
+
+    /// The engine's own backend.
+    pub fn backend(&mut self) -> &mut dyn InferenceBackend {
+        self.backend.as_mut()
+    }
+
+    /// Name of the engine's own backend.
+    pub fn backend_name(&self) -> &str {
+        self.backend.name()
+    }
+
+    /// Run one batch on the engine's own backend.
+    pub fn infer_batch(&mut self, images: &[Vec<i32>]) -> Result<BatchOutput> {
+        self.backend.infer_batch(images)
+    }
+
+    /// Construct a fresh backend of any kind over the engine's compiled
+    /// plan — comparison tables, golden cross-checks, extra workers.
+    pub fn make_backend(&self, kind: BackendKind) -> Result<Box<dyn InferenceBackend>> {
+        self.env.build(&kind, 1)
+    }
+
+    /// A thread-safe factory for the engine's own backend kind.
+    /// `pool_size` is the number of concurrent backends that will share
+    /// the machine (executor backends split the cores evenly).
+    pub fn backend_factory(&self, pool_size: usize) -> BackendFactory {
+        let env = self.env.clone();
+        let kind = self.kind;
+        Arc::new(move || env.build(&kind, pool_size))
+    }
+
+    /// `n` test images for the engine's network: the leading artifact
+    /// test images (cycled if `n` exceeds the set) for a trained
+    /// network, seeded random code vectors otherwise.
+    pub fn images(&self, n: usize) -> Result<Vec<Vec<i32>>> {
+        let n = n.max(1);
+        match self.source {
+            NetworkSource::Trained => {
+                let (images, _) = self.artifacts()?.load_test_set_for(&self.io())?;
+                anyhow::ensure!(!images.is_empty(), "artifact test set is empty");
+                Ok(images.into_iter().cycle().take(n).collect())
+            }
+            _ => {
+                let io = self.io();
+                let px = io.image_size * io.image_size * io.in_ch;
+                let mut rng = crate::util::prop::Rng::new(0x1234_5678);
+                Ok((0..n).map(|_| rng.vec_i32(px, 0, 15)).collect())
+            }
+        }
+    }
+
+    /// The labeled artifact test set — trained networks only (synthetic
+    /// networks have no ground truth).
+    pub fn labeled_test_set(&self) -> Result<(Vec<Vec<i32>>, Vec<u8>)> {
+        anyhow::ensure!(
+            self.source == NetworkSource::Trained,
+            "labels exist only for the trained artifact test set (this engine runs a {})",
+            self.source.label()
+        );
+        self.artifacts()?.load_test_set_for(&self.io())
+    }
+
+    fn artifacts(&self) -> Result<Artifacts> {
+        let dir = self
+            .env
+            .artifacts_dir
+            .as_ref()
+            .context("engine has no artifact directory (EngineBuilder::artifacts)")?;
+        Ok(Artifacts::new(dir.clone()))
+    }
+}

@@ -1,0 +1,27 @@
+//! One Engine API (DESIGN.md S19): a unified session builder plus the
+//! [`InferenceBackend`] trait over every run surface of the stack.
+//!
+//! * [`backend`] — the uniform inference contract: [`InferenceBackend`]
+//!   (`infer_batch(&[Vec<i32>]) -> BatchOutput`) implemented by the
+//!   reference executor, the cycle-level dataflow pipeline, the
+//!   multi-device shard chain, and the (feature-gated) PJRT runtime.
+//! * [`builder`] — [`Engine::builder()`]: the one place that resolves
+//!   artifact-or-synthetic networks, optimizes folding, compiles the
+//!   [`NetworkPlan`](crate::graph::plan::NetworkPlan) and constructs
+//!   backends over it.
+//!
+//! The serving coordinator's workers, the CLI subcommands, the benches
+//! and the conformance suite (`rust/tests/engine.rs`) all drive
+//! batches through this module; `lutmul bench --backends all` prints
+//! the cross-backend bit-exactness + throughput comparison.
+
+pub mod backend;
+pub mod builder;
+
+pub use backend::{
+    BatchOutput, ExecutorBackend, InferenceBackend, PipelineBackend, PjrtBackend,
+    ShardChainBackend,
+};
+pub use builder::{
+    Arch, BackendFactory, BackendKind, Engine, EngineBuilder, Folding, NetworkSource,
+};

@@ -8,6 +8,10 @@
 //! out of the simulated LUT6_2 primitives at build time — then executes
 //! the kernel functions of [`graph::kernels`](super::kernels) over it.
 //!
+//! The executor serves behind the engine's uniform backend contract
+//! (`engine::ExecutorBackend`, DESIGN.md S19); the serving coordinator
+//! and CLI drive it as a boxed `InferenceBackend`.
+//!
 //! Two multiply datapaths:
 //!  * `Arithmetic`: plain integer multiply-accumulate (fast; used by the
 //!    serving coordinator).
@@ -63,10 +67,13 @@ impl Tensor {
 }
 
 /// The reference executor: a compiled network plan plus batch drivers.
-/// Owns its plan outright — the `Network` it was compiled from can be
-/// dropped or mutated freely afterwards.
+/// Holds its plan behind an `Arc` — the `Network` it was compiled from
+/// can be dropped or mutated freely afterwards, and a pool of executors
+/// over one plan ([`shared`](Self::shared), the engine's worker
+/// factories) reads a single copy of the flattened weights and LUT
+/// product tables.
 pub struct Executor {
-    plan: NetworkPlan,
+    plan: std::sync::Arc<NetworkPlan>,
 }
 
 impl Executor {
@@ -79,6 +86,12 @@ impl Executor {
     /// Run a pre-compiled plan — e.g. `NetworkPlan::compile_direct`'s
     /// per-MAC LUT-readout baseline (bench + equivalence tests).
     pub fn from_plan(plan: NetworkPlan) -> Self {
+        Self::shared(std::sync::Arc::new(plan))
+    }
+
+    /// Run an already-shared plan without cloning it (DESIGN.md S19:
+    /// every backend of an engine reads the engine's one compiled plan).
+    pub fn shared(plan: std::sync::Arc<NetworkPlan>) -> Self {
         Self { plan }
     }
 

@@ -23,7 +23,10 @@
 //! executor runs kernels over it (`graph::kernels`), the dataflow
 //! simulator builds its stages from it (`Pipeline::from_plan`), and the
 //! runtime/coordinator read [`IoGeom`] instead of re-deriving shapes
-//! from `Network::meta`.
+//! from `Network::meta`. The engine (DESIGN.md S19) compiles a network
+//! into one plan exactly once and constructs every `InferenceBackend`
+//! over it, which is what makes cross-backend bit-exactness hold by
+//! construction.
 
 use crate::fabric::lutmul::ConstMultiplier;
 

@@ -31,8 +31,17 @@
 //! im2row splits, memoized LUT6_2 product tables — and the executor,
 //! simulator and serving stack consume the same plans.
 //!
+//! All of it sits behind one construction path ([`engine`], DESIGN.md
+//! S19): `Engine::builder()` resolves the artifact-or-synthetic
+//! network, optimizes folding and compiles the plan exactly once, and
+//! every run surface — executor, pipeline, shard chain, PJRT —
+//! implements the same `InferenceBackend` trait, so the CLI, the
+//! coordinator's workers, benches and tests drive batches through one
+//! boxed contract (`lutmul bench --backends all` prints the
+//! cross-backend bit-exactness + throughput comparison).
+//!
 //! See the repo-root `README.md` for build/run instructions, `DESIGN.md`
-//! for the system inventory (S1-S17) and the experiment index
+//! for the system inventory (S1-S19) and the experiment index
 //! (Table 1/2, Figures 1/2/5/6), and `EXPERIMENTS.md` for measured
 //! results vs the paper.
 
@@ -40,6 +49,7 @@ pub mod baselines;
 pub mod coordinator;
 pub mod util;
 pub mod dataflow;
+pub mod engine;
 pub mod fabric;
 pub mod graph;
 pub mod quant;

@@ -1,26 +1,34 @@
 //! `lutmul` CLI — leader entrypoint for the LUTMUL reproduction.
 //!
-//! Subcommands map onto the experiment index of DESIGN.md:
+//! Subcommands map onto the experiment index of DESIGN.md and are thin
+//! flag-parsing shims over the engine (DESIGN.md S19): every run
+//! surface is constructed through `Engine::builder()` and driven
+//! through the uniform `InferenceBackend` contract.
+//!
 //!   * `verify`   — run the test set through the dataflow simulator and
 //!     check bit-exactness against the PJRT golden model + accuracy.
 //!   * `serve`    — start the serving coordinator and push a synthetic
 //!     request load through it, reporting latency/throughput.
+//!   * `bench`    — run every available backend on the same inputs and
+//!     print a bit-exactness + throughput comparison (EXPERIMENTS.md
+//!     E12).
 //!   * `synth`    — synthesize an architecture on a device and print the
 //!     design report (resources, FPS, GOPS, power).
 //!   * `report`   — print Table 1 / Figure 1 / Figure 2 / Figure 6 /
 //!     Table 2 reproductions.
 //!
-//! (Hand-rolled arg parsing: the offline vendored crate set has no clap.)
+//! (Hand-rolled arg parsing: the offline vendored crate set has no clap.
+//! Malformed flag values and unknown flags are hard errors.)
 
 use anyhow::Result;
-use std::sync::Arc;
 
-use lutmul::coordinator::{Backend, Coordinator, ServeConfig};
-use lutmul::dataflow::{FoldConfig, Pipeline};
+use lutmul::coordinator::{Coordinator, ServeConfig};
+use lutmul::dataflow::FoldConfig;
+use lutmul::engine::{Arch, BackendKind, Engine, Folding, InferenceBackend};
 use lutmul::fabric::device::U280;
-use lutmul::graph::network::Network;
+use lutmul::graph::plan::Datapath;
 use lutmul::graph::{mobilenet_v2_full, mobilenet_v2_small};
-use lutmul::runtime::{Artifacts, Runtime};
+use lutmul::runtime::Artifacts;
 use lutmul::synth::fold::{optimize_folding, Budget};
 use lutmul::synth::synthesize;
 
@@ -33,6 +41,11 @@ USAGE:
 COMMANDS:
   verify [--n N] [--lut-fabric]      simulate the test set; verify vs PJRT
   serve  [--requests N] [--workers N] [--max-batch N] [--devices N]
+  bench  [--backends all|LIST] [--n N] [--devices N]
+         run every available engine backend (executor, pipeline, sharded
+         chains, PJRT when loadable) on the same inputs and print a
+         bit-exactness + throughput comparison; LIST is comma-joined
+         reference|pipeline|sharded|pjrt
   synth  [--arch full|small] [--fraction D]
   util   [--arch full|small]          Vivado-style utilization report
   netlist [--layer NAME]              structural Verilog for a trained layer
@@ -41,6 +54,8 @@ COMMANDS:
          small network (trained artifacts when built, its synthetic twin
          otherwise) and prints measured-vs-modeled FPS
   report <table1|fig1|fig2|fig6|table2|multi>
+
+Malformed flag values and unknown flags are hard errors.
 ";
 
 /// Minimal flag parser: `--key value` and bare flags.
@@ -73,113 +88,179 @@ impl Args {
         Self { positional, flags }
     }
 
-    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
-        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    /// Parse `--key`'s value, defaulting when the flag is absent. A
+    /// malformed value is a hard error, not a silent default (`--workers
+    /// abc` must not quietly serve with 2 workers).
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("invalid value '{v}' for --{key}: {e}")),
+        }
     }
 
     fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
+    }
+
+    /// Reject flags the subcommand does not understand — a typo'd flag
+    /// must not silently fall back to the default behaviour.
+    fn check_flags(&self, cmd: &str, allowed: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            anyhow::ensure!(
+                allowed.contains(&k.as_str()),
+                "unknown flag --{k} for '{cmd}' (allowed: {})",
+                allowed
+                    .iter()
+                    .map(|a| format!("--{a}"))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            );
+        }
+        Ok(())
     }
 }
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv);
-    let artifacts = Artifacts::new(args.get::<String>("artifacts", "artifacts".into()));
+    let artifacts = Artifacts::new(args.get::<String>("artifacts", "artifacts".into())?);
     match args.positional.first().map(String::as_str) {
-        Some("verify") => verify(&artifacts, args.get("n", 64usize), args.has("lut-fabric")),
-        Some("serve") => serve(
-            &artifacts,
-            args.get("requests", 512usize),
-            args.get("workers", 2usize),
-            args.get("max-batch", 8usize),
-            args.get("devices", 0usize),
-        ),
-        Some("synth") => synth(&args.get::<String>("arch", "full".into()), args.get("fraction", 1u64)),
-        Some("util") => util(&args.get::<String>("arch", "full".into())),
-        Some("netlist") => netlist(&artifacts, &args.get::<String>("layer", "ir0_exp".into())),
+        Some("verify") => {
+            args.check_flags("verify", &["artifacts", "n", "lut-fabric"])?;
+            verify(&artifacts, args.get("n", 64usize)?, args.has("lut-fabric"))
+        }
+        Some("serve") => {
+            args.check_flags(
+                "serve",
+                &["artifacts", "requests", "workers", "max-batch", "devices"],
+            )?;
+            serve(
+                &artifacts,
+                args.get("requests", 512usize)?,
+                args.get("workers", 2usize)?,
+                args.get("max-batch", 8usize)?,
+                args.get("devices", 0usize)?,
+            )
+        }
+        Some("bench") => {
+            args.check_flags("bench", &["artifacts", "backends", "n", "devices"])?;
+            bench_backends(
+                &artifacts,
+                &args.get::<String>("backends", "all".into())?,
+                args.get("n", 8usize)?,
+                args.get("devices", 2usize)?,
+            )
+        }
+        Some("synth") => {
+            args.check_flags("synth", &["artifacts", "arch", "fraction"])?;
+            synth(&args.get::<String>("arch", "full".into())?, args.get("fraction", 1u64)?)
+        }
+        Some("util") => {
+            args.check_flags("util", &["artifacts", "arch"])?;
+            util(&args.get::<String>("arch", "full".into())?)
+        }
+        Some("netlist") => {
+            args.check_flags("netlist", &["artifacts", "layer"])?;
+            netlist(&artifacts, &args.get::<String>("layer", "ir0_exp".into())?)
+        }
         Some("multi") => {
+            args.check_flags("multi", &["artifacts", "devices", "run", "n"])?;
             if args.has("run") {
-                multi_run(&artifacts, args.get("devices", 2usize), args.get("n", 12usize))
+                multi_run(&artifacts, args.get("devices", 2usize)?, args.get("n", 12usize)?)
             } else {
-                multi(args.get("devices", 2usize))
+                multi(args.get("devices", 2usize)?)
             }
         }
         Some("report") => {
+            args.check_flags("report", &["artifacts"])?;
             let what = args.positional.get(1).cloned().unwrap_or_default();
             report(&artifacts, &what)
         }
-        _ => {
+        Some(other) => {
+            print!("{USAGE}");
+            anyhow::bail!("unknown command '{other}'")
+        }
+        None => {
             print!("{USAGE}");
             Ok(())
         }
     }
 }
 
-fn load_network(artifacts: &Artifacts) -> Result<Network> {
-    Network::load(artifacts.network_json())
-}
-
 fn verify(artifacts: &Artifacts, n: usize, lut_fabric: bool) -> Result<()> {
-    let net = load_network(artifacts)?;
-    let io = net.io();
-    let (images, labels) = artifacts.load_test_set_for(&io)?;
+    // trained artifacts only (no synthetic fallback): accuracy against
+    // labels is the point of this subcommand
+    let mut engine = Engine::builder()
+        .arch(Arch::Small)
+        .artifacts(artifacts)
+        .backend(BackendKind::Pipeline)
+        .build()
+        .map_err(|e| e.context("verify needs the trained artifacts (run `make artifacts`)"))?;
+    let (images, labels) = engine.labeled_test_set()?;
     let n = if n == 0 { images.len() } else { n.min(images.len()) };
-    println!("loaded network ({} ops) + {} test images", net.ops.len(), n);
+    println!("loaded network ({} ops) + {n} test images", engine.net().ops.len());
 
-    // dataflow simulator
-    let folds = FoldConfig::fully_parallel(net.convs().count());
-    let mut pipe = Pipeline::build(&net, &folds, 16);
+    // dataflow simulator through the uniform backend contract
     let t0 = std::time::Instant::now();
-    let report = pipe.run(&images[..n])?;
+    let out = engine.infer_batch(&images[..n])?;
     let sim_elapsed = t0.elapsed();
-    let correct = report
+    let correct = out
         .logits
         .iter()
         .zip(&labels[..n])
         .filter(|(l, &y)| lutmul::coordinator::argmax(l) == y as usize)
         .count();
+    let steady = engine
+        .backend()
+        .steady_cycles()
+        .unwrap_or(out.cycles / n.max(1) as u64);
     println!(
-        "simulator: {n} images in {:.2?} | {} cycles | steady-state {} cycles/img | {:.0} FPS @333MHz | acc {:.2}%",
+        "simulator: {n} images in {:.2?} | {} cycles | steady-state {steady} cycles/img | {:.0} FPS @333MHz | acc {:.2}%",
         sim_elapsed,
-        report.cycles,
-        report.steady_state_cycles_per_image,
-        report.steady_state_fps(333.0),
+        out.cycles,
+        333.0e6 / steady.max(1) as f64,
         100.0 * correct as f64 / n as f64,
     );
 
-    // PJRT golden model cross-check (batch 1 artifact); the runtime
-    // shares the executor/simulator geometry via the plan-level IoGeom
-    match Runtime::load_for(artifacts.model_hlo(1), 1, &io) {
-        Ok(rt) => {
-            let mut mismatches = 0;
+    // PJRT golden model cross-check (batch-1 artifact); the runtime is
+    // just another InferenceBackend over the same plan geometry
+    match engine.make_backend(BackendKind::Pjrt { batch: 1 }) {
+        Ok(mut rt) => {
             let check = n.min(16);
+            let mut mismatches = 0;
             for i in 0..check {
-                let golden = rt.run(&images[i])?;
-                if golden[0] != report.logits[i] {
+                let golden = rt.infer_batch(std::slice::from_ref(&images[i]))?;
+                if golden.logits[0] != out.logits[i] {
                     mismatches += 1;
                 }
             }
             println!("PJRT golden cross-check: {}/{check} bit-exact", check - mismatches);
             anyhow::ensure!(mismatches == 0, "simulator diverged from the golden model");
         }
-        // stub runtime (no `xla` feature): the simulator/executor checks
-        // below still run, only the HLO leg is skipped
-        #[cfg(not(feature = "xla"))]
-        Err(e) => println!("PJRT golden cross-check skipped ({e})"),
         // real PJRT bindings present: a load failure is a broken artifact
-        #[cfg(feature = "xla")]
-        Err(e) => return Err(e),
+        Err(e) if cfg!(feature = "xla") => return Err(e),
+        // stub runtime (no `xla` feature): the simulator/executor checks
+        // still run, only the HLO leg is skipped
+        Err(e) => println!("PJRT golden cross-check skipped ({e})"),
     }
 
     if lut_fabric {
-        use lutmul::graph::executor::{Datapath, Executor, Tensor};
-        let ex = Executor::new(&net, Datapath::LutFabric);
+        // a second engine compiles the same network for the LUT6-fabric
+        // datapath; its executor must agree bit-for-bit
+        let mut lf = Engine::builder()
+            .arch(Arch::Small)
+            .artifacts(artifacts)
+            .datapath(Datapath::LutFabric)
+            .backend(BackendKind::Reference)
+            .build()?;
         let m = n.min(8);
-        let ok = (0..m).all(|i| {
-            let t = Tensor::from_hwc(io.image_size, io.image_size, io.in_ch, images[i].clone());
-            ex.execute(&t) == report.logits[i]
-        });
+        let got = lf.infer_batch(&images[..m])?;
+        let ok = got.logits[..] == out.logits[..m];
         println!("LUT6-fabric datapath: {}/{m} bit-exact", if ok { m } else { 0 });
         anyhow::ensure!(ok, "LUT fabric datapath diverged");
     }
@@ -193,16 +274,21 @@ fn serve(
     max_batch: usize,
     devices: usize,
 ) -> Result<()> {
-    let net = Arc::new(load_network(artifacts)?);
-    let (images, _) = artifacts.load_test_set_for(&net.io())?;
     // --devices N > 0 serves from the sharded chain backend (DESIGN.md
     // S18); the default stays the whole-network reference executor
-    let backend =
-        if devices > 0 { Backend::Sharded { devices } } else { Backend::Reference };
-    let coord = Coordinator::start(
-        net,
-        ServeConfig { backend, workers, max_batch, ..Default::default() },
-    );
+    let kind = if devices > 0 {
+        BackendKind::Sharded { devices }
+    } else {
+        BackendKind::Reference
+    };
+    let engine = Engine::builder()
+        .arch(Arch::Small)
+        .artifacts(artifacts)
+        .backend(kind)
+        .build()?;
+    let (images, _) = engine.labeled_test_set()?;
+    let coord =
+        Coordinator::start(&engine, ServeConfig { workers, max_batch, ..Default::default() })?;
     let t0 = std::time::Instant::now();
     let mut tickets = Vec::with_capacity(requests);
     let mut rejected = 0usize;
@@ -228,10 +314,146 @@ fn serve(
     Ok(())
 }
 
+/// `lutmul bench --backends all` (EXPERIMENTS.md E12): run every
+/// available backend on the same inputs through the uniform
+/// `InferenceBackend` contract and print a bit-exactness + throughput
+/// comparison table. Exits nonzero when any executed backend diverges
+/// from the reference executor, so CI gates on it (`make engine-smoke`).
+fn bench_backends(artifacts: &Artifacts, which: &str, n: usize, devices: usize) -> Result<()> {
+    let mut engine = Engine::builder()
+        .arch(Arch::Small)
+        .artifacts(artifacts)
+        .or_synthetic(0x5EED)
+        .backend(BackendKind::Reference)
+        .build()?;
+    let n = n.max(1);
+    let images = engine.images(n)?;
+    let io = engine.io();
+    println!(
+        "backend comparison: {} | {n} images ({}x{}x{} codes)",
+        engine.source().label(),
+        io.image_size,
+        io.image_size,
+        io.in_ch
+    );
+
+    // the reference logits every other backend must reproduce
+    let t0 = std::time::Instant::now();
+    let reference = engine.infer_batch(&images)?;
+    let ref_ips = n as f64 / t0.elapsed().as_secs_f64();
+    println!("  {:<22} {ref_ips:>9.0} img/s | reference", engine.backend_name());
+
+    // the user's device count is used as given — out of range is a hard
+    // error, not a silent clamp (same contract as the flag parser), but
+    // only when a sharded backend actually consumes the flag
+    let sharded = |devices: usize| -> Result<BackendKind> {
+        anyhow::ensure!(devices >= 1, "--devices must be at least 1, got {devices}");
+        Ok(BackendKind::Sharded { devices })
+    };
+    let kinds: Vec<BackendKind> = match which {
+        "all" => vec![
+            BackendKind::Pipeline,
+            sharded(devices)?,
+            sharded(devices + 1)?,
+            BackendKind::Pjrt { batch: 1 },
+        ],
+        list => list
+            .split(',')
+            .map(|s| match s.trim() {
+                "reference" => Ok(BackendKind::Reference),
+                "pipeline" => Ok(BackendKind::Pipeline),
+                "sharded" => sharded(devices),
+                "pjrt" => Ok(BackendKind::Pjrt { batch: 1 }),
+                other => Err(anyhow::anyhow!(
+                    "unknown backend '{other}' for --backends (try all, or a comma list of \
+                     reference|pipeline|sharded|pjrt)"
+                )),
+            })
+            .collect::<Result<Vec<_>>>()?,
+    };
+
+    // one row per backend: time it, compare against the reference
+    // logits, account divergence — shared by the kind loop and the
+    // cross-datapath witness below so the format cannot drift
+    let mut diverged = 0usize;
+    let mut compared = 0usize;
+    let mut ran = 0usize; // requested backends that executed at all
+    let mut row = |b: &mut dyn InferenceBackend| -> Result<()> {
+        let t0 = std::time::Instant::now();
+        let out = b.infer_batch(&images)?;
+        let ips = n as f64 / t0.elapsed().as_secs_f64();
+        let exact = out.logits == reference.logits;
+        compared += 1;
+        if !exact {
+            diverged += 1;
+        }
+        let cycles = if out.cycles > 0 {
+            format!(" | {} sim cycles", out.cycles)
+        } else {
+            String::new()
+        };
+        println!(
+            "  {:<22} {ips:>9.0} img/s | {}{cycles}",
+            b.name(),
+            if exact { format!("bit-exact {n}/{n}") } else { "DIVERGED".into() },
+        );
+        Ok(())
+    };
+
+    for kind in kinds {
+        // the reference executor is already the baseline row; a second
+        // copy would compare trivially against itself and count as a
+        // hollow pass toward the `compared` guard below
+        if kind == BackendKind::Reference {
+            ran += 1; // explicitly requested, and the baseline did run
+            continue;
+        }
+        match engine.make_backend(kind) {
+            Ok(mut b) => {
+                row(b.as_mut())?;
+                ran += 1;
+            }
+            // an unavailable backend (PJRT without the `xla` feature or
+            // without artifacts) is reported, not silently dropped
+            Err(e) => println!("  {:<22} unavailable ({e})", kind.label()),
+        }
+    }
+
+    if which == "all" {
+        // cross-datapath witness: the same network compiled for the
+        // LUT6-fabric datapath must agree bit-for-bit too
+        let mut lf = Engine::builder()
+            .arch(Arch::Small)
+            .artifacts(artifacts)
+            .or_synthetic(0x5EED)
+            .datapath(Datapath::LutFabric)
+            .backend(BackendKind::Reference)
+            .build()?;
+        row(lf.backend())?;
+        ran += 1;
+    }
+
+    anyhow::ensure!(
+        diverged == 0,
+        "{diverged} backend(s) diverged from the reference executor"
+    );
+    anyhow::ensure!(ran > 0, "none of the requested backends could run");
+    if compared > 0 {
+        println!("OK: {compared} backend(s) bit-exact vs the reference executor");
+    } else {
+        // e.g. `--backends reference`: the baseline ran and is healthy,
+        // but nothing was compared — say so instead of claiming a
+        // comparison that never happened
+        println!("OK: reference executor only (no comparison backends ran)");
+    }
+    Ok(())
+}
+
 fn synth(arch: &str, fraction: u64) -> Result<()> {
     let spec = match arch {
         "small" => mobilenet_v2_small(),
-        _ => mobilenet_v2_full(),
+        "full" => mobilenet_v2_full(),
+        other => anyhow::bail!("unknown --arch '{other}' (try full|small)"),
     };
     let budget =
         if fraction <= 1 { Budget::whole(&U280) } else { Budget::fraction(&U280, fraction) };
@@ -263,7 +485,8 @@ fn synth(arch: &str, fraction: u64) -> Result<()> {
 fn util(arch: &str) -> Result<()> {
     let spec = match arch {
         "small" => mobilenet_v2_small(),
-        _ => mobilenet_v2_full(),
+        "full" => mobilenet_v2_full(),
+        other => anyhow::bail!("unknown --arch '{other}' (try full|small)"),
     };
     let (folds, _) = optimize_folding(&spec, &Budget::whole(&U280));
     let d = synthesize(&spec, &U280, &folds);
@@ -272,7 +495,7 @@ fn util(arch: &str) -> Result<()> {
 }
 
 fn netlist(artifacts: &Artifacts, layer: &str) -> Result<()> {
-    let net = load_network(artifacts)?;
+    let net = lutmul::graph::network::Network::load(artifacts.network_json())?;
     for op in net.ops.iter() {
         if let lutmul::graph::network::Op::Conv { name, w_codes, w_bits, .. } = op {
             if name == layer {
@@ -306,54 +529,38 @@ fn multi(devices: usize) -> Result<()> {
     Ok(())
 }
 
-/// `multi --run`: execute the partition as a sharded chain
-/// (`lutmul::dataflow::ShardChain`) on real inputs and check the
-/// simulation against the analytic model (EXPERIMENTS.md E11). Uses the
-/// trained artifacts when built, the synthetic twin of the same
-/// architecture otherwise, so the smoke check runs on a fresh checkout.
+/// `multi --run`: execute the analytic partition as a sharded chain on
+/// real inputs and check the simulation against the analytic model
+/// (EXPERIMENTS.md E11). The engine owns the load-or-synthetic network
+/// fallback, the fold/budget optimization and the plan compile; the
+/// analytic `multi::partition` overlay drives where the chain is cut.
 fn multi_run(artifacts: &Artifacts, devices: usize, n: usize) -> Result<()> {
     use lutmul::dataflow::multi::{partition, LinkModel};
     use lutmul::dataflow::ShardChain;
-    use lutmul::graph::executor::Datapath;
-    use lutmul::graph::plan::NetworkPlan;
 
+    // optimize folding ONCE at the arch level; the same vector drives
+    // the analytic partition and (truncated to the plan's convs) the
+    // engine's executed pipeline/chain, so the two legs of the
+    // measured-vs-analytic check cannot drift apart
     let arch = mobilenet_v2_small();
     let (folds, _) = optimize_folding(&arch, &Budget::whole(&U280));
+    let mut engine = Engine::builder()
+        .arch(Arch::Small)
+        .artifacts(artifacts)
+        .or_synthetic(0x5EED)
+        .folding(Folding::Explicit(FoldConfig { folds: folds.clone() }))
+        .backend(BackendKind::Pipeline)
+        .build()?;
+    let n = n.max(1);
+    let images = engine.images(n)?;
+
     let mplan = partition(&arch, &U280, devices, &folds, LinkModel::gbe100());
-
-    let (net, images, source) = match load_network(artifacts) {
-        Ok(net) => {
-            let (images, _) = artifacts.load_test_set_for(&net.io())?;
-            (net, images, "trained artifacts")
-        }
-        Err(_) => {
-            let net = Network::synthetic(&arch, 0x5EED);
-            let io = net.io();
-            let mut rng = lutmul::util::prop::Rng::new(0x1234_5678);
-            let px = io.image_size * io.image_size * io.in_ch;
-            let images: Vec<Vec<i32>> =
-                (0..n.max(1)).map(|_| rng.vec_i32(px, 0, 15)).collect();
-            (net, images, "synthetic network (artifacts not built)")
-        }
-    };
-    let n = n.max(1).min(images.len());
-    let images = &images[..n];
-
-    let plan = NetworkPlan::compile(&net, Datapath::Arithmetic);
-    anyhow::ensure!(
-        folds.len() >= plan.n_convs(),
-        "network has {} conv layers but the {} architecture folds only cover {} — \
-         the artifacts were built from a different model",
-        plan.n_convs(),
-        arch.name,
-        folds.len()
-    );
-    let shards = mplan.to_shards(&plan)?;
-    let conv_folds = FoldConfig { folds: folds[..plan.n_convs()].to_vec() };
+    let shards = mplan.to_shards(engine.plan())?;
+    let a_bits = engine.net().meta.a_bits.max(1);
     println!(
         "sharded chain: {} device(s) over 100 GbE | {} | {} images",
         shards.len(),
-        source,
+        engine.source().label(),
         n
     );
     for (i, s) in shards.iter().enumerate() {
@@ -364,22 +571,22 @@ fn multi_run(artifacts: &Artifacts, devices: usize, n: usize) -> Result<()> {
             s.plan.n_convs(),
             s.in_pixels,
             s.in_ch,
-            if s.is_tail() { 0 } else { s.egress_bytes(net.meta.a_bits.max(1)) }
+            if s.is_tail() { 0 } else { s.egress_bytes(a_bits) }
         );
     }
 
-    // single-device reference run: the chain must be bit-exact with it
-    let mut single = Pipeline::from_plan(&plan, &conv_folds, 16);
-    let want = single.run(images)?;
+    // single-device reference run (the engine's pipeline backend, same
+    // optimized folds): the chain must be bit-exact with it
+    let want = engine.infer_batch(&images)?;
     let mut chain = ShardChain::new(
         &shards,
-        &conv_folds,
+        engine.folds(),
         16,
         &LinkModel::gbe100(),
         U280.max_freq_mhz,
-        net.meta.a_bits.max(1),
+        a_bits,
     )?;
-    let got = chain.run(images)?;
+    let got = chain.run(&images)?;
     anyhow::ensure!(
         got.logits == want.logits,
         "sharded chain diverged from the single-device pipeline"

@@ -207,16 +207,35 @@ impl Artifacts {
     }
 
     /// Load the test set (images as code vectors + labels).
+    ///
+    /// The image file must divide exactly into `h*w*c`-byte records — a
+    /// truncated `test_images.bin` or a geometry mismatch errors with
+    /// the expected/actual sizes instead of silently dropping the
+    /// trailing bytes.
     pub fn load_test_set(&self, h: usize, w: usize, c: usize) -> Result<(Vec<Vec<i32>>, Vec<u8>)> {
         let img_bytes = std::fs::read(self.test_images())
             .context("reading test_images.bin (run `make artifacts`)")?;
         let labels = std::fs::read(self.test_labels()).context("reading test_labels.bin")?;
         let px = h * w * c;
+        anyhow::ensure!(px > 0, "degenerate image geometry {h}x{w}x{c}");
+        anyhow::ensure!(
+            img_bytes.len() % px == 0,
+            "{} is {} bytes, not a whole number of {h}x{w}x{c} images ({px} bytes each; \
+             {} bytes of trailing garbage — truncated file or geometry mismatch?)",
+            self.test_images().display(),
+            img_bytes.len(),
+            img_bytes.len() % px
+        );
         let images: Vec<Vec<i32>> = img_bytes
             .chunks_exact(px)
             .map(|ch| ch.iter().map(|&b| b as i32).collect())
             .collect();
-        anyhow::ensure!(images.len() == labels.len(), "test set size mismatch");
+        anyhow::ensure!(
+            images.len() == labels.len(),
+            "test set size mismatch: {} images vs {} labels",
+            images.len(),
+            labels.len()
+        );
         Ok((images, labels))
     }
 }
@@ -230,6 +249,30 @@ mod tests {
         let a = Artifacts::new("artifacts");
         assert_eq!(a.model_hlo(1).to_str().unwrap(), "artifacts/model.hlo.txt");
         assert_eq!(a.model_hlo(8).to_str().unwrap(), "artifacts/model_b8.hlo.txt");
+    }
+
+    #[test]
+    fn load_test_set_rejects_truncated_images() {
+        let dir =
+            std::env::temp_dir().join(format!("lutmul-testset-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let a = Artifacts::new(dir.clone());
+        // 10 bytes is not a whole number of 2x2x1 = 4-byte images
+        std::fs::write(a.test_images(), vec![7u8; 10]).unwrap();
+        std::fs::write(a.test_labels(), vec![0u8; 2]).unwrap();
+        let err = a.load_test_set(2, 2, 1).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("not a whole number"), "{msg}");
+        assert!(msg.contains("10 bytes"), "actual size named: {msg}");
+        assert!(msg.contains("4 bytes each"), "expected record size named: {msg}");
+        // an exact multiple loads, and label mismatches are named too
+        std::fs::write(a.test_images(), vec![7u8; 8]).unwrap();
+        let (imgs, labels) = a.load_test_set(2, 2, 1).unwrap();
+        assert_eq!((imgs.len(), labels.len()), (2, 2));
+        std::fs::write(a.test_labels(), vec![0u8; 3]).unwrap();
+        let err = a.load_test_set(2, 2, 1).unwrap_err();
+        assert!(err.to_string().contains("2 images vs 3 labels"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[cfg(not(feature = "xla"))]

@@ -3,13 +3,13 @@
 //!
 //!  * `Executor::run_batch` must be bit-exact against N independent
 //!    `execute` calls on both executor datapaths and against the dataflow
-//!    pipeline simulator — the three serving backends;
+//!    pipeline simulator — the serving backends behind the engine's
+//!    uniform `InferenceBackend` contract (DESIGN.md S19);
 //!  * a full `max_batch` dispatch through the coordinator must return
 //!    per-request results in submission order.
 
-use std::sync::Arc;
-
-use lutmul::coordinator::{run_batch, Backend, Coordinator, ServeConfig};
+use lutmul::coordinator::{Coordinator, ServeConfig};
+use lutmul::engine::{BackendKind, Engine};
 use lutmul::graph::executor::{Datapath, Executor, Tensor};
 use lutmul::graph::mobilenet_v2_small;
 use lutmul::graph::network::{ConvKind, Meta, Network, Op};
@@ -141,19 +141,40 @@ fn run_batch_edge_sizes() {
 }
 
 #[test]
-fn all_three_backends_agree_on_batches() {
-    // the server-level batch API: Reference, LutFabric and the
-    // batch-pipelined Simulator must produce identical logits
+fn all_engine_backends_agree_on_batches() {
+    // the server-level batch API: the reference executor, the LUT-fabric
+    // datapath and the batch-pipelined simulator must produce identical
+    // logits through the uniform InferenceBackend contract
     let net = small_net();
     let mut rng = Rng::new(3);
     let images = random_images(&mut rng, 4, 16, 3);
-    let a = run_batch(&net, Backend::Reference, &images).unwrap();
-    let b = run_batch(&net, Backend::LutFabric, &images).unwrap();
-    let c = run_batch(&net, Backend::Simulator, &images).unwrap();
+    let mut engine = Engine::builder()
+        .network(net.clone())
+        .backend(BackendKind::Reference)
+        .build()
+        .unwrap();
+    let a = engine.infer_batch(&images).unwrap().logits;
+    let mut lut = Engine::builder()
+        .network(net)
+        .datapath(Datapath::LutFabric)
+        .build()
+        .unwrap();
+    let b = lut.infer_batch(&images).unwrap().logits;
+    let c = engine
+        .make_backend(BackendKind::Pipeline)
+        .unwrap()
+        .infer_batch(&images)
+        .unwrap()
+        .logits;
     assert_eq!(a, b, "Reference vs LutFabric");
     assert_eq!(a, c, "Reference vs Simulator");
     // the multi-device chain is the fourth face of the same plans
-    let d = run_batch(&net, Backend::Sharded { devices: 2 }, &images).unwrap();
+    let d = engine
+        .make_backend(BackendKind::Sharded { devices: 2 })
+        .unwrap()
+        .infer_batch(&images)
+        .unwrap()
+        .logits;
     assert_eq!(a, d, "Reference vs Sharded");
 }
 
@@ -161,19 +182,24 @@ fn all_three_backends_agree_on_batches() {
 fn coordinator_full_batch_returns_submission_order() {
     // one worker, one full max_batch dispatch: every ticket must resolve
     // to the logits of the image submitted with it, in submission order
-    let net = Arc::new(small_net());
+    let net = small_net();
     let mut rng = Rng::new(11);
     let images = random_images(&mut rng, 8, 16, 3);
+    let engine = Engine::builder()
+        .network(net.clone())
+        .backend(BackendKind::Reference)
+        .build()
+        .unwrap();
     let coord = Coordinator::start(
-        net.clone(),
+        &engine,
         ServeConfig {
-            backend: Backend::Reference,
             workers: 1,
             max_batch: 8,
             max_wait: std::time::Duration::from_millis(50),
             ..Default::default()
         },
-    );
+    )
+    .unwrap();
     let tickets: Vec<_> =
         images.iter().map(|img| coord.submit(img.clone()).expect("queue accepts")).collect();
     let ex = Executor::new(&net, Datapath::Arithmetic);
@@ -192,19 +218,24 @@ fn coordinator_full_batch_returns_submission_order() {
 #[test]
 fn coordinator_batches_on_simulator_backend() {
     // the batch-pipelined simulator serves correct results under batching
-    let net = Arc::new(small_net());
+    let net = small_net();
     let mut rng = Rng::new(5);
     let images = random_images(&mut rng, 6, 16, 3);
+    let engine = Engine::builder()
+        .network(net.clone())
+        .backend(BackendKind::Pipeline)
+        .build()
+        .unwrap();
     let coord = Coordinator::start(
-        net.clone(),
+        &engine,
         ServeConfig {
-            backend: Backend::Simulator,
             workers: 1,
             max_batch: 4,
             max_wait: std::time::Duration::from_millis(20),
             ..Default::default()
         },
-    );
+    )
+    .unwrap();
     let tickets: Vec<_> = images.iter().map(|img| coord.submit(img.clone()).unwrap()).collect();
     let ex = Executor::new(&net, Datapath::Arithmetic);
     let want = tensors(&net, &images);

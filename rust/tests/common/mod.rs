@@ -1,0 +1,60 @@
+//! Shared generators for the integration suites (`tests/multi.rs`,
+//! `tests/engine.rs`): randomized network shape specs and input images.
+//! One copy, so the conformance and sharding suites always test the
+//! same network distribution.
+
+use lutmul::graph::network::{ConvKind, Network};
+use lutmul::graph::{ArchSpec, LayerSpec};
+use lutmul::util::prop::Rng;
+
+/// Random 4-bit conv stack + 8-bit classifier head (the shape format
+/// `Network::synthetic` lowers).
+pub fn random_spec(rng: &mut Rng) -> ArchSpec {
+    let input_hw = *rng.choose(&[5usize, 7, 9, 11, 16]);
+    let input_ch = 1 + rng.below(3) as usize;
+    let mut layers = Vec::new();
+    let (mut cin, mut hw) = (input_ch, input_hw);
+    let n_layers = 3 + rng.below(3) as usize;
+    for i in 0..n_layers {
+        let kind = *rng.choose(&[ConvKind::Std, ConvKind::Pw, ConvKind::Dw]);
+        let (k, stride) = match kind {
+            ConvKind::Pw => (1, 1),
+            _ => (3, 1 + rng.below(2) as usize),
+        };
+        let cout = match kind {
+            ConvKind::Dw => cin,
+            _ => 1 + rng.below(6) as usize,
+        };
+        layers.push(LayerSpec {
+            name: format!("l{i}"),
+            kind,
+            cin,
+            cout,
+            k,
+            stride,
+            in_hw: hw,
+            w_bits: 4,
+            a_bits: 4,
+        });
+        hw = hw.div_ceil(stride);
+        cin = cout;
+    }
+    layers.push(LayerSpec {
+        name: "fc".into(),
+        kind: ConvKind::Pw,
+        cin,
+        cout: 3,
+        k: 1,
+        stride: 1,
+        in_hw: 1,
+        w_bits: 8,
+        a_bits: 8,
+    });
+    ArchSpec { name: "random".into(), input_hw, input_ch, layers }
+}
+
+/// `n` random input images sized for `net`'s input geometry.
+pub fn random_images(rng: &mut Rng, net: &Network, n: usize) -> Vec<Vec<i32>> {
+    let (s, c) = (net.meta.image_size, net.meta.in_ch);
+    (0..n).map(|_| rng.vec_i32(s * s * c, 0, 15)).collect()
+}

@@ -1,0 +1,269 @@
+//! Engine conformance suite (DESIGN.md S19, no artifacts needed).
+//!
+//! Every `InferenceBackend` the engine constructs — the reference
+//! executor, the dataflow pipeline, and 2- and 3-device shard chains —
+//! must produce bit-identical logits on randomized synthetic networks,
+//! and the `EngineBuilder` error paths (missing artifacts without a
+//! synthetic fallback, fold/conv count mismatches, absent network
+//! source, PJRT without artifacts) must diagnose loudly instead of
+//! defaulting.
+
+use lutmul::coordinator::{Coordinator, ServeConfig};
+use lutmul::dataflow::FoldConfig;
+use lutmul::engine::{Arch, BackendKind, Engine, Folding, NetworkSource};
+use lutmul::fabric::device::U280;
+use lutmul::graph::network::Network;
+use lutmul::graph::plan::Datapath;
+use lutmul::graph::{mobilenet_v2_full, mobilenet_v2_small};
+use lutmul::runtime::Artifacts;
+use lutmul::synth::fold::Budget;
+use lutmul::util::prop::{self, Rng};
+
+mod common;
+use common::{random_images, random_spec};
+
+#[test]
+fn prop_all_backends_bit_identical_on_random_networks() {
+    // the conformance acceptance: executor, pipeline and 2-/3-device
+    // shard chains agree bit-for-bit on randomized synthetic networks
+    prop::cases(5, |rng| {
+        let spec = random_spec(rng);
+        let net = Network::synthetic(&spec, rng.next_u64());
+        let images = random_images(rng, &net, 3);
+        let mut engine = Engine::builder()
+            .network(net)
+            .backend(BackendKind::Reference)
+            .build()
+            .unwrap();
+        assert_eq!(engine.source(), NetworkSource::Injected);
+        let want = engine.infer_batch(&images).unwrap();
+        assert_eq!(want.logits.len(), images.len());
+        assert_eq!(want.cycles, 0, "the executor has no cycle model");
+        assert!(want.counters.is_empty());
+        for kind in [
+            BackendKind::Pipeline,
+            BackendKind::Sharded { devices: 2 },
+            BackendKind::Sharded { devices: 3 },
+        ] {
+            let mut b = engine.make_backend(kind).unwrap();
+            let got = b.infer_batch(&images).unwrap();
+            assert_eq!(got.logits, want.logits, "{} diverged from the executor", b.name());
+            assert!(got.cycles > 0, "{} is cycle-modeled", b.name());
+            assert!(b.steady_cycles().is_some(), "{} reports steady cycles", b.name());
+        }
+    });
+}
+
+#[test]
+fn both_datapaths_agree_through_the_engine() {
+    // the same network compiled for LutFabric must reproduce the
+    // arithmetic logits bit-for-bit (the cross-datapath witness the
+    // `bench --backends all` table prints)
+    let net = Network::synthetic(&mobilenet_v2_small(), 0xD1CE);
+    let mut rng = Rng::new(5);
+    let images = random_images(&mut rng, &net, 3);
+    let mut arith = Engine::builder().network(net.clone()).build().unwrap();
+    let mut lut = Engine::builder()
+        .network(net)
+        .datapath(Datapath::LutFabric)
+        .build()
+        .unwrap();
+    assert_eq!(arith.backend_name(), "executor");
+    assert_eq!(lut.backend_name(), "executor/lut-fabric");
+    assert_eq!(
+        arith.infer_batch(&images).unwrap().logits,
+        lut.infer_batch(&images).unwrap().logits
+    );
+}
+
+#[test]
+fn sharded_backend_reports_counters_and_occupancy() {
+    let net = Network::synthetic(&mobilenet_v2_small(), 0xCAFE);
+    let mut rng = Rng::new(7);
+    let images = random_images(&mut rng, &net, 4);
+    let mut engine = Engine::builder()
+        .network(net)
+        .backend(BackendKind::Sharded { devices: 2 })
+        .build()
+        .unwrap();
+    assert!(engine.backend_name().starts_with("sharded"));
+    let out = engine.infer_batch(&images).unwrap();
+    assert_eq!(out.counters.len(), 2, "one counter record per shard");
+    assert!(out.counters.iter().all(|c| c.fires > 0), "both shards fired");
+    assert!(out.counters[0].link_busy_cycles > 0, "tokens crossed the link");
+    // the trait-level occupancy matches the batch counters (cumulative)
+    assert_eq!(engine.backend().shard_occupancy(), out.counters);
+}
+
+#[test]
+fn backend_factory_builds_independent_equivalent_backends() {
+    let net = Network::synthetic(&mobilenet_v2_small(), 0xFAB);
+    let mut rng = Rng::new(9);
+    let images = random_images(&mut rng, &net, 3);
+    let engine = Engine::builder()
+        .network(net)
+        .backend(BackendKind::Sharded { devices: 2 })
+        .build()
+        .unwrap();
+    let factory = engine.backend_factory(2);
+    let mut b1 = factory().unwrap();
+    let mut b2 = factory().unwrap();
+    let o1 = b1.infer_batch(&images).unwrap();
+    let o2 = b2.infer_batch(&images).unwrap();
+    assert_eq!(o1.logits, o2.logits, "factory backends are equivalent");
+    // independent state: running one twice must not perturb the other
+    let o1b = b1.infer_batch(&images).unwrap();
+    assert_eq!(o1b.logits, o2.logits);
+}
+
+#[test]
+fn folding_choices_never_change_logits() {
+    let net = Network::synthetic(&mobilenet_v2_small(), 0xF01D);
+    let mut rng = Rng::new(13);
+    let images = random_images(&mut rng, &net, 2);
+    let run = |folding: Folding| {
+        let mut e = Engine::builder()
+            .network(net.clone())
+            .folding(folding)
+            .backend(BackendKind::Pipeline)
+            .build()
+            .unwrap();
+        e.infer_batch(&images).unwrap()
+    };
+    let fast = run(Folding::FullyParallel);
+    let slow = run(Folding::Uniform(4));
+    let opt = run(Folding::Optimized(Budget::whole(&U280)));
+    // an over-long explicit vector (arch-level, head included) truncates
+    let explicit = run(Folding::Explicit(FoldConfig { folds: vec![2; 20] }));
+    assert_eq!(fast.logits, slow.logits, "uniform folding changed results");
+    assert_eq!(fast.logits, opt.logits, "optimized folding changed results");
+    assert_eq!(fast.logits, explicit.logits, "explicit folding changed results");
+    assert!(slow.cycles > fast.cycles, "fold 4 must be slower");
+}
+
+#[test]
+fn explicit_fold_vector_too_short_is_loud() {
+    let err = Engine::builder()
+        .network(Network::synthetic(&mobilenet_v2_small(), 2))
+        .folding(Folding::Explicit(FoldConfig { folds: vec![1; 3] }))
+        .build()
+        .unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("explicit fold vector"), "{msg}");
+    assert!(msg.contains("conv layers"), "{msg}");
+}
+
+#[test]
+fn missing_artifacts_without_synthetic_fallback_is_loud() {
+    let a = Artifacts::new("does/not/exist");
+    let err = Engine::builder()
+        .arch(Arch::Small)
+        .artifacts(&a)
+        .build()
+        .unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("or_synthetic"), "error must name the fallback: {msg}");
+    assert!(msg.contains("network.json"), "error must name the missing file: {msg}");
+}
+
+#[test]
+fn missing_artifacts_with_synthetic_fallback_builds() {
+    let a = Artifacts::new("also/not/here");
+    let mut engine = Engine::builder()
+        .arch(Arch::Small)
+        .artifacts(&a)
+        .or_synthetic(7)
+        .backend(BackendKind::Pipeline)
+        .build()
+        .unwrap();
+    assert_eq!(engine.source(), NetworkSource::Synthetic { seed: 7 });
+    assert_eq!(engine.source().label(), "synthetic network");
+    let images = engine.images(2).unwrap();
+    assert_eq!(images.len(), 2);
+    let out = engine.infer_batch(&images).unwrap();
+    assert_eq!(out.logits.len(), 2);
+    // synthetic networks have no ground-truth labels
+    assert!(engine.labeled_test_set().is_err());
+}
+
+#[test]
+fn no_network_source_is_loud() {
+    let err = Engine::builder().build().unwrap_err();
+    assert!(err.to_string().contains("network source"), "{err}");
+}
+
+#[test]
+fn fold_conv_count_mismatch_is_loud() {
+    // the Small arch's optimizer cannot cover the Full network's conv
+    // stages — the builder must refuse instead of slicing past the end
+    let err = Engine::builder()
+        .arch(Arch::Small)
+        .network(Network::synthetic(&mobilenet_v2_full(), 1))
+        .folding(Folding::Optimized(Budget::whole(&U280)))
+        .build()
+        .unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("conv layers"), "{msg}");
+    assert!(msg.contains("different model"), "{msg}");
+}
+
+#[cfg(not(feature = "xla"))]
+#[test]
+fn pjrt_backend_without_artifacts_is_loud() {
+    let engine = Engine::builder().or_synthetic(3).build().unwrap();
+    let err = engine.make_backend(BackendKind::Pjrt { batch: 1 }).unwrap_err();
+    assert!(err.to_string().contains("artifact"), "{err}");
+    // with a directory configured but no xla feature, the stub runtime's
+    // load error surfaces through the same path
+    let engine = Engine::builder()
+        .artifacts(&Artifacts::new("nope"))
+        .or_synthetic(3)
+        .build()
+        .unwrap();
+    let err = engine.make_backend(BackendKind::Pjrt { batch: 1 }).unwrap_err();
+    assert!(err.to_string().contains("xla"), "{err}");
+}
+
+#[test]
+fn executor_backend_rejects_misshapen_images() {
+    let mut engine = Engine::builder().or_synthetic(11).build().unwrap();
+    let err = engine.infer_batch(&[vec![0i32; 3]]).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("expects"), "error names the expected geometry: {msg}");
+}
+
+#[test]
+fn sharded_backend_rejects_zero_devices() {
+    let engine = Engine::builder().or_synthetic(21).build().unwrap();
+    let err = engine.make_backend(BackendKind::Sharded { devices: 0 }).unwrap_err();
+    assert!(err.to_string().contains("at least 1 device"), "{err}");
+}
+
+#[test]
+fn coordinator_bounces_misshapen_images_at_submit() {
+    // a malformed request must not reach a worker, where it would fail
+    // a whole co-batched dispatch and force a backend rebuild
+    let net = Network::synthetic(&mobilenet_v2_small(), 0xBAD);
+    let mut rng = Rng::new(17);
+    let images = random_images(&mut rng, &net, 2);
+    let engine = Engine::builder().network(net).build().unwrap();
+    let coord = Coordinator::start(
+        &engine,
+        ServeConfig { workers: 1, max_batch: 4, ..Default::default() },
+    )
+    .unwrap();
+    let err = coord.submit(vec![0i32; 5]).unwrap_err();
+    assert!(err.to_string().contains("expects"), "{err}");
+    // well-formed requests still serve after the bounce
+    let ticket = coord.submit(images[0].clone()).unwrap();
+    assert!(ticket.wait().is_ok());
+    coord.shutdown();
+}
+
+#[test]
+fn backend_kind_labels_are_stable() {
+    assert_eq!(BackendKind::Reference.label(), "executor");
+    assert_eq!(BackendKind::Pipeline.label(), "pipeline");
+    assert_eq!(BackendKind::Sharded { devices: 3 }.label(), "sharded x3");
+    assert_eq!(BackendKind::Pjrt { batch: 8 }.label(), "pjrt b8");
+}

@@ -3,10 +3,9 @@
 //! folding invariants. Requires `make artifacts` (skips gracefully if the
 //! artifacts are missing so `cargo test` works on a fresh checkout).
 
-use std::sync::Arc;
-
-use lutmul::coordinator::{argmax, run_batch, Backend, Coordinator, ServeConfig};
+use lutmul::coordinator::{argmax, Coordinator, ServeConfig};
 use lutmul::dataflow::{FoldConfig, Pipeline};
+use lutmul::engine::{BackendKind, Engine};
 use lutmul::fabric::lutmul::ConstMultiplier;
 use lutmul::graph::executor::{decode_test_images, Datapath, Executor, Tensor};
 use lutmul::graph::network::Network;
@@ -120,11 +119,16 @@ fn coordinator_serves_correct_results() {
         eprintln!("skipping: artifacts not built");
         return;
     };
-    let net = Arc::new(net);
+    let engine = Engine::builder()
+        .network(net.clone())
+        .backend(BackendKind::Reference)
+        .build()
+        .unwrap();
     let coord = Coordinator::start(
-        net.clone(),
-        ServeConfig { workers: 2, max_batch: 4, backend: Backend::Reference, ..Default::default() },
-    );
+        &engine,
+        ServeConfig { workers: 2, max_batch: 4, ..Default::default() },
+    )
+    .unwrap();
     let ex = Executor::new(&net, Datapath::Arithmetic);
     let n = 24;
     let tickets: Vec<_> =
@@ -146,15 +150,17 @@ fn coordinator_batches_requests() {
         eprintln!("skipping: artifacts not built");
         return;
     };
+    let engine = Engine::builder().network(net).build().unwrap();
     let coord = Coordinator::start(
-        Arc::new(net),
+        &engine,
         ServeConfig {
             workers: 1,
             max_batch: 8,
             max_wait: std::time::Duration::from_millis(5),
             ..Default::default()
         },
-    );
+    )
+    .unwrap();
     // fire a burst; all must complete despite a single worker
     let tickets: Vec<_> =
         (0..64).map(|i| coord.submit(images[i % images.len()].clone()).unwrap()).collect();
@@ -166,18 +172,33 @@ fn coordinator_batches_requests() {
 }
 
 #[test]
-fn run_batch_backends_agree() {
+fn engine_backends_agree_on_trained_net() {
     let Some((net, images, _)) = artifacts() else {
         eprintln!("skipping: artifacts not built");
         return;
     };
     let imgs = &images[..3];
-    let a = run_batch(&net, Backend::Reference, imgs).unwrap();
-    let b = run_batch(&net, Backend::Simulator, imgs).unwrap();
+    let mut engine = Engine::builder()
+        .network(net)
+        .backend(BackendKind::Reference)
+        .build()
+        .unwrap();
+    let a = engine.infer_batch(imgs).unwrap().logits;
+    let b = engine
+        .make_backend(BackendKind::Pipeline)
+        .unwrap()
+        .infer_batch(imgs)
+        .unwrap()
+        .logits;
     assert_eq!(a, b);
     // the sharded chain (2 simulated devices over links) agrees too —
     // on the trained net this exercises residual-balanced cut snapping
-    let c = run_batch(&net, Backend::Sharded { devices: 2 }, imgs).unwrap();
+    let c = engine
+        .make_backend(BackendKind::Sharded { devices: 2 })
+        .unwrap()
+        .infer_batch(imgs)
+        .unwrap()
+        .logits;
     assert_eq!(a, c);
 }
 

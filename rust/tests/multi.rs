@@ -6,12 +6,11 @@
 //! residual bypasses, where cuts must snap around the tee..join region —
 //! and the measured-vs-analytic steady-state FPS check on compute-bound
 //! configurations. The serving tier rides the same machinery through
-//! `Backend::Sharded`.
+//! the engine's `BackendKind::Sharded` (DESIGN.md S19).
 
-use std::sync::Arc;
-
-use lutmul::coordinator::{Backend, Coordinator, ServeConfig};
+use lutmul::coordinator::{Coordinator, ServeConfig};
 use lutmul::dataflow::multi::{partition, LinkModel};
+use lutmul::engine::{BackendKind, Engine};
 use lutmul::dataflow::{FoldConfig, Pipeline, ShardChain};
 use lutmul::fabric::device::U280;
 use lutmul::graph::executor::{Datapath, Executor, Tensor};
@@ -21,56 +20,8 @@ use lutmul::graph::{mobilenet_v2_small, ArchSpec, LayerSpec};
 use lutmul::synth::fold::{optimize_folding, Budget};
 use lutmul::util::prop::{self, Rng};
 
-/// Random 4-bit conv stack + 8-bit classifier head (the shape format
-/// `Network::synthetic` lowers), as in `tests/plan.rs`.
-fn random_spec(rng: &mut Rng) -> ArchSpec {
-    let input_hw = *rng.choose(&[5usize, 7, 9, 11, 16]);
-    let input_ch = 1 + rng.below(3) as usize;
-    let mut layers = Vec::new();
-    let (mut cin, mut hw) = (input_ch, input_hw);
-    let n_layers = 3 + rng.below(3) as usize;
-    for i in 0..n_layers {
-        let kind = *rng.choose(&[ConvKind::Std, ConvKind::Pw, ConvKind::Dw]);
-        let (k, stride) = match kind {
-            ConvKind::Pw => (1, 1),
-            _ => (3, 1 + rng.below(2) as usize),
-        };
-        let cout = match kind {
-            ConvKind::Dw => cin,
-            _ => 1 + rng.below(6) as usize,
-        };
-        layers.push(LayerSpec {
-            name: format!("l{i}"),
-            kind,
-            cin,
-            cout,
-            k,
-            stride,
-            in_hw: hw,
-            w_bits: 4,
-            a_bits: 4,
-        });
-        hw = hw.div_ceil(stride);
-        cin = cout;
-    }
-    layers.push(LayerSpec {
-        name: "fc".into(),
-        kind: ConvKind::Pw,
-        cin,
-        cout: 3,
-        k: 1,
-        stride: 1,
-        in_hw: 1,
-        w_bits: 8,
-        a_bits: 8,
-    });
-    ArchSpec { name: "random".into(), input_hw, input_ch, layers }
-}
-
-fn random_images(rng: &mut Rng, net: &Network, n: usize) -> Vec<Vec<i32>> {
-    let (s, c) = (net.meta.image_size, net.meta.in_ch);
-    (0..n).map(|_| rng.vec_i32(s * s * c, 0, 15)).collect()
-}
+mod common;
+use common::{random_images, random_spec};
 
 /// A small network with a residual bypass: conv, tee, two convs, join,
 /// strided conv, pool, dense — the shape whose mid-bypass boundaries a
@@ -294,22 +245,25 @@ fn slow_links_throttle_the_executable_chain_too() {
 
 #[test]
 fn sharded_backend_serves_bit_exact_with_shard_metrics() {
-    // Backend::Sharded end to end through the coordinator: results match
-    // the reference executor and the metrics expose per-shard counters
-    let net = Arc::new(Network::synthetic(&mobilenet_v2_small(), 42));
+    // BackendKind::Sharded end to end through the coordinator: results
+    // match the reference executor and the metrics expose per-shard
+    // counters (workers drive boxed InferenceBackends — there is no
+    // backend-specific code left in the coordinator)
+    let net = Network::synthetic(&mobilenet_v2_small(), 42);
     let ex = Executor::new(&net, Datapath::Arithmetic);
     let io = net.io();
     let mut rng = Rng::new(99);
     let images = random_images(&mut rng, &net, 8);
+    let engine = Engine::builder()
+        .network(net)
+        .backend(BackendKind::Sharded { devices: 2 })
+        .build()
+        .unwrap();
     let coord = Coordinator::start(
-        net.clone(),
-        ServeConfig {
-            backend: Backend::Sharded { devices: 2 },
-            workers: 1,
-            max_batch: 4,
-            ..Default::default()
-        },
-    );
+        &engine,
+        ServeConfig { workers: 1, max_batch: 4, ..Default::default() },
+    )
+    .unwrap();
     let tickets: Vec<_> = images
         .iter()
         .map(|img| coord.submit(img.clone()).expect("queue accepts"))
