@@ -4,7 +4,7 @@
 
 PYTHON ?= python3
 
-.PHONY: artifacts artifacts-fig2 test-python test-rust bench-smoke multi-smoke engine-smoke doc lint
+.PHONY: artifacts artifacts-fig2 test-python test-rust bench-smoke multi-smoke engine-smoke kernel-smoke bench-json doc lint
 
 artifacts:
 	mkdir -p artifacts
@@ -44,6 +44,28 @@ multi-smoke:
 # it. Synthetic fallback: runs on a fresh checkout without artifacts.
 engine-smoke:
 	cd rust && cargo run --release -- bench --backends all --n 6
+
+# Activation-major kernel smoke (DESIGN.md S20, EXPERIMENTS.md E13):
+# the LUT-GEMM table-layout gate (activation-major >= 1.2x MAC-major
+# single-thread under --smoke's noise floor; the full
+# `cargo bench --bench bench_kernels` gates >= 1.5x), bit-exactness
+# across every table layout, the counting-allocator zero-allocation
+# test, the arena property suite, and the cross-backend bit-identity
+# table. Exits nonzero on any regression or divergence, so CI gates on
+# it.
+kernel-smoke:
+	cd rust && cargo bench --bench bench_kernels -- --smoke
+	cd rust && cargo test -q --test zero_alloc --test kernels_arena
+	cd rust && cargo run --release -- bench --backends all --n 6
+
+# Machine-readable perf trajectory (EXPERIMENTS.md E13): one
+# {backend, datapath, images_per_s, ns_per_image, bit_exact} row per
+# backend, written to BENCH_kernels.json at the repo root. Regenerate
+# after any kernel/backend perf change and commit the file so the
+# trajectory is tracked in-tree.
+bench-json:
+	cd rust && cargo run --release -- bench --backends all --n 8 --json > ../BENCH_kernels.json
+	@echo "wrote BENCH_kernels.json"
 
 # API docs with rustdoc warnings (dangling doc links) denied.
 doc:

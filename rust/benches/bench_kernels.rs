@@ -1,0 +1,94 @@
+//! Bench — activation-major LUT-GEMM kernels vs the MAC-major layout
+//! (DESIGN.md S20, EXPERIMENTS.md E13): single-thread per-image
+//! throughput of the compiled `LutTables` kernels in both table
+//! layouts, plus the per-MAC LUT6_2 readout and the arithmetic datapath
+//! for context. No artifacts needed: runs on a synthetic network with
+//! the trained `mobilenet_v2_small` shape, through a persistent
+//! `ScratchPool` (the steady-state serving configuration — zero
+//! per-image allocation).
+//!
+//! Acceptance lines printed at the end (the process exits nonzero on
+//! FAIL, so CI can gate on the bench):
+//!  * every layout/datapath must be bit-identical on every image;
+//!  * the activation-major kernels must deliver >= 1.5x the MAC-major
+//!    per-image throughput single-threaded (>= 1.2x under `--smoke`,
+//!    where one-iteration timings on shared CI runners are noisy).
+//!
+//! Run: `cargo bench --bench bench_kernels` (`-- --smoke` for the
+//! CI-sized run, also reachable as `make kernel-smoke`).
+
+use lutmul::graph::executor::{Datapath, Executor, Tensor};
+use lutmul::graph::mobilenet_v2_small;
+use lutmul::graph::network::Network;
+use lutmul::graph::plan::NetworkPlan;
+use lutmul::graph::ScratchPool;
+use lutmul::util::bench::{bench, per_second};
+use lutmul::util::prop::Rng;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let net = Network::synthetic(&mobilenet_v2_small(), 0x5EED_CAFE);
+    let io = net.io();
+    let (size, ch) = (io.image_size, io.in_ch);
+    let mut rng = Rng::new(2);
+    let batch = 8usize;
+    let images: Vec<Tensor> = (0..batch)
+        .map(|_| Tensor::from_hwc(size, size, ch, rng.vec_i32(size * size * ch, 0, 15)))
+        .collect();
+    println!(
+        "synthetic mobilenet_v2_small ({size}x{size}x{ch}), single thread, batch {batch}{}",
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    // every layout and datapath over the same network
+    let arith = Executor::new(&net, Datapath::Arithmetic);
+    let act = Executor::new(&net, Datapath::LutFabric);
+    let mac = Executor::from_plan(NetworkPlan::compile_mac_major(&net, Datapath::LutFabric));
+    let direct = Executor::from_plan(NetworkPlan::compile_direct(&net, Datapath::LutFabric));
+
+    // --- bit-exactness across layouts and datapaths ---------------------
+    let want = arith.run_batch_with_threads(&images, 1);
+    let mut diverged = 0usize;
+    for (name, ex) in [("act-major", &act), ("mac-major", &mac), ("direct", &direct)] {
+        if ex.run_batch_with_threads(&images, 1) != want {
+            println!("DIVERGED: LutFabric {name} disagrees with Arithmetic");
+            diverged += 1;
+        }
+    }
+    println!("bit-exactness: {}/3 LUT layouts match the arithmetic datapath", 3 - diverged);
+
+    // --- single-thread throughput per layout ----------------------------
+    // persistent arenas: the steady-state serving configuration
+    let iters = if smoke { 2 } else { 12 };
+    let mut time = |name: &str, ex: &Executor| {
+        let mut pool = ScratchPool::new();
+        let mut out = Vec::new();
+        ex.run_batch_into(&images, 1, &mut pool, &mut out); // warm the arena
+        let r = bench(name, iters, || {
+            ex.run_batch_into(&images, 1, &mut pool, &mut out);
+            out.len()
+        });
+        per_second(batch, &r)
+    };
+    println!("\nsingle-thread images/s (persistent arena, batch {batch}):");
+    let ips_arith = time("Arithmetic  (compiled plan)          ", &arith);
+    let ips_act = time("LutFabric   act-major tables (LUT-GEMM)", &act);
+    let ips_mac = time("LutFabric   mac-major tables (pre-PR)  ", &mac);
+    let ips_direct = time("LutFabric   per-MAC LUT6_2 readout     ", &direct);
+    println!("    Arithmetic {ips_arith:.0} | act-major {ips_act:.0} | mac-major {ips_mac:.0} | direct {ips_direct:.0} img/s");
+
+    // --- acceptance lines ----------------------------------------------
+    let speedup = ips_act / ips_mac;
+    let target = if smoke { 1.2 } else { 1.5 };
+    let layout_ok = speedup >= target;
+    println!(
+        "\nactivation-major vs MAC-major tables: {speedup:.2}x img/s single-thread \
+         (target >= {target}x): {}",
+        if layout_ok { "PASS" } else { "FAIL" }
+    );
+    let memo = ips_act / ips_direct;
+    println!("activation-major vs per-MAC readout: {memo:.2}x (informational)");
+    if diverged > 0 || !layout_ok {
+        std::process::exit(1);
+    }
+}

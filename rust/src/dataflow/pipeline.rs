@@ -82,7 +82,7 @@ impl FoldConfig {
 struct ConvStage {
     gen: ConvGenerator,
     /// The compiled layer plan — the same record the reference executor
-    /// runs (`kernels::patch_out` is the stage body), so the simulator
+    /// runs (`kernels::patch_out_into` is the stage body), so the simulator
     /// consumes plan weights/thresholds/geometry instead of re-deriving
     /// them from `Network`.
     plan: ConvPlan,
@@ -529,7 +529,10 @@ impl Pipeline {
                                 "conv fired with an empty patch queue",
                             ));
                         };
-                        let out = kernels::patch_out(&cs.plan, &patch);
+                        // activation-major kernel body; the token Vec is
+                        // owned by the FIFO, so only it is allocated
+                        let mut out = vec![0i32; cs.plan.geom.cout];
+                        kernels::patch_out_into(&cs.plan, &patch, &mut out);
                         let ok = self.fifos[outputs[0]].try_push(out);
                         debug_assert!(ok);
                         cs.busy_until = cycle + cs.fold as u64;
@@ -624,13 +627,13 @@ impl Pipeline {
             }
             StageKind::Dense(ds) => {
                 if let Some(pooled) = self.fifos[inputs[0]].pop() {
-                    if pooled.len() != ds.w_codes.len() {
+                    if pooled.len() != ds.cin {
                         return Err(SimError::at(
                             &ds.name,
                             cycle,
                             format!(
                                 "dense head expects {} pooled channels, got {}",
-                                ds.w_codes.len(),
+                                ds.cin,
                                 pooled.len()
                             ),
                         ));
@@ -1235,7 +1238,8 @@ mod tests {
         let PlanOp::Dense(dp) = &mut plan.ops[n_ops - 1] else {
             panic!("random_net ends in a dense head");
         };
-        dp.w_codes.truncate(2);
+        dp.wflat.truncate(2 * dp.cout);
+        dp.cin = 2;
         let mut pipe = Pipeline::from_plan(&plan, &FoldConfig::fully_parallel(6), 8);
         let err = pipe.run(&random_images(1, 8, 3, 6)).unwrap_err();
         assert_eq!(err.stage, "fc");

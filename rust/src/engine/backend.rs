@@ -22,6 +22,7 @@ use crate::dataflow::multi::LinkModel;
 use crate::dataflow::{FoldConfig, Pipeline, ShardChain, ShardCounters};
 use crate::graph::executor::{Executor, Tensor};
 use crate::graph::plan::{IoGeom, NetworkPlan};
+use crate::graph::scratch::ScratchPool;
 use crate::runtime::Runtime;
 
 /// Uniform result of one dispatched batch, whatever backend ran it.
@@ -69,12 +70,17 @@ pub trait InferenceBackend: Send {
 }
 
 /// The reference integer executor behind the uniform contract
-/// (spec-level, batch-major across `threads` cores).
+/// (spec-level, batch-major across `threads` cores). Owns a persistent
+/// [`ScratchPool`] of per-thread tensor arenas (DESIGN.md S20), so a
+/// serving worker's steady-state batches run the zero-allocation kernel
+/// path — working buffers are sized once and reused for the backend's
+/// lifetime.
 pub struct ExecutorBackend {
     ex: Executor,
     io: IoGeom,
     threads: usize,
     name: &'static str,
+    pool: ScratchPool,
 }
 
 impl ExecutorBackend {
@@ -87,7 +93,13 @@ impl ExecutorBackend {
         let io = plan.io;
         // the datapath lives in the plan's multiplier arrays (S17)
         let name = if plan.lut_count() > 0 { "executor/lut-fabric" } else { "executor" };
-        Self { ex: Executor::shared(plan), io, threads: threads.max(1), name }
+        Self {
+            ex: Executor::shared(plan),
+            io,
+            threads: threads.max(1),
+            name,
+            pool: ScratchPool::new(),
+        }
     }
 }
 
@@ -100,7 +112,9 @@ impl InferenceBackend for ExecutorBackend {
     /// per image — the price of the uniform borrowed-batch contract
     /// (cycle-modeled backends stream the same borrowed images with no
     /// copy). The per-layer work of a batch dwarfs it; see the
-    /// EXPERIMENTS.md §Perf PR 4 row.
+    /// EXPERIMENTS.md §Perf PR 4 row. Working memory comes from the
+    /// backend's persistent arena pool: only this copy and the returned
+    /// logits are allocated per batch.
     fn infer_batch(&mut self, images: &[Vec<i32>]) -> Result<BatchOutput> {
         let (s, c) = (self.io.image_size, self.io.in_ch);
         let px = s * s * c;
@@ -113,11 +127,9 @@ impl InferenceBackend for ExecutorBackend {
             );
             tensors.push(Tensor::from_hwc(s, s, c, img.clone()));
         }
-        Ok(BatchOutput {
-            logits: self.ex.run_batch_with_threads(&tensors, self.threads),
-            cycles: 0,
-            counters: Vec::new(),
-        })
+        let mut logits = Vec::with_capacity(images.len());
+        self.ex.run_batch_into(&tensors, self.threads, &mut self.pool, &mut logits);
+        Ok(BatchOutput { logits, cycles: 0, counters: Vec::new() })
     }
 }
 

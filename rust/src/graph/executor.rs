@@ -1,12 +1,23 @@
 //! Reference integer executor — the spec-level engine of a streamlined
-//! network (DESIGN.md S5/S17).
+//! network (DESIGN.md S5/S17/S20).
 //!
 //! `Executor::new` compiles the network ONCE into a
 //! [`NetworkPlan`](super::plan::NetworkPlan) — flattened weights,
 //! im2row tap offsets with an interior/border split, threshold tables,
-//! and (on the `LutFabric` datapath) per-multiplier product tables read
-//! out of the simulated LUT6_2 primitives at build time — then executes
-//! the kernel functions of [`graph::kernels`](super::kernels) over it.
+//! and (on the `LutFabric` datapath) activation-major product tables
+//! read out of the simulated LUT6_2 primitives at build time — then
+//! executes the kernel functions of [`graph::kernels`](super::kernels)
+//! over it.
+//!
+//! Execution is **zero-allocation in steady state** (DESIGN.md S20):
+//! every image runs inside a caller-owned [`Scratch`] arena — a
+//! ping-pong pair of activation buffers sized from the plan's largest
+//! layer footprint, plus residual/pool/dense scratch — via the
+//! kernels' `_into` variants. [`run_batch_into`](Executor::run_batch_into)
+//! threads one arena per worker thread through the batch, so a
+//! persistent serving backend re-allocates nothing after its first
+//! batch (`rust/tests/zero_alloc.rs` asserts this with a counting
+//! allocator).
 //!
 //! The executor serves behind the engine's uniform backend contract
 //! (`engine::ExecutorBackend`, DESIGN.md S19); the serving coordinator
@@ -17,10 +28,12 @@
 //!    serving coordinator).
 //!  * `LutFabric`: every 4-bit multiplication comes from simulated
 //!    LUT6_2 primitives built from Figure 5 INIT vectors — memoized at
-//!    plan-build time, bit-identical to reading the fabric per MAC
-//!    (`NetworkPlan::compile_direct` keeps the per-MAC readout as the
-//!    baseline). 8-bit layers (first/last) fall back to arithmetic,
-//!    mirroring the paper where those layers use DSP packing.
+//!    plan-build time into activation-major tables, bit-identical to
+//!    reading the fabric per MAC (`NetworkPlan::compile_direct` keeps
+//!    the per-MAC readout, `NetworkPlan::compile_mac_major` the old
+//!    table layout, as baselines). 8-bit layers (first/last) fall back
+//!    to arithmetic, mirroring the paper where those layers use DSP
+//!    packing.
 //!
 //! Both paths must agree bit-for-bit with each other and with the JAX
 //! golden model (`python/compile/model.py::forward_int`).
@@ -28,6 +41,7 @@
 use super::kernels;
 use super::network::Network;
 use super::plan::{NetworkPlan, PlanOp};
+use super::scratch::{Scratch, ScratchPool};
 
 pub use super::plan::Datapath;
 
@@ -77,14 +91,16 @@ pub struct Executor {
 }
 
 impl Executor {
-    /// Compile `net` for `datapath` (memoized LUT product tables on
-    /// `LutFabric`) and wrap the plan in batch drivers.
+    /// Compile `net` for `datapath` (memoized activation-major LUT
+    /// product tables on `LutFabric`) and wrap the plan in batch
+    /// drivers.
     pub fn new(net: &Network, datapath: Datapath) -> Self {
         Self::from_plan(NetworkPlan::compile(net, datapath))
     }
 
     /// Run a pre-compiled plan — e.g. `NetworkPlan::compile_direct`'s
-    /// per-MAC LUT-readout baseline (bench + equivalence tests).
+    /// per-MAC LUT-readout baseline or `compile_mac_major`'s old table
+    /// layout (bench + equivalence tests).
     pub fn from_plan(plan: NetworkPlan) -> Self {
         Self::shared(std::sync::Arc::new(plan))
     }
@@ -101,23 +117,28 @@ impl Executor {
         &self.plan
     }
 
-    /// Run one image (`[H, W, C]` uint8 codes) to logits.
+    /// Run one image (`[H, W, C]` uint8 codes) to logits (convenience:
+    /// allocates a fresh arena — the fresh-allocation reference path
+    /// the arena tests compare against).
     pub fn execute(&self, image: &Tensor) -> Vec<f32> {
-        self.execute_traced(image, &mut |_, _| {})
+        let nc = self.plan.dense_cout().expect("network has no dense head");
+        let mut scratch = Scratch::for_plan(&self.plan);
+        let mut logits = vec![0.0f32; nc];
+        self.run_image(image, &mut scratch, None, &mut logits);
+        logits
     }
 
-    /// Batch-major fast path (DESIGN.md S5, EXPERIMENTS.md E9): run a
-    /// whole batch to logits, bit-exact with `images.len()` independent
-    /// [`execute`](Self::execute) calls.
-    ///
-    /// The batch is split into one contiguous chunk per available core
-    /// (scoped threads; batch 1 never spawns), and each chunk executes
-    /// *op-major*: every compiled layer plan runs across all of the
-    /// chunk's images before the next layer starts, so the plan's
-    /// flattened weights, thresholds and LUT product tables are fetched
-    /// once per chunk instead of once per image. This is what turns the
-    /// coordinator's dynamic batches into arithmetic throughput rather
-    /// than just queueing fairness.
+    /// Run one image inside a caller-owned arena, writing the logits
+    /// into `logits` (`[dense_cout]`) — the zero-allocation single-image
+    /// entry point. The arena is grown to fit the plan if needed and
+    /// may carry arbitrary garbage from previous images or other plans.
+    pub fn execute_into(&self, image: &Tensor, scratch: &mut Scratch, logits: &mut [f32]) {
+        self.run_image(image, scratch, None, logits);
+    }
+
+    /// Batch-major fast path (DESIGN.md S5/S20, EXPERIMENTS.md E9): run
+    /// a whole batch to logits, bit-exact with `images.len()`
+    /// independent [`execute`](Self::execute) calls.
     pub fn run_batch(&self, images: &[Tensor]) -> Vec<Vec<f32>> {
         let cores =
             std::thread::available_parallelism().map(std::num::NonZeroUsize::get).unwrap_or(1);
@@ -126,109 +147,162 @@ impl Executor {
 
     /// [`run_batch`](Self::run_batch) with an explicit thread cap. The
     /// coordinator divides the machine's cores across its worker pool so
-    /// concurrent workers don't oversubscribe the CPU.
+    /// concurrent workers don't oversubscribe the CPU. (Convenience over
+    /// [`run_batch_into`](Self::run_batch_into) with a throwaway arena
+    /// pool — persistent callers should hold their own pool.)
     pub fn run_batch_with_threads(&self, images: &[Tensor], max_threads: usize) -> Vec<Vec<f32>> {
-        match images.len() {
-            0 => Vec::new(),
-            1 => vec![self.execute(&images[0])],
-            n => {
-                let threads = max_threads.max(1).min(n);
-                if threads <= 1 {
-                    return self.run_chunk(images);
-                }
-                let per = n.div_ceil(threads);
-                std::thread::scope(|s| {
-                    let handles: Vec<_> = images
-                        .chunks(per)
-                        .map(|chunk| s.spawn(move || self.run_chunk(chunk)))
-                        .collect();
-                    handles
-                        .into_iter()
-                        .flat_map(|h| h.join().expect("batch worker panicked"))
-                        .collect()
-                })
-            }
-        }
+        let mut pool = ScratchPool::new();
+        let mut out = Vec::new();
+        self.run_batch_into(images, max_threads, &mut pool, &mut out);
+        out
     }
 
-    /// Op-major execution of one contiguous chunk of the batch. The
-    /// per-image arithmetic is the same kernel code as `execute_traced`,
-    /// so bit-exactness vs the sequential path holds by construction;
-    /// only the loop nest order (layers outer, images inner) and the
-    /// amortized per-layer plan lookups differ.
-    fn run_chunk(&self, images: &[Tensor]) -> Vec<Vec<f32>> {
+    /// The batch engine: split the batch into one contiguous chunk per
+    /// thread (scoped threads; batch 1 never spawns), give each chunk a
+    /// persistent [`Scratch`] arena from `pool`, and run every image
+    /// through the kernels' `_into` variants. `out` is reused in place
+    /// (inner `Vec`s keep their capacity), so a caller that holds its
+    /// pool across batches — the serving backend — performs **zero heap
+    /// allocation per image in steady state** on the single-thread path,
+    /// and only the thread-spawn bookkeeping otherwise
+    /// (`rust/tests/zero_alloc.rs`).
+    pub fn run_batch_into(
+        &self,
+        images: &[Tensor],
+        max_threads: usize,
+        pool: &mut ScratchPool,
+        out: &mut Vec<Vec<f32>>,
+    ) {
         let n = images.len();
-        let mut xs: Vec<Tensor> = images.to_vec();
-        let mut res_stacks: Vec<Vec<Tensor>> = vec![Vec::new(); n];
-        let mut pooled: Vec<Vec<i32>> = vec![Vec::new(); n];
-        let mut logits: Vec<Vec<f32>> = vec![Vec::new(); n];
-        for op in &self.plan.ops {
-            match op {
-                PlanOp::Input => {}
-                PlanOp::Conv(cp) => {
-                    for x in xs.iter_mut() {
-                        *x = kernels::conv(cp, x);
-                    }
-                }
-                PlanOp::ResPush { .. } => {
-                    for (i, x) in xs.iter().enumerate() {
-                        res_stacks[i].push(x.clone());
-                    }
-                }
-                PlanOp::ResAdd { bits } => {
-                    for (i, x) in xs.iter_mut().enumerate() {
-                        let saved = res_stacks[i].pop().expect("res_add without res_push");
-                        kernels::res_add(x, &saved, *bits);
-                    }
-                }
-                PlanOp::PoolSum { .. } => {
-                    for (i, x) in xs.iter().enumerate() {
-                        pooled[i] = kernels::pool_sum(x);
-                    }
-                }
-                PlanOp::Dense(dp) => {
-                    for (i, p) in pooled.iter().enumerate() {
-                        logits[i] = kernels::dense(dp, p);
-                    }
-                }
-            }
+        out.truncate(n);
+        while out.len() < n {
+            out.push(Vec::new());
         }
-        assert!(logits.iter().all(|l| !l.is_empty()), "network has no dense head");
-        logits
+        if n == 0 {
+            return;
+        }
+        let nc = self.plan.dense_cout().expect("network has no dense head");
+        for o in out.iter_mut() {
+            o.clear();
+            o.resize(nc, 0.0);
+        }
+        let threads = max_threads.max(1).min(n);
+        pool.ensure(threads, &self.plan);
+        if threads == 1 {
+            self.run_chunk(images, &mut pool.slots[0], out);
+            return;
+        }
+        let per = n.div_ceil(threads);
+        std::thread::scope(|s| {
+            let mut slots = pool.slots.as_mut_slice();
+            let mut outs = out.as_mut_slice();
+            for chunk in images.chunks(per) {
+                let (o, outs_rest) = outs.split_at_mut(chunk.len());
+                outs = outs_rest;
+                let (slot, slots_rest) = slots.split_at_mut(1);
+                slots = slots_rest;
+                let scratch = &mut slot[0];
+                s.spawn(move || self.run_chunk(chunk, scratch, o));
+            }
+        });
+    }
+
+    /// One thread's contiguous chunk of the batch, image-major over one
+    /// arena: per image the kernels ping-pong between the arena's two
+    /// activation buffers, so the chunk's working set is two buffers
+    /// plus the shared read-only plan — no per-image or per-layer
+    /// allocation. (Bit-exactness vs the sequential path holds by
+    /// construction: it is the same `run_image` body.)
+    fn run_chunk(&self, images: &[Tensor], scratch: &mut Scratch, out: &mut [Vec<f32>]) {
+        for (img, o) in images.iter().zip(out.iter_mut()) {
+            self.run_image(img, scratch, None, o);
+        }
     }
 
     /// Run one image, invoking `trace(op_index, tensor)` after every op
     /// that produces an activation tensor (used to cross-check the
     /// dataflow simulator stage by stage; plan ops are index-aligned
-    /// with `Network::ops`).
+    /// with `Network::ops`). The traced tensors are materialized copies
+    /// of the arena buffers — the debug path pays that copy, the hot
+    /// paths never trace.
     pub fn execute_traced(
         &self,
         image: &Tensor,
         trace: &mut dyn FnMut(usize, &Tensor),
     ) -> Vec<f32> {
-        let mut x = image.clone();
-        let mut res_stack: Vec<Tensor> = Vec::new();
-        let mut pooled: Vec<i32> = Vec::new();
-        let mut logits: Vec<f32> = Vec::new();
+        let nc = self.plan.dense_cout().expect("network has no dense head");
+        let mut scratch = Scratch::for_plan(&self.plan);
+        let mut logits = vec![0.0f32; nc];
+        self.run_image(image, &mut scratch, Some(trace), &mut logits);
+        logits
+    }
+
+    /// The one execution body every public entry point drives: walk the
+    /// compiled ops over the arena's ping-pong buffers, writing the
+    /// logits into `logits` (`[dense_cout]`).
+    fn run_image(
+        &self,
+        image: &Tensor,
+        s: &mut Scratch,
+        mut trace: Option<&mut dyn FnMut(usize, &Tensor)>,
+        logits: &mut [f32],
+    ) {
+        let io = self.plan.io;
+        assert_eq!(
+            (image.h, image.w, image.c),
+            (io.image_size, io.image_size, io.in_ch),
+            "input image shape disagrees with the compiled plan"
+        );
+        s.ensure(&self.plan);
+        let (mut h, mut w, mut c) = (image.h, image.w, image.c);
+        let mut len = h * w * c;
+        s.ping[..len].copy_from_slice(&image.data);
+        let mut res_depth = 0usize;
+        let mut pooled_ch = 0usize;
+        let mut wrote_logits = false;
         for (oi, op) in self.plan.ops.iter().enumerate() {
             match op {
                 PlanOp::Input => {}
                 PlanOp::Conv(cp) => {
-                    x = kernels::conv(cp, &x);
-                    trace(oi, &x);
+                    let g = cp.geom;
+                    let out_len = g.out_pixels() * g.cout;
+                    kernels::conv_into(cp, &s.ping[..len], &mut s.pong[..out_len]);
+                    std::mem::swap(&mut s.ping, &mut s.pong);
+                    (h, w, c) = (g.out_h(), g.out_w(), g.cout);
+                    len = out_len;
+                    if let Some(t) = &mut trace {
+                        t(oi, &Tensor::from_hwc(h, w, c, s.ping[..len].to_vec()));
+                    }
                 }
-                PlanOp::ResPush { .. } => res_stack.push(x.clone()),
+                PlanOp::ResPush { .. } => {
+                    let slot = &mut s.res[res_depth];
+                    slot.clear();
+                    slot.extend_from_slice(&s.ping[..len]);
+                    res_depth += 1;
+                }
                 PlanOp::ResAdd { bits } => {
-                    let saved = res_stack.pop().expect("res_add without res_push");
-                    kernels::res_add(&mut x, &saved, *bits);
-                    trace(oi, &x);
+                    res_depth = res_depth.checked_sub(1).expect("res_add without res_push");
+                    kernels::res_add_into(&mut s.ping[..len], &s.res[res_depth], *bits);
+                    if let Some(t) = &mut trace {
+                        t(oi, &Tensor::from_hwc(h, w, c, s.ping[..len].to_vec()));
+                    }
                 }
-                PlanOp::PoolSum { .. } => pooled = kernels::pool_sum(&x),
-                PlanOp::Dense(dp) => logits = kernels::dense(dp, &pooled),
+                PlanOp::PoolSum { .. } => {
+                    kernels::pool_sum_into(&s.ping[..len], &mut s.pooled[..c]);
+                    pooled_ch = c;
+                }
+                PlanOp::Dense(dp) => {
+                    kernels::dense_into(
+                        dp,
+                        &s.pooled[..pooled_ch],
+                        &mut s.acc64[..dp.cout],
+                        logits,
+                    );
+                    wrote_logits = true;
+                }
             }
         }
-        assert!(!logits.is_empty(), "network has no dense head");
-        logits
+        assert!(wrote_logits, "network has no dense head");
     }
 }
 
@@ -334,16 +408,20 @@ mod tests {
 
     #[test]
     fn direct_lut_readout_matches_compiled_tables() {
-        // the memoized product tables ARE the per-MAC fabric readout
+        // the memoized product tables ARE the per-MAC fabric readout —
+        // in both table layouts
         let net = net_with_conv(ConvKind::Std, 2, 3, 3, 1);
         let compiled = Executor::new(&net, Datapath::LutFabric);
         let direct = Executor::from_plan(NetworkPlan::compile_direct(&net, Datapath::LutFabric));
+        let mac = Executor::from_plan(NetworkPlan::compile_mac_major(&net, Datapath::LutFabric));
         let mut img = Tensor::zeros(4, 4, 2);
         for (i, v) in img.data.iter_mut().enumerate() {
             *v = ((i * 5) % 16) as i32;
         }
         assert_eq!(compiled.execute(&img), direct.execute(&img));
+        assert_eq!(compiled.execute(&img), mac.execute(&img));
         assert_eq!(compiled.plan().lut_count(), direct.plan().lut_count());
+        assert_eq!(compiled.plan().lut_count(), mac.plan().lut_count());
     }
 
     #[test]
@@ -417,8 +495,33 @@ mod tests {
     }
 
     #[test]
+    fn run_batch_into_reuses_a_dirty_pool_bit_exactly() {
+        // persistent-arena contract: a poisoned pool and a reused output
+        // vector must reproduce the fresh-allocation path exactly
+        let net = net_with_conv(ConvKind::Std, 3, 4, 3, 1);
+        let ex = Executor::new(&net, Datapath::LutFabric);
+        let images: Vec<Tensor> = (0..5)
+            .map(|s| {
+                let mut img = Tensor::zeros(4, 4, 3);
+                for (i, v) in img.data.iter_mut().enumerate() {
+                    *v = ((i * 3 + s) % 16) as i32;
+                }
+                img
+            })
+            .collect();
+        let want: Vec<Vec<f32>> = images.iter().map(|t| ex.execute(t)).collect();
+        let mut pool = ScratchPool::new();
+        let mut out = vec![vec![99.0f32; 7]; 9]; // wrong shape on purpose
+        ex.run_batch_into(&images, 1, &mut pool, &mut out);
+        assert_eq!(out, want);
+        pool.dirty(-1);
+        ex.run_batch_into(&images, 2, &mut pool, &mut out);
+        assert_eq!(out, want, "dirty pool, two threads");
+    }
+
+    #[test]
     fn run_batch_handles_residual_state_per_image() {
-        // res-push/add state must stay per-image in the op-major loop
+        // res-push/add state must stay per-image in the arena loop
         let mut net = net_with_conv(ConvKind::Pw, 1, 1, 1, 1);
         let conv = net.ops[1].clone();
         net.ops.insert(1, Op::ResPush {});
@@ -436,6 +539,23 @@ mod tests {
         for (i, img) in images.iter().enumerate() {
             assert_eq!(got[i], ex.execute(img), "image {i}");
         }
+    }
+
+    #[test]
+    fn execute_traced_fires_per_activation_op() {
+        let mut net = net_with_conv(ConvKind::Pw, 1, 1, 1, 1);
+        let conv = net.ops[1].clone();
+        net.ops.insert(1, Op::ResPush {});
+        net.ops.insert(2, conv);
+        net.ops.insert(4, Op::ResAdd { bits: 4 });
+        let ex = Executor::new(&net, Datapath::Arithmetic);
+        let mut img = Tensor::zeros(4, 4, 1);
+        img.set(0, 0, 0, 2);
+        let mut seen: Vec<(usize, i32)> = Vec::new();
+        let logits = ex.execute_traced(&img, &mut |oi, t| seen.push((oi, t.get(0, 0, 0))));
+        // two convs (ops 2 and 3) and the res_add (op 4) trace
+        assert_eq!(seen, vec![(2, 2), (3, 2), (4, 4)]);
+        assert_eq!(logits[0], 4.0);
     }
 
     #[test]

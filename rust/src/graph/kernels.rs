@@ -1,15 +1,33 @@
-//! Kernel functions over compiled layer plans (DESIGN.md S17) — the
+//! Kernel functions over compiled layer plans (DESIGN.md S17/S20) — the
 //! bodies the reference executor and the dataflow simulator share.
 //!
-//! Every kernel is generic over the plan's multiplier readout
-//! ([`Multipliers`] variant), monomorphized so the datapath dispatch is
-//! hoisted out of the MAC loops: the hot loop sees either a plain
-//! integer multiply, a memoized LUT product-table load, or (baseline)
-//! a per-MAC simulated LUT6_2 readout — never a per-multiply branch.
+//! Every kernel comes in two forms: an `_into` variant that writes into
+//! caller-owned buffers (the zero-allocation engine the executor's
+//! arena path runs — see `graph::scratch`), and a thin allocating
+//! wrapper (tests, the simulator's token construction, and the
+//! fresh-allocation reference the arena tests compare against).
 //!
-//! Accumulation order is identical across kernels and datapaths
-//! (tap-major, channel-minor, matching `python/compile/model.py::
-//! im2col`), so all paths stay bit-for-bit interchangeable.
+//! Multiplier dispatch is hoisted out of the MAC loops per
+//! [`Multipliers`] variant:
+//!
+//!  * `Weights` and `LutDirect` run the scalar body, monomorphized over
+//!    a `mul(row, col, act)` closure (plain integer multiply, or the
+//!    per-MAC simulated LUT6_2 readout — the bit-exactness witness);
+//!  * `LutTablesMacMajor` runs the same scalar body over the memoized
+//!    MAC-major table (the pre-activation-major baseline the kernel
+//!    bench gates against);
+//!  * `LutTables` (activation-major, the default) runs the **LUT-GEMM
+//!    column body**: the activation lookup is hoisted per (tap, ci) and
+//!    one *contiguous* `cout`-wide product column is accumulated into
+//!    the output slot — an axpy the autovectorizer chews on, instead of
+//!    a strided per-MAC gather.
+//!
+//! Accumulation order is unchanged across all bodies and datapaths:
+//! every output channel still sums its taps in (tap, ci)-ascending
+//! order — the column body merely interleaves the *channels*, and i32
+//! addition is exact whatever the interleaving — so all paths stay
+//! bit-for-bit interchangeable (and match
+//! `python/compile/model.py::im2col`).
 
 use crate::quant::saturating_res_add;
 
@@ -17,7 +35,18 @@ use super::executor::Tensor;
 use super::network::ConvKind;
 use super::plan::{ConvPlan, DensePlan, Multipliers};
 
-/// Run one compiled conv layer over an input activation tensor.
+/// Zero-padded read from a flat HWC activation slice.
+#[inline]
+fn at(x: &[i32], w: usize, c: usize, h: usize, y: isize, xx: isize, ch: usize) -> i32 {
+    if y < 0 || xx < 0 || y >= h as isize || xx >= w as isize {
+        0
+    } else {
+        x[(y as usize * w + xx as usize) * c + ch]
+    }
+}
+
+/// Run one compiled conv layer over an input activation tensor
+/// (allocating wrapper over [`conv_into`]).
 pub fn conv(plan: &ConvPlan, x: &Tensor) -> Tensor {
     // hard assert (one compare per layer, outside the MAC loops): the
     // interior fast path indexes with plan-derived strides, so a
@@ -28,38 +57,64 @@ pub fn conv(plan: &ConvPlan, x: &Tensor) -> Tensor {
         "{}: input shape disagrees with the compiled plan",
         plan.name
     );
+    let g = plan.geom;
+    let mut out = Tensor::zeros(g.out_h(), g.out_w(), g.cout);
+    conv_into(plan, &x.data, &mut out.data);
+    out
+}
+
+/// Run one compiled conv layer from a flat HWC input slice into a
+/// caller-owned flat HWC output slice (exact footprints; zero
+/// allocation).
+pub fn conv_into(plan: &ConvPlan, x: &[i32], out: &mut [i32]) {
+    let g = plan.geom;
+    assert_eq!(
+        x.len(),
+        g.in_pixels() * g.cin,
+        "{}: input len disagrees with the compiled plan",
+        plan.name
+    );
+    assert_eq!(
+        out.len(),
+        g.out_pixels() * g.cout,
+        "{}: output len disagrees with the compiled plan",
+        plan.name
+    );
     match &plan.mults {
+        Multipliers::LutTables { products, acts, .. } => {
+            conv_cols(plan, x, out, products, *acts)
+        }
         Multipliers::Weights => {
-            conv_with(plan, x, |row, col, a| plan.wflat[row * plan.cols + col] * a)
+            conv_scalar(plan, x, out, |row, col, a| plan.wflat[row * plan.cols + col] * a)
         }
         Multipliers::LutDirect { mults } => {
             let pairs = plan.cols.div_ceil(2);
-            conv_with(plan, x, move |row, col, a| {
+            conv_scalar(plan, x, out, move |row, col, a| {
                 mults[row * pairs + col / 2].eval(col % 2 == 1, a as u32)
             })
         }
-        Multipliers::LutTables { products, acts, .. } => {
+        Multipliers::LutTablesMacMajor { products, acts, .. } => {
             let acts = *acts;
-            conv_with(plan, x, move |row, col, a| {
+            conv_scalar(plan, x, out, move |row, col, a| {
                 products[(row * plan.cols + col) * acts + a as usize]
             })
         }
     }
 }
 
-/// Shared conv body, monomorphized per multiplier readout.
-fn conv_with(plan: &ConvPlan, x: &Tensor, mul: impl Fn(usize, usize, i32) -> i32) -> Tensor {
+/// Scalar conv body, monomorphized per multiplier readout (`Weights`,
+/// `LutDirect`, `LutTablesMacMajor`).
+fn conv_scalar(plan: &ConvPlan, x: &[i32], out: &mut [i32], mul: impl Fn(usize, usize, i32) -> i32) {
     let g = plan.geom;
     if plan.kind == ConvKind::Pw && g.k == 1 && g.stride == 1 && g.pad == 0 {
-        return pointwise(plan, x, mul);
+        return pointwise_scalar(plan, x, out, mul);
     }
     let (ho, wo) = (g.out_h(), g.out_w());
-    let mut out = Tensor::zeros(ho, wo, g.cout);
     let dw = plan.kind == ConvKind::Dw;
     for oy in 0..ho {
         let y_interior = oy >= plan.oy_interior.0 && oy < plan.oy_interior.1;
         for ox in 0..wo {
-            let o = &mut out.data[(oy * wo + ox) * g.cout..(oy * wo + ox + 1) * g.cout];
+            let o = &mut out[(oy * wo + ox) * g.cout..(oy * wo + ox + 1) * g.cout];
             if y_interior && ox >= plan.ox_interior.0 && ox < plan.ox_interior.1 {
                 // interior: whole window in bounds — direct indexing off
                 // the precomputed tap offsets, no per-tap bounds check
@@ -68,7 +123,7 @@ fn conv_with(plan: &ConvPlan, x: &Tensor, mul: impl Fn(usize, usize, i32) -> i32
                     for (c, slot) in o.iter_mut().enumerate() {
                         let mut acc = 0i32;
                         for (tap, &off) in plan.tap_offsets.iter().enumerate() {
-                            acc += mul(c, tap, x.data[base + off + c]);
+                            acc += mul(c, tap, x[base + off + c]);
                         }
                         *slot = plan.threshold(acc, c);
                     }
@@ -76,7 +131,7 @@ fn conv_with(plan: &ConvPlan, x: &Tensor, mul: impl Fn(usize, usize, i32) -> i32
                     for (co, slot) in o.iter_mut().enumerate() {
                         let mut acc = 0i32;
                         for (tap, &off) in plan.tap_offsets.iter().enumerate() {
-                            let px = &x.data[base + off..base + off + g.cin];
+                            let px = &x[base + off..base + off + g.cin];
                             for (ci, &a) in px.iter().enumerate() {
                                 acc += mul(co, tap * g.cin + ci, a);
                             }
@@ -91,7 +146,11 @@ fn conv_with(plan: &ConvPlan, x: &Tensor, mul: impl Fn(usize, usize, i32) -> i32
                         let mut acc = 0i32;
                         for i in 0..g.k {
                             for j in 0..g.k {
-                                let a = x.get(
+                                let a = at(
+                                    x,
+                                    g.in_w,
+                                    g.cin,
+                                    g.in_h,
                                     (oy * g.stride + i) as isize - g.pad as isize,
                                     (ox * g.stride + j) as isize - g.pad as isize,
                                     c,
@@ -107,7 +166,11 @@ fn conv_with(plan: &ConvPlan, x: &Tensor, mul: impl Fn(usize, usize, i32) -> i32
                         for i in 0..g.k {
                             for j in 0..g.k {
                                 for ci in 0..g.cin {
-                                    let a = x.get(
+                                    let a = at(
+                                        x,
+                                        g.in_w,
+                                        g.cin,
+                                        g.in_h,
                                         (oy * g.stride + i) as isize - g.pad as isize,
                                         (ox * g.stride + j) as isize - g.pad as isize,
                                         ci,
@@ -122,19 +185,23 @@ fn conv_with(plan: &ConvPlan, x: &Tensor, mul: impl Fn(usize, usize, i32) -> i32
             }
         }
     }
-    out
 }
 
 /// Pointwise conv as a matmul over contiguous HWC pixels (the bulk of
-/// MobileNetV2's MACs). The arithmetic variant dots contiguous slices
-/// (vectorizes); the LUT variants go through the readout closure.
-fn pointwise(plan: &ConvPlan, x: &Tensor, mul: impl Fn(usize, usize, i32) -> i32) -> Tensor {
+/// MobileNetV2's MACs) — scalar-readout variant. The arithmetic path
+/// dots contiguous weight rows (vectorizes); the LUT readouts go
+/// through the closure.
+fn pointwise_scalar(
+    plan: &ConvPlan,
+    x: &[i32],
+    out: &mut [i32],
+    mul: impl Fn(usize, usize, i32) -> i32,
+) {
     let (cin, cout) = (plan.geom.cin, plan.geom.cout);
-    let mut out = Tensor::zeros(x.h, x.w, cout);
     let arith = matches!(plan.mults, Multipliers::Weights);
-    for px in 0..x.h * x.w {
-        let xs = &x.data[px * cin..(px + 1) * cin];
-        let o = &mut out.data[px * cout..(px + 1) * cout];
+    for px in 0..plan.geom.in_pixels() {
+        let xs = &x[px * cin..(px + 1) * cin];
+        let o = &mut out[px * cout..(px + 1) * cout];
         for (co, slot) in o.iter_mut().enumerate() {
             let acc = if arith {
                 plan.dot(co, xs)
@@ -148,67 +215,219 @@ fn pointwise(plan: &ConvPlan, x: &Tensor, mul: impl Fn(usize, usize, i32) -> i32
             *slot = plan.threshold(acc, co);
         }
     }
-    out
+}
+
+/// Activation-major LUT-GEMM conv body (`Multipliers::LutTables`,
+/// DESIGN.md S20): per output pixel the output slot doubles as the
+/// `cout`-wide accumulator — one contiguous product column is axpy'd
+/// per (tap, ci) with the activation lookup hoisted out of the channel
+/// loop — then the thresholds are applied in place. Out-of-bounds
+/// border taps are skipped outright: their activation is the zero code,
+/// whose product column is all zeros by table construction.
+fn conv_cols(plan: &ConvPlan, x: &[i32], out: &mut [i32], products: &[i32], acts: usize) {
+    let g = plan.geom;
+    let (ho, wo) = (g.out_h(), g.out_w());
+    let (cin, cout) = (g.cin, g.cout);
+    let dw = plan.kind == ConvKind::Dw;
+    for oy in 0..ho {
+        let y_interior = oy >= plan.oy_interior.0 && oy < plan.oy_interior.1;
+        for ox in 0..wo {
+            let o = &mut out[(oy * wo + ox) * cout..(oy * wo + ox + 1) * cout];
+            o.fill(0);
+            let interior = y_interior && ox >= plan.ox_interior.0 && ox < plan.ox_interior.1;
+            if dw {
+                // depthwise: every channel reads its own activation, so
+                // this stays a gather — but it shares the hoisted
+                // interior/border machinery and the in-place thresholds
+                for (tap, &off) in plan.tap_offsets.iter().enumerate() {
+                    if interior {
+                        let base =
+                            ((oy * g.stride - g.pad) * g.in_w + (ox * g.stride - g.pad)) * cin;
+                        let px = &x[base + off..base + off + cin];
+                        let tbl = &products[tap * acts * cout..(tap + 1) * acts * cout];
+                        for (c, (&a, slot)) in px.iter().zip(o.iter_mut()).enumerate() {
+                            *slot += tbl[a as usize * cout + c];
+                        }
+                    } else {
+                        let (i, j) = (tap / g.k, tap % g.k);
+                        let y = (oy * g.stride + i) as isize - g.pad as isize;
+                        let xx = (ox * g.stride + j) as isize - g.pad as isize;
+                        if y < 0 || xx < 0 || y >= g.in_h as isize || xx >= g.in_w as isize {
+                            continue; // zero activation: zero column
+                        }
+                        let base = (y as usize * g.in_w + xx as usize) * cin;
+                        let tbl = &products[tap * acts * cout..(tap + 1) * acts * cout];
+                        for (c, slot) in o.iter_mut().enumerate() {
+                            *slot += tbl[x[base + c] as usize * cout + c];
+                        }
+                    }
+                }
+            } else if interior {
+                let base = ((oy * g.stride - g.pad) * g.in_w + (ox * g.stride - g.pad)) * cin;
+                for (tap, &off) in plan.tap_offsets.iter().enumerate() {
+                    let px = &x[base + off..base + off + cin];
+                    for (ci, &a) in px.iter().enumerate() {
+                        let col = tap * cin + ci;
+                        let tbl = &products[(col * acts + a as usize) * cout..][..cout];
+                        for (slot, &p) in o.iter_mut().zip(tbl) {
+                            *slot += p;
+                        }
+                    }
+                }
+            } else {
+                for i in 0..g.k {
+                    for j in 0..g.k {
+                        let y = (oy * g.stride + i) as isize - g.pad as isize;
+                        let xx = (ox * g.stride + j) as isize - g.pad as isize;
+                        if y < 0 || xx < 0 || y >= g.in_h as isize || xx >= g.in_w as isize {
+                            continue; // zero activation: zero column
+                        }
+                        let base = (y as usize * g.in_w + xx as usize) * cin;
+                        for ci in 0..cin {
+                            let col = (i * g.k + j) * cin + ci;
+                            let a = x[base + ci] as usize;
+                            let tbl = &products[(col * acts + a) * cout..][..cout];
+                            for (slot, &p) in o.iter_mut().zip(tbl) {
+                                *slot += p;
+                            }
+                        }
+                    }
+                }
+            }
+            for (co, slot) in o.iter_mut().enumerate() {
+                *slot = plan.threshold(*slot, co);
+            }
+        }
+    }
 }
 
 /// One output pixel from a full im2col patch (`[K*K*CIN]`, (tap,
-/// channel) minor order) — the dataflow simulator's conv-stage body.
+/// channel) minor order) — the dataflow simulator's conv-stage body
+/// (allocating wrapper over [`patch_out_into`]).
 pub fn patch_out(plan: &ConvPlan, patch: &[i32]) -> Vec<i32> {
     let mut out = vec![0i32; plan.geom.cout];
-    match plan.kind {
-        ConvKind::Dw => {
-            let cin = plan.geom.cin;
+    patch_out_into(plan, patch, &mut out);
+    out
+}
+
+/// [`patch_out`] into a caller-owned `[cout]` slice. The slot doubles as
+/// the accumulator on the activation-major path, so no scratch beyond
+/// the output itself is needed.
+pub fn patch_out_into(plan: &ConvPlan, patch: &[i32], out: &mut [i32]) {
+    assert_eq!(out.len(), plan.geom.cout, "{}: patch output len", plan.name);
+    let cin = plan.geom.cin;
+    match (&plan.mults, plan.kind) {
+        (Multipliers::LutTables { products, acts, .. }, ConvKind::Dw) => {
+            let cout = plan.geom.cout;
+            out.fill(0);
+            for tap in 0..plan.cols {
+                let tbl = &products[tap * acts * cout..(tap + 1) * acts * cout];
+                for (c, slot) in out.iter_mut().enumerate() {
+                    *slot += tbl[patch[tap * cin + c] as usize * cout + c];
+                }
+            }
+        }
+        (Multipliers::LutTables { products, acts, .. }, _) => {
+            // std/pw: the patch index IS the weight column, so the whole
+            // pixel is `cols` contiguous column axpys
+            let cout = plan.geom.cout;
+            out.fill(0);
+            for (col, &a) in patch.iter().enumerate() {
+                let tbl = &products[(col * acts + a as usize) * cout..][..cout];
+                for (slot, &p) in out.iter_mut().zip(tbl) {
+                    *slot += p;
+                }
+            }
+        }
+        (_, ConvKind::Dw) => {
             for (c, o) in out.iter_mut().enumerate() {
                 let mut acc = 0i32;
                 for tap in 0..plan.cols {
                     acc += plan.mul(c, tap, patch[tap * cin + c]);
                 }
-                *o = plan.threshold(acc, c);
+                *o = acc;
             }
         }
         _ => {
             for (co, o) in out.iter_mut().enumerate() {
-                *o = plan.threshold(plan.dot(co, patch), co);
+                *o = plan.dot(co, patch);
             }
         }
     }
-    out
+    for (co, slot) in out.iter_mut().enumerate() {
+        *slot = plan.threshold(*slot, co);
+    }
 }
 
-/// Global sum-pool over all pixels, per channel.
+/// Global sum-pool over all pixels, per channel (allocating wrapper).
 pub fn pool_sum(x: &Tensor) -> Vec<i32> {
     let mut acc = vec![0i32; x.c];
-    for px in x.data.chunks_exact(x.c) {
-        for (a, &v) in acc.iter_mut().zip(px) {
+    pool_sum_into(&x.data, &mut acc);
+    acc
+}
+
+/// Global sum-pool into a caller-owned `[channels]` slice (the slice
+/// length is the channel count).
+pub fn pool_sum_into(x: &[i32], out: &mut [i32]) {
+    out.fill(0);
+    for px in x.chunks_exact(out.len()) {
+        for (a, &v) in out.iter_mut().zip(px) {
             *a += v;
         }
     }
-    acc
 }
 
 /// Saturating residual join: `x = sat(x + saved)` element-wise on codes.
 pub fn res_add(x: &mut Tensor, saved: &Tensor, bits: u32) {
     assert_eq!((saved.h, saved.w, saved.c), (x.h, x.w, x.c));
-    for (a, b) in x.data.iter_mut().zip(&saved.data) {
-        *a = saturating_res_add(*a, *b, bits);
+    res_add_into(&mut x.data, &saved.data, bits);
+}
+
+/// [`res_add`] over flat slices (equal length).
+pub fn res_add_into(x: &mut [i32], saved: &[i32], bits: u32) {
+    assert_eq!(x.len(), saved.len(), "residual join width mismatch");
+    for (a, &b) in x.iter_mut().zip(saved) {
+        *a = saturating_res_add(*a, b, bits);
     }
 }
 
-/// Dense head over the pooled channel vector.
+/// Dense head over the pooled channel vector (allocating wrapper).
 pub fn dense(plan: &DensePlan, pooled: &[i32]) -> Vec<f32> {
-    (0..plan.cout)
-        .map(|co| {
-            let acc: i64 = pooled
-                .iter()
-                .enumerate()
-                .map(|(ci, &a)| a as i64 * plan.w_codes[ci][co] as i64)
-                .sum();
-            // fused multiply-add: XLA CPU emits an FMA for
-            // `acc * scale + bias`, so a separate mul+add here would
-            // differ by 1 ULP from the golden
-            (acc as f32).mul_add(plan.scale[co], plan.bias[co])
-        })
-        .collect()
+    let mut acc = vec![0i64; plan.cout];
+    let mut out = vec![0.0f32; plan.cout];
+    dense_into(plan, pooled, &mut acc, &mut out);
+    out
+}
+
+/// Dense head into caller-owned buffers: `acc` is the `[cout]` `i64`
+/// accumulator, `out` the `[cout]` logits. Blocked accumulation over
+/// the flat `[CIN][COUT]` weights — each input channel's contiguous
+/// `cout`-wide row is axpy'd, so every logit still sums its channels in
+/// ascending-`ci` order (bit-identical to the nested-`Vec` loop it
+/// replaces; `i64` adds are exact in any order regardless).
+pub fn dense_into(plan: &DensePlan, pooled: &[i32], acc: &mut [i64], out: &mut [f32]) {
+    assert_eq!(
+        pooled.len(),
+        plan.cin,
+        "{}: pooled vector width disagrees with the dense plan",
+        plan.name
+    );
+    assert_eq!(acc.len(), plan.cout, "{}: dense accumulator len", plan.name);
+    assert_eq!(out.len(), plan.cout, "{}: logits len", plan.name);
+    acc.fill(0);
+    for (ci, &a) in pooled.iter().enumerate() {
+        let a = a as i64;
+        let row = &plan.wflat[ci * plan.cout..(ci + 1) * plan.cout];
+        for (s, &w) in acc.iter_mut().zip(row) {
+            *s += a * w as i64;
+        }
+    }
+    for (co, (o, &s)) in out.iter_mut().zip(acc.iter()).enumerate() {
+        // fused multiply-add: XLA CPU emits an FMA for
+        // `acc * scale + bias`, so a separate mul+add here would
+        // differ by 1 ULP from the golden
+        *o = (s as f32).mul_add(plan.scale[co], plan.bias[co]);
+    }
 }
 
 #[cfg(test)]
@@ -315,8 +534,7 @@ mod tests {
         out
     }
 
-    fn first_conv_plan(net: &Network, dp: Datapath) -> crate::graph::plan::ConvPlan {
-        let plan = NetworkPlan::compile(net, dp);
+    fn first_conv_of(plan: &NetworkPlan) -> crate::graph::plan::ConvPlan {
         plan.ops
             .iter()
             .find_map(|op| match op {
@@ -327,7 +545,7 @@ mod tests {
     }
 
     #[test]
-    fn kernels_match_naive_conv_all_kinds_and_datapaths() {
+    fn kernels_match_naive_conv_all_kinds_layouts_and_datapaths() {
         let mut rng = Rng::new(99);
         for (kind, hw, cin, cout, k, stride) in [
             (ConvKind::Pw, 6, 3, 5, 1, 1),
@@ -340,9 +558,38 @@ mod tests {
             let x = Tensor::from_hwc(hw, hw, cin, rng.vec_i32(hw * hw * cin, 0, 15));
             let want = naive_conv(&net, &x);
             for dp in [Datapath::Arithmetic, Datapath::LutFabric] {
-                let cp = first_conv_plan(&net, dp);
-                assert_eq!(conv(&cp, &x), want, "{kind:?} hw={hw} k={k} s={stride} {dp:?}");
+                for (label, plan) in [
+                    ("act-major", NetworkPlan::compile(&net, dp)),
+                    ("direct", NetworkPlan::compile_direct(&net, dp)),
+                    ("mac-major", NetworkPlan::compile_mac_major(&net, dp)),
+                ] {
+                    let cp = first_conv_of(&plan);
+                    assert_eq!(
+                        conv(&cp, &x),
+                        want,
+                        "{kind:?} hw={hw} k={k} s={stride} {dp:?} {label}"
+                    );
+                }
             }
+        }
+    }
+
+    #[test]
+    fn conv_into_writes_over_dirty_output() {
+        // the _into kernels must not depend on the output buffer's prior
+        // contents (the arena hands them poisoned buffers)
+        let mut rng = Rng::new(17);
+        let net = conv_net(&mut rng, ConvKind::Std, 6, 2, 3, 3, 1);
+        let x = Tensor::from_hwc(6, 6, 2, rng.vec_i32(6 * 6 * 2, 0, 15));
+        for plan in [
+            NetworkPlan::compile(&net, Datapath::LutFabric),
+            NetworkPlan::compile_mac_major(&net, Datapath::LutFabric),
+        ] {
+            let cp = first_conv_of(&plan);
+            let want = conv(&cp, &x);
+            let mut out = vec![-999i32; 6 * 6 * 3];
+            conv_into(&cp, &x.data, &mut out);
+            assert_eq!(out, want.data);
         }
     }
 
@@ -353,12 +600,42 @@ mod tests {
         let mut rng = Rng::new(5);
         let net = conv_net(&mut rng, ConvKind::Pw, 4, 3, 4, 1, 1);
         let x = Tensor::from_hwc(4, 4, 3, rng.vec_i32(4 * 4 * 3, 0, 15));
-        let cp = first_conv_plan(&net, Datapath::LutFabric);
-        let whole = conv(&cp, &x);
-        for px in 0..16 {
-            let patch = &x.data[px * 3..(px + 1) * 3];
-            assert_eq!(patch_out(&cp, patch), whole.data[px * 4..(px + 1) * 4].to_vec());
+        for plan in [
+            NetworkPlan::compile(&net, Datapath::LutFabric),
+            NetworkPlan::compile_direct(&net, Datapath::LutFabric),
+            NetworkPlan::compile_mac_major(&net, Datapath::LutFabric),
+        ] {
+            let cp = first_conv_of(&plan);
+            let whole = conv(&cp, &x);
+            for px in 0..16 {
+                let patch = &x.data[px * 3..(px + 1) * 3];
+                assert_eq!(patch_out(&cp, patch), whole.data[px * 4..(px + 1) * 4].to_vec());
+            }
         }
+    }
+
+    #[test]
+    fn patch_out_matches_conv_on_depthwise_tables() {
+        // depthwise goes through the per-channel gather arm of the
+        // activation-major patch body; cross-check it against the tensor
+        // kernel via an interior pixel's im2col patch
+        let mut rng = Rng::new(23);
+        let net = conv_net(&mut rng, ConvKind::Dw, 5, 3, 3, 3, 1);
+        let x = Tensor::from_hwc(5, 5, 3, rng.vec_i32(5 * 5 * 3, 0, 15));
+        let plan = NetworkPlan::compile(&net, Datapath::LutFabric);
+        let cp = first_conv_of(&plan);
+        let whole = conv(&cp, &x);
+        // interior output (2,2): window origin (1,1)
+        let mut patch = Vec::new();
+        for i in 0..3isize {
+            for j in 0..3isize {
+                for c in 0..3usize {
+                    patch.push(x.get(1 + i, 1 + j, c));
+                }
+            }
+        }
+        let got = patch_out(&cp, &patch);
+        assert_eq!(got, whole.data[(2 * 5 + 2) * 3..(2 * 5 + 2 + 1) * 3].to_vec());
     }
 
     #[test]
@@ -369,5 +646,42 @@ mod tests {
         let b = Tensor::from_hwc(1, 1, 2, vec![9, 3]);
         res_add(&mut a, &b, 4);
         assert_eq!(a.data, vec![15, 6]); // 18 saturates to 15
+
+        // _into variants over dirty buffers
+        let mut pooled = vec![-5i32; 3];
+        pool_sum_into(&x.data, &mut pooled);
+        assert_eq!(pooled, vec![22, 26, 30]);
+    }
+
+    #[test]
+    fn dense_into_matches_nested_reference() {
+        let mut rng = Rng::new(31);
+        let (cin, cout) = (7, 4);
+        let w_codes: Vec<Vec<i32>> = (0..cin).map(|_| rng.vec_i32(cout, -128, 127)).collect();
+        let plan = DensePlan {
+            name: "fc".into(),
+            cin,
+            cout,
+            wflat: w_codes.iter().flatten().copied().collect(),
+            scale: (0..cout).map(|i| 0.01 + i as f32 * 0.003).collect(),
+            bias: (0..cout).map(|i| i as f32 - 1.5).collect(),
+        };
+        let pooled = rng.vec_i32(cin, 0, 400);
+        // the pre-flattening reference loop, verbatim
+        let want: Vec<f32> = (0..cout)
+            .map(|co| {
+                let acc: i64 = pooled
+                    .iter()
+                    .enumerate()
+                    .map(|(ci, &a)| a as i64 * w_codes[ci][co] as i64)
+                    .sum();
+                (acc as f32).mul_add(plan.scale[co], plan.bias[co])
+            })
+            .collect();
+        assert_eq!(dense(&plan, &pooled), want);
+        let mut acc = vec![7i64; cout]; // dirty
+        let mut out = vec![9.9f32; cout];
+        dense_into(&plan, &pooled, &mut acc, &mut out);
+        assert_eq!(out, want);
     }
 }

@@ -13,11 +13,15 @@
 //!    the zero-padded gather;
 //!  * on the `LutFabric` datapath, every multiplier's product table is
 //!    **read out of the simulated LUT6_2 primitives once at plan-build
-//!    time** ([`Multipliers::LutTables`]) — same hardware-true INIT
-//!    semantics as reading the fabric per MAC, memoized. The per-MAC
+//!    time** into an activation-major (column-major) layout
+//!    ([`Multipliers::LutTables`], DESIGN.md S20) — same hardware-true
+//!    INIT semantics as reading the fabric per MAC, memoized and
+//!    transposed for contiguous column accumulation. The per-MAC
 //!    readout survives as [`Multipliers::LutDirect`] (the
 //!    pre-compilation baseline and equivalence witness; see
-//!    `benches/bench_batch.rs` and `tests/plan.rs`).
+//!    `benches/bench_batch.rs` and `tests/plan.rs`), and the old
+//!    MAC-major table layout as [`Multipliers::LutTablesMacMajor`]
+//!    (the perf baseline of `benches/bench_kernels.rs`).
 //!
 //! The plan is the shared geometry source for the whole stack: the
 //! executor runs kernels over it (`graph::kernels`), the dataflow
@@ -106,9 +110,15 @@ pub enum Multipliers {
     /// kept as the plan-compilation baseline and equivalence witness.
     LutDirect { mults: Vec<ConstMultiplier> },
     /// Per-multiplier product tables read out of the same LUT6_2
-    /// primitives once at plan-build time:
-    /// `products[(row * cols + col) * acts + act]`. Bit-identical to
-    /// `LutDirect` by construction — the table IS the memoized readout.
+    /// primitives once at plan-build time, laid out **activation-major
+    /// (column-major)**: `products[(col * acts + act) * cout + row]`,
+    /// where `cout` is the weight-row count (`ConvGeom::cout` for every
+    /// conv kind). Fixing a weight column and an activation code yields
+    /// one *contiguous* `cout`-wide product column, so the conv kernels
+    /// hoist the activation lookup per (tap, ci) and accumulate the
+    /// whole output-channel vector with a vectorizable axpy — the
+    /// LUT-GEMM access pattern. Bit-identical to `LutDirect` by
+    /// construction — the table IS the memoized readout, transposed.
     LutTables {
         products: Vec<i32>,
         /// Activation codes per table (`2^w_bits`, 16 for 4-bit; the
@@ -118,6 +128,30 @@ pub enum Multipliers {
         /// Physical LUT6 behind the tables (resource accounting).
         lut6: usize,
     },
+    /// The pre-activation-major table layout,
+    /// `products[(row * cols + col) * acts + act]`: every MAC does a
+    /// strided gather keyed by its own activation, so the inner `cout`
+    /// loop never vectorizes. Kept compilable
+    /// ([`NetworkPlan::compile_mac_major`]) as the perf baseline the
+    /// kernel bench gates against and as a second equivalence witness.
+    LutTablesMacMajor {
+        products: Vec<i32>,
+        acts: usize,
+        lut6: usize,
+    },
+}
+
+/// Which multiplier representation the plan lowering compiles LUT
+/// layers to (see `NetworkPlan::compile` / `compile_direct` /
+/// `compile_mac_major`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum TableMode {
+    /// Per-MAC simulated LUT6_2 readout (`Multipliers::LutDirect`).
+    Direct,
+    /// Memoized tables, MAC-major layout (the pre-PR baseline).
+    MacMajor,
+    /// Memoized tables, activation-major layout (the default).
+    ActMajor,
 }
 
 /// One convolution lowered into flat, hot-loop-ready state.
@@ -148,7 +182,7 @@ pub struct ConvPlan {
 }
 
 impl ConvPlan {
-    fn build(op: &Op, in_hw: usize, datapath: Datapath, memoize: bool) -> Self {
+    fn build(op: &Op, in_hw: usize, datapath: Datapath, mode: TableMode) -> Self {
         let Op::Conv {
             name,
             kind,
@@ -179,10 +213,22 @@ impl ConvPlan {
         // DSP-packed 8-bit first/last layers.
         let lut_ok = *w_bits <= 4 && *in_bits <= 4 && *in_bits <= *w_bits;
         let mults = if datapath == Datapath::LutFabric && lut_ok {
-            Self::lut_multipliers(w_codes, *w_bits, memoize)
+            Self::lut_multipliers(w_codes, *w_bits, mode)
         } else {
             Multipliers::Weights
         };
+        // The count-based quantizer ([`threshold`](Self::threshold)) is a
+        // partition point over each channel's threshold row, which is
+        // only equal to the per-level compare count when the row is
+        // sorted ascending — an unsorted row would silently miscount, so
+        // reject it loudly here, once, at plan-compile time.
+        for (ch, row) in thresholds.iter().enumerate() {
+            assert!(
+                row.windows(2).all(|w| w[0] <= w[1]),
+                "{name}: threshold row for channel {ch} is not sorted ascending \
+                 ({row:?}); the count-based quantizer would silently miscount"
+            );
+        }
         Self {
             name: name.clone(),
             kind: *kind,
@@ -202,12 +248,15 @@ impl ConvPlan {
 
     /// Embed the layer's weights into LUT6_2 multipliers (two weights per
     /// `ConstMultiplier`, Figure 5) and, when memoizing, read every
-    /// product table out of the simulated fabric once.
-    fn lut_multipliers(w_codes: &[Vec<i32>], w_bits: u32, memoize: bool) -> Multipliers {
+    /// product table out of the simulated fabric once — into the
+    /// activation-major layout by default, or the MAC-major baseline
+    /// layout for [`NetworkPlan::compile_mac_major`].
+    fn lut_multipliers(w_codes: &[Vec<i32>], w_bits: u32, mode: TableMode) -> Multipliers {
+        let rows = w_codes.len();
         let cols = w_codes[0].len();
         let n_bits = w_bits.max(1);
         let pairs = cols.div_ceil(2);
-        let mut mults = Vec::with_capacity(w_codes.len() * pairs);
+        let mut mults = Vec::with_capacity(rows * pairs);
         for row in w_codes {
             for p in 0..pairs {
                 let w0 = row[2 * p];
@@ -215,37 +264,54 @@ impl ConvPlan {
                 mults.push(ConstMultiplier::new(w0, w1, n_bits));
             }
         }
-        if !memoize {
+        if mode == TableMode::Direct {
             return Multipliers::LutDirect { mults };
         }
         let acts = 1usize << n_bits;
         let lut6 = mults.iter().map(ConstMultiplier::lut_count).sum();
-        let mut products = Vec::with_capacity(w_codes.len() * cols * acts);
-        for row in 0..w_codes.len() {
+        let mut products = vec![0i32; rows * cols * acts];
+        for row in 0..rows {
             for col in 0..cols {
                 let m = &mults[row * pairs + col / 2];
                 for a in 0..acts {
-                    products.push(m.eval(col % 2 == 1, a as u32));
+                    let p = m.eval(col % 2 == 1, a as u32);
+                    match mode {
+                        TableMode::ActMajor => products[(col * acts + a) * rows + row] = p,
+                        TableMode::MacMajor => products[(row * cols + col) * acts + a] = p,
+                        TableMode::Direct => unreachable!("returned above"),
+                    }
                 }
             }
         }
-        Multipliers::LutTables { products, acts, lut6 }
+        match mode {
+            TableMode::ActMajor => Multipliers::LutTables { products, acts, lut6 },
+            _ => Multipliers::LutTablesMacMajor { products, acts, lut6 },
+        }
     }
 
-    /// Branchless multi-threshold over the flattened levels — bit-exact
-    /// vs `MultiThreshold::apply` (the 15-wide compare+sum vectorizes;
-    /// an early-exit loop measured slower).
+    /// Multi-threshold over the flattened levels as a partition point:
+    /// plan compilation validates every row is sorted ascending, so the
+    /// per-level compare count collapses to the index of the first
+    /// level the accumulator fails — bit-exact vs
+    /// `MultiThreshold::apply` on sorted rows (equal levels included:
+    /// `partition_point` counts the whole `t <= acc` prefix, exactly
+    /// what the compare+sum counted).
     #[inline]
     pub fn threshold(&self, acc: i32, ch: usize) -> i32 {
         let ts = &self.thr_flat[ch * self.levels..(ch + 1) * self.levels];
         match self.signs[ch] {
-            s if s > 0 => ts.iter().map(|&t| (acc >= t) as i32).sum(),
-            s if s < 0 => ts.iter().map(|&t| (acc <= t) as i32).sum(),
+            // count of t with acc >= t == length of the sorted prefix
+            // where t <= acc
+            s if s > 0 => ts.partition_point(|&t| t <= acc) as i32,
+            // count of t with acc <= t == suffix beyond the t < acc prefix
+            s if s < 0 => (self.levels - ts.partition_point(|&t| t < acc)) as i32,
             _ => self.consts[ch],
         }
     }
 
     /// Product `w[row][col] * act` through the plan's multiplier array.
+    /// (The activation-major table is indexed with `geom.cout` as the
+    /// row count — the weight-row count for every conv kind.)
     #[inline]
     pub fn mul(&self, row: usize, col: usize, act: i32) -> i32 {
         match &self.mults {
@@ -255,6 +321,9 @@ impl ConvPlan {
                 mults[row * pairs + col / 2].eval(col % 2 == 1, act as u32)
             }
             Multipliers::LutTables { products, acts, .. } => {
+                products[(col * acts + act as usize) * self.geom.cout + row]
+            }
+            Multipliers::LutTablesMacMajor { products, acts, .. } => {
                 products[(row * self.cols + col) * acts + act as usize]
             }
         }
@@ -281,7 +350,8 @@ impl ConvPlan {
             Multipliers::LutDirect { mults } => {
                 mults.iter().map(ConstMultiplier::lut_count).sum()
             }
-            Multipliers::LutTables { lut6, .. } => *lut6,
+            Multipliers::LutTables { lut6, .. }
+            | Multipliers::LutTablesMacMajor { lut6, .. } => *lut6,
         }
     }
 
@@ -297,9 +367,13 @@ impl ConvPlan {
 #[derive(Debug, Clone)]
 pub struct DensePlan {
     pub name: String,
+    pub cin: usize,
     pub cout: usize,
-    /// `[CIN][COUT]`.
-    pub w_codes: Vec<Vec<i32>>,
+    /// Row-major `[CIN][COUT]` flattened weight codes — one contiguous
+    /// slice (`wflat[ci * cout + co]`), so the dense kernel reads a
+    /// contiguous `cout`-wide column per input channel instead of
+    /// chasing a `Vec<Vec<_>>` double indirection per MAC.
+    pub wflat: Vec<i32>,
     pub scale: Vec<f32>,
     pub bias: Vec<f32>,
 }
@@ -332,9 +406,10 @@ pub struct NetworkPlan {
 impl NetworkPlan {
     /// Lower a network once into per-layer plans. On `LutFabric`, every
     /// <=4-bit layer's products are memoized out of the simulated LUT6_2
-    /// primitives ([`Multipliers::LutTables`]).
+    /// primitives into activation-major tables
+    /// ([`Multipliers::LutTables`]).
     pub fn compile(net: &Network, datapath: Datapath) -> Self {
-        Self::lower(net, datapath, true)
+        Self::lower(net, datapath, TableMode::ActMajor)
     }
 
     /// Like [`compile`](Self::compile), but `LutFabric` layers keep the
@@ -342,10 +417,18 @@ impl NetworkPlan {
     /// memoized tables — the pre-compilation baseline the bench and the
     /// equivalence tests run against.
     pub fn compile_direct(net: &Network, datapath: Datapath) -> Self {
-        Self::lower(net, datapath, false)
+        Self::lower(net, datapath, TableMode::Direct)
     }
 
-    fn lower(net: &Network, datapath: Datapath, memoize: bool) -> Self {
+    /// Like [`compile`](Self::compile), but memoized tables keep the
+    /// MAC-major layout ([`Multipliers::LutTablesMacMajor`]) — the
+    /// pre-activation-major baseline `benches/bench_kernels.rs` and
+    /// `make kernel-smoke` gate the LUT-GEMM speedup against.
+    pub fn compile_mac_major(net: &Network, datapath: Datapath) -> Self {
+        Self::lower(net, datapath, TableMode::MacMajor)
+    }
+
+    fn lower(net: &Network, datapath: Datapath, mode: TableMode) -> Self {
         let mut hw = net.meta.image_size;
         let ops = net
             .ops
@@ -353,7 +436,7 @@ impl NetworkPlan {
             .map(|op| match op {
                 Op::Input { .. } => PlanOp::Input,
                 Op::Conv { .. } => {
-                    let plan = ConvPlan::build(op, hw, datapath, memoize);
+                    let plan = ConvPlan::build(op, hw, datapath, mode);
                     hw = plan.geom.out_h();
                     PlanOp::Conv(plan)
                 }
@@ -363,8 +446,9 @@ impl NetworkPlan {
                 Op::Dense { name, cout, w_codes, scale, bias, .. } => {
                     PlanOp::Dense(DensePlan {
                         name: name.clone(),
+                        cin: w_codes.len(),
                         cout: *cout,
-                        w_codes: w_codes.clone(),
+                        wflat: w_codes.iter().flatten().copied().collect(),
                         scale: scale.clone(),
                         bias: bias.clone(),
                     })
@@ -385,6 +469,15 @@ impl NetworkPlan {
     /// Number of conv stages (fold vector sizing).
     pub fn n_convs(&self) -> usize {
         self.convs().count()
+    }
+
+    /// Logit width of the dense head (`None` for a headless shard plan)
+    /// — what the executor sizes its per-image output slots from.
+    pub fn dense_cout(&self) -> Option<usize> {
+        self.ops.iter().rev().find_map(|op| match op {
+            PlanOp::Dense(d) => Some(d.cout),
+            _ => None,
+        })
     }
 
     /// Total physical LUT6 of the compiled multiplier arrays.
@@ -540,7 +633,7 @@ impl NetworkPlan {
             .iter()
             .map(|op| match op {
                 PlanOp::Conv(c) => c.macs().max(1),
-                PlanOp::Dense(d) => (d.cout * d.w_codes.len()).max(1) as u64,
+                PlanOp::Dense(d) => (d.cout * d.cin).max(1) as u64,
                 _ => 0,
             })
             .collect();
@@ -660,8 +753,9 @@ mod tests {
     fn lut_tables_match_direct_readout_and_arithmetic() {
         let mut rng = Rng::new(0xA11CE);
         let w_codes: Vec<Vec<i32>> = (0..5).map(|_| rng.vec_i32(7, -8, 7)).collect();
-        let direct = ConvPlan::lut_multipliers(&w_codes, 4, false);
-        let tables = ConvPlan::lut_multipliers(&w_codes, 4, true);
+        let direct = ConvPlan::lut_multipliers(&w_codes, 4, TableMode::Direct);
+        let tables = ConvPlan::lut_multipliers(&w_codes, 4, TableMode::ActMajor);
+        let mac = ConvPlan::lut_multipliers(&w_codes, 4, TableMode::MacMajor);
         let plan_of = |mults: Multipliers| ConvPlan {
             name: "t".into(),
             kind: ConvKind::Pw,
@@ -677,19 +771,85 @@ mod tests {
             oy_interior: (0, 1),
             ox_interior: (0, 1),
         };
-        let (pd, pt) = (plan_of(direct), plan_of(tables));
+        let (pd, pt, pm) = (plan_of(direct), plan_of(tables), plan_of(mac));
         for row in 0..5 {
             for col in 0..7 {
                 for act in 0..16 {
                     let want = w_codes[row][col] * act;
                     assert_eq!(pd.mul(row, col, act), want, "direct r{row} c{col} a{act}");
-                    assert_eq!(pt.mul(row, col, act), want, "tables r{row} c{col} a{act}");
+                    assert_eq!(pt.mul(row, col, act), want, "act-major r{row} c{col} a{act}");
+                    assert_eq!(pm.mul(row, col, act), want, "mac-major r{row} c{col} a{act}");
                 }
             }
         }
         // odd column count: the pad weight of the last pair is 0
         assert_eq!(pd.lut_count(), pt.lut_count());
+        assert_eq!(pd.lut_count(), pm.lut_count());
         assert!(pt.lut_count() > 0);
+    }
+
+    #[test]
+    fn act_major_tables_are_contiguous_per_column() {
+        // the whole point of the layout: fixing (col, act) yields the
+        // cout-wide product column contiguously
+        let mut rng = Rng::new(7);
+        let w_codes: Vec<Vec<i32>> = (0..4).map(|_| rng.vec_i32(3, -8, 7)).collect();
+        let Multipliers::LutTables { products, acts, .. } =
+            ConvPlan::lut_multipliers(&w_codes, 4, TableMode::ActMajor)
+        else {
+            panic!("ActMajor compiles to LutTables")
+        };
+        for col in 0..3 {
+            for a in 0..acts {
+                let slab = &products[(col * acts + a) * 4..(col * acts + a + 1) * 4];
+                for (row, &p) in slab.iter().enumerate() {
+                    assert_eq!(p, w_codes[row][col] * a as i32, "col {col} act {a} row {row}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not sorted ascending")]
+    fn unsorted_thresholds_are_rejected_at_compile() {
+        let mut net = Network::synthetic(&mobilenet_v2_small(), 3);
+        for op in net.ops.iter_mut() {
+            if let Op::Conv { thresholds, .. } = op {
+                thresholds[0].swap(2, 9);
+                break;
+            }
+        }
+        let _ = NetworkPlan::compile(&net, Datapath::Arithmetic);
+    }
+
+    #[test]
+    fn threshold_partition_point_matches_compare_count() {
+        // both signs, duplicate levels included: the partition point must
+        // equal the per-level compare count the kernels used to take
+        let rows = vec![vec![-3, -1, -1, 0, 2, 2, 2, 5, 9, 9, 11, 14, 14, 20, 31]];
+        let plan = ConvPlan {
+            name: "t".into(),
+            kind: ConvKind::Pw,
+            geom: ConvGeom { in_h: 1, in_w: 1, cin: 1, cout: 1, k: 1, stride: 1, pad: 0 },
+            wflat: vec![1],
+            cols: 1,
+            mults: Multipliers::Weights,
+            thr_flat: rows[0].clone(),
+            levels: 15,
+            signs: vec![1],
+            consts: vec![0],
+            tap_offsets: vec![0],
+            oy_interior: (0, 1),
+            ox_interior: (0, 1),
+        };
+        let mut neg = plan.clone();
+        neg.signs = vec![-1];
+        for acc in -6..35 {
+            let up: i32 = rows[0].iter().map(|&t| (acc >= t) as i32).sum();
+            let dn: i32 = rows[0].iter().map(|&t| (acc <= t) as i32).sum();
+            assert_eq!(plan.threshold(acc, 0), up, "sign>0 acc={acc}");
+            assert_eq!(neg.threshold(acc, 0), dn, "sign<0 acc={acc}");
+        }
     }
 
     #[test]

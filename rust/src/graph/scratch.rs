@@ -1,0 +1,198 @@
+//! Per-worker tensor arenas (DESIGN.md S20): caller-owned buffers the
+//! zero-allocation kernel engine runs in.
+//!
+//! A [`Scratch`] holds everything one in-flight image needs — a
+//! ping-pong pair of activation buffers sized from the plan's largest
+//! layer footprint, pre-sized residual-bypass slots, the pooled channel
+//! vector and the dense head's `i64` accumulator — so steady-state
+//! inference (`Executor::run_batch_into`) performs **zero heap
+//! allocation per image**: every buffer is reused across images and
+//! across batches, and `ensure` only grows capacity when the plan
+//! (or a bigger plan) demands it.
+//!
+//! A [`ScratchPool`] is the batch-level counterpart: one `Scratch` per
+//! worker thread of `Executor::run_batch`, owned by the persistent
+//! serving backend (`engine::ExecutorBackend`) so the arena survives
+//! across batches. Correctness does not depend on buffer contents:
+//! `tests/kernels_arena.rs` deliberately poisons arenas with
+//! [`Scratch::dirty`] and asserts bit-exactness against the
+//! fresh-allocation path.
+
+use super::plan::{NetworkPlan, PlanOp};
+
+/// Working buffers for one in-flight image. All fields are sized by
+/// [`ensure`](Self::ensure) before a run; kernels slice them to the
+/// current layer's exact footprint.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// Current activation tensor (flat HWC codes). Kernels read `ping`,
+    /// write `pong`, then the executor swaps the pair.
+    pub(crate) ping: Vec<i32>,
+    pub(crate) pong: Vec<i32>,
+    /// Residual-bypass slots, one per nesting depth, each with capacity
+    /// for the largest feature map (pushes `clear` + `extend` within
+    /// capacity — no allocation).
+    pub(crate) res: Vec<Vec<i32>>,
+    /// Global sum-pool output (one lane per channel).
+    pub(crate) pooled: Vec<i32>,
+    /// Dense-head accumulator (`i64` blocked accumulation).
+    pub(crate) acc64: Vec<i64>,
+}
+
+impl Scratch {
+    /// An empty arena; [`ensure`](Self::ensure) sizes it on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// An arena pre-sized for `plan` (no growth on the first image).
+    pub fn for_plan(plan: &NetworkPlan) -> Self {
+        let mut s = Self::new();
+        s.ensure(plan);
+        s
+    }
+
+    /// Grow every buffer to fit `plan`. Idempotent and grow-only — and
+    /// itself **allocation-free when already sized** (the boundary walk
+    /// below is a plain fold over the ops, no intermediate `Vec`s), so
+    /// it is safe to call on every image of the zero-allocation path.
+    pub fn ensure(&mut self, plan: &NetworkPlan) {
+        let (mut hw, mut ch) = (plan.io.image_size, plan.io.in_ch);
+        let mut max_elems = hw * hw * ch;
+        let mut max_ch = ch;
+        let (mut depth, mut res_depth) = (0usize, 0usize);
+        let mut dense_cout = 0usize;
+        for op in &plan.ops {
+            match op {
+                PlanOp::Input => {}
+                PlanOp::ResAdd { .. } => depth = depth.saturating_sub(1),
+                PlanOp::Conv(c) => {
+                    hw = c.geom.out_h();
+                    ch = c.geom.cout;
+                }
+                PlanOp::ResPush { .. } => {
+                    depth += 1;
+                    res_depth = res_depth.max(depth);
+                }
+                PlanOp::PoolSum { .. } => hw = 1,
+                PlanOp::Dense(d) => {
+                    hw = 1;
+                    ch = d.cout;
+                    dense_cout = dense_cout.max(d.cout);
+                }
+            }
+            max_elems = max_elems.max(hw * hw * ch);
+            max_ch = max_ch.max(ch);
+        }
+        if self.ping.len() < max_elems {
+            self.ping.resize(max_elems, 0);
+        }
+        if self.pong.len() < max_elems {
+            self.pong.resize(max_elems, 0);
+        }
+        while self.res.len() < res_depth {
+            self.res.push(Vec::new());
+        }
+        for slot in &mut self.res {
+            if slot.capacity() < max_elems {
+                slot.reserve(max_elems - slot.len());
+            }
+        }
+        if self.pooled.len() < max_ch {
+            self.pooled.resize(max_ch, 0);
+        }
+        if self.acc64.len() < dense_cout {
+            self.acc64.resize(dense_cout, 0);
+        }
+    }
+
+    /// Poison every buffer with `fill` — tests drive deliberately
+    /// dirtied arenas through the kernels to prove no result depends on
+    /// leftover scratch state.
+    pub fn dirty(&mut self, fill: i32) {
+        self.ping.fill(fill);
+        self.pong.fill(fill);
+        self.pooled.fill(fill);
+        self.acc64.fill(fill as i64);
+        for slot in &mut self.res {
+            slot.clear();
+            let cap = slot.capacity();
+            slot.resize(cap, fill);
+            slot.clear();
+        }
+    }
+}
+
+/// One [`Scratch`] per concurrent worker of a batch — the arena a
+/// persistent backend keeps across batches so steady-state serving
+/// never re-allocates working memory.
+#[derive(Debug, Default)]
+pub struct ScratchPool {
+    pub(crate) slots: Vec<Scratch>,
+}
+
+impl ScratchPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Make sure `n` arenas exist, each sized for `plan`.
+    pub fn ensure(&mut self, n: usize, plan: &NetworkPlan) {
+        while self.slots.len() < n {
+            self.slots.push(Scratch::new());
+        }
+        for s in self.slots.iter_mut().take(n) {
+            s.ensure(plan);
+        }
+    }
+
+    /// Poison every arena (see [`Scratch::dirty`]).
+    pub fn dirty(&mut self, fill: i32) {
+        for s in &mut self.slots {
+            s.dirty(fill);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::mobilenet_v2_small;
+    use crate::graph::network::Network;
+    use crate::graph::plan::Datapath;
+
+    #[test]
+    fn ensure_sizes_from_plan_and_is_grow_only() {
+        let net = Network::synthetic(&mobilenet_v2_small(), 1);
+        let plan = NetworkPlan::compile(&net, Datapath::Arithmetic);
+        let mut s = Scratch::for_plan(&plan);
+        let max = plan
+            .boundary_geoms()
+            .iter()
+            .map(|&(hw, ch)| hw * hw * ch)
+            .max()
+            .unwrap();
+        assert_eq!(s.ping.len(), max);
+        assert_eq!(s.pong.len(), max);
+        assert_eq!(s.acc64.len(), plan.dense_cout().unwrap());
+        let (p0, q0) = (s.ping.capacity(), s.pong.capacity());
+        s.ensure(&plan); // idempotent: no growth
+        assert_eq!(s.ping.capacity(), p0);
+        assert_eq!(s.pong.capacity(), q0);
+        s.dirty(-7);
+        assert!(s.ping.iter().all(|&v| v == -7));
+    }
+
+    #[test]
+    fn pool_holds_one_arena_per_worker() {
+        let net = Network::synthetic(&mobilenet_v2_small(), 2);
+        let plan = NetworkPlan::compile(&net, Datapath::Arithmetic);
+        let mut pool = ScratchPool::new();
+        pool.ensure(3, &plan);
+        assert_eq!(pool.slots.len(), 3);
+        pool.ensure(2, &plan); // never shrinks
+        assert_eq!(pool.slots.len(), 3);
+        pool.dirty(5);
+        assert!(pool.slots.iter().all(|s| s.ping.iter().all(|&v| v == 5)));
+    }
+}

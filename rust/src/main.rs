@@ -24,9 +24,9 @@ use anyhow::Result;
 
 use lutmul::coordinator::{Coordinator, ServeConfig};
 use lutmul::dataflow::FoldConfig;
-use lutmul::engine::{Arch, BackendKind, Engine, Folding, InferenceBackend};
+use lutmul::engine::{Arch, BackendKind, Engine, ExecutorBackend, Folding, InferenceBackend};
 use lutmul::fabric::device::U280;
-use lutmul::graph::plan::Datapath;
+use lutmul::graph::plan::{Datapath, NetworkPlan};
 use lutmul::graph::{mobilenet_v2_full, mobilenet_v2_small};
 use lutmul::runtime::Artifacts;
 use lutmul::synth::fold::{optimize_folding, Budget};
@@ -41,11 +41,14 @@ USAGE:
 COMMANDS:
   verify [--n N] [--lut-fabric]      simulate the test set; verify vs PJRT
   serve  [--requests N] [--workers N] [--max-batch N] [--devices N]
-  bench  [--backends all|LIST] [--n N] [--devices N]
+  bench  [--backends all|LIST] [--n N] [--devices N] [--json]
          run every available engine backend (executor, pipeline, sharded
          chains, PJRT when loadable) on the same inputs and print a
          bit-exactness + throughput comparison; LIST is comma-joined
-         reference|pipeline|sharded|pjrt
+         reference|pipeline|sharded|pjrt. --json emits one machine-
+         readable {backend, datapath, images_per_s, ns_per_image,
+         bit_exact} row per backend on stdout (human table moves to
+         stderr) — `make bench-json` writes it to BENCH_kernels.json
   synth  [--arch full|small] [--fraction D]
   util   [--arch full|small]          Vivado-style utilization report
   netlist [--layer NAME]              structural Verilog for a trained layer
@@ -148,12 +151,13 @@ fn main() -> Result<()> {
             )
         }
         Some("bench") => {
-            args.check_flags("bench", &["artifacts", "backends", "n", "devices"])?;
+            args.check_flags("bench", &["artifacts", "backends", "n", "devices", "json"])?;
             bench_backends(
                 &artifacts,
                 &args.get::<String>("backends", "all".into())?,
                 args.get("n", 8usize)?,
                 args.get("devices", 2usize)?,
+                args.has("json"),
             )
         }
         Some("synth") => {
@@ -319,7 +323,29 @@ fn serve(
 /// `InferenceBackend` contract and print a bit-exactness + throughput
 /// comparison table. Exits nonzero when any executed backend diverges
 /// from the reference executor, so CI gates on it (`make engine-smoke`).
-fn bench_backends(artifacts: &Artifacts, which: &str, n: usize, devices: usize) -> Result<()> {
+///
+/// With `--json` the human table moves to stderr and stdout carries one
+/// JSON document with a `{backend, datapath, images_per_s, ns_per_image,
+/// bit_exact}` row per executed backend — `make bench-json` overwrites
+/// `BENCH_kernels.json` with it, and the trajectory is the sequence of
+/// committed versions of that file (EXPERIMENTS.md E13). The document is
+/// emitted even when a backend diverged: its row then carries
+/// `bit_exact: false`, so a broken run can never masquerade as a
+/// plausible trajectory point.
+fn bench_backends(
+    artifacts: &Artifacts,
+    which: &str,
+    n: usize,
+    devices: usize,
+    json: bool,
+) -> Result<()> {
+    // human-readable lines: stdout normally, stderr under --json so the
+    // JSON document is the only thing on stdout
+    macro_rules! say {
+        ($($t:tt)*) => {
+            if json { eprintln!($($t)*) } else { println!($($t)*) }
+        };
+    }
     let mut engine = Engine::builder()
         .arch(Arch::Small)
         .artifacts(artifacts)
@@ -329,7 +355,7 @@ fn bench_backends(artifacts: &Artifacts, which: &str, n: usize, devices: usize) 
     let n = n.max(1);
     let images = engine.images(n)?;
     let io = engine.io();
-    println!(
+    say!(
         "backend comparison: {} | {n} images ({}x{}x{} codes)",
         engine.source().label(),
         io.image_size,
@@ -337,11 +363,15 @@ fn bench_backends(artifacts: &Artifacts, which: &str, n: usize, devices: usize) 
         io.in_ch
     );
 
+    // machine-readable rows: (backend, datapath, img/s, bit-exact)
+    let mut rows: Vec<(String, String, f64, bool)> = Vec::new();
+
     // the reference logits every other backend must reproduce
     let t0 = std::time::Instant::now();
     let reference = engine.infer_batch(&images)?;
     let ref_ips = n as f64 / t0.elapsed().as_secs_f64();
-    println!("  {:<22} {ref_ips:>9.0} img/s | reference", engine.backend_name());
+    say!("  {:<22} {ref_ips:>9.0} img/s | reference", engine.backend_name());
+    rows.push((engine.backend_name().to_string(), "arithmetic".into(), ref_ips, true));
 
     // the user's device count is used as given — out of range is a hard
     // error, not a silent clamp (same contract as the flag parser), but
@@ -374,31 +404,36 @@ fn bench_backends(artifacts: &Artifacts, which: &str, n: usize, devices: usize) 
 
     // one row per backend: time it, compare against the reference
     // logits, account divergence — shared by the kind loop and the
-    // cross-datapath witness below so the format cannot drift
+    // cross-datapath witnesses below so the format cannot drift
     let mut diverged = 0usize;
     let mut compared = 0usize;
     let mut ran = 0usize; // requested backends that executed at all
-    let mut row = |b: &mut dyn InferenceBackend| -> Result<()> {
-        let t0 = std::time::Instant::now();
-        let out = b.infer_batch(&images)?;
-        let ips = n as f64 / t0.elapsed().as_secs_f64();
-        let exact = out.logits == reference.logits;
-        compared += 1;
-        if !exact {
-            diverged += 1;
-        }
-        let cycles = if out.cycles > 0 {
-            format!(" | {} sim cycles", out.cycles)
-        } else {
-            String::new()
+    // `display` overrides the backend's own name when several backends
+    // share one (the three LUT-fabric executors would otherwise print
+    // three indistinguishable "executor/lut-fabric" rows)
+    let mut row =
+        |b: &mut dyn InferenceBackend, datapath: &str, display: Option<&str>| -> Result<()> {
+            let t0 = std::time::Instant::now();
+            let out = b.infer_batch(&images)?;
+            let ips = n as f64 / t0.elapsed().as_secs_f64();
+            let exact = out.logits == reference.logits;
+            compared += 1;
+            if !exact {
+                diverged += 1;
+            }
+            let cycles = if out.cycles > 0 {
+                format!(" | {} sim cycles", out.cycles)
+            } else {
+                String::new()
+            };
+            let shown = display.unwrap_or(b.name());
+            say!(
+                "  {shown:<22} {ips:>9.0} img/s | {}{cycles}",
+                if exact { format!("bit-exact {n}/{n}") } else { "DIVERGED".into() },
+            );
+            rows.push((shown.to_string(), datapath.to_string(), ips, exact));
+            Ok(())
         };
-        println!(
-            "  {:<22} {ips:>9.0} img/s | {}{cycles}",
-            b.name(),
-            if exact { format!("bit-exact {n}/{n}") } else { "DIVERGED".into() },
-        );
-        Ok(())
-    };
 
     for kind in kinds {
         // the reference executor is already the baseline row; a second
@@ -408,14 +443,18 @@ fn bench_backends(artifacts: &Artifacts, which: &str, n: usize, devices: usize) 
             ran += 1; // explicitly requested, and the baseline did run
             continue;
         }
+        let datapath = match kind {
+            BackendKind::Pjrt { .. } => "hlo",
+            _ => "arithmetic",
+        };
         match engine.make_backend(kind) {
             Ok(mut b) => {
-                row(b.as_mut())?;
+                row(b.as_mut(), datapath, None)?;
                 ran += 1;
             }
             // an unavailable backend (PJRT without the `xla` feature or
             // without artifacts) is reported, not silently dropped
-            Err(e) => println!("  {:<22} unavailable ({e})", kind.label()),
+            Err(e) => say!("  {:<22} unavailable ({e})", kind.label()),
         }
     }
 
@@ -429,8 +468,50 @@ fn bench_backends(artifacts: &Artifacts, which: &str, n: usize, devices: usize) 
             .datapath(Datapath::LutFabric)
             .backend(BackendKind::Reference)
             .build()?;
-        row(lf.backend())?;
+        row(lf.backend(), "lut-fabric", None)?;
         ran += 1;
+
+        // kernel-layout witnesses (DESIGN.md S20 perf trajectory): the
+        // same LUT-fabric network with the MAC-major table layout and
+        // the per-MAC LUT6_2 readout — both must stay bit-identical,
+        // and their rows chart the activation-major speedup over time
+        let threads = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+        for (datapath, display, plan) in [
+            (
+                "lut-fabric/mac-major",
+                "executor/lut-mac-major",
+                NetworkPlan::compile_mac_major(lf.net(), Datapath::LutFabric),
+            ),
+            (
+                "lut-fabric/direct",
+                "executor/lut-direct",
+                NetworkPlan::compile_direct(lf.net(), Datapath::LutFabric),
+            ),
+        ] {
+            let mut b = ExecutorBackend::new(std::sync::Arc::new(plan), threads);
+            row(&mut b, datapath, Some(display))?;
+            ran += 1;
+        }
+    }
+
+    if json {
+        let body: Vec<String> = rows
+            .iter()
+            .map(|(backend, datapath, ips, exact)| {
+                format!(
+                    "    {{\"backend\": {backend:?}, \"datapath\": {datapath:?}, \
+                     \"images_per_s\": {ips:.1}, \"ns_per_image\": {:.0}, \
+                     \"bit_exact\": {exact}}}",
+                    1e9 / ips.max(1e-9)
+                )
+            })
+            .collect();
+        println!(
+            "{{\n  \"bench\": \"lutmul bench --backends {which} --n {n} --json\",\n  \
+             \"source\": {:?},\n  \"n_images\": {n},\n  \"rows\": [\n{}\n  ]\n}}",
+            engine.source().label(),
+            body.join(",\n")
+        );
     }
 
     anyhow::ensure!(
@@ -439,12 +520,12 @@ fn bench_backends(artifacts: &Artifacts, which: &str, n: usize, devices: usize) 
     );
     anyhow::ensure!(ran > 0, "none of the requested backends could run");
     if compared > 0 {
-        println!("OK: {compared} backend(s) bit-exact vs the reference executor");
+        say!("OK: {compared} backend(s) bit-exact vs the reference executor");
     } else {
         // e.g. `--backends reference`: the baseline ran and is healthy,
         // but nothing was compared — say so instead of claiming a
         // comparison that never happened
-        println!("OK: reference executor only (no comparison backends ran)");
+        say!("OK: reference executor only (no comparison backends ran)");
     }
     Ok(())
 }

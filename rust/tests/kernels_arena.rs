@@ -1,0 +1,121 @@
+//! Arena-reuse properties (DESIGN.md S20, no artifacts needed): on
+//! randomized synthetic networks, running images through a deliberately
+//! **dirtied** `Scratch`/`ScratchPool` must be bit-exact with the
+//! fresh-allocation path (`Executor::execute`, which builds a new arena
+//! per call) and with the per-MAC LUT6_2 readout baseline
+//! (`NetworkPlan::compile_direct`) — across both datapaths and both
+//! memoized table layouts. Leftover state in a reused arena must never
+//! leak into a result.
+
+mod common;
+
+use lutmul::graph::executor::{Datapath, Executor, Tensor};
+use lutmul::graph::network::{Network, Op};
+use lutmul::graph::plan::NetworkPlan;
+use lutmul::graph::{Scratch, ScratchPool};
+use lutmul::util::prop::{self, Rng};
+
+fn tensors_for(rng: &mut Rng, net: &Network, n: usize) -> Vec<Tensor> {
+    let (s, c) = (net.meta.image_size, net.meta.in_ch);
+    common::random_images(rng, net, n)
+        .into_iter()
+        .map(|d| Tensor::from_hwc(s, s, c, d))
+        .collect()
+}
+
+#[test]
+fn prop_dirty_arena_matches_fresh_allocation_and_direct_readout() {
+    prop::cases(8, |rng| {
+        let spec = common::random_spec(rng);
+        let net = Network::synthetic(&spec, rng.next_u64());
+        let tensors = tensors_for(rng, &net, 3);
+        for dp in [Datapath::Arithmetic, Datapath::LutFabric] {
+            let ex = Executor::new(&net, dp);
+            // fresh-allocation reference: a new arena per call
+            let want: Vec<Vec<f32>> = tensors.iter().map(|t| ex.execute(t)).collect();
+
+            // one poisoned arena reused across every image
+            let nc = ex.plan().dense_cout().expect("dense head");
+            let mut scratch = Scratch::for_plan(ex.plan());
+            let mut logits = vec![f32::NAN; nc];
+            for (t, w) in tensors.iter().zip(&want) {
+                scratch.dirty(rng.range_i32(-9, 9));
+                ex.execute_into(t, &mut scratch, &mut logits);
+                assert_eq!(&logits, w, "dirty Scratch ({dp:?}, hw={})", net.meta.image_size);
+            }
+
+            // poisoned pool through the batch path, 1 and 3 threads
+            let mut pool = ScratchPool::new();
+            let mut out = Vec::new();
+            for threads in [1usize, 3] {
+                pool.dirty(-5);
+                ex.run_batch_into(&tensors, threads, &mut pool, &mut out);
+                assert_eq!(out, want, "dirty pool, {threads} threads ({dp:?})");
+            }
+
+            // independent witnesses: per-MAC readout and the MAC-major
+            // table layout, fresh arenas
+            let direct = Executor::from_plan(NetworkPlan::compile_direct(&net, dp));
+            let mac = Executor::from_plan(NetworkPlan::compile_mac_major(&net, dp));
+            for (t, w) in tensors.iter().zip(&want) {
+                assert_eq!(&direct.execute(t), w, "compile_direct ({dp:?})");
+                assert_eq!(&mac.execute(t), w, "compile_mac_major ({dp:?})");
+            }
+        }
+    });
+}
+
+#[test]
+fn dirty_arena_handles_residual_state() {
+    // residual bypass slots live in the arena; a poisoned slot must not
+    // leak into the join
+    let mut rng = Rng::new(0xA3E4A);
+    let spec = common::random_spec(&mut rng);
+    let mut net = Network::synthetic(&spec, 77);
+    // wrap a shape-preserving conv (cin == cout, stride 1) in a
+    // residual block — push before it, join after it — so the bypass
+    // slot actually carries a feature map; specs without such a conv
+    // just run residual-free
+    let wrap = net.ops.iter().position(|op| {
+        matches!(op, Op::Conv { cin, cout, stride, .. } if cin == cout && *stride == 1)
+    });
+    if let Some(i) = wrap {
+        net.ops.insert(i, Op::ResPush {});
+        net.ops.insert(i + 2, Op::ResAdd { bits: 4 });
+    }
+    let ex = Executor::new(&net, Datapath::LutFabric);
+    let tensors = tensors_for(&mut rng, &net, 4);
+    let want: Vec<Vec<f32>> = tensors.iter().map(|t| ex.execute(t)).collect();
+    let mut pool = ScratchPool::new();
+    let mut out = Vec::new();
+    pool.ensure(1, ex.plan());
+    pool.dirty(13);
+    ex.run_batch_into(&tensors, 1, &mut pool, &mut out);
+    assert_eq!(out, want);
+}
+
+#[test]
+fn one_arena_serves_differently_shaped_plans() {
+    // ensure() is grow-only: the same Scratch must serve a small plan
+    // after a big one and vice versa, bit-exactly
+    let mut rng = Rng::new(0x5CA1E);
+    let (spec_a, spec_b) = (common::random_spec(&mut rng), common::random_spec(&mut rng));
+    let net_a = Network::synthetic(&spec_a, 1);
+    let net_b = Network::synthetic(&spec_b, 2);
+    let (ex_a, ex_b) =
+        (Executor::new(&net_a, Datapath::LutFabric), Executor::new(&net_b, Datapath::LutFabric));
+    let ta = tensors_for(&mut rng, &net_a, 2);
+    let tb = tensors_for(&mut rng, &net_b, 2);
+    let mut scratch = Scratch::new();
+    for _ in 0..2 {
+        for (ex, ts) in [(&ex_a, &ta), (&ex_b, &tb)] {
+            let nc = ex.plan().dense_cout().unwrap();
+            let mut logits = vec![0.0f32; nc];
+            for t in ts.iter() {
+                scratch.dirty(-3);
+                ex.execute_into(t, &mut scratch, &mut logits);
+                assert_eq!(logits, ex.execute(t));
+            }
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Steady-state zero-allocation gate (DESIGN.md S20): after the first
+//! batch has sized the arenas, `Executor::run_batch_into` must perform
+//! **zero heap allocations** — not per image, none at all — on the
+//! single-thread path. Asserted with a counting global allocator, which
+//! is why this test lives alone in its own binary: any other test
+//! thread allocating during the measured window would pollute the
+//! count.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+use lutmul::graph::executor::{Datapath, Executor, Tensor};
+use lutmul::graph::mobilenet_v2_small;
+use lutmul::graph::network::Network;
+use lutmul::graph::ScratchPool;
+use lutmul::util::prop::Rng;
+
+static COUNTING: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+/// Delegates to the system allocator, counting every allocation made
+/// while the window is open.
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_run_batch_makes_zero_allocations() {
+    let net = Network::synthetic(&mobilenet_v2_small(), 0xA10C);
+    let io = net.io();
+    let (s, c) = (io.image_size, io.in_ch);
+    let mut rng = Rng::new(4);
+    let images: Vec<Tensor> = (0..8)
+        .map(|_| Tensor::from_hwc(s, s, c, rng.vec_i32(s * s * c, 0, 15)))
+        .collect();
+    for dp in [Datapath::Arithmetic, Datapath::LutFabric] {
+        let ex = Executor::new(&net, dp);
+        let mut pool = ScratchPool::new();
+        let mut out = Vec::new();
+        // first batch sizes the arenas and the output slots...
+        ex.run_batch_into(&images, 1, &mut pool, &mut out);
+        let want = out.clone();
+        // ...every later batch must reuse them outright
+        ALLOCS.store(0, Ordering::SeqCst);
+        COUNTING.store(true, Ordering::SeqCst);
+        ex.run_batch_into(&images, 1, &mut pool, &mut out);
+        COUNTING.store(false, Ordering::SeqCst);
+        let n = ALLOCS.load(Ordering::SeqCst);
+        assert_eq!(
+            n, 0,
+            "steady-state run_batch_into made {n} heap allocations on {dp:?} \
+             (expected zero: every buffer lives in the persistent arena)"
+        );
+        assert_eq!(out, want, "steady-state batch changed its results ({dp:?})");
+    }
+}
