@@ -4,7 +4,7 @@
 
 PYTHON ?= python3
 
-.PHONY: artifacts artifacts-fig2 test-python test-rust bench-smoke multi-smoke engine-smoke kernel-smoke bench-json doc lint
+.PHONY: artifacts artifacts-fig2 test-python test-rust bench-smoke multi-smoke engine-smoke kernel-smoke serve-smoke bench-json doc lint
 
 artifacts:
 	mkdir -p artifacts
@@ -57,6 +57,17 @@ kernel-smoke:
 	cd rust && cargo bench --bench bench_kernels -- --smoke
 	cd rust && cargo test -q --test zero_alloc --test kernels_arena
 	cd rust && cargo run --release -- bench --backends all --n 6
+
+# Serving-tier smoke (DESIGN.md S21, EXPERIMENTS.md E14): the serve/chaos
+# integration suites (ordering, bit-exactness across the wire, worker
+# failure/rebuild, socket-driven backpressure, deadline sheds), then
+# `lutmul loadgen --smoke` — a self-hosted TCP server under calibrated
+# open-loop steady/burst/shed phases, gated on zero lost requests, zero
+# reordering, sustained goodput, a bounded p99 and a live shed path.
+# Exits nonzero on any violation, so CI gates on it.
+serve-smoke:
+	cd rust && cargo test -q --test serve --test chaos
+	cd rust && cargo run --release -- loadgen --smoke --duration-ms 600
 
 # Machine-readable perf trajectory (EXPERIMENTS.md E13): one
 # {backend, datapath, images_per_s, ns_per_image, bit_exact} row per

@@ -1,10 +1,16 @@
-//! Serving metrics: throughput, latency percentiles, GOPS, per-batch
-//! dispatch statistics (batch-size histogram + batch service-time
-//! percentiles) for the batch-major execution path (EXPERIMENTS.md E9),
-//! and per-shard occupancy/stall counters for the sharded backend
-//! (DESIGN.md S18). Workers feed the shard counters from
-//! `BatchOutput::counters` — whatever `InferenceBackend` reports them
-//! (DESIGN.md S19).
+//! Serving metrics: throughput, latency percentiles split into queue
+//! wait vs backend compute (DESIGN.md S21), GOPS, per-batch dispatch
+//! statistics (batch-size histogram + batch service-time percentiles)
+//! for the batch-major execution path (EXPERIMENTS.md E9), shed/failed
+//! request accounting for deadline-aware admission, and per-shard
+//! occupancy/stall counters for the sharded backend (DESIGN.md S18).
+//! Workers feed the shard counters from `BatchOutput::counters` —
+//! whatever `InferenceBackend` reports them (DESIGN.md S19).
+//!
+//! Every counter in here is cumulative over the coordinator's lifetime,
+//! so successive [`MetricsSummary`] snapshots are monotonic by
+//! construction — the chaos suite (`rust/tests/chaos.rs`) asserts that
+//! invariant survives worker failures and rebuilds.
 
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
@@ -20,8 +26,20 @@ pub use crate::dataflow::pipeline::ShardCounters as ShardOccupancy;
 #[derive(Debug)]
 pub struct Metrics {
     latencies_us: Vec<u64>,
+    /// Per-request time from submit to worker dispatch (queueing +
+    /// batch-forming window).
+    queue_us: Vec<u64>,
+    /// Per-request backend service time of the batch the request rode in
+    /// (the `infer_batch` call alone).
+    compute_us: Vec<u64>,
     started: Instant,
     completed: u64,
+    /// Requests shed before compute because their deadline had already
+    /// expired (DESIGN.md S21 admission control).
+    shed_deadline: u64,
+    /// Requests that resolved with a structured worker/backend failure
+    /// (the backend was rebuilt through the factory afterwards).
+    failed: u64,
     ops_per_image: u64,
     /// Size of every dispatched batch, in dispatch order.
     batch_sizes: Vec<usize>,
@@ -37,8 +55,12 @@ impl Metrics {
     pub fn new(ops_per_image: u64) -> Self {
         Self {
             latencies_us: Vec::new(),
+            queue_us: Vec::new(),
+            compute_us: Vec::new(),
             started: Instant::now(),
             completed: 0,
+            shed_deadline: 0,
+            failed: 0,
             ops_per_image,
             batch_sizes: Vec::new(),
             batch_service_us: Vec::new(),
@@ -49,6 +71,25 @@ impl Metrics {
     pub fn record(&mut self, latency: Duration) {
         self.latencies_us.push(latency.as_micros() as u64);
         self.completed += 1;
+    }
+
+    /// Record one completed request's latency split: total submit-to-done
+    /// `latency`, the queue/window share `queue`, and the backend service
+    /// share `compute` (the batch's `infer_batch` time).
+    pub fn record_split(&mut self, latency: Duration, queue: Duration, compute: Duration) {
+        self.record(latency);
+        self.queue_us.push(queue.as_micros() as u64);
+        self.compute_us.push(compute.as_micros() as u64);
+    }
+
+    /// Record `n` requests shed before compute on an expired deadline.
+    pub fn record_shed(&mut self, n: usize) {
+        self.shed_deadline += n as u64;
+    }
+
+    /// Record `n` requests that resolved with a worker/backend failure.
+    pub fn record_failed(&mut self, n: usize) {
+        self.failed += n as u64;
     }
 
     /// Record one dispatched batch: its size and the backend service time
@@ -84,6 +125,16 @@ impl Metrics {
         self.completed
     }
 
+    /// Requests shed before compute on an expired deadline.
+    pub fn shed_deadline(&self) -> u64 {
+        self.shed_deadline
+    }
+
+    /// Requests resolved with a structured worker failure.
+    pub fn failed(&self) -> u64 {
+        self.failed
+    }
+
     /// Number of batches dispatched to workers.
     pub fn batches(&self) -> u64 {
         self.batch_sizes.len() as u64
@@ -106,6 +157,14 @@ impl Metrics {
         hist.into_iter().collect()
     }
 
+    /// Log2-bucketed histogram of end-to-end latencies:
+    /// `(bucket_upper_us, count)` ascending, empty buckets skipped. The
+    /// loadgen table prints the same shape client-side, so server- and
+    /// client-observed tails compare bucket for bucket.
+    pub fn latency_histogram(&self) -> Vec<(u64, u64)> {
+        log2_histogram(&self.latencies_us)
+    }
+
     /// Requests per second since construction.
     pub fn throughput_rps(&self) -> f64 {
         self.completed as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
@@ -120,6 +179,16 @@ impl Metrics {
         percentile(&self.latencies_us, p)
     }
 
+    /// Percentile over per-request queue/window wait times.
+    pub fn queue_percentile_us(&self, p: f64) -> u64 {
+        percentile(&self.queue_us, p)
+    }
+
+    /// Percentile over per-request backend compute times.
+    pub fn compute_percentile_us(&self, p: f64) -> u64 {
+        percentile(&self.compute_us, p)
+    }
+
     /// Percentile over per-batch backend service times.
     pub fn batch_service_percentile_us(&self, p: f64) -> u64 {
         percentile(&self.batch_service_us, p)
@@ -130,10 +199,17 @@ impl Metrics {
         let thr = self.throughput_rps();
         MetricsSummary {
             completed: self.completed,
+            shed_deadline: self.shed_deadline,
+            failed: self.failed,
+            rejected: 0, // the coordinator owns the admission counter
             throughput_rps: thr,
             gops: thr * self.ops_per_image as f64 / 1e9,
             p50_us: self.percentile_us(50.0),
             p99_us: self.percentile_us(99.0),
+            queue_p50_us: self.queue_percentile_us(50.0),
+            queue_p99_us: self.queue_percentile_us(99.0),
+            compute_p50_us: self.compute_percentile_us(50.0),
+            compute_p99_us: self.compute_percentile_us(99.0),
             batches: self.batches(),
             mean_batch: self.mean_batch(),
             batch_p50_us: self.batch_service_percentile_us(50.0),
@@ -154,14 +230,43 @@ fn percentile(samples: &[u64], p: f64) -> u64 {
     v[idx.min(v.len() - 1)]
 }
 
+/// Log2 buckets over microsecond samples: `(bucket_upper_us, count)`
+/// ascending with empty buckets skipped. Shared by the server metrics
+/// and the loadgen's client-side table.
+pub fn log2_histogram(samples_us: &[u64]) -> Vec<(u64, u64)> {
+    let mut hist: BTreeMap<u64, u64> = BTreeMap::new();
+    for &s in samples_us {
+        // bucket upper bound: the next power of two at or above s (1 us
+        // minimum so zero-latency samples land in a real bucket)
+        let upper = s.max(1).next_power_of_two();
+        *hist.entry(upper).or_insert(0) += 1;
+    }
+    hist.into_iter().collect()
+}
+
 /// Immutable snapshot for reporting.
 #[derive(Debug, Clone)]
 pub struct MetricsSummary {
     pub completed: u64,
+    /// Requests shed before compute on an expired deadline.
+    pub shed_deadline: u64,
+    /// Requests resolved with a structured worker/backend failure.
+    pub failed: u64,
+    /// Requests bounced at admission (queue full) — filled in by the
+    /// coordinator, which owns the atomic counter.
+    pub rejected: u64,
     pub throughput_rps: f64,
     pub gops: f64,
     pub p50_us: u64,
     pub p99_us: u64,
+    /// p50 of per-request queue/batch-window wait.
+    pub queue_p50_us: u64,
+    /// p99 of per-request queue/batch-window wait.
+    pub queue_p99_us: u64,
+    /// p50 of per-request backend compute share.
+    pub compute_p50_us: u64,
+    /// p99 of per-request backend compute share.
+    pub compute_p99_us: u64,
     /// Batches dispatched to workers.
     pub batches: u64,
     /// Mean images per dispatched batch.
@@ -179,17 +284,28 @@ impl std::fmt::Display for MetricsSummary {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{} reqs | {:.1} req/s | {:.2} GOPS | p50 {} us | p99 {} us | {} batches (mean {:.1} img) | batch service p50 {} us p99 {} us",
+            "{} reqs | {:.1} req/s | {:.2} GOPS | p50 {} us | p99 {} us (queue {}/{} us, compute {}/{} us) | {} batches (mean {:.1} img) | batch service p50 {} us p99 {} us",
             self.completed,
             self.throughput_rps,
             self.gops,
             self.p50_us,
             self.p99_us,
+            self.queue_p50_us,
+            self.queue_p99_us,
+            self.compute_p50_us,
+            self.compute_p99_us,
             self.batches,
             self.mean_batch,
             self.batch_p50_us,
             self.batch_p99_us
         )?;
+        if self.shed_deadline > 0 || self.rejected > 0 || self.failed > 0 {
+            write!(
+                f,
+                " | shed {} | rejected {} | failed {}",
+                self.shed_deadline, self.rejected, self.failed
+            )?;
+        }
         for (i, s) in self.shards.iter().enumerate() {
             write!(
                 f,
@@ -227,7 +343,12 @@ mod tests {
         assert_eq!(m.batches(), 0);
         assert_eq!(m.mean_batch(), 0.0);
         assert_eq!(m.batch_service_percentile_us(99.0), 0);
+        assert_eq!(m.queue_percentile_us(99.0), 0);
+        assert_eq!(m.compute_percentile_us(99.0), 0);
+        assert_eq!(m.shed_deadline(), 0);
+        assert_eq!(m.failed(), 0);
         assert!(m.batch_histogram().is_empty());
+        assert!(m.latency_histogram().is_empty());
     }
 
     #[test]
@@ -259,6 +380,50 @@ mod tests {
         assert_eq!(s.batch_p99_us, 600);
         // summary line mentions the batch stats
         assert!(s.to_string().contains("3 batches"));
+    }
+
+    #[test]
+    fn split_and_shed_counters() {
+        let mut m = Metrics::new(1);
+        m.record_split(
+            Duration::from_micros(300),
+            Duration::from_micros(200),
+            Duration::from_micros(100),
+        );
+        m.record_split(
+            Duration::from_micros(500),
+            Duration::from_micros(440),
+            Duration::from_micros(60),
+        );
+        m.record_shed(3);
+        m.record_failed(2);
+        assert_eq!(m.completed(), 2);
+        assert_eq!(m.shed_deadline(), 3);
+        assert_eq!(m.failed(), 2);
+        let s = m.summary();
+        assert_eq!(s.queue_p99_us, 440);
+        assert_eq!(s.compute_p99_us, 100);
+        assert_eq!(s.queue_p50_us, 200);
+        assert_eq!(s.compute_p50_us, 60);
+        assert_eq!(s.shed_deadline, 3);
+        assert_eq!(s.failed, 2);
+        assert_eq!(s.rejected, 0, "rejected is the coordinator's to fill");
+        let line = s.to_string();
+        assert!(line.contains("queue 200/440 us"), "{line}");
+        assert!(line.contains("shed 3"), "{line}");
+        assert!(line.contains("failed 2"), "{line}");
+    }
+
+    #[test]
+    fn log2_histogram_buckets() {
+        assert!(log2_histogram(&[]).is_empty());
+        let h = log2_histogram(&[0, 1, 2, 3, 5, 900, 1000, 1024]);
+        // 0,1 -> 1; 2 -> 2; 3 -> 4; 5 -> 8; 900,1000,1024 -> 1024
+        assert_eq!(h, vec![(1, 2), (2, 1), (4, 1), (8, 1), (1024, 3)]);
+        let mut m = Metrics::new(1);
+        m.record(Duration::from_micros(3));
+        m.record(Duration::from_micros(700));
+        assert_eq!(m.latency_histogram(), vec![(4, 1), (1024, 1)]);
     }
 
     #[test]

@@ -10,5 +10,7 @@
 pub mod metrics;
 pub mod server;
 
-pub use metrics::{Metrics, MetricsSummary, ShardOccupancy};
-pub use server::{argmax, Coordinator, InferenceResult, ServeConfig, Ticket};
+pub use metrics::{log2_histogram, Metrics, MetricsSummary, ShardOccupancy};
+pub use server::{
+    argmax, Coordinator, InferenceResult, ServeConfig, ServeError, SubmitError, Ticket,
+};

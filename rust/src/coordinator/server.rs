@@ -1,5 +1,5 @@
-//! Serving coordinator (DESIGN.md S10): request router + dynamic batcher
-//! + worker pool over the engine's inference backends.
+//! Serving coordinator (DESIGN.md S10/S21): request router + dynamic
+//! batcher + worker pool over the engine's inference backends.
 //!
 //! The request path is pure Rust (Python never runs here): images arrive
 //! as uint8 code vectors, the batcher groups them (size- or timeout-
@@ -23,6 +23,15 @@
 //! [`BatchOutput::counters`](crate::engine::BatchOutput) into the
 //! metrics.
 //!
+//! Every in-flight request resolves to a result or a structured
+//! [`ServeError`] — a worker whose backend dies mid-batch fails the
+//! batch's tickets with [`ServeError::WorkerFailed`] and rebuilds its
+//! backend through the factory; nothing is silently dropped. Requests
+//! carry an optional deadline: a request whose deadline has already
+//! expired when its batch is dispatched is shed *before* compute
+//! ([`ServeError::DeadlineExceeded`]), so an overloaded queue spends no
+//! backend cycles on answers nobody is waiting for (DESIGN.md S21).
+//!
 //! All backends are bit-exact w.r.t. the JAX golden model
 //! (`rust/tests/engine.rs` is the cross-backend conformance suite; the
 //! PJRT runtime provides the golden check at startup via
@@ -37,7 +46,7 @@ use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryS
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::engine::Engine;
+use crate::engine::{BackendFactory, Engine};
 
 use super::metrics::{Metrics, MetricsSummary, ShardOccupancy};
 
@@ -63,11 +72,70 @@ impl Default for ServeConfig {
     }
 }
 
+/// Structured failure of one in-flight request. Every ticket resolves to
+/// `Ok(InferenceResult)` or one of these — the serving tier maps them
+/// onto wire statuses (`serve::proto::Status`), and the chaos suite
+/// asserts no request ever just vanishes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Shed before compute: the deadline had already expired when the
+    /// batch was dispatched (`waited_us` is the time spent queued).
+    DeadlineExceeded { waited_us: u64 },
+    /// The worker's backend failed mid-batch; the backend was rebuilt
+    /// through the engine's factory, this request was not retried.
+    WorkerFailed(String),
+    /// The coordinator shut down with the request in flight.
+    Disconnected,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::DeadlineExceeded { waited_us } => {
+                write!(f, "deadline expired before compute (queued {waited_us} us)")
+            }
+            ServeError::WorkerFailed(msg) => write!(f, "worker backend failed: {msg}"),
+            ServeError::Disconnected => write!(f, "coordinator stopped with request in flight"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Typed admission failure of [`Coordinator::try_submit`] — the serving
+/// tier matches on it to pick a wire status instead of parsing strings.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Queue full: backpressure. Counted in [`Coordinator::rejected`].
+    Rejected,
+    /// The request's image does not match the served network's geometry.
+    BadShape { got: usize, want: usize },
+    /// The coordinator has shut down.
+    Shutdown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Rejected => write!(f, "queue full (backpressure)"),
+            SubmitError::BadShape { got, want } => {
+                write!(f, "image has {got} codes, the served network expects {want}")
+            }
+            SubmitError::Shutdown => write!(f, "coordinator stopped"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
 /// One queued request.
 struct Request {
     image: Vec<i32>,
     enqueued: Instant,
-    resp: SyncSender<InferenceResult>,
+    /// Absolute shed point: expired requests are dropped at dispatch,
+    /// before any backend cycles are spent on them.
+    deadline: Option<Instant>,
+    resp: SyncSender<Result<InferenceResult, ServeError>>,
 }
 
 /// Inference response.
@@ -80,13 +148,19 @@ pub struct InferenceResult {
 
 /// A pending response handle.
 pub struct Ticket {
-    rx: Receiver<InferenceResult>,
+    rx: Receiver<Result<InferenceResult, ServeError>>,
 }
 
 impl Ticket {
-    /// Block until the result is ready.
-    pub fn wait(self) -> anyhow::Result<InferenceResult> {
-        self.rx.recv().map_err(|_| anyhow::anyhow!("worker dropped request"))
+    /// Block until the result is ready: the inference output, or the
+    /// structured reason it will never come.
+    pub fn wait(self) -> Result<InferenceResult, ServeError> {
+        match self.rx.recv() {
+            Ok(res) => res,
+            // the worker/coordinator dropped the channel without a
+            // verdict (pool shut down mid-flight)
+            Err(_) => Err(ServeError::Disconnected),
+        }
     }
 }
 
@@ -111,9 +185,28 @@ impl Coordinator {
     /// without the `xla` feature — fails here rather than inside a
     /// worker thread).
     pub fn start(engine: &Engine, cfg: ServeConfig) -> anyhow::Result<Self> {
+        let io = engine.io();
+        Self::start_with(
+            engine.backend_factory(cfg.workers.max(1)),
+            io.image_size * io.image_size * io.in_ch,
+            engine.net().ops_per_image(),
+            cfg,
+        )
+    }
+
+    /// Start the pool over an explicit backend factory. This is the
+    /// seam the chaos suite injects flaky/slow backends through
+    /// (`rust/tests/chaos.rs`); `start` is the engine-shaped wrapper.
+    /// `image_px` is the expected codes per image and `ops_per_image`
+    /// the GOPS denominator of the served network.
+    pub fn start_with(
+        factory: BackendFactory,
+        image_px: usize,
+        ops_per_image: u64,
+        cfg: ServeConfig,
+    ) -> anyhow::Result<Self> {
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
-        // GOPS denominator from the network actually being served
-        let metrics = Arc::new(Mutex::new(Metrics::new(engine.net().ops_per_image())));
+        let metrics = Arc::new(Mutex::new(Metrics::new(ops_per_image)));
         let rejected = Arc::new(AtomicU64::new(0));
         let mut threads = Vec::new();
 
@@ -121,7 +214,6 @@ impl Coordinator {
         // would serialize the pool — the lock is held across the blocking
         // recv); the batcher round-robins across the queues.
         let n_workers = cfg.workers.max(1);
-        let factory = engine.backend_factory(n_workers);
         let mut worker_txs = Vec::with_capacity(n_workers);
         for wi in 0..n_workers {
             let (wtx, wrx) = sync_channel::<Vec<Request>>(2);
@@ -143,13 +235,38 @@ impl Coordinator {
                         // metrics never roll backwards
                         let mut shard_base: Vec<ShardOccupancy> = Vec::new();
                         while let Ok(batch) = wrx.recv() {
-                            // move images out of the requests, keep the
-                            // response halves
+                            // shed expired requests BEFORE compute: their
+                            // deadline passed while they sat in the queue /
+                            // batch window, so backend cycles on them are
+                            // pure waste (DESIGN.md S21)
+                            let now = Instant::now();
                             let mut images = Vec::with_capacity(batch.len());
                             let mut reqs = Vec::with_capacity(batch.len());
+                            let mut shed = 0usize;
                             for r in batch {
-                                images.push(r.image);
-                                reqs.push((r.enqueued, r.resp));
+                                match r.deadline {
+                                    Some(d) if now >= d => {
+                                        let waited_us =
+                                            now.duration_since(r.enqueued).as_micros() as u64;
+                                        let _ = r.resp.send(Err(
+                                            ServeError::DeadlineExceeded { waited_us },
+                                        ));
+                                        shed += 1;
+                                    }
+                                    _ => {
+                                        images.push(r.image);
+                                        reqs.push((r.enqueued, r.resp));
+                                    }
+                                }
+                            }
+                            if shed > 0 {
+                                metrics
+                                    .lock()
+                                    .unwrap_or_else(|e| e.into_inner())
+                                    .record_shed(shed);
+                            }
+                            if reqs.is_empty() {
+                                continue;
                             }
                             let t_exec = Instant::now();
                             let out = match backend.infer_batch(&images) {
@@ -157,34 +274,48 @@ impl Coordinator {
                                 res => {
                                     // a structured sim failure, or a backend
                                     // that miscounted its results (as broken
-                                    // as one that errors): fail the waiting
-                                    // requests (their response channels
-                                    // drop) and rebuild the backend — a
-                                    // failed pipeline/chain still holds the
-                                    // dead batch's partial-image tokens, so
+                                    // as one that errors): resolve every
+                                    // waiting ticket with a structured error
+                                    // and rebuild the backend — a failed
+                                    // pipeline/chain still holds the dead
+                                    // batch's partial-image tokens, so
                                     // reusing it would corrupt later
                                     // results. Bank the dying backend's
                                     // counters first: the rebuilt one
                                     // restarts from zero.
-                                    match &res {
-                                        Ok(out) => eprintln!(
-                                            "lutmul-worker-{wi}: backend returned {} \
-                                             results for {} requests; discarding batch",
+                                    let msg = match &res {
+                                        Ok(out) => format!(
+                                            "backend returned {} results for {} requests",
                                             out.logits.len(),
                                             reqs.len()
                                         ),
-                                        Err(e) => eprintln!(
-                                            "lutmul-worker-{wi}: batch failed: {e}"
-                                        ),
+                                        Err(e) => e.to_string(),
+                                    };
+                                    eprintln!(
+                                        "lutmul-worker-{wi}: batch failed ({msg}); \
+                                         rebuilding backend"
+                                    );
+                                    let n_failed = reqs.len();
+                                    for (_, resp) in reqs {
+                                        let _ = resp
+                                            .send(Err(ServeError::WorkerFailed(msg.clone())));
                                     }
                                     let snap = backend.shard_occupancy();
-                                    if !snap.is_empty() {
-                                        if shard_base.len() < snap.len() {
-                                            shard_base
-                                                .resize(snap.len(), ShardOccupancy::default());
-                                        }
-                                        for (b, s) in shard_base.iter_mut().zip(&snap) {
-                                            b.absorb(s);
+                                    {
+                                        let mut m = metrics
+                                            .lock()
+                                            .unwrap_or_else(|e| e.into_inner());
+                                        m.record_failed(n_failed);
+                                        if !snap.is_empty() {
+                                            if shard_base.len() < snap.len() {
+                                                shard_base.resize(
+                                                    snap.len(),
+                                                    ShardOccupancy::default(),
+                                                );
+                                            }
+                                            for (b, s) in shard_base.iter_mut().zip(&snap) {
+                                                b.absorb(s);
+                                            }
                                         }
                                     }
                                     match factory() {
@@ -214,8 +345,15 @@ impl Coordinator {
                                     .lock()
                                     .unwrap_or_else(|e| e.into_inner());
                                 m.record_batch(reqs.len(), service);
-                                for &l in &latencies {
-                                    m.record(l);
+                                for (&l, (enq, _)) in latencies.iter().zip(&reqs) {
+                                    // queue share = dispatch minus submit;
+                                    // compute share = the batch's backend
+                                    // service time (shared by its riders)
+                                    m.record_split(
+                                        l,
+                                        t_exec.duration_since(*enq),
+                                        service,
+                                    );
                                 }
                                 if !out.counters.is_empty() {
                                     // fold in retired-backend counters so
@@ -231,7 +369,8 @@ impl Coordinator {
                                 reqs.into_iter().zip(results).zip(latencies)
                             {
                                 let class = argmax(&logits);
-                                let _ = resp.send(InferenceResult { logits, class, latency });
+                                let _ =
+                                    resp.send(Ok(InferenceResult { logits, class, latency }));
                             }
                         }
                     })
@@ -287,8 +426,6 @@ impl Coordinator {
                 .expect("spawn batcher"),
         );
 
-        let io = engine.io();
-        let image_px = io.image_size * io.image_size * io.in_ch;
         Ok(Self { tx, metrics, rejected, image_px, threads })
     }
 
@@ -296,33 +433,67 @@ impl Coordinator {
     /// Misshapen images are rejected here, before they can poison a
     /// batch of well-formed co-submitted requests.
     pub fn submit(&self, image: Vec<i32>) -> anyhow::Result<Ticket> {
-        anyhow::ensure!(
-            image.len() == self.image_px,
-            "image has {} codes, the served network expects {}",
-            image.len(),
-            self.image_px
-        );
+        self.try_submit(image, None).map_err(|e| anyhow::anyhow!("{e}"))
+    }
+
+    /// Submit with a relative deadline: if it expires before the request
+    /// reaches a backend, the request is shed without compute and its
+    /// ticket resolves to [`ServeError::DeadlineExceeded`].
+    pub fn submit_with_deadline(
+        &self,
+        image: Vec<i32>,
+        deadline: Option<Duration>,
+    ) -> anyhow::Result<Ticket> {
+        self.try_submit(image, deadline).map_err(|e| anyhow::anyhow!("{e}"))
+    }
+
+    /// Typed submission: the serving tier maps [`SubmitError`] variants
+    /// onto wire statuses. A full queue counts into
+    /// [`rejected`](Self::rejected) (admission control / backpressure).
+    pub fn try_submit(
+        &self,
+        image: Vec<i32>,
+        deadline: Option<Duration>,
+    ) -> Result<Ticket, SubmitError> {
+        if image.len() != self.image_px {
+            return Err(SubmitError::BadShape { got: image.len(), want: self.image_px });
+        }
         let (resp_tx, resp_rx) = sync_channel(1);
-        let req = Request { image, enqueued: Instant::now(), resp: resp_tx };
+        let now = Instant::now();
+        let req = Request {
+            image,
+            enqueued: now,
+            deadline: deadline.map(|d| now + d),
+            resp: resp_tx,
+        };
         match self.tx.try_send(req) {
             Ok(()) => Ok(Ticket { rx: resp_rx }),
             Err(TrySendError::Full(_)) => {
                 self.rejected.fetch_add(1, Ordering::Relaxed);
-                anyhow::bail!("queue full (backpressure)")
+                Err(SubmitError::Rejected)
             }
-            Err(TrySendError::Disconnected(_)) => anyhow::bail!("coordinator stopped"),
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Shutdown),
         }
     }
 
     /// Submit and wait (convenience).
     pub fn infer(&self, image: Vec<i32>) -> anyhow::Result<InferenceResult> {
-        self.submit(image)?.wait()
+        Ok(self.submit(image)?.wait()?)
+    }
+
+    /// Expected codes per image of the served network (`H*W*C`).
+    pub fn image_px(&self) -> usize {
+        self.image_px
     }
 
     pub fn metrics(&self) -> MetricsSummary {
         // recover from poisoning: one panicked worker must not wedge the
         // operator's ability to read the summary
-        self.metrics.lock().unwrap_or_else(|e| e.into_inner()).summary()
+        let mut s = self.metrics.lock().unwrap_or_else(|e| e.into_inner()).summary();
+        // the admission counter lives outside the mutex (submit must not
+        // contend with workers); fold it into the snapshot here
+        s.rejected = self.rejected.load(Ordering::Relaxed);
+        s
     }
 
     pub fn rejected(&self) -> u64 {
@@ -364,6 +535,18 @@ mod tests {
         assert!(c.workers >= 1 && c.max_batch >= 1);
     }
 
-    // Coordinator round-trips are in rust/tests/{engine,batch,multi}.rs
-    // (they need a full network + engine).
+    #[test]
+    fn error_displays_are_stable() {
+        let e = ServeError::DeadlineExceeded { waited_us: 42 };
+        assert!(e.to_string().contains("deadline"), "{e}");
+        assert!(e.to_string().contains("42"), "{e}");
+        let e = ServeError::WorkerFailed("boom".into());
+        assert!(e.to_string().contains("boom"), "{e}");
+        let e = SubmitError::BadShape { got: 3, want: 768 };
+        assert!(e.to_string().contains("expects 768"), "{e}");
+        assert!(SubmitError::Rejected.to_string().contains("backpressure"));
+    }
+
+    // Coordinator round-trips are in rust/tests/{engine,batch,multi,
+    // serve,chaos}.rs (they need a full network + engine).
 }

@@ -17,8 +17,9 @@
 //!   ([`dataflow`]), the synthesis analog with folding optimizer
 //!   ([`synth`]), roofline analysis ([`roofline`]), baseline accelerator
 //!   models ([`baselines`]), the PJRT runtime that executes the AOT
-//!   artifacts ([`runtime`]), and the async serving coordinator
-//!   ([`coordinator`]).
+//!   artifacts ([`runtime`]), the async serving coordinator
+//!   ([`coordinator`]), and the network-facing serving tier with its
+//!   open-loop load generator ([`serve`], [`loadgen`]).
 //!
 //! The inference path is batch-major end to end: the coordinator's
 //! dynamic batcher dispatches whole batches to persistent per-worker
@@ -41,7 +42,7 @@
 //! cross-backend bit-exactness + throughput comparison).
 //!
 //! See the repo-root `README.md` for build/run instructions, `DESIGN.md`
-//! for the system inventory (S1-S19) and the experiment index
+//! for the system inventory (S1-S21) and the experiment index
 //! (Table 1/2, Figures 1/2/5/6), and `EXPERIMENTS.md` for measured
 //! results vs the paper.
 
@@ -52,8 +53,10 @@ pub mod dataflow;
 pub mod engine;
 pub mod fabric;
 pub mod graph;
+pub mod loadgen;
 pub mod quant;
 pub mod reports;
 pub mod roofline;
 pub mod runtime;
+pub mod serve;
 pub mod synth;

@@ -1,0 +1,374 @@
+//! Open-loop, bursty, multi-tenant load generator for the serving tier
+//! (DESIGN.md S21, EXPERIMENTS.md E14).
+//!
+//! Each tenant is one TCP connection speaking the binary protocol
+//! ([`serve::proto`](crate::serve::proto)) with a writer thread that
+//! sends on a precomputed *open-loop* arrival schedule — arrivals do
+//! not wait for responses, so an overloaded server sees real queue
+//! pressure instead of the closed-loop self-throttling that hides tail
+//! latency — and a reader thread that matches responses against the
+//! send log. The server guarantees in-order responses per connection,
+//! so any id mismatch is a reorder/cross-wire violation and is counted,
+//! not ignored.
+//!
+//! Traffic is bursty by construction: inside every `burst_every` cycle
+//! the first `burst_len` runs at `burst_mult ×` the steady per-tenant
+//! rate (multi-tenant bursts align, which is the worst case for the
+//! batching window). Inter-arrival gaps are exponential via a seeded
+//! [`Rng`], so a run is reproducible from its config.
+//!
+//! All latencies are *client-observed* (send to response on the
+//! socket), which is the number a deployment actually experiences —
+//! the coordinator's queue-wait/compute split tells the rest of the
+//! story server-side.
+
+use std::collections::VecDeque;
+use std::io::BufWriter;
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::serve::proto::{self, RequestFrame, Status};
+use crate::util::prop::Rng;
+
+/// Shape of one load phase.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Concurrent open-loop clients, one connection each.
+    pub tenants: usize,
+    /// Aggregate steady-state offered rate across all tenants
+    /// (requests/s).
+    pub rate_rps: f64,
+    /// Burst-window rate multiplier (1.0 = flat traffic).
+    pub burst_mult: f64,
+    /// Burst cycle period.
+    pub burst_every: Duration,
+    /// Burst window length at the start of each cycle.
+    pub burst_len: Duration,
+    /// How long to offer load.
+    pub duration: Duration,
+    /// Per-request relative deadline carried on the wire; `None` sends 0
+    /// (no deadline).
+    pub deadline: Option<Duration>,
+    /// Seed for arrival gaps and image codes.
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        Self {
+            tenants: 4,
+            rate_rps: 400.0,
+            burst_mult: 4.0,
+            burst_every: Duration::from_millis(200),
+            burst_len: Duration::from_millis(50),
+            duration: Duration::from_millis(1000),
+            deadline: None,
+            seed: 0x10AD,
+        }
+    }
+}
+
+/// Client-observed outcome of one load phase.
+#[derive(Debug, Default, Clone)]
+pub struct LoadReport {
+    /// Requests put on the wire.
+    pub offered: u64,
+    pub ok: u64,
+    pub rejected: u64,
+    pub deadline_exceeded: u64,
+    pub failed: u64,
+    pub malformed: u64,
+    /// Responses whose id did not match the oldest in-flight request on
+    /// that connection — must be 0 (the server promises per-connection
+    /// ordering).
+    pub order_violations: u64,
+    /// Requests that got no response before the connection closed.
+    pub lost: u64,
+    pub elapsed: Duration,
+    /// Send-to-response latency of every `Ok` reply, microseconds.
+    pub latencies_us: Vec<u64>,
+}
+
+impl LoadReport {
+    /// Every offered request resolved to exactly one outcome.
+    pub fn accounted(&self) -> bool {
+        self.ok
+            + self.rejected
+            + self.deadline_exceeded
+            + self.failed
+            + self.malformed
+            + self.lost
+            == self.offered
+    }
+
+    /// Completed (`Ok`) requests per second of wall clock.
+    pub fn goodput_rps(&self) -> f64 {
+        self.ok as f64 / self.elapsed.as_secs_f64().max(1e-9)
+    }
+
+    pub fn latency_p50_us(&self) -> u64 {
+        percentile_us(&self.latencies_us, 50.0)
+    }
+
+    pub fn latency_p99_us(&self) -> u64 {
+        percentile_us(&self.latencies_us, 99.0)
+    }
+
+    pub fn latency_max_us(&self) -> u64 {
+        self.latencies_us.iter().copied().max().unwrap_or(0)
+    }
+
+    fn merge(&mut self, other: LoadReport) {
+        self.offered += other.offered;
+        self.ok += other.ok;
+        self.rejected += other.rejected;
+        self.deadline_exceeded += other.deadline_exceeded;
+        self.failed += other.failed;
+        self.malformed += other.malformed;
+        self.order_violations += other.order_violations;
+        self.lost += other.lost;
+        self.elapsed = self.elapsed.max(other.elapsed);
+        self.latencies_us.extend(other.latencies_us);
+    }
+}
+
+/// Nearest-rank percentile over an unsorted sample set.
+pub fn percentile_us(samples: &[u64], p: f64) -> u64 {
+    if samples.is_empty() {
+        return 0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_unstable();
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Throughput / tail-latency table over named phases, one row each.
+pub fn table(phases: &[(&str, &LoadReport)]) -> String {
+    let mut out = String::from(
+        "phase      offered      ok     rej    shed    fail    lost |     ok/s   p50(us)   p99(us)   max(us)\n",
+    );
+    for (name, r) in phases {
+        out.push_str(&format!(
+            "{name:<10} {:>7} {:>7} {:>7} {:>7} {:>7} {:>7} | {:>8.1} {:>9} {:>9} {:>9}\n",
+            r.offered,
+            r.ok,
+            r.rejected,
+            r.deadline_exceeded,
+            r.failed + r.malformed,
+            r.lost,
+            r.goodput_rps(),
+            r.latency_p50_us(),
+            r.latency_p99_us(),
+            r.latency_max_us(),
+        ));
+    }
+    out
+}
+
+/// Offer one phase of load against a running server and collect the
+/// client-observed report. Blocks for roughly `cfg.duration` plus
+/// response drain.
+pub fn run(addr: SocketAddr, image_px: usize, cfg: &LoadgenConfig) -> Result<LoadReport> {
+    anyhow::ensure!(cfg.tenants >= 1, "loadgen needs at least one tenant");
+    anyhow::ensure!(cfg.rate_rps > 0.0, "loadgen needs a positive rate");
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(cfg.tenants);
+    for tenant in 0..cfg.tenants {
+        let cfg = cfg.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("loadgen-t{tenant}"))
+                .spawn(move || tenant_run(addr, image_px, tenant, &cfg))
+                .context("spawning loadgen tenant")?,
+        );
+    }
+    let mut total = LoadReport::default();
+    for h in handles {
+        match h.join() {
+            Ok(Ok(r)) => total.merge(r),
+            Ok(Err(e)) => return Err(e),
+            Err(_) => anyhow::bail!("loadgen tenant panicked"),
+        }
+    }
+    total.elapsed = t0.elapsed();
+    Ok(total)
+}
+
+/// One tenant: paced writer on this thread, response reader on a helper
+/// thread, joined at the end of the phase.
+fn tenant_run(
+    addr: SocketAddr,
+    image_px: usize,
+    tenant: usize,
+    cfg: &LoadgenConfig,
+) -> Result<LoadReport> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("loadgen tenant {tenant} connecting to {addr}"))?;
+    stream.set_nodelay(true).ok();
+    let reader_stream = stream.try_clone().context("cloning loadgen stream")?;
+
+    // send log: (id, send instant), consumed by the reader in FIFO order
+    // because the server answers each connection in submission order
+    let inflight: Arc<Mutex<VecDeque<(u64, Instant)>>> = Arc::new(Mutex::new(VecDeque::new()));
+
+    let reader = {
+        let inflight = inflight.clone();
+        std::thread::Builder::new()
+            .name(format!("loadgen-t{tenant}-rx"))
+            .spawn(move || read_responses(reader_stream, &inflight))
+            .context("spawning loadgen reader")?
+    };
+
+    // open-loop writer: arrivals follow the schedule, never the server
+    let mut rng = Rng::new(cfg.seed ^ (tenant as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+    let per_tenant_rps = cfg.rate_rps / cfg.tenants as f64;
+    let deadline_us: u32 = cfg
+        .deadline
+        .map(|d| d.as_micros().min(u32::MAX as u128) as u32)
+        .unwrap_or(0);
+    let mut w = BufWriter::new(&stream);
+    let start = Instant::now();
+    let mut next_at = Duration::ZERO;
+    let mut offered = 0u64;
+    while next_at < cfg.duration {
+        let now = start.elapsed();
+        if next_at > now {
+            std::thread::sleep(next_at - now);
+        }
+        let id = ((tenant as u64) << 48) | offered;
+        let codes: Vec<u8> = (0..image_px).map(|_| rng.below(16) as u8).collect();
+        let frame = proto::encode_request(&RequestFrame { id, deadline_us, codes });
+        {
+            // log before writing so a fast response can never race ahead
+            // of its own send record
+            let mut q = inflight.lock().unwrap_or_else(|e| e.into_inner());
+            q.push_back((id, Instant::now()));
+        }
+        if proto::write_frame(&mut w, &frame).is_err() || w.flush().is_err() {
+            // connection died mid-phase (e.g. server shutdown): whatever
+            // is still in the log counts as lost
+            inflight.lock().unwrap_or_else(|e| e.into_inner()).pop_back();
+            break;
+        }
+        offered += 1;
+        // burst windows multiply the rate; gaps are exponential so the
+        // schedule has realistic clumping on top of the bursts
+        let in_burst = is_burst(next_at, cfg);
+        let rate = per_tenant_rps * if in_burst { cfg.burst_mult.max(1.0) } else { 1.0 };
+        let u = rng.f64().clamp(1e-12, 1.0 - 1e-12);
+        let gap_s = -(1.0 - u).ln() / rate.max(1e-9);
+        next_at += Duration::from_secs_f64(gap_s.min(5.0));
+    }
+    // half-close: the server drains what was sent, answers it, then
+    // closes, so the reader sees every response and then EOF
+    let _ = stream.shutdown(Shutdown::Write);
+
+    let mut report = match reader.join() {
+        Ok(r) => r,
+        Err(_) => anyhow::bail!("loadgen reader panicked"),
+    };
+    report.offered = offered;
+    report.lost =
+        inflight.lock().unwrap_or_else(|e| e.into_inner()).len() as u64;
+    report.elapsed = start.elapsed();
+    Ok(report)
+}
+
+/// Is `t` (offset into the phase) inside a burst window?
+fn is_burst(t: Duration, cfg: &LoadgenConfig) -> bool {
+    if cfg.burst_mult <= 1.0 || cfg.burst_every.is_zero() {
+        return false;
+    }
+    let cycle = t.as_nanos() % cfg.burst_every.as_nanos().max(1);
+    cycle < cfg.burst_len.as_nanos()
+}
+
+/// Reader half: match every response against the FIFO send log and
+/// classify it. Returns a partial report (offered/lost/elapsed are
+/// filled in by the writer side).
+fn read_responses(
+    stream: TcpStream,
+    inflight: &Mutex<VecDeque<(u64, Instant)>>,
+) -> LoadReport {
+    let mut report = LoadReport::default();
+    let mut r = std::io::BufReader::new(stream);
+    loop {
+        let payload = match proto::read_frame(&mut r, None) {
+            Ok(Some(p)) => p,
+            Ok(None) | Err(_) => break, // clean EOF or torn connection
+        };
+        let resp = match proto::decode_response(&payload) {
+            Ok(resp) => resp,
+            Err(_) => {
+                report.malformed += 1;
+                continue;
+            }
+        };
+        let front = inflight.lock().unwrap_or_else(|e| e.into_inner()).pop_front();
+        let sent_at = match front {
+            Some((id, at)) if id == resp.id => Some(at),
+            Some(_) | None => {
+                report.order_violations += 1;
+                None
+            }
+        };
+        match resp.status {
+            Status::Ok => {
+                report.ok += 1;
+                if let Some(at) = sent_at {
+                    report.latencies_us.push(at.elapsed().as_micros() as u64);
+                }
+            }
+            Status::Rejected => report.rejected += 1,
+            Status::DeadlineExceeded => report.deadline_exceeded += 1,
+            Status::Malformed => report.malformed += 1,
+            Status::Failed => report.failed += 1,
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile_us(&xs, 50.0), 50);
+        assert_eq!(percentile_us(&xs, 99.0), 99);
+        assert_eq!(percentile_us(&xs, 100.0), 100);
+        assert_eq!(percentile_us(&[7], 99.0), 7);
+        assert_eq!(percentile_us(&[], 99.0), 0);
+    }
+
+    #[test]
+    fn burst_windows() {
+        let cfg = LoadgenConfig {
+            burst_every: Duration::from_millis(100),
+            burst_len: Duration::from_millis(25),
+            burst_mult: 4.0,
+            ..Default::default()
+        };
+        assert!(is_burst(Duration::from_millis(10), &cfg));
+        assert!(!is_burst(Duration::from_millis(60), &cfg));
+        assert!(is_burst(Duration::from_millis(110), &cfg));
+        let flat = LoadgenConfig { burst_mult: 1.0, ..cfg };
+        assert!(!is_burst(Duration::from_millis(10), &flat));
+    }
+
+    #[test]
+    fn report_accounting() {
+        let mut r = LoadReport { offered: 5, ok: 3, rejected: 1, ..Default::default() };
+        assert!(!r.accounted());
+        r.lost = 1;
+        assert!(r.accounted());
+        r.latencies_us = vec![10, 20, 30];
+        assert_eq!(r.latency_p50_us(), 20);
+        assert_eq!(r.latency_max_us(), 30);
+    }
+}

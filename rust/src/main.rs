@@ -8,7 +8,13 @@
 //!   * `verify`   — run the test set through the dataflow simulator and
 //!     check bit-exactness against the PJRT golden model + accuracy.
 //!   * `serve`    — start the serving coordinator and push a synthetic
-//!     request load through it, reporting latency/throughput.
+//!     request load through it, reporting latency/throughput; with
+//!     `--listen` it exposes the coordinator on a TCP socket (binary
+//!     protocol + HTTP fallback, DESIGN.md S21).
+//!   * `loadgen`  — open-loop bursty multi-tenant load generator against
+//!     a running server (or a self-hosted one), printing a throughput /
+//!     tail-latency table; `--smoke` gates the result for CI
+//!     (EXPERIMENTS.md E14).
 //!   * `bench`    — run every available backend on the same inputs and
 //!     print a bit-exactness + throughput comparison (EXPERIMENTS.md
 //!     E12).
@@ -25,6 +31,8 @@ use anyhow::Result;
 use lutmul::coordinator::{Coordinator, ServeConfig};
 use lutmul::dataflow::FoldConfig;
 use lutmul::engine::{Arch, BackendKind, Engine, ExecutorBackend, Folding, InferenceBackend};
+use lutmul::loadgen::{self, LoadgenConfig};
+use lutmul::serve::{Server, ServerConfig};
 use lutmul::fabric::device::U280;
 use lutmul::graph::plan::{Datapath, NetworkPlan};
 use lutmul::graph::{mobilenet_v2_full, mobilenet_v2_small};
@@ -41,6 +49,18 @@ USAGE:
 COMMANDS:
   verify [--n N] [--lut-fabric]      simulate the test set; verify vs PJRT
   serve  [--requests N] [--workers N] [--max-batch N] [--devices N]
+         [--listen ADDR] [--duration-ms MS]
+         in-process load by default; --listen ADDR (e.g. 127.0.0.1:7700,
+         port 0 = ephemeral) serves the length-prefixed binary protocol
+         with an HTTP/1.1 fallback (POST /infer, GET /metrics) instead,
+         for --duration-ms (0 = until killed)
+  loadgen [--addr HOST:PORT] [--tenants N] [--rate RPS] [--duration-ms MS]
+         [--deadline-us US] [--seed S] [--workers N] [--max-batch N] [--smoke]
+         open-loop bursty multi-tenant traffic against --addr (or a
+         self-hosted server when absent) printing a throughput /
+         tail-latency table; --smoke runs calibrated steady/burst/shed
+         phases and fails on lost requests, reordering, missing deadline
+         sheds, or a blown p99 (EXPERIMENTS.md E14)
   bench  [--backends all|LIST] [--n N] [--devices N] [--json]
          run every available engine backend (executor, pipeline, sharded
          chains, PJRT when loadable) on the same inputs and print a
@@ -140,15 +160,36 @@ fn main() -> Result<()> {
         Some("serve") => {
             args.check_flags(
                 "serve",
-                &["artifacts", "requests", "workers", "max-batch", "devices"],
+                &["artifacts", "requests", "workers", "max-batch", "devices", "listen", "duration-ms"],
             )?;
-            serve(
-                &artifacts,
-                args.get("requests", 512usize)?,
-                args.get("workers", 2usize)?,
-                args.get("max-batch", 8usize)?,
-                args.get("devices", 0usize)?,
-            )
+            if args.has("listen") {
+                serve_listen(
+                    &artifacts,
+                    &args.get::<String>("listen", "127.0.0.1:0".into())?,
+                    args.get("workers", 2usize)?,
+                    args.get("max-batch", 8usize)?,
+                    args.get("devices", 0usize)?,
+                    args.get("duration-ms", 0u64)?,
+                )
+            } else {
+                serve(
+                    &artifacts,
+                    args.get("requests", 512usize)?,
+                    args.get("workers", 2usize)?,
+                    args.get("max-batch", 8usize)?,
+                    args.get("devices", 0usize)?,
+                )
+            }
+        }
+        Some("loadgen") => {
+            args.check_flags(
+                "loadgen",
+                &[
+                    "artifacts", "addr", "tenants", "rate", "duration-ms", "deadline-us",
+                    "seed", "workers", "max-batch", "smoke",
+                ],
+            )?;
+            loadgen_cmd(&artifacts, &args)
         }
         Some("bench") => {
             args.check_flags("bench", &["artifacts", "backends", "n", "devices", "json"])?;
@@ -315,6 +356,208 @@ fn serve(
         coord.metrics()
     );
     coord.shutdown();
+    Ok(())
+}
+
+/// `lutmul serve --listen ADDR`: expose the coordinator on a TCP socket
+/// (DESIGN.md S21) — length-prefixed binary protocol with an HTTP/1.1
+/// fallback on the same port — for `--duration-ms` (0 = until killed).
+fn serve_listen(
+    artifacts: &Artifacts,
+    listen: &str,
+    workers: usize,
+    max_batch: usize,
+    devices: usize,
+    duration_ms: u64,
+) -> Result<()> {
+    let kind = if devices > 0 {
+        BackendKind::Sharded { devices }
+    } else {
+        BackendKind::Reference
+    };
+    // trained artifacts when built, the synthetic twin otherwise — a
+    // network endpoint must come up either way
+    let engine = Engine::builder()
+        .arch(Arch::Small)
+        .artifacts(artifacts)
+        .or_synthetic(0x5EED)
+        .backend(kind)
+        .build()?;
+    let io = engine.io();
+    let server = Server::start(
+        &engine,
+        ServeConfig { workers, max_batch, ..Default::default() },
+        ServerConfig { addr: listen.to_string(), ..Default::default() },
+    )?;
+    println!(
+        "lutmul serve: listening on {} | {} | image {}x{}x{} codes ({} bytes/request) | {workers} workers, max batch {max_batch}",
+        server.local_addr(),
+        engine.source().label(),
+        io.image_size,
+        io.image_size,
+        io.in_ch,
+        io.image_size * io.image_size * io.in_ch,
+    );
+    if duration_ms == 0 {
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(std::time::Duration::from_millis(duration_ms));
+    let m = server.metrics();
+    let stats = server.stats();
+    println!(
+        "{m} | conns {} (refused {}) | frames {} | http {} | malformed {}",
+        stats.connections.load(std::sync::atomic::Ordering::Relaxed),
+        stats.refused_conns.load(std::sync::atomic::Ordering::Relaxed),
+        stats.frames.load(std::sync::atomic::Ordering::Relaxed),
+        stats.http_requests.load(std::sync::atomic::Ordering::Relaxed),
+        stats.malformed.load(std::sync::atomic::Ordering::Relaxed),
+    );
+    server.shutdown();
+    Ok(())
+}
+
+/// `lutmul loadgen`: open-loop bursty multi-tenant traffic (EXPERIMENTS.md
+/// E14). Self-hosts a server on an ephemeral port unless `--addr` points
+/// at a running one; `--smoke` runs calibrated steady/burst/shed phases
+/// and gates the invariants CI cares about.
+fn loadgen_cmd(artifacts: &Artifacts, args: &Args) -> Result<()> {
+    use std::time::Duration;
+
+    // local engine: serves as the self-hosted backend, and fixes the
+    // image geometry (a remote --addr server must serve the same arch)
+    let mut engine = Engine::builder()
+        .arch(Arch::Small)
+        .artifacts(artifacts)
+        .or_synthetic(0x5EED)
+        .backend(BackendKind::Reference)
+        .build()?;
+    let io = engine.io();
+    let image_px = io.image_size * io.image_size * io.in_ch;
+
+    let workers = args.get("workers", 2usize)?;
+    let max_batch = args.get("max-batch", 8usize)?;
+    let deadline_us = args.get("deadline-us", 0u64)?;
+    let cfg = LoadgenConfig {
+        tenants: args.get("tenants", 4usize)?,
+        rate_rps: args.get("rate", 400.0f64)?,
+        duration: Duration::from_millis(args.get("duration-ms", 1000u64)?),
+        deadline: (deadline_us > 0).then(|| Duration::from_micros(deadline_us)),
+        seed: args.get("seed", 0x10ADu64)?,
+        ..Default::default()
+    };
+
+    // target: remote --addr, or a self-hosted ephemeral server
+    let (addr, hosted) = match args.flags.get("addr") {
+        Some(a) => {
+            let addr = a
+                .parse()
+                .map_err(|e| anyhow::anyhow!("invalid --addr '{a}': {e}"))?;
+            (addr, None)
+        }
+        None => {
+            let server = Server::start(
+                &engine,
+                ServeConfig { workers, max_batch, ..Default::default() },
+                ServerConfig::default(),
+            )?;
+            println!("loadgen: self-hosted server on {}", server.local_addr());
+            (server.local_addr(), Some(server))
+        }
+    };
+
+    if args.has("smoke") {
+        // calibrate the offered rate to what the backend can actually
+        // sustain, so the gate passes on slow CI machines and still
+        // exercises the batcher on fast ones (the local engine's own
+        // backend is idle — the server's workers built their own)
+        let probe = engine.images(max_batch.max(1))?;
+        let t0 = std::time::Instant::now();
+        engine.infer_batch(&probe)?;
+        let direct_ips = probe.len() as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+        // half of one worker's direct throughput, kept inside what
+        // sleep-paced senders can offer
+        let rate = (direct_ips * 0.5).clamp(50.0, 2000.0);
+        println!("loadgen --smoke: direct {direct_ips:.0} img/s -> offering {rate:.0} rps");
+
+        let steady = loadgen::run(
+            addr,
+            image_px,
+            &LoadgenConfig { rate_rps: rate, burst_mult: 1.0, ..cfg.clone() },
+        )?;
+        let burst = loadgen::run(
+            addr,
+            image_px,
+            &LoadgenConfig {
+                rate_rps: rate,
+                burst_mult: 4.0,
+                seed: cfg.seed ^ 1,
+                ..cfg.clone()
+            },
+        )?;
+        // 1 us relative deadlines are expired by the time the batch
+        // window dispatches, so the shed path must fire
+        let shed = loadgen::run(
+            addr,
+            image_px,
+            &LoadgenConfig {
+                rate_rps: rate,
+                burst_mult: 1.0,
+                duration: Duration::from_millis(300),
+                deadline: Some(Duration::from_micros(1)),
+                seed: cfg.seed ^ 2,
+                ..cfg.clone()
+            },
+        )?;
+        print!(
+            "{}",
+            loadgen::table(&[("steady", &steady), ("burst", &burst), ("shed", &shed)])
+        );
+
+        // the gates: every request accounted, ordering intact, the
+        // deadline path sheds, throughput sustained, tail bounded
+        for (name, r) in [("steady", &steady), ("burst", &burst), ("shed", &shed)] {
+            anyhow::ensure!(r.accounted(), "{name}: requests unaccounted for ({r:?})");
+            anyhow::ensure!(r.order_violations == 0, "{name}: responses reordered");
+            anyhow::ensure!(r.lost == 0, "{name}: {} requests lost", r.lost);
+        }
+        anyhow::ensure!(steady.ok > 0 && burst.ok > 0, "no request completed");
+        anyhow::ensure!(
+            steady.ok as f64 >= 0.5 * steady.offered as f64,
+            "steady goodput collapsed: {}/{} ok",
+            steady.ok,
+            steady.offered
+        );
+        anyhow::ensure!(
+            steady.latency_p99_us() < 2_000_000,
+            "steady p99 {} us blew the 2 s bound",
+            steady.latency_p99_us()
+        );
+        anyhow::ensure!(
+            shed.deadline_exceeded > 0,
+            "1 us deadlines were never shed (shed path dead)"
+        );
+        if let Some(server) = &hosted {
+            let m = server.metrics();
+            anyhow::ensure!(
+                m.shed_deadline > 0,
+                "server metrics never counted a deadline shed"
+            );
+            println!("server metrics: {m}");
+        }
+        println!("loadgen --smoke: OK");
+    } else {
+        let report = loadgen::run(addr, image_px, &cfg)?;
+        print!("{}", loadgen::table(&[("total", &report)]));
+        if let Some(server) = &hosted {
+            println!("server metrics: {}", server.metrics());
+        }
+    }
+
+    if let Some(server) = hosted {
+        server.shutdown();
+    }
     Ok(())
 }
 

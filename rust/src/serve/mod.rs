@@ -1,0 +1,21 @@
+//! Network-facing serving tier (DESIGN.md S21).
+//!
+//! Puts a TCP front end over the [`Coordinator`]'s batch-forming
+//! window so remote clients and in-process submitters share one
+//! admission path, one batcher, and one metrics surface:
+//!
+//! * [`proto`] — the length-prefixed binary wire protocol (and the
+//!   invariant that lets an HTTP/1.1 request share the same port);
+//! * [`server`] — acceptor + per-connection reader/writer threads,
+//!   deadline propagation, and admission-control status mapping.
+//!
+//! Everything here is `std`-only: `TcpListener`, OS threads, and
+//! channels — no async runtime, matching the repo's no-new-deps rule.
+//!
+//! [`Coordinator`]: crate::coordinator::Coordinator
+
+pub mod proto;
+pub mod server;
+
+pub use proto::{RequestFrame, ResponseFrame, Status, MAX_FRAME, PROTO_VERSION};
+pub use server::{NetStats, Server, ServerConfig};

@@ -1,0 +1,321 @@
+//! LUTMUL wire protocol (DESIGN.md S21): length-prefixed binary frames.
+//!
+//! Every frame is `[u32 LE payload length][payload]`. Request payload:
+//!
+//! ```text
+//!   u8   version        (PROTO_VERSION)
+//!   u64  request id     (LE; echoed verbatim in the response)
+//!   u32  deadline_us    (LE; 0 = no deadline, else relative to receipt)
+//!   u8[] codes          (one activation code per byte, H*W*C of them)
+//! ```
+//!
+//! Response payload:
+//!
+//! ```text
+//!   u8   version
+//!   u8   status         (Status as u8)
+//!   u64  request id     (LE)
+//!   u32  class          (LE; argmax logit, 0 unless status == Ok)
+//!   u32  n_logits       (LE; 0 unless status == Ok)
+//!   f32[] logits        (LE bit patterns — bit-exact across the wire)
+//! ```
+//!
+//! Codes are one byte each: activations are 4-/8-bit quantization codes
+//! by construction (the network's `a_bits <= 8`), so a byte per code is
+//! lossless and keeps request frames 4x smaller than raw i32. Logits
+//! cross the wire as raw f32 bit patterns, so the loadgen's bit-
+//! exactness check compares the very bits the executor produced.
+//!
+//! The server tells binary traffic from the HTTP fallback by the first
+//! four bytes of a connection: `POST`/`GET ` as a u32 length would be
+//! > 1 GiB, far beyond [`MAX_FRAME`], so the two framings cannot be
+//! confused (see `serve::server`).
+
+use std::io::{self, Read, Write};
+
+/// Protocol version byte; bumped on any layout change.
+pub const PROTO_VERSION: u8 = 1;
+
+/// Hard cap on one frame's payload (4 MiB — a full-ImageNet 224x224x3
+/// image is ~150 KiB of codes; anything near the cap is hostile or
+/// corrupt, not a real request).
+pub const MAX_FRAME: usize = 4 << 20;
+
+/// Response status. `Ok` carries logits; everything else is a structured
+/// miss whose name matches the serving-tier counter it increments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Status {
+    /// Inference completed; logits attached.
+    Ok = 0,
+    /// Shed before compute: the deadline expired in queue.
+    DeadlineExceeded = 1,
+    /// Bounced at admission: the queue was full (backpressure).
+    Rejected = 2,
+    /// The frame was structurally invalid (bad version, wrong code
+    /// count) — the connection survives; framing errors close it.
+    Malformed = 3,
+    /// The worker's backend failed mid-batch, or the server is shutting
+    /// down with the request in flight.
+    Failed = 4,
+}
+
+impl Status {
+    pub fn from_u8(v: u8) -> Option<Status> {
+        match v {
+            0 => Some(Status::Ok),
+            1 => Some(Status::DeadlineExceeded),
+            2 => Some(Status::Rejected),
+            3 => Some(Status::Malformed),
+            4 => Some(Status::Failed),
+            _ => None,
+        }
+    }
+}
+
+/// One decoded request frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequestFrame {
+    pub id: u64,
+    /// Relative deadline in microseconds; 0 = none.
+    pub deadline_us: u32,
+    /// One activation code per byte.
+    pub codes: Vec<u8>,
+}
+
+/// One decoded response frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResponseFrame {
+    pub id: u64,
+    pub status: Status,
+    pub class: u32,
+    pub logits: Vec<f32>,
+}
+
+/// Fixed request header size (version + id + deadline).
+const REQ_HEADER: usize = 1 + 8 + 4;
+/// Fixed response header size (version + status + id + class + count).
+const RESP_HEADER: usize = 1 + 1 + 8 + 4 + 4;
+
+/// Encode one request as a complete frame (length prefix included).
+pub fn encode_request(req: &RequestFrame) -> Vec<u8> {
+    let payload_len = REQ_HEADER + req.codes.len();
+    let mut buf = Vec::with_capacity(4 + payload_len);
+    buf.extend_from_slice(&(payload_len as u32).to_le_bytes());
+    buf.push(PROTO_VERSION);
+    buf.extend_from_slice(&req.id.to_le_bytes());
+    buf.extend_from_slice(&req.deadline_us.to_le_bytes());
+    buf.extend_from_slice(&req.codes);
+    buf
+}
+
+/// Decode a request payload (frame body, length prefix already
+/// consumed). Errors are descriptive strings — the server answers them
+/// with [`Status::Malformed`].
+pub fn decode_request(payload: &[u8]) -> Result<RequestFrame, String> {
+    if payload.len() < REQ_HEADER {
+        return Err(format!(
+            "request payload is {} bytes, the header alone is {REQ_HEADER}",
+            payload.len()
+        ));
+    }
+    if payload[0] != PROTO_VERSION {
+        return Err(format!(
+            "protocol version {} not supported (this server speaks {PROTO_VERSION})",
+            payload[0]
+        ));
+    }
+    let id = u64::from_le_bytes(payload[1..9].try_into().unwrap());
+    let deadline_us = u32::from_le_bytes(payload[9..13].try_into().unwrap());
+    Ok(RequestFrame { id, deadline_us, codes: payload[REQ_HEADER..].to_vec() })
+}
+
+/// Encode one response as a complete frame (length prefix included).
+pub fn encode_response(resp: &ResponseFrame) -> Vec<u8> {
+    let logits = if resp.status == Status::Ok { resp.logits.as_slice() } else { &[] };
+    let payload_len = RESP_HEADER + 4 * logits.len();
+    let mut buf = Vec::with_capacity(4 + payload_len);
+    buf.extend_from_slice(&(payload_len as u32).to_le_bytes());
+    buf.push(PROTO_VERSION);
+    buf.push(resp.status as u8);
+    buf.extend_from_slice(&resp.id.to_le_bytes());
+    buf.extend_from_slice(&resp.class.to_le_bytes());
+    buf.extend_from_slice(&(logits.len() as u32).to_le_bytes());
+    for l in logits {
+        buf.extend_from_slice(&l.to_le_bytes());
+    }
+    buf
+}
+
+/// Decode a response payload (frame body, length prefix already
+/// consumed).
+pub fn decode_response(payload: &[u8]) -> Result<ResponseFrame, String> {
+    if payload.len() < RESP_HEADER {
+        return Err(format!(
+            "response payload is {} bytes, the header alone is {RESP_HEADER}",
+            payload.len()
+        ));
+    }
+    if payload[0] != PROTO_VERSION {
+        return Err(format!("protocol version {} not supported", payload[0]));
+    }
+    let status = Status::from_u8(payload[1])
+        .ok_or_else(|| format!("unknown status byte {}", payload[1]))?;
+    let id = u64::from_le_bytes(payload[2..10].try_into().unwrap());
+    let class = u32::from_le_bytes(payload[10..14].try_into().unwrap());
+    let n = u32::from_le_bytes(payload[14..18].try_into().unwrap()) as usize;
+    let body = &payload[RESP_HEADER..];
+    if body.len() != 4 * n {
+        return Err(format!("response claims {n} logits but carries {} bytes", body.len()));
+    }
+    let logits = body
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok(ResponseFrame { id, status, class, logits })
+}
+
+/// Read one length-prefixed payload. `first4` is the already-consumed
+/// length prefix when the caller peeked it for HTTP detection; `None`
+/// reads the prefix from the stream. Returns `Ok(None)` on clean EOF at
+/// a frame boundary; an oversized or truncated frame is an error (the
+/// stream cannot be resynchronized and must be closed).
+pub fn read_frame(
+    r: &mut impl Read,
+    first4: Option<[u8; 4]>,
+) -> io::Result<Option<Vec<u8>>> {
+    let len_bytes = match first4 {
+        Some(b) => b,
+        None => {
+            let mut b = [0u8; 4];
+            match read_exact_or_eof(r, &mut b)? {
+                true => b,
+                false => return Ok(None),
+            }
+        }
+    };
+    let len = u32::from_le_bytes(len_bytes) as usize;
+    if len > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame of {len} bytes exceeds the {MAX_FRAME}-byte cap"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(Some(payload))
+}
+
+/// Write one already-encoded frame.
+pub fn write_frame(w: &mut impl Write, frame: &[u8]) -> io::Result<()> {
+    w.write_all(frame)
+}
+
+/// `read_exact` that distinguishes clean EOF before the first byte
+/// (`Ok(false)`) from mid-buffer truncation (an error).
+fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> io::Result<bool> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) if filled == 0 => return Ok(false),
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    format!("stream closed {filled} bytes into a {}-byte read", buf.len()),
+                ))
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_round_trips() {
+        let req = RequestFrame { id: 0xDEAD_BEEF_0042, deadline_us: 1500, codes: vec![0, 7, 15, 3] };
+        let wire = encode_request(&req);
+        let payload = read_frame(&mut wire.as_slice(), None).unwrap().unwrap();
+        assert_eq!(decode_request(&payload).unwrap(), req);
+    }
+
+    #[test]
+    fn response_round_trips_bit_exact() {
+        // exotic f32 bit patterns must survive the wire untouched
+        let logits = vec![0.0f32, -0.0, 1.5e-39, f32::MAX, -3.25];
+        let resp = ResponseFrame { id: 9, status: Status::Ok, class: 4, logits: logits.clone() };
+        let wire = encode_response(&resp);
+        let payload = read_frame(&mut wire.as_slice(), None).unwrap().unwrap();
+        let got = decode_response(&payload).unwrap();
+        assert_eq!(got.id, 9);
+        assert_eq!(got.status, Status::Ok);
+        assert_eq!(got.class, 4);
+        let want_bits: Vec<u32> = logits.iter().map(|l| l.to_bits()).collect();
+        let got_bits: Vec<u32> = got.logits.iter().map(|l| l.to_bits()).collect();
+        assert_eq!(got_bits, want_bits);
+    }
+
+    #[test]
+    fn error_statuses_drop_logits() {
+        let resp = ResponseFrame {
+            id: 1,
+            status: Status::Rejected,
+            class: 0,
+            logits: vec![1.0, 2.0],
+        };
+        let wire = encode_response(&resp);
+        let payload = read_frame(&mut wire.as_slice(), None).unwrap().unwrap();
+        let got = decode_response(&payload).unwrap();
+        assert_eq!(got.status, Status::Rejected);
+        assert!(got.logits.is_empty(), "non-Ok responses carry no logits");
+    }
+
+    #[test]
+    fn bad_version_and_status_are_loud() {
+        let mut wire = encode_request(&RequestFrame { id: 1, deadline_us: 0, codes: vec![1] });
+        wire[4] = 99; // version byte of the payload
+        let payload = read_frame(&mut wire.as_slice(), None).unwrap().unwrap();
+        let err = decode_request(&payload).unwrap_err();
+        assert!(err.contains("version 99"), "{err}");
+        assert!(Status::from_u8(250).is_none());
+    }
+
+    #[test]
+    fn truncated_and_oversized_frames_error() {
+        // truncated: claims 100 bytes, carries 2
+        let mut wire = vec![];
+        wire.extend_from_slice(&100u32.to_le_bytes());
+        wire.extend_from_slice(&[1, 2]);
+        assert!(read_frame(&mut wire.as_slice(), None).is_err());
+        // oversized: the length prefix alone must kill the frame
+        let wire = ((MAX_FRAME + 1) as u32).to_le_bytes().to_vec();
+        let err = read_frame(&mut wire.as_slice(), None).unwrap_err();
+        assert!(err.to_string().contains("cap"), "{err}");
+        // short header payload
+        let mut wire = vec![];
+        wire.extend_from_slice(&3u32.to_le_bytes());
+        wire.extend_from_slice(&[1, 2, 3]);
+        let payload = read_frame(&mut wire.as_slice(), None).unwrap().unwrap();
+        assert!(decode_request(&payload).unwrap_err().contains("header"));
+    }
+
+    #[test]
+    fn clean_eof_is_none() {
+        let empty: &[u8] = &[];
+        assert!(read_frame(&mut &*empty, None).unwrap().is_none());
+    }
+
+    #[test]
+    fn http_prefixes_exceed_frame_cap() {
+        // the disambiguation invariant the server relies on: an HTTP
+        // method read as a length prefix can never be a legal frame
+        for prefix in [*b"POST", *b"GET ", *b"HEAD", *b"PUT "] {
+            assert!(u32::from_le_bytes(prefix) as usize > MAX_FRAME);
+        }
+    }
+}

@@ -1,0 +1,518 @@
+//! Network front end over the serving coordinator (DESIGN.md S21).
+//!
+//! A `std`-only TCP server: one acceptor thread plus a reader/writer
+//! thread pair per connection (bounded by `max_conns`), all feeding the
+//! coordinator's batch-forming window — concurrent sockets coalesce
+//! into the plan's `IoGeom` batch geometry exactly like in-process
+//! submitters, so the LUT datapath sees full batches whenever the
+//! offered load sustains them.
+//!
+//! Two framings share the listener, told apart by a connection's first
+//! four bytes:
+//!
+//! * **binary** (`serve::proto`) — length-prefixed frames, pipelined:
+//!   the reader submits every frame as it arrives and hands the ticket
+//!   to the connection's writer, which resolves them *in submission
+//!   order*, so responses are never reordered within a connection even
+//!   when the batcher interleaves its images with other sockets';
+//! * **HTTP/1.1 fallback** — `POST /infer` with raw code bytes,
+//!   `GET /metrics` / `GET /healthz`, one request per connection. An
+//!   HTTP method read as a little-endian length exceeds
+//!   [`proto::MAX_FRAME`](super::proto::MAX_FRAME), so the framings
+//!   cannot be confused.
+//!
+//! Admission control is end-to-end: a full coordinator queue resolves
+//! the frame with `Status::Rejected` (and drives the coordinator's
+//! `rejected` counter — the overload path the chaos suite exercises
+//! from a real socket), expired deadlines come back as
+//! `Status::DeadlineExceeded`, a worker failure as `Status::Failed`,
+//! and malformed-but-framed requests as `Status::Malformed` without
+//! killing the connection. Only an unrecoverable framing error (bogus
+//! length prefix, truncated frame) closes the socket, because the byte
+//! stream cannot be resynchronized.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Coordinator, MetricsSummary, ServeConfig, ServeError, SubmitError, Ticket};
+use crate::engine::Engine;
+
+use super::proto::{self, RequestFrame, ResponseFrame, Status};
+
+/// Network configuration; the batching/worker knobs live in
+/// [`ServeConfig`].
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Bind address; port 0 picks an ephemeral port (tests, loadgen
+    /// self-hosting).
+    pub addr: String,
+    /// Connection cap: accepts beyond it are closed immediately (each
+    /// connection costs a reader + writer thread).
+    pub max_conns: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { addr: "127.0.0.1:0".into(), max_conns: 256 }
+    }
+}
+
+/// Cumulative socket-level counters (the coordinator's metrics cover
+/// everything past admission).
+#[derive(Debug, Default)]
+pub struct NetStats {
+    pub connections: AtomicU64,
+    pub refused_conns: AtomicU64,
+    pub frames: AtomicU64,
+    pub malformed: AtomicU64,
+    pub http_requests: AtomicU64,
+}
+
+/// Handle to a running network server. Dropping it does NOT stop the
+/// server; call [`shutdown`](Server::shutdown) for a deterministic
+/// stop-and-join.
+pub struct Server {
+    addr: SocketAddr,
+    coord: Option<Arc<Coordinator>>,
+    stop: Arc<AtomicBool>,
+    stats: Arc<NetStats>,
+    accept_thread: Option<JoinHandle<()>>,
+    /// Reader threads of live connections (each joins its own writer).
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl Server {
+    /// Start a coordinator over `engine`'s backend kind and put this
+    /// network front end on it.
+    pub fn start(engine: &Engine, serve_cfg: ServeConfig, cfg: ServerConfig) -> Result<Server> {
+        Self::over(Coordinator::start(engine, serve_cfg)?, cfg)
+    }
+
+    /// Put the network front end over an already-running coordinator
+    /// (the chaos suite injects flaky backends through
+    /// `Coordinator::start_with` and serves them here).
+    pub fn over(coord: Coordinator, cfg: ServerConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding lutmul serve to {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        let coord = Arc::new(coord);
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(NetStats::default());
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let live = Arc::new(AtomicUsize::new(0));
+
+        let accept_thread = {
+            let (coord, stop, stats, conns, live) =
+                (coord.clone(), stop.clone(), stats.clone(), conns.clone(), live.clone());
+            let max_conns = cfg.max_conns.max(1);
+            std::thread::Builder::new()
+                .name("lutmul-accept".into())
+                .spawn(move || {
+                    for incoming in listener.incoming() {
+                        if stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let stream = match incoming {
+                            Ok(s) => s,
+                            Err(_) => continue,
+                        };
+                        if live.load(Ordering::Relaxed) >= max_conns {
+                            // over the cap: refuse by closing; the client
+                            // sees EOF before any response frame
+                            stats.refused_conns.fetch_add(1, Ordering::Relaxed);
+                            continue;
+                        }
+                        stats.connections.fetch_add(1, Ordering::Relaxed);
+                        live.fetch_add(1, Ordering::Relaxed);
+                        let (coord, stop, stats, live2) =
+                            (coord.clone(), stop.clone(), stats.clone(), live.clone());
+                        let handle = std::thread::Builder::new()
+                            .name("lutmul-conn".into())
+                            .spawn(move || {
+                                handle_connection(stream, &coord, &stop, &stats);
+                                live2.fetch_sub(1, Ordering::Relaxed);
+                            })
+                            .expect("spawn connection thread");
+                        let mut guard = conns.lock().unwrap_or_else(|e| e.into_inner());
+                        // reap finished connections so a long-running
+                        // server does not accumulate handles
+                        let mut alive = Vec::with_capacity(guard.len() + 1);
+                        for h in guard.drain(..) {
+                            if h.is_finished() {
+                                let _ = h.join();
+                            } else {
+                                alive.push(h);
+                            }
+                        }
+                        alive.push(handle);
+                        *guard = alive;
+                    }
+                })
+                .expect("spawn acceptor")
+        };
+
+        Ok(Server {
+            addr,
+            coord: Some(coord),
+            stop,
+            stats,
+            accept_thread: Some(accept_thread),
+            conns,
+        })
+    }
+
+    /// The bound address (resolves the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Serving metrics snapshot (the coordinator's, `rejected`
+    /// included).
+    pub fn metrics(&self) -> MetricsSummary {
+        self.coord.as_ref().expect("server running").metrics()
+    }
+
+    /// Requests bounced at admission (queue full).
+    pub fn rejected(&self) -> u64 {
+        self.coord.as_ref().expect("server running").rejected()
+    }
+
+    /// Socket-level counters.
+    pub fn stats(&self) -> &NetStats {
+        &self.stats
+    }
+
+    /// Stop accepting, drain the connections, and shut the coordinator
+    /// down. In-flight requests resolve before this returns (their
+    /// connection threads hold the coordinator alive until they exit).
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // unblock the acceptor with a wake-up connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        let handles: Vec<_> = {
+            let mut guard = self.conns.lock().unwrap_or_else(|e| e.into_inner());
+            guard.drain(..).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+        // every connection thread has exited, so this is the last Arc;
+        // fall back to a plain drop if something still races
+        if let Some(coord) = self.coord.take() {
+            match Arc::try_unwrap(coord) {
+                Ok(c) => c.shutdown(),
+                Err(_) => eprintln!("lutmul serve: coordinator still referenced at shutdown"),
+            }
+        }
+    }
+}
+
+/// A `Read` over a timeout-armed `TcpStream` that turns read timeouts
+/// into retries until the server's stop flag is raised — so connection
+/// readers block "forever" on idle sockets yet still join promptly at
+/// shutdown.
+struct StopAwareStream<'a> {
+    inner: &'a TcpStream,
+    stop: &'a AtomicBool,
+}
+
+impl Read for StopAwareStream<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        loop {
+            if self.stop.load(Ordering::Relaxed) {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::ConnectionAborted,
+                    "server shutting down",
+                ));
+            }
+            match (&mut &*self.inner).read(buf) {
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    continue
+                }
+                r => return r,
+            }
+        }
+    }
+}
+
+/// What the connection's writer does with one submission slot, in
+/// arrival order.
+enum Outcome {
+    /// Wait on the coordinator and forward the result.
+    Pending(u64, Ticket),
+    /// Answer immediately with this status (admission miss, malformed).
+    Immediate(u64, Status),
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    coord: &Arc<Coordinator>,
+    stop: &Arc<AtomicBool>,
+    stats: &Arc<NetStats>,
+) {
+    let _ = stream.set_nodelay(true);
+    // periodic wake-ups keep readers joinable at shutdown
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+
+    // the first four bytes pick the framing
+    let mut first4 = [0u8; 4];
+    {
+        let mut r = StopAwareStream { inner: &stream, stop };
+        let mut filled = 0;
+        while filled < 4 {
+            match r.read(&mut first4[filled..]) {
+                Ok(0) => return, // silent connect-and-close (shutdown wake-up)
+                Ok(n) => filled += n,
+                Err(_) => return,
+            }
+        }
+    }
+    if &first4 == b"POST" || &first4 == b"GET " {
+        stats.http_requests.fetch_add(1, Ordering::Relaxed);
+        handle_http(&stream, &first4, coord, stop, stats);
+        return;
+    }
+    handle_binary(&stream, first4, coord, stop, stats);
+}
+
+fn handle_binary(
+    stream: &TcpStream,
+    first4: [u8; 4],
+    coord: &Arc<Coordinator>,
+    stop: &Arc<AtomicBool>,
+    stats: &Arc<NetStats>,
+) {
+    // writer half: resolves outcomes in submission order, so responses
+    // on this connection are never reordered
+    let (tx, rx): (Sender<Outcome>, Receiver<Outcome>) = channel();
+    let writer_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let writer = std::thread::Builder::new()
+        .name("lutmul-conn-writer".into())
+        .spawn(move || {
+            let mut w = std::io::BufWriter::new(&writer_stream);
+            while let Ok(outcome) = rx.recv() {
+                let resp = match outcome {
+                    Outcome::Immediate(id, status) => {
+                        ResponseFrame { id, status, class: 0, logits: Vec::new() }
+                    }
+                    Outcome::Pending(id, ticket) => match ticket.wait() {
+                        Ok(r) => ResponseFrame {
+                            id,
+                            status: Status::Ok,
+                            class: r.class as u32,
+                            logits: r.logits,
+                        },
+                        Err(ServeError::DeadlineExceeded { .. }) => ResponseFrame {
+                            id,
+                            status: Status::DeadlineExceeded,
+                            class: 0,
+                            logits: Vec::new(),
+                        },
+                        Err(ServeError::WorkerFailed(_)) | Err(ServeError::Disconnected) => {
+                            ResponseFrame { id, status: Status::Failed, class: 0, logits: Vec::new() }
+                        }
+                    },
+                };
+                if proto::write_frame(&mut w, &proto::encode_response(&resp)).is_err() {
+                    return; // client gone; remaining tickets drop
+                }
+                if w.flush().is_err() {
+                    return;
+                }
+            }
+        })
+        .expect("spawn connection writer");
+
+    // reader half: one frame in, one outcome enqueued
+    let mut first = Some(first4);
+    {
+        let mut r = StopAwareStream { inner: stream, stop };
+        loop {
+            let payload = match proto::read_frame(&mut r, first.take()) {
+                Ok(Some(p)) => p,
+                Ok(None) => break, // clean EOF at a frame boundary
+                Err(_) => {
+                    // framing broken (oversized length, truncation,
+                    // shutdown): tell the client if possible, then close
+                    stats.malformed.fetch_add(1, Ordering::Relaxed);
+                    let _ = tx.send(Outcome::Immediate(0, Status::Malformed));
+                    break;
+                }
+            };
+            stats.frames.fetch_add(1, Ordering::Relaxed);
+            let req = match proto::decode_request(&payload) {
+                Ok(req) => req,
+                Err(_) => {
+                    // structurally invalid but the framing is intact —
+                    // answer Malformed and keep serving the connection
+                    stats.malformed.fetch_add(1, Ordering::Relaxed);
+                    let _ = tx.send(Outcome::Immediate(0, Status::Malformed));
+                    continue;
+                }
+            };
+            let outcome = submit_frame(coord, req, stats);
+            if tx.send(outcome).is_err() {
+                break; // writer died (client gone)
+            }
+        }
+    }
+    drop(tx); // writer drains the queue, then exits
+    let _ = writer.join();
+}
+
+/// Submit one decoded frame; admission misses become immediate statuses.
+fn submit_frame(coord: &Coordinator, req: RequestFrame, stats: &NetStats) -> Outcome {
+    let image: Vec<i32> = req.codes.iter().map(|&c| c as i32).collect();
+    let deadline =
+        (req.deadline_us > 0).then(|| Duration::from_micros(req.deadline_us as u64));
+    match coord.try_submit(image, deadline) {
+        Ok(ticket) => Outcome::Pending(req.id, ticket),
+        Err(SubmitError::Rejected) => Outcome::Immediate(req.id, Status::Rejected),
+        Err(SubmitError::BadShape { .. }) => {
+            stats.malformed.fetch_add(1, Ordering::Relaxed);
+            Outcome::Immediate(req.id, Status::Malformed)
+        }
+        Err(SubmitError::Shutdown) => Outcome::Immediate(req.id, Status::Failed),
+    }
+}
+
+/// Minimal HTTP/1.1 fallback: `POST /infer` (body = one code byte per
+/// activation, optional `X-Deadline-Us` header), `GET /metrics`,
+/// `GET /healthz`. One request per connection (`Connection: close`).
+fn handle_http(
+    stream: &TcpStream,
+    first4: &[u8; 4],
+    coord: &Arc<Coordinator>,
+    stop: &Arc<AtomicBool>,
+    stats: &Arc<NetStats>,
+) {
+    const MAX_HEAD: usize = 16 * 1024;
+    let mut head = first4.to_vec();
+    let mut r = StopAwareStream { inner: stream, stop };
+    // read byte-wise until the blank line; requests are tiny and this
+    // path is a fallback, not the throughput surface
+    let mut byte = [0u8; 1];
+    while !head.ends_with(b"\r\n\r\n") {
+        if head.len() > MAX_HEAD {
+            respond_http(stream, 400, "{\"error\":\"header too large\"}");
+            return;
+        }
+        match r.read(&mut byte) {
+            Ok(1) => head.push(byte[0]),
+            _ => return,
+        }
+    }
+    let head_text = String::from_utf8_lossy(&head);
+    let mut lines = head_text.split("\r\n");
+    let request_line = lines.next().unwrap_or_default();
+    let mut parts = request_line.split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or("/"));
+
+    let mut content_length = 0usize;
+    let mut deadline_us = 0u64;
+    for line in lines {
+        let Some((k, v)) = line.split_once(':') else { continue };
+        let v = v.trim();
+        match k.to_ascii_lowercase().as_str() {
+            "content-length" => content_length = v.parse().unwrap_or(0),
+            "x-deadline-us" => deadline_us = v.parse().unwrap_or(0),
+            _ => {}
+        }
+    }
+
+    match (method, path) {
+        ("GET", "/healthz") => respond_http(stream, 200, "ok"),
+        ("GET", "/metrics") => {
+            let m = coord.metrics();
+            let body = format!(
+                "{m}\nrejected {}\nshed_deadline {}\nfailed {}\n",
+                m.rejected, m.shed_deadline, m.failed
+            );
+            respond_http(stream, 200, &body);
+        }
+        ("POST", _) => {
+            if content_length == 0 || content_length > proto::MAX_FRAME {
+                respond_http(stream, 400, "{\"error\":\"bad content-length\"}");
+                return;
+            }
+            let mut body = vec![0u8; content_length];
+            if r.read_exact(&mut body).is_err() {
+                return;
+            }
+            let image: Vec<i32> = body.iter().map(|&c| c as i32).collect();
+            let deadline = (deadline_us > 0).then(|| Duration::from_micros(deadline_us));
+            match coord.try_submit(image, deadline) {
+                Ok(ticket) => match ticket.wait() {
+                    Ok(res) => {
+                        let logits: Vec<String> =
+                            res.logits.iter().map(|l| format!("{l:?}")).collect();
+                        respond_http(
+                            stream,
+                            200,
+                            &format!(
+                                "{{\"class\":{},\"logits\":[{}]}}",
+                                res.class,
+                                logits.join(",")
+                            ),
+                        );
+                    }
+                    Err(ServeError::DeadlineExceeded { .. }) => {
+                        respond_http(stream, 504, "{\"error\":\"deadline exceeded\"}")
+                    }
+                    Err(_) => respond_http(stream, 500, "{\"error\":\"worker failed\"}"),
+                },
+                Err(SubmitError::Rejected) => {
+                    respond_http(stream, 503, "{\"error\":\"queue full\"}")
+                }
+                Err(SubmitError::BadShape { got, want }) => {
+                    stats.malformed.fetch_add(1, Ordering::Relaxed);
+                    respond_http(
+                        stream,
+                        400,
+                        &format!("{{\"error\":\"image has {got} codes, expected {want}\"}}"),
+                    );
+                }
+                Err(SubmitError::Shutdown) => {
+                    respond_http(stream, 503, "{\"error\":\"shutting down\"}")
+                }
+            }
+        }
+        _ => respond_http(stream, 404, "{\"error\":\"try POST /infer, GET /metrics\"}"),
+    }
+}
+
+fn respond_http(stream: &TcpStream, code: u16, body: &str) {
+    let reason = match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Error",
+    };
+    let content_type =
+        if body.starts_with('{') { "application/json" } else { "text/plain" };
+    let resp = format!(
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = (&mut &*stream).write_all(resp.as_bytes());
+    let _ = (&mut &*stream).flush();
+}

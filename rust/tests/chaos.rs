@@ -1,0 +1,353 @@
+//! Chaos suite for the serving tier (DESIGN.md S21): inject worker
+//! failures, overload a real socket, and throw malformed bytes at the
+//! server — the invariants are that every in-flight request resolves to
+//! a structured outcome (nothing vanishes), the `rejected` counter is
+//! driven by genuine backpressure from a live socket, connections
+//! survive malformed-but-framed requests, and the cumulative metrics
+//! never roll backwards.
+//!
+//! Backends are injected through `Coordinator::start_with` (the seam the
+//! coordinator exposes for exactly this), so failures are deterministic:
+//! `fail_next` arms N batch failures, `slow_ms` turns the worker into a
+//! bottleneck.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use lutmul::coordinator::{Coordinator, MetricsSummary, ServeConfig, ServeError};
+use lutmul::engine::{BackendFactory, BatchOutput, InferenceBackend};
+use lutmul::serve::proto::{self, RequestFrame, Status};
+use lutmul::serve::{Server, ServerConfig};
+
+/// Codes per image for the fake backend (no real network needed — the
+/// chaos suite tests the serving machinery, not the math).
+const IMAGE_PX: usize = 4;
+
+/// Shared control block for every backend the factory builds, across
+/// rebuilds.
+#[derive(Default)]
+struct Control {
+    builds: AtomicU64,
+    calls: AtomicU64,
+    /// Fail this many upcoming batches (decremented per failure).
+    fail_next: AtomicU64,
+    /// Sleep this long per batch (worker bottleneck for overload tests).
+    slow_ms: AtomicU64,
+}
+
+/// Deterministic fake backend: logits are a pure function of the image,
+/// so results stay verifiable through failures and rebuilds.
+struct FlakyBackend {
+    ctl: Arc<Control>,
+}
+
+fn expected_logits(img: &[i32]) -> Vec<f32> {
+    vec![img.iter().sum::<i32>() as f32, img[0] as f32, 0.5]
+}
+
+impl InferenceBackend for FlakyBackend {
+    fn name(&self) -> &str {
+        "flaky"
+    }
+
+    fn infer_batch(&mut self, images: &[Vec<i32>]) -> anyhow::Result<BatchOutput> {
+        self.ctl.calls.fetch_add(1, Ordering::SeqCst);
+        let armed = self
+            .ctl
+            .fail_next
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1));
+        if armed.is_ok() {
+            anyhow::bail!("injected backend fault");
+        }
+        let slow = self.ctl.slow_ms.load(Ordering::Relaxed);
+        if slow > 0 {
+            std::thread::sleep(Duration::from_millis(slow));
+        }
+        Ok(BatchOutput {
+            logits: images.iter().map(|i| expected_logits(i)).collect(),
+            cycles: 0,
+            counters: Vec::new(),
+        })
+    }
+}
+
+fn flaky_factory(ctl: Arc<Control>) -> BackendFactory {
+    Arc::new(move || {
+        ctl.builds.fetch_add(1, Ordering::SeqCst);
+        Ok(Box::new(FlakyBackend { ctl: ctl.clone() }))
+    })
+}
+
+fn img(seed: i32) -> Vec<i32> {
+    (0..IMAGE_PX as i32).map(|i| (seed + i) & 15).collect()
+}
+
+/// The cumulative counters a summary must never decrease.
+fn assert_monotonic(prev: &MetricsSummary, next: &MetricsSummary, label: &str) {
+    assert!(next.completed >= prev.completed, "{label}: completed rolled back");
+    assert!(next.batches >= prev.batches, "{label}: batches rolled back");
+    assert!(next.failed >= prev.failed, "{label}: failed rolled back");
+    assert!(next.shed_deadline >= prev.shed_deadline, "{label}: shed rolled back");
+    assert!(next.rejected >= prev.rejected, "{label}: rejected rolled back");
+}
+
+#[test]
+fn worker_failure_resolves_every_ticket_and_rebuilds() {
+    let ctl = Arc::new(Control::default());
+    let coord = Coordinator::start_with(
+        flaky_factory(ctl.clone()),
+        IMAGE_PX,
+        1_000,
+        ServeConfig {
+            workers: 1,
+            max_batch: 4,
+            max_wait: Duration::from_millis(5),
+            queue_depth: 64,
+        },
+    )
+    .unwrap();
+    assert_eq!(ctl.builds.load(Ordering::SeqCst), 1, "one eager backend build");
+
+    // arm one batch failure, then submit a batch: every ticket must
+    // resolve — some to WorkerFailed (the poisoned batch), the rest (if
+    // the batcher split the burst) to correct results from the rebuilt
+    // backend
+    ctl.fail_next.store(1, Ordering::SeqCst);
+    let images: Vec<Vec<i32>> = (0..4).map(img).collect();
+    let tickets: Vec<_> =
+        images.iter().map(|i| coord.submit(i.clone()).unwrap()).collect();
+    let mut failed = 0u64;
+    let mut completed = 0u64;
+    for (i, t) in tickets.into_iter().enumerate() {
+        match t.wait() {
+            Err(ServeError::WorkerFailed(msg)) => {
+                assert!(msg.contains("injected"), "unexpected failure: {msg}");
+                failed += 1;
+            }
+            Ok(r) => {
+                assert_eq!(r.logits, expected_logits(&images[i]), "request {i}");
+                completed += 1;
+            }
+            other => panic!("ticket {i} resolved to {other:?}"),
+        }
+    }
+    assert_eq!(failed + completed, 4, "a ticket vanished");
+    assert!(failed >= 1, "the armed fault never fired");
+    let m1 = coord.metrics();
+    assert_eq!(m1.failed, failed);
+    assert_eq!(m1.completed, completed);
+    assert!(
+        ctl.builds.load(Ordering::SeqCst) >= 2,
+        "the worker never rebuilt through the factory"
+    );
+
+    // the rebuilt backend serves correct results
+    let after = coord.submit(img(9)).unwrap().wait().unwrap();
+    assert_eq!(after.logits, expected_logits(&img(9)));
+    let m2 = coord.metrics();
+    assert_eq!(m2.completed, completed + 1);
+    assert_monotonic(&m1, &m2, "after rebuild");
+    coord.shutdown();
+}
+
+#[test]
+fn socket_flood_drives_rejected_with_every_request_answered() {
+    // a slow single worker + a tiny queue: an open-loop flood from a
+    // real socket must bounce at admission (Status::Rejected on the
+    // wire, the coordinator's `rejected` counter climbing) while every
+    // frame still gets exactly one in-order response
+    let ctl = Arc::new(Control::default());
+    ctl.slow_ms.store(30, Ordering::Relaxed);
+    let coord = Coordinator::start_with(
+        flaky_factory(ctl),
+        IMAGE_PX,
+        1_000,
+        ServeConfig {
+            workers: 1,
+            max_batch: 1,
+            max_wait: Duration::from_micros(100),
+            queue_depth: 2,
+        },
+    )
+    .unwrap();
+    let server = Server::over(coord, ServerConfig::default()).unwrap();
+
+    const FLOOD: u64 = 40;
+    let stream = TcpStream::connect(server.local_addr()).unwrap();
+    let mut w = BufWriter::new(stream.try_clone().unwrap());
+    for id in 0..FLOOD {
+        let codes: Vec<u8> = img(id as i32).iter().map(|&c| c as u8).collect();
+        let frame = proto::encode_request(&RequestFrame { id, deadline_us: 0, codes });
+        proto::write_frame(&mut w, &frame).unwrap();
+    }
+    w.flush().unwrap();
+
+    let mut r = BufReader::new(&stream);
+    let (mut ok, mut rejected) = (0u64, 0u64);
+    for id in 0..FLOOD {
+        let payload = proto::read_frame(&mut r, None).unwrap().expect("response missing");
+        let resp = proto::decode_response(&payload).unwrap();
+        assert_eq!(resp.id, id, "responses reordered under overload");
+        match resp.status {
+            Status::Ok => {
+                assert_eq!(resp.logits, expected_logits(&img(id as i32)));
+                ok += 1;
+            }
+            Status::Rejected => rejected += 1,
+            other => panic!("request {id}: unexpected status {other:?}"),
+        }
+    }
+    assert_eq!(ok + rejected, FLOOD, "a request vanished under overload");
+    assert!(ok >= 1, "nothing completed");
+    assert!(rejected >= 1, "the flood never hit admission control");
+    assert_eq!(server.rejected(), rejected, "wire statuses vs rejected counter");
+    let m = server.metrics();
+    assert_eq!(m.completed, ok);
+    assert_eq!(m.rejected, rejected);
+    drop(r);
+    drop(w);
+    drop(stream);
+    server.shutdown();
+}
+
+#[test]
+fn malformed_frames_answer_without_killing_connection_or_server() {
+    let ctl = Arc::new(Control::default());
+    let coord = Coordinator::start_with(
+        flaky_factory(ctl),
+        IMAGE_PX,
+        1_000,
+        ServeConfig::default(),
+    )
+    .unwrap();
+    let server = Server::over(coord, ServerConfig::default()).unwrap();
+    let addr = server.local_addr();
+
+    let send_valid = |w: &mut dyn Write, id: u64| {
+        let codes: Vec<u8> = img(id as i32).iter().map(|&c| c as u8).collect();
+        let frame = proto::encode_request(&RequestFrame { id, deadline_us: 0, codes });
+        proto::write_frame(w, &frame).unwrap();
+        w.flush().unwrap();
+    };
+    let read_one = |r: &mut dyn Read| -> proto::ResponseFrame {
+        let payload = proto::read_frame(r, None).unwrap().expect("closed early");
+        proto::decode_response(&payload).unwrap()
+    };
+
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(&stream);
+
+    // healthy request
+    send_valid(&mut w, 1);
+    let resp = read_one(&mut r);
+    assert_eq!((resp.id, resp.status), (1, Status::Ok));
+
+    // bad version byte: structurally invalid, framing intact — answered
+    // Malformed, connection survives
+    let mut bad = proto::encode_request(&RequestFrame {
+        id: 2,
+        deadline_us: 0,
+        codes: vec![1; IMAGE_PX],
+    });
+    bad[4] = 99; // corrupt the version byte inside the payload
+    w.write_all(&bad).unwrap();
+    w.flush().unwrap();
+    let resp = read_one(&mut r);
+    assert_eq!(resp.status, Status::Malformed);
+
+    // wrong code count: decodes fine, bounced by shape admission —
+    // Malformed with the request's own id, connection survives
+    send_valid(&mut w, 3); // keep ordering observable
+    let codes = vec![1u8; IMAGE_PX + 3];
+    let frame = proto::encode_request(&RequestFrame { id: 4, deadline_us: 0, codes });
+    w.write_all(&frame).unwrap();
+    w.flush().unwrap();
+    let resp = read_one(&mut r);
+    assert_eq!((resp.id, resp.status), (3, Status::Ok));
+    let resp = read_one(&mut r);
+    assert_eq!((resp.id, resp.status), (4, Status::Malformed));
+
+    // torn framing: a length prefix far over MAX_FRAME cannot be
+    // resynchronized — the server answers Malformed and closes
+    w.write_all(&u32::MAX.to_le_bytes()).unwrap();
+    w.flush().unwrap();
+    let resp = read_one(&mut r);
+    assert_eq!(resp.status, Status::Malformed);
+    let eof = proto::read_frame(&mut r, None).unwrap();
+    assert!(eof.is_none(), "server must close after a framing error");
+    drop(r);
+    drop(w);
+    drop(stream);
+
+    // the server itself is unharmed: a fresh connection still serves
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(&stream);
+    send_valid(&mut w, 7);
+    let resp = read_one(&mut r);
+    assert_eq!((resp.id, resp.status), (7, Status::Ok));
+    drop(r);
+    drop(w);
+    drop(stream);
+
+    assert!(
+        server.stats().malformed.load(Ordering::Relaxed) >= 3,
+        "malformed traffic was not counted"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn metrics_stay_monotonic_through_failures_sheds_and_rejects() {
+    let ctl = Arc::new(Control::default());
+    let coord = Coordinator::start_with(
+        flaky_factory(ctl.clone()),
+        IMAGE_PX,
+        1_000,
+        ServeConfig {
+            workers: 1,
+            max_batch: 2,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 64,
+        },
+    )
+    .unwrap();
+
+    // phase 1: healthy traffic
+    for i in 0..4 {
+        coord.submit(img(i)).unwrap().wait().unwrap();
+    }
+    let m1 = coord.metrics();
+    assert_eq!(m1.completed, 4);
+
+    // phase 2: injected failure
+    ctl.fail_next.store(1, Ordering::SeqCst);
+    let t = coord.submit(img(5)).unwrap();
+    assert!(matches!(t.wait(), Err(ServeError::WorkerFailed(_))));
+    let m2 = coord.metrics();
+    assert_monotonic(&m1, &m2, "after failure");
+    assert!(m2.failed >= 1);
+
+    // phase 3: deadline shed
+    let t = coord.try_submit(img(6), Some(Duration::ZERO)).unwrap();
+    assert!(matches!(t.wait(), Err(ServeError::DeadlineExceeded { .. })));
+    let m3 = coord.metrics();
+    assert_monotonic(&m2, &m3, "after shed");
+    assert!(m3.shed_deadline >= 1);
+
+    // phase 4: healthy again — the rebuilt backend and the histograms
+    // keep accumulating
+    for i in 0..3 {
+        coord.submit(img(10 + i)).unwrap().wait().unwrap();
+    }
+    let m4 = coord.metrics();
+    assert_monotonic(&m3, &m4, "after recovery");
+    assert_eq!(m4.completed, 7);
+    assert_eq!(m4.failed, 1);
+    assert_eq!(m4.shed_deadline, 1);
+    coord.shutdown();
+}

@@ -1,0 +1,352 @@
+//! Serving-tier property suite (DESIGN.md S21, no artifacts needed —
+//! synthetic networks on trained shapes):
+//!
+//!  * randomized concurrent submitters through the coordinator: every
+//!    ticket resolves to the logits of *its own* image (no reordering,
+//!    no cross-wiring), bit-identical to a direct `Executor` run;
+//!  * the TCP binary protocol round-trips logits bit-exactly, answers
+//!    pipelined frames in submission order, and keeps connections
+//!    isolated from each other;
+//!  * batches close both ways — window timeout and `max_batch` fill —
+//!    with zero lost requests either way;
+//!  * expired deadlines are shed before compute with the shed count in
+//!    `MetricsSummary`, in-process and across the wire;
+//!  * the HTTP/1.1 fallback answers `POST /infer`, `GET /metrics` and
+//!    `GET /healthz` on the same port as the binary protocol.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use lutmul::coordinator::{Coordinator, ServeConfig, ServeError};
+use lutmul::engine::{BackendKind, Engine};
+use lutmul::graph::executor::{Datapath, Executor, Tensor};
+use lutmul::graph::mobilenet_v2_small;
+use lutmul::graph::network::Network;
+use lutmul::serve::proto::{self, RequestFrame, Status};
+use lutmul::serve::{Server, ServerConfig};
+use lutmul::util::prop::{self, Rng};
+
+fn small_net() -> Network {
+    Network::synthetic(&mobilenet_v2_small(), 0x17)
+}
+
+fn random_images(rng: &mut Rng, net: &Network, n: usize) -> Vec<Vec<i32>> {
+    let (s, c) = (net.meta.image_size, net.meta.in_ch);
+    (0..n).map(|_| rng.vec_i32(s * s * c, 0, 15)).collect()
+}
+
+/// Direct (coordinator-free) logits for `images` — the ground truth
+/// every serving path must reproduce bit-for-bit.
+fn direct_logits(net: &Network, images: &[Vec<i32>]) -> Vec<Vec<f32>> {
+    let (s, c) = (net.meta.image_size, net.meta.in_ch);
+    let ex = Executor::new(net, Datapath::Arithmetic);
+    let tensors: Vec<Tensor> =
+        images.iter().map(|i| Tensor::from_hwc(s, s, c, i.clone())).collect();
+    ex.run_batch(&tensors)
+}
+
+fn engine_over(net: &Network) -> Engine {
+    Engine::builder()
+        .network(net.clone())
+        .backend(BackendKind::Reference)
+        .build()
+        .unwrap()
+}
+
+/// Put one request frame on the wire.
+fn send_req(w: &mut impl Write, id: u64, deadline_us: u32, image: &[i32]) {
+    let codes: Vec<u8> = image.iter().map(|&c| c as u8).collect();
+    let frame = proto::encode_request(&RequestFrame { id, deadline_us, codes });
+    proto::write_frame(w, &frame).unwrap();
+    w.flush().unwrap();
+}
+
+/// Read one response frame off the wire.
+fn read_resp(r: &mut impl Read) -> proto::ResponseFrame {
+    let payload = proto::read_frame(r, None).unwrap().expect("connection closed early");
+    proto::decode_response(&payload).unwrap()
+}
+
+#[test]
+fn prop_concurrent_submits_no_reorder_no_cross_wire() {
+    // randomized concurrent submitters: whatever the batcher interleaves,
+    // each ticket must resolve to its own image's logits, bit-identical
+    // to the direct executor run
+    prop::cases(4, |rng| {
+        let net = small_net();
+        let engine = engine_over(&net);
+        let n_threads = 2 + rng.below(3) as usize;
+        let per_thread = 3 + rng.below(6) as usize;
+        let coord = Coordinator::start(
+            &engine,
+            ServeConfig {
+                workers: 2,
+                max_batch: 1 + rng.below(8) as usize,
+                max_wait: Duration::from_micros(200),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+
+        let images: Vec<Vec<Vec<i32>>> =
+            (0..n_threads).map(|_| random_images(rng, &net, per_thread)).collect();
+        let want: Vec<Vec<Vec<f32>>> =
+            images.iter().map(|imgs| direct_logits(&net, imgs)).collect();
+
+        std::thread::scope(|s| {
+            for (imgs, want) in images.iter().zip(&want) {
+                let coord = &coord;
+                s.spawn(move || {
+                    // submit everything first (concurrent pressure on the
+                    // batch window), then wait in submission order
+                    let tickets: Vec<_> = imgs
+                        .iter()
+                        .map(|img| coord.submit(img.clone()).expect("queue accepts"))
+                        .collect();
+                    for (i, t) in tickets.into_iter().enumerate() {
+                        let r = t.wait().expect("request resolves");
+                        assert_eq!(r.logits, want[i], "request {i} got another image's logits");
+                    }
+                });
+            }
+        });
+
+        let m = coord.metrics();
+        assert_eq!(m.completed as usize, n_threads * per_thread);
+        assert_eq!(m.shed_deadline, 0);
+        assert_eq!(m.failed, 0);
+        coord.shutdown();
+    });
+}
+
+#[test]
+fn socket_binary_round_trip_bit_exact_in_order() {
+    // pipelined frames over one socket: responses come back in
+    // submission order with logits bit-identical to the direct executor
+    // (f32 bits survive the wire)
+    let net = small_net();
+    let engine = engine_over(&net);
+    let server =
+        Server::start(&engine, ServeConfig::default(), ServerConfig::default()).unwrap();
+
+    let mut rng = Rng::new(0xB17);
+    let images = random_images(&mut rng, &net, 12);
+    let want = direct_logits(&net, &images);
+
+    let stream = TcpStream::connect(server.local_addr()).unwrap();
+    let mut w = BufWriter::new(stream.try_clone().unwrap());
+    for (i, img) in images.iter().enumerate() {
+        send_req(&mut w, 1000 + i as u64, 0, img);
+    }
+    let mut r = BufReader::new(&stream);
+    for (i, want) in want.iter().enumerate() {
+        let resp = read_resp(&mut r);
+        assert_eq!(resp.id, 1000 + i as u64, "response out of order");
+        assert_eq!(resp.status, Status::Ok);
+        assert_eq!(&resp.logits, want, "logits not bit-exact across the wire");
+    }
+    drop(r);
+    drop(w);
+    drop(stream);
+
+    let m = server.metrics();
+    assert_eq!(m.completed, 12);
+    server.shutdown();
+}
+
+#[test]
+fn socket_connections_are_isolated() {
+    // several client connections at once: each sees exactly its own
+    // responses, in its own submission order
+    let net = small_net();
+    let engine = engine_over(&net);
+    let server = Server::start(
+        &engine,
+        ServeConfig { workers: 2, max_batch: 4, ..Default::default() },
+        ServerConfig::default(),
+    )
+    .unwrap();
+    let addr = server.local_addr();
+
+    let mut rng = Rng::new(0x150);
+    let clients: Vec<Vec<Vec<i32>>> = (0..3).map(|_| random_images(&mut rng, &net, 6)).collect();
+    let wants: Vec<Vec<Vec<f32>>> = clients.iter().map(|c| direct_logits(&net, c)).collect();
+
+    std::thread::scope(|s| {
+        for (ci, (imgs, want)) in clients.iter().zip(&wants).enumerate() {
+            s.spawn(move || {
+                let stream = TcpStream::connect(addr).unwrap();
+                let mut w = BufWriter::new(stream.try_clone().unwrap());
+                for (i, img) in imgs.iter().enumerate() {
+                    send_req(&mut w, ((ci as u64) << 32) | i as u64, 0, img);
+                }
+                let mut r = BufReader::new(&stream);
+                for (i, want) in want.iter().enumerate() {
+                    let resp = read_resp(&mut r);
+                    assert_eq!(resp.id, ((ci as u64) << 32) | i as u64, "client {ci} crossed wires");
+                    assert_eq!(resp.status, Status::Ok);
+                    assert_eq!(&resp.logits, want, "client {ci} request {i}");
+                }
+            });
+        }
+    });
+
+    assert_eq!(server.metrics().completed, 18);
+    server.shutdown();
+}
+
+#[test]
+fn timeout_close_and_fill_close_lose_nothing() {
+    // both batch-close paths: a partial batch flushed by the window
+    // timeout, and a full batch closed by max_batch — every ticket
+    // resolves either way
+    let net = small_net();
+    let engine = engine_over(&net);
+    let coord = Coordinator::start(
+        &engine,
+        ServeConfig {
+            workers: 1,
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut rng = Rng::new(0xC105E);
+
+    // timeout close: 3 < max_batch, the window must flush them
+    let imgs = random_images(&mut rng, &net, 3);
+    let want = direct_logits(&net, &imgs);
+    let tickets: Vec<_> = imgs.iter().map(|i| coord.submit(i.clone()).unwrap()).collect();
+    for (t, want) in tickets.into_iter().zip(&want) {
+        assert_eq!(&t.wait().unwrap().logits, want);
+    }
+
+    // fill close: exactly max_batch in one burst
+    let imgs = random_images(&mut rng, &net, 8);
+    let want = direct_logits(&net, &imgs);
+    let tickets: Vec<_> = imgs.iter().map(|i| coord.submit(i.clone()).unwrap()).collect();
+    for (t, want) in tickets.into_iter().zip(&want) {
+        assert_eq!(&t.wait().unwrap().logits, want);
+    }
+
+    let m = coord.metrics();
+    assert_eq!(m.completed, 11, "a request was lost");
+    coord.shutdown();
+}
+
+#[test]
+fn expired_deadlines_shed_before_compute() {
+    // an already-expired deadline must come back DeadlineExceeded (shed
+    // at dispatch, before any backend cycles), and the shed count must
+    // reach the metrics; a deadline-free request on the same coordinator
+    // still completes
+    let net = small_net();
+    let engine = engine_over(&net);
+    let coord = Coordinator::start(&engine, ServeConfig::default()).unwrap();
+    let mut rng = Rng::new(0xDEAD);
+    let imgs = random_images(&mut rng, &net, 3);
+
+    let shed = coord.try_submit(imgs[0].clone(), Some(Duration::ZERO)).unwrap();
+    match shed.wait() {
+        Err(ServeError::DeadlineExceeded { .. }) => {}
+        other => panic!("expected a deadline shed, got {other:?}"),
+    }
+
+    let ok = coord.submit(imgs[1].clone()).unwrap();
+    assert_eq!(ok.wait().unwrap().logits, direct_logits(&net, &imgs[1..2])[0]);
+
+    let m = coord.metrics();
+    assert_eq!(m.shed_deadline, 1);
+    assert_eq!(m.completed, 1);
+    // shed requests must not contaminate the latency histograms
+    assert_eq!(m.failed, 0);
+    coord.shutdown();
+}
+
+#[test]
+fn wire_deadline_comes_back_as_status() {
+    // a 1 us relative deadline has always expired by the time the batch
+    // window dispatches; the client must see DeadlineExceeded, not a
+    // hang or a dropped connection
+    let net = small_net();
+    let engine = engine_over(&net);
+    let server =
+        Server::start(&engine, ServeConfig::default(), ServerConfig::default()).unwrap();
+    let mut rng = Rng::new(0xD1);
+    let imgs = random_images(&mut rng, &net, 2);
+
+    let stream = TcpStream::connect(server.local_addr()).unwrap();
+    let mut w = BufWriter::new(stream.try_clone().unwrap());
+    send_req(&mut w, 1, 1, &imgs[0]); // 1 us: dead on arrival
+    send_req(&mut w, 2, 0, &imgs[1]); // no deadline: must complete
+    let mut r = BufReader::new(&stream);
+    let first = read_resp(&mut r);
+    assert_eq!((first.id, first.status), (1, Status::DeadlineExceeded));
+    assert!(first.logits.is_empty(), "shed responses carry no logits");
+    let second = read_resp(&mut r);
+    assert_eq!((second.id, second.status), (2, Status::Ok));
+    drop(r);
+    drop(w);
+    drop(stream);
+
+    let m = server.metrics();
+    assert_eq!(m.shed_deadline, 1);
+    assert_eq!(m.completed, 1);
+    server.shutdown();
+}
+
+#[test]
+fn http_fallback_shares_the_port() {
+    let net = small_net();
+    let engine = engine_over(&net);
+    let server =
+        Server::start(&engine, ServeConfig::default(), ServerConfig::default()).unwrap();
+    let addr = server.local_addr();
+    let mut rng = Rng::new(0x477);
+    let img = random_images(&mut rng, &net, 1).remove(0);
+    let want = direct_logits(&net, std::slice::from_ref(&img)).remove(0);
+
+    // one-shot HTTP exchange (the server answers with Connection: close)
+    let http = |req: String| -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(req.as_bytes()).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    };
+
+    let health = http("GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n".into());
+    assert!(health.starts_with("HTTP/1.1 200"), "{health}");
+    assert!(health.ends_with("ok"), "{health}");
+
+    let body: Vec<u8> = img.iter().map(|&c| c as u8).collect();
+    let req = format!(
+        "POST /infer HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n",
+        body.len()
+    );
+    // body is raw bytes; codes 0..=15 are not valid UTF-8 text, so build
+    // the request manually
+    let mut raw = req.into_bytes();
+    raw.extend_from_slice(&body);
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(&raw).unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    assert!(out.starts_with("HTTP/1.1 200"), "{out}");
+    let class = lutmul::coordinator::argmax(&want);
+    assert!(
+        out.contains(&format!("\"class\":{class}")),
+        "HTTP response disagrees with the direct executor: {out}"
+    );
+
+    let metrics = http("GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n".into());
+    assert!(metrics.contains("rejected"), "{metrics}");
+
+    let missing = http("GET /nope HTTP/1.1\r\nHost: x\r\n\r\n".into());
+    assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+
+    assert!(server.metrics().completed >= 1);
+    server.shutdown();
+}
