@@ -4,7 +4,7 @@
 
 PYTHON ?= python3
 
-.PHONY: artifacts artifacts-fig2 test-python test-rust bench-smoke multi-smoke engine-smoke kernel-smoke serve-smoke bench-json doc lint
+.PHONY: artifacts artifacts-fig2 test-python test-rust bench-smoke multi-smoke engine-smoke kernel-smoke serve-smoke bench-json bench-regress doc lint
 
 artifacts:
 	mkdir -p artifacts
@@ -45,18 +45,32 @@ multi-smoke:
 engine-smoke:
 	cd rust && cargo run --release -- bench --backends all --n 6
 
-# Activation-major kernel smoke (DESIGN.md S20, EXPERIMENTS.md E13):
-# the LUT-GEMM table-layout gate (activation-major >= 1.2x MAC-major
+# Kernel smoke (DESIGN.md S20/S22, EXPERIMENTS.md E13/E15): the
+# LUT-GEMM table-layout gate (activation-major >= 1.2x MAC-major
 # single-thread under --smoke's noise floor; the full
-# `cargo bench --bench bench_kernels` gates >= 1.5x), bit-exactness
-# across every table layout, the counting-allocator zero-allocation
-# test, the arena property suite, and the cross-backend bit-identity
-# table. Exits nonzero on any regression or divergence, so CI gates on
-# it.
+# `cargo bench --bench bench_kernels` gates >= 1.5x) PLUS the
+# batch-major gate (batch-major sweep >= 1.5x the image-major act-major
+# driver at batch 8 single-thread, same bar in both modes — warmup +
+# median-of-k timing keeps the ratio stable), bit-exactness across
+# every table layout and batch driver, the counting-allocator
+# zero-allocation test (batch-major and image-major steady state), the
+# arena + batch-major property suites, and the cross-backend
+# bit-identity table. Exits nonzero on any regression or divergence, so
+# CI gates on it.
 kernel-smoke:
 	cd rust && cargo bench --bench bench_kernels -- --smoke
-	cd rust && cargo test -q --test zero_alloc --test kernels_arena
+	cd rust && cargo test -q --test zero_alloc --test kernels_arena --test kernels_batch
 	cd rust && cargo run --release -- bench --backends all --n 6
+
+# Bench-trajectory regression gate (EXPERIMENTS.md E15): regenerate the
+# machine-readable rows into a scratch file and diff images_per_s
+# against the committed BENCH_kernels.json — fails on a >20% drop for
+# any matching (backend, datapath) row; skips gracefully while the
+# committed baseline has no measured rows.
+bench-regress:
+	cd rust && cargo run --release -- bench --backends all --n 8 --json > ../BENCH_new.json
+	$(PYTHON) scripts/bench_regress.py BENCH_kernels.json BENCH_new.json
+	rm -f BENCH_new.json
 
 # Serving-tier smoke (DESIGN.md S21, EXPERIMENTS.md E14): the serve/chaos
 # integration suites (ordering, bit-exactness across the wire, worker

@@ -1,18 +1,20 @@
-//! Bench — activation-major LUT-GEMM kernels vs the MAC-major layout
-//! (DESIGN.md S20, EXPERIMENTS.md E13): single-thread per-image
-//! throughput of the compiled `LutTables` kernels in both table
-//! layouts, plus the per-MAC LUT6_2 readout and the arithmetic datapath
-//! for context. No artifacts needed: runs on a synthetic network with
-//! the trained `mobilenet_v2_small` shape, through a persistent
-//! `ScratchPool` (the steady-state serving configuration — zero
-//! per-image allocation).
+//! Bench — batch-major SIMD LUT-GEMM vs the image-major sweep, plus
+//! the table-layout ladder (DESIGN.md S20/S22, EXPERIMENTS.md E13/E15):
+//! single-thread throughput of the compiled kernels at batch 8 through
+//! a persistent `ScratchPool` (the steady-state serving configuration —
+//! zero per-image allocation). No artifacts needed: runs on a synthetic
+//! network with the trained `mobilenet_v2_small` shape.
 //!
 //! Acceptance lines printed at the end (the process exits nonzero on
-//! FAIL, so CI can gate on the bench):
-//!  * every layout/datapath must be bit-identical on every image;
-//!  * the activation-major kernels must deliver >= 1.5x the MAC-major
-//!    per-image throughput single-threaded (>= 1.2x under `--smoke`,
-//!    where one-iteration timings on shared CI runners are noisy).
+//! FAIL, so CI can gate on the bench — `make kernel-smoke`):
+//!  * every layout/datapath/batch-driver must be bit-identical on every
+//!    image;
+//!  * activation-major tables >= 1.5x the MAC-major per-image
+//!    throughput single-threaded (>= 1.2x under `--smoke`);
+//!  * the batch-major sweep >= 1.5x the image-major act-major driver at
+//!    batch 8 single-threaded (same bar under `--smoke`: the
+//!    warmup + median-of-k timing makes the ratio stable on shared
+//!    runners, so the smoke gate is not discounted).
 //!
 //! Run: `cargo bench --bench bench_kernels` (`-- --smoke` for the
 //! CI-sized run, also reachable as `make kernel-smoke`).
@@ -22,7 +24,7 @@ use lutmul::graph::mobilenet_v2_small;
 use lutmul::graph::network::Network;
 use lutmul::graph::plan::NetworkPlan;
 use lutmul::graph::ScratchPool;
-use lutmul::util::bench::{bench, per_second};
+use lutmul::util::bench::{bench_warm, per_second};
 use lutmul::util::prop::Rng;
 
 fn main() {
@@ -46,49 +48,79 @@ fn main() {
     let mac = Executor::from_plan(NetworkPlan::compile_mac_major(&net, Datapath::LutFabric));
     let direct = Executor::from_plan(NetworkPlan::compile_direct(&net, Datapath::LutFabric));
 
-    // --- bit-exactness across layouts and datapaths ---------------------
-    let want = arith.run_batch_with_threads(&images, 1);
+    // --- bit-exactness across layouts, datapaths and batch drivers ------
+    // reference: per-image execute on the arithmetic datapath
+    let want: Vec<Vec<f32>> = images.iter().map(|t| arith.execute(t)).collect();
     let mut diverged = 0usize;
-    for (name, ex) in [("act-major", &act), ("mac-major", &mac), ("direct", &direct)] {
-        if ex.run_batch_with_threads(&images, 1) != want {
-            println!("DIVERGED: LutFabric {name} disagrees with Arithmetic");
+    let mut check = |name: &str, got: Vec<Vec<f32>>| {
+        if got != want {
+            println!("DIVERGED: {name} disagrees with per-image Arithmetic");
             diverged += 1;
         }
-    }
-    println!("bit-exactness: {}/3 LUT layouts match the arithmetic datapath", 3 - diverged);
-
-    // --- single-thread throughput per layout ----------------------------
-    // persistent arenas: the steady-state serving configuration
-    let iters = if smoke { 2 } else { 12 };
-    let mut time = |name: &str, ex: &Executor| {
+    };
+    let image_major = |ex: &Executor| {
         let mut pool = ScratchPool::new();
         let mut out = Vec::new();
-        ex.run_batch_into(&images, 1, &mut pool, &mut out); // warm the arena
-        let r = bench(name, iters, || {
-            ex.run_batch_into(&images, 1, &mut pool, &mut out);
+        ex.run_image_major_into(&images, 1, &mut pool, &mut out);
+        out
+    };
+    check("batch-major arithmetic", arith.run_batch_with_threads(&images, 1));
+    check("batch-major act-major", act.run_batch_with_threads(&images, 1));
+    check("batch-major mac-major", mac.run_batch_with_threads(&images, 1));
+    check("batch-major direct", direct.run_batch_with_threads(&images, 1));
+    check("image-major act-major", image_major(&act));
+    check("image-major direct", image_major(&direct));
+    let checks = 6usize;
+    println!("bit-exactness: {}/{checks} kernel paths match the reference", checks - diverged);
+
+    // --- single-thread throughput per kernel path -----------------------
+    // persistent arenas; warmup + median-of-k so one preempted run
+    // can't flip a gate on a shared CI runner
+    let (warmup, iters) = if smoke { (3, 7) } else { (3, 15) };
+    let time = |name: &str, ex: &Executor, batch_major: bool| {
+        let mut pool = ScratchPool::new();
+        let mut out = Vec::new();
+        let r = bench_warm(name, warmup, iters, || {
+            if batch_major {
+                ex.run_batch_into(&images, 1, &mut pool, &mut out);
+            } else {
+                ex.run_image_major_into(&images, 1, &mut pool, &mut out);
+            }
             out.len()
         });
         per_second(batch, &r)
     };
     println!("\nsingle-thread images/s (persistent arena, batch {batch}):");
-    let ips_arith = time("Arithmetic  (compiled plan)          ", &arith);
-    let ips_act = time("LutFabric   act-major tables (LUT-GEMM)", &act);
-    let ips_mac = time("LutFabric   mac-major tables (pre-PR)  ", &mac);
-    let ips_direct = time("LutFabric   per-MAC LUT6_2 readout     ", &direct);
-    println!("    Arithmetic {ips_arith:.0} | act-major {ips_act:.0} | mac-major {ips_mac:.0} | direct {ips_direct:.0} img/s");
+    let ips_batch = time("LutFabric   act-major BATCH-major (S22)", &act, true);
+    let ips_act = time("LutFabric   act-major image-major      ", &act, false);
+    let ips_mac = time("LutFabric   mac-major image-major     ", &mac, false);
+    let ips_direct = time("LutFabric   per-MAC LUT6_2 readout     ", &direct, false);
+    let ips_arith = time("Arithmetic  batch-major                ", &arith, true);
+    println!(
+        "    batch-major {ips_batch:.0} | act-major {ips_act:.0} | mac-major {ips_mac:.0} \
+         | direct {ips_direct:.0} | arith {ips_arith:.0} img/s"
+    );
 
     // --- acceptance lines ----------------------------------------------
-    let speedup = ips_act / ips_mac;
-    let target = if smoke { 1.2 } else { 1.5 };
-    let layout_ok = speedup >= target;
+    let layout_speedup = ips_act / ips_mac;
+    let layout_target = if smoke { 1.2 } else { 1.5 };
+    let layout_ok = layout_speedup >= layout_target;
     println!(
-        "\nactivation-major vs MAC-major tables: {speedup:.2}x img/s single-thread \
-         (target >= {target}x): {}",
+        "\nactivation-major vs MAC-major tables: {layout_speedup:.2}x img/s single-thread \
+         (target >= {layout_target}x): {}",
         if layout_ok { "PASS" } else { "FAIL" }
+    );
+    let batch_speedup = ips_batch / ips_act;
+    let batch_target = 1.5;
+    let batch_ok = batch_speedup >= batch_target;
+    println!(
+        "batch-major vs image-major act-major at batch {batch}: {batch_speedup:.2}x img/s \
+         single-thread (target >= {batch_target}x): {}",
+        if batch_ok { "PASS" } else { "FAIL" }
     );
     let memo = ips_act / ips_direct;
     println!("activation-major vs per-MAC readout: {memo:.2}x (informational)");
-    if diverged > 0 || !layout_ok {
+    if diverged > 0 || !layout_ok || !batch_ok {
         std::process::exit(1);
     }
 }

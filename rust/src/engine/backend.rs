@@ -70,17 +70,21 @@ pub trait InferenceBackend: Send {
 }
 
 /// The reference integer executor behind the uniform contract
-/// (spec-level, batch-major across `threads` cores). Owns a persistent
-/// [`ScratchPool`] of per-thread tensor arenas (DESIGN.md S20), so a
-/// serving worker's steady-state batches run the zero-allocation kernel
-/// path — working buffers are sized once and reused for the backend's
-/// lifetime.
+/// (spec-level, batch-major across `threads` cores — DESIGN.md S22
+/// batch-major layer sweeps through `Executor::run_batch_into`). Owns
+/// a persistent [`ScratchPool`] of per-thread tensor arenas (DESIGN.md
+/// S20), so a serving worker's steady-state batches run the
+/// zero-allocation kernel path — working buffers are sized once and
+/// reused for the backend's lifetime.
 pub struct ExecutorBackend {
     ex: Executor,
     io: IoGeom,
     threads: usize,
     name: &'static str,
     pool: ScratchPool,
+    /// Drive the image-major witness path instead of the batch-major
+    /// sweeps (see [`image_major`](Self::image_major)).
+    image_major: bool,
 }
 
 impl ExecutorBackend {
@@ -99,7 +103,25 @@ impl ExecutorBackend {
             threads: threads.max(1),
             name,
             pool: ScratchPool::new(),
+            image_major: false,
         }
+    }
+
+    /// Like [`new`](Self::new) but driving the **image-major witness
+    /// path** (`Executor::run_image_major_into`, the pre-S22 per-image
+    /// driver) instead of the batch-major sweeps — the perf-baseline
+    /// row `lutmul bench --json` charts the batch-major speedup
+    /// against (EXPERIMENTS.md E15). Bit-exact with the default
+    /// backend by construction.
+    pub fn image_major(plan: std::sync::Arc<NetworkPlan>, threads: usize) -> Self {
+        let mut b = Self::new(plan, threads);
+        b.image_major = true;
+        b.name = if b.name == "executor/lut-fabric" {
+            "executor/lut-fabric/image-major"
+        } else {
+            "executor/image-major"
+        };
+        b
     }
 }
 
@@ -128,7 +150,11 @@ impl InferenceBackend for ExecutorBackend {
             tensors.push(Tensor::from_hwc(s, s, c, img.clone()));
         }
         let mut logits = Vec::with_capacity(images.len());
-        self.ex.run_batch_into(&tensors, self.threads, &mut self.pool, &mut logits);
+        if self.image_major {
+            self.ex.run_image_major_into(&tensors, self.threads, &mut self.pool, &mut logits);
+        } else {
+            self.ex.run_batch_into(&tensors, self.threads, &mut self.pool, &mut logits);
+        }
         Ok(BatchOutput { logits, cycles: 0, counters: Vec::new() })
     }
 }

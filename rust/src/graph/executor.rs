@@ -19,6 +19,15 @@
 //! batch (`rust/tests/zero_alloc.rs` asserts this with a counting
 //! allocator).
 //!
+//! Batches of two or more images run **batch-major** (DESIGN.md S22):
+//! images interleaved `[pixel][n][c]` in the arena, the plan walked
+//! once per chunk with the batch kernels so every looked-up product
+//! column is amortized across the whole batch, with within-layer
+//! output-row fan-out for heavy convs when the batch is too thin to
+//! fill the cores. The pre-S22 per-image driver survives as
+//! [`run_image_major_into`](Executor::run_image_major_into) — the perf
+//! baseline and equivalence witness.
+//!
 //! The executor serves behind the engine's uniform backend contract
 //! (`engine::ExecutorBackend`, DESIGN.md S19); the serving coordinator
 //! and CLI drive it as a boxed `InferenceBackend`.
@@ -79,6 +88,13 @@ impl Tensor {
         self.data[(y * self.w + x) * self.c + ch] = v;
     }
 }
+
+/// Minimum batch-weighted MAC count (`ConvPlan::macs() * nb`) for a
+/// conv layer to fan its output rows across threads inside a
+/// batch-major sweep — below it the scoped-thread spawn/join overhead
+/// (tens of microseconds per layer) outweighs the parallel win, so
+/// light layers run single-threaded within the sweep.
+const ROW_PAR_MIN_MACS: u64 = 200_000;
 
 /// The reference executor: a compiled network plan plus batch drivers.
 /// Holds its plan behind an `Arc` — the `Network` it was compiled from
@@ -157,15 +173,27 @@ impl Executor {
         out
     }
 
-    /// The batch engine: split the batch into one contiguous chunk per
-    /// thread (scoped threads; batch 1 never spawns), give each chunk a
-    /// persistent [`Scratch`] arena from `pool`, and run every image
-    /// through the kernels' `_into` variants. `out` is reused in place
-    /// (inner `Vec`s keep their capacity), so a caller that holds its
-    /// pool across batches — the serving backend — performs **zero heap
-    /// allocation per image in steady state** on the single-thread path,
-    /// and only the thread-spawn bookkeeping otherwise
-    /// (`rust/tests/zero_alloc.rs`).
+    /// The batch engine (DESIGN.md S22): run the batch **batch-major**
+    /// — images interleaved `[pixel][n][c]` so every looked-up product
+    /// column is amortized across the batch — choosing the parallelism
+    /// shape from the batch width:
+    ///
+    ///  * one thread: a single batch-major sweep over one arena;
+    ///  * a thin batch (`n < 2 * threads`, where chunking would hand
+    ///    workers fewer than two images and kill the amortization): one
+    ///    sweep whose heavy convs fan their output rows across the
+    ///    worker threads instead;
+    ///  * otherwise: one contiguous chunk per thread, each a batch-major
+    ///    sweep over its own arena, chunk widths aligned to the plan's
+    ///    widest batch tile when that costs no worker — so no chunk
+    ///    splits a layer's SIMD batch tile below its width. The ragged
+    ///    tail still runs batch-major at its own width.
+    ///
+    /// `out` is reused in place (inner `Vec`s keep their capacity), so a
+    /// caller that holds its pool across batches — the serving backend —
+    /// performs **zero heap allocation per image in steady state** on
+    /// the single-thread path, and only the thread-spawn bookkeeping
+    /// otherwise (`rust/tests/zero_alloc.rs`).
     pub fn run_batch_into(
         &self,
         images: &[Tensor],
@@ -192,7 +220,15 @@ impl Executor {
             self.run_chunk(images, &mut pool.slots[0], out);
             return;
         }
+        if n < 2 * threads {
+            self.run_sweep(images, &mut pool.slots[0], out, threads);
+            return;
+        }
         let per = n.div_ceil(threads);
+        let tile = self.plan.batch_tile();
+        let aligned = per.div_ceil(tile) * tile;
+        // align only when it keeps every worker busy (same chunk count)
+        let per = if n.div_ceil(aligned) == n.div_ceil(per) { aligned } else { per };
         std::thread::scope(|s| {
             let mut slots = pool.slots.as_mut_slice();
             let mut outs = out.as_mut_slice();
@@ -207,16 +243,158 @@ impl Executor {
         });
     }
 
-    /// One thread's contiguous chunk of the batch, image-major over one
-    /// arena: per image the kernels ping-pong between the arena's two
-    /// activation buffers, so the chunk's working set is two buffers
-    /// plus the shared read-only plan — no per-image or per-layer
-    /// allocation. (Bit-exactness vs the sequential path holds by
-    /// construction: it is the same `run_image` body.)
+    /// Image-major witness path — the pre-S22 batch driver: chunk the
+    /// batch across threads and run every image alone through the
+    /// per-image kernels over its worker's arena. Kept public as the
+    /// baseline `benches/bench_kernels.rs` charts the batch-major
+    /// speedup against and as an equivalence witness
+    /// (`tests/kernels_batch.rs`); production callers use
+    /// [`run_batch_into`](Self::run_batch_into).
+    pub fn run_image_major_into(
+        &self,
+        images: &[Tensor],
+        max_threads: usize,
+        pool: &mut ScratchPool,
+        out: &mut Vec<Vec<f32>>,
+    ) {
+        let n = images.len();
+        out.truncate(n);
+        while out.len() < n {
+            out.push(Vec::new());
+        }
+        if n == 0 {
+            return;
+        }
+        let nc = self.plan.dense_cout().expect("network has no dense head");
+        for o in out.iter_mut() {
+            o.clear();
+            o.resize(nc, 0.0);
+        }
+        let threads = max_threads.max(1).min(n);
+        pool.ensure(threads, &self.plan);
+        if threads == 1 {
+            self.run_images(images, &mut pool.slots[0], out);
+            return;
+        }
+        let per = n.div_ceil(threads);
+        std::thread::scope(|s| {
+            let mut slots = pool.slots.as_mut_slice();
+            let mut outs = out.as_mut_slice();
+            for chunk in images.chunks(per) {
+                let (o, outs_rest) = outs.split_at_mut(chunk.len());
+                outs = outs_rest;
+                let (slot, slots_rest) = slots.split_at_mut(1);
+                slots = slots_rest;
+                let scratch = &mut slot[0];
+                s.spawn(move || self.run_images(chunk, scratch, o));
+            }
+        });
+    }
+
+    /// One thread's contiguous chunk of the batch: two or more images
+    /// run as one batch-major sweep over the worker's arena
+    /// ([`run_sweep`](Self::run_sweep)); a single image runs the
+    /// image-major body (nothing to amortize across a batch of one).
     fn run_chunk(&self, images: &[Tensor], scratch: &mut Scratch, out: &mut [Vec<f32>]) {
+        if images.len() >= 2 {
+            self.run_sweep(images, scratch, out, 1);
+        } else {
+            self.run_images(images, scratch, out);
+        }
+    }
+
+    /// Image-major chunk body: per image the kernels ping-pong between
+    /// the arena's two activation buffers — no per-image or per-layer
+    /// allocation. (The same `run_image` body every sequential entry
+    /// point drives, so bit-exactness holds by construction.)
+    fn run_images(&self, images: &[Tensor], scratch: &mut Scratch, out: &mut [Vec<f32>]) {
         for (img, o) in images.iter().zip(out.iter_mut()) {
             self.run_image(img, scratch, None, o);
         }
+    }
+
+    /// Batch-major layer sweep (DESIGN.md S22): interleave the images
+    /// into the arena as `[pixel][n][c]`, then walk the plan ONCE with
+    /// the batch kernels — each looked-up product column amortized
+    /// across the whole batch — fanning a conv's output rows across
+    /// `row_threads` scoped threads when the layer is heavy enough
+    /// ([`ROW_PAR_MIN_MACS`]) to pay the spawn cost. Per image the
+    /// accumulation order matches [`run_image`](Self::run_image)
+    /// exactly, so the sweep is bit-exact with the image-major path.
+    fn run_sweep(
+        &self,
+        images: &[Tensor],
+        s: &mut Scratch,
+        out: &mut [Vec<f32>],
+        row_threads: usize,
+    ) {
+        let io = self.plan.io;
+        let nb = images.len();
+        for image in images {
+            assert_eq!(
+                (image.h, image.w, image.c),
+                (io.image_size, io.image_size, io.in_ch),
+                "input image shape disagrees with the compiled plan"
+            );
+        }
+        s.ensure_batch(&self.plan, nb);
+        let mut c = io.in_ch;
+        let mut len = io.image_size * io.image_size * c; // per-image elems
+        for (n, image) in images.iter().enumerate() {
+            kernels::interleave_image(&image.data, n, nb, c, &mut s.ping[..nb * len]);
+        }
+        let mut res_depth = 0usize;
+        let mut pooled_ch = 0usize;
+        let mut wrote_logits = false;
+        for op in self.plan.ops.iter() {
+            match op {
+                PlanOp::Input => {}
+                PlanOp::Conv(cp) => {
+                    let g = cp.geom;
+                    let out_len = g.out_pixels() * g.cout;
+                    let rt = if cp.macs().saturating_mul(nb as u64) >= ROW_PAR_MIN_MACS {
+                        row_threads
+                    } else {
+                        1
+                    };
+                    kernels::conv_batch_into(
+                        cp,
+                        &s.ping[..nb * len],
+                        nb,
+                        &mut s.pong[..nb * out_len],
+                        rt,
+                    );
+                    std::mem::swap(&mut s.ping, &mut s.pong);
+                    c = g.cout;
+                    len = out_len;
+                }
+                PlanOp::ResPush { .. } => {
+                    let slot = &mut s.res[res_depth];
+                    slot.clear();
+                    slot.extend_from_slice(&s.ping[..nb * len]);
+                    res_depth += 1;
+                }
+                PlanOp::ResAdd { bits } => {
+                    res_depth = res_depth.checked_sub(1).expect("res_add without res_push");
+                    kernels::res_add_into(&mut s.ping[..nb * len], &s.res[res_depth], *bits);
+                }
+                PlanOp::PoolSum { .. } => {
+                    kernels::pool_sum_batch_into(&s.ping[..nb * len], nb, &mut s.pooled[..nb * c]);
+                    pooled_ch = c;
+                }
+                PlanOp::Dense(dp) => {
+                    kernels::dense_batch_into(
+                        dp,
+                        &s.pooled[..nb * pooled_ch],
+                        nb,
+                        &mut s.acc64[..nb * dp.cout],
+                        out,
+                    );
+                    wrote_logits = true;
+                }
+            }
+        }
+        assert!(wrote_logits, "network has no dense head");
     }
 
     /// Run one image, invoking `trace(op_index, tensor)` after every op
@@ -517,6 +695,37 @@ mod tests {
         pool.dirty(-1);
         ex.run_batch_into(&images, 2, &mut pool, &mut out);
         assert_eq!(out, want, "dirty pool, two threads");
+    }
+
+    #[test]
+    fn image_major_witness_matches_batch_major_across_policies() {
+        // both drivers, every dispatch arm (single-thread sweep, thin
+        // batch, chunking with ragged tail), bit-exact vs execute
+        let net = net_with_conv(ConvKind::Std, 3, 4, 3, 1);
+        for dp in [Datapath::Arithmetic, Datapath::LutFabric] {
+            let ex = Executor::new(&net, dp);
+            let images: Vec<Tensor> = (0..13)
+                .map(|s| {
+                    let mut img = Tensor::zeros(4, 4, 3);
+                    for (i, v) in img.data.iter_mut().enumerate() {
+                        *v = ((i * 3 + s * 5) % 16) as i32;
+                    }
+                    img
+                })
+                .collect();
+            let want: Vec<Vec<f32>> = images.iter().map(|t| ex.execute(t)).collect();
+            for n in [1usize, 2, 5, 13] {
+                for threads in [1usize, 2, 3, 8] {
+                    let mut pool = ScratchPool::new();
+                    let mut got = Vec::new();
+                    ex.run_batch_into(&images[..n], threads, &mut pool, &mut got);
+                    assert_eq!(&got[..], &want[..n], "batch-major n={n} t={threads} {dp:?}");
+                    let mut got = Vec::new();
+                    ex.run_image_major_into(&images[..n], threads, &mut pool, &mut got);
+                    assert_eq!(&got[..], &want[..n], "image-major n={n} t={threads} {dp:?}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -28,6 +28,14 @@
 //! addition is exact whatever the interleaving — so all paths stay
 //! bit-for-bit interchangeable (and match
 //! `python/compile/model.py::im2col`).
+//!
+//! On top of the per-image bodies sit the **batch-major kernels**
+//! (DESIGN.md S22, [`conv_batch_into`] / [`dense_batch_into`] /
+//! [`pool_sum_batch_into`]): activations interleaved `[pixel][n][c]`,
+//! each looked-up product column amortized across a whole batch tile,
+//! fixed-`LANES` SIMD accumulate blocks, and optional output-row
+//! fan-out across threads. Per image they preserve the exact same
+//! accumulation order, so they are bit-exact with everything above.
 
 use crate::quant::saturating_res_add;
 
@@ -430,6 +438,466 @@ pub fn dense_into(plan: &DensePlan, pooled: &[i32], acc: &mut [i64], out: &mut [
     }
 }
 
+// ---------------------------------------------------------------------
+// Batch-major kernels (DESIGN.md S22): activations live interleaved as
+// `[pixel][n][c]` so the per-pixel `[nb][cout]` output slab is one
+// contiguous accumulator and every looked-up product column is
+// accumulated into all images of a batch tile while the (tap, ci)
+// table slab stays cache-resident — the lookup-reuse lever the
+// image-major sweep leaves on the table. Per image the accumulation
+// order is IDENTICAL to the image-major bodies ((tap, ci)-ascending
+// per output channel), so batch-major output is bit-exact with
+// `conv_into` on every datapath.
+// ---------------------------------------------------------------------
+
+/// SIMD block width of the batch-major inner loops: 8 i32 lanes = one
+/// AVX2 register (two NEON registers). The axpy bodies run
+/// `chunks_exact` blocks of this width so the compiler emits straight
+/// vector adds without having to prove anything about slice lengths —
+/// the software analogue of the FINN `mvu_lut` PE×SIMD tiling.
+pub const LANES: usize = 8;
+
+/// `acc[i] += col[i]` in fixed-width lane blocks (the batch-major
+/// LUT-GEMM accumulate: `col` is one looked-up product column).
+#[inline]
+fn axpy(acc: &mut [i32], col: &[i32]) {
+    let mut blocks = acc.chunks_exact_mut(LANES);
+    let mut cols = col.chunks_exact(LANES);
+    for (av, cv) in blocks.by_ref().zip(cols.by_ref()) {
+        for l in 0..LANES {
+            av[l] += cv[l];
+        }
+    }
+    for (slot, &p) in blocks.into_remainder().iter_mut().zip(cols.remainder()) {
+        *slot += p;
+    }
+}
+
+/// `acc[i] += col[i] * a` in fixed-width lane blocks (the batch-major
+/// arithmetic accumulate: `col` is one `wflat_t` weight column).
+#[inline]
+fn axpy_scaled(acc: &mut [i32], col: &[i32], a: i32) {
+    let mut blocks = acc.chunks_exact_mut(LANES);
+    let mut cols = col.chunks_exact(LANES);
+    for (av, cv) in blocks.by_ref().zip(cols.by_ref()) {
+        for l in 0..LANES {
+            av[l] += cv[l] * a;
+        }
+    }
+    for (slot, &p) in blocks.into_remainder().iter_mut().zip(cols.remainder()) {
+        *slot += p * a;
+    }
+}
+
+/// Pack image `n` of `nb` (flat HWC, `[pixels * c]`) into the
+/// batch-major interleaved layout `[pixel][nb][c]`.
+pub fn interleave_image(img: &[i32], n: usize, nb: usize, c: usize, out: &mut [i32]) {
+    assert_eq!(img.len() * nb, out.len(), "interleave: image/batch footprint mismatch");
+    for (px, chunk) in img.chunks_exact(c).enumerate() {
+        out[(px * nb + n) * c..][..c].copy_from_slice(chunk);
+    }
+}
+
+/// Extract image `n` of `nb` from the interleaved `[pixel][nb][c]`
+/// layout back into flat HWC (the inverse of [`interleave_image`];
+/// tests and the sharded link path deinterleave with it).
+pub fn deinterleave_image(x: &[i32], n: usize, nb: usize, c: usize, out: &mut [i32]) {
+    assert_eq!(out.len() * nb, x.len(), "deinterleave: image/batch footprint mismatch");
+    for (px, chunk) in out.chunks_exact_mut(c).enumerate() {
+        chunk.copy_from_slice(&x[(px * nb + n) * c..][..c]);
+    }
+}
+
+/// Run one compiled conv layer over `nb` interleaved images
+/// (`[pixel][nb][cin]` in, `[pixel][nb][cout]` out), optionally fanning
+/// output rows across `row_threads` scoped threads — the within-layer
+/// parallelism for large early convs where batch width alone can't
+/// fill cores. Output rows are contiguous in the interleaved layout,
+/// so the fan-out is a plain `chunks_mut` split with no aliasing.
+pub fn conv_batch_into(plan: &ConvPlan, x: &[i32], nb: usize, out: &mut [i32], row_threads: usize) {
+    let g = plan.geom;
+    assert!(nb >= 1, "{}: empty batch", plan.name);
+    assert_eq!(
+        x.len(),
+        g.in_pixels() * g.cin * nb,
+        "{}: batch input len disagrees with the compiled plan",
+        plan.name
+    );
+    assert_eq!(
+        out.len(),
+        g.out_pixels() * g.cout * nb,
+        "{}: batch output len disagrees with the compiled plan",
+        plan.name
+    );
+    let ho = g.out_h();
+    let threads = row_threads.max(1).min(ho);
+    if threads <= 1 {
+        return conv_batch_rows(plan, x, nb, out, 0, ho);
+    }
+    let rows_per = ho.div_ceil(threads);
+    let row_elems = g.out_w() * nb * g.cout;
+    std::thread::scope(|s| {
+        for (idx, chunk) in out.chunks_mut(rows_per * row_elems).enumerate() {
+            let oy0 = idx * rows_per;
+            let oy1 = (oy0 + rows_per).min(ho);
+            s.spawn(move || conv_batch_rows(plan, x, nb, chunk, oy0, oy1));
+        }
+    });
+}
+
+/// Output rows `[oy0, oy1)` of one batch-major conv; `out` holds
+/// exactly those rows (`[(oy - oy0) * wo + ox][nb][cout]`).
+fn conv_batch_rows(plan: &ConvPlan, x: &[i32], nb: usize, out: &mut [i32], oy0: usize, oy1: usize) {
+    match &plan.mults {
+        Multipliers::LutTables { products, acts, .. } => {
+            conv_batch_cols(plan, x, nb, out, products, *acts, oy0, oy1)
+        }
+        Multipliers::Weights => conv_batch_weights(plan, x, nb, out, oy0, oy1),
+        Multipliers::LutDirect { mults } => {
+            let pairs = plan.cols.div_ceil(2);
+            conv_batch_scalar(plan, x, nb, out, oy0, oy1, move |row, col, a| {
+                mults[row * pairs + col / 2].eval(col % 2 == 1, a as u32)
+            })
+        }
+        Multipliers::LutTablesMacMajor { products, acts, .. } => {
+            let acts = *acts;
+            conv_batch_scalar(plan, x, nb, out, oy0, oy1, move |row, col, a| {
+                products[(row * plan.cols + col) * acts + a as usize]
+            })
+        }
+    }
+}
+
+/// Batch-major LUT-GEMM conv body (`Multipliers::LutTables`): per
+/// output pixel the interleaved `[nb][cout]` slab doubles as the
+/// accumulator. The batch is walked in `plan.batch_tile`-wide tiles;
+/// within a tile each (tap, ci) table slab (`acts * cout` products,
+/// a few KiB) is gathered once and its activation-selected columns
+/// are axpy'd into every image's slot — one gather, N accumulates —
+/// before the sweep moves to the next weight column.
+#[allow(clippy::too_many_arguments)]
+fn conv_batch_cols(
+    plan: &ConvPlan,
+    x: &[i32],
+    nb: usize,
+    out: &mut [i32],
+    products: &[i32],
+    acts: usize,
+    oy0: usize,
+    oy1: usize,
+) {
+    let g = plan.geom;
+    let wo = g.out_w();
+    let (cin, cout) = (g.cin, g.cout);
+    let dw = plan.kind == ConvKind::Dw;
+    let tile = plan.batch_tile.min(nb);
+    let slot = nb * cout;
+    for oy in oy0..oy1 {
+        let y_interior = oy >= plan.oy_interior.0 && oy < plan.oy_interior.1;
+        for ox in 0..wo {
+            let o = &mut out[((oy - oy0) * wo + ox) * slot..][..slot];
+            o.fill(0);
+            let interior = y_interior && ox >= plan.ox_interior.0 && ox < plan.ox_interior.1;
+            let base_px = if interior {
+                (oy * g.stride - g.pad) * g.in_w + (ox * g.stride - g.pad)
+            } else {
+                0
+            };
+            let mut n0 = 0usize;
+            while n0 < nb {
+                let n1 = (n0 + tile).min(nb);
+                if interior {
+                    for (tap, &off) in plan.tap_offsets.iter().enumerate() {
+                        let px = (base_px + off / cin) * nb * cin;
+                        if dw {
+                            let tbl = &products[tap * acts * cout..][..acts * cout];
+                            for n in n0..n1 {
+                                let xs = &x[px + n * cin..][..cin];
+                                let on = &mut o[n * cout..][..cout];
+                                for (c, s) in on.iter_mut().enumerate() {
+                                    *s += tbl[xs[c] as usize * cout + c];
+                                }
+                            }
+                        } else {
+                            for ci in 0..cin {
+                                let col = tap * cin + ci;
+                                let tbl = &products[col * acts * cout..][..acts * cout];
+                                for n in n0..n1 {
+                                    let a = x[px + n * cin + ci] as usize;
+                                    axpy(&mut o[n * cout..][..cout], &tbl[a * cout..][..cout]);
+                                }
+                            }
+                        }
+                    }
+                } else {
+                    for i in 0..g.k {
+                        for j in 0..g.k {
+                            let y = (oy * g.stride + i) as isize - g.pad as isize;
+                            let xx = (ox * g.stride + j) as isize - g.pad as isize;
+                            if y < 0 || xx < 0 || y >= g.in_h as isize || xx >= g.in_w as isize {
+                                continue; // zero activation: zero column
+                            }
+                            let px = (y as usize * g.in_w + xx as usize) * nb * cin;
+                            let tap = i * g.k + j;
+                            if dw {
+                                let tbl = &products[tap * acts * cout..][..acts * cout];
+                                for n in n0..n1 {
+                                    let xs = &x[px + n * cin..][..cin];
+                                    let on = &mut o[n * cout..][..cout];
+                                    for (c, s) in on.iter_mut().enumerate() {
+                                        *s += tbl[xs[c] as usize * cout + c];
+                                    }
+                                }
+                            } else {
+                                for ci in 0..cin {
+                                    let col = tap * cin + ci;
+                                    let tbl = &products[col * acts * cout..][..acts * cout];
+                                    for n in n0..n1 {
+                                        let a = x[px + n * cin + ci] as usize;
+                                        axpy(&mut o[n * cout..][..cout], &tbl[a * cout..][..cout]);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                n0 = n1;
+            }
+            for n in 0..nb {
+                let on = &mut o[n * cout..][..cout];
+                for (co, s) in on.iter_mut().enumerate() {
+                    *s = plan.threshold(*s, co);
+                }
+            }
+        }
+    }
+}
+
+/// Batch-major arithmetic conv body (`Multipliers::Weights`): same
+/// loop nest as [`conv_batch_cols`] with the product-column lookup
+/// replaced by a scaled axpy over the `wflat_t` weight column. Zero
+/// activations skip the column outright (adding zeros is an exact i32
+/// identity, so bit-exactness with the image-major body holds).
+fn conv_batch_weights(
+    plan: &ConvPlan,
+    x: &[i32],
+    nb: usize,
+    out: &mut [i32],
+    oy0: usize,
+    oy1: usize,
+) {
+    let g = plan.geom;
+    let wo = g.out_w();
+    let (cin, cout) = (g.cin, g.cout);
+    let dw = plan.kind == ConvKind::Dw;
+    let tile = plan.batch_tile.min(nb);
+    let slot = nb * cout;
+    for oy in oy0..oy1 {
+        let y_interior = oy >= plan.oy_interior.0 && oy < plan.oy_interior.1;
+        for ox in 0..wo {
+            let o = &mut out[((oy - oy0) * wo + ox) * slot..][..slot];
+            o.fill(0);
+            let interior = y_interior && ox >= plan.ox_interior.0 && ox < plan.ox_interior.1;
+            let base_px = if interior {
+                (oy * g.stride - g.pad) * g.in_w + (ox * g.stride - g.pad)
+            } else {
+                0
+            };
+            let mut n0 = 0usize;
+            while n0 < nb {
+                let n1 = (n0 + tile).min(nb);
+                if interior {
+                    for (tap, &off) in plan.tap_offsets.iter().enumerate() {
+                        let px = (base_px + off / cin) * nb * cin;
+                        if dw {
+                            // depthwise weight column for this tap, one
+                            // weight per channel: elementwise mul-add
+                            let wcol = &plan.wflat_t[tap * cout..][..cout];
+                            for n in n0..n1 {
+                                let xs = &x[px + n * cin..][..cin];
+                                let on = &mut o[n * cout..][..cout];
+                                for ((s, &w), &a) in on.iter_mut().zip(wcol).zip(xs) {
+                                    *s += w * a;
+                                }
+                            }
+                        } else {
+                            for ci in 0..cin {
+                                let wcol = &plan.wflat_t[(tap * cin + ci) * cout..][..cout];
+                                for n in n0..n1 {
+                                    let a = x[px + n * cin + ci];
+                                    if a != 0 {
+                                        axpy_scaled(&mut o[n * cout..][..cout], wcol, a);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                } else {
+                    for i in 0..g.k {
+                        for j in 0..g.k {
+                            let y = (oy * g.stride + i) as isize - g.pad as isize;
+                            let xx = (ox * g.stride + j) as isize - g.pad as isize;
+                            if y < 0 || xx < 0 || y >= g.in_h as isize || xx >= g.in_w as isize {
+                                continue; // zero activation: zero column
+                            }
+                            let px = (y as usize * g.in_w + xx as usize) * nb * cin;
+                            let tap = i * g.k + j;
+                            if dw {
+                                let wcol = &plan.wflat_t[tap * cout..][..cout];
+                                for n in n0..n1 {
+                                    let xs = &x[px + n * cin..][..cin];
+                                    let on = &mut o[n * cout..][..cout];
+                                    for ((s, &w), &a) in on.iter_mut().zip(wcol).zip(xs) {
+                                        *s += w * a;
+                                    }
+                                }
+                            } else {
+                                for ci in 0..cin {
+                                    let wcol = &plan.wflat_t[(tap * cin + ci) * cout..][..cout];
+                                    for n in n0..n1 {
+                                        let a = x[px + n * cin + ci];
+                                        if a != 0 {
+                                            axpy_scaled(&mut o[n * cout..][..cout], wcol, a);
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                n0 = n1;
+            }
+            for n in 0..nb {
+                let on = &mut o[n * cout..][..cout];
+                for (co, s) in on.iter_mut().enumerate() {
+                    *s = plan.threshold(*s, co);
+                }
+            }
+        }
+    }
+}
+
+/// Scalar batch-major conv body, monomorphized per multiplier readout —
+/// the `LutDirect` and `LutTablesMacMajor` witnesses run through it, so
+/// the batch layout itself is cross-checked against the hardware-true
+/// per-MAC readout, not just against the memoized tables.
+#[allow(clippy::too_many_arguments)]
+fn conv_batch_scalar(
+    plan: &ConvPlan,
+    x: &[i32],
+    nb: usize,
+    out: &mut [i32],
+    oy0: usize,
+    oy1: usize,
+    mul: impl Fn(usize, usize, i32) -> i32,
+) {
+    let g = plan.geom;
+    let wo = g.out_w();
+    let (cin, cout) = (g.cin, g.cout);
+    let dw = plan.kind == ConvKind::Dw;
+    let slot = nb * cout;
+    // zero-padded read from the interleaved layout
+    let atb = |y: isize, xx: isize, n: usize, ch: usize| -> i32 {
+        if y < 0 || xx < 0 || y >= g.in_h as isize || xx >= g.in_w as isize {
+            0
+        } else {
+            x[((y as usize * g.in_w + xx as usize) * nb + n) * cin + ch]
+        }
+    };
+    for oy in oy0..oy1 {
+        for ox in 0..wo {
+            let o = &mut out[((oy - oy0) * wo + ox) * slot..][..slot];
+            for n in 0..nb {
+                let on = &mut o[n * cout..][..cout];
+                if dw {
+                    for (c, s) in on.iter_mut().enumerate() {
+                        let mut acc = 0i32;
+                        for i in 0..g.k {
+                            for j in 0..g.k {
+                                let y = (oy * g.stride + i) as isize - g.pad as isize;
+                                let xx = (ox * g.stride + j) as isize - g.pad as isize;
+                                acc += mul(c, i * g.k + j, atb(y, xx, n, c));
+                            }
+                        }
+                        *s = plan.threshold(acc, c);
+                    }
+                } else {
+                    for (co, s) in on.iter_mut().enumerate() {
+                        let mut acc = 0i32;
+                        for i in 0..g.k {
+                            for j in 0..g.k {
+                                let y = (oy * g.stride + i) as isize - g.pad as isize;
+                                let xx = (ox * g.stride + j) as isize - g.pad as isize;
+                                for ci in 0..cin {
+                                    acc += mul(co, (i * g.k + j) * cin + ci, atb(y, xx, n, ci));
+                                }
+                            }
+                        }
+                        *s = plan.threshold(acc, co);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Global sum-pool over the interleaved batch layout: `[pixel][nb][c]`
+/// in, `[nb][c]` out. Every pixel slab has exactly the output's shape,
+/// so the pool is a straight slab-wise add — per (image, channel) the
+/// pixels accumulate in ascending order, identical to the image-major
+/// [`pool_sum_into`].
+pub fn pool_sum_batch_into(x: &[i32], nb: usize, out: &mut [i32]) {
+    assert!(nb >= 1 && out.len() % nb == 0, "pooled buffer is [nb][c]");
+    assert_eq!(x.len() % out.len(), 0, "pool input is whole pixel slabs");
+    out.fill(0);
+    for px in x.chunks_exact(out.len()) {
+        for (a, &v) in out.iter_mut().zip(px) {
+            *a += v;
+        }
+    }
+}
+
+/// Batch-major dense head: `pooled` is `[nb][cin]`, `acc` the
+/// `[nb][cout]` i64 accumulator, `out` one logits vector per image.
+/// Blocked over input channels like [`dense_into`] — per image every
+/// logit still sums its channels in ascending-`ci` order, and the
+/// epilogue is the identical `mul_add`, so logits are bit-exact with
+/// the image-major head.
+pub fn dense_batch_into(
+    plan: &DensePlan,
+    pooled: &[i32],
+    nb: usize,
+    acc: &mut [i64],
+    out: &mut [Vec<f32>],
+) {
+    assert_eq!(
+        pooled.len(),
+        nb * plan.cin,
+        "{}: batch pooled width disagrees with the dense plan",
+        plan.name
+    );
+    assert_eq!(acc.len(), nb * plan.cout, "{}: batch dense accumulator len", plan.name);
+    assert_eq!(out.len(), nb, "{}: one logits slot per image", plan.name);
+    acc.fill(0);
+    for ci in 0..plan.cin {
+        let row = &plan.wflat[ci * plan.cout..(ci + 1) * plan.cout];
+        for n in 0..nb {
+            let a = pooled[n * plan.cin + ci] as i64;
+            let an = &mut acc[n * plan.cout..][..plan.cout];
+            for (s, &w) in an.iter_mut().zip(row) {
+                *s += a * w as i64;
+            }
+        }
+    }
+    for (n, o) in out.iter_mut().enumerate() {
+        assert_eq!(o.len(), plan.cout, "{}: logits len for image {n}", plan.name);
+        let an = &acc[n * plan.cout..][..plan.cout];
+        for (co, (slot, &s)) in o.iter_mut().zip(an.iter()).enumerate() {
+            *slot = (s as f32).mul_add(plan.scale[co], plan.bias[co]);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -651,6 +1119,98 @@ mod tests {
         let mut pooled = vec![-5i32; 3];
         pool_sum_into(&x.data, &mut pooled);
         assert_eq!(pooled, vec![22, 26, 30]);
+    }
+
+    #[test]
+    fn batch_kernels_match_image_major_all_kinds_and_datapaths() {
+        // the batch-major S22 contract at kernel level: for every conv
+        // kind, datapath and multiplier layout, interleave -> batch conv
+        // -> deinterleave equals the per-image conv bit for bit, across
+        // ragged batch sizes, forced sub-nb tiles, and row fan-out
+        let mut rng = Rng::new(4242);
+        for (kind, hw, cin, cout, k, stride) in [
+            (ConvKind::Pw, 6, 3, 5, 1, 1),
+            (ConvKind::Std, 7, 2, 4, 3, 1), // odd width: border split
+            (ConvKind::Std, 8, 3, 3, 3, 2),
+            (ConvKind::Dw, 7, 4, 4, 3, 2),
+        ] {
+            let net = conv_net(&mut rng, kind, hw, cin, cout, k, stride);
+            for dp in [Datapath::Arithmetic, Datapath::LutFabric] {
+                for (label, plan) in [
+                    ("act-major", NetworkPlan::compile(&net, dp)),
+                    ("direct", NetworkPlan::compile_direct(&net, dp)),
+                    ("mac-major", NetworkPlan::compile_mac_major(&net, dp)),
+                ] {
+                    let mut cp = first_conv_of(&plan);
+                    // force tiles narrower than the batch so the tile
+                    // loop and its ragged tail are exercised
+                    cp.batch_tile = 2;
+                    let g = cp.geom;
+                    for nb in [1usize, 3, 5, 8] {
+                        let imgs: Vec<Tensor> = (0..nb)
+                            .map(|_| {
+                                Tensor::from_hwc(hw, hw, cin, rng.vec_i32(hw * hw * cin, 0, 15))
+                            })
+                            .collect();
+                        let mut x = vec![0i32; hw * hw * cin * nb];
+                        for (n, img) in imgs.iter().enumerate() {
+                            interleave_image(&img.data, n, nb, cin, &mut x);
+                        }
+                        for row_threads in [1usize, 3] {
+                            let mut out = vec![-7i32; g.out_pixels() * g.cout * nb];
+                            conv_batch_into(&cp, &x, nb, &mut out, row_threads);
+                            for (n, img) in imgs.iter().enumerate() {
+                                let want = conv(&cp, img);
+                                let mut got = vec![0i32; g.out_pixels() * g.cout];
+                                deinterleave_image(&out, n, nb, g.cout, &mut got);
+                                assert_eq!(
+                                    got, want.data,
+                                    "{kind:?} {dp:?} {label} nb={nb} n={n} rt={row_threads}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_pool_and_dense_match_image_major() {
+        let mut rng = Rng::new(77);
+        let (h, w, c, nb) = (3usize, 3usize, 5usize, 4usize);
+        let imgs: Vec<Tensor> = (0..nb)
+            .map(|_| Tensor::from_hwc(h, w, c, rng.vec_i32(h * w * c, 0, 15)))
+            .collect();
+        let mut x = vec![0i32; h * w * c * nb];
+        for (n, img) in imgs.iter().enumerate() {
+            interleave_image(&img.data, n, nb, c, &mut x);
+        }
+        // interleave/deinterleave round-trip
+        for (n, img) in imgs.iter().enumerate() {
+            let mut back = vec![0i32; h * w * c];
+            deinterleave_image(&x, n, nb, c, &mut back);
+            assert_eq!(back, img.data, "round-trip image {n}");
+        }
+        let mut pooled = vec![-3i32; nb * c]; // dirty
+        pool_sum_batch_into(&x, nb, &mut pooled);
+        for (n, img) in imgs.iter().enumerate() {
+            assert_eq!(&pooled[n * c..][..c], pool_sum(img).as_slice(), "pool image {n}");
+        }
+        let plan = DensePlan {
+            name: "fc".into(),
+            cin: c,
+            cout: 3,
+            wflat: rng.vec_i32(c * 3, -128, 127),
+            scale: (0..3).map(|i| 0.01 + i as f32 * 0.004).collect(),
+            bias: (0..3).map(|i| i as f32 * 0.5 - 0.2).collect(),
+        };
+        let mut acc = vec![11i64; nb * 3]; // dirty
+        let mut out = vec![vec![9.9f32; 3]; nb];
+        dense_batch_into(&plan, &pooled, nb, &mut acc, &mut out);
+        for (n, o) in out.iter().enumerate() {
+            assert_eq!(o, &dense(&plan, &pooled[n * c..][..c]), "dense image {n}");
+        }
     }
 
     #[test]

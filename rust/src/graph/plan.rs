@@ -163,6 +163,13 @@ pub struct ConvPlan {
     /// Row-major `[rows][cols]` flattened weight codes
     /// (`[COUT][K*K*CIN]` for std/pw, `[C][K*K]` for depthwise).
     pub wflat: Vec<i32>,
+    /// `wflat` transposed, column-major `[cols][rows]`
+    /// (`wflat_t[col * cout + row]`): the batch-major arithmetic conv
+    /// body (DESIGN.md S22) reads one contiguous `cout`-wide weight
+    /// column per (tap, ci) and scales it into every image's
+    /// accumulator — the same access shape the activation-major LUT
+    /// tables give the LUT datapath.
+    pub wflat_t: Vec<i32>,
     pub cols: usize,
     pub mults: Multipliers,
     /// Row-major `[cout][levels]` flattened thresholds.
@@ -179,6 +186,27 @@ pub struct ConvPlan {
     /// with zero padding.
     pub oy_interior: (usize, usize),
     pub ox_interior: (usize, usize),
+    /// Images per inner batch tile of the batch-major kernels
+    /// (DESIGN.md S22): the largest power of two (≤ 16) whose
+    /// `[tile][cout]` i32 output slab fits an 8 KiB L1 budget, so one
+    /// looked-up product column is accumulated into every image of the
+    /// tile while both stay cache-resident. Always ≥ 1; a power of two
+    /// so the widest tile across layers is a multiple of every
+    /// layer's tile (worker chunk alignment, `Executor::run_batch_into`).
+    pub batch_tile: usize,
+}
+
+/// Batch-tile width for a layer with `cout` output channels (see
+/// [`ConvPlan::batch_tile`]).
+fn batch_tile_for(cout: usize) -> usize {
+    // 8 KiB of i32 accumulator lanes shared between `tile` images.
+    let budget = 8 * 1024 / 4;
+    let raw = (budget / cout.max(1)).clamp(1, 16);
+    let mut tile = 1usize;
+    while tile * 2 <= raw {
+        tile *= 2;
+    }
+    tile
 }
 
 impl ConvPlan {
@@ -229,11 +257,20 @@ impl ConvPlan {
                  ({row:?}); the count-based quantizer would silently miscount"
             );
         }
+        // Column-major transpose of the weight matrix; the weight-row
+        // count is geom.cout for every conv kind (C for depthwise).
+        let mut wflat_t = vec![0i32; geom.cout * cols];
+        for (row, codes) in w_codes.iter().enumerate() {
+            for (col, &w) in codes.iter().enumerate() {
+                wflat_t[col * geom.cout + row] = w;
+            }
+        }
         Self {
             name: name.clone(),
             kind: *kind,
             geom,
             wflat: w_codes.iter().flatten().copied().collect(),
+            wflat_t,
             cols,
             mults,
             thr_flat: thresholds.iter().flatten().copied().collect(),
@@ -243,6 +280,7 @@ impl ConvPlan {
             tap_offsets: (0..k * k).map(|t| ((t / k) * geom.in_w + (t % k)) * geom.cin).collect(),
             oy_interior: geom.interior(geom.out_h(), geom.in_h),
             ox_interior: geom.interior(geom.out_w(), geom.in_w),
+            batch_tile: batch_tile_for(geom.cout),
         }
     }
 
@@ -483,6 +521,15 @@ impl NetworkPlan {
     /// Total physical LUT6 of the compiled multiplier arrays.
     pub fn lut_count(&self) -> usize {
         self.convs().map(ConvPlan::lut_count).sum()
+    }
+
+    /// The widest per-layer batch tile among the compiled convs (1 for
+    /// a conv-free plan). Per-layer tiles are powers of two, so the
+    /// widest is a multiple of each — `Executor::run_batch_into` sizes
+    /// worker chunks in multiples of this value so no worker's sweep
+    /// splits any layer's SIMD batch tile below its width.
+    pub fn batch_tile(&self) -> usize {
+        self.convs().map(|c| c.batch_tile).max().unwrap_or(1)
     }
 
     /// Token geometry (spatial side, channels) at every op boundary:
@@ -756,20 +803,30 @@ mod tests {
         let direct = ConvPlan::lut_multipliers(&w_codes, 4, TableMode::Direct);
         let tables = ConvPlan::lut_multipliers(&w_codes, 4, TableMode::ActMajor);
         let mac = ConvPlan::lut_multipliers(&w_codes, 4, TableMode::MacMajor);
-        let plan_of = |mults: Multipliers| ConvPlan {
-            name: "t".into(),
-            kind: ConvKind::Pw,
-            geom: ConvGeom { in_h: 1, in_w: 1, cin: 7, cout: 5, k: 1, stride: 1, pad: 0 },
-            wflat: w_codes.iter().flatten().copied().collect(),
-            cols: 7,
-            mults,
-            thr_flat: vec![0; 5 * 15],
-            levels: 15,
-            signs: vec![1; 5],
-            consts: vec![0; 5],
-            tap_offsets: vec![0],
-            oy_interior: (0, 1),
-            ox_interior: (0, 1),
+        let plan_of = |mults: Multipliers| {
+            let mut wflat_t = vec![0i32; 7 * 5];
+            for (row, codes) in w_codes.iter().enumerate() {
+                for (col, &w) in codes.iter().enumerate() {
+                    wflat_t[col * 5 + row] = w;
+                }
+            }
+            ConvPlan {
+                name: "t".into(),
+                kind: ConvKind::Pw,
+                geom: ConvGeom { in_h: 1, in_w: 1, cin: 7, cout: 5, k: 1, stride: 1, pad: 0 },
+                wflat: w_codes.iter().flatten().copied().collect(),
+                wflat_t,
+                cols: 7,
+                mults,
+                thr_flat: vec![0; 5 * 15],
+                levels: 15,
+                signs: vec![1; 5],
+                consts: vec![0; 5],
+                tap_offsets: vec![0],
+                oy_interior: (0, 1),
+                ox_interior: (0, 1),
+                batch_tile: batch_tile_for(5),
+            }
         };
         let (pd, pt, pm) = (plan_of(direct), plan_of(tables), plan_of(mac));
         for row in 0..5 {
@@ -832,6 +889,7 @@ mod tests {
             kind: ConvKind::Pw,
             geom: ConvGeom { in_h: 1, in_w: 1, cin: 1, cout: 1, k: 1, stride: 1, pad: 0 },
             wflat: vec![1],
+            wflat_t: vec![1],
             cols: 1,
             mults: Multipliers::Weights,
             thr_flat: rows[0].clone(),
@@ -841,6 +899,7 @@ mod tests {
             tap_offsets: vec![0],
             oy_interior: (0, 1),
             ox_interior: (0, 1),
+            batch_tile: batch_tile_for(1),
         };
         let mut neg = plan.clone();
         neg.signs = vec![-1];
@@ -873,6 +932,38 @@ mod tests {
         // the 8-bit stem stays arithmetic even on the LUT datapath
         let stem = lut.convs().next().unwrap();
         assert!(matches!(stem.mults, Multipliers::Weights));
+    }
+
+    #[test]
+    fn batch_tiles_are_l1_bounded_powers_of_two_and_wflat_t_transposes() {
+        // tile heuristic: power of two, >= 1, <= 16, slab within 8 KiB
+        for cout in [1usize, 3, 10, 16, 24, 64, 100, 512, 4096] {
+            let t = batch_tile_for(cout);
+            assert!(t.is_power_of_two() && t <= 16, "cout={cout} tile={t}");
+            assert!(t == 1 || t * cout * 4 <= 8 * 1024, "cout={cout} tile={t} busts L1 budget");
+            // maximal: doubling the tile would bust the budget (or 16)
+            assert!(t == 16 || 2 * t * cout * 4 > 8 * 1024, "cout={cout} tile={t} not maximal");
+        }
+        let net = Network::synthetic(&mobilenet_v2_small(), 21);
+        let plan = NetworkPlan::compile(&net, Datapath::LutFabric);
+        // plan-wide tile is the max (a multiple of every layer's tile,
+        // since all are powers of two)
+        let widest = plan.batch_tile();
+        for cp in plan.convs() {
+            assert_eq!(cp.batch_tile, batch_tile_for(cp.geom.cout), "{}", cp.name);
+            assert_eq!(widest % cp.batch_tile, 0, "{}", cp.name);
+            // wflat_t is exactly the transpose of wflat
+            for row in 0..cp.geom.cout {
+                for col in 0..cp.cols {
+                    assert_eq!(
+                        cp.wflat_t[col * cp.geom.cout + row],
+                        cp.wflat[row * cp.cols + col],
+                        "{} r{row} c{col}",
+                        cp.name
+                    );
+                }
+            }
+        }
     }
 
     #[test]

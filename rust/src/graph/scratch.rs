@@ -57,6 +57,17 @@ impl Scratch {
     /// below is a plain fold over the ops, no intermediate `Vec`s), so
     /// it is safe to call on every image of the zero-allocation path.
     pub fn ensure(&mut self, plan: &NetworkPlan) {
+        self.ensure_batch(plan, 1);
+    }
+
+    /// Like [`ensure`](Self::ensure) but for a **batch-major sweep**
+    /// over `nb` interleaved images (DESIGN.md S22): every footprint is
+    /// `nb`-strided (`[pixel][nb][c]` activations, `[nb][ch]` pooled,
+    /// `[nb][cout]` dense accumulator). Same grow-only, allocation-free-
+    /// when-sized contract, so the batch-major steady state stays
+    /// zero-allocation too (`tests/zero_alloc.rs`).
+    pub fn ensure_batch(&mut self, plan: &NetworkPlan, nb: usize) {
+        let nb = nb.max(1);
         let (mut hw, mut ch) = (plan.io.image_size, plan.io.in_ch);
         let mut max_elems = hw * hw * ch;
         let mut max_ch = ch;
@@ -84,6 +95,9 @@ impl Scratch {
             max_elems = max_elems.max(hw * hw * ch);
             max_ch = max_ch.max(ch);
         }
+        let max_elems = max_elems * nb;
+        let max_ch = max_ch * nb;
+        let dense_cout = dense_cout * nb;
         if self.ping.len() < max_elems {
             self.ping.resize(max_elems, 0);
         }
@@ -181,6 +195,30 @@ mod tests {
         assert_eq!(s.pong.capacity(), q0);
         s.dirty(-7);
         assert!(s.ping.iter().all(|&v| v == -7));
+    }
+
+    #[test]
+    fn ensure_batch_strides_footprints_and_stays_grow_only() {
+        let net = Network::synthetic(&mobilenet_v2_small(), 4);
+        let plan = NetworkPlan::compile(&net, Datapath::Arithmetic);
+        let max = plan
+            .boundary_geoms()
+            .iter()
+            .map(|&(hw, ch)| hw * hw * ch)
+            .max()
+            .unwrap();
+        let mut s = Scratch::new();
+        s.ensure_batch(&plan, 6);
+        assert_eq!(s.ping.len(), 6 * max);
+        assert_eq!(s.pong.len(), 6 * max);
+        assert_eq!(s.acc64.len(), 6 * plan.dense_cout().unwrap());
+        let (p0, q0) = (s.ping.capacity(), s.pong.capacity());
+        s.ensure_batch(&plan, 6); // idempotent at the same width
+        s.ensure_batch(&plan, 2); // narrower batches never shrink
+        s.ensure(&plan);
+        assert_eq!(s.ping.capacity(), p0);
+        assert_eq!(s.pong.capacity(), q0);
+        assert_eq!(s.ping.len(), 6 * max);
     }
 
     #[test]

@@ -735,6 +735,18 @@ fn bench_backends(
             row(&mut b, datapath, Some(display))?;
             ran += 1;
         }
+
+        // batch-driver witness (DESIGN.md S22): the same act-major plan
+        // through the image-major per-image driver — the baseline row
+        // the batch-major sweep's speedup is charted against
+        // (EXPERIMENTS.md E15); the plain "lut-fabric" row above runs
+        // batch-major
+        let mut b = ExecutorBackend::image_major(
+            std::sync::Arc::new(NetworkPlan::compile(lf.net(), Datapath::LutFabric)),
+            threads,
+        );
+        row(&mut b, "lut-fabric/image-major", Some("executor/lut-image-major"))?;
+        ran += 1;
     }
 
     if json {

@@ -28,8 +28,20 @@ impl std::fmt::Display for BenchResult {
 }
 
 /// Time `f` over `iters` runs (after one warmup); prints and returns stats.
-pub fn bench<R>(name: &str, iters: usize, mut f: impl FnMut() -> R) -> BenchResult {
-    std::hint::black_box(f()); // warmup
+pub fn bench<R>(name: &str, iters: usize, f: impl FnMut() -> R) -> BenchResult {
+    bench_warm(name, 1, iters, f)
+}
+
+/// Like [`bench`] but with an explicit warmup count: `warmup` untimed
+/// runs settle caches, branch predictors and the first-touch page
+/// faults of freshly grown arenas before the `iters` timed runs. Gates
+/// compare the reported **median**, so a single preempted run can't
+/// flip a threshold — the warmup+median-of-k recipe `make kernel-smoke`
+/// relies on for stable ratios.
+pub fn bench_warm<R>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> R) -> BenchResult {
+    for _ in 0..warmup.max(1) {
+        std::hint::black_box(f());
+    }
     let mut times = Vec::with_capacity(iters);
     for _ in 0..iters.max(1) {
         let t0 = Instant::now();
@@ -59,6 +71,14 @@ mod tests {
         let r = bench("noop", 5, || 42);
         assert_eq!(r.iters, 5);
         assert!(r.min <= r.median && r.median >= Duration::ZERO);
+    }
+
+    #[test]
+    fn bench_warm_runs_warmups_then_iters() {
+        let mut calls = 0usize;
+        let r = bench_warm("warm", 3, 4, || calls += 1);
+        assert_eq!(calls, 3 + 4, "3 warmups + 4 timed runs");
+        assert_eq!(r.iters, 4);
     }
 
     #[test]

@@ -1,0 +1,103 @@
+//! Batch-major sweep properties (DESIGN.md S22, no artifacts needed):
+//! the interleaved `[pixel][n][c]` batch-major kernels must be
+//! bit-identical to the image-major act-major driver, the per-MAC
+//! LUT6_2 readout baseline (`NetworkPlan::compile_direct`) and the
+//! fresh-allocation per-image path (`Executor::execute`) — on
+//! randomized synthetic networks, across both datapaths, every batch
+//! size in 1..=17 (ragged tails against the SIMD/tile widths included)
+//! and several thread counts, through deliberately **poisoned** arenas.
+
+mod common;
+
+use lutmul::graph::executor::{Datapath, Executor, Tensor};
+use lutmul::graph::mobilenet_v2_small;
+use lutmul::graph::network::Network;
+use lutmul::graph::plan::NetworkPlan;
+use lutmul::graph::ScratchPool;
+use lutmul::util::prop::{self, Rng};
+
+fn tensors_for(rng: &mut Rng, net: &Network, n: usize) -> Vec<Tensor> {
+    let (s, c) = (net.meta.image_size, net.meta.in_ch);
+    common::random_images(rng, net, n)
+        .into_iter()
+        .map(|d| Tensor::from_hwc(s, s, c, d))
+        .collect()
+}
+
+#[test]
+fn prop_batch_major_matches_image_major_and_fresh_allocation() {
+    prop::cases(8, |rng| {
+        let spec = common::random_spec(rng);
+        let net = Network::synthetic(&spec, rng.next_u64());
+        let nb = 1 + rng.below(17) as usize; // 1..=17
+        let tensors = tensors_for(rng, &net, nb);
+        for dp in [Datapath::Arithmetic, Datapath::LutFabric] {
+            let ex = Executor::new(&net, dp);
+            // fresh-allocation per-image reference
+            let want: Vec<Vec<f32>> = tensors.iter().map(|t| ex.execute(t)).collect();
+            let mut pool = ScratchPool::new();
+            let mut out = Vec::new();
+            for threads in [1usize, 3, 8] {
+                pool.dirty(rng.range_i32(-9, 9));
+                ex.run_batch_into(&tensors, threads, &mut pool, &mut out);
+                assert_eq!(out, want, "batch-major, nb={nb}, {threads} threads ({dp:?})");
+                pool.dirty(rng.range_i32(-9, 9));
+                ex.run_image_major_into(&tensors, threads, &mut pool, &mut out);
+                assert_eq!(out, want, "image-major witness, nb={nb}, {threads} threads ({dp:?})");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_batch_major_matches_direct_and_mac_major_witnesses() {
+    // the same batch-major sweep driven over the per-MAC LUT6_2 readout
+    // and MAC-major table layouts (independent scalar witness bodies)
+    prop::cases(6, |rng| {
+        let spec = common::random_spec(rng);
+        let net = Network::synthetic(&spec, rng.next_u64());
+        let nb = 1 + rng.below(17) as usize;
+        let tensors = tensors_for(rng, &net, nb);
+        let act = Executor::new(&net, Datapath::LutFabric);
+        let want: Vec<Vec<f32>> = tensors.iter().map(|t| act.execute(t)).collect();
+        let direct = Executor::from_plan(NetworkPlan::compile_direct(&net, Datapath::LutFabric));
+        let mac = Executor::from_plan(NetworkPlan::compile_mac_major(&net, Datapath::LutFabric));
+        let mut pool = ScratchPool::new();
+        let mut out = Vec::new();
+        for (name, ex) in [("direct", &direct), ("mac-major", &mac), ("act-major", &act)] {
+            for threads in [1usize, 4] {
+                pool.dirty(-5);
+                ex.run_batch_into(&tensors, threads, &mut pool, &mut out);
+                assert_eq!(out, want, "{name} batch-major, nb={nb}, {threads} threads");
+            }
+        }
+    });
+}
+
+#[test]
+fn mobilenet_ragged_tails_stay_bit_exact_across_chunkings() {
+    // pin the run_chunk tile-alignment policy: every batch size that
+    // leaves a ragged tail against the plan's batch tile (a power of
+    // two <= 16) and against LANES must still be bit-exact, at thread
+    // counts that force uneven worker chunks
+    let net = Network::synthetic(&mobilenet_v2_small(), 0xBA7C4);
+    let ex = Executor::new(&net, Datapath::LutFabric);
+    let tile = ex.plan().batch_tile();
+    assert!(tile.is_power_of_two() && tile <= 16, "tile heuristic drifted: {tile}");
+    let mut rng = Rng::new(0x7A115);
+    let tensors = tensors_for(&mut rng, &net, 17);
+    let want: Vec<Vec<f32>> = tensors.iter().map(|t| ex.execute(t)).collect();
+    let mut pool = ScratchPool::new();
+    let mut out = Vec::new();
+    for nb in [1usize, 2, 5, 7, 8, 9, 13, 16, 17] {
+        for threads in [1usize, 3, 8] {
+            pool.dirty(-7);
+            ex.run_batch_into(&tensors[..nb], threads, &mut pool, &mut out);
+            assert_eq!(
+                &out[..],
+                &want[..nb],
+                "ragged tail nb={nb}, tile={tile}, {threads} threads"
+            );
+        }
+    }
+}

@@ -1,10 +1,12 @@
-//! Steady-state zero-allocation gate (DESIGN.md S20): after the first
-//! batch has sized the arenas, `Executor::run_batch_into` must perform
-//! **zero heap allocations** — not per image, none at all — on the
-//! single-thread path. Asserted with a counting global allocator, which
-//! is why this test lives alone in its own binary: any other test
-//! thread allocating during the measured window would pollute the
-//! count.
+//! Steady-state zero-allocation gate (DESIGN.md S20/S22): after the
+//! first batch has sized the arenas, `Executor::run_batch_into` (the
+//! batch-major sweep) and `Executor::run_image_major_into` (the
+//! image-major witness driver) must both perform **zero heap
+//! allocations** — not per image, none at all — on the single-thread
+//! path. Asserted with a counting global allocator, which is why this
+//! test lives alone in its own binary (one `#[test]` fn, run
+//! sequentially): any other test thread allocating during a measured
+//! window would pollute the count.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -80,5 +82,20 @@ fn steady_state_run_batch_makes_zero_allocations() {
              (expected zero: every buffer lives in the persistent arena)"
         );
         assert_eq!(out, want, "steady-state batch changed its results ({dp:?})");
+
+        // the image-major witness driver shares the same arena pool and
+        // must hold the same steady-state guarantee
+        ex.run_image_major_into(&images, 1, &mut pool, &mut out);
+        assert_eq!(out, want, "image-major witness diverged ({dp:?})");
+        ALLOCS.store(0, Ordering::SeqCst);
+        COUNTING.store(true, Ordering::SeqCst);
+        ex.run_image_major_into(&images, 1, &mut pool, &mut out);
+        COUNTING.store(false, Ordering::SeqCst);
+        let n = ALLOCS.load(Ordering::SeqCst);
+        assert_eq!(
+            n, 0,
+            "steady-state run_image_major_into made {n} heap allocations on {dp:?}"
+        );
+        assert_eq!(out, want, "steady-state image-major batch changed its results ({dp:?})");
     }
 }

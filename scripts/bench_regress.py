@@ -1,0 +1,82 @@
+#!/usr/bin/env python3
+"""Bench-trajectory regression gate (EXPERIMENTS.md E15).
+
+Usage: bench_regress.py BASELINE.json NEW.json [--tolerance 0.20]
+
+Compares the freshly measured ``images_per_s`` of every (backend,
+datapath) row in NEW.json against the committed baseline and exits
+nonzero when any matching row dropped by more than the tolerance
+(default 20%). Rows only present on one side are reported but never
+fail the gate — backends come and go with features and runners.
+
+Skips (exit 0) when the baseline has no measured rows yet or is marked
+as a placeholder, so the gate arms itself automatically on the first
+commit of a measured BENCH_kernels.json.
+"""
+
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def rows_by_key(doc):
+    return {(r["backend"], r["datapath"]): r for r in doc.get("rows", [])}
+
+
+def main(argv):
+    if len(argv) < 3:
+        print(__doc__.strip().splitlines()[2])
+        return 2
+    tolerance = 0.20
+    if "--tolerance" in argv:
+        tolerance = float(argv[argv.index("--tolerance") + 1])
+    base = load(argv[1])
+    new = load(argv[2])
+
+    note = str(base.get("note", "")) + str(base.get("source", ""))
+    if not base.get("rows"):
+        print(f"bench-regress: baseline {argv[1]} has no measured rows yet — skipping")
+        return 0
+    if "placeholder" in note.lower():
+        print(f"bench-regress: baseline {argv[1]} is marked placeholder — skipping")
+        return 0
+
+    base_rows = rows_by_key(base)
+    new_rows = rows_by_key(new)
+    failed = []
+    for key, b in sorted(base_rows.items()):
+        n = new_rows.get(key)
+        name = "/".join(key)
+        if n is None:
+            print(f"bench-regress: {name}: row gone from new run (not a failure)")
+            continue
+        if not n.get("bit_exact", False):
+            failed.append(f"{name}: new run is not bit-exact")
+            continue
+        old_ips, new_ips = float(b["images_per_s"]), float(n["images_per_s"])
+        ratio = new_ips / old_ips if old_ips > 0 else float("inf")
+        verdict = "FAIL" if ratio < 1.0 - tolerance else "ok"
+        print(
+            f"bench-regress: {name}: {old_ips:.0f} -> {new_ips:.0f} img/s "
+            f"({ratio:.2f}x, floor {1.0 - tolerance:.2f}x) {verdict}"
+        )
+        if verdict == "FAIL":
+            failed.append(f"{name}: {old_ips:.0f} -> {new_ips:.0f} img/s ({ratio:.2f}x)")
+    for key in sorted(set(new_rows) - set(base_rows)):
+        print(f"bench-regress: {'/'.join(key)}: new row (no baseline, not gated)")
+
+    if failed:
+        print(f"bench-regress: {len(failed)} regression(s) beyond {tolerance:.0%}:")
+        for f in failed:
+            print(f"  {f}")
+        return 1
+    print("bench-regress: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
