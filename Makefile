@@ -4,7 +4,7 @@
 
 PYTHON ?= python3
 
-.PHONY: artifacts artifacts-fig2 test-python test-rust bench-smoke multi-smoke engine-smoke kernel-smoke serve-smoke bench-json bench-regress doc lint
+.PHONY: artifacts artifacts-fig2 test-python test-rust bench-smoke multi-smoke engine-smoke kernel-smoke prune-smoke serve-smoke bench-json bench-regress doc lint
 
 artifacts:
 	mkdir -p artifacts
@@ -61,6 +61,20 @@ kernel-smoke:
 	cd rust && cargo bench --bench bench_kernels -- --smoke
 	cd rust && cargo test -q --test zero_alloc --test kernels_arena --test kernels_batch
 	cd rust && cargo run --release -- bench --backends all --n 6
+
+# Structured-pruning smoke (DESIGN.md S23, EXPERIMENTS.md E16): the
+# bench harness's prune gate (compacted 50%-channel-sparsity plan
+# bit-exact vs the dense compile of the masked network AND >= 1.3x its
+# single-thread batch-major throughput), the prune conformance property
+# suite (all four datapaths x batch 1..=17 x both drivers vs masked
+# dense, fold-rescaled pipeline logits + analytic-vs-simulated FPS), and
+# the sparse rows of the engine comparison. Exits nonzero on any
+# divergence or a missed speedup, so CI gates on it.
+prune-smoke:
+	cd rust && cargo bench --bench bench_kernels -- --smoke
+	cd rust && cargo test -q --test prune
+	cd rust && cargo run --release -- bench --backends all --n 6 --sparsity 0.5
+	cd rust && cargo run --release -- report prune --sparsity 0.5 --n 6
 
 # Bench-trajectory regression gate (EXPERIMENTS.md E15): regenerate the
 # machine-readable rows into a scratch file and diff images_per_s

@@ -14,7 +14,12 @@
 //!  * the batch-major sweep >= 1.5x the image-major act-major driver at
 //!    batch 8 single-threaded (same bar under `--smoke`: the
 //!    warmup + median-of-k timing makes the ratio stable on shared
-//!    runners, so the smoke gate is not discounted).
+//!    runners, so the smoke gate is not discounted);
+//!  * the structurally pruned compile at 50% channel sparsity
+//!    (DESIGN.md S23) bit-exact against the dense compile of the masked
+//!    network AND >= 1.3x its single-thread batch-major throughput —
+//!    dropped channels must convert into real cycles, not just smaller
+//!    tables (`make prune-smoke`).
 //!
 //! Run: `cargo bench --bench bench_kernels` (`-- --smoke` for the
 //! CI-sized run, also reachable as `make kernel-smoke`).
@@ -23,7 +28,7 @@ use lutmul::graph::executor::{Datapath, Executor, Tensor};
 use lutmul::graph::mobilenet_v2_small;
 use lutmul::graph::network::Network;
 use lutmul::graph::plan::NetworkPlan;
-use lutmul::graph::ScratchPool;
+use lutmul::graph::{PruneSpec, ScratchPool};
 use lutmul::util::bench::{bench_warm, per_second};
 use lutmul::util::prop::Rng;
 
@@ -101,6 +106,27 @@ fn main() {
          | direct {ips_direct:.0} | arith {ips_arith:.0} img/s"
     );
 
+    // --- structured pruning (DESIGN.md S23, `make prune-smoke`) ---------
+    // 50% magnitude channel sparsity: the compacted plan must reproduce
+    // the dense compile of the masked network bit-for-bit (its own
+    // reference — pruning changes the logits vs the unpruned net by
+    // design) and convert the dropped rows into real throughput
+    let spec = PruneSpec::channels(0.5);
+    let masked = Executor::from_plan(NetworkPlan::compile(
+        &spec.masked_network(&net),
+        Datapath::LutFabric,
+    ));
+    let sparse =
+        Executor::from_plan(NetworkPlan::compile_pruned(&net, Datapath::LutFabric, &spec));
+    let prune_exact = sparse.run_batch_with_threads(&images, 1)
+        == masked.run_batch_with_threads(&images, 1);
+    println!("\nstructured pruning, 50% channel sparsity:");
+    if !prune_exact {
+        println!("DIVERGED: pruned plan disagrees with the masked-dense compile");
+    }
+    let ips_masked = time("LutFabric   masked-dense witness       ", &masked, true);
+    let ips_sparse = time("LutFabric   sparse compacted (S23)     ", &sparse, true);
+
     // --- acceptance lines ----------------------------------------------
     let layout_speedup = ips_act / ips_mac;
     let layout_target = if smoke { 1.2 } else { 1.5 };
@@ -120,7 +146,16 @@ fn main() {
     );
     let memo = ips_act / ips_direct;
     println!("activation-major vs per-MAC readout: {memo:.2}x (informational)");
-    if diverged > 0 || !layout_ok || !batch_ok {
+    let prune_speedup = ips_sparse / ips_masked;
+    let prune_target = 1.3;
+    let prune_ok = prune_exact && prune_speedup >= prune_target;
+    println!(
+        "sparse compacted vs masked-dense at 50% sparsity: {prune_speedup:.2}x img/s \
+         single-thread (target >= {prune_target}x, bit-exact {}): {}",
+        if prune_exact { "yes" } else { "NO" },
+        if prune_ok { "PASS" } else { "FAIL" }
+    );
+    if diverged > 0 || !layout_ok || !batch_ok || !prune_ok {
         std::process::exit(1);
     }
 }

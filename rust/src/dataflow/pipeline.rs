@@ -77,6 +77,31 @@ impl FoldConfig {
     pub fn uniform(n_convs: usize, fold: usize) -> Self {
         Self { folds: vec![fold.max(1); n_convs] }
     }
+
+    /// Rescale a fold vector for a structurally pruned plan (DESIGN.md
+    /// S23). A conv stage folded by `f` owns `ceil(cout / f)` parallel
+    /// compute units; with only `live` surviving output channels the
+    /// same units finish a pixel in `ceil(live / units)` cycles, so a
+    /// pruned layer's initiation interval — and with it the simulated
+    /// steady-state — shrinks with its channel sparsity. Dense
+    /// (unpruned) stages keep their fold unchanged.
+    pub fn rescaled_for(&self, plan: &NetworkPlan) -> FoldConfig {
+        let folds = plan
+            .convs()
+            .zip(self.folds.iter())
+            .map(|(cp, &f)| {
+                let f = f.max(1);
+                match &cp.prune {
+                    Some(info) => {
+                        let units = cp.geom.cout.div_ceil(f);
+                        info.live_rows.len().div_ceil(units).max(1)
+                    }
+                    None => f,
+                }
+            })
+            .collect();
+        FoldConfig { folds }
+    }
 }
 
 struct ConvStage {
@@ -1308,6 +1333,30 @@ mod tests {
             second.cycles,
             first.cycles
         );
+    }
+
+    #[test]
+    fn pruned_plan_pipeline_matches_masked_dense_and_rescales_folds() {
+        use crate::graph::prune::PruneSpec;
+        let net = random_net(53);
+        let images = random_images(3, 8, 3, 15);
+        let spec = PruneSpec::channels(0.5);
+        let masked = spec.masked_network(&net);
+        let dense_plan = NetworkPlan::compile(&masked, Datapath::Arithmetic);
+        let pruned_plan = NetworkPlan::compile_pruned(&net, Datapath::Arithmetic, &spec);
+        let folds = FoldConfig::uniform(6, 4);
+        let want = Pipeline::from_plan(&dense_plan, &folds, 8).run(&images).unwrap();
+        let rescaled = folds.rescaled_for(&pruned_plan);
+        let got = Pipeline::from_plan(&pruned_plan, &rescaled, 8).run(&images).unwrap();
+        assert_eq!(got.logits, want.logits, "pruned pipeline vs masked dense");
+        assert!(
+            rescaled.folds.iter().zip(&folds.folds).any(|(r, f)| r < f),
+            "50% channel pruning must shrink at least one fold: {:?}",
+            rescaled.folds
+        );
+        assert!(got.steady_state_cycles_per_image <= want.steady_state_cycles_per_image);
+        // a noop rescale against the dense plan is the identity
+        assert_eq!(folds.rescaled_for(&dense_plan).folds, folds.folds);
     }
 
     #[test]

@@ -41,6 +41,7 @@ use crate::fabric::device::U280;
 use crate::graph::arch::ArchSpec;
 use crate::graph::network::Network;
 use crate::graph::plan::{Datapath, IoGeom, NetworkPlan};
+use crate::graph::prune::PruneSpec;
 use crate::graph::{mobilenet_v2_full, mobilenet_v2_small};
 use crate::runtime::Artifacts;
 use crate::synth::fold::{optimize_folding, Budget};
@@ -201,6 +202,7 @@ pub struct EngineBuilder {
     synthetic_seed: Option<u64>,
     injected: Option<Network>,
     datapath: Datapath,
+    prune: Option<PruneSpec>,
     kind: BackendKind,
     folding: Folding,
     fifo_depth: usize,
@@ -216,6 +218,7 @@ impl Default for EngineBuilder {
             synthetic_seed: None,
             injected: None,
             datapath: Datapath::Arithmetic,
+            prune: None,
             kind: BackendKind::Reference,
             folding: Folding::FullyParallel,
             fifo_depth: 16,
@@ -257,6 +260,16 @@ impl EngineBuilder {
     /// engine constructs shares the one compiled plan).
     pub fn datapath(mut self, datapath: Datapath) -> Self {
         self.datapath = datapath;
+        self
+    }
+
+    /// Structured pruning pass applied at plan-compile time (DESIGN.md
+    /// S23): the plan is compiled through `NetworkPlan::compile_pruned`,
+    /// so every backend the engine constructs — executor, pipeline,
+    /// sharded — runs the compacted sparse kernels. A noop spec compiles
+    /// the plain dense plan.
+    pub fn prune(mut self, spec: PruneSpec) -> Self {
+        self.prune = Some(spec);
         self
     }
 
@@ -324,7 +337,10 @@ impl EngineBuilder {
             )
         };
 
-        let plan = Arc::new(NetworkPlan::compile(&net, self.datapath));
+        let plan = Arc::new(match &self.prune {
+            Some(spec) => NetworkPlan::compile_pruned(&net, self.datapath, spec),
+            None => NetworkPlan::compile(&net, self.datapath),
+        });
         let folds = match self.folding {
             Folding::FullyParallel => FoldConfig::fully_parallel(plan.n_convs()),
             Folding::Uniform(fold) => FoldConfig::uniform(plan.n_convs(), fold),

@@ -71,6 +71,23 @@ pub const VIVADO_ROM_FACTOR: f64 = 1.6;
 /// trims constant product bits; Figure 6 reports 1829/2048 = 0.893).
 pub const HLS_MULT_FACTOR: f64 = 0.893;
 
+/// Post-implementation LUT area of one conv layer's multiply-accumulate
+/// array: `rows x cols` constant multipliers as Eq. (3) ROMs (Vivado
+/// re-pack factor applied) plus one per-row adder tree reducing the
+/// `cols` products (Vivado ternary-merge shrink applied). This is the
+/// area a structured pruning pass reclaims (DESIGN.md S23): a pruned
+/// layer is costed with its *live* row/column counts, a dense layer
+/// with its full `cout x cols` — same formula, so the per-layer saving
+/// in `lutmul report prune` is exactly the dropped rows' and columns'
+/// share.
+pub fn layer_lut_area(w_bits: u32, rows: usize, cols: usize) -> f64 {
+    if rows == 0 || cols == 0 {
+        return 0.0;
+    }
+    rows as f64 * cols as f64 * luts_per_mult(w_bits) * VIVADO_ROM_FACTOR
+        + rows as f64 * adder_tree_luts(2 * w_bits, cols as u32) * VIVADO_ADDER_SHRINK
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -114,6 +131,19 @@ mod tests {
     fn adder_tree_single_term_free() {
         assert_eq!(adder_tree_luts(8, 1), 0.0);
         assert_eq!(adder_tree_luts(8, 0), 0.0);
+    }
+
+    #[test]
+    fn layer_lut_area_scales_with_live_work() {
+        let dense = layer_lut_area(4, 32, 288);
+        let pruned = layer_lut_area(4, 16, 288);
+        assert!(dense > 0.0);
+        // halving the rows halves the whole array (ROMs and trees alike)
+        assert!((pruned - dense / 2.0).abs() < 1e-9, "{pruned} vs {}", dense / 2.0);
+        // dropping columns removes ROMs and shrinks every row's tree
+        assert!(layer_lut_area(4, 32, 144) < dense);
+        assert_eq!(layer_lut_area(4, 0, 288), 0.0);
+        assert_eq!(layer_lut_area(4, 32, 0), 0.0);
     }
 
     #[test]

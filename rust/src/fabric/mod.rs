@@ -14,7 +14,7 @@ pub mod lutmul;
 pub mod netlist;
 pub mod power;
 
-pub use cost::{adder_tree_luts, luts_per_general_mult, luts_per_mult};
+pub use cost::{adder_tree_luts, layer_lut_area, luts_per_general_mult, luts_per_mult};
 pub use device::{FpgaDevice, FpgaSlice, GpuDevice, U280, V100};
 pub use lut::{Lut6, Lut6_2};
 pub use lutmul::{lutmul_init, lutmul_init_generic, ConstMultiplier};

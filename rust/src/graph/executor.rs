@@ -28,6 +28,13 @@
 //! [`run_image_major_into`](Executor::run_image_major_into) — the perf
 //! baseline and equivalence witness.
 //!
+//! Structurally pruned plans (`NetworkPlan::compile_pruned`, DESIGN.md
+//! S23) run through the same drivers unchanged: the kernels dispatch on
+//! `ConvPlan::prune` to compacted-index sparse bodies, and the arena
+//! footprints are sized from the full-width geometry, so a pruned plan
+//! is a drop-in for its dense witness — bit-exact against the dense
+//! compile of `PruneSpec::masked_network` (tests/prune.rs).
+//!
 //! The executor serves behind the engine's uniform backend contract
 //! (`engine::ExecutorBackend`, DESIGN.md S19); the serving coordinator
 //! and CLI drive it as a boxed `InferenceBackend`.
@@ -765,6 +772,43 @@ mod tests {
         // two convs (ops 2 and 3) and the res_add (op 4) trace
         assert_eq!(seen, vec![(2, 2), (3, 2), (4, 4)]);
         assert_eq!(logits[0], 4.0);
+    }
+
+    #[test]
+    fn pruned_plan_matches_masked_dense_in_batch_drivers() {
+        use crate::graph::prune::PruneSpec;
+        let mut net = net_with_conv(ConvKind::Std, 3, 6, 3, 1);
+        if let Op::Conv { w_codes, .. } = &mut net.ops[1] {
+            let mut seed = 777u64;
+            for row in w_codes.iter_mut() {
+                for v in row.iter_mut() {
+                    seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+                    *v = ((seed >> 33) % 16) as i32 - 8;
+                }
+            }
+        }
+        let spec = PruneSpec::channels(0.5);
+        let masked = spec.masked_network(&net);
+        for dp in [Datapath::Arithmetic, Datapath::LutFabric] {
+            let pruned = Executor::from_plan(NetworkPlan::compile_pruned(&net, dp, &spec));
+            let dense = Executor::new(&masked, dp);
+            let images: Vec<Tensor> = (0..5)
+                .map(|s| {
+                    let mut img = Tensor::zeros(4, 4, 3);
+                    for (i, v) in img.data.iter_mut().enumerate() {
+                        *v = ((i * 7 + s * 3) % 16) as i32;
+                    }
+                    img
+                })
+                .collect();
+            for n in [1usize, 2, 5] {
+                assert_eq!(
+                    pruned.run_batch_with_threads(&images[..n], 2),
+                    dense.run_batch_with_threads(&images[..n], 2),
+                    "pruned vs masked dense, batch {n}, {dp:?}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -37,11 +37,22 @@
 //! fan-out across threads. Per image they preserve the exact same
 //! accumulation order, so they are bit-exact with everything above.
 
+//! **Sparse bodies** (DESIGN.md S23): a plan compiled with a
+//! `PruneSpec` carries a `PruneInfo` compaction record, and every conv
+//! entry point dispatches to a sparse body that sweeps only the live
+//! rows/columns — the act-major bodies accumulate into the first
+//! `rows()` slots of the output slab, then scatter through
+//! `live_rows` (descending, so no accumulator is clobbered before it
+//! is read) and splat the pruned channels' constant codes. Live
+//! columns are visited in ascending dense order and a skipped column
+//! contributes an exact i32 zero, so sparse output is bit-identical to
+//! the dense kernels running the masked network (tests/prune.rs).
+
 use crate::quant::saturating_res_add;
 
 use super::executor::Tensor;
 use super::network::ConvKind;
-use super::plan::{ConvPlan, DensePlan, Multipliers};
+use super::plan::{ConvPlan, DensePlan, Multipliers, PruneInfo};
 
 /// Zero-padded read from a flat HWC activation slice.
 #[inline]
@@ -88,6 +99,28 @@ pub fn conv_into(plan: &ConvPlan, x: &[i32], out: &mut [i32]) {
         "{}: output len disagrees with the compiled plan",
         plan.name
     );
+    if let Some(info) = &plan.prune {
+        return match &plan.mults {
+            Multipliers::LutTables { products, acts, .. } => {
+                conv_sparse_cols(plan, info, x, out, products, *acts)
+            }
+            Multipliers::Weights => conv_sparse_scalar(plan, info, x, out, |row, col, a| {
+                plan.wflat[row * plan.cols + col] * a
+            }),
+            Multipliers::LutDirect { mults } => {
+                let pairs = plan.cols.div_ceil(2);
+                conv_sparse_scalar(plan, info, x, out, move |row, col, a| {
+                    mults[row * pairs + col / 2].eval(col % 2 == 1, a as u32)
+                })
+            }
+            Multipliers::LutTablesMacMajor { products, acts, .. } => {
+                let acts = *acts;
+                conv_sparse_scalar(plan, info, x, out, move |row, col, a| {
+                    products[(row * plan.cols + col) * acts + a as usize]
+                })
+            }
+        };
+    }
     match &plan.mults {
         Multipliers::LutTables { products, acts, .. } => {
             conv_cols(plan, x, out, products, *acts)
@@ -309,6 +342,151 @@ fn conv_cols(plan: &ConvPlan, x: &[i32], out: &mut [i32], products: &[i32], acts
     }
 }
 
+// ---------------------------------------------------------------------
+// Sparse bodies (DESIGN.md S23): compacted-index sweeps over a pruned
+// plan's live rows/columns. `PruneInfo::live_cols` maps a compacted
+// column back to its dense (tap, ci) position for the activation read;
+// compacted row `r` maps to dense channel `live_rows[r]`.
+// ---------------------------------------------------------------------
+
+/// Threshold the first-`live`-slot accumulators of a `[cout]` output
+/// slab and scatter them to their dense channel slots — descending, so
+/// a scatter target (`live_rows[r] >= r`) never clobbers an accumulator
+/// that is still to be read — then splat the pruned channels' constant
+/// codes.
+#[inline]
+fn scatter_sparse_out(plan: &ConvPlan, info: &PruneInfo, o: &mut [i32]) {
+    for r in (0..info.live_rows.len()).rev() {
+        let ch = info.live_rows[r];
+        o[ch] = plan.threshold(o[r], ch);
+    }
+    for &(ch, code) in &info.pruned_rows {
+        o[ch] = code;
+    }
+}
+
+/// Sparse scalar conv body (`Weights`, `LutDirect`, `LutTablesMacMajor`
+/// over a pruned plan): register accumulation per live row over the
+/// live columns only — compacted `mul` indices, dense activation reads.
+fn conv_sparse_scalar(
+    plan: &ConvPlan,
+    info: &PruneInfo,
+    x: &[i32],
+    out: &mut [i32],
+    mul: impl Fn(usize, usize, i32) -> i32,
+) {
+    let g = plan.geom;
+    let (ho, wo) = (g.out_h(), g.out_w());
+    let dw = plan.kind == ConvKind::Dw;
+    for oy in 0..ho {
+        let y_interior = oy >= plan.oy_interior.0 && oy < plan.oy_interior.1;
+        for ox in 0..wo {
+            let o = &mut out[(oy * wo + ox) * g.cout..][..g.cout];
+            let interior = y_interior && ox >= plan.ox_interior.0 && ox < plan.ox_interior.1;
+            let base = if interior {
+                ((oy * g.stride - g.pad) * g.in_w + (ox * g.stride - g.pad)) * g.cin
+            } else {
+                0
+            };
+            for (r, &ch) in info.live_rows.iter().enumerate() {
+                let mut acc = 0i32;
+                for (c, &dcol) in info.live_cols.iter().enumerate() {
+                    let (tap, ci) = if dw { (dcol, ch) } else { (dcol / g.cin, dcol % g.cin) };
+                    let a = if interior {
+                        x[base + plan.tap_offsets[tap] + ci]
+                    } else {
+                        let (i, j) = (tap / g.k, tap % g.k);
+                        at(
+                            x,
+                            g.in_w,
+                            g.cin,
+                            g.in_h,
+                            (oy * g.stride + i) as isize - g.pad as isize,
+                            (ox * g.stride + j) as isize - g.pad as isize,
+                            ci,
+                        )
+                    };
+                    acc += mul(r, c, a);
+                }
+                o[ch] = plan.threshold(acc, ch);
+            }
+            for &(ch, code) in &info.pruned_rows {
+                o[ch] = code;
+            }
+        }
+    }
+}
+
+/// Sparse activation-major LUT-GEMM conv body: one compacted product
+/// column per live (tap, ci), axpy'd into the first-`live` slots of the
+/// output slab — pruned columns never reach the sweep, pruned rows
+/// never occupy table space — then scattered out through `live_rows`.
+fn conv_sparse_cols(
+    plan: &ConvPlan,
+    info: &PruneInfo,
+    x: &[i32],
+    out: &mut [i32],
+    products: &[i32],
+    acts: usize,
+) {
+    let g = plan.geom;
+    let (ho, wo) = (g.out_h(), g.out_w());
+    let live = info.live_rows.len();
+    let dw = plan.kind == ConvKind::Dw;
+    for oy in 0..ho {
+        let y_interior = oy >= plan.oy_interior.0 && oy < plan.oy_interior.1;
+        for ox in 0..wo {
+            let o = &mut out[(oy * wo + ox) * g.cout..][..g.cout];
+            o[..live].fill(0);
+            let interior = y_interior && ox >= plan.ox_interior.0 && ox < plan.ox_interior.1;
+            let base = if interior {
+                ((oy * g.stride - g.pad) * g.in_w + (ox * g.stride - g.pad)) * g.cin
+            } else {
+                0
+            };
+            for (c, &dcol) in info.live_cols.iter().enumerate() {
+                if dw {
+                    let tap = dcol;
+                    let tbl = &products[c * acts * live..][..acts * live];
+                    if interior {
+                        let px = base + plan.tap_offsets[tap];
+                        for (r, &ch) in info.live_rows.iter().enumerate() {
+                            o[r] += tbl[x[px + ch] as usize * live + r];
+                        }
+                    } else {
+                        let (i, j) = (tap / g.k, tap % g.k);
+                        let y = (oy * g.stride + i) as isize - g.pad as isize;
+                        let xx = (ox * g.stride + j) as isize - g.pad as isize;
+                        if y < 0 || xx < 0 || y >= g.in_h as isize || xx >= g.in_w as isize {
+                            continue; // zero activation: zero column
+                        }
+                        let px = (y as usize * g.in_w + xx as usize) * g.cin;
+                        for (r, &ch) in info.live_rows.iter().enumerate() {
+                            o[r] += tbl[x[px + ch] as usize * live + r];
+                        }
+                    }
+                } else {
+                    let (tap, ci) = (dcol / g.cin, dcol % g.cin);
+                    let a = if interior {
+                        x[base + plan.tap_offsets[tap] + ci]
+                    } else {
+                        let (i, j) = (tap / g.k, tap % g.k);
+                        let y = (oy * g.stride + i) as isize - g.pad as isize;
+                        let xx = (ox * g.stride + j) as isize - g.pad as isize;
+                        if y < 0 || xx < 0 || y >= g.in_h as isize || xx >= g.in_w as isize {
+                            continue; // zero activation: zero column
+                        }
+                        x[(y as usize * g.in_w + xx as usize) * g.cin + ci]
+                    };
+                    let tbl = &products[(c * acts + a as usize) * live..][..live];
+                    axpy(&mut o[..live], tbl);
+                }
+            }
+            scatter_sparse_out(plan, info, o);
+        }
+    }
+}
+
 /// One output pixel from a full im2col patch (`[K*K*CIN]`, (tap,
 /// channel) minor order) — the dataflow simulator's conv-stage body
 /// (allocating wrapper over [`patch_out_into`]).
@@ -324,6 +502,9 @@ pub fn patch_out(plan: &ConvPlan, patch: &[i32]) -> Vec<i32> {
 pub fn patch_out_into(plan: &ConvPlan, patch: &[i32], out: &mut [i32]) {
     assert_eq!(out.len(), plan.geom.cout, "{}: patch output len", plan.name);
     let cin = plan.geom.cin;
+    if let Some(info) = &plan.prune {
+        return patch_out_sparse(plan, info, patch, out);
+    }
     match (&plan.mults, plan.kind) {
         (Multipliers::LutTables { products, acts, .. }, ConvKind::Dw) => {
             let cout = plan.geom.cout;
@@ -364,6 +545,58 @@ pub fn patch_out_into(plan: &ConvPlan, patch: &[i32], out: &mut [i32]) {
     }
     for (co, slot) in out.iter_mut().enumerate() {
         *slot = plan.threshold(*slot, co);
+    }
+}
+
+/// Sparse patch body for the simulator's conv stages: the full-width
+/// im2col patch is indexed at the live columns' dense positions only,
+/// through the compacted multiplier array.
+fn patch_out_sparse(plan: &ConvPlan, info: &PruneInfo, patch: &[i32], out: &mut [i32]) {
+    let cin = plan.geom.cin;
+    let live = info.live_rows.len();
+    match (&plan.mults, plan.kind) {
+        (Multipliers::LutTables { products, acts, .. }, ConvKind::Dw) => {
+            out[..live].fill(0);
+            for (c, &tap) in info.live_cols.iter().enumerate() {
+                let tbl = &products[c * acts * live..][..acts * live];
+                for (r, &ch) in info.live_rows.iter().enumerate() {
+                    out[r] += tbl[patch[tap * cin + ch] as usize * live + r];
+                }
+            }
+            scatter_sparse_out(plan, info, out);
+        }
+        (Multipliers::LutTables { products, acts, .. }, _) => {
+            out[..live].fill(0);
+            for (c, &dcol) in info.live_cols.iter().enumerate() {
+                let tbl = &products[(c * acts + patch[dcol] as usize) * live..][..live];
+                axpy(&mut out[..live], tbl);
+            }
+            scatter_sparse_out(plan, info, out);
+        }
+        (_, ConvKind::Dw) => {
+            for (r, &ch) in info.live_rows.iter().enumerate() {
+                let mut acc = 0i32;
+                for (c, &tap) in info.live_cols.iter().enumerate() {
+                    acc += plan.mul(r, c, patch[tap * cin + ch]);
+                }
+                out[ch] = plan.threshold(acc, ch);
+            }
+            for &(ch, code) in &info.pruned_rows {
+                out[ch] = code;
+            }
+        }
+        _ => {
+            for (r, &ch) in info.live_rows.iter().enumerate() {
+                let mut acc = 0i32;
+                for (c, &dcol) in info.live_cols.iter().enumerate() {
+                    acc += plan.mul(r, c, patch[dcol]);
+                }
+                out[ch] = plan.threshold(acc, ch);
+            }
+            for &(ch, code) in &info.pruned_rows {
+                out[ch] = code;
+            }
+        }
     }
 }
 
@@ -548,6 +781,26 @@ pub fn conv_batch_into(plan: &ConvPlan, x: &[i32], nb: usize, out: &mut [i32], r
 /// Output rows `[oy0, oy1)` of one batch-major conv; `out` holds
 /// exactly those rows (`[(oy - oy0) * wo + ox][nb][cout]`).
 fn conv_batch_rows(plan: &ConvPlan, x: &[i32], nb: usize, out: &mut [i32], oy0: usize, oy1: usize) {
+    if let Some(info) = &plan.prune {
+        return match &plan.mults {
+            Multipliers::LutTables { products, acts, .. } => {
+                conv_batch_sparse_cols(plan, info, x, nb, out, products, *acts, oy0, oy1)
+            }
+            Multipliers::Weights => conv_batch_sparse_weights(plan, info, x, nb, out, oy0, oy1),
+            Multipliers::LutDirect { mults } => {
+                let pairs = plan.cols.div_ceil(2);
+                conv_batch_sparse_scalar(plan, info, x, nb, out, oy0, oy1, move |row, col, a| {
+                    mults[row * pairs + col / 2].eval(col % 2 == 1, a as u32)
+                })
+            }
+            Multipliers::LutTablesMacMajor { products, acts, .. } => {
+                let acts = *acts;
+                conv_batch_sparse_scalar(plan, info, x, nb, out, oy0, oy1, move |row, col, a| {
+                    products[(row * plan.cols + col) * acts + a as usize]
+                })
+            }
+        };
+    }
     match &plan.mults {
         Multipliers::LutTables { products, acts, .. } => {
             conv_batch_cols(plan, x, nb, out, products, *acts, oy0, oy1)
@@ -835,6 +1088,209 @@ fn conv_batch_scalar(
                         }
                         *s = plan.threshold(acc, co);
                     }
+                }
+            }
+        }
+    }
+}
+
+/// Sparse batch-major LUT-GEMM conv body: the compacted product table
+/// of each live (tap, ci) is gathered once per batch tile and its
+/// activation-selected column axpy'd into the first-`live` lanes of
+/// every image's `[cout]` slot — the `LANES`-blocked sweep touches only
+/// live work across the whole tile, which is where structured pruning
+/// multiplies with the S22 batch amortization.
+#[allow(clippy::too_many_arguments)]
+fn conv_batch_sparse_cols(
+    plan: &ConvPlan,
+    info: &PruneInfo,
+    x: &[i32],
+    nb: usize,
+    out: &mut [i32],
+    products: &[i32],
+    acts: usize,
+    oy0: usize,
+    oy1: usize,
+) {
+    let g = plan.geom;
+    let wo = g.out_w();
+    let (cin, cout) = (g.cin, g.cout);
+    let live = info.live_rows.len();
+    let dw = plan.kind == ConvKind::Dw;
+    let tile = plan.batch_tile.min(nb);
+    let slot = nb * cout;
+    for oy in oy0..oy1 {
+        let y_interior = oy >= plan.oy_interior.0 && oy < plan.oy_interior.1;
+        for ox in 0..wo {
+            let o = &mut out[((oy - oy0) * wo + ox) * slot..][..slot];
+            o.fill(0);
+            let interior = y_interior && ox >= plan.ox_interior.0 && ox < plan.ox_interior.1;
+            let base_px = if interior {
+                (oy * g.stride - g.pad) * g.in_w + (ox * g.stride - g.pad)
+            } else {
+                0
+            };
+            let mut n0 = 0usize;
+            while n0 < nb {
+                let n1 = (n0 + tile).min(nb);
+                for (c, &dcol) in info.live_cols.iter().enumerate() {
+                    let tap = if dw { dcol } else { dcol / cin };
+                    let px = if interior {
+                        (base_px + plan.tap_offsets[tap] / cin) * nb * cin
+                    } else {
+                        let (i, j) = (tap / g.k, tap % g.k);
+                        let y = (oy * g.stride + i) as isize - g.pad as isize;
+                        let xx = (ox * g.stride + j) as isize - g.pad as isize;
+                        if y < 0 || xx < 0 || y >= g.in_h as isize || xx >= g.in_w as isize {
+                            continue; // zero activation: zero column
+                        }
+                        (y as usize * g.in_w + xx as usize) * nb * cin
+                    };
+                    let tbl = &products[c * acts * live..][..acts * live];
+                    if dw {
+                        for n in n0..n1 {
+                            let xs = &x[px + n * cin..][..cin];
+                            let on = &mut o[n * cout..][..live];
+                            for (r, &ch) in info.live_rows.iter().enumerate() {
+                                on[r] += tbl[xs[ch] as usize * live + r];
+                            }
+                        }
+                    } else {
+                        let ci = dcol % cin;
+                        for n in n0..n1 {
+                            let a = x[px + n * cin + ci] as usize;
+                            axpy(&mut o[n * cout..][..live], &tbl[a * live..][..live]);
+                        }
+                    }
+                }
+                n0 = n1;
+            }
+            for n in 0..nb {
+                scatter_sparse_out(plan, info, &mut o[n * cout..][..cout]);
+            }
+        }
+    }
+}
+
+/// Sparse batch-major arithmetic conv body: scaled axpys over the
+/// compacted `wflat_t` columns (`wflat_t[c * live..]`), live rows only.
+fn conv_batch_sparse_weights(
+    plan: &ConvPlan,
+    info: &PruneInfo,
+    x: &[i32],
+    nb: usize,
+    out: &mut [i32],
+    oy0: usize,
+    oy1: usize,
+) {
+    let g = plan.geom;
+    let wo = g.out_w();
+    let (cin, cout) = (g.cin, g.cout);
+    let live = info.live_rows.len();
+    let dw = plan.kind == ConvKind::Dw;
+    let tile = plan.batch_tile.min(nb);
+    let slot = nb * cout;
+    for oy in oy0..oy1 {
+        let y_interior = oy >= plan.oy_interior.0 && oy < plan.oy_interior.1;
+        for ox in 0..wo {
+            let o = &mut out[((oy - oy0) * wo + ox) * slot..][..slot];
+            o.fill(0);
+            let interior = y_interior && ox >= plan.ox_interior.0 && ox < plan.ox_interior.1;
+            let base_px = if interior {
+                (oy * g.stride - g.pad) * g.in_w + (ox * g.stride - g.pad)
+            } else {
+                0
+            };
+            let mut n0 = 0usize;
+            while n0 < nb {
+                let n1 = (n0 + tile).min(nb);
+                for (c, &dcol) in info.live_cols.iter().enumerate() {
+                    let tap = if dw { dcol } else { dcol / cin };
+                    let px = if interior {
+                        (base_px + plan.tap_offsets[tap] / cin) * nb * cin
+                    } else {
+                        let (i, j) = (tap / g.k, tap % g.k);
+                        let y = (oy * g.stride + i) as isize - g.pad as isize;
+                        let xx = (ox * g.stride + j) as isize - g.pad as isize;
+                        if y < 0 || xx < 0 || y >= g.in_h as isize || xx >= g.in_w as isize {
+                            continue; // zero activation: zero column
+                        }
+                        (y as usize * g.in_w + xx as usize) * nb * cin
+                    };
+                    let wcol = &plan.wflat_t[c * live..][..live];
+                    if dw {
+                        for n in n0..n1 {
+                            let xs = &x[px + n * cin..][..cin];
+                            let on = &mut o[n * cout..][..live];
+                            for (r, &ch) in info.live_rows.iter().enumerate() {
+                                on[r] += wcol[r] * xs[ch];
+                            }
+                        }
+                    } else {
+                        let ci = dcol % cin;
+                        for n in n0..n1 {
+                            let a = x[px + n * cin + ci];
+                            if a != 0 {
+                                axpy_scaled(&mut o[n * cout..][..live], wcol, a);
+                            }
+                        }
+                    }
+                }
+                n0 = n1;
+            }
+            for n in 0..nb {
+                scatter_sparse_out(plan, info, &mut o[n * cout..][..cout]);
+            }
+        }
+    }
+}
+
+/// Sparse scalar batch-major conv body — the `LutDirect` and
+/// `LutTablesMacMajor` witnesses of the pruned compaction, so the
+/// compacted index space itself is cross-checked against the
+/// hardware-true per-MAC readout.
+#[allow(clippy::too_many_arguments)]
+fn conv_batch_sparse_scalar(
+    plan: &ConvPlan,
+    info: &PruneInfo,
+    x: &[i32],
+    nb: usize,
+    out: &mut [i32],
+    oy0: usize,
+    oy1: usize,
+    mul: impl Fn(usize, usize, i32) -> i32,
+) {
+    let g = plan.geom;
+    let wo = g.out_w();
+    let (cin, cout) = (g.cin, g.cout);
+    let dw = plan.kind == ConvKind::Dw;
+    let slot = nb * cout;
+    // zero-padded read from the interleaved layout
+    let atb = |y: isize, xx: isize, n: usize, ch: usize| -> i32 {
+        if y < 0 || xx < 0 || y >= g.in_h as isize || xx >= g.in_w as isize {
+            0
+        } else {
+            x[((y as usize * g.in_w + xx as usize) * nb + n) * cin + ch]
+        }
+    };
+    for oy in oy0..oy1 {
+        for ox in 0..wo {
+            let o = &mut out[((oy - oy0) * wo + ox) * slot..][..slot];
+            for n in 0..nb {
+                let on = &mut o[n * cout..][..cout];
+                for (r, &ch) in info.live_rows.iter().enumerate() {
+                    let mut acc = 0i32;
+                    for (c, &dcol) in info.live_cols.iter().enumerate() {
+                        let (tap, ci) = if dw { (dcol, ch) } else { (dcol / cin, dcol % cin) };
+                        let (i, j) = (tap / g.k, tap % g.k);
+                        let y = (oy * g.stride + i) as isize - g.pad as isize;
+                        let xx = (ox * g.stride + j) as isize - g.pad as isize;
+                        acc += mul(r, c, atb(y, xx, n, ci));
+                    }
+                    on[ch] = plan.threshold(acc, ch);
+                }
+                for &(ch, code) in &info.pruned_rows {
+                    on[ch] = code;
                 }
             }
         }

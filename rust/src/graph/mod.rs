@@ -1,18 +1,21 @@
 //! Model graph substrate (DESIGN.md S5/S17/S20): the streamlined
 //! integer network IR (`network`), shape-level architecture specs
 //! (`arch`), the compiled layer plans + kernel engine (`plan`,
-//! `kernels`), the per-worker tensor arenas the zero-allocation kernels
-//! run in (`scratch`) and the reference integer executor (`executor`).
+//! `kernels`), structured-pruning specs (`prune`), the per-worker
+//! tensor arenas the zero-allocation kernels run in (`scratch`) and the
+//! reference integer executor (`executor`).
 
 pub mod arch;
 pub mod executor;
 pub mod kernels;
 pub mod network;
 pub mod plan;
+pub mod prune;
 pub mod scratch;
 
 pub use arch::{mobilenet_v2_full, mobilenet_v2_small, ArchSpec, LayerSpec};
 pub use executor::{decode_test_images, Datapath, Executor, Tensor};
 pub use network::{ConvKind, Network, Op};
-pub use plan::{ConvGeom, ConvPlan, IoGeom, Multipliers, NetworkPlan, PlanOp, PlanShard};
+pub use plan::{ConvGeom, ConvPlan, IoGeom, Multipliers, NetworkPlan, PlanOp, PlanShard, PruneInfo};
+pub use prune::PruneSpec;
 pub use scratch::{Scratch, ScratchPool};

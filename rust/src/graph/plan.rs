@@ -35,6 +35,7 @@
 use crate::fabric::lutmul::ConstMultiplier;
 
 use super::network::{ConvKind, Network, Op};
+use super::prune::PruneSpec;
 
 /// Multiply datapath selection.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -112,8 +113,9 @@ pub enum Multipliers {
     /// Per-multiplier product tables read out of the same LUT6_2
     /// primitives once at plan-build time, laid out **activation-major
     /// (column-major)**: `products[(col * acts + act) * cout + row]`,
-    /// where `cout` is the weight-row count (`ConvGeom::cout` for every
-    /// conv kind). Fixing a weight column and an activation code yields
+    /// where `cout` is the weight-row count (`ConvPlan::rows()` — the
+    /// live rows of a pruned plan, `ConvGeom::cout` otherwise).
+    /// Fixing a weight column and an activation code yields
     /// one *contiguous* `cout`-wide product column, so the conv kernels
     /// hoist the activation lookup per (tap, ci) and accumulate the
     /// whole output-channel vector with a vectorizable axpy — the
@@ -154,6 +156,29 @@ enum TableMode {
     ActMajor,
 }
 
+/// Compaction record of a structurally pruned conv (DESIGN.md S23).
+/// When present, the plan's weight matrix, transpose and product tables
+/// cover only the **live** rows/columns: `wflat` is
+/// `[live_rows.len()][live_cols.len()]` and every kernel index below
+/// `rows()`/`cols` is a *compacted* index that this struct maps back to
+/// the dense channel/column space.
+#[derive(Debug, Clone)]
+pub struct PruneInfo {
+    /// Surviving output channels, ascending dense indices
+    /// (`live_rows[r]` is the dense channel of compacted row `r`).
+    pub live_rows: Vec<usize>,
+    /// Pruned output channels with their constant output code: a fully
+    /// masked channel accumulates 0, so its quantized output is
+    /// `threshold(0, ch)` — a per-channel constant the sparse kernels
+    /// splat instead of computing.
+    pub pruned_rows: Vec<(usize, i32)>,
+    /// Surviving weight columns (tap x cin for std/pw, taps for
+    /// depthwise), ascending dense indices.
+    pub live_cols: Vec<usize>,
+    /// Column count of the dense (unpruned) weight matrix.
+    pub dense_cols: usize,
+}
+
 /// One convolution lowered into flat, hot-loop-ready state.
 #[derive(Debug, Clone)]
 pub struct ConvPlan {
@@ -161,15 +186,18 @@ pub struct ConvPlan {
     pub kind: ConvKind,
     pub geom: ConvGeom,
     /// Row-major `[rows][cols]` flattened weight codes
-    /// (`[COUT][K*K*CIN]` for std/pw, `[C][K*K]` for depthwise).
+    /// (`[COUT][K*K*CIN]` for std/pw, `[C][K*K]` for depthwise; the
+    /// **live** rows/columns only when [`prune`](Self::prune) is set).
     pub wflat: Vec<i32>,
     /// `wflat` transposed, column-major `[cols][rows]`
-    /// (`wflat_t[col * cout + row]`): the batch-major arithmetic conv
-    /// body (DESIGN.md S22) reads one contiguous `cout`-wide weight
+    /// (`wflat_t[col * rows() + row]`): the batch-major arithmetic conv
+    /// body (DESIGN.md S22) reads one contiguous row-count-wide weight
     /// column per (tap, ci) and scales it into every image's
     /// accumulator — the same access shape the activation-major LUT
     /// tables give the LUT datapath.
     pub wflat_t: Vec<i32>,
+    /// Weight columns per row — the live column count under pruning
+    /// (the dense count is `prune`'s `dense_cols`).
     pub cols: usize,
     pub mults: Multipliers,
     /// Row-major `[cout][levels]` flattened thresholds.
@@ -194,6 +222,11 @@ pub struct ConvPlan {
     /// so the widest tile across layers is a multiple of every
     /// layer's tile (worker chunk alignment, `Executor::run_batch_into`).
     pub batch_tile: usize,
+    /// Structured-pruning compaction record (DESIGN.md S23). `None` for
+    /// a dense plan; when set, the kernels dispatch to the sparse
+    /// bodies in `graph::kernels` that sweep only the live rows/columns
+    /// and splat the pruned channels' constant codes.
+    pub prune: Option<PruneInfo>,
 }
 
 /// Batch-tile width for a layer with `cout` output channels (see
@@ -210,7 +243,7 @@ fn batch_tile_for(cout: usize) -> usize {
 }
 
 impl ConvPlan {
-    fn build(op: &Op, in_hw: usize, datapath: Datapath, mode: TableMode) -> Self {
+    fn build(op: &Op, in_hw: usize, datapath: Datapath, mode: TableMode, spec: Option<&PruneSpec>) -> Self {
         let Op::Conv {
             name,
             kind,
@@ -232,7 +265,34 @@ impl ConvPlan {
         };
         let (k, stride, pad) = (*k, *stride, *pad);
         let geom = ConvGeom { in_h: in_hw, in_w: in_hw, cin: *cin, cout: *cout, k, stride, pad };
-        let cols = w_codes[0].len();
+        let dense_cols = w_codes[0].len();
+        // Structured pruning (DESIGN.md S23): resolve the keep-masks and
+        // compact the weight matrix to the live rows/columns BEFORE the
+        // multiplier array is built, so the LUT product tables, wflat_t
+        // and the batch-major sweeps only ever see live work. Thresholds
+        // and geometry stay full-width: pruned channels still occupy
+        // their output slot, holding the constant code `threshold(0, ch)`.
+        let masks = spec.and_then(|s| s.resolve(op));
+        let (live_rows, live_cols): (Vec<usize>, Vec<usize>) = match &masks {
+            Some((rm, cm)) => (
+                rm.iter().enumerate().filter(|&(_, &b)| b).map(|(i, _)| i).collect(),
+                cm.iter().enumerate().filter(|&(_, &b)| b).map(|(i, _)| i).collect(),
+            ),
+            None => ((0..geom.cout).collect(), (0..dense_cols).collect()),
+        };
+        let pruned = live_rows.len() < geom.cout || live_cols.len() < dense_cols;
+        let compact: Vec<Vec<i32>>;
+        let wmat: &[Vec<i32>] = if pruned {
+            compact = live_rows
+                .iter()
+                .map(|&r| live_cols.iter().map(|&c| w_codes[r][c]).collect())
+                .collect();
+            &compact
+        } else {
+            w_codes
+        };
+        let rows = wmat.len();
+        let cols = wmat[0].len();
         // The Figure 5 embedding addresses activations with the weight's
         // bit count, so the LUT path additionally needs in_bits <=
         // w_bits: a wider activation code would index past a multiplier's
@@ -241,7 +301,7 @@ impl ConvPlan {
         // DSP-packed 8-bit first/last layers.
         let lut_ok = *w_bits <= 4 && *in_bits <= 4 && *in_bits <= *w_bits;
         let mults = if datapath == Datapath::LutFabric && lut_ok {
-            Self::lut_multipliers(w_codes, *w_bits, mode)
+            Self::lut_multipliers(wmat, *w_bits, mode)
         } else {
             Multipliers::Weights
         };
@@ -257,19 +317,20 @@ impl ConvPlan {
                  ({row:?}); the count-based quantizer would silently miscount"
             );
         }
-        // Column-major transpose of the weight matrix; the weight-row
-        // count is geom.cout for every conv kind (C for depthwise).
-        let mut wflat_t = vec![0i32; geom.cout * cols];
-        for (row, codes) in w_codes.iter().enumerate() {
+        // Column-major transpose of the (possibly compacted) weight
+        // matrix; the weight-row count is the live-row count — geom.cout
+        // for a dense plan (C for depthwise).
+        let mut wflat_t = vec![0i32; rows * cols];
+        for (row, codes) in wmat.iter().enumerate() {
             for (col, &w) in codes.iter().enumerate() {
-                wflat_t[col * geom.cout + row] = w;
+                wflat_t[col * rows + row] = w;
             }
         }
-        Self {
+        let mut plan = Self {
             name: name.clone(),
             kind: *kind,
             geom,
-            wflat: w_codes.iter().flatten().copied().collect(),
+            wflat: wmat.iter().flatten().copied().collect(),
             wflat_t,
             cols,
             mults,
@@ -281,7 +342,25 @@ impl ConvPlan {
             oy_interior: geom.interior(geom.out_h(), geom.in_h),
             ox_interior: geom.interior(geom.out_w(), geom.in_w),
             batch_tile: batch_tile_for(geom.cout),
+            prune: pruned.then(|| PruneInfo {
+                live_rows: live_rows.clone(),
+                pruned_rows: Vec::new(), // needs the plan's thresholds; filled below
+                live_cols,
+                dense_cols,
+            }),
+        };
+        if let Some((row_mask, _)) = &masks {
+            let constant_rows: Vec<(usize, i32)> = row_mask
+                .iter()
+                .enumerate()
+                .filter(|&(_, &keep)| !keep)
+                .map(|(ch, _)| (ch, plan.threshold(0, ch)))
+                .collect();
+            if let Some(p) = plan.prune.as_mut() {
+                p.pruned_rows = constant_rows;
+            }
         }
+        plan
     }
 
     /// Embed the layer's weights into LUT6_2 multipliers (two weights per
@@ -347,9 +426,20 @@ impl ConvPlan {
         }
     }
 
+    /// Weight-row count of the compiled multiplier array: the live
+    /// output channels of a pruned plan, `geom.cout` otherwise (the
+    /// weight-row count for every conv kind). Kernel row indices below
+    /// this are compacted; `PruneInfo::live_rows` maps them back to
+    /// dense channels.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.prune.as_ref().map_or(self.geom.cout, |p| p.live_rows.len())
+    }
+
     /// Product `w[row][col] * act` through the plan's multiplier array.
-    /// (The activation-major table is indexed with `geom.cout` as the
-    /// row count — the weight-row count for every conv kind.)
+    /// (`row`/`col` are compacted indices on a pruned plan; the
+    /// activation-major table is indexed with [`rows`](Self::rows) as
+    /// the row count.)
     #[inline]
     pub fn mul(&self, row: usize, col: usize, act: i32) -> i32 {
         match &self.mults {
@@ -359,7 +449,7 @@ impl ConvPlan {
                 mults[row * pairs + col / 2].eval(col % 2 == 1, act as u32)
             }
             Multipliers::LutTables { products, acts, .. } => {
-                products[(col * acts + act as usize) * self.geom.cout + row]
+                products[(col * acts + act as usize) * self.rows() + row]
             }
             Multipliers::LutTablesMacMajor { products, acts, .. } => {
                 products[(row * self.cols + col) * acts + act as usize]
@@ -394,9 +484,17 @@ impl ConvPlan {
     }
 
     /// Multiply-accumulates per image — the balance weight
-    /// [`NetworkPlan::shard_evenly`] cuts by.
+    /// [`NetworkPlan::shard_evenly`] cuts by. Counts live work only:
+    /// pruned rows/columns cost neither cycles nor LUTs.
     pub fn macs(&self) -> u64 {
-        self.geom.out_pixels() as u64 * self.geom.cout as u64 * self.cols as u64
+        self.geom.out_pixels() as u64 * self.rows() as u64 * self.cols as u64
+    }
+
+    /// Dense (unpruned) multiply-accumulates per image — the
+    /// denominator of a pruned layer's savings ratio.
+    pub fn dense_macs(&self) -> u64 {
+        let dense_cols = self.prune.as_ref().map_or(self.cols, |p| p.dense_cols);
+        self.geom.out_pixels() as u64 * self.geom.cout as u64 * dense_cols as u64
     }
 }
 
@@ -447,7 +545,7 @@ impl NetworkPlan {
     /// primitives into activation-major tables
     /// ([`Multipliers::LutTables`]).
     pub fn compile(net: &Network, datapath: Datapath) -> Self {
-        Self::lower(net, datapath, TableMode::ActMajor)
+        Self::lower(net, datapath, TableMode::ActMajor, None)
     }
 
     /// Like [`compile`](Self::compile), but `LutFabric` layers keep the
@@ -455,7 +553,7 @@ impl NetworkPlan {
     /// memoized tables — the pre-compilation baseline the bench and the
     /// equivalence tests run against.
     pub fn compile_direct(net: &Network, datapath: Datapath) -> Self {
-        Self::lower(net, datapath, TableMode::Direct)
+        Self::lower(net, datapath, TableMode::Direct, None)
     }
 
     /// Like [`compile`](Self::compile), but memoized tables keep the
@@ -463,10 +561,34 @@ impl NetworkPlan {
     /// pre-activation-major baseline `benches/bench_kernels.rs` and
     /// `make kernel-smoke` gate the LUT-GEMM speedup against.
     pub fn compile_mac_major(net: &Network, datapath: Datapath) -> Self {
-        Self::lower(net, datapath, TableMode::MacMajor)
+        Self::lower(net, datapath, TableMode::MacMajor, None)
     }
 
-    fn lower(net: &Network, datapath: Datapath, mode: TableMode) -> Self {
+    /// Like [`compile`](Self::compile), with a structured-pruning pass
+    /// (DESIGN.md S23): every conv's weight matrix is compacted to the
+    /// rows/columns `spec` keeps before the multiplier array is built,
+    /// so the LUT product tables, `wflat_t` and the batch-major sweeps
+    /// touch only live work. A noop spec compiles the identical dense
+    /// plan. Bit-exact vs the dense compile of
+    /// `PruneSpec::masked_network` on every datapath and batch size
+    /// (tests/prune.rs).
+    pub fn compile_pruned(net: &Network, datapath: Datapath, spec: &PruneSpec) -> Self {
+        Self::lower(net, datapath, TableMode::ActMajor, (!spec.is_noop()).then_some(spec))
+    }
+
+    /// [`compile_direct`](Self::compile_direct) with a pruning pass —
+    /// the per-MAC readout witness over the compacted multipliers.
+    pub fn compile_pruned_direct(net: &Network, datapath: Datapath, spec: &PruneSpec) -> Self {
+        Self::lower(net, datapath, TableMode::Direct, (!spec.is_noop()).then_some(spec))
+    }
+
+    /// [`compile_mac_major`](Self::compile_mac_major) with a pruning
+    /// pass — the MAC-major table witness over the compacted matrix.
+    pub fn compile_pruned_mac_major(net: &Network, datapath: Datapath, spec: &PruneSpec) -> Self {
+        Self::lower(net, datapath, TableMode::MacMajor, (!spec.is_noop()).then_some(spec))
+    }
+
+    fn lower(net: &Network, datapath: Datapath, mode: TableMode, spec: Option<&PruneSpec>) -> Self {
         let mut hw = net.meta.image_size;
         let ops = net
             .ops
@@ -474,7 +596,7 @@ impl NetworkPlan {
             .map(|op| match op {
                 Op::Input { .. } => PlanOp::Input,
                 Op::Conv { .. } => {
-                    let plan = ConvPlan::build(op, hw, datapath, mode);
+                    let plan = ConvPlan::build(op, hw, datapath, mode, spec);
                     hw = plan.geom.out_h();
                     PlanOp::Conv(plan)
                 }
@@ -826,6 +948,7 @@ mod tests {
                 oy_interior: (0, 1),
                 ox_interior: (0, 1),
                 batch_tile: batch_tile_for(5),
+                prune: None,
             }
         };
         let (pd, pt, pm) = (plan_of(direct), plan_of(tables), plan_of(mac));
@@ -900,6 +1023,7 @@ mod tests {
             oy_interior: (0, 1),
             ox_interior: (0, 1),
             batch_tile: batch_tile_for(1),
+            prune: None,
         };
         let mut neg = plan.clone();
         neg.signs = vec![-1];
@@ -1061,5 +1185,44 @@ mod tests {
         assert!(matches!(narrowed.mults, Multipliers::Weights), "w2/a4 layer stays arithmetic");
         // 4/4 layers still map to LUTs
         assert!(plan.lut_count() > 0);
+    }
+
+    #[test]
+    fn pruned_compile_compacts_tables_and_saves_luts() {
+        use crate::graph::prune::PruneSpec;
+        let net = Network::synthetic(&mobilenet_v2_small(), 13);
+        let dense = NetworkPlan::compile(&net, Datapath::LutFabric);
+        let spec = PruneSpec::channels(0.5);
+        let pruned = NetworkPlan::compile_pruned(&net, Datapath::LutFabric, &spec);
+        assert!(pruned.lut_count() < dense.lut_count(), "compacted tables reclaim LUT6");
+        for (dp, pp) in dense.convs().zip(pruned.convs()) {
+            let info = pp.prune.as_ref().expect("every conv carries a PruneInfo at 50%");
+            // live + pruned rows partition the dense channel space
+            assert_eq!(info.live_rows.len() + info.pruned_rows.len(), pp.geom.cout);
+            assert!(info.live_rows.windows(2).all(|w| w[0] < w[1]), "live rows ascend");
+            assert!(info.live_rows.iter().enumerate().all(|(r, &ch)| ch >= r));
+            assert_eq!(pp.rows(), info.live_rows.len());
+            assert!(pp.rows() < pp.geom.cout, "{}: channels actually pruned", pp.name);
+            assert_eq!(info.dense_cols, dp.cols);
+            assert_eq!(pp.wflat.len(), pp.rows() * pp.cols);
+            assert_eq!(pp.wflat_t.len(), pp.wflat.len());
+            // compacted entries come from the dense matrix
+            for (r, &ch) in info.live_rows.iter().enumerate() {
+                for (c, &col) in info.live_cols.iter().enumerate() {
+                    assert_eq!(pp.wflat[r * pp.cols + c], dp.wflat[ch * dp.cols + col]);
+                    assert_eq!(pp.wflat_t[c * pp.rows() + r], pp.wflat[r * pp.cols + c]);
+                }
+            }
+            // pruned channels carry their constant code threshold(0, ch)
+            for &(ch, code) in &info.pruned_rows {
+                assert_eq!(code, dp.threshold(0, ch), "{} ch{ch}", pp.name);
+            }
+            assert!(pp.macs() < dp.macs());
+            assert_eq!(pp.dense_macs(), dp.macs());
+        }
+        // a noop spec compiles the identical dense plan
+        let noop = NetworkPlan::compile_pruned(&net, Datapath::LutFabric, &PruneSpec::default());
+        assert_eq!(noop.lut_count(), dense.lut_count());
+        assert!(noop.convs().all(|c| c.prune.is_none()));
     }
 }

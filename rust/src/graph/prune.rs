@@ -1,0 +1,251 @@
+//! Structured pruning specs for sparsity-aware plan compilation
+//! (DESIGN.md S23). A [`PruneSpec`] names which output channels and
+//! which weight columns (im2row taps x input channels) of each conv
+//! survive; `NetworkPlan::compile_pruned` consumes it to build
+//! compacted plans whose LUT tables and batch-major sweeps touch only
+//! live work, while [`PruneSpec::masked_network`] produces the dense
+//! witness — the same network with the pruned weights zeroed — that the
+//! pruned plan must match bit-for-bit (tests/prune.rs).
+//!
+//! Masks are resolved against the ORIGINAL network: magnitude ranking
+//! uses the unmasked weights, so a pruned compile and its masked dense
+//! reference always agree on which rows/columns were dropped.
+
+use std::collections::BTreeMap;
+
+use super::network::{Network, Op};
+
+/// What to prune, either by global magnitude fractions or by explicit
+/// per-layer masks (`true` = keep). Explicit masks win over the
+/// magnitude fractions for the layers they name; all other convs fall
+/// back to magnitude ranking.
+#[derive(Debug, Clone, Default)]
+pub struct PruneSpec {
+    /// Fraction of output channels to drop per conv, magnitude-ranked
+    /// by row L1 (ties broken by index, lowest pruned first). At least
+    /// one channel always survives.
+    pub channel_sparsity: f64,
+    /// Fraction of weight columns (tap x cin for std/pw, taps for
+    /// depthwise) to drop per conv, ranked by column L1 over the
+    /// surviving rows. At least one column always survives.
+    pub tap_sparsity: f64,
+    /// Explicit keep-mask per conv name, length `cout` — test injection
+    /// and hand-tuned schedules.
+    pub channel_masks: BTreeMap<String, Vec<bool>>,
+    /// Explicit keep-mask per conv name, length `cols`.
+    pub tap_masks: BTreeMap<String, Vec<bool>>,
+}
+
+impl PruneSpec {
+    /// Magnitude-based channel pruning at the given sparsity.
+    pub fn channels(channel_sparsity: f64) -> Self {
+        PruneSpec { channel_sparsity, ..Default::default() }
+    }
+
+    /// Magnitude-based channel + tap pruning.
+    pub fn channels_and_taps(channel_sparsity: f64, tap_sparsity: f64) -> Self {
+        PruneSpec { channel_sparsity, tap_sparsity, ..Default::default() }
+    }
+
+    /// Inject an explicit channel keep-mask for one conv (`true` = keep).
+    pub fn with_channel_mask(mut self, name: &str, mask: Vec<bool>) -> Self {
+        self.channel_masks.insert(name.to_string(), mask);
+        self
+    }
+
+    /// Inject an explicit column keep-mask for one conv (`true` = keep).
+    pub fn with_tap_mask(mut self, name: &str, mask: Vec<bool>) -> Self {
+        self.tap_masks.insert(name.to_string(), mask);
+        self
+    }
+
+    /// A spec that prunes nothing at all — `compile_pruned` with a noop
+    /// spec is exactly `compile`.
+    pub fn is_noop(&self) -> bool {
+        self.channel_sparsity <= 0.0
+            && self.tap_sparsity <= 0.0
+            && self.channel_masks.is_empty()
+            && self.tap_masks.is_empty()
+    }
+
+    /// Resolve the keep-masks for one conv op: `(row_mask, col_mask)`,
+    /// `true` = keep, lengths `cout` and `w_codes[0].len()`. Columns
+    /// that are all-zero across the surviving rows are always dropped
+    /// (their LUT table column is identically zero), independent of
+    /// `tap_sparsity`. Returns `None` for non-conv ops.
+    pub fn resolve(&self, op: &Op) -> Option<(Vec<bool>, Vec<bool>)> {
+        let Op::Conv { name, cout, w_codes, .. } = op else {
+            return None;
+        };
+        let rows = *cout;
+        let cols = w_codes[0].len();
+
+        let row_mask: Vec<bool> = match self.channel_masks.get(name) {
+            Some(m) => {
+                assert_eq!(m.len(), rows, "{name}: channel mask length != cout");
+                assert!(m.iter().any(|&b| b), "{name}: channel mask keeps no channels");
+                m.clone()
+            }
+            None => {
+                let l1 = |r: &Vec<i32>| r.iter().map(|&w| (w as i64).abs()).sum::<i64>();
+                magnitude_mask(self.channel_sparsity, &w_codes.iter().map(l1).collect::<Vec<_>>())
+            }
+        };
+
+        let col_l1 = |c: usize| -> i64 {
+            w_codes
+                .iter()
+                .enumerate()
+                .filter(|(r, _)| row_mask[*r])
+                .map(|(_, row)| (row[c] as i64).abs())
+                .sum()
+        };
+        let col_l1s: Vec<i64> = (0..cols).map(col_l1).collect();
+        let mut col_mask: Vec<bool> = match self.tap_masks.get(name) {
+            Some(m) => {
+                assert_eq!(m.len(), cols, "{name}: tap mask length != cols");
+                assert!(m.iter().any(|&b| b), "{name}: tap mask keeps no columns");
+                m.clone()
+            }
+            None => magnitude_mask(self.tap_sparsity, &col_l1s),
+        };
+        // zero-weight columns contribute nothing on any datapath: drop
+        // them even when the spec names only channels
+        for (c, keep) in col_mask.iter_mut().enumerate() {
+            if col_l1s[c] == 0 {
+                *keep = false;
+            }
+        }
+        if !col_mask.iter().any(|&b| b) {
+            col_mask[0] = true; // degenerate all-zero layer: keep one column
+        }
+        Some((row_mask, col_mask))
+    }
+
+    /// The dense witness: the same network with every pruned row zeroed
+    /// entirely and every pruned column zeroed in the surviving rows.
+    /// Compiled with the plain dense `NetworkPlan::compile*`, it must
+    /// produce bit-identical outputs to the pruned plan on every
+    /// datapath and batch size.
+    pub fn masked_network(&self, net: &Network) -> Network {
+        let mut masked = net.clone();
+        for op in &mut masked.ops {
+            // rank against the original weights, then zero the clone's
+            let Some((row_mask, col_mask)) = self.resolve(op) else {
+                continue;
+            };
+            let Op::Conv { w_codes, .. } = op else { unreachable!() };
+            for (r, row) in w_codes.iter_mut().enumerate() {
+                if !row_mask[r] {
+                    row.fill(0);
+                } else {
+                    for (c, w) in row.iter_mut().enumerate() {
+                        if !col_mask[c] {
+                            *w = 0;
+                        }
+                    }
+                }
+            }
+        }
+        masked
+    }
+}
+
+/// Keep-mask over `scores`: drop the `floor(sparsity * n)` lowest
+/// scores (ties broken by index), always keeping at least one entry.
+fn magnitude_mask(sparsity: f64, scores: &[i64]) -> Vec<bool> {
+    let n = scores.len();
+    let drop = ((sparsity.clamp(0.0, 1.0) * n as f64).floor() as usize).min(n.saturating_sub(1));
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&i| (scores[i], i));
+    let mut mask = vec![true; n];
+    for &i in &order[..drop] {
+        mask[i] = false;
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::network::ConvKind;
+
+    fn conv(name: &str, w_codes: Vec<Vec<i32>>) -> Op {
+        let cout = w_codes.len();
+        Op::Conv {
+            name: name.into(),
+            kind: ConvKind::Pw,
+            cin: w_codes[0].len(),
+            cout,
+            k: 1,
+            stride: 1,
+            pad: 0,
+            w_bits: 4,
+            in_bits: 4,
+            out_bits: 4,
+            w_codes,
+            thresholds: vec![(0..15).collect(); cout],
+            signs: vec![1; cout],
+            consts: vec![0; cout],
+            out_scale: 0.1,
+        }
+    }
+
+    #[test]
+    fn magnitude_mask_drops_lowest_and_keeps_one() {
+        assert_eq!(magnitude_mask(0.5, &[5, 1, 9, 2]), vec![true, false, true, false]);
+        assert_eq!(magnitude_mask(1.0, &[5, 1, 9]), vec![false, false, true]);
+        assert_eq!(magnitude_mask(0.0, &[5, 1]), vec![true, true]);
+    }
+
+    #[test]
+    fn resolve_ranks_rows_by_l1_and_drops_zero_columns() {
+        // row L1: 4, 0, 9 -> 50% drops floor(1.5)=1 row, the all-zero one.
+        // column 1 is zero across the survivors -> auto-dropped.
+        let op = conv("c", vec![vec![3, 0, -1], vec![0, 0, 0], vec![-4, 0, 5]]);
+        let (rm, cm) = PruneSpec::channels(0.5).resolve(&op).unwrap();
+        assert_eq!(rm, vec![true, false, true]);
+        assert_eq!(cm, vec![true, false, true]);
+    }
+
+    #[test]
+    fn explicit_masks_win_over_magnitude() {
+        let op = conv("c", vec![vec![9, 9], vec![1, 1]]);
+        let spec = PruneSpec::channels(0.5).with_channel_mask("c", vec![false, true]);
+        let (rm, _) = spec.resolve(&op).unwrap();
+        assert_eq!(rm, vec![false, true], "mask overrides magnitude ranking");
+    }
+
+    #[test]
+    fn masked_network_zeroes_pruned_rows_and_columns() {
+        let net = Network {
+            meta: crate::graph::network::Meta {
+                image_size: 1,
+                in_ch: 3,
+                num_classes: 2,
+                in_scale: 1.0,
+                w_bits: 4,
+                a_bits: 4,
+                acc_int: 0.0,
+                n_test: 0,
+                golden_logits: vec![],
+            },
+            ops: vec![conv("c", vec![vec![3, 2, -1], vec![1, 0, 0]])],
+        };
+        let spec = PruneSpec::channels(0.5).with_tap_mask("c", vec![true, false, true]);
+        let masked = spec.masked_network(&net);
+        let Op::Conv { w_codes, .. } = &masked.ops[0] else { unreachable!() };
+        assert_eq!(w_codes[0], vec![3, 0, -1], "pruned column zeroed in surviving row");
+        assert_eq!(w_codes[1], vec![0, 0, 0], "pruned row zeroed entirely");
+    }
+
+    #[test]
+    fn noop_spec_resolves_to_all_keep() {
+        let spec = PruneSpec::default();
+        assert!(spec.is_noop());
+        let op = conv("c", vec![vec![1, 2], vec![3, 4]]);
+        let (rm, cm) = spec.resolve(&op).unwrap();
+        assert!(rm.iter().all(|&b| b) && cm.iter().all(|&b| b));
+        assert!(!PruneSpec::channels(0.5).is_noop());
+    }
+}

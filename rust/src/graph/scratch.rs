@@ -17,6 +17,12 @@
 //! `tests/kernels_arena.rs` deliberately poisons arenas with
 //! [`Scratch::dirty`] and asserts bit-exactness against the
 //! fresh-allocation path.
+//!
+//! Footprints are sized from the plan's **full-width** geometry
+//! (`ConvGeom::cout`), never from a pruned plan's compacted row count:
+//! a structurally pruned plan (DESIGN.md S23) still produces full-width
+//! activation tensors (pruned channels hold their constant code), so
+//! the same arena serves a plan and its pruned variants interchangeably.
 
 use super::plan::{NetworkPlan, PlanOp};
 

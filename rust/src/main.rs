@@ -61,14 +61,17 @@ COMMANDS:
          tail-latency table; --smoke runs calibrated steady/burst/shed
          phases and fails on lost requests, reordering, missing deadline
          sheds, or a blown p99 (EXPERIMENTS.md E14)
-  bench  [--backends all|LIST] [--n N] [--devices N] [--json]
+  bench  [--backends all|LIST] [--n N] [--devices N] [--json] [--sparsity S]
          run every available engine backend (executor, pipeline, sharded
          chains, PJRT when loadable) on the same inputs and print a
          bit-exactness + throughput comparison; LIST is comma-joined
          reference|pipeline|sharded|pjrt. --json emits one machine-
          readable {backend, datapath, images_per_s, ns_per_image,
          bit_exact} row per backend on stdout (human table moves to
-         stderr) — `make bench-json` writes it to BENCH_kernels.json
+         stderr) — `make bench-json` writes it to BENCH_kernels.json.
+         --sparsity S adds a structurally pruned compile at channel
+         sparsity S plus its masked-dense witness (rows carry a
+         \"sparsity\" field in the JSON)
   synth  [--arch full|small] [--fraction D]
   util   [--arch full|small]          Vivado-style utilization report
   netlist [--layer NAME]              structural Verilog for a trained layer
@@ -76,7 +79,11 @@ COMMANDS:
          analytic multi-FPGA plan; --run executes the sharded chain on the
          small network (trained artifacts when built, its synthetic twin
          otherwise) and prints measured-vs-modeled FPS
-  report <table1|fig1|fig2|fig6|table2|multi>
+  report <table1|fig1|fig2|fig6|table2|multi|prune>
+         prune [--sparsity S] [--fold F] [--n N]: per-layer LUT-area and
+         cycle savings of a structurally pruned compile, with the
+         simulated pruned pipeline cross-checked against the analytic
+         steady-state FPS and the masked-dense executor (DESIGN.md S23)
 
 Malformed flag values and unknown flags are hard errors.
 ";
@@ -192,13 +199,17 @@ fn main() -> Result<()> {
             loadgen_cmd(&artifacts, &args)
         }
         Some("bench") => {
-            args.check_flags("bench", &["artifacts", "backends", "n", "devices", "json"])?;
+            args.check_flags(
+                "bench",
+                &["artifacts", "backends", "n", "devices", "json", "sparsity"],
+            )?;
             bench_backends(
                 &artifacts,
                 &args.get::<String>("backends", "all".into())?,
                 args.get("n", 8usize)?,
                 args.get("devices", 2usize)?,
                 args.has("json"),
+                args.get("sparsity", 0.0f64)?,
             )
         }
         Some("synth") => {
@@ -222,9 +233,9 @@ fn main() -> Result<()> {
             }
         }
         Some("report") => {
-            args.check_flags("report", &["artifacts"])?;
+            args.check_flags("report", &["artifacts", "sparsity", "fold", "n"])?;
             let what = args.positional.get(1).cloned().unwrap_or_default();
-            report(&artifacts, &what)
+            report(&artifacts, &what, &args)
         }
         Some(other) => {
             print!("{USAGE}");
@@ -581,7 +592,12 @@ fn bench_backends(
     n: usize,
     devices: usize,
     json: bool,
+    sparsity: f64,
 ) -> Result<()> {
+    anyhow::ensure!(
+        (0.0..1.0).contains(&sparsity),
+        "--sparsity must be in [0, 1), got {sparsity}"
+    );
     // human-readable lines: stdout normally, stderr under --json so the
     // JSON document is the only thing on stdout
     macro_rules! say {
@@ -606,15 +622,16 @@ fn bench_backends(
         io.in_ch
     );
 
-    // machine-readable rows: (backend, datapath, img/s, bit-exact)
-    let mut rows: Vec<(String, String, f64, bool)> = Vec::new();
+    // machine-readable rows: (backend, datapath, img/s, bit-exact,
+    // sparsity — 0.0 for the dense rows, S for the pruned pair)
+    let mut rows: Vec<(String, String, f64, bool, f64)> = Vec::new();
 
     // the reference logits every other backend must reproduce
     let t0 = std::time::Instant::now();
     let reference = engine.infer_batch(&images)?;
     let ref_ips = n as f64 / t0.elapsed().as_secs_f64();
     say!("  {:<22} {ref_ips:>9.0} img/s | reference", engine.backend_name());
-    rows.push((engine.backend_name().to_string(), "arithmetic".into(), ref_ips, true));
+    rows.push((engine.backend_name().to_string(), "arithmetic".into(), ref_ips, true, 0.0));
 
     // the user's device count is used as given — out of range is a hard
     // error, not a silent clamp (same contract as the flag parser), but
@@ -674,7 +691,7 @@ fn bench_backends(
                 "  {shown:<22} {ips:>9.0} img/s | {}{cycles}",
                 if exact { format!("bit-exact {n}/{n}") } else { "DIVERGED".into() },
             );
-            rows.push((shown.to_string(), datapath.to_string(), ips, exact));
+            rows.push((shown.to_string(), datapath.to_string(), ips, exact, 0.0));
             Ok(())
         };
 
@@ -749,14 +766,62 @@ fn bench_backends(
         ran += 1;
     }
 
+    // structurally pruned pair (DESIGN.md S23 / EXPERIMENTS.md E16): the
+    // pruned compile's logits are compared against a DENSE compile of the
+    // same network with the mask zeroed into its weights — not the
+    // unpruned reference, whose logits legitimately differ once channels
+    // are dropped. Both rows carry the sparsity so the regression
+    // tracker keys them apart from the dense trajectory.
+    if sparsity > 0.0 {
+        use lutmul::graph::PruneSpec;
+        let threads = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+        let spec = PruneSpec::channels(sparsity);
+        let masked_plan =
+            NetworkPlan::compile(&spec.masked_network(engine.net()), Datapath::LutFabric);
+        let pruned_plan = NetworkPlan::compile_pruned(engine.net(), Datapath::LutFabric, &spec);
+        let density = pruned_plan.convs().map(|c| c.macs()).sum::<u64>() as f64
+            / pruned_plan.convs().map(|c| c.dense_macs()).sum::<u64>().max(1) as f64;
+
+        let mut mb = ExecutorBackend::new(std::sync::Arc::new(masked_plan), threads);
+        let t0 = std::time::Instant::now();
+        let masked_out = mb.infer_batch(&images)?;
+        let masked_ips = n as f64 / t0.elapsed().as_secs_f64();
+        say!(
+            "  {:<22} {masked_ips:>9.0} img/s | masked-dense witness (sparsity {sparsity:.2})",
+            "executor/lut-masked"
+        );
+        rows.push(("executor/lut-masked".into(), "lut-fabric".into(), masked_ips, true, sparsity));
+
+        let mut pb = ExecutorBackend::new(std::sync::Arc::new(pruned_plan), threads);
+        let t0 = std::time::Instant::now();
+        let pruned_out = pb.infer_batch(&images)?;
+        let pruned_ips = n as f64 / t0.elapsed().as_secs_f64();
+        let exact = pruned_out.logits == masked_out.logits;
+        compared += 1;
+        if !exact {
+            diverged += 1;
+        }
+        say!(
+            "  {:<22} {pruned_ips:>9.0} img/s | {} | {:.2}x vs masked-dense at density {density:.3}",
+            "executor/lut-sparse",
+            if exact { format!("bit-exact {n}/{n} vs masked-dense") } else { "DIVERGED".into() },
+            pruned_ips / masked_ips.max(1e-9),
+        );
+        rows.push(("executor/lut-sparse".into(), "lut-fabric".into(), pruned_ips, exact, sparsity));
+        ran += 1;
+    }
+
     if json {
         let body: Vec<String> = rows
             .iter()
-            .map(|(backend, datapath, ips, exact)| {
+            .map(|(backend, datapath, ips, exact, sp)| {
+                // dense rows omit the field so historical BENCH_kernels
+                // baselines keep matching key-for-key
+                let sparse = if *sp > 0.0 { format!(", \"sparsity\": {sp:.2}") } else { String::new() };
                 format!(
                     "    {{\"backend\": {backend:?}, \"datapath\": {datapath:?}, \
                      \"images_per_s\": {ips:.1}, \"ns_per_image\": {:.0}, \
-                     \"bit_exact\": {exact}}}",
+                     \"bit_exact\": {exact}{sparse}}}",
                     1e9 / ips.max(1e-9)
                 )
             })
@@ -958,7 +1023,7 @@ fn multi_run(artifacts: &Artifacts, devices: usize, n: usize) -> Result<()> {
     Ok(())
 }
 
-fn report(artifacts: &Artifacts, what: &str) -> Result<()> {
+fn report(artifacts: &Artifacts, what: &str, args: &Args) -> Result<()> {
     match what {
         "table1" => lutmul::reports::table1(),
         "fig1" => lutmul::reports::fig1(),
@@ -966,7 +1031,16 @@ fn report(artifacts: &Artifacts, what: &str) -> Result<()> {
         "fig6" => lutmul::reports::fig6(),
         "table2" => lutmul::reports::table2(),
         "multi" => lutmul::reports::multi_scaling(),
-        other => anyhow::bail!("unknown report '{other}'; try table1|fig1|fig2|fig6|table2|multi"),
+        "prune" => {
+            return lutmul::reports::prune(
+                args.get("sparsity", 0.5f64)?,
+                args.get("fold", 8usize)?,
+                args.get("n", 6usize)?,
+            )
+        }
+        other => {
+            anyhow::bail!("unknown report '{other}'; try table1|fig1|fig2|fig6|table2|multi|prune")
+        }
     }
     Ok(())
 }

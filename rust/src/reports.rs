@@ -4,8 +4,11 @@
 
 use crate::baselines;
 use crate::dataflow::multi::{partition, LinkModel};
+use crate::dataflow::{FoldConfig, Pipeline};
+use crate::fabric::cost::layer_lut_area;
 use crate::fabric::device::{u280_datasheet_int8_tops, U280, V100};
-use crate::graph::mobilenet_v2_full;
+use crate::graph::plan::{Datapath, NetworkPlan};
+use crate::graph::{mobilenet_v2_full, mobilenet_v2_small, Executor, Network, Op, PruneSpec, Tensor};
 use crate::roofline;
 use crate::synth::breakdown::{fig6_breakdown, Fig6Published};
 use crate::synth::design::Design;
@@ -250,4 +253,137 @@ pub fn table2() {
         baselines::lutmul_published().fps / finn.fps,
         style.fps() / finn.fps
     );
+}
+
+/// `lutmul report prune` (DESIGN.md S23 / EXPERIMENTS.md E16): per-layer
+/// LUT-area and cycle savings of a structurally pruned compile of the
+/// synthetic MobileNetV2-small network. Two cross-checks close the loop:
+/// the analytic steady-state FPS of the pruned pipeline must agree with
+/// the simulated one (within 15% once the pipeline is warm), and the
+/// pruned pipeline's logits must be bit-exact against a *dense* compile
+/// of the same network with the prune mask zeroed into its weights.
+pub fn prune(sparsity: f64, fold: usize, n: usize) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        (0.0..1.0).contains(&sparsity),
+        "--sparsity must be in [0, 1), got {sparsity}"
+    );
+    let net = Network::synthetic(&mobilenet_v2_small(), 0x5EED);
+    let spec = PruneSpec::channels(sparsity);
+    let dense = NetworkPlan::compile(&net, Datapath::LutFabric);
+    let pruned = NetworkPlan::compile_pruned(&net, Datapath::LutFabric, &spec);
+    let w_bits: Vec<u32> = net
+        .ops
+        .iter()
+        .filter_map(|op| match op {
+            Op::Conv { w_bits, .. } => Some(*w_bits),
+            _ => None,
+        })
+        .collect();
+    let base = FoldConfig::uniform(dense.n_convs(), fold);
+    let rescaled = base.rescaled_for(&pruned);
+
+    println!(
+        "Structured pruning: synthetic MobileNetV2-small, magnitude channel sparsity {sparsity:.2}, LUT-fabric datapath"
+    );
+    println!(
+        "{:<12}{:>11}{:>13}{:>14}{:>17}{:>9}{:>15}",
+        "layer", "rows", "cols", "LUT6 tables", "LUT area(impl)", "fold", "pixel cycles"
+    );
+    let (mut area_dense, mut area_pruned) = (0.0f64, 0.0f64);
+    for (i, (dc, pc)) in dense.convs().zip(pruned.convs()).enumerate() {
+        let bits = w_bits[i];
+        let (fd, fp) = (base.folds[i], rescaled.folds[i]);
+        let ad = layer_lut_area(bits, dc.geom.cout, dc.cols);
+        let ap = layer_lut_area(bits, pc.rows(), pc.cols);
+        area_dense += ad;
+        area_pruned += ap;
+        println!(
+            "{:<12}{:>11}{:>13}{:>14}{:>17}{:>9}{:>15}",
+            dc.name,
+            format!("{}->{}", dc.geom.cout, pc.rows()),
+            format!("{}->{}", dc.cols, pc.cols),
+            format!("{}->{}", dc.lut_count(), pc.lut_count()),
+            format!("{:.0}->{:.0}", ad, ap),
+            format!("{fd}->{fp}"),
+            format!(
+                "{}->{}",
+                dc.geom.out_pixels() * fd,
+                pc.geom.out_pixels() * fp
+            ),
+        );
+    }
+
+    let live: u64 = pruned.convs().map(|c| c.macs()).sum();
+    let full: u64 = pruned.convs().map(|c| c.dense_macs()).sum();
+    let density = live as f64 / full.max(1) as f64;
+    println!(
+        "totals: {live}/{full} live MACs (density {density:.3}) | LUT area {area_dense:.0} -> {area_pruned:.0} ({:+.1}%)",
+        100.0 * (area_pruned - area_dense) / area_dense.max(1.0),
+    );
+    let slice = U280.fraction(64);
+    let f_hz = 333e6;
+    println!(
+        "roofline (1/64 U280, W4A4): dense peak {:.1} GOPS -> effective {:.1} GOPS at density {density:.3}",
+        roofline::lutmul_peak(&slice, 4, f_hz) / 1e9,
+        roofline::lutmul_peak_pruned(&slice, 4, f_hz, density) / 1e9,
+    );
+
+    // the executable cross-check: fold-rescaled pruned pipeline vs the
+    // dense one, analytic steady-state vs simulated incremental interval
+    let freq_mhz = 333.0;
+    let dense_pipe = Pipeline::from_plan(&dense, &base, 16);
+    let mut pruned_pipe = Pipeline::from_plan(&pruned, &rescaled, 16);
+    println!(
+        "pipeline steady-state: dense {} cycles/img ({:.0} FPS) -> pruned {} cycles/img ({:.0} FPS @{freq_mhz:.0}MHz)",
+        dense_pipe.steady_cycles(),
+        freq_mhz * 1e6 / dense_pipe.steady_cycles().max(1) as f64,
+        pruned_pipe.steady_cycles(),
+        freq_mhz * 1e6 / pruned_pipe.steady_cycles().max(1) as f64,
+    );
+
+    let n = n.max(2);
+    let (hw, ch) = (net.meta.image_size, net.meta.in_ch);
+    let amax = 1i64 << net.meta.a_bits.max(1);
+    let mut s = 0x0123_4567_89ab_cdefu64;
+    let images: Vec<Vec<i32>> = (0..n)
+        .map(|_| {
+            (0..hw * hw * ch)
+                .map(|_| {
+                    s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+                    ((s >> 40) as i64).rem_euclid(amax) as i32
+                })
+                .collect()
+        })
+        .collect();
+    let report = pruned_pipe.run(&images)?;
+    let analytic = report.steady_state_fps(freq_mhz);
+    let measured = freq_mhz * 1e6 / report.incremental_cycles_per_image().max(1) as f64;
+    println!(
+        "simulated pruned pipeline: {n} images | incremental {} cycles/img | measured {measured:.0} FPS vs analytic {analytic:.0} FPS | ratio {:.3}",
+        report.incremental_cycles_per_image(),
+        measured / analytic,
+    );
+    if n >= 4 {
+        anyhow::ensure!(
+            (measured / analytic - 1.0).abs() <= 0.15,
+            "simulated FPS {measured:.0} deviates more than 15% from the analytic {analytic:.0}"
+        );
+        println!("  within 15% of the analytic model: OK");
+    }
+
+    // bit-exactness: the pruned pipeline must reproduce the dense compile
+    // of the network with the same mask zeroed into its weights
+    let masked = Executor::from_plan(NetworkPlan::compile(
+        &spec.masked_network(&net),
+        Datapath::LutFabric,
+    ));
+    let tensors: Vec<Tensor> =
+        images.iter().map(|v| Tensor::from_hwc(hw, hw, ch, v.clone())).collect();
+    let want = masked.run_batch_with_threads(&tensors, 1);
+    anyhow::ensure!(
+        report.logits == want,
+        "pruned pipeline diverged from the masked-dense executor"
+    );
+    println!("bit-exact vs masked-dense executor: {n}/{n} images");
+    Ok(())
 }

@@ -45,6 +45,17 @@ pub fn lutmul_luts_per_mac(bits: u32) -> f64 {
     rom + adder
 }
 
+/// LUTMUL peak for a structurally pruned network (DESIGN.md S23):
+/// pruning keeps only `density` of the MACs, so the *effective*
+/// throughput per model pass rises by `1/density` — the pruned model's
+/// dense-equivalent ops fit in proportionally fewer LUT-mapped MACs, or
+/// equivalently the reclaimed LUT budget hosts more parallel live MACs.
+/// `density` is live work over dense work (`ConvPlan::macs()` summed /
+/// `dense_macs()` summed), clamped away from zero.
+pub fn lutmul_peak_pruned(slice: &FpgaSlice, bits: u32, freq_hz: f64, density: f64) -> f64 {
+    lutmul_peak(slice, bits, freq_hz) / density.clamp(1e-6, 1.0)
+}
+
 /// Eq. (2)-style memory roof: attainable ops/s at arithmetic intensity
 /// `ai` (ops/byte) with bandwidth `bw` (bytes/s).
 pub fn memory_roof(bw_bytes_per_s: f64, ai: f64) -> f64 {
@@ -164,6 +175,19 @@ mod tests {
             let max = c.points.iter().map(|p| p.1).fold(0.0, f64::max);
             assert!((max - c.peak_gops).abs() / c.peak_gops < 1e-9);
         }
+    }
+
+    #[test]
+    fn pruned_peak_scales_inverse_with_density() {
+        let slice = U280.fraction(64);
+        let f = 333e6;
+        let dense = lutmul_peak(&slice, 4, f);
+        assert_eq!(lutmul_peak_pruned(&slice, 4, f, 1.0), dense);
+        let half = lutmul_peak_pruned(&slice, 4, f, 0.5);
+        assert!((half - 2.0 * dense).abs() < 1e-6 * dense, "50% density doubles the peak");
+        // degenerate densities stay finite and never fall below dense
+        assert!(lutmul_peak_pruned(&slice, 4, f, 0.0).is_finite());
+        assert!(lutmul_peak_pruned(&slice, 4, f, 2.0) >= dense);
     }
 
     #[test]

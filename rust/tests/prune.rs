@@ -1,0 +1,208 @@
+//! Structured-pruning conformance suite (DESIGN.md S23, no artifacts
+//! needed): a plan compiled with a `PruneSpec` must be bit-identical to
+//! the *dense* compile of the same network with the mask zeroed into
+//! its weights — on randomized synthetic networks, across every
+//! datapath (arithmetic weights, per-MAC LUT6_2 readout, activation-
+//! major tables, MAC-major tables), every batch size in 1..=17 and both
+//! batch drivers. The dataflow simulator runs the same pruned plans
+//! with fold-rescaled stages: its logits must match too, and its
+//! measured steady-state throughput must agree with the analytic model.
+
+mod common;
+
+use lutmul::dataflow::{FoldConfig, Pipeline};
+use lutmul::graph::executor::{Datapath, Executor, Tensor};
+use lutmul::graph::network::{Network, Op};
+use lutmul::graph::plan::NetworkPlan;
+use lutmul::graph::{PruneSpec, ScratchPool};
+use lutmul::util::prop::{self, Rng};
+
+fn tensors_for(rng: &mut Rng, net: &Network, n: usize) -> Vec<Tensor> {
+    let (s, c) = (net.meta.image_size, net.meta.in_ch);
+    common::random_images(rng, net, n)
+        .into_iter()
+        .map(|d| Tensor::from_hwc(s, s, c, d))
+        .collect()
+}
+
+/// A rotation of prune specs covering the spec surface: pure channel
+/// sparsity at two densities, joint channel+tap sparsity, and an
+/// explicit per-layer mask injected by name (the test-harness hook).
+fn spec_for(rng: &mut Rng, net: &Network) -> PruneSpec {
+    match rng.below(4) {
+        0 => PruneSpec::channels(0.25),
+        1 => PruneSpec::channels(0.5),
+        2 => PruneSpec::channels_and_taps(0.5, 0.25),
+        _ => {
+            // explicit masks on the first 4-bit conv: keep alternate
+            // output channels and drop the final weight column
+            let mut spec = PruneSpec::channels(0.25);
+            for op in &net.ops {
+                if let Op::Conv { name, cout, w_bits, w_codes, .. } = op {
+                    if *w_bits > 4 {
+                        continue;
+                    }
+                    let chmask: Vec<bool> = (0..*cout).map(|i| i % 2 == 0).collect();
+                    let cols = w_codes[0].len();
+                    let mut colmask = vec![true; cols];
+                    if cols > 1 {
+                        colmask[cols - 1] = false;
+                    }
+                    spec = spec.with_channel_mask(name, chmask).with_tap_mask(name, colmask);
+                    break;
+                }
+            }
+            spec
+        }
+    }
+}
+
+/// The four (compile mode, datapath) combinations of the kernel engine,
+/// built pruned; the masked-dense reference uses the same mode so each
+/// sparse body is checked against its own dense witness.
+fn pruned_and_masked(
+    net: &Network,
+    masked: &Network,
+    spec: &PruneSpec,
+    which: usize,
+) -> (&'static str, Executor, Executor) {
+    match which {
+        0 => (
+            "weights",
+            Executor::from_plan(NetworkPlan::compile_pruned(net, Datapath::Arithmetic, spec)),
+            Executor::from_plan(NetworkPlan::compile(masked, Datapath::Arithmetic)),
+        ),
+        1 => (
+            "act-major",
+            Executor::from_plan(NetworkPlan::compile_pruned(net, Datapath::LutFabric, spec)),
+            Executor::from_plan(NetworkPlan::compile(masked, Datapath::LutFabric)),
+        ),
+        2 => (
+            "direct",
+            Executor::from_plan(NetworkPlan::compile_pruned_direct(net, Datapath::LutFabric, spec)),
+            Executor::from_plan(NetworkPlan::compile_direct(masked, Datapath::LutFabric)),
+        ),
+        _ => (
+            "mac-major",
+            Executor::from_plan(NetworkPlan::compile_pruned_mac_major(
+                net,
+                Datapath::LutFabric,
+                spec,
+            )),
+            Executor::from_plan(NetworkPlan::compile_mac_major(masked, Datapath::LutFabric)),
+        ),
+    }
+}
+
+#[test]
+fn prop_pruned_plans_match_masked_dense_across_datapaths_and_batches() {
+    prop::cases(8, |rng| {
+        let spec_shape = common::random_spec(rng);
+        let net = Network::synthetic(&spec_shape, rng.next_u64());
+        let spec = spec_for(rng, &net);
+        let masked = spec.masked_network(&net);
+        let nb = 1 + rng.below(17) as usize; // 1..=17, ragged tails included
+        let tensors = tensors_for(rng, &net, nb);
+        let mut pool = ScratchPool::new();
+        let (mut out, mut want) = (Vec::new(), Vec::new());
+        for which in 0..4 {
+            let (name, pruned, dense) = pruned_and_masked(&net, &masked, &spec, which);
+            // masked-dense reference through the fresh-allocation path
+            pool.dirty(rng.range_i32(-9, 9));
+            dense.run_batch_into(&tensors, 1, &mut pool, &mut want);
+            for threads in [1usize, 4] {
+                pool.dirty(rng.range_i32(-9, 9));
+                pruned.run_batch_into(&tensors, threads, &mut pool, &mut out);
+                assert_eq!(out, want, "{name} batch-major, nb={nb}, {threads} threads");
+                pool.dirty(rng.range_i32(-9, 9));
+                pruned.run_image_major_into(&tensors, threads, &mut pool, &mut out);
+                assert_eq!(out, want, "{name} image-major, nb={nb}, {threads} threads");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_pruned_plans_shrink_live_work_and_noop_is_identity() {
+    prop::cases(8, |rng| {
+        let spec_shape = common::random_spec(rng);
+        let net = Network::synthetic(&spec_shape, rng.next_u64());
+        let dense = NetworkPlan::compile(&net, Datapath::LutFabric);
+        let pruned = NetworkPlan::compile_pruned(&net, Datapath::LutFabric, &PruneSpec::channels(0.5));
+        // compacted tables drop the pruned rows' LUTs and MACs; the
+        // strict checks fire whenever a layer of the matching kind
+        // actually pruned (single-channel layers legitimately keep their
+        // one surviving channel)
+        assert!(pruned.lut_count() <= dense.lut_count());
+        if pruned
+            .convs()
+            .any(|c| c.lut_count() > 0 && c.rows() < c.geom.cout)
+        {
+            assert!(pruned.lut_count() < dense.lut_count(), "no LUT savings at 50% sparsity");
+        }
+        let live: u64 = pruned.convs().map(|c| c.macs()).sum();
+        let full: u64 = pruned.convs().map(|c| c.dense_macs()).sum();
+        assert!(live <= full);
+        if pruned.convs().any(|c| c.prune.is_some()) {
+            assert!(live < full, "no MAC savings at 50% sparsity");
+        }
+        assert_eq!(full, dense.convs().map(|c| c.macs()).sum::<u64>());
+        // a no-op spec compiles to a structurally dense plan
+        let noop = NetworkPlan::compile_pruned(&net, Datapath::LutFabric, &PruneSpec::default());
+        assert_eq!(noop.lut_count(), dense.lut_count());
+        assert!(noop.convs().all(|c| c.prune.is_none()), "no-op spec left a prune record");
+    });
+}
+
+#[test]
+fn prop_pruned_pipeline_matches_masked_dense_and_analytic_fps() {
+    prop::cases(6, |rng| {
+        let spec_shape = common::random_spec(rng);
+        let net = Network::synthetic(&spec_shape, rng.next_u64());
+        let spec = PruneSpec::channels(0.5);
+        let masked = spec.masked_network(&net);
+        let pruned = NetworkPlan::compile_pruned(&net, Datapath::LutFabric, &spec);
+        let dense = NetworkPlan::compile(&net, Datapath::LutFabric);
+
+        let fold = 1 + rng.below(8) as usize;
+        let base = FoldConfig::uniform(dense.n_convs(), fold);
+        let rescaled = base.rescaled_for(&pruned);
+        // generous FIFO depth: the throughput leg below compares the
+        // measured interval against the analytic steady state, which
+        // assumes stages are never backpressure-starved
+        let dense_pipe = Pipeline::from_plan(&dense, &base, 64);
+        let mut pipe = Pipeline::from_plan(&pruned, &rescaled, 64);
+        assert!(
+            pipe.steady_cycles() <= dense_pipe.steady_cycles(),
+            "fold-rescaled pruned pipeline got slower: {} vs {}",
+            pipe.steady_cycles(),
+            dense_pipe.steady_cycles()
+        );
+
+        // enough images in flight for the incremental interval to reach
+        // the steady-state regime
+        let n = 8usize;
+        let images = common::random_images(rng, &net, n);
+        let report = pipe.run(&images).expect("pruned pipeline run");
+
+        // logits: bit-exact vs the masked-dense executor
+        let (s, c) = (net.meta.image_size, net.meta.in_ch);
+        let tensors: Vec<Tensor> = images
+            .iter()
+            .map(|d| Tensor::from_hwc(s, s, c, d.clone()))
+            .collect();
+        let want = Executor::from_plan(NetworkPlan::compile(&masked, Datapath::LutFabric))
+            .run_batch_with_threads(&tensors, 1);
+        assert_eq!(report.logits, want, "pruned pipeline diverged from masked dense");
+
+        // throughput: measured incremental interval within 15% of the
+        // analytic steady-state interval
+        let analytic = report.steady_state_cycles_per_image.max(1) as f64;
+        let measured = report.incremental_cycles_per_image().max(1) as f64;
+        let ratio = measured / analytic;
+        assert!(
+            (ratio - 1.0).abs() <= 0.15,
+            "simulated interval {measured} vs analytic {analytic} (ratio {ratio:.3})"
+        );
+    });
+}

@@ -4,10 +4,13 @@
 Usage: bench_regress.py BASELINE.json NEW.json [--tolerance 0.20]
 
 Compares the freshly measured ``images_per_s`` of every (backend,
-datapath) row in NEW.json against the committed baseline and exits
-nonzero when any matching row dropped by more than the tolerance
+datapath, sparsity) row in NEW.json against the committed baseline and
+exits nonzero when any matching row dropped by more than the tolerance
 (default 20%). Rows only present on one side are reported but never
-fail the gate — backends come and go with features and runners.
+fail the gate — backends come and go with features and runners, and a
+run with ``--sparsity`` adds pruned rows (keyed by their sparsity, so
+they can never collide with — or silently gate against — the dense
+trajectory; dense rows omit the field and key as sparsity 0).
 
 Skips (exit 0) when the baseline has no measured rows yet or is marked
 as a placeholder, so the gate arms itself automatically on the first
@@ -24,7 +27,16 @@ def load(path):
 
 
 def rows_by_key(doc):
-    return {(r["backend"], r["datapath"]): r for r in doc.get("rows", [])}
+    return {
+        (r["backend"], r["datapath"], float(r.get("sparsity", 0.0))): r
+        for r in doc.get("rows", [])
+    }
+
+
+def key_name(key):
+    backend, datapath, sparsity = key
+    suffix = f"@sparsity{sparsity:g}" if sparsity else ""
+    return f"{backend}/{datapath}{suffix}"
 
 
 def main(argv):
@@ -50,7 +62,7 @@ def main(argv):
     failed = []
     for key, b in sorted(base_rows.items()):
         n = new_rows.get(key)
-        name = "/".join(key)
+        name = key_name(key)
         if n is None:
             print(f"bench-regress: {name}: row gone from new run (not a failure)")
             continue
@@ -67,7 +79,7 @@ def main(argv):
         if verdict == "FAIL":
             failed.append(f"{name}: {old_ips:.0f} -> {new_ips:.0f} img/s ({ratio:.2f}x)")
     for key in sorted(set(new_rows) - set(base_rows)):
-        print(f"bench-regress: {'/'.join(key)}: new row (no baseline, not gated)")
+        print(f"bench-regress: {key_name(key)}: new row (no baseline, not gated)")
 
     if failed:
         print(f"bench-regress: {len(failed)} regression(s) beyond {tolerance:.0%}:")
