@@ -4,7 +4,7 @@
 
 PYTHON ?= python3
 
-.PHONY: artifacts artifacts-fig2 test-python test-rust bench-smoke multi-smoke engine-smoke kernel-smoke prune-smoke serve-smoke bench-json bench-regress doc lint
+.PHONY: artifacts artifacts-fig2 test-python test-rust bench-smoke multi-smoke engine-smoke kernel-smoke prune-smoke serve-smoke eval-smoke bench-json bench-regress doc lint
 
 artifacts:
 	mkdir -p artifacts
@@ -75,6 +75,23 @@ prune-smoke:
 	cd rust && cargo test -q --test prune
 	cd rust && cargo run --release -- bench --backends all --n 6 --sparsity 0.5
 	cd rust && cargo run --release -- report prune --sparsity 0.5 --n 6
+
+# Approximate-datapath accuracy smoke (DESIGN.md S24, EXPERIMENTS.md
+# E17): the eval conformance suite (labeled-synthetic determinism,
+# exact datapaths at 100%, saturated approx bit-exact, learned approx
+# above the seeded agreement floor, stable Pareto JSON schema,
+# executor-vs-pipeline approx bit-identity), then `lutmul eval` twice —
+# the saturated configuration gated at top-1 == 1.0 (bit-exact by
+# construction) and the learned default gated at the conservative 0.05
+# agreement floor — plus the area/cycle report's saturated witness and
+# the regression script's own selftest. Exits nonzero on any violation,
+# so CI gates on it.
+eval-smoke:
+	cd rust && cargo test -q --test eval
+	cd rust && cargo run --release -- eval --n 32 --saturated --floor 1.0
+	cd rust && cargo run --release -- eval --n 32 --pareto --sparsity 0.5 --floor 0.05
+	cd rust && cargo run --release -- report approx --n 4
+	$(PYTHON) scripts/bench_regress.py --selftest
 
 # Bench-trajectory regression gate (EXPERIMENTS.md E15): regenerate the
 # machine-readable rows into a scratch file and diff images_per_s

@@ -38,6 +38,7 @@ use anyhow::{Context, Result};
 use crate::dataflow::multi::LinkModel;
 use crate::dataflow::FoldConfig;
 use crate::fabric::device::U280;
+use crate::graph::approx::ApproxSpec;
 use crate::graph::arch::ArchSpec;
 use crate::graph::network::Network;
 use crate::graph::plan::{Datapath, IoGeom, NetworkPlan};
@@ -203,6 +204,7 @@ pub struct EngineBuilder {
     injected: Option<Network>,
     datapath: Datapath,
     prune: Option<PruneSpec>,
+    approx: Option<ApproxSpec>,
     kind: BackendKind,
     folding: Folding,
     fifo_depth: usize,
@@ -219,6 +221,7 @@ impl Default for EngineBuilder {
             injected: None,
             datapath: Datapath::Arithmetic,
             prune: None,
+            approx: None,
             kind: BackendKind::Reference,
             folding: Folding::FullyParallel,
             fifo_depth: 16,
@@ -270,6 +273,17 @@ impl EngineBuilder {
     /// the plain dense plan.
     pub fn prune(mut self, spec: PruneSpec) -> Self {
         self.prune = Some(spec);
+        self
+    }
+
+    /// Maddness-style approximate datapath (DESIGN.md S24): the plan is
+    /// compiled through `NetworkPlan::compile_approx`, so every backend
+    /// the engine constructs — executor, pipeline, sharded — hashes
+    /// eligible std/pw layers through trained codebooks instead of
+    /// exact LUT tables. Approximate by construction (see `lutmul
+    /// eval`); does not compose with [`prune`](Self::prune).
+    pub fn approx(mut self, spec: ApproxSpec) -> Self {
+        self.approx = Some(spec);
         self
     }
 
@@ -337,9 +351,15 @@ impl EngineBuilder {
             )
         };
 
-        let plan = Arc::new(match &self.prune {
-            Some(spec) => NetworkPlan::compile_pruned(&net, self.datapath, spec),
-            None => NetworkPlan::compile(&net, self.datapath),
+        anyhow::ensure!(
+            self.prune.is_none() || self.approx.is_none(),
+            "EngineBuilder::prune and ::approx do not compose — a compacted weight \
+             matrix would retrain different codebooks; pick one"
+        );
+        let plan = Arc::new(match (&self.prune, &self.approx) {
+            (Some(spec), _) => NetworkPlan::compile_pruned(&net, self.datapath, spec),
+            (None, Some(aspec)) => NetworkPlan::compile_approx(&net, self.datapath, aspec),
+            (None, None) => NetworkPlan::compile(&net, self.datapath),
         });
         let folds = match self.folding {
             Folding::FullyParallel => FoldConfig::fully_parallel(plan.n_convs()),

@@ -1,0 +1,385 @@
+//! Accuracy harness (DESIGN.md S24 / EXPERIMENTS.md E17): score every
+//! datapath of one network on a labeled test set and chart the
+//! accuracy–speed–area Pareto front.
+//!
+//! The approximate datapath (`graph::approx`) deliberately trades
+//! accuracy for LUT area and accumulation count; this module is the
+//! other half of that trade — without measured top-1/top-5 next to the
+//! throughput and `lut6` columns, "faster and smaller" is
+//! unfalsifiable. `lutmul eval` drives it from the CLI: the trained
+//! artifact test set when built, a **labeled synthetic set** otherwise
+//! ([`Network::synthetic_labeled`] — seeded images labeled by the exact
+//! arithmetic datapath's own argmax, so the exact rows score 100% by
+//! construction and every other datapath's score reads directly as
+//! agreement with the exact model).
+//!
+//! The Pareto table is emitted with the same JSON schema as `lutmul
+//! bench --json` (`{backend, datapath, images_per_s, ns_per_image,
+//! ...}` rows under `"rows"`), so `scripts/bench_regress.py` compares
+//! eval snapshots with the same keying it uses for bench snapshots
+//! (approx rows carry `"approx": true`, pruned rows a `"sparsity"`
+//! field).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::argmax;
+use crate::engine::{ExecutorBackend, InferenceBackend};
+use crate::graph::approx::ApproxSpec;
+use crate::graph::executor::{Executor, Tensor};
+use crate::graph::network::Network;
+use crate::graph::plan::{Datapath, NetworkPlan};
+use crate::graph::prune::PruneSpec;
+
+/// Top-1 / top-5 accuracy of one scored batch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalScore {
+    /// Images scored.
+    pub n: usize,
+    /// Fraction whose argmax equals the label.
+    pub top1: f64,
+    /// Fraction whose label ranks in the 5 largest logits.
+    pub top5: f64,
+}
+
+/// Deterministic rank of `label` among the logits: the number of
+/// classes strictly greater, with index order breaking exact ties (so a
+/// flat logit vector still yields one well-defined rank).
+fn label_rank(logits: &[f32], label: usize) -> usize {
+    let lv = logits[label];
+    logits
+        .iter()
+        .enumerate()
+        .filter(|&(j, &v)| v > lv || (v == lv && j < label))
+        .count()
+}
+
+/// Score per-image logits against labels.
+pub fn score(logits: &[Vec<f32>], labels: &[u8]) -> EvalScore {
+    let n = logits.len().min(labels.len());
+    if n == 0 {
+        return EvalScore { n: 0, top1: 0.0, top5: 0.0 };
+    }
+    let mut hit1 = 0usize;
+    let mut hit5 = 0usize;
+    for (l, &y) in logits.iter().zip(labels).take(n) {
+        let y = y as usize;
+        if argmax(l) == y {
+            hit1 += 1;
+        }
+        if y < l.len() && label_rank(l, y) < 5 {
+            hit5 += 1;
+        }
+    }
+    EvalScore { n, top1: hit1 as f64 / n as f64, top5: hit5 as f64 / n as f64 }
+}
+
+impl Network {
+    /// A labeled synthetic test set: `n` seeded uniform code images,
+    /// each labeled by the **exact arithmetic datapath's argmax** on
+    /// this network. Deterministic in (`self`, `n`, `seed`). Because
+    /// the labels are the exact model's own answers, any exact compile
+    /// of this network scores top-1 = 1.0 on the set by construction —
+    /// the accuracy axis of `lutmul eval` then measures how often an
+    /// approximate/pruned datapath *agrees with the exact model*, which
+    /// is the quantity the Maddness trade-off spends.
+    pub fn synthetic_labeled(&self, n: usize, seed: u64) -> (Vec<Vec<i32>>, Vec<u8>) {
+        let io = self.io();
+        let px = io.image_size * io.image_size * io.in_ch;
+        let amax = (1i32 << self.meta.a_bits.clamp(1, 8)) - 1;
+        let mut rng = crate::util::prop::Rng::new(seed ^ 0x1abe_1ed5_e7da_7a5e);
+        let images: Vec<Vec<i32>> = (0..n.max(1)).map(|_| rng.vec_i32(px, 0, amax)).collect();
+        let ex = Executor::from_plan(NetworkPlan::compile(self, Datapath::Arithmetic));
+        let labels = images
+            .iter()
+            .map(|img| {
+                let t = Tensor::from_hwc(io.image_size, io.image_size, io.in_ch, img.clone());
+                argmax(&ex.execute(&t)) as u8
+            })
+            .collect();
+        (images, labels)
+    }
+}
+
+/// One datapath's point on the accuracy–speed–area front.
+#[derive(Debug, Clone)]
+pub struct ParetoRow {
+    /// Backend label (`executor/lut-exact`, `executor/lut-approx`, ...).
+    pub backend: String,
+    /// Datapath label, same vocabulary as `lutmul bench --json`.
+    pub datapath: String,
+    pub images_per_s: f64,
+    pub score: EvalScore,
+    /// Plan-wide LUT6 estimate (`NetworkPlan::lut_count`) — the area
+    /// axis of the front.
+    pub lut6: usize,
+    /// Approximate (Maddness) datapath row.
+    pub approx: bool,
+    /// Channel sparsity of a pruned row (0.0 on dense rows).
+    pub sparsity: f64,
+}
+
+/// Which rows [`pareto`] builds.
+#[derive(Debug, Clone)]
+pub struct ParetoConfig {
+    /// Structured channel sparsity of the pruned row; `0.0` skips it.
+    pub sparsity: f64,
+    /// Configuration of the approximate row.
+    pub spec: ApproxSpec,
+    /// Full front (`--pareto`): adds the mac-major exact witness and
+    /// the saturated-approx anchor next to the default rows.
+    pub full: bool,
+    /// Executor thread fan-out per row.
+    pub threads: usize,
+}
+
+impl Default for ParetoConfig {
+    fn default() -> Self {
+        Self { sparsity: 0.0, spec: ApproxSpec::default(), full: false, threads: 1 }
+    }
+}
+
+/// Time one compiled plan over the batch and score it.
+fn run_row(
+    plan: NetworkPlan,
+    backend: &str,
+    datapath: &str,
+    approx: bool,
+    sparsity: f64,
+    images: &[Vec<i32>],
+    labels: &[u8],
+    threads: usize,
+) -> Result<ParetoRow> {
+    let lut6 = plan.lut_count();
+    let mut b = ExecutorBackend::new(Arc::new(plan), threads);
+    let t0 = Instant::now();
+    let out = b.infer_batch(images)?;
+    let images_per_s = images.len() as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+    Ok(ParetoRow {
+        backend: backend.to_string(),
+        datapath: datapath.to_string(),
+        images_per_s,
+        score: score(&out.logits, labels),
+        lut6,
+        approx,
+        sparsity,
+    })
+}
+
+/// Build the accuracy–speed–area front of one network on one labeled
+/// batch: the exact act-major LUT compile, the approximate compile, and
+/// (per [`ParetoConfig`]) the mac-major witness, the pruned compile and
+/// the saturated-approx anchor. Every row runs through the same
+/// batch-major executor backend, so the throughput column is
+/// apples-to-apples.
+pub fn pareto(
+    net: &Network,
+    images: &[Vec<i32>],
+    labels: &[u8],
+    cfg: &ParetoConfig,
+) -> Result<Vec<ParetoRow>> {
+    anyhow::ensure!(!images.is_empty(), "eval needs at least one image");
+    anyhow::ensure!(
+        images.len() == labels.len(),
+        "{} images but {} labels",
+        images.len(),
+        labels.len()
+    );
+    anyhow::ensure!(
+        (0.0..1.0).contains(&cfg.sparsity),
+        "sparsity must be in [0, 1), got {}",
+        cfg.sparsity
+    );
+    let t = cfg.threads.max(1);
+    let mut rows = Vec::new();
+    rows.push(run_row(
+        NetworkPlan::compile(net, Datapath::LutFabric),
+        "executor/lut-exact",
+        "lut-fabric",
+        false,
+        0.0,
+        images,
+        labels,
+        t,
+    )?);
+    if cfg.full {
+        rows.push(run_row(
+            NetworkPlan::compile_mac_major(net, Datapath::LutFabric),
+            "executor/lut-mac-major",
+            "lut-fabric/mac-major",
+            false,
+            0.0,
+            images,
+            labels,
+            t,
+        )?);
+    }
+    if cfg.sparsity > 0.0 {
+        let spec = PruneSpec::channels(cfg.sparsity);
+        rows.push(run_row(
+            NetworkPlan::compile_pruned(net, Datapath::LutFabric, &spec),
+            "executor/lut-sparse",
+            "lut-fabric",
+            false,
+            cfg.sparsity,
+            images,
+            labels,
+            t,
+        )?);
+    }
+    rows.push(run_row(
+        NetworkPlan::compile_approx(net, Datapath::LutFabric, &cfg.spec),
+        "executor/lut-approx",
+        "lut-fabric/approx",
+        true,
+        0.0,
+        images,
+        labels,
+        t,
+    )?);
+    if cfg.full && cfg.spec != ApproxSpec::saturated() {
+        rows.push(run_row(
+            NetworkPlan::compile_approx(net, Datapath::LutFabric, &ApproxSpec::saturated()),
+            "executor/lut-approx-sat",
+            "lut-fabric/approx",
+            true,
+            0.0,
+            images,
+            labels,
+            t,
+        )?);
+    }
+    Ok(rows)
+}
+
+/// Human-readable front, one line per row.
+pub fn table(rows: &[ParetoRow]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "  {:<24} {:>9}  {:>6}  {:>6}  {:>9}\n",
+        "datapath", "img/s", "top-1", "top-5", "LUT6"
+    ));
+    for r in rows {
+        let mut tag = String::new();
+        if r.approx {
+            tag.push_str(" [approx]");
+        }
+        if r.sparsity > 0.0 {
+            tag.push_str(&format!(" [sparsity {:.2}]", r.sparsity));
+        }
+        s.push_str(&format!(
+            "  {:<24} {:>9.0}  {:>5.1}%  {:>5.1}%  {:>9}{tag}\n",
+            r.backend,
+            r.images_per_s,
+            100.0 * r.score.top1,
+            100.0 * r.score.top5,
+            r.lut6,
+        ));
+    }
+    s
+}
+
+/// Machine-readable front: the same document shape as `lutmul bench
+/// --json` (top-level `bench`/`source`/`n_images`/`rows`), so
+/// `scripts/bench_regress.py` keys eval snapshots exactly like bench
+/// snapshots. Dense exact rows omit `sparsity` and `approx`, matching
+/// the bench emitter's omit-when-default convention.
+pub fn json(rows: &[ParetoRow], invocation: &str, source: &str, n: usize) -> String {
+    let body: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            let mut extra = String::new();
+            if r.sparsity > 0.0 {
+                extra.push_str(&format!(", \"sparsity\": {:.2}", r.sparsity));
+            }
+            if r.approx {
+                extra.push_str(", \"approx\": true");
+            }
+            format!(
+                "    {{\"backend\": {:?}, \"datapath\": {:?}, \"images_per_s\": {:.1}, \
+                 \"ns_per_image\": {:.0}, \"top1\": {:.4}, \"top5\": {:.4}, \
+                 \"lut6\": {}{extra}}}",
+                r.backend,
+                r.datapath,
+                r.images_per_s,
+                1e9 / r.images_per_s.max(1e-9),
+                r.score.top1,
+                r.score.top5,
+                r.lut6,
+            )
+        })
+        .collect();
+    format!(
+        "{{\n  \"bench\": {invocation:?},\n  \"source\": {source:?},\n  \"n_images\": {n},\n  \
+         \"rows\": [\n{}\n  ]\n}}",
+        body.join(",\n")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::mobilenet_v2_small;
+
+    #[test]
+    fn score_counts_top1_and_top5() {
+        let logits = vec![
+            vec![0.1, 0.9, 0.0, 0.0, 0.0, 0.0], // label 1: top-1 hit
+            vec![0.5, 0.4, 0.3, 0.2, 0.1, 0.0], // label 4: top-5 only
+            vec![0.5, 0.4, 0.3, 0.2, 0.1, 0.0], // label 5: miss
+        ];
+        let s = score(&logits, &[1, 4, 5]);
+        assert_eq!(s.n, 3);
+        assert!((s.top1 - 1.0 / 3.0).abs() < 1e-12);
+        assert!((s.top5 - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn label_rank_breaks_ties_by_index() {
+        // flat logits: rank equals the label index
+        let flat = vec![1.0f32; 8];
+        assert_eq!(label_rank(&flat, 0), 0);
+        assert_eq!(label_rank(&flat, 7), 7);
+    }
+
+    #[test]
+    fn synthetic_labels_are_deterministic_and_exact_scores_full() {
+        let net = Network::synthetic(&mobilenet_v2_small(), 0x5EED);
+        let (ia, la) = net.synthetic_labeled(6, 9);
+        let (ib, lb) = net.synthetic_labeled(6, 9);
+        assert_eq!(ia, ib);
+        assert_eq!(la, lb);
+        // the exact LUT datapath reproduces the labeling datapath
+        let rows = pareto(&net, &ia, &la, &ParetoConfig::default()).unwrap();
+        let exact = rows.iter().find(|r| r.backend == "executor/lut-exact").unwrap();
+        assert_eq!(exact.score.top1, 1.0);
+        assert_eq!(exact.score.top5, 1.0);
+    }
+
+    #[test]
+    fn json_rows_tag_approx_and_sparsity() {
+        let mk = |backend: &str, approx: bool, sp: f64| ParetoRow {
+            backend: backend.into(),
+            datapath: "lut-fabric".into(),
+            images_per_s: 100.0,
+            score: EvalScore { n: 4, top1: 0.75, top5: 1.0 },
+            lut6: 42,
+            approx,
+            sparsity: sp,
+        };
+        let doc = json(
+            &[mk("executor/lut-exact", false, 0.0), mk("executor/lut-approx", true, 0.0)],
+            "lutmul eval --pareto",
+            "synthetic",
+            4,
+        );
+        assert!(doc.contains("\"rows\""));
+        assert!(doc.contains("\"approx\": true"));
+        assert!(!doc.contains("\"sparsity\""));
+        assert!(doc.contains("\"top1\": 0.7500"));
+        let sparse = json(&[mk("executor/lut-sparse", false, 0.5)], "x", "s", 1);
+        assert!(sparse.contains("\"sparsity\": 0.50"));
+    }
+}

@@ -88,6 +88,43 @@ pub fn layer_lut_area(w_bits: u32, rows: usize, cols: usize) -> f64 {
         + rows as f64 * adder_tree_luts(2 * w_bits, cols as u32) * VIVADO_ADDER_SHRINK
 }
 
+/// LUT6 count of one codebook ROM: `n_protos` entries of `table_bits`
+/// bits sliced into 6-input LUTs (Eq. (3)'s sizing applied to the
+/// Maddness accumulation table), floored at one physical LUT.
+pub fn approx_rom_luts(table_bits: u32, n_protos: u32) -> f64 {
+    (table_bits as f64 * n_protos as f64 / 64.0).max(1.0)
+}
+
+/// Post-implementation LUT area of one conv layer's Maddness-style
+/// approximate datapath (DESIGN.md S24): per (codebook, row) one
+/// accumulator-width ROM of `2^depth` prototype dot products (Vivado
+/// re-pack factor applied), per codebook a `depth`-level comparator
+/// tree (one LUT6 per compare of <=6-bit activation codes), and per row
+/// an adder tree over `n_codebooks` terms instead of `cols` — the
+/// structural saving the approximate datapath buys: the wider the
+/// chunk, the fewer ROM columns and adder-tree terms per output.
+pub fn approx_layer_lut_area(
+    w_bits: u32,
+    rows: usize,
+    cols: usize,
+    n_codebooks: usize,
+    depth: u32,
+) -> f64 {
+    if rows == 0 || cols == 0 || n_codebooks == 0 {
+        return 0.0;
+    }
+    // Table entries are chunk-wide partial dots, so they carry the same
+    // accumulator width a `cols`-term exact sum needs.
+    let width = accumulator_width(2 * w_bits, cols as u32);
+    let roms = (rows * n_codebooks) as f64
+        * approx_rom_luts(width, 1u32 << depth.min(31))
+        * VIVADO_ROM_FACTOR;
+    let hash = (n_codebooks * depth as usize) as f64;
+    let adders =
+        rows as f64 * adder_tree_luts(width, n_codebooks as u32) * VIVADO_ADDER_SHRINK;
+    roms + hash + adders
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -144,6 +181,21 @@ mod tests {
         assert!(layer_lut_area(4, 32, 144) < dense);
         assert_eq!(layer_lut_area(4, 0, 288), 0.0);
         assert_eq!(layer_lut_area(4, 32, 0), 0.0);
+    }
+
+    #[test]
+    fn approx_area_beats_exact_at_default_chunking() {
+        // 32x288 4-bit layer, 72 codebooks of 4 columns, 16 prototypes:
+        // the codebook ROMs + hash + shortened trees must undercut the
+        // exact per-column ROM array (the S24 headline), and widening
+        // the chunks must keep shrinking the area.
+        let exact = layer_lut_area(4, 32, 288);
+        let c4 = approx_layer_lut_area(4, 32, 288, 72, 4);
+        let c8 = approx_layer_lut_area(4, 32, 288, 36, 4);
+        assert!(c4 < exact, "approx {c4} vs exact {exact}");
+        assert!(c8 < c4, "wider chunks must cost less: {c8} vs {c4}");
+        assert_eq!(approx_layer_lut_area(4, 0, 288, 72, 4), 0.0);
+        assert_eq!(approx_layer_lut_area(4, 32, 0, 0, 4), 0.0);
     }
 
     #[test]

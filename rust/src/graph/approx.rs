@@ -1,0 +1,399 @@
+//! Maddness-style approximate LUT datapath (DESIGN.md S24): product
+//! quantization of the im2row column space, trained at plan-compile
+//! time.
+//!
+//! The exact LUT-GEMM datapaths (DESIGN.md S20) spend one table lookup
+//! and one `cout`-wide axpy per weight *column* — `cols` of them per
+//! output pixel. Maddness (Stella Nera / halutmatmul) replaces that
+//! with hashing: the column space is cut into `n_codebooks` contiguous
+//! chunks, each chunk's activation sub-patch is hashed by a balanced
+//! decision tree to one of `2^depth` learned prototypes, and the
+//! precomputed dot product of every weight row with every prototype is
+//! accumulated straight out of a codebook ROM. Per output pixel the
+//! datapath does `depth` compares and ONE axpy per *codebook* instead
+//! of one per column — `cols_per_codebook`x fewer accumulations, paid
+//! for with quantization error.
+//!
+//! Training is deterministic and self-contained: prototypes are learned
+//! from seeded synthetic activation patches (uniform over the layer's
+//! `in_bits` code range) against the plan's (synthetic or artifact)
+//! weights, so two compiles of the same network and [`ApproxSpec`]
+//! produce bit-identical tables. The **saturated** configuration
+//! (`cols_per_codebook == 1`, `depth >= in_bits`) degenerates to an
+//! exact datapath: each single-column tree's thresholds are the binary
+//! midpoints, so the leaf code *is* the activation code and every table
+//! entry is the exact product `w * act` — bit-exact with
+//! [`Multipliers::LutTables`](super::plan::Multipliers) by
+//! construction. That anchor is what `tests/eval.rs` and `make
+//! eval-smoke` gate on; the learned (wider-chunk) configurations trade
+//! accuracy for the LUT-area and accumulation savings that
+//! `lutmul report approx` and `lutmul eval --pareto` quantify.
+
+use crate::fabric::cost;
+use crate::util::prop::Rng;
+
+/// Compile-time configuration of the approximate datapath
+/// ([`NetworkPlan::compile_approx`](super::plan::NetworkPlan::compile_approx)).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ApproxSpec {
+    /// Weight columns per codebook (the chunk width `C` of the product
+    /// quantization). `1` with `depth >= in_bits` is the saturated
+    /// exact configuration.
+    pub cols_per_codebook: usize,
+    /// Decision-tree depth: every codebook hashes its sub-patch to one
+    /// of `2^depth` prototypes.
+    pub depth: usize,
+    /// Synthetic activation patches sampled per layer when training the
+    /// tree splits and prototypes (ignored by the saturated path).
+    pub samples: usize,
+    /// Seed of the per-layer training sample stream.
+    pub seed: u64,
+}
+
+impl Default for ApproxSpec {
+    fn default() -> Self {
+        Self { cols_per_codebook: 4, depth: 4, samples: 256, seed: 0xADD5 }
+    }
+}
+
+impl ApproxSpec {
+    /// The saturated exact configuration: one column per codebook and a
+    /// tree deep enough to enumerate every activation code, so the
+    /// datapath reproduces the exact LUT-GEMM sums bit-for-bit.
+    pub fn saturated() -> Self {
+        Self { cols_per_codebook: 1, depth: 4, ..Self::default() }
+    }
+}
+
+/// One conv layer's trained Maddness state — carried by
+/// [`Multipliers::LutApprox`](super::plan::Multipliers) and read by the
+/// approx kernel bodies in `graph::kernels`.
+#[derive(Debug, Clone)]
+pub struct ApproxLayer {
+    /// Codebook count (`cols.div_ceil(cols_per_codebook)`).
+    pub n_codebooks: usize,
+    /// Tree depth actually compiled (clamped to `in_bits` on the
+    /// saturated path — deeper levels cannot split integer codes
+    /// further).
+    pub depth: usize,
+    /// Prototypes per codebook (`1 << depth`).
+    pub n_protos: usize,
+    /// Weight-row count the accumulation tables were built for.
+    pub rows: usize,
+    /// Codebook column ranges: codebook `c` covers weight columns
+    /// `starts[c]..starts[c + 1]` (length `n_codebooks + 1`).
+    pub starts: Vec<usize>,
+    /// Per-level split dimension, relative to the codebook's first
+    /// column: `split_dims[cb * depth + level]`.
+    pub split_dims: Vec<usize>,
+    /// Per-node split thresholds in heap order:
+    /// `thresholds[cb * (2^depth - 1) + (2^level - 1) + code]`; the
+    /// comparison is `value >= threshold` ⇒ right child.
+    pub thresholds: Vec<i32>,
+    /// Codebook accumulation tables, row-contiguous so one (codebook,
+    /// code) pair yields an axpy-able column:
+    /// `table[(cb * n_protos + code) * rows + row]` = dot(weight row
+    /// chunk, prototype `code`).
+    pub table: Vec<i32>,
+    /// Physical LUT6 estimate of the codebook ROMs + hash comparators +
+    /// shortened adder trees (`fabric::cost::approx_layer_lut_area`).
+    pub lut6: usize,
+    /// True for the saturated configuration — the datapath is bit-exact
+    /// with the exact LUT tables by construction.
+    pub exact: bool,
+}
+
+impl ApproxLayer {
+    /// Train a layer's hash trees and codebook tables against its
+    /// (possibly synthetic) weight matrix. `wmat` is `[rows][cols]`
+    /// weight codes, activations are `in_bits`-bit unsigned codes.
+    /// Deterministic in (`wmat`, `w_bits`, `in_bits`, `spec`, `seed`).
+    pub fn train(wmat: &[Vec<i32>], w_bits: u32, in_bits: u32, spec: &ApproxSpec, seed: u64) -> Self {
+        let rows = wmat.len();
+        let cols = wmat[0].len();
+        let amax = (1i32 << in_bits) - 1;
+        let cw = spec.cols_per_codebook.max(1);
+        let n_codebooks = cols.div_ceil(cw);
+        let exact = cw == 1 && spec.depth >= in_bits as usize;
+        let depth = if exact { in_bits as usize } else { spec.depth.clamp(1, 8) };
+        let n_protos = 1usize << depth;
+        let nodes = n_protos - 1;
+        let starts: Vec<usize> =
+            (0..=n_codebooks).map(|c| (c * cw).min(cols)).collect();
+
+        let mut split_dims = vec![0usize; n_codebooks * depth];
+        let mut thresholds = vec![0i32; n_codebooks * nodes];
+        let mut table = vec![0i32; n_codebooks * n_protos * rows];
+
+        if exact {
+            // Saturated path: binary-midpoint thresholds make the leaf
+            // code equal the activation code, so table entries are the
+            // exact products and the whole datapath is bit-exact.
+            for cb in 0..n_codebooks {
+                for l in 0..depth {
+                    for p in 0..1usize << l {
+                        thresholds[cb * nodes + (1 << l) - 1 + p] =
+                            (2 * p as i32 + 1) << (depth - 1 - l);
+                    }
+                }
+                for code in 0..n_protos {
+                    let t = &mut table[(cb * n_protos + code) * rows..][..rows];
+                    for (r, slot) in t.iter_mut().enumerate() {
+                        *slot = wmat[r][cb] * code as i32;
+                    }
+                }
+            }
+        } else {
+            let mut rng = Rng::new(seed ^ 0x6d61_6464_6e65_7373);
+            let n_samples = spec.samples.max(4 * n_protos);
+            for cb in 0..n_codebooks {
+                let cwc = starts[cb + 1] - starts[cb];
+                // [sample][dim] synthetic activation sub-patches,
+                // uniform over the layer's code range.
+                let samples = rng.vec_i32(n_samples * cwc, 0, amax);
+                let mut buckets = vec![0usize; n_samples];
+                for l in 0..depth {
+                    let dim = split_dim(&samples, &buckets, n_samples, cwc, 1 << l);
+                    split_dims[cb * depth + l] = dim;
+                    let mut vals: Vec<i32> = Vec::with_capacity(n_samples);
+                    for b in 0..1usize << l {
+                        vals.clear();
+                        vals.extend(
+                            (0..n_samples)
+                                .filter(|&s| buckets[s] == b)
+                                .map(|s| samples[s * cwc + dim]),
+                        );
+                        vals.sort_unstable();
+                        let t = if vals.is_empty() {
+                            (amax + 1) / 2
+                        } else {
+                            vals[vals.len() / 2]
+                        };
+                        thresholds[cb * nodes + (1 << l) - 1 + b] = t;
+                    }
+                    for s in 0..n_samples {
+                        let t = thresholds[cb * nodes + (1 << l) - 1 + buckets[s]];
+                        buckets[s] = (buckets[s] << 1) | (samples[s * cwc + dim] >= t) as usize;
+                    }
+                }
+                // Prototypes: per-leaf mean sub-patch (midpoint for an
+                // empty leaf), folded straight into the weight tables.
+                let mut proto = vec![0f64; cwc];
+                for code in 0..n_protos {
+                    let members: Vec<usize> =
+                        (0..n_samples).filter(|&s| buckets[s] == code).collect();
+                    for (d, p) in proto.iter_mut().enumerate() {
+                        *p = if members.is_empty() {
+                            amax as f64 / 2.0
+                        } else {
+                            members.iter().map(|&s| samples[s * cwc + d] as f64).sum::<f64>()
+                                / members.len() as f64
+                        };
+                    }
+                    let t = &mut table[(cb * n_protos + code) * rows..][..rows];
+                    for (r, slot) in t.iter_mut().enumerate() {
+                        let dot: f64 = proto
+                            .iter()
+                            .enumerate()
+                            .map(|(d, &p)| wmat[r][starts[cb] + d] as f64 * p)
+                            .sum();
+                        *slot = dot.round() as i32;
+                    }
+                }
+            }
+        }
+
+        let lut6 = cost::approx_layer_lut_area(w_bits, rows, cols, n_codebooks, depth as u32)
+            .round() as usize;
+        Self {
+            n_codebooks,
+            depth,
+            n_protos,
+            rows,
+            starts,
+            split_dims,
+            thresholds,
+            table,
+            lut6,
+            exact,
+        }
+    }
+
+    /// Hash one codebook's sub-patch to its prototype code. `col_val`
+    /// reads the activation at an absolute weight-column index (the
+    /// caller supplies direct, interleaved or zero-padded access); only
+    /// the `depth` split dimensions are ever read.
+    #[inline]
+    pub fn code_with(&self, cb: usize, mut col_val: impl FnMut(usize) -> i32) -> usize {
+        let nodes = self.n_protos - 1;
+        let base = cb * nodes;
+        let start = self.starts[cb];
+        let dims = &self.split_dims[cb * self.depth..(cb + 1) * self.depth];
+        let mut code = 0usize;
+        for (l, &dim) in dims.iter().enumerate() {
+            let t = self.thresholds[base + (1 << l) - 1 + code];
+            code = (code << 1) | (col_val(start + dim) >= t) as usize;
+        }
+        code
+    }
+
+    /// The contiguous `rows`-wide accumulation column of one (codebook,
+    /// code) pair — the axpy operand of the approx kernels.
+    #[inline]
+    pub fn table_col(&self, cb: usize, code: usize) -> &[i32] {
+        &self.table[(cb * self.n_protos + code) * self.rows..][..self.rows]
+    }
+
+    /// Approximate inner product of weight row `row` with a full im2col
+    /// patch (`[cols]`, column order) — the scalar-path analogue of
+    /// `ConvPlan::dot`.
+    #[inline]
+    pub fn dot(&self, row: usize, patch: &[i32]) -> i32 {
+        (0..self.n_codebooks)
+            .map(|cb| {
+                let code = self.code_with(cb, |c| patch[c]);
+                self.table[(cb * self.n_protos + code) * self.rows + row]
+            })
+            .sum()
+    }
+}
+
+/// Deterministic per-layer training seed: the spec's seed folded with
+/// an FNV-1a hash of the layer name, so every layer trains on its own
+/// sample stream yet two compiles of the same network agree bit-for-bit.
+pub fn layer_seed(seed: u64, name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    seed ^ h
+}
+
+/// The split dimension for one tree level: the chunk dimension with the
+/// largest summed within-bucket variance — splitting where the buckets
+/// are still widest buys the most, the same greedy criterion Maddness
+/// uses (its per-level "heuristic select").
+fn split_dim(
+    samples: &[i32],
+    buckets: &[usize],
+    n_samples: usize,
+    cwc: usize,
+    n_buckets: usize,
+) -> usize {
+    let mut best = (0usize, f64::MIN);
+    for d in 0..cwc {
+        let mut score = 0.0;
+        for b in 0..n_buckets {
+            let (mut n, mut sum, mut sq) = (0.0f64, 0.0f64, 0.0f64);
+            for s in 0..n_samples {
+                if buckets[s] == b {
+                    let v = samples[s * cwc + d] as f64;
+                    n += 1.0;
+                    sum += v;
+                    sq += v * v;
+                }
+            }
+            if n > 0.0 {
+                score += sq - sum * sum / n;
+            }
+        }
+        if score > best.1 {
+            best = (d, score);
+        }
+    }
+    best.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wmat(rows: usize, cols: usize) -> Vec<Vec<i32>> {
+        let mut rng = Rng::new(7);
+        (0..rows).map(|_| rng.vec_i32(cols, -7, 7)).collect()
+    }
+
+    #[test]
+    fn saturated_layer_is_exact() {
+        let w = wmat(5, 9);
+        let layer = ApproxLayer::train(&w, 4, 4, &ApproxSpec::saturated(), 42);
+        assert!(layer.exact);
+        assert_eq!(layer.n_codebooks, 9);
+        assert_eq!(layer.n_protos, 16);
+        let mut rng = Rng::new(99);
+        for _ in 0..50 {
+            let patch = rng.vec_i32(9, 0, 15);
+            for row in 0..5 {
+                let exact: i32 =
+                    w[row].iter().zip(&patch).map(|(&wv, &a)| wv * a).sum();
+                assert_eq!(layer.dot(row, &patch), exact, "row {row} patch {patch:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn saturated_code_is_the_activation() {
+        let w = wmat(2, 4);
+        let layer = ApproxLayer::train(&w, 4, 4, &ApproxSpec::saturated(), 1);
+        for a in 0..16 {
+            assert_eq!(layer.code_with(2, |_| a), a as usize);
+        }
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let w = wmat(6, 16);
+        let spec = ApproxSpec::default();
+        let a = ApproxLayer::train(&w, 4, 4, &spec, 0xFEED);
+        let b = ApproxLayer::train(&w, 4, 4, &spec, 0xFEED);
+        assert_eq!(a.table, b.table);
+        assert_eq!(a.thresholds, b.thresholds);
+        assert_eq!(a.split_dims, b.split_dims);
+    }
+
+    #[test]
+    fn chunking_covers_ragged_tails() {
+        let w = wmat(3, 10);
+        let layer = ApproxLayer::train(&w, 4, 4, &ApproxSpec::default(), 5);
+        // 10 columns at width 4 -> 3 codebooks, last covering 2 columns
+        assert_eq!(layer.n_codebooks, 3);
+        assert_eq!(layer.starts, vec![0, 4, 8, 10]);
+        assert_eq!(layer.table.len(), 3 * 16 * 3);
+        assert!(!layer.exact);
+    }
+
+    #[test]
+    fn learned_dot_tracks_exact_dot() {
+        // The approximation must land in the right ballpark: over many
+        // random patches the mean absolute error stays well under the
+        // exact dot's own scale.
+        let w = wmat(4, 16);
+        let layer = ApproxLayer::train(&w, 4, 4, &ApproxSpec::default(), 11);
+        let mut rng = Rng::new(3);
+        let (mut err, mut mag) = (0f64, 0f64);
+        for _ in 0..200 {
+            let patch = rng.vec_i32(16, 0, 15);
+            for row in 0..4 {
+                let exact: i32 =
+                    w[row].iter().zip(&patch).map(|(&wv, &a)| wv * a).sum();
+                err += (layer.dot(row, &patch) - exact).abs() as f64;
+                mag += (exact.abs() as f64).max(1.0);
+            }
+        }
+        assert!(err / mag < 0.5, "relative error {}", err / mag);
+    }
+
+    #[test]
+    fn lut6_estimate_beats_exact_tables() {
+        // The area headline: at the default chunk width the codebook
+        // ROMs + hash logic undercut the exact per-column ROM array.
+        let layer = ApproxLayer::train(&wmat(32, 288), 4, 4, &ApproxSpec::default(), 2);
+        let exact = cost::layer_lut_area(4, 32, 288);
+        assert!(
+            (layer.lut6 as f64) < exact,
+            "approx {} LUT6 vs exact {exact}",
+            layer.lut6
+        );
+    }
+}

@@ -56,7 +56,7 @@
 
 use super::kernels;
 use super::network::Network;
-use super::plan::{NetworkPlan, PlanOp};
+use super::plan::{Multipliers, NetworkPlan, PlanOp};
 use super::scratch::{Scratch, ScratchPool};
 
 pub use super::plan::Datapath;
@@ -359,18 +359,30 @@ impl Executor {
                 PlanOp::Conv(cp) => {
                     let g = cp.geom;
                     let out_len = g.out_pixels() * g.cout;
-                    let rt = if cp.macs().saturating_mul(nb as u64) >= ROW_PAR_MIN_MACS {
-                        row_threads
+                    if let Multipliers::LutApprox { layer } = &cp.mults {
+                        // approx layers (DESIGN.md S24) run the two-pass
+                        // codebook driver over the arena's codes slot
+                        kernels::conv_batch_approx_into(
+                            cp,
+                            &s.ping[..nb * len],
+                            nb,
+                            &mut s.pong[..nb * out_len],
+                            &mut s.codes[..nb * layer.n_codebooks],
+                        );
                     } else {
-                        1
-                    };
-                    kernels::conv_batch_into(
-                        cp,
-                        &s.ping[..nb * len],
-                        nb,
-                        &mut s.pong[..nb * out_len],
-                        rt,
-                    );
+                        let rt = if cp.macs().saturating_mul(nb as u64) >= ROW_PAR_MIN_MACS {
+                            row_threads
+                        } else {
+                            1
+                        };
+                        kernels::conv_batch_into(
+                            cp,
+                            &s.ping[..nb * len],
+                            nb,
+                            &mut s.pong[..nb * out_len],
+                            rt,
+                        );
+                    }
                     std::mem::swap(&mut s.ping, &mut s.pong);
                     c = g.cout;
                     len = out_len;

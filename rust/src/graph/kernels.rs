@@ -50,6 +50,7 @@
 
 use crate::quant::saturating_res_add;
 
+use super::approx::ApproxLayer;
 use super::executor::Tensor;
 use super::network::ConvKind;
 use super::plan::{ConvPlan, DensePlan, Multipliers, PruneInfo};
@@ -119,12 +120,17 @@ pub fn conv_into(plan: &ConvPlan, x: &[i32], out: &mut [i32]) {
                     products[(row * plan.cols + col) * acts + a as usize]
                 })
             }
+            Multipliers::LutApprox { .. } => unreachable!(
+                "{}: approx plans are never pruned (compile_approx takes no PruneSpec)",
+                plan.name
+            ),
         };
     }
     match &plan.mults {
         Multipliers::LutTables { products, acts, .. } => {
             conv_cols(plan, x, out, products, *acts)
         }
+        Multipliers::LutApprox { layer } => conv_approx_cols(plan, layer, x, out),
         Multipliers::Weights => {
             conv_scalar(plan, x, out, |row, col, a| plan.wflat[row * plan.cols + col] * a)
         }
@@ -343,6 +349,65 @@ fn conv_cols(plan: &ConvPlan, x: &[i32], out: &mut [i32], products: &[i32], acts
 }
 
 // ---------------------------------------------------------------------
+// Approx bodies (DESIGN.md S24): Maddness codebook sweeps over a
+// `Multipliers::LutApprox` layer (std/pw only — plan compile gates
+// depthwise out). Per output pixel each codebook hashes its activation
+// sub-patch through the trained decision tree (`depth` compares over
+// the split-dimension columns only) and one row-contiguous table
+// column is axpy'd — `n_codebooks` accumulations instead of `cols`.
+// Zero-padded border taps feed activation code 0 into the hash (NOT
+// skipped like the exact bodies' zero columns: a prototype's partial
+// dot is not linear in single activations), which is also what the
+// saturated exact configuration needs — code 0's table entry is 0.
+// Codebook order is ascending in every approx entry point, so the
+// per-image, batch-major and patch bodies are bit-identical to each
+// other on any ApproxSpec.
+// ---------------------------------------------------------------------
+
+/// Per-image approx conv body: the output slot doubles as the
+/// accumulator, one table-column axpy per codebook, thresholds applied
+/// in place.
+fn conv_approx_cols(plan: &ConvPlan, layer: &ApproxLayer, x: &[i32], out: &mut [i32]) {
+    let g = plan.geom;
+    let (ho, wo) = (g.out_h(), g.out_w());
+    let (cin, cout) = (g.cin, g.cout);
+    for oy in 0..ho {
+        let y_interior = oy >= plan.oy_interior.0 && oy < plan.oy_interior.1;
+        for ox in 0..wo {
+            let o = &mut out[(oy * wo + ox) * cout..][..cout];
+            o.fill(0);
+            if y_interior && ox >= plan.ox_interior.0 && ox < plan.ox_interior.1 {
+                let base = ((oy * g.stride - g.pad) * g.in_w + (ox * g.stride - g.pad)) * cin;
+                for cb in 0..layer.n_codebooks {
+                    let code = layer
+                        .code_with(cb, |col| x[base + plan.tap_offsets[col / cin] + col % cin]);
+                    axpy(o, layer.table_col(cb, code));
+                }
+            } else {
+                for cb in 0..layer.n_codebooks {
+                    let code = layer.code_with(cb, |col| {
+                        let (tap, ci) = (col / cin, col % cin);
+                        at(
+                            x,
+                            g.in_w,
+                            cin,
+                            g.in_h,
+                            (oy * g.stride + tap / g.k) as isize - g.pad as isize,
+                            (ox * g.stride + tap % g.k) as isize - g.pad as isize,
+                            ci,
+                        )
+                    });
+                    axpy(o, layer.table_col(cb, code));
+                }
+            }
+            for (co, slot) in o.iter_mut().enumerate() {
+                *slot = plan.threshold(*slot, co);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
 // Sparse bodies (DESIGN.md S23): compacted-index sweeps over a pruned
 // plan's live rows/columns. `PruneInfo::live_cols` maps a compacted
 // column back to its dense (tap, ci) position for the activation read;
@@ -526,6 +591,17 @@ pub fn patch_out_into(plan: &ConvPlan, patch: &[i32], out: &mut [i32]) {
                 for (slot, &p) in out.iter_mut().zip(tbl) {
                     *slot += p;
                 }
+            }
+        }
+        (Multipliers::LutApprox { layer }, _) => {
+            // approx layers are std/pw only (plan compile gates Dw out),
+            // so the patch index IS the weight column: each codebook
+            // hashes straight off the patch and contributes one
+            // row-contiguous table column axpy.
+            out.fill(0);
+            for cb in 0..layer.n_codebooks {
+                let code = layer.code_with(cb, |col| patch[col]);
+                axpy(out, layer.table_col(cb, code));
             }
         }
         (_, ConvKind::Dw) => {
@@ -799,11 +875,18 @@ fn conv_batch_rows(plan: &ConvPlan, x: &[i32], nb: usize, out: &mut [i32], oy0: 
                     products[(row * plan.cols + col) * acts + a as usize]
                 })
             }
+            Multipliers::LutApprox { .. } => unreachable!(
+                "{}: approx plans are never pruned (compile_approx takes no PruneSpec)",
+                plan.name
+            ),
         };
     }
     match &plan.mults {
         Multipliers::LutTables { products, acts, .. } => {
             conv_batch_cols(plan, x, nb, out, products, *acts, oy0, oy1)
+        }
+        Multipliers::LutApprox { layer } => {
+            conv_batch_approx_rows(plan, layer, x, nb, out, oy0, oy1)
         }
         Multipliers::Weights => conv_batch_weights(plan, x, nb, out, oy0, oy1),
         Multipliers::LutDirect { mults } => {
@@ -915,6 +998,169 @@ fn conv_batch_cols(
                     }
                 }
                 n0 = n1;
+            }
+            for n in 0..nb {
+                let on = &mut o[n * cout..][..cout];
+                for (co, s) in on.iter_mut().enumerate() {
+                    *s = plan.threshold(*s, co);
+                }
+            }
+        }
+    }
+}
+
+/// Batch-major approx conv body over output rows `[oy0, oy1)` — the
+/// generic-dispatch arm of [`conv_batch_rows`]: codes are hashed inline
+/// per (codebook, image), so any caller (threaded row fan-out included)
+/// runs without scratch. The executor's sweep uses the two-pass
+/// [`conv_batch_approx_into`] over its `Scratch::codes` slot instead.
+fn conv_batch_approx_rows(
+    plan: &ConvPlan,
+    layer: &ApproxLayer,
+    x: &[i32],
+    nb: usize,
+    out: &mut [i32],
+    oy0: usize,
+    oy1: usize,
+) {
+    let g = plan.geom;
+    let wo = g.out_w();
+    let (cin, cout) = (g.cin, g.cout);
+    let tile = plan.batch_tile.min(nb);
+    let slot = nb * cout;
+    for oy in oy0..oy1 {
+        let y_interior = oy >= plan.oy_interior.0 && oy < plan.oy_interior.1;
+        for ox in 0..wo {
+            let o = &mut out[((oy - oy0) * wo + ox) * slot..][..slot];
+            o.fill(0);
+            let interior = y_interior && ox >= plan.ox_interior.0 && ox < plan.ox_interior.1;
+            let base_px = if interior {
+                (oy * g.stride - g.pad) * g.in_w + (ox * g.stride - g.pad)
+            } else {
+                0
+            };
+            let mut n0 = 0usize;
+            while n0 < nb {
+                let n1 = (n0 + tile).min(nb);
+                for cb in 0..layer.n_codebooks {
+                    for n in n0..n1 {
+                        let code = layer.code_with(cb, |col| {
+                            batch_col_read(plan, x, nb, oy, ox, interior, base_px, n, col)
+                        });
+                        axpy(&mut o[n * cout..][..cout], layer.table_col(cb, code));
+                    }
+                }
+                n0 = n1;
+            }
+            for n in 0..nb {
+                let on = &mut o[n * cout..][..cout];
+                for (co, s) in on.iter_mut().enumerate() {
+                    *s = plan.threshold(*s, co);
+                }
+            }
+        }
+    }
+}
+
+/// Zero-padded activation read for one weight column of one image from
+/// the interleaved `[pixel][nb][cin]` batch layout (the approx hash's
+/// column accessor; only split-dimension columns are ever read).
+#[inline]
+fn batch_col_read(
+    plan: &ConvPlan,
+    x: &[i32],
+    nb: usize,
+    oy: usize,
+    ox: usize,
+    interior: bool,
+    base_px: usize,
+    n: usize,
+    col: usize,
+) -> i32 {
+    let g = plan.geom;
+    let cin = g.cin;
+    let (tap, ci) = (col / cin, col % cin);
+    if interior {
+        x[(base_px + plan.tap_offsets[tap] / cin) * nb * cin + n * cin + ci]
+    } else {
+        let y = (oy * g.stride + tap / g.k) as isize - g.pad as isize;
+        let xx = (ox * g.stride + tap % g.k) as isize - g.pad as isize;
+        if y < 0 || xx < 0 || y >= g.in_h as isize || xx >= g.in_w as isize {
+            0
+        } else {
+            x[((y as usize * g.in_w + xx as usize) * nb + n) * cin + ci]
+        }
+    }
+}
+
+/// The executor's batch-major approx driver (DESIGN.md S24): a two-pass
+/// sweep over each output pixel's `[nb][cout]` slab. Pass 1 hashes
+/// every (codebook, image) code into the caller-owned `codes` arena
+/// (`Scratch::codes`, `[nb * n_codebooks]`); pass 2 walks codebooks
+/// outer / images inner so each codebook's `n_protos x rows` table slab
+/// stays cache-resident across the whole tile while the axpys read
+/// codes straight out of the arena. Bit-identical to the inline
+/// [`conv_batch_rows`] arm (same codebook-ascending accumulation
+/// order); zero allocation. Panics unless the plan's multiplier array
+/// is [`Multipliers::LutApprox`].
+pub fn conv_batch_approx_into(
+    plan: &ConvPlan,
+    x: &[i32],
+    nb: usize,
+    out: &mut [i32],
+    codes: &mut [u16],
+) {
+    let Multipliers::LutApprox { layer } = &plan.mults else {
+        panic!("{}: conv_batch_approx_into on a non-approx plan", plan.name)
+    };
+    let g = plan.geom;
+    assert!(nb >= 1, "{}: empty batch", plan.name);
+    assert_eq!(
+        x.len(),
+        g.in_pixels() * g.cin * nb,
+        "{}: batch input len disagrees with the compiled plan",
+        plan.name
+    );
+    assert_eq!(
+        out.len(),
+        g.out_pixels() * g.cout * nb,
+        "{}: batch output len disagrees with the compiled plan",
+        plan.name
+    );
+    assert!(
+        codes.len() >= nb * layer.n_codebooks,
+        "{}: codes arena holds {} slots, needs {}",
+        plan.name,
+        codes.len(),
+        nb * layer.n_codebooks
+    );
+    let (ho, wo) = (g.out_h(), g.out_w());
+    let cout = g.cout;
+    let ncb = layer.n_codebooks;
+    let slot = nb * cout;
+    for oy in 0..ho {
+        let y_interior = oy >= plan.oy_interior.0 && oy < plan.oy_interior.1;
+        for ox in 0..wo {
+            let o = &mut out[(oy * wo + ox) * slot..][..slot];
+            o.fill(0);
+            let interior = y_interior && ox >= plan.ox_interior.0 && ox < plan.ox_interior.1;
+            let base_px = if interior {
+                (oy * g.stride - g.pad) * g.in_w + (ox * g.stride - g.pad)
+            } else {
+                0
+            };
+            for cb in 0..ncb {
+                for n in 0..nb {
+                    codes[n * ncb + cb] = layer.code_with(cb, |col| {
+                        batch_col_read(plan, x, nb, oy, ox, interior, base_px, n, col)
+                    }) as u16;
+                }
+            }
+            for cb in 0..ncb {
+                for n in 0..nb {
+                    let code = codes[n * ncb + cb] as usize;
+                    axpy(&mut o[n * cout..][..cout], layer.table_col(cb, code));
+                }
             }
             for n in 0..nb {
                 let on = &mut o[n * cout..][..cout];

@@ -5,6 +5,7 @@
 //! tensor arenas the zero-allocation kernels run in (`scratch`) and the
 //! reference integer executor (`executor`).
 
+pub mod approx;
 pub mod arch;
 pub mod executor;
 pub mod kernels;
@@ -13,6 +14,7 @@ pub mod plan;
 pub mod prune;
 pub mod scratch;
 
+pub use approx::{ApproxLayer, ApproxSpec};
 pub use arch::{mobilenet_v2_full, mobilenet_v2_small, ArchSpec, LayerSpec};
 pub use executor::{decode_test_images, Datapath, Executor, Tensor};
 pub use network::{ConvKind, Network, Op};

@@ -34,6 +34,7 @@
 
 use crate::fabric::lutmul::ConstMultiplier;
 
+use super::approx::{layer_seed, ApproxLayer, ApproxSpec};
 use super::network::{ConvKind, Network, Op};
 use super::prune::PruneSpec;
 
@@ -141,6 +142,17 @@ pub enum Multipliers {
         acts: usize,
         lut6: usize,
     },
+    /// Maddness-style approximate codebook datapath (DESIGN.md S24):
+    /// the column space is chunked into codebooks, each chunk's
+    /// activation sub-patch hashes through a trained decision tree to a
+    /// prototype code, and the precomputed weight-row x prototype dot
+    /// products accumulate straight out of row-contiguous codebook
+    /// tables — one axpy per *codebook* instead of one per column.
+    /// Approximate by construction (bit-exact only in the saturated
+    /// [`ApproxSpec`] configuration); compiled by
+    /// [`NetworkPlan::compile_approx`] for std/pw `lut_ok` layers,
+    /// everything else keeps its exact lowering.
+    LutApprox { layer: ApproxLayer },
 }
 
 /// Which multiplier representation the plan lowering compiles LUT
@@ -243,7 +255,14 @@ fn batch_tile_for(cout: usize) -> usize {
 }
 
 impl ConvPlan {
-    fn build(op: &Op, in_hw: usize, datapath: Datapath, mode: TableMode, spec: Option<&PruneSpec>) -> Self {
+    fn build(
+        op: &Op,
+        in_hw: usize,
+        datapath: Datapath,
+        mode: TableMode,
+        spec: Option<&PruneSpec>,
+        approx: Option<&ApproxSpec>,
+    ) -> Self {
         let Op::Conv {
             name,
             kind,
@@ -300,10 +319,30 @@ impl ConvPlan {
         // outside the envelope multiply arithmetically, like the paper's
         // DSP-packed 8-bit first/last layers.
         let lut_ok = *w_bits <= 4 && *in_bits <= 4 && *in_bits <= *w_bits;
-        let mults = if datapath == Datapath::LutFabric && lut_ok {
-            Self::lut_multipliers(wmat, *w_bits, mode)
-        } else {
-            Multipliers::Weights
+        // The approximate datapath (DESIGN.md S24) covers std/pw layers
+        // inside the LUT envelope: depthwise convs run per-channel
+        // patch subspaces a shared codebook cannot quantize (Maddness
+        // targets GEMM-shaped layers), and pruned plans keep their
+        // exact compacted tables — so those, like the >4-bit layers,
+        // fall through to the exact lowering below.
+        let approx_ok = datapath == Datapath::LutFabric
+            && lut_ok
+            && *kind != ConvKind::Dw
+            && !pruned;
+        let mults = match approx {
+            Some(aspec) if approx_ok => Multipliers::LutApprox {
+                layer: ApproxLayer::train(
+                    wmat,
+                    *w_bits,
+                    *in_bits,
+                    aspec,
+                    layer_seed(aspec.seed, name),
+                ),
+            },
+            _ if datapath == Datapath::LutFabric && lut_ok => {
+                Self::lut_multipliers(wmat, *w_bits, mode)
+            }
+            _ => Multipliers::Weights,
         };
         // The count-based quantizer ([`threshold`](Self::threshold)) is a
         // partition point over each channel's threshold row, which is
@@ -454,6 +493,10 @@ impl ConvPlan {
             Multipliers::LutTablesMacMajor { products, acts, .. } => {
                 products[(row * self.cols + col) * acts + act as usize]
             }
+            Multipliers::LutApprox { .. } => unreachable!(
+                "LutApprox has no per-element product; the kernels dispatch \
+                 approx layers to the codebook bodies"
+            ),
         }
     }
 
@@ -466,6 +509,7 @@ impl ConvPlan {
                 let wrow = &self.wflat[row * self.cols..(row + 1) * self.cols];
                 wrow.iter().zip(patch).map(|(w, a)| w * a).sum()
             }
+            Multipliers::LutApprox { layer } => layer.dot(row, patch),
             _ => (0..patch.len()).map(|col| self.mul(row, col, patch[col])).sum(),
         }
     }
@@ -480,6 +524,7 @@ impl ConvPlan {
             }
             Multipliers::LutTables { lut6, .. }
             | Multipliers::LutTablesMacMajor { lut6, .. } => *lut6,
+            Multipliers::LutApprox { layer } => layer.lut6,
         }
     }
 
@@ -545,7 +590,7 @@ impl NetworkPlan {
     /// primitives into activation-major tables
     /// ([`Multipliers::LutTables`]).
     pub fn compile(net: &Network, datapath: Datapath) -> Self {
-        Self::lower(net, datapath, TableMode::ActMajor, None)
+        Self::lower(net, datapath, TableMode::ActMajor, None, None)
     }
 
     /// Like [`compile`](Self::compile), but `LutFabric` layers keep the
@@ -553,7 +598,7 @@ impl NetworkPlan {
     /// memoized tables — the pre-compilation baseline the bench and the
     /// equivalence tests run against.
     pub fn compile_direct(net: &Network, datapath: Datapath) -> Self {
-        Self::lower(net, datapath, TableMode::Direct, None)
+        Self::lower(net, datapath, TableMode::Direct, None, None)
     }
 
     /// Like [`compile`](Self::compile), but memoized tables keep the
@@ -561,7 +606,7 @@ impl NetworkPlan {
     /// pre-activation-major baseline `benches/bench_kernels.rs` and
     /// `make kernel-smoke` gate the LUT-GEMM speedup against.
     pub fn compile_mac_major(net: &Network, datapath: Datapath) -> Self {
-        Self::lower(net, datapath, TableMode::MacMajor, None)
+        Self::lower(net, datapath, TableMode::MacMajor, None, None)
     }
 
     /// Like [`compile`](Self::compile), with a structured-pruning pass
@@ -573,22 +618,43 @@ impl NetworkPlan {
     /// `PruneSpec::masked_network` on every datapath and batch size
     /// (tests/prune.rs).
     pub fn compile_pruned(net: &Network, datapath: Datapath, spec: &PruneSpec) -> Self {
-        Self::lower(net, datapath, TableMode::ActMajor, (!spec.is_noop()).then_some(spec))
+        Self::lower(net, datapath, TableMode::ActMajor, (!spec.is_noop()).then_some(spec), None)
     }
 
     /// [`compile_direct`](Self::compile_direct) with a pruning pass —
     /// the per-MAC readout witness over the compacted multipliers.
     pub fn compile_pruned_direct(net: &Network, datapath: Datapath, spec: &PruneSpec) -> Self {
-        Self::lower(net, datapath, TableMode::Direct, (!spec.is_noop()).then_some(spec))
+        Self::lower(net, datapath, TableMode::Direct, (!spec.is_noop()).then_some(spec), None)
     }
 
     /// [`compile_mac_major`](Self::compile_mac_major) with a pruning
     /// pass — the MAC-major table witness over the compacted matrix.
     pub fn compile_pruned_mac_major(net: &Network, datapath: Datapath, spec: &PruneSpec) -> Self {
-        Self::lower(net, datapath, TableMode::MacMajor, (!spec.is_noop()).then_some(spec))
+        Self::lower(net, datapath, TableMode::MacMajor, (!spec.is_noop()).then_some(spec), None)
     }
 
-    fn lower(net: &Network, datapath: Datapath, mode: TableMode, spec: Option<&PruneSpec>) -> Self {
+    /// Like [`compile`](Self::compile), but every eligible layer
+    /// (std/pw inside the `lut_ok` envelope) is lowered to the
+    /// Maddness-style approximate codebook datapath
+    /// ([`Multipliers::LutApprox`], DESIGN.md S24): hash trees and
+    /// prototype tables are trained here, at compile time, from the
+    /// network's weights and a seeded synthetic patch stream, so the
+    /// compile is deterministic. Depthwise and out-of-envelope layers
+    /// keep their exact lowering — the approximate plan differs from
+    /// [`compile`](Self::compile) only where the codebooks apply.
+    /// Does not compose with pruning (a compacted matrix would retrain
+    /// different codebooks; prune or approximate, not both).
+    pub fn compile_approx(net: &Network, datapath: Datapath, spec: &ApproxSpec) -> Self {
+        Self::lower(net, datapath, TableMode::ActMajor, None, Some(spec))
+    }
+
+    fn lower(
+        net: &Network,
+        datapath: Datapath,
+        mode: TableMode,
+        spec: Option<&PruneSpec>,
+        approx: Option<&ApproxSpec>,
+    ) -> Self {
         let mut hw = net.meta.image_size;
         let ops = net
             .ops
@@ -596,7 +662,7 @@ impl NetworkPlan {
             .map(|op| match op {
                 Op::Input { .. } => PlanOp::Input,
                 Op::Conv { .. } => {
-                    let plan = ConvPlan::build(op, hw, datapath, mode, spec);
+                    let plan = ConvPlan::build(op, hw, datapath, mode, spec, approx);
                     hw = plan.geom.out_h();
                     PlanOp::Conv(plan)
                 }

@@ -24,7 +24,7 @@
 //! activation tensors (pruned channels hold their constant code), so
 //! the same arena serves a plan and its pruned variants interchangeably.
 
-use super::plan::{NetworkPlan, PlanOp};
+use super::plan::{Multipliers, NetworkPlan, PlanOp};
 
 /// Working buffers for one in-flight image. All fields are sized by
 /// [`ensure`](Self::ensure) before a run; kernels slice them to the
@@ -43,6 +43,11 @@ pub struct Scratch {
     pub(crate) pooled: Vec<i32>,
     /// Dense-head accumulator (`i64` blocked accumulation).
     pub(crate) acc64: Vec<i64>,
+    /// Maddness codebook codes of one output pixel's batch tile
+    /// (DESIGN.md S24): `[nb][n_codebooks]` for the widest approx layer
+    /// of the plan. Empty on plans without `Multipliers::LutApprox`
+    /// layers, so exact plans pay nothing.
+    pub(crate) codes: Vec<u16>,
 }
 
 impl Scratch {
@@ -79,6 +84,7 @@ impl Scratch {
         let mut max_ch = ch;
         let (mut depth, mut res_depth) = (0usize, 0usize);
         let mut dense_cout = 0usize;
+        let mut max_codebooks = 0usize;
         for op in &plan.ops {
             match op {
                 PlanOp::Input => {}
@@ -86,6 +92,9 @@ impl Scratch {
                 PlanOp::Conv(c) => {
                     hw = c.geom.out_h();
                     ch = c.geom.cout;
+                    if let Multipliers::LutApprox { layer } = &c.mults {
+                        max_codebooks = max_codebooks.max(layer.n_codebooks);
+                    }
                 }
                 PlanOp::ResPush { .. } => {
                     depth += 1;
@@ -124,6 +133,10 @@ impl Scratch {
         if self.acc64.len() < dense_cout {
             self.acc64.resize(dense_cout, 0);
         }
+        let codes = max_codebooks * nb;
+        if self.codes.len() < codes {
+            self.codes.resize(codes, 0);
+        }
     }
 
     /// Poison every buffer with `fill` — tests drive deliberately
@@ -134,6 +147,7 @@ impl Scratch {
         self.pong.fill(fill);
         self.pooled.fill(fill);
         self.acc64.fill(fill as i64);
+        self.codes.fill(fill as u16);
         for slot in &mut self.res {
             slot.clear();
             let cap = slot.capacity();

@@ -18,8 +18,10 @@
 //!   ([`synth`]), roofline analysis ([`roofline`]), baseline accelerator
 //!   models ([`baselines`]), the PJRT runtime that executes the AOT
 //!   artifacts ([`runtime`]), the async serving coordinator
-//!   ([`coordinator`]), and the network-facing serving tier with its
-//!   open-loop load generator ([`serve`], [`loadgen`]).
+//!   ([`coordinator`]), the network-facing serving tier with its
+//!   open-loop load generator ([`serve`], [`loadgen`]), and the
+//!   accuracy harness charting the accuracy–speed–area Pareto front of
+//!   the exact, pruned and Maddness-approximate datapaths ([`eval`]).
 //!
 //! The inference path is batch-major end to end: the coordinator's
 //! dynamic batcher dispatches whole batches to persistent per-worker
@@ -51,6 +53,7 @@ pub mod coordinator;
 pub mod util;
 pub mod dataflow;
 pub mod engine;
+pub mod eval;
 pub mod fabric;
 pub mod graph;
 pub mod loadgen;

@@ -72,6 +72,19 @@ COMMANDS:
          --sparsity S adds a structurally pruned compile at channel
          sparsity S plus its masked-dense witness (rows carry a
          \"sparsity\" field in the JSON)
+  eval   [--n N] [--seed S] [--sparsity S] [--pareto] [--json] [--floor F]
+         [--saturated]
+         score every datapath's top-1/top-5 on a labeled test set (the
+         trained artifact set when built, a labeled synthetic set
+         otherwise — seeded images labeled by the exact datapath's own
+         argmax, so exact rows score 100% by construction) next to
+         throughput and LUT area. --pareto adds the mac-major witness
+         and the saturated-approx anchor; --sparsity S adds a pruned row
+         (its top-1 delta is the pruning accuracy cost); --saturated
+         evaluates the saturated (bit-exact) approx config; --floor F
+         fails unless the approx row's top-1 >= F (`make eval-smoke`);
+         --json emits the Pareto front with the bench --json schema
+         (rows carry top1/top5/lut6, approx rows \"approx\": true)
   synth  [--arch full|small] [--fraction D]
   util   [--arch full|small]          Vivado-style utilization report
   netlist [--layer NAME]              structural Verilog for a trained layer
@@ -79,11 +92,15 @@ COMMANDS:
          analytic multi-FPGA plan; --run executes the sharded chain on the
          small network (trained artifacts when built, its synthetic twin
          otherwise) and prints measured-vs-modeled FPS
-  report <table1|fig1|fig2|fig6|table2|multi|prune>
+  report <table1|fig1|fig2|fig6|table2|multi|prune|approx>
          prune [--sparsity S] [--fold F] [--n N]: per-layer LUT-area and
          cycle savings of a structurally pruned compile, with the
          simulated pruned pipeline cross-checked against the analytic
          steady-state FPS and the masked-dense executor (DESIGN.md S23)
+         approx [--cols C] [--depth D] [--n N]: per-layer LUT-area and
+         accumulation savings of a Maddness-approximate compile, with
+         the saturated config cross-checked bit-exact against the exact
+         executor (DESIGN.md S24; accuracy lives in `lutmul eval`)
 
 Malformed flag values and unknown flags are hard errors.
 ";
@@ -212,6 +229,13 @@ fn main() -> Result<()> {
                 args.get("sparsity", 0.0f64)?,
             )
         }
+        Some("eval") => {
+            args.check_flags(
+                "eval",
+                &["artifacts", "n", "seed", "sparsity", "pareto", "json", "floor", "saturated"],
+            )?;
+            eval_cmd(&artifacts, &args)
+        }
         Some("synth") => {
             args.check_flags("synth", &["artifacts", "arch", "fraction"])?;
             synth(&args.get::<String>("arch", "full".into())?, args.get("fraction", 1u64)?)
@@ -233,7 +257,7 @@ fn main() -> Result<()> {
             }
         }
         Some("report") => {
-            args.check_flags("report", &["artifacts", "sparsity", "fold", "n"])?;
+            args.check_flags("report", &["artifacts", "sparsity", "fold", "n", "cols", "depth"])?;
             let what = args.positional.get(1).cloned().unwrap_or_default();
             report(&artifacts, &what, &args)
         }
@@ -850,6 +874,112 @@ fn bench_backends(
     Ok(())
 }
 
+/// `lutmul eval` (EXPERIMENTS.md E17): the accuracy half of the
+/// Maddness trade. Scores every datapath's top-1/top-5 on a labeled
+/// test set next to measured throughput and the plan's LUT6 estimate —
+/// the accuracy–speed–area Pareto front `lutmul report approx`'s area
+/// story is incomplete without. Labels come from the trained artifact
+/// test set when built; otherwise from `Network::synthetic_labeled`
+/// (seeded images labeled by the exact datapath's own argmax), so the
+/// exact rows score 100% by construction and every other row reads as
+/// agreement with the exact model. `--floor F` turns the approx row's
+/// top-1 into a CI gate (`make eval-smoke`).
+fn eval_cmd(artifacts: &Artifacts, args: &Args) -> Result<()> {
+    use lutmul::eval;
+    use lutmul::graph::ApproxSpec;
+
+    let json = args.has("json");
+    macro_rules! say {
+        ($($t:tt)*) => {
+            if json { eprintln!($($t)*) } else { println!($($t)*) }
+        };
+    }
+    let engine = Engine::builder()
+        .arch(Arch::Small)
+        .artifacts(artifacts)
+        .or_synthetic(0x5EED)
+        .backend(BackendKind::Reference)
+        .build()?;
+    let n = args.get("n", 32usize)?.max(1);
+    let seed = args.get("seed", 0xE7A1u64)?;
+    let sparsity = args.get("sparsity", 0.0f64)?;
+    let floor = args.get("floor", -1.0f64)?;
+    let spec =
+        if args.has("saturated") { ApproxSpec::saturated() } else { ApproxSpec::default() };
+
+    // labeled inputs: the artifact test set for a trained network, the
+    // exact-datapath-labeled synthetic set otherwise
+    let (images, labels, label_src) = match engine.labeled_test_set() {
+        Ok((imgs, labs)) => {
+            let n = n.min(imgs.len());
+            (imgs[..n].to_vec(), labs[..n].to_vec(), "artifact test set")
+        }
+        Err(_) => {
+            let (imgs, labs) = engine.net().synthetic_labeled(n, seed);
+            (imgs, labs, "synthetic, exact-datapath argmax")
+        }
+    };
+    let threads = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    let cfg = eval::ParetoConfig { sparsity, spec, full: args.has("pareto"), threads };
+    say!(
+        "eval: {} | {} images (labels: {label_src}) | approx {} col(s)/codebook depth {}",
+        engine.source().label(),
+        images.len(),
+        spec.cols_per_codebook,
+        spec.depth,
+    );
+    let rows = eval::pareto(engine.net(), &images, &labels, &cfg)?;
+    if json {
+        eprint!("{}", eval::table(&rows));
+        let invocation = format!(
+            "lutmul eval --n {n}{}{} --json",
+            if cfg.full { " --pareto" } else { "" },
+            if sparsity > 0.0 { format!(" --sparsity {sparsity}") } else { String::new() },
+        );
+        println!(
+            "{}",
+            eval::json(&rows, &invocation, engine.source().label(), images.len())
+        );
+    } else {
+        print!("{}", eval::table(&rows));
+    }
+
+    // accuracy deltas vs the exact row — the numbers the trade is about
+    let exact = rows
+        .iter()
+        .find(|r| r.backend == "executor/lut-exact")
+        .expect("pareto always emits the exact row");
+    let approx_row = rows
+        .iter()
+        .find(|r| r.approx)
+        .expect("pareto always emits the approx row");
+    say!(
+        "approx top-1 delta vs exact: {:+.1} pts ({:.1}% -> {:.1}%) at {:.2}x LUT area",
+        100.0 * (approx_row.score.top1 - exact.score.top1),
+        100.0 * exact.score.top1,
+        100.0 * approx_row.score.top1,
+        approx_row.lut6 as f64 / exact.lut6.max(1) as f64,
+    );
+    if let Some(pruned) = rows.iter().find(|r| r.sparsity > 0.0) {
+        say!(
+            "pruned top-1 delta vs exact (sparsity {:.2}): {:+.1} pts ({:.1}% -> {:.1}%)",
+            pruned.sparsity,
+            100.0 * (pruned.score.top1 - exact.score.top1),
+            100.0 * exact.score.top1,
+            100.0 * pruned.score.top1,
+        );
+    }
+    if floor >= 0.0 {
+        anyhow::ensure!(
+            approx_row.score.top1 >= floor,
+            "approx top-1 {:.4} fell below the --floor {floor:.4} gate",
+            approx_row.score.top1
+        );
+        say!("approx top-1 {:.4} >= floor {floor:.4}: OK", approx_row.score.top1);
+    }
+    Ok(())
+}
+
 fn synth(arch: &str, fraction: u64) -> Result<()> {
     let spec = match arch {
         "small" => mobilenet_v2_small(),
@@ -1038,8 +1168,17 @@ fn report(artifacts: &Artifacts, what: &str, args: &Args) -> Result<()> {
                 args.get("n", 6usize)?,
             )
         }
+        "approx" => {
+            return lutmul::reports::approx(
+                args.get("cols", 4usize)?,
+                args.get("depth", 4usize)?,
+                args.get("n", 6usize)?,
+            )
+        }
         other => {
-            anyhow::bail!("unknown report '{other}'; try table1|fig1|fig2|fig6|table2|multi|prune")
+            anyhow::bail!(
+                "unknown report '{other}'; try table1|fig1|fig2|fig6|table2|multi|prune|approx"
+            )
         }
     }
     Ok(())

@@ -8,7 +8,10 @@ use crate::dataflow::{FoldConfig, Pipeline};
 use crate::fabric::cost::layer_lut_area;
 use crate::fabric::device::{u280_datasheet_int8_tops, U280, V100};
 use crate::graph::plan::{Datapath, NetworkPlan};
-use crate::graph::{mobilenet_v2_full, mobilenet_v2_small, Executor, Network, Op, PruneSpec, Tensor};
+use crate::graph::{
+    mobilenet_v2_full, mobilenet_v2_small, ApproxSpec, Executor, Multipliers, Network, Op,
+    PruneSpec, Tensor,
+};
 use crate::roofline;
 use crate::synth::breakdown::{fig6_breakdown, Fig6Published};
 use crate::synth::design::Design;
@@ -253,6 +256,141 @@ pub fn table2() {
         baselines::lutmul_published().fps / finn.fps,
         style.fps() / finn.fps
     );
+}
+
+/// `lutmul report approx` (DESIGN.md S24 / EXPERIMENTS.md E17):
+/// per-layer LUT-area and accumulation savings of a Maddness-style
+/// approximate compile of the synthetic MobileNetV2-small network. Two
+/// cross-checks close the loop: the **saturated** configuration
+/// (`cols_per_codebook = 1`) must reproduce the exact LUT-fabric
+/// executor bit-for-bit (the degenerate-exactness anchor of
+/// `graph::approx`), and the measured batch throughput of the
+/// approximate executor is printed next to the exact one so the
+/// accumulation saving is visible as wall-clock, not just as a count.
+/// Accuracy is deliberately *not* gated here — that is `lutmul eval`'s
+/// job; this report owns the area/cycle side of the trade.
+pub fn approx(cols_per_codebook: usize, depth: usize, n: usize) -> anyhow::Result<()> {
+    anyhow::ensure!(cols_per_codebook >= 1, "--cols must be >= 1, got {cols_per_codebook}");
+    anyhow::ensure!((1..=8).contains(&depth), "--depth must be in 1..=8, got {depth}");
+    let net = Network::synthetic(&mobilenet_v2_small(), 0x5EED);
+    let spec = ApproxSpec { cols_per_codebook, depth, ..ApproxSpec::default() };
+    let exact = NetworkPlan::compile(&net, Datapath::LutFabric);
+    let approx = NetworkPlan::compile_approx(&net, Datapath::LutFabric, &spec);
+    let w_bits: Vec<u32> = net
+        .ops
+        .iter()
+        .filter_map(|op| match op {
+            Op::Conv { w_bits, .. } => Some(*w_bits),
+            _ => None,
+        })
+        .collect();
+
+    println!(
+        "Maddness approximate datapath: synthetic MobileNetV2-small, {cols_per_codebook} \
+         col(s)/codebook, depth {depth}, LUT-fabric datapath"
+    );
+    println!(
+        "{:<12}{:>16}{:>15}{:>18}{:>17}",
+        "layer", "cols->codebooks", "axpys/pixel", "LUT6 tables", "LUT area(impl)"
+    );
+    // accumulation counts: one axpy per column exactly, one per codebook
+    // approximately — the layer-level MAC fraction that feeds the roofline
+    let (mut area_exact, mut area_approx) = (0.0f64, 0.0f64);
+    let (mut live, mut full) = (0u64, 0u64);
+    for (i, (ec, ac)) in exact.convs().zip(approx.convs()).enumerate() {
+        let bits = w_bits[i];
+        let ae = layer_lut_area(bits, ec.geom.cout, ec.cols);
+        area_exact += ae;
+        full += ec.macs();
+        match &ac.mults {
+            Multipliers::LutApprox { layer } => {
+                let aa = layer.lut6 as f64;
+                area_approx += aa;
+                live += ac.geom.out_pixels() as u64
+                    * ac.rows() as u64
+                    * layer.n_codebooks as u64;
+                println!(
+                    "{:<12}{:>16}{:>15}{:>18}{:>17}",
+                    ac.name,
+                    format!("{}->{}", ac.cols, layer.n_codebooks),
+                    format!("{}->{}", ac.cols, layer.n_codebooks),
+                    format!("{}->{}", ec.lut_count(), ac.lut_count()),
+                    format!("{ae:.0}->{aa:.0}"),
+                );
+            }
+            // dw layers (and any non-lut_ok layer) keep their exact
+            // lowering — printed so the coverage is visible
+            _ => {
+                area_approx += ae;
+                live += ec.macs();
+                println!(
+                    "{:<12}{:>16}{:>15}{:>18}{:>17}",
+                    ac.name,
+                    format!("{} (exact)", ac.cols),
+                    format!("{}", ac.cols),
+                    format!("{}", ec.lut_count()),
+                    format!("{ae:.0}"),
+                );
+            }
+        }
+    }
+    let frac = live as f64 / full.max(1) as f64;
+    println!(
+        "totals: {live}/{full} accumulations (MAC fraction {frac:.3}) | LUT area {area_exact:.0} -> {area_approx:.0} ({:+.1}%)",
+        100.0 * (area_approx - area_exact) / area_exact.max(1.0),
+    );
+    let slice = U280.fraction(64);
+    let f_hz = 333e6;
+    println!(
+        "roofline (1/64 U280, W4A4): exact peak {:.1} GOPS -> effective {:.1} GOPS at MAC fraction {frac:.3}",
+        roofline::lutmul_peak(&slice, 4, f_hz) / 1e9,
+        roofline::lutmul_peak_approx(&slice, 4, f_hz, frac) / 1e9,
+    );
+
+    // measured throughput: the same seeded batch through the exact and
+    // approximate batch-major executors
+    let n = n.max(2);
+    let (hw, ch) = (net.meta.image_size, net.meta.in_ch);
+    let amax = 1i64 << net.meta.a_bits.max(1);
+    let mut s = 0x0123_4567_89ab_cdefu64;
+    let tensors: Vec<Tensor> = (0..n)
+        .map(|_| {
+            let v: Vec<i32> = (0..hw * hw * ch)
+                .map(|_| {
+                    s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+                    ((s >> 40) as i64).rem_euclid(amax) as i32
+                })
+                .collect();
+            Tensor::from_hwc(hw, hw, ch, v)
+        })
+        .collect();
+    let ex = Executor::from_plan(exact);
+    let t0 = std::time::Instant::now();
+    let exact_logits = ex.run_batch_with_threads(&tensors, 1);
+    let exact_ips = n as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+    let ax = Executor::from_plan(approx);
+    let t0 = std::time::Instant::now();
+    ax.run_batch_with_threads(&tensors, 1);
+    let approx_ips = n as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+    println!(
+        "executor throughput ({n} images, 1 thread): exact {exact_ips:.0} img/s -> approx {approx_ips:.0} img/s ({:.2}x)",
+        approx_ips / exact_ips.max(1e-9),
+    );
+
+    // the degenerate-exactness witness: the saturated configuration must
+    // reproduce the exact LUT-fabric datapath bit-for-bit
+    let sat = Executor::from_plan(NetworkPlan::compile_approx(
+        &net,
+        Datapath::LutFabric,
+        &ApproxSpec::saturated(),
+    ));
+    let sat_logits = sat.run_batch_with_threads(&tensors, 1);
+    anyhow::ensure!(
+        sat_logits == exact_logits,
+        "saturated approximate datapath diverged from the exact executor"
+    );
+    println!("saturated config bit-exact vs exact executor: {n}/{n} images");
+    Ok(())
 }
 
 /// `lutmul report prune` (DESIGN.md S23 / EXPERIMENTS.md E16): per-layer

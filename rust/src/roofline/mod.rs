@@ -56,6 +56,17 @@ pub fn lutmul_peak_pruned(slice: &FpgaSlice, bits: u32, freq_hz: f64, density: f
     lutmul_peak(slice, bits, freq_hz) / density.clamp(1e-6, 1.0)
 }
 
+/// LUTMUL peak for a Maddness-style approximate datapath (DESIGN.md
+/// S24): codebook hashing replaces the `cols` per-pixel MACs of a layer
+/// with `n_codebooks` table accumulations, so each *effective* dense op
+/// costs only `mac_fraction = n_codebooks / cols` of an exact LUT MAC.
+/// The dense-equivalent peak therefore rises by `1 / mac_fraction`
+/// (`NetworkPlan` reports the plan-wide fraction as approx MACs over
+/// dense MACs), clamped away from zero like the pruned roof.
+pub fn lutmul_peak_approx(slice: &FpgaSlice, bits: u32, freq_hz: f64, mac_fraction: f64) -> f64 {
+    lutmul_peak(slice, bits, freq_hz) / mac_fraction.clamp(1e-6, 1.0)
+}
+
 /// Eq. (2)-style memory roof: attainable ops/s at arithmetic intensity
 /// `ai` (ops/byte) with bandwidth `bw` (bytes/s).
 pub fn memory_roof(bw_bytes_per_s: f64, ai: f64) -> f64 {
@@ -188,6 +199,19 @@ mod tests {
         // degenerate densities stay finite and never fall below dense
         assert!(lutmul_peak_pruned(&slice, 4, f, 0.0).is_finite());
         assert!(lutmul_peak_pruned(&slice, 4, f, 2.0) >= dense);
+    }
+
+    #[test]
+    fn approx_peak_scales_inverse_with_mac_fraction() {
+        let slice = U280.fraction(64);
+        let f = 333e6;
+        let dense = lutmul_peak(&slice, 4, f);
+        assert_eq!(lutmul_peak_approx(&slice, 4, f, 1.0), dense);
+        // default chunking (4 cols per codebook) quarters the per-pixel work
+        let quarter = lutmul_peak_approx(&slice, 4, f, 0.25);
+        assert!((quarter - 4.0 * dense).abs() < 1e-6 * dense, "4x at 1/4 MACs");
+        assert!(lutmul_peak_approx(&slice, 4, f, 0.0).is_finite());
+        assert!(lutmul_peak_approx(&slice, 4, f, 2.0) >= dense);
     }
 
     #[test]

@@ -1,0 +1,173 @@
+//! Accuracy-harness conformance (DESIGN.md S24 / EXPERIMENTS.md E17):
+//! the labeled synthetic set is deterministic and self-consistent, the
+//! exact datapaths score 100% against their own labels, the saturated
+//! approximate configuration is bit-exact (and therefore also scores
+//! 100%), the learned configuration clears a conservative seeded
+//! agreement floor, the Pareto JSON schema stays stable for
+//! `scripts/bench_regress.py`, and the approximate plan agrees
+//! bit-for-bit across the executor and pipeline backends.
+
+use lutmul::dataflow::{FoldConfig, Pipeline};
+use lutmul::eval::{self, ParetoConfig};
+use lutmul::graph::plan::{Datapath, NetworkPlan};
+use lutmul::graph::{mobilenet_v2_small, ApproxSpec, Executor, Network, Tensor};
+
+fn net() -> Network {
+    Network::synthetic(&mobilenet_v2_small(), 0x5EED)
+}
+
+#[test]
+fn labeled_synthetic_set_is_deterministic() {
+    let net = net();
+    let (ia, la) = net.synthetic_labeled(8, 0xE7A1);
+    let (ib, lb) = net.synthetic_labeled(8, 0xE7A1);
+    assert_eq!(ia, ib, "images must be seed-deterministic");
+    assert_eq!(la, lb, "labels must be seed-deterministic");
+    assert_eq!(ia.len(), 8);
+    assert_eq!(la.len(), 8);
+    let io = net.io();
+    let px = io.image_size * io.image_size * io.in_ch;
+    let amax = (1i32 << net.meta.a_bits) - 1;
+    assert!(ia.iter().all(|img| img.len() == px));
+    assert!(ia.iter().flatten().all(|&v| (0..=amax).contains(&v)));
+    assert!(la.iter().all(|&y| (y as usize) < net.meta.num_classes));
+    // a different seed draws a different set
+    let (ic, _) = net.synthetic_labeled(8, 0xE7A2);
+    assert_ne!(ia, ic, "distinct seeds must draw distinct images");
+}
+
+#[test]
+fn exact_datapaths_score_full_marks_on_their_own_labels() {
+    let net = net();
+    let (images, labels) = net.synthetic_labeled(6, 3);
+    let cfg = ParetoConfig { sparsity: 0.4, full: true, ..ParetoConfig::default() };
+    let rows = eval::pareto(&net, &images, &labels, &cfg).unwrap();
+    // full front: exact, mac-major, pruned, approx, saturated approx
+    assert_eq!(rows.len(), 5);
+    for r in &rows {
+        assert!(r.images_per_s > 0.0, "{}: no throughput measured", r.backend);
+        assert!(r.lut6 > 0, "{}: LUT-fabric plan must cost LUT6", r.backend);
+        assert_eq!(r.score.n, 6);
+    }
+    for exact in ["executor/lut-exact", "executor/lut-mac-major"] {
+        let r = rows.iter().find(|r| r.backend == exact).unwrap();
+        assert_eq!(r.score.top1, 1.0, "{exact} must reproduce the labeling datapath");
+        assert_eq!(r.score.top5, 1.0);
+        assert!(!r.approx);
+    }
+    let pruned = rows.iter().find(|r| r.sparsity > 0.0).unwrap();
+    assert_eq!(pruned.backend, "executor/lut-sparse");
+    assert!(
+        pruned.score.top1 <= 1.0 && pruned.score.top5 >= pruned.score.top1,
+        "pruned scores must be a sane pair"
+    );
+    // the saturated anchor is exact by construction
+    let sat = rows.iter().find(|r| r.backend == "executor/lut-approx-sat").unwrap();
+    assert!(sat.approx);
+    assert_eq!(sat.score.top1, 1.0, "saturated approx must be bit-exact end to end");
+    assert_eq!(sat.score.top5, 1.0);
+}
+
+#[test]
+fn saturated_approx_logits_are_bit_exact() {
+    let net = net();
+    let io = net.io();
+    let (images, _) = net.synthetic_labeled(5, 11);
+    let tensors: Vec<Tensor> = images
+        .iter()
+        .map(|v| Tensor::from_hwc(io.image_size, io.image_size, io.in_ch, v.clone()))
+        .collect();
+    let exact = Executor::from_plan(NetworkPlan::compile(&net, Datapath::LutFabric));
+    let sat = Executor::from_plan(NetworkPlan::compile_approx(
+        &net,
+        Datapath::LutFabric,
+        &ApproxSpec::saturated(),
+    ));
+    assert_eq!(
+        sat.run_batch_with_threads(&tensors, 1),
+        exact.run_batch_with_threads(&tensors, 1),
+        "saturated approx logits must equal the exact LUT-fabric logits bit-for-bit"
+    );
+}
+
+#[test]
+fn learned_approx_meets_the_seeded_agreement_floor() {
+    // The learned default configuration is approximate by design; the
+    // gate is a deliberately conservative floor on agreement with the
+    // exact model (10-class argmax) — it catches a collapsed datapath,
+    // not a mild accuracy regression. The whole path is seeded, so the
+    // score is one fixed number, not a flake source.
+    let net = net();
+    let (images, labels) = net.synthetic_labeled(24, 0xE7A1);
+    let rows = eval::pareto(&net, &images, &labels, &ParetoConfig::default()).unwrap();
+    let approx = rows.iter().find(|r| r.approx).unwrap();
+    assert!(
+        approx.score.top1 >= 0.05,
+        "learned approx top-1 {} collapsed below the 0.05 sanity floor",
+        approx.score.top1
+    );
+    assert!(approx.score.top5 >= approx.score.top1);
+}
+
+#[test]
+fn pareto_json_schema_is_stable() {
+    let net = net();
+    let (images, labels) = net.synthetic_labeled(4, 7);
+    let cfg = ParetoConfig { sparsity: 0.5, full: true, ..ParetoConfig::default() };
+    let rows = eval::pareto(&net, &images, &labels, &cfg).unwrap();
+    let doc = eval::json(&rows, "lutmul eval --pareto --json", "synthetic twin", 4);
+    // the top-level shape scripts/bench_regress.py keys on
+    for key in ["\"bench\":", "\"source\":", "\"n_images\": 4", "\"rows\": ["] {
+        assert!(doc.contains(key), "missing {key} in:\n{doc}");
+    }
+    // every row carries the bench-compatible fields plus the eval axes
+    for key in [
+        "\"backend\":",
+        "\"datapath\":",
+        "\"images_per_s\":",
+        "\"ns_per_image\":",
+        "\"top1\":",
+        "\"top5\":",
+        "\"lut6\":",
+    ] {
+        assert_eq!(
+            doc.matches(key).count(),
+            rows.len(),
+            "every row must carry {key}:\n{doc}"
+        );
+    }
+    // approx rows are tagged, pruned rows carry their sparsity, and
+    // dense exact rows omit both (historical-baseline compatibility)
+    assert_eq!(doc.matches("\"approx\": true").count(), 2);
+    assert_eq!(doc.matches("\"sparsity\": 0.50").count(), 1);
+    let exact_line = doc
+        .lines()
+        .find(|l| l.contains("executor/lut-exact"))
+        .expect("exact row present");
+    assert!(!exact_line.contains("approx") && !exact_line.contains("sparsity"));
+}
+
+#[test]
+fn approx_plan_agrees_across_executor_and_pipeline() {
+    // Cross-backend bit-identity of the approximate datapath: the
+    // executor's batch-major sweeps and the pipeline's per-patch bodies
+    // accumulate codebooks in the same order, so their i32 sums — and
+    // hence logits — must match exactly.
+    let net = net();
+    let io = net.io();
+    let (images, _) = net.synthetic_labeled(4, 21);
+    let plan = NetworkPlan::compile_approx(&net, Datapath::LutFabric, &ApproxSpec::default());
+    let folds = FoldConfig::uniform(plan.n_convs(), 1);
+    let mut pipe = Pipeline::from_plan(&plan, &folds, 16);
+    let report = pipe.run(&images).unwrap();
+    let tensors: Vec<Tensor> = images
+        .iter()
+        .map(|v| Tensor::from_hwc(io.image_size, io.image_size, io.in_ch, v.clone()))
+        .collect();
+    let ex = Executor::from_plan(plan);
+    assert_eq!(
+        report.logits,
+        ex.run_batch_with_threads(&tensors, 1),
+        "pipeline approx logits diverged from the executor"
+    );
+}

@@ -98,4 +98,29 @@ fn steady_state_run_batch_makes_zero_allocations() {
         );
         assert_eq!(out, want, "steady-state image-major batch changed its results ({dp:?})");
     }
+
+    // the Maddness approximate datapath (DESIGN.md S24) adds a per-batch
+    // codes arena (`Scratch::codes`); once sized it must hold the same
+    // steady-state guarantee through the batch-major sweep
+    let plan = lutmul::graph::plan::NetworkPlan::compile_approx(
+        &net,
+        Datapath::LutFabric,
+        &lutmul::graph::ApproxSpec::default(),
+    );
+    let ex = Executor::from_plan(plan);
+    let mut pool = ScratchPool::new();
+    let mut out = Vec::new();
+    ex.run_batch_into(&images, 1, &mut pool, &mut out);
+    let want = out.clone();
+    ALLOCS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    ex.run_batch_into(&images, 1, &mut pool, &mut out);
+    COUNTING.store(false, Ordering::SeqCst);
+    let n = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        n, 0,
+        "steady-state approx run_batch_into made {n} heap allocations \
+         (expected zero: codebook codes live in the persistent arena)"
+    );
+    assert_eq!(out, want, "steady-state approx batch changed its results");
 }

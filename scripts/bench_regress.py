@@ -2,19 +2,29 @@
 """Bench-trajectory regression gate (EXPERIMENTS.md E15).
 
 Usage: bench_regress.py BASELINE.json NEW.json [--tolerance 0.20]
+       bench_regress.py --selftest
 
 Compares the freshly measured ``images_per_s`` of every (backend,
-datapath, sparsity) row in NEW.json against the committed baseline and
-exits nonzero when any matching row dropped by more than the tolerance
-(default 20%). Rows only present on one side are reported but never
-fail the gate — backends come and go with features and runners, and a
-run with ``--sparsity`` adds pruned rows (keyed by their sparsity, so
-they can never collide with — or silently gate against — the dense
-trajectory; dense rows omit the field and key as sparsity 0).
+datapath, sparsity, approx) row in NEW.json against the committed
+baseline and exits nonzero when any matching row dropped by more than
+the tolerance (default 20%). Rows only present on one side are reported
+but never fail the gate — backends come and go with features and
+runners, and a run with ``--sparsity`` adds pruned rows (keyed by their
+sparsity, so they can never collide with — or silently gate against —
+the dense trajectory; dense rows omit the field and key as sparsity 0).
+Maddness-approximate rows (``lutmul eval --json``) carry ``"approx":
+true`` and key separately the same way, so the approximate datapath's
+throughput trajectory never gates against the exact one. Eval rows have
+no ``bit_exact`` field (they chart accuracy instead); bit-exactness is
+only enforced on rows that claim it.
 
 Skips (exit 0) when the baseline has no measured rows yet or is marked
 as a placeholder, so the gate arms itself automatically on the first
 commit of a measured BENCH_kernels.json.
+
+``--selftest`` runs the built-in unit checks (keying, gating, skip
+logic) with no files needed — wired into `make eval-smoke` / CI so the
+gate's own logic is tested on every run.
 """
 
 import json
@@ -28,18 +38,129 @@ def load(path):
 
 def rows_by_key(doc):
     return {
-        (r["backend"], r["datapath"], float(r.get("sparsity", 0.0))): r
+        (
+            r["backend"],
+            r["datapath"],
+            float(r.get("sparsity", 0.0)),
+            bool(r.get("approx", False)),
+        ): r
         for r in doc.get("rows", [])
     }
 
 
 def key_name(key):
-    backend, datapath, sparsity = key
+    backend, datapath, sparsity, approx = key
     suffix = f"@sparsity{sparsity:g}" if sparsity else ""
+    if approx:
+        suffix += "@approx"
     return f"{backend}/{datapath}{suffix}"
 
 
+def gate(base, new, tolerance, out=print):
+    """Core comparison: returns the list of failure strings."""
+    note = str(base.get("note", "")) + str(base.get("source", ""))
+    if not base.get("rows"):
+        out("bench-regress: baseline has no measured rows yet — skipping")
+        return []
+    if "placeholder" in note.lower():
+        out("bench-regress: baseline is marked placeholder — skipping")
+        return []
+
+    base_rows = rows_by_key(base)
+    new_rows = rows_by_key(new)
+    failed = []
+    for key, b in sorted(base_rows.items()):
+        n = new_rows.get(key)
+        name = key_name(key)
+        if n is None:
+            out(f"bench-regress: {name}: row gone from new run (not a failure)")
+            continue
+        if "bit_exact" in n and not n["bit_exact"]:
+            failed.append(f"{name}: new run is not bit-exact")
+            continue
+        old_ips, new_ips = float(b["images_per_s"]), float(n["images_per_s"])
+        ratio = new_ips / old_ips if old_ips > 0 else float("inf")
+        verdict = "FAIL" if ratio < 1.0 - tolerance else "ok"
+        out(
+            f"bench-regress: {name}: {old_ips:.0f} -> {new_ips:.0f} img/s "
+            f"({ratio:.2f}x, floor {1.0 - tolerance:.2f}x) {verdict}"
+        )
+        if verdict == "FAIL":
+            failed.append(f"{name}: {old_ips:.0f} -> {new_ips:.0f} img/s ({ratio:.2f}x)")
+    for key in sorted(set(new_rows) - set(base_rows)):
+        out(f"bench-regress: {key_name(key)}: new row (no baseline, not gated)")
+    return failed
+
+
+def selftest():
+    """Unit checks for the keying and gating logic (no files needed)."""
+    quiet = lambda *_: None  # noqa: E731
+
+    def row(backend, ips, bit_exact=True, **extra):
+        r = {
+            "backend": backend,
+            "datapath": "lut-fabric",
+            "images_per_s": ips,
+            "bit_exact": bit_exact,
+        }
+        r.update(extra)
+        return r
+
+    # sparsity and approx split the key space: four same-name rows key apart
+    doc = {
+        "rows": [
+            row("executor", 100.0),
+            row("executor", 90.0, sparsity=0.5),
+            row("executor", 80.0, approx=True),
+            row("executor", 70.0, sparsity=0.5, approx=True),
+        ]
+    }
+    keys = rows_by_key(doc)
+    assert len(keys) == 4, keys
+    assert ("executor", "lut-fabric", 0.0, False) in keys
+    assert ("executor", "lut-fabric", 0.5, True) in keys
+    names = sorted(key_name(k) for k in keys)
+    assert names[0] == "executor/lut-fabric", names
+    assert "executor/lut-fabric@approx" in names
+    assert "executor/lut-fabric@sparsity0.5" in names
+    assert "executor/lut-fabric@sparsity0.5@approx" in names
+
+    # a >tolerance drop on a matching key fails; unmatched rows never do
+    base = {"rows": [row("executor", 100.0), row("gone", 50.0)]}
+    new = {"rows": [row("executor", 70.0), row("fresh", 10.0)]}
+    failed = gate(base, new, 0.20, out=quiet)
+    assert len(failed) == 1 and "executor" in failed[0], failed
+
+    # within tolerance passes
+    assert gate(base, {"rows": [row("executor", 85.0)]}, 0.20, out=quiet) == []
+
+    # an approx row never gates against the exact row of the same backend
+    base = {"rows": [row("executor", 100.0)]}
+    new = {"rows": [row("executor", 10.0, approx=True)]}
+    assert gate(base, new, 0.20, out=quiet) == []
+
+    # a bit-inexact row fails; an eval row without the field does not
+    base = {"rows": [row("executor", 100.0)]}
+    assert gate(base, {"rows": [row("executor", 100.0, bit_exact=False)]}, 0.2, out=quiet)
+    eval_row = {
+        "backend": "executor",
+        "datapath": "lut-fabric",
+        "images_per_s": 100.0,
+        "top1": 0.9,
+    }
+    assert gate(base, {"rows": [eval_row]}, 0.2, out=quiet) == []
+
+    # placeholder / empty baselines skip
+    assert gate({"rows": [], "note": ""}, new, 0.2, out=quiet) == []
+    assert gate({"rows": [row("x", 1.0)], "note": "PLACEHOLDER"}, new, 0.2, out=quiet) == []
+
+    print("bench-regress --selftest: OK")
+    return 0
+
+
 def main(argv):
+    if "--selftest" in argv:
+        return selftest()
     if len(argv) < 3:
         print(__doc__.strip().splitlines()[2])
         return 2
@@ -49,38 +170,7 @@ def main(argv):
     base = load(argv[1])
     new = load(argv[2])
 
-    note = str(base.get("note", "")) + str(base.get("source", ""))
-    if not base.get("rows"):
-        print(f"bench-regress: baseline {argv[1]} has no measured rows yet — skipping")
-        return 0
-    if "placeholder" in note.lower():
-        print(f"bench-regress: baseline {argv[1]} is marked placeholder — skipping")
-        return 0
-
-    base_rows = rows_by_key(base)
-    new_rows = rows_by_key(new)
-    failed = []
-    for key, b in sorted(base_rows.items()):
-        n = new_rows.get(key)
-        name = key_name(key)
-        if n is None:
-            print(f"bench-regress: {name}: row gone from new run (not a failure)")
-            continue
-        if not n.get("bit_exact", False):
-            failed.append(f"{name}: new run is not bit-exact")
-            continue
-        old_ips, new_ips = float(b["images_per_s"]), float(n["images_per_s"])
-        ratio = new_ips / old_ips if old_ips > 0 else float("inf")
-        verdict = "FAIL" if ratio < 1.0 - tolerance else "ok"
-        print(
-            f"bench-regress: {name}: {old_ips:.0f} -> {new_ips:.0f} img/s "
-            f"({ratio:.2f}x, floor {1.0 - tolerance:.2f}x) {verdict}"
-        )
-        if verdict == "FAIL":
-            failed.append(f"{name}: {old_ips:.0f} -> {new_ips:.0f} img/s ({ratio:.2f}x)")
-    for key in sorted(set(new_rows) - set(base_rows)):
-        print(f"bench-regress: {key_name(key)}: new row (no baseline, not gated)")
-
+    failed = gate(base, new, tolerance)
     if failed:
         print(f"bench-regress: {len(failed)} regression(s) beyond {tolerance:.0%}:")
         for f in failed:
