@@ -4,7 +4,7 @@
 
 PYTHON ?= python3
 
-.PHONY: artifacts artifacts-fig2 test-python test-rust bench-smoke multi-smoke engine-smoke kernel-smoke prune-smoke serve-smoke eval-smoke bench-json bench-regress doc lint
+.PHONY: artifacts artifacts-fig2 test-python test-rust bench-smoke multi-smoke engine-smoke kernel-smoke prune-smoke serve-smoke fleet-smoke eval-smoke bench-json bench-regress doc lint
 
 artifacts:
 	mkdir -p artifacts
@@ -113,6 +113,21 @@ bench-regress:
 serve-smoke:
 	cd rust && cargo test -q --test serve --test chaos
 	cd rust && cargo run --release -- loadgen --smoke --duration-ms 600
+
+# Heterogeneous-fleet smoke (DESIGN.md S25, EXPERIMENTS.md E18): the
+# fleet chaos/elasticity suite (mid-batch ShardChain kill with zero
+# lost/reordered requests and monotonic occupancy, retry-budget
+# exhaustion to the typed shed, autoscale up under a burst and
+# drain-then-retire back to the floor, class routing, total-loss
+# shutdown resolution), then `lutmul loadgen --fleet-smoke` — a
+# self-hosted fleet server under mixed-class open-loop load with a
+# chaos kill mid-phase — and `lutmul report fleet`, which walks the
+# whole elastic envelope in-process and gates every invariant. Exits
+# nonzero on any violation, so CI gates on it.
+fleet-smoke:
+	cd rust && cargo test -q --test fleet
+	cd rust && cargo run --release -- loadgen --fleet-smoke --duration-ms 600
+	cd rust && cargo run --release -- report fleet --requests 64
 
 # Machine-readable perf trajectory (EXPERIMENTS.md E13): one
 # {backend, datapath, images_per_s, ns_per_image, bit_exact} row per

@@ -1,0 +1,987 @@
+//! Elastic heterogeneous fleet serving (DESIGN.md S25): class-routed
+//! worker pools over *different* backend kinds, autoscaled on queue
+//! depth, with supervised drain-and-rebuild recovery.
+//!
+//! The single-pool [`Coordinator`](super::Coordinator) (S21) drives one
+//! backend kind through a fixed worker count. The [`Fleet`] generalizes
+//! it along the axis the multi-FPGA story needs (S18/S19): requests
+//! carry a [`RequestClass`], and each class owns an independent pool —
+//! latency-class traffic routes to executor replicas (cheap per-image
+//! latency, no pipeline fill), throughput-class traffic to
+//! `ShardChainBackend` chains (highest steady-state images/s once the
+//! pipeline is full). Both pools are built from the engine's
+//! [`BackendFactory`](crate::engine::BackendFactory), so the fleet never
+//! matches on backend kinds — any [`InferenceBackend`] serves.
+//!
+//! Architecture per pool (deliberately different from the S21
+//! batcher+channels shape, because elasticity changes the requirements):
+//!
+//! * **Shared work deque, worker pull.** Requests land in one
+//!   `Mutex<VecDeque>` + `Condvar` per pool. Workers pull the first
+//!   request, then form their own batch inside the `max_wait` window.
+//!   A shared deque is what makes the other three features cheap: queue
+//!   *depth* is observable (autoscaling signal), a retiring worker
+//!   simply stops pulling (drain-then-retire needs no channel surgery),
+//!   and failed requests re-enqueue at the *front* (retry keeps order).
+//! * **Autoscaling.** A supervisor thread per pool samples queue depth
+//!   every `scale_tick`: depth above `high_water` for `up_ticks`
+//!   consecutive ticks spawns a worker (up to `max_workers`); a queue
+//!   idle for `idle_ticks` ticks posts a *retire order* that the next
+//!   idle worker honors (down to `min_workers`). Scale-down never
+//!   interrupts a batch in flight — retirement happens only between
+//!   batches, when the worker observes an empty queue.
+//! * **Supervised recovery.** A backend that errors (or miscounts) a
+//!   batch is *drained*: its in-flight requests are pushed back to the
+//!   front of the queue with a bounded per-request retry budget;
+//!   requests over budget resolve to the typed
+//!   [`ServeError::RetriesExhausted`]. The worker then rebuilds its
+//!   backend through the factory under exponential backoff, banks the
+//!   dead backend's shard counters into a per-worker base so occupancy
+//!   stays monotonic across the rebuild, and resumes pulling. A worker
+//!   whose rebuild fails permanently exits; the supervisor respawns
+//!   below `min_workers`.
+//!
+//! The chaos seam is [`Fleet::chaos_kill`]: it arms the next batch of a
+//! class's pool to fail as if the device died mid-batch, which is what
+//! `tests/fleet.rs` uses to prove the kill-a-ShardChain-mid-batch
+//! invariants (zero lost, zero reordered, `rebuilds` exactly one,
+//! occupancy monotonic).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::engine::{BackendFactory, BackendKind, Engine, InferenceBackend};
+
+use super::metrics::{Metrics, MetricsSummary, ShardOccupancy};
+use super::server::{argmax, InferenceResult, ServeError, SubmitError, Ticket};
+
+/// Which pool a request routes to. Carried as one byte on the wire
+/// (`serve::proto` v2) and as the `X-Request-Class` HTTP header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RequestClass {
+    /// Latency-sensitive: routed to executor replicas (no pipeline fill
+    /// cost, smallest per-image latency).
+    Latency = 0,
+    /// Throughput-oriented: routed to sharded chain workers (highest
+    /// steady-state images/s once the pipeline is full).
+    Throughput = 1,
+}
+
+impl RequestClass {
+    pub const ALL: [RequestClass; 2] = [RequestClass::Latency, RequestClass::Throughput];
+
+    /// Wire decoding (`serve::proto` request byte 13). Unknown values
+    /// are a malformed request, not a default.
+    pub fn from_u8(b: u8) -> Option<RequestClass> {
+        match b {
+            0 => Some(RequestClass::Latency),
+            1 => Some(RequestClass::Throughput),
+            _ => None,
+        }
+    }
+
+    /// Stable human label (HTTP header values, report tables, flags).
+    pub fn label(self) -> &'static str {
+        match self {
+            RequestClass::Latency => "latency",
+            RequestClass::Throughput => "throughput",
+        }
+    }
+
+    /// Parse a label or its wire byte ("latency"/"0", "throughput"/"1"),
+    /// case-insensitive.
+    pub fn parse(s: &str) -> Option<RequestClass> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "latency" | "lat" | "0" => Some(RequestClass::Latency),
+            "throughput" | "thr" | "1" => Some(RequestClass::Throughput),
+            _ => None,
+        }
+    }
+
+    /// Pool index (`Fleet` stores pools in `ALL` order).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
+
+impl std::fmt::Display for RequestClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Per-pool elasticity bounds.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolScale {
+    /// Workers kept alive even when idle (also the eager-build count at
+    /// startup, so factory misconfiguration fails in `start`).
+    pub min_workers: usize,
+    /// Autoscaling ceiling.
+    pub max_workers: usize,
+}
+
+/// Fleet configuration: per-class scale bounds plus the batching,
+/// retry, and autoscaling knobs shared by both pools.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    pub latency: PoolScale,
+    pub throughput: PoolScale,
+    /// Batch ceiling per worker dispatch.
+    pub max_batch: usize,
+    /// Batch-forming window: a worker holding a partial batch waits at
+    /// most this long for riders.
+    pub max_wait: Duration,
+    /// Per-pool admission bound: submissions beyond this depth are
+    /// rejected (backpressure), mirroring the S21 coordinator.
+    pub queue_depth: usize,
+    /// How many times a request drained from a failed batch is re-run
+    /// before it sheds with [`ServeError::RetriesExhausted`].
+    pub retry_budget: u32,
+    /// Base delay of the rebuild backoff; doubles per consecutive
+    /// rebuild failure, capped at 64x.
+    pub rebuild_backoff: Duration,
+    /// Supervisor sampling period.
+    pub scale_tick: Duration,
+    /// Queue depth that counts a tick as "hot".
+    pub high_water: usize,
+    /// Consecutive hot ticks before a scale-up.
+    pub up_ticks: u32,
+    /// Consecutive empty-queue ticks before a retire order.
+    pub idle_ticks: u32,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            latency: PoolScale { min_workers: 1, max_workers: 4 },
+            throughput: PoolScale { min_workers: 1, max_workers: 2 },
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+            queue_depth: 1024,
+            retry_budget: 2,
+            rebuild_backoff: Duration::from_millis(1),
+            scale_tick: Duration::from_millis(10),
+            high_water: 16,
+            up_ticks: 3,
+            idle_ticks: 50,
+        }
+    }
+}
+
+/// One queued request (the fleet's analog of the coordinator's private
+/// `Request`, plus the retry ledger).
+struct FleetRequest {
+    image: Vec<i32>,
+    enqueued: Instant,
+    deadline: Option<Instant>,
+    /// Failed executions so far; compared against the retry budget when
+    /// the request is drained from a failed batch.
+    attempts: u32,
+    resp: SyncSender<Result<InferenceResult, ServeError>>,
+}
+
+/// Mutable pool state behind the queue mutex.
+struct PoolState {
+    queue: VecDeque<FleetRequest>,
+    /// False once shutdown starts: submissions bounce, idle workers
+    /// exit after draining the queue.
+    open: bool,
+    /// Outstanding retire orders; the next worker that observes an
+    /// empty queue consumes one and exits.
+    retire: usize,
+    /// Workers currently running (spawned minus exited).
+    live_workers: usize,
+    /// Monotonic worker id; also the metrics key, so a respawned
+    /// worker's shard snapshot never clobbers a retired one's.
+    next_worker_id: usize,
+}
+
+/// Cumulative per-pool event counters (lock-free; read by summaries).
+#[derive(Default)]
+struct PoolCounters {
+    rejected: AtomicU64,
+    /// Backend rebuilds after a failed batch.
+    rebuilds: AtomicU64,
+    /// Requests re-enqueued from a failed batch (within budget).
+    retried: AtomicU64,
+    /// Requests shed with `RetriesExhausted`.
+    shed_retry: AtomicU64,
+    /// Autoscale events.
+    scale_up: AtomicU64,
+    scale_down: AtomicU64,
+    /// Workers ever spawned (initial + scale-up + respawn).
+    spawned: AtomicU64,
+    /// Chaos seam: each armed count fails one upcoming batch as if the
+    /// device died mid-batch.
+    kill_next: AtomicU64,
+}
+
+/// Everything a pool's workers, supervisor and the `Fleet` handle share.
+struct PoolShared {
+    class: RequestClass,
+    state: Mutex<PoolState>,
+    cv: Condvar,
+    metrics: Mutex<Metrics>,
+    counters: PoolCounters,
+    /// Backend name reported by the first built backend (display only).
+    label: Mutex<String>,
+    max_batch: usize,
+    max_wait: Duration,
+    queue_depth: usize,
+    retry_budget: u32,
+    rebuild_backoff: Duration,
+}
+
+impl PoolShared {
+    fn lock_state(&self) -> MutexGuard<'_, PoolState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn lock_metrics(&self) -> MutexGuard<'_, Metrics> {
+        self.metrics.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// One class's pool: shared state plus the thread handles the fleet
+/// joins at shutdown.
+struct Pool {
+    shared: Arc<PoolShared>,
+    factory: BackendFactory,
+    /// Worker handles; the supervisor pushes scale-up spawns here too.
+    handles: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    supervisor: Option<std::thread::JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    scale: PoolScale,
+}
+
+/// Handle to a running heterogeneous fleet: one pool per
+/// [`RequestClass`], each autoscaled and supervised independently.
+pub struct Fleet {
+    pools: Vec<Pool>,
+    image_px: usize,
+}
+
+impl Fleet {
+    /// Start a fleet over `engine`: latency-class requests serve from
+    /// executor-replica workers, throughput-class from `devices`-way
+    /// sharded chain workers — both built through the engine's factory
+    /// seam, never by matching on backend kinds here.
+    pub fn start(engine: &Engine, devices: usize, cfg: FleetConfig) -> anyhow::Result<Fleet> {
+        let io = engine.io();
+        let latency = engine
+            .backend_factory_for(BackendKind::Reference, cfg.latency.max_workers.max(1));
+        let throughput = engine.backend_factory_for(
+            BackendKind::Sharded { devices: devices.max(2) },
+            cfg.throughput.max_workers.max(1),
+        );
+        Self::start_with(
+            latency,
+            throughput,
+            io.image_size * io.image_size * io.in_ch,
+            engine.net().ops_per_image(),
+            cfg,
+        )
+    }
+
+    /// Start the fleet over explicit per-class factories — the seam
+    /// `tests/fleet.rs` injects flaky/slow/distinguishable backends
+    /// through, exactly like `Coordinator::start_with` for the S21
+    /// chaos suite. `min_workers` backends per pool are built eagerly,
+    /// so a misconfigured factory fails here, not in a worker thread.
+    pub fn start_with(
+        latency_factory: BackendFactory,
+        throughput_factory: BackendFactory,
+        image_px: usize,
+        ops_per_image: u64,
+        cfg: FleetConfig,
+    ) -> anyhow::Result<Fleet> {
+        let pools = vec![
+            spawn_pool(RequestClass::Latency, latency_factory, ops_per_image, &cfg, cfg.latency)?,
+            spawn_pool(
+                RequestClass::Throughput,
+                throughput_factory,
+                ops_per_image,
+                &cfg,
+                cfg.throughput,
+            )?,
+        ];
+        Ok(Fleet { pools, image_px })
+    }
+
+    /// Expected codes per image of the served network (`H*W*C`).
+    pub fn image_px(&self) -> usize {
+        self.image_px
+    }
+
+    /// Typed class-routed submission; the serving tier maps
+    /// [`SubmitError`] onto wire statuses. A full class queue counts
+    /// into that pool's `rejected`.
+    pub fn try_submit(
+        &self,
+        image: Vec<i32>,
+        deadline: Option<Duration>,
+        class: RequestClass,
+    ) -> Result<Ticket, SubmitError> {
+        if image.len() != self.image_px {
+            return Err(SubmitError::BadShape { got: image.len(), want: self.image_px });
+        }
+        let pool = &self.pools[class.index()];
+        let (resp_tx, resp_rx) = sync_channel(1);
+        let now = Instant::now();
+        let req = FleetRequest {
+            image,
+            enqueued: now,
+            deadline: deadline.map(|d| now + d),
+            attempts: 0,
+            resp: resp_tx,
+        };
+        let mut st = pool.shared.lock_state();
+        if !st.open {
+            return Err(SubmitError::Shutdown);
+        }
+        if st.queue.len() >= pool.shared.queue_depth {
+            pool.shared.counters.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::Rejected);
+        }
+        st.queue.push_back(req);
+        drop(st);
+        pool.shared.cv.notify_one();
+        Ok(Ticket::new(resp_rx))
+    }
+
+    /// Submit one image to `class`'s pool without blocking (convenience
+    /// over [`try_submit`](Self::try_submit)).
+    pub fn submit(&self, image: Vec<i32>, class: RequestClass) -> anyhow::Result<Ticket> {
+        self.try_submit(image, None, class).map_err(|e| anyhow::anyhow!("{e}"))
+    }
+
+    /// Submit and wait (convenience).
+    pub fn infer(&self, image: Vec<i32>, class: RequestClass) -> anyhow::Result<InferenceResult> {
+        Ok(self.submit(image, class)?.wait()?)
+    }
+
+    /// Arm one injected mid-batch failure on `class`'s pool: the next
+    /// dispatched batch fails as if the device died, draining its
+    /// requests back into the queue and rebuilding the backend. The
+    /// chaos tests and `make fleet-smoke` drive recovery through this.
+    pub fn chaos_kill(&self, class: RequestClass) {
+        self.pools[class.index()].shared.counters.kill_next.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Current queue depth of `class`'s pool.
+    pub fn queue_depth(&self, class: RequestClass) -> usize {
+        self.pools[class.index()].shared.lock_state().queue.len()
+    }
+
+    /// Live worker count of `class`'s pool.
+    pub fn workers(&self, class: RequestClass) -> usize {
+        self.pools[class.index()].shared.lock_state().live_workers
+    }
+
+    /// Backend rebuilds of `class`'s pool so far.
+    pub fn rebuilds(&self, class: RequestClass) -> u64 {
+        self.pools[class.index()].shared.counters.rebuilds.load(Ordering::SeqCst)
+    }
+
+    /// Per-class snapshot: pool shape, event counters and the pool's
+    /// serving metrics (admission rejects folded in).
+    pub fn class_summary(&self, class: RequestClass) -> ClassSummary {
+        let pool = &self.pools[class.index()];
+        let sh = &pool.shared;
+        let (workers, queue_depth) = {
+            let st = sh.lock_state();
+            (st.live_workers, st.queue.len())
+        };
+        let mut summary = sh.lock_metrics().summary();
+        summary.rejected = sh.counters.rejected.load(Ordering::Relaxed);
+        ClassSummary {
+            class,
+            backend: sh.label.lock().unwrap_or_else(|e| e.into_inner()).clone(),
+            workers,
+            min_workers: pool.scale.min_workers,
+            max_workers: pool.scale.max_workers,
+            spawned: sh.counters.spawned.load(Ordering::Relaxed),
+            queue_depth,
+            rebuilds: sh.counters.rebuilds.load(Ordering::SeqCst),
+            retried: sh.counters.retried.load(Ordering::Relaxed),
+            shed_retry: sh.counters.shed_retry.load(Ordering::Relaxed),
+            scale_up: sh.counters.scale_up.load(Ordering::Relaxed),
+            scale_down: sh.counters.scale_down.load(Ordering::Relaxed),
+            summary,
+        }
+    }
+
+    /// Whole-fleet snapshot, one entry per class in `RequestClass::ALL`
+    /// order.
+    pub fn summary(&self) -> FleetSummary {
+        FleetSummary {
+            classes: RequestClass::ALL.iter().map(|&c| self.class_summary(c)).collect(),
+        }
+    }
+
+    /// Fleet-wide metrics merged across both pools — the shape
+    /// `Server::metrics` reports regardless of front end.
+    pub fn metrics(&self) -> MetricsSummary {
+        let parts: Vec<MetricsSummary> =
+            RequestClass::ALL.iter().map(|&c| self.class_summary(c).summary).collect();
+        MetricsSummary::merged(&parts)
+    }
+
+    /// Total admission rejects across both pools.
+    pub fn rejected(&self) -> u64 {
+        self.pools
+            .iter()
+            .map(|p| p.shared.counters.rejected.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Stop both pools: supervisors first (no new scale events), then
+    /// close the queues — workers drain what's already enqueued, then
+    /// exit — and finally resolve anything still queued (all workers
+    /// dead) as [`ServeError::Shutdown`], so no ticket ever hangs.
+    pub fn shutdown(mut self) {
+        for pool in &mut self.pools {
+            pool.stop.store(true, Ordering::SeqCst);
+            if let Some(s) = pool.supervisor.take() {
+                let _ = s.join();
+            }
+        }
+        for pool in &self.pools {
+            let mut st = pool.shared.lock_state();
+            st.open = false;
+            drop(st);
+            pool.shared.cv.notify_all();
+        }
+        for pool in &self.pools {
+            let handles: Vec<_> = {
+                let mut h = pool.handles.lock().unwrap_or_else(|e| e.into_inner());
+                h.drain(..).collect()
+            };
+            for h in handles {
+                let _ = h.join();
+            }
+            // every worker may have died (rebuild failure): requests
+            // still queued must resolve, not hang their callers
+            let mut st = pool.shared.lock_state();
+            while let Some(r) = st.queue.pop_front() {
+                let _ = r.resp.send(Err(ServeError::Shutdown));
+            }
+        }
+    }
+}
+
+/// Build one pool: eager backends for the `min_workers` floor (factory
+/// errors surface here), worker threads, and the supervisor.
+fn spawn_pool(
+    class: RequestClass,
+    factory: BackendFactory,
+    ops_per_image: u64,
+    cfg: &FleetConfig,
+    scale: PoolScale,
+) -> anyhow::Result<Pool> {
+    let scale = PoolScale {
+        min_workers: scale.min_workers.max(1),
+        max_workers: scale.max_workers.max(scale.min_workers.max(1)),
+    };
+    let shared = Arc::new(PoolShared {
+        class,
+        state: Mutex::new(PoolState {
+            queue: VecDeque::new(),
+            open: true,
+            retire: 0,
+            live_workers: 0,
+            next_worker_id: 0,
+        }),
+        cv: Condvar::new(),
+        metrics: Mutex::new(Metrics::new(ops_per_image)),
+        counters: PoolCounters::default(),
+        label: Mutex::new(String::new()),
+        max_batch: cfg.max_batch.max(1),
+        max_wait: cfg.max_wait,
+        queue_depth: cfg.queue_depth.max(1),
+        retry_budget: cfg.retry_budget,
+        rebuild_backoff: cfg.rebuild_backoff.max(Duration::from_micros(100)),
+    });
+    let handles = Arc::new(Mutex::new(Vec::new()));
+
+    for i in 0..scale.min_workers {
+        let backend = factory().map_err(|e| {
+            e.context(format!("building the {} backend for fleet worker {i}", class.label()))
+        })?;
+        if i == 0 {
+            *shared.label.lock().unwrap_or_else(|e| e.into_inner()) = backend.name().to_string();
+        }
+        let h = spawn_worker(&shared, &factory, backend);
+        handles.lock().unwrap_or_else(|e| e.into_inner()).push(h);
+    }
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let supervisor = {
+        let shared = shared.clone();
+        let factory = factory.clone();
+        let handles = handles.clone();
+        let stop = stop.clone();
+        let knobs = (cfg.scale_tick, cfg.high_water.max(1), cfg.up_ticks.max(1), cfg.idle_ticks.max(1));
+        std::thread::Builder::new()
+            .name(format!("lutmul-fleet-{}-supervisor", class.label()))
+            .spawn(move || supervisor_loop(shared, factory, handles, stop, scale, knobs))
+            .expect("spawn fleet supervisor")
+    };
+
+    Ok(Pool { shared, factory, handles, supervisor: Some(supervisor), stop, scale })
+}
+
+/// Register a new worker under the state lock and start its thread.
+fn spawn_worker(
+    shared: &Arc<PoolShared>,
+    factory: &BackendFactory,
+    backend: Box<dyn InferenceBackend>,
+) -> std::thread::JoinHandle<()> {
+    let wid = {
+        let mut st = shared.lock_state();
+        let wid = st.next_worker_id;
+        st.next_worker_id += 1;
+        st.live_workers += 1;
+        wid
+    };
+    shared.counters.spawned.fetch_add(1, Ordering::Relaxed);
+    let shared = shared.clone();
+    let factory = factory.clone();
+    std::thread::Builder::new()
+        .name(format!("lutmul-fleet-{}-{wid}", shared.class.label()))
+        .spawn(move || worker_loop(shared, factory, backend, wid))
+        .expect("spawn fleet worker")
+}
+
+/// Worker body: pull → window-batch → shed → execute → resolve, with
+/// the drain/retry/rebuild failure path. Mirrors the S21 worker's
+/// metrics discipline (one lock per batch, banked shard counters) over
+/// the pull-based queue.
+fn worker_loop(
+    shared: Arc<PoolShared>,
+    factory: BackendFactory,
+    mut backend: Box<dyn InferenceBackend>,
+    wid: usize,
+) {
+    // counters of backends this worker already retired (rebuilt after a
+    // failed batch): folded into every later snapshot so this worker's
+    // recorded shard metrics never roll backwards
+    let mut shard_base: Vec<ShardOccupancy> = Vec::new();
+
+    // banks the dying/retiring backend's counters and records the
+    // worker's final/current cumulative snapshot
+    let bank = |shard_base: &mut Vec<ShardOccupancy>, backend: &dyn InferenceBackend| {
+        let snap = backend.shard_occupancy();
+        if shard_base.len() < snap.len() {
+            shard_base.resize(snap.len(), ShardOccupancy::default());
+        }
+        for (b, s) in shard_base.iter_mut().zip(&snap) {
+            b.absorb(s);
+        }
+    };
+
+    'serve: loop {
+        // ---- pull the first request (or exit on retire/close) ----
+        let mut batch: Vec<FleetRequest> = Vec::new();
+        {
+            let mut st = shared.lock_state();
+            loop {
+                if let Some(r) = st.queue.pop_front() {
+                    batch.push(r);
+                    break;
+                }
+                if st.retire > 0 {
+                    // drain-then-retire: only ever honored on an empty
+                    // queue, so retirement never abandons traffic
+                    st.retire -= 1;
+                    st.live_workers -= 1;
+                    drop(st);
+                    bank(&mut shard_base, backend.as_ref());
+                    if !shard_base.is_empty() {
+                        shared.lock_metrics().record_shards(wid, shard_base.clone());
+                    }
+                    return;
+                }
+                if !st.open {
+                    st.live_workers -= 1;
+                    drop(st);
+                    bank(&mut shard_base, backend.as_ref());
+                    if !shard_base.is_empty() {
+                        shared.lock_metrics().record_shards(wid, shard_base.clone());
+                    }
+                    return;
+                }
+                st = shared.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+
+            // ---- batch window: ride along until full or timed out ----
+            let window_end = Instant::now() + shared.max_wait;
+            while batch.len() < shared.max_batch {
+                if let Some(r) = st.queue.pop_front() {
+                    batch.push(r);
+                    continue;
+                }
+                if !st.open || st.retire > 0 {
+                    // don't hold the window open through a shutdown or
+                    // a pending retire order
+                    break;
+                }
+                let now = Instant::now();
+                if now >= window_end {
+                    break;
+                }
+                let (g, timeout) = shared
+                    .cv
+                    .wait_timeout(st, window_end - now)
+                    .unwrap_or_else(|e| e.into_inner());
+                st = g;
+                if timeout.timed_out() {
+                    if let Some(r) = st.queue.pop_front() {
+                        batch.push(r);
+                    }
+                    break;
+                }
+            }
+        }
+
+        // ---- shed expired deadlines before compute (S21 semantics) ----
+        let now = Instant::now();
+        let mut reqs = Vec::with_capacity(batch.len());
+        let mut shed = 0usize;
+        for r in batch {
+            match r.deadline {
+                Some(d) if now >= d => {
+                    let waited_us = now.duration_since(r.enqueued).as_micros() as u64;
+                    let _ = r.resp.send(Err(ServeError::DeadlineExceeded { waited_us }));
+                    shed += 1;
+                }
+                _ => reqs.push(r),
+            }
+        }
+        if shed > 0 {
+            shared.lock_metrics().record_shed(shed);
+        }
+        if reqs.is_empty() {
+            continue;
+        }
+
+        // ---- execute (with the chaos seam armed as a device death) ----
+        let images: Vec<Vec<i32>> = reqs.iter().map(|r| r.image.clone()).collect();
+        let killed = shared
+            .counters
+            .kill_next
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1))
+            .is_ok();
+        let t_exec = Instant::now();
+        let res = if killed {
+            Err(anyhow::anyhow!("injected chaos kill (device died mid-batch)"))
+        } else {
+            backend.infer_batch(&images)
+        };
+        let out = match res {
+            Ok(out) if out.logits.len() == reqs.len() => out,
+            res => {
+                // drain: bank the dead backend's counters, re-enqueue
+                // within budget (front, original order), shed the rest
+                // with the typed status, then rebuild under backoff
+                let msg = match &res {
+                    Ok(out) => format!(
+                        "backend returned {} results for {} requests",
+                        out.logits.len(),
+                        reqs.len()
+                    ),
+                    Err(e) => e.to_string(),
+                };
+                eprintln!(
+                    "lutmul-fleet-{}-{wid}: batch failed ({msg}); draining and rebuilding",
+                    shared.class.label()
+                );
+                bank(&mut shard_base, backend.as_ref());
+                if !shard_base.is_empty() {
+                    shared.lock_metrics().record_shards(wid, shard_base.clone());
+                }
+
+                let mut retry: Vec<FleetRequest> = Vec::new();
+                let mut exhausted = 0usize;
+                for mut r in reqs {
+                    let failures = r.attempts + 1;
+                    if failures <= shared.retry_budget {
+                        r.attempts = failures;
+                        retry.push(r);
+                    } else {
+                        let _ = r
+                            .resp
+                            .send(Err(ServeError::RetriesExhausted { attempts: failures }));
+                        exhausted += 1;
+                    }
+                }
+                if !retry.is_empty() {
+                    shared.counters.retried.fetch_add(retry.len() as u64, Ordering::Relaxed);
+                    let mut st = shared.lock_state();
+                    for r in retry.into_iter().rev() {
+                        st.queue.push_front(r);
+                    }
+                    drop(st);
+                    shared.cv.notify_all();
+                }
+                if exhausted > 0 {
+                    shared.counters.shed_retry.fetch_add(exhausted as u64, Ordering::Relaxed);
+                    shared.lock_metrics().record_failed(exhausted);
+                }
+
+                shared.counters.rebuilds.fetch_add(1, Ordering::SeqCst);
+                let mut delay = shared.rebuild_backoff;
+                let mut tries = 0u32;
+                loop {
+                    match factory() {
+                        Ok(b) => {
+                            backend = b;
+                            continue 'serve;
+                        }
+                        Err(e) => {
+                            tries += 1;
+                            let open = shared.lock_state().open;
+                            if tries >= 8 || !open {
+                                eprintln!(
+                                    "lutmul-fleet-{}-{wid}: backend rebuild failed \
+                                     ({e}); worker exiting",
+                                    shared.class.label()
+                                );
+                                let mut st = shared.lock_state();
+                                st.live_workers -= 1;
+                                drop(st);
+                                // wake peers/shutdown waiting on this pool
+                                shared.cv.notify_all();
+                                return;
+                            }
+                            std::thread::sleep(delay);
+                            delay = (delay * 2).min(shared.rebuild_backoff * 64);
+                        }
+                    }
+                }
+            }
+        };
+
+        // ---- success: metrics then resolution, one lock per batch ----
+        let service = t_exec.elapsed();
+        let latencies: Vec<Duration> = reqs.iter().map(|r| r.enqueued.elapsed()).collect();
+        {
+            let mut m = shared.lock_metrics();
+            m.record_batch(reqs.len(), service);
+            for (&l, r) in latencies.iter().zip(&reqs) {
+                m.record_split(l, t_exec.duration_since(r.enqueued), service);
+            }
+            if !out.counters.is_empty() {
+                let mut snap = out.counters;
+                for (s, b) in snap.iter_mut().zip(&shard_base) {
+                    s.absorb(b);
+                }
+                m.record_shards(wid, snap);
+            }
+        }
+        for ((r, logits), latency) in reqs.into_iter().zip(out.logits).zip(latencies) {
+            let class = argmax(&logits);
+            let _ = r.resp.send(Ok(InferenceResult { logits, class, latency }));
+        }
+    }
+}
+
+/// Supervisor body: depth-driven scale-up, idle-driven retire orders,
+/// and respawn below the floor.
+fn supervisor_loop(
+    shared: Arc<PoolShared>,
+    factory: BackendFactory,
+    handles: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    stop: Arc<AtomicBool>,
+    scale: PoolScale,
+    (tick, high_water, up_ticks, idle_ticks): (Duration, usize, u32, u32),
+) {
+    let mut hot = 0u32;
+    let mut idle = 0u32;
+    while !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(tick);
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let (depth, live, retiring, open) = {
+            let st = shared.lock_state();
+            (st.queue.len(), st.live_workers, st.retire, st.open)
+        };
+        if !open {
+            break;
+        }
+
+        // supervised recovery: a worker that died permanently (rebuild
+        // exhausted) is replaced up to the floor, not counted as an
+        // autoscale event
+        if live.saturating_sub(retiring) < scale.min_workers {
+            match factory() {
+                Ok(b) => {
+                    let h = spawn_worker(&shared, &factory, b);
+                    handles.lock().unwrap_or_else(|e| e.into_inner()).push(h);
+                }
+                Err(e) => eprintln!(
+                    "lutmul-fleet-{}-supervisor: respawn build failed: {e}",
+                    shared.class.label()
+                ),
+            }
+            continue;
+        }
+
+        if depth > high_water {
+            idle = 0;
+            hot += 1;
+            if retiring > 0 {
+                // a hot queue cancels pending (unconsumed) retire orders
+                shared.lock_state().retire = 0;
+            }
+            if hot >= up_ticks && live < scale.max_workers {
+                hot = 0;
+                match factory() {
+                    Ok(b) => {
+                        let h = spawn_worker(&shared, &factory, b);
+                        handles.lock().unwrap_or_else(|e| e.into_inner()).push(h);
+                        shared.counters.scale_up.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(e) => eprintln!(
+                        "lutmul-fleet-{}-supervisor: scale-up build failed: {e}",
+                        shared.class.label()
+                    ),
+                }
+            }
+        } else if depth == 0 {
+            hot = 0;
+            idle += 1;
+            if idle >= idle_ticks && live.saturating_sub(retiring) > scale.min_workers {
+                idle = 0;
+                let mut st = shared.lock_state();
+                st.retire += 1;
+                drop(st);
+                shared.cv.notify_all();
+                shared.counters.scale_down.fetch_add(1, Ordering::Relaxed);
+            }
+        } else {
+            hot = 0;
+            idle = 0;
+        }
+    }
+}
+
+/// Per-class snapshot for reporting: pool shape, event counters and
+/// serving metrics.
+#[derive(Debug, Clone)]
+pub struct ClassSummary {
+    pub class: RequestClass,
+    /// Backend name of the pool's first built backend (e.g. "executor",
+    /// "sharded x2").
+    pub backend: String,
+    /// Live workers right now.
+    pub workers: usize,
+    pub min_workers: usize,
+    pub max_workers: usize,
+    /// Workers ever spawned (initial + scale-up + respawn).
+    pub spawned: u64,
+    /// Current queue depth.
+    pub queue_depth: usize,
+    /// Backend rebuilds after failed batches.
+    pub rebuilds: u64,
+    /// Requests re-enqueued from failed batches (within budget).
+    pub retried: u64,
+    /// Requests shed with `RetriesExhausted`.
+    pub shed_retry: u64,
+    pub scale_up: u64,
+    pub scale_down: u64,
+    /// The pool's serving metrics (admission rejects folded in).
+    pub summary: MetricsSummary,
+}
+
+impl std::fmt::Display for ClassSummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "[{}] backend {} | workers {}/{}..{} (spawned {}) | queue {} | \
+             rebuilds {} retried {} shed_retry {} | scale +{} -{} | {}",
+            self.class,
+            self.backend,
+            self.workers,
+            self.min_workers,
+            self.max_workers,
+            self.spawned,
+            self.queue_depth,
+            self.rebuilds,
+            self.retried,
+            self.shed_retry,
+            self.scale_up,
+            self.scale_down,
+            self.summary
+        )
+    }
+}
+
+/// Whole-fleet snapshot, one entry per class.
+#[derive(Debug, Clone)]
+pub struct FleetSummary {
+    pub classes: Vec<ClassSummary>,
+}
+
+impl FleetSummary {
+    /// Look up one class's entry.
+    pub fn class(&self, class: RequestClass) -> Option<&ClassSummary> {
+        self.classes.iter().find(|c| c.class == class)
+    }
+
+    /// Total autoscale events (up + down) across the fleet.
+    pub fn scale_events(&self) -> u64 {
+        self.classes.iter().map(|c| c.scale_up + c.scale_down).sum()
+    }
+
+    /// Total backend rebuilds across the fleet.
+    pub fn rebuilds(&self) -> u64 {
+        self.classes.iter().map(|c| c.rebuilds).sum()
+    }
+}
+
+impl std::fmt::Display for FleetSummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (i, c) in self.classes.iter().enumerate() {
+            if i > 0 {
+                writeln!(f)?;
+            }
+            write!(f, "{c}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_class_round_trips() {
+        for c in RequestClass::ALL {
+            assert_eq!(RequestClass::from_u8(c as u8), Some(c));
+            assert_eq!(RequestClass::parse(c.label()), Some(c));
+            assert_eq!(RequestClass::parse(&(c as u8).to_string()), Some(c));
+        }
+        assert_eq!(RequestClass::from_u8(7), None);
+        assert_eq!(RequestClass::parse("bulk"), None);
+        assert_eq!(RequestClass::parse("LATENCY"), Some(RequestClass::Latency));
+    }
+
+    #[test]
+    fn default_config_sane() {
+        let c = FleetConfig::default();
+        assert!(c.latency.min_workers >= 1);
+        assert!(c.latency.max_workers >= c.latency.min_workers);
+        assert!(c.throughput.max_workers >= c.throughput.min_workers);
+        assert!(c.retry_budget >= 1 && c.max_batch >= 1);
+    }
+
+    // Fleet round-trips, chaos drains, autoscale traces and the
+    // shutdown races live in rust/tests/fleet.rs (they need injected
+    // backends and, for routing, a full engine).
+}

@@ -280,6 +280,59 @@ pub struct MetricsSummary {
     pub shards: Vec<ShardOccupancy>,
 }
 
+impl MetricsSummary {
+    /// Merge per-pool snapshots into one fleet-wide view (DESIGN.md
+    /// S25): counters and rates sum, latency percentiles take the
+    /// conservative max across pools (a true merged percentile would
+    /// need the raw samples), mean batch size weights by batch count,
+    /// and shard lists concatenate so every chain stays visible.
+    pub fn merged(parts: &[MetricsSummary]) -> MetricsSummary {
+        let mut out = MetricsSummary {
+            completed: 0,
+            shed_deadline: 0,
+            failed: 0,
+            rejected: 0,
+            throughput_rps: 0.0,
+            gops: 0.0,
+            p50_us: 0,
+            p99_us: 0,
+            queue_p50_us: 0,
+            queue_p99_us: 0,
+            compute_p50_us: 0,
+            compute_p99_us: 0,
+            batches: 0,
+            mean_batch: 0.0,
+            batch_p50_us: 0,
+            batch_p99_us: 0,
+            shards: Vec::new(),
+        };
+        let mut weighted_batch = 0.0;
+        for p in parts {
+            out.completed += p.completed;
+            out.shed_deadline += p.shed_deadline;
+            out.failed += p.failed;
+            out.rejected += p.rejected;
+            out.throughput_rps += p.throughput_rps;
+            out.gops += p.gops;
+            out.p50_us = out.p50_us.max(p.p50_us);
+            out.p99_us = out.p99_us.max(p.p99_us);
+            out.queue_p50_us = out.queue_p50_us.max(p.queue_p50_us);
+            out.queue_p99_us = out.queue_p99_us.max(p.queue_p99_us);
+            out.compute_p50_us = out.compute_p50_us.max(p.compute_p50_us);
+            out.compute_p99_us = out.compute_p99_us.max(p.compute_p99_us);
+            out.batches += p.batches;
+            weighted_batch += p.mean_batch * p.batches as f64;
+            out.batch_p50_us = out.batch_p50_us.max(p.batch_p50_us);
+            out.batch_p99_us = out.batch_p99_us.max(p.batch_p99_us);
+            out.shards.extend(p.shards.iter().cloned());
+        }
+        if out.batches > 0 {
+            out.mean_batch = weighted_batch / out.batches as f64;
+        }
+        out
+    }
+}
+
 impl std::fmt::Display for MetricsSummary {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
@@ -424,6 +477,41 @@ mod tests {
         m.record(Duration::from_micros(3));
         m.record(Duration::from_micros(700));
         assert_eq!(m.latency_histogram(), vec![(4, 1), (1024, 1)]);
+    }
+
+    #[test]
+    fn merged_summaries_sum_counts_and_max_tails() {
+        let mut a = Metrics::new(1);
+        a.record_batch(4, Duration::from_micros(100));
+        a.record_split(
+            Duration::from_micros(300),
+            Duration::from_micros(200),
+            Duration::from_micros(100),
+        );
+        a.record_shed(1);
+        let mut b = Metrics::new(1);
+        b.record_batch(8, Duration::from_micros(900));
+        b.record_split(
+            Duration::from_micros(1000),
+            Duration::from_micros(100),
+            Duration::from_micros(900),
+        );
+        b.record_failed(2);
+        b.record_shards(0, vec![ShardOccupancy { fires: 5, ..Default::default() }]);
+        let mut sa = a.summary();
+        sa.rejected = 3;
+        let sb = b.summary();
+        let m = MetricsSummary::merged(&[sa, sb]);
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.shed_deadline, 1);
+        assert_eq!(m.failed, 2);
+        assert_eq!(m.rejected, 3);
+        assert_eq!(m.p99_us, 1000, "tails take the max across pools");
+        assert_eq!(m.batch_p99_us, 900);
+        assert_eq!(m.batches, 2);
+        assert!((m.mean_batch - 6.0).abs() < 1e-9, "mean weights by batches");
+        assert_eq!(m.shards.len(), 1, "shard lists concatenate");
+        assert!(MetricsSummary::merged(&[]).completed == 0);
     }
 
     #[test]

@@ -3,13 +3,17 @@
 //!
 //! Workers drive boxed [`InferenceBackend`]s built by the engine
 //! (DESIGN.md S19) — the coordinator has no backend-specific code of
-//! its own.
+//! its own. [`fleet`] (DESIGN.md S25) generalizes the single pool into
+//! class-routed heterogeneous pools with autoscaling and supervised
+//! drain-and-rebuild recovery.
 //!
 //! [`InferenceBackend`]: crate::engine::InferenceBackend
 
+pub mod fleet;
 pub mod metrics;
 pub mod server;
 
+pub use fleet::{ClassSummary, Fleet, FleetConfig, FleetSummary, PoolScale, RequestClass};
 pub use metrics::{log2_histogram, Metrics, MetricsSummary, ShardOccupancy};
 pub use server::{
     argmax, Coordinator, InferenceResult, ServeConfig, ServeError, SubmitError, Ticket,

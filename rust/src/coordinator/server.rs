@@ -84,6 +84,14 @@ pub enum ServeError {
     /// The worker's backend failed mid-batch; the backend was rebuilt
     /// through the engine's factory, this request was not retried.
     WorkerFailed(String),
+    /// The pool shut down (or every worker died) after this request was
+    /// admitted but before any backend ran it — the typed resolution of
+    /// the admission/retirement race, so callers never hang.
+    Shutdown,
+    /// The fleet drained this request from failed batches until its
+    /// retry budget ran out; `attempts` counts the failed executions
+    /// (DESIGN.md S25).
+    RetriesExhausted { attempts: u32 },
     /// The coordinator shut down with the request in flight.
     Disconnected,
 }
@@ -95,6 +103,12 @@ impl std::fmt::Display for ServeError {
                 write!(f, "deadline expired before compute (queued {waited_us} us)")
             }
             ServeError::WorkerFailed(msg) => write!(f, "worker backend failed: {msg}"),
+            ServeError::Shutdown => {
+                write!(f, "pool shut down before the request reached a backend")
+            }
+            ServeError::RetriesExhausted { attempts } => {
+                write!(f, "retry budget exhausted after {attempts} failed executions")
+            }
             ServeError::Disconnected => write!(f, "coordinator stopped with request in flight"),
         }
     }
@@ -152,6 +166,12 @@ pub struct Ticket {
 }
 
 impl Ticket {
+    /// Wrap a pending response channel — how the fleet (and any future
+    /// front end) mints tickets over the same waiting contract.
+    pub(crate) fn new(rx: Receiver<Result<InferenceResult, ServeError>>) -> Self {
+        Self { rx }
+    }
+
     /// Block until the result is ready: the inference output, or the
     /// structured reason it will never come.
     pub fn wait(self) -> Result<InferenceResult, ServeError> {
@@ -325,6 +345,18 @@ impl Coordinator {
                                                 "lutmul-worker-{wi}: backend rebuild \
                                                  failed, worker exiting: {e}"
                                             );
+                                            // batches already queued to
+                                            // this worker will never see
+                                            // a backend: resolve their
+                                            // tickets typed before the
+                                            // queue drops
+                                            while let Ok(batch) = wrx.try_recv() {
+                                                for r in batch {
+                                                    let _ = r
+                                                        .resp
+                                                        .send(Err(ServeError::Shutdown));
+                                                }
+                                            }
                                             return;
                                         }
                                     }
@@ -387,11 +419,27 @@ impl Coordinator {
                 .spawn(move || {
                     let mut pending: Vec<Request> = Vec::with_capacity(max_batch);
                     let mut next_worker = 0usize;
-                    let dispatch = |batch: Vec<Request>, next_worker: &mut usize| -> bool {
-                        // round-robin over the worker queues
-                        let tx = &worker_txs[*next_worker % worker_txs.len()];
-                        *next_worker += 1;
-                        tx.send(batch).is_ok()
+                    let dispatch = |mut batch: Vec<Request>, next_worker: &mut usize| -> bool {
+                        // round-robin over the worker queues, falling
+                        // through dead ones: a worker whose rebuild
+                        // failed has dropped its queue, and the batch
+                        // must land on a live peer instead of killing
+                        // the whole pool
+                        for _ in 0..worker_txs.len() {
+                            let tx = &worker_txs[*next_worker % worker_txs.len()];
+                            *next_worker += 1;
+                            match tx.send(batch) {
+                                Ok(()) => return true,
+                                Err(std::sync::mpsc::SendError(b)) => batch = b,
+                            }
+                        }
+                        // every worker is gone: requests that won the
+                        // admission race against the dying pool still
+                        // resolve typed — never a hang
+                        for r in batch {
+                            let _ = r.resp.send(Err(ServeError::Shutdown));
+                        }
+                        false
                     };
                     'outer: loop {
                         // block for the first item of a batch
@@ -542,6 +590,11 @@ mod tests {
         assert!(e.to_string().contains("42"), "{e}");
         let e = ServeError::WorkerFailed("boom".into());
         assert!(e.to_string().contains("boom"), "{e}");
+        let e = ServeError::Shutdown;
+        assert!(e.to_string().contains("shut down"), "{e}");
+        let e = ServeError::RetriesExhausted { attempts: 3 };
+        assert!(e.to_string().contains("retry budget"), "{e}");
+        assert!(e.to_string().contains('3'), "{e}");
         let e = SubmitError::BadShape { got: 3, want: 768 };
         assert!(e.to_string().contains("expects 768"), "{e}");
         assert!(SubmitError::Rejected.to_string().contains("backpressure"));

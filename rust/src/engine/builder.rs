@@ -483,6 +483,17 @@ impl Engine {
         Arc::new(move || env.build(&kind, pool_size))
     }
 
+    /// A thread-safe factory for an *explicit* backend kind over this
+    /// engine's compiled plan — the heterogeneous-fleet seam
+    /// (DESIGN.md S25): one engine hands out executor-replica factories
+    /// to the latency pool and shard-chain factories to the throughput
+    /// pool, and the fleet rebuilds failed backends through the same
+    /// closure.
+    pub fn backend_factory_for(&self, kind: BackendKind, pool_size: usize) -> BackendFactory {
+        let env = self.env.clone();
+        Arc::new(move || env.build(&kind, pool_size))
+    }
+
     /// `n` test images for the engine's network: the leading artifact
     /// test images (cycled if `n` exceeds the set) for a trained
     /// network, seeded random code vectors otherwise.

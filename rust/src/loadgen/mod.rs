@@ -21,6 +21,15 @@
 //! socket), which is the number a deployment actually experiences —
 //! the coordinator's queue-wait/compute split tells the rest of the
 //! story server-side.
+//!
+//! Connections are *retried*, not fatal: a refused or reset connect
+//! backs off exponentially with seeded jitter (and a write failure
+//! mid-phase reconnects the same way), with every attempt counted in
+//! the phase table's `retry` column — so a fleet draining a killed
+//! worker or a briefly-unreachable server shows up as retries and
+//! latency, never as an aborted phase (DESIGN.md S25). `class_mix`
+//! splits the offered traffic between the fleet's latency and
+//! throughput pools per request.
 
 use std::collections::VecDeque;
 use std::io::BufWriter;
@@ -30,6 +39,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::RequestClass;
 use crate::serve::proto::{self, RequestFrame, Status};
 use crate::util::prop::Rng;
 
@@ -52,6 +62,9 @@ pub struct LoadgenConfig {
     /// Per-request relative deadline carried on the wire; `None` sends 0
     /// (no deadline).
     pub deadline: Option<Duration>,
+    /// Fraction of requests sent as [`RequestClass::Throughput`]
+    /// (0.0 = all latency-class, the single-pool default).
+    pub class_mix: f64,
     /// Seed for arrival gaps and image codes.
     pub seed: u64,
 }
@@ -66,6 +79,7 @@ impl Default for LoadgenConfig {
             burst_len: Duration::from_millis(50),
             duration: Duration::from_millis(1000),
             deadline: None,
+            class_mix: 0.0,
             seed: 0x10AD,
         }
     }
@@ -87,6 +101,12 @@ pub struct LoadReport {
     pub order_violations: u64,
     /// Requests that got no response before the connection closed.
     pub lost: u64,
+    /// Connect attempts that had to be retried (initial connect and
+    /// mid-phase reconnects, exponential backoff + jitter each).
+    pub retries: u64,
+    /// `Ok` responses per request class, indexed by
+    /// [`RequestClass::index`].
+    pub class_ok: [u64; 2],
     pub elapsed: Duration,
     /// Send-to-response latency of every `Ok` reply, microseconds.
     pub latencies_us: Vec<u64>,
@@ -130,6 +150,10 @@ impl LoadReport {
         self.malformed += other.malformed;
         self.order_violations += other.order_violations;
         self.lost += other.lost;
+        self.retries += other.retries;
+        for (a, b) in self.class_ok.iter_mut().zip(other.class_ok) {
+            *a += b;
+        }
         self.elapsed = self.elapsed.max(other.elapsed);
         self.latencies_us.extend(other.latencies_us);
     }
@@ -149,17 +173,18 @@ pub fn percentile_us(samples: &[u64], p: f64) -> u64 {
 /// Throughput / tail-latency table over named phases, one row each.
 pub fn table(phases: &[(&str, &LoadReport)]) -> String {
     let mut out = String::from(
-        "phase      offered      ok     rej    shed    fail    lost |     ok/s   p50(us)   p99(us)   max(us)\n",
+        "phase      offered      ok     rej    shed    fail    lost   retry |     ok/s   p50(us)   p99(us)   max(us)\n",
     );
     for (name, r) in phases {
         out.push_str(&format!(
-            "{name:<10} {:>7} {:>7} {:>7} {:>7} {:>7} {:>7} | {:>8.1} {:>9} {:>9} {:>9}\n",
+            "{name:<10} {:>7} {:>7} {:>7} {:>7} {:>7} {:>7} {:>7} | {:>8.1} {:>9} {:>9} {:>9}\n",
             r.offered,
             r.ok,
             r.rejected,
             r.deadline_exceeded,
             r.failed + r.malformed,
             r.lost,
+            r.retries,
             r.goodput_rps(),
             r.latency_p50_us(),
             r.latency_p99_us(),
@@ -198,23 +223,66 @@ pub fn run(addr: SocketAddr, image_px: usize, cfg: &LoadgenConfig) -> Result<Loa
     Ok(total)
 }
 
-/// One tenant: paced writer on this thread, response reader on a helper
-/// thread, joined at the end of the phase.
-fn tenant_run(
+/// FIFO send log shared between a connection's writer and reader:
+/// `(id, send instant, class)` per in-flight request.
+type Inflight = Arc<Mutex<VecDeque<(u64, Instant, RequestClass)>>>;
+
+/// One live connection: the buffered writer half, the shared send log,
+/// and the reader thread matching responses against it.
+struct Conn {
+    stream: TcpStream,
+    w: BufWriter<TcpStream>,
+    inflight: Inflight,
+    reader: std::thread::JoinHandle<LoadReport>,
+}
+
+/// Connect with exponential backoff + seeded jitter on refusal/reset.
+/// Every extra attempt counts into `retries`; only exhausting the
+/// budget surfaces the error.
+fn connect_with_retry(
     addr: SocketAddr,
-    image_px: usize,
     tenant: usize,
-    cfg: &LoadgenConfig,
-) -> Result<LoadReport> {
-    let stream = TcpStream::connect(addr)
-        .with_context(|| format!("loadgen tenant {tenant} connecting to {addr}"))?;
+    rng: &mut Rng,
+    retries: &mut u64,
+) -> Result<TcpStream> {
+    const ATTEMPTS: u32 = 6;
+    let mut delay = Duration::from_millis(10);
+    let mut attempt = 0;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                attempt += 1;
+                if attempt >= ATTEMPTS {
+                    return Err(e).with_context(|| {
+                        format!(
+                            "loadgen tenant {tenant} connecting to {addr} \
+                             ({ATTEMPTS} attempts, backoff exhausted)"
+                        )
+                    });
+                }
+                *retries += 1;
+                // full backoff plus up to 50% seeded jitter, so aligned
+                // tenants don't re-stampede a recovering server
+                std::thread::sleep(delay + delay.mul_f64(rng.f64() * 0.5));
+                delay = (delay * 2).min(Duration::from_millis(640));
+            }
+        }
+    }
+}
+
+/// Open one connection (with retry) and start its reader.
+fn open_conn(
+    addr: SocketAddr,
+    tenant: usize,
+    rng: &mut Rng,
+    retries: &mut u64,
+) -> Result<Conn> {
+    let stream = connect_with_retry(addr, tenant, rng, retries)?;
     stream.set_nodelay(true).ok();
     let reader_stream = stream.try_clone().context("cloning loadgen stream")?;
-
-    // send log: (id, send instant), consumed by the reader in FIFO order
-    // because the server answers each connection in submission order
-    let inflight: Arc<Mutex<VecDeque<(u64, Instant)>>> = Arc::new(Mutex::new(VecDeque::new()));
-
+    let writer_stream = stream.try_clone().context("cloning loadgen stream")?;
+    let inflight: Inflight = Arc::new(Mutex::new(VecDeque::new()));
     let reader = {
         let inflight = inflight.clone();
         std::thread::Builder::new()
@@ -222,15 +290,43 @@ fn tenant_run(
             .spawn(move || read_responses(reader_stream, &inflight))
             .context("spawning loadgen reader")?
     };
+    Ok(Conn { stream, w: BufWriter::new(writer_stream), inflight, reader })
+}
+
+/// Finish one connection: half-close the write side so the server
+/// drains and answers what was sent, join the reader, merge its
+/// classifications, and count whatever never got a response as lost.
+fn close_conn(conn: Conn, report: &mut LoadReport) -> Result<()> {
+    drop(conn.w); // flush what buffers; a dead socket just drops it
+    let _ = conn.stream.shutdown(Shutdown::Write);
+    match conn.reader.join() {
+        Ok(r) => report.merge(r),
+        Err(_) => anyhow::bail!("loadgen reader panicked"),
+    }
+    report.lost += conn.inflight.lock().unwrap_or_else(|e| e.into_inner()).len() as u64;
+    Ok(())
+}
+
+/// One tenant: paced writer on this thread, response reader on a helper
+/// thread per connection, reconnecting (with backoff) if the connection
+/// dies mid-phase.
+fn tenant_run(
+    addr: SocketAddr,
+    image_px: usize,
+    tenant: usize,
+    cfg: &LoadgenConfig,
+) -> Result<LoadReport> {
+    let mut rng = Rng::new(cfg.seed ^ (tenant as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+    let mut report = LoadReport::default();
+    let mut retries = 0u64;
+    let mut conn = open_conn(addr, tenant, &mut rng, &mut retries)?;
 
     // open-loop writer: arrivals follow the schedule, never the server
-    let mut rng = Rng::new(cfg.seed ^ (tenant as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
     let per_tenant_rps = cfg.rate_rps / cfg.tenants as f64;
     let deadline_us: u32 = cfg
         .deadline
         .map(|d| d.as_micros().min(u32::MAX as u128) as u32)
         .unwrap_or(0);
-    let mut w = BufWriter::new(&stream);
     let start = Instant::now();
     let mut next_at = Duration::ZERO;
     let mut offered = 0u64;
@@ -240,19 +336,41 @@ fn tenant_run(
             std::thread::sleep(next_at - now);
         }
         let id = ((tenant as u64) << 48) | offered;
+        let class = if rng.f64() < cfg.class_mix {
+            RequestClass::Throughput
+        } else {
+            RequestClass::Latency
+        };
         let codes: Vec<u8> = (0..image_px).map(|_| rng.below(16) as u8).collect();
-        let frame = proto::encode_request(&RequestFrame { id, deadline_us, codes });
+        let frame = proto::encode_request(&RequestFrame { id, deadline_us, class, codes });
         {
             // log before writing so a fast response can never race ahead
             // of its own send record
-            let mut q = inflight.lock().unwrap_or_else(|e| e.into_inner());
-            q.push_back((id, Instant::now()));
+            let mut q = conn.inflight.lock().unwrap_or_else(|e| e.into_inner());
+            q.push_back((id, Instant::now(), class));
         }
-        if proto::write_frame(&mut w, &frame).is_err() || w.flush().is_err() {
-            // connection died mid-phase (e.g. server shutdown): whatever
-            // is still in the log counts as lost
-            inflight.lock().unwrap_or_else(|e| e.into_inner()).pop_back();
-            break;
+        if proto::write_frame(&mut conn.w, &frame).is_err() || conn.w.flush().is_err() {
+            // connection died mid-phase (server restart, worker drain):
+            // this request was never sent — retract its log entry,
+            // settle the old connection (unanswered sends count as
+            // lost), and reconnect with backoff instead of aborting
+            conn.inflight.lock().unwrap_or_else(|e| e.into_inner()).pop_back();
+            close_conn(conn, &mut report)?;
+            match open_conn(addr, tenant, &mut rng, &mut retries) {
+                Ok(c) => {
+                    conn = c;
+                    // same id resends on the fresh connection next pass
+                    continue;
+                }
+                Err(_) => {
+                    // backoff exhausted mid-phase: end the phase with
+                    // what resolved instead of failing the whole run
+                    report.offered = offered;
+                    report.retries = retries;
+                    report.elapsed = start.elapsed();
+                    return Ok(report);
+                }
+            }
         }
         offered += 1;
         // burst windows multiply the rate; gaps are exponential so the
@@ -263,17 +381,9 @@ fn tenant_run(
         let gap_s = -(1.0 - u).ln() / rate.max(1e-9);
         next_at += Duration::from_secs_f64(gap_s.min(5.0));
     }
-    // half-close: the server drains what was sent, answers it, then
-    // closes, so the reader sees every response and then EOF
-    let _ = stream.shutdown(Shutdown::Write);
-
-    let mut report = match reader.join() {
-        Ok(r) => r,
-        Err(_) => anyhow::bail!("loadgen reader panicked"),
-    };
+    close_conn(conn, &mut report)?;
     report.offered = offered;
-    report.lost =
-        inflight.lock().unwrap_or_else(|e| e.into_inner()).len() as u64;
+    report.retries = retries;
     report.elapsed = start.elapsed();
     Ok(report)
 }
@@ -292,7 +402,7 @@ fn is_burst(t: Duration, cfg: &LoadgenConfig) -> bool {
 /// filled in by the writer side).
 fn read_responses(
     stream: TcpStream,
-    inflight: &Mutex<VecDeque<(u64, Instant)>>,
+    inflight: &Mutex<VecDeque<(u64, Instant, RequestClass)>>,
 ) -> LoadReport {
     let mut report = LoadReport::default();
     let mut r = std::io::BufReader::new(stream);
@@ -309,8 +419,8 @@ fn read_responses(
             }
         };
         let front = inflight.lock().unwrap_or_else(|e| e.into_inner()).pop_front();
-        let sent_at = match front {
-            Some((id, at)) if id == resp.id => Some(at),
+        let sent = match front {
+            Some((id, at, class)) if id == resp.id => Some((at, class)),
             Some(_) | None => {
                 report.order_violations += 1;
                 None
@@ -319,14 +429,15 @@ fn read_responses(
         match resp.status {
             Status::Ok => {
                 report.ok += 1;
-                if let Some(at) = sent_at {
+                if let Some((at, class)) = sent {
                     report.latencies_us.push(at.elapsed().as_micros() as u64);
+                    report.class_ok[class.index()] += 1;
                 }
             }
             Status::Rejected => report.rejected += 1,
             Status::DeadlineExceeded => report.deadline_exceeded += 1,
             Status::Malformed => report.malformed += 1,
-            Status::Failed => report.failed += 1,
+            Status::Failed | Status::RetriesExhausted => report.failed += 1,
         }
     }
     report
@@ -367,8 +478,36 @@ mod tests {
         assert!(!r.accounted());
         r.lost = 1;
         assert!(r.accounted());
+        // connection retries are attempts, not offered requests — they
+        // must not unbalance the accounting identity
+        r.retries = 4;
+        assert!(r.accounted());
         r.latencies_us = vec![10, 20, 30];
         assert_eq!(r.latency_p50_us(), 20);
         assert_eq!(r.latency_max_us(), 30);
+    }
+
+    #[test]
+    fn merge_sums_retries_and_class_counts() {
+        let mut a = LoadReport {
+            offered: 2,
+            ok: 2,
+            retries: 1,
+            class_ok: [2, 0],
+            ..Default::default()
+        };
+        let b = LoadReport {
+            offered: 3,
+            ok: 3,
+            retries: 2,
+            class_ok: [1, 2],
+            ..Default::default()
+        };
+        a.merge(b);
+        assert_eq!(a.offered, 5);
+        assert_eq!(a.retries, 3);
+        assert_eq!(a.class_ok, [3, 2]);
+        let row = table(&[("mix", &a)]);
+        assert!(row.contains("retry"), "{row}");
     }
 }

@@ -28,7 +28,7 @@
 
 use anyhow::Result;
 
-use lutmul::coordinator::{Coordinator, ServeConfig};
+use lutmul::coordinator::{Coordinator, FleetConfig, PoolScale, RequestClass, ServeConfig};
 use lutmul::dataflow::FoldConfig;
 use lutmul::engine::{Arch, BackendKind, Engine, ExecutorBackend, Folding, InferenceBackend};
 use lutmul::loadgen::{self, LoadgenConfig};
@@ -50,17 +50,28 @@ COMMANDS:
   verify [--n N] [--lut-fabric]      simulate the test set; verify vs PJRT
   serve  [--requests N] [--workers N] [--max-batch N] [--devices N]
          [--listen ADDR] [--duration-ms MS]
+         [--fleet [--min-workers N] [--max-workers N]]
          in-process load by default; --listen ADDR (e.g. 127.0.0.1:7700,
          port 0 = ephemeral) serves the length-prefixed binary protocol
          with an HTTP/1.1 fallback (POST /infer, GET /metrics) instead,
-         for --duration-ms (0 = until killed)
+         for --duration-ms (0 = until killed). --listen --fleet serves
+         the class-routed heterogeneous fleet (DESIGN.md S25): latency-
+         class requests (wire class byte 0 / X-Request-Class: latency)
+         hit executor replicas, throughput-class sharded chains, each
+         pool autoscaled between --min-workers and --max-workers
   loadgen [--addr HOST:PORT] [--tenants N] [--rate RPS] [--duration-ms MS]
-         [--deadline-us US] [--seed S] [--workers N] [--max-batch N] [--smoke]
+         [--deadline-us US] [--seed S] [--workers N] [--max-batch N]
+         [--class-mix F] [--smoke] [--fleet-smoke]
          open-loop bursty multi-tenant traffic against --addr (or a
          self-hosted server when absent) printing a throughput /
-         tail-latency table; --smoke runs calibrated steady/burst/shed
+         tail-latency table; --class-mix F marks fraction F of requests
+         throughput-class; --smoke runs calibrated steady/burst/shed
          phases and fails on lost requests, reordering, missing deadline
-         sheds, or a blown p99 (EXPERIMENTS.md E14)
+         sheds, or a blown p99 (EXPERIMENTS.md E14); --fleet-smoke
+         self-hosts the heterogeneous fleet, kills a shard chain
+         mid-phase, and fails unless every request resolves, ordering
+         holds, both classes complete, and the chain rebuilds
+         (EXPERIMENTS.md E18)
   bench  [--backends all|LIST] [--n N] [--devices N] [--json] [--sparsity S]
          run every available engine backend (executor, pipeline, sharded
          chains, PJRT when loadable) on the same inputs and print a
@@ -92,7 +103,7 @@ COMMANDS:
          analytic multi-FPGA plan; --run executes the sharded chain on the
          small network (trained artifacts when built, its synthetic twin
          otherwise) and prints measured-vs-modeled FPS
-  report <table1|fig1|fig2|fig6|table2|multi|prune|approx>
+  report <table1|fig1|fig2|fig6|table2|multi|prune|approx|fleet>
          prune [--sparsity S] [--fold F] [--n N]: per-layer LUT-area and
          cycle savings of a structurally pruned compile, with the
          simulated pruned pipeline cross-checked against the analytic
@@ -101,6 +112,10 @@ COMMANDS:
          accumulation savings of a Maddness-approximate compile, with
          the saturated config cross-checked bit-exact against the exact
          executor (DESIGN.md S24; accuracy lives in `lutmul eval`)
+         fleet [--requests N] [--devices N]: drive the heterogeneous
+         fleet through mixed-class serving, a chaos kill + rebuild, a
+         burst-driven scale-up and the idle drain back to the floor,
+         gating each invariant (DESIGN.md S25, `make fleet-smoke`)
 
 Malformed flag values and unknown flags are hard errors.
 ";
@@ -184,9 +199,25 @@ fn main() -> Result<()> {
         Some("serve") => {
             args.check_flags(
                 "serve",
-                &["artifacts", "requests", "workers", "max-batch", "devices", "listen", "duration-ms"],
+                &[
+                    "artifacts", "requests", "workers", "max-batch", "devices", "listen",
+                    "duration-ms", "fleet", "min-workers", "max-workers",
+                ],
             )?;
-            if args.has("listen") {
+            if args.has("fleet") {
+                anyhow::ensure!(
+                    args.has("listen"),
+                    "--fleet needs --listen (for in-process fleet load use `lutmul report fleet`)"
+                );
+                serve_listen_fleet(
+                    &artifacts,
+                    &args.get::<String>("listen", "127.0.0.1:0".into())?,
+                    args.get("min-workers", 1usize)?,
+                    args.get("max-workers", 4usize)?,
+                    args.get("devices", 2usize)?,
+                    args.get("duration-ms", 0u64)?,
+                )
+            } else if args.has("listen") {
                 serve_listen(
                     &artifacts,
                     &args.get::<String>("listen", "127.0.0.1:0".into())?,
@@ -210,7 +241,7 @@ fn main() -> Result<()> {
                 "loadgen",
                 &[
                     "artifacts", "addr", "tenants", "rate", "duration-ms", "deadline-us",
-                    "seed", "workers", "max-batch", "smoke",
+                    "seed", "workers", "max-batch", "class-mix", "smoke", "fleet-smoke",
                 ],
             )?;
             loadgen_cmd(&artifacts, &args)
@@ -257,7 +288,10 @@ fn main() -> Result<()> {
             }
         }
         Some("report") => {
-            args.check_flags("report", &["artifacts", "sparsity", "fold", "n", "cols", "depth"])?;
+            args.check_flags(
+                "report",
+                &["artifacts", "sparsity", "fold", "n", "cols", "depth", "requests", "devices"],
+            )?;
             let what = args.positional.get(1).cloned().unwrap_or_default();
             report(&artifacts, &what, &args)
         }
@@ -453,6 +487,61 @@ fn serve_listen(
     Ok(())
 }
 
+/// `lutmul serve --listen ADDR --fleet`: expose the class-routed
+/// heterogeneous fleet (DESIGN.md S25) on a TCP socket. Latency-class
+/// requests (wire class byte 0 / `X-Request-Class: latency`) serve from
+/// executor replicas, throughput-class from `--devices`-way sharded
+/// chains; each pool autoscales between `--min-workers` and
+/// `--max-workers`.
+fn serve_listen_fleet(
+    artifacts: &Artifacts,
+    listen: &str,
+    min_workers: usize,
+    max_workers: usize,
+    devices: usize,
+    duration_ms: u64,
+) -> Result<()> {
+    let engine = Engine::builder()
+        .arch(Arch::Small)
+        .artifacts(artifacts)
+        .or_synthetic(0x5EED)
+        .backend(BackendKind::Reference)
+        .build()?;
+    let io = engine.io();
+    let scale = PoolScale { min_workers, max_workers: max_workers.max(min_workers) };
+    let fleet_cfg = FleetConfig { latency: scale, throughput: scale, ..Default::default() };
+    let server = Server::start_fleet(
+        &engine,
+        devices.max(2),
+        fleet_cfg,
+        ServerConfig { addr: listen.to_string(), ..Default::default() },
+    )?;
+    println!(
+        "lutmul serve --fleet: listening on {} | {} | image {}x{}x{} codes | \
+         latency = executor replicas, throughput = sharded x{} chains | \
+         {min_workers}..{} workers/pool",
+        server.local_addr(),
+        engine.source().label(),
+        io.image_size,
+        io.image_size,
+        io.in_ch,
+        devices.max(2),
+        max_workers.max(min_workers),
+    );
+    if duration_ms == 0 {
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(std::time::Duration::from_millis(duration_ms));
+    println!("{}", server.metrics());
+    if let Some(summary) = server.fleet_summary() {
+        println!("{summary}");
+    }
+    server.shutdown();
+    Ok(())
+}
+
 /// `lutmul loadgen`: open-loop bursty multi-tenant traffic (EXPERIMENTS.md
 /// E14). Self-hosts a server on an ephemeral port unless `--addr` points
 /// at a running one; `--smoke` runs calibrated steady/burst/shed phases
@@ -474,14 +563,28 @@ fn loadgen_cmd(artifacts: &Artifacts, args: &Args) -> Result<()> {
     let workers = args.get("workers", 2usize)?;
     let max_batch = args.get("max-batch", 8usize)?;
     let deadline_us = args.get("deadline-us", 0u64)?;
+    let class_mix = args.get("class-mix", 0.0f64)?;
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&class_mix),
+        "--class-mix must be in [0, 1], got {class_mix}"
+    );
     let cfg = LoadgenConfig {
         tenants: args.get("tenants", 4usize)?,
         rate_rps: args.get("rate", 400.0f64)?,
         duration: Duration::from_millis(args.get("duration-ms", 1000u64)?),
         deadline: (deadline_us > 0).then(|| Duration::from_micros(deadline_us)),
+        class_mix,
         seed: args.get("seed", 0x10ADu64)?,
         ..Default::default()
     };
+
+    if args.has("fleet-smoke") {
+        anyhow::ensure!(
+            !args.has("addr"),
+            "--fleet-smoke self-hosts its fleet server; drop --addr"
+        );
+        return loadgen_fleet_smoke(&mut engine, image_px, max_batch, &cfg);
+    }
 
     // target: remote --addr, or a self-hosted ephemeral server
     let (addr, hosted) = match args.flags.get("addr") {
@@ -593,6 +696,88 @@ fn loadgen_cmd(artifacts: &Artifacts, args: &Args) -> Result<()> {
     if let Some(server) = hosted {
         server.shutdown();
     }
+    Ok(())
+}
+
+/// `lutmul loadgen --fleet-smoke` (EXPERIMENTS.md E18): self-host the
+/// heterogeneous fleet, push a mixed-class bursty phase through the
+/// real socket, kill a shard chain mid-phase, and gate the elastic
+/// serving invariants — every request accounted, responses in order,
+/// zero lost, zero failed (the retry budget absorbs the kill), both
+/// classes completing, and the chain rebuilt.
+fn loadgen_fleet_smoke(
+    engine: &mut Engine,
+    image_px: usize,
+    max_batch: usize,
+    cfg: &LoadgenConfig,
+) -> Result<()> {
+    use std::time::Duration;
+
+    // responsive elasticity: the phase is short, so the supervisor ticks
+    // tight and the retire threshold is tens of ms, not seconds
+    let fleet_cfg = FleetConfig {
+        latency: PoolScale { min_workers: 1, max_workers: 3 },
+        throughput: PoolScale { min_workers: 1, max_workers: 2 },
+        max_batch,
+        scale_tick: Duration::from_millis(2),
+        high_water: 4,
+        up_ticks: 2,
+        idle_ticks: 25,
+        rebuild_backoff: Duration::from_millis(1),
+        ..Default::default()
+    };
+    let server = Server::start_fleet(engine, 2, fleet_cfg, ServerConfig::default())?;
+    println!("loadgen --fleet-smoke: self-hosted fleet server on {}", server.local_addr());
+
+    // calibrate the offered rate to the backend (same discipline as
+    // --smoke), and default to a 30% throughput-class mix unless the
+    // user picked one
+    let probe = engine.images(max_batch.max(1))?;
+    let t0 = std::time::Instant::now();
+    engine.infer_batch(&probe)?;
+    let direct_ips = probe.len() as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+    let rate = (direct_ips * 0.5).clamp(50.0, 2000.0);
+    let mix = if cfg.class_mix > 0.0 { cfg.class_mix } else { 0.3 };
+    println!(
+        "loadgen --fleet-smoke: direct {direct_ips:.0} img/s -> offering {rate:.0} rps \
+         ({:.0}% throughput-class)",
+        100.0 * mix
+    );
+
+    // arm the chaos kill before opening the tap: it fires on the first
+    // throughput batch dispatched mid-phase, draining the in-flight
+    // requests back into the queue and rebuilding the chain under load
+    anyhow::ensure!(
+        server.chaos_kill(RequestClass::Throughput),
+        "the fleet server refused the chaos kill"
+    );
+    let mixed = loadgen::run(
+        server.local_addr(),
+        image_px,
+        &LoadgenConfig { rate_rps: rate, burst_mult: 4.0, class_mix: mix, ..cfg.clone() },
+    )?;
+    print!("{}", loadgen::table(&[("mixed", &mixed)]));
+    let summary = server.fleet_summary().expect("fleet front end");
+    println!("{summary}");
+
+    anyhow::ensure!(mixed.accounted(), "requests unaccounted for ({mixed:?})");
+    anyhow::ensure!(mixed.order_violations == 0, "responses reordered");
+    anyhow::ensure!(mixed.lost == 0, "{} requests lost", mixed.lost);
+    anyhow::ensure!(
+        mixed.failed == 0,
+        "{} requests failed (the retry budget should absorb the kill)",
+        mixed.failed
+    );
+    anyhow::ensure!(
+        mixed.class_ok[RequestClass::Latency.index()] > 0
+            && mixed.class_ok[RequestClass::Throughput.index()] > 0,
+        "both classes must complete (latency {}, throughput {})",
+        mixed.class_ok[RequestClass::Latency.index()],
+        mixed.class_ok[RequestClass::Throughput.index()],
+    );
+    anyhow::ensure!(summary.rebuilds() >= 1, "the killed shard chain never rebuilt");
+    server.shutdown();
+    println!("loadgen --fleet-smoke: OK");
     Ok(())
 }
 
@@ -1175,9 +1360,15 @@ fn report(artifacts: &Artifacts, what: &str, args: &Args) -> Result<()> {
                 args.get("n", 6usize)?,
             )
         }
+        "fleet" => {
+            return lutmul::reports::fleet(
+                args.get("requests", 160usize)?,
+                args.get("devices", 2usize)?,
+            )
+        }
         other => {
             anyhow::bail!(
-                "unknown report '{other}'; try table1|fig1|fig2|fig6|table2|multi|prune|approx"
+                "unknown report '{other}'; try table1|fig1|fig2|fig6|table2|multi|prune|approx|fleet"
             )
         }
     }

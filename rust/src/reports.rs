@@ -525,3 +525,152 @@ pub fn prune(sparsity: f64, fold: usize, n: usize) -> anyhow::Result<()> {
     println!("bit-exact vs masked-dense executor: {n}/{n} images");
     Ok(())
 }
+
+/// `lutmul report fleet` (DESIGN.md S25 / EXPERIMENTS.md E18): drive the
+/// heterogeneous fleet through its whole elastic envelope in-process —
+/// mixed-class serving, a chaos kill with drain-and-rebuild recovery,
+/// a burst that forces a scale-up, and the idle drain back to the
+/// worker floor — then print the per-class table and gate the
+/// invariants (zero lost requests, `rebuilds >= 1` after the kill,
+/// at least one scale-up and one scale-down).
+pub fn fleet(requests: usize, devices: usize) -> anyhow::Result<()> {
+    use crate::coordinator::{Fleet, FleetConfig, PoolScale, RequestClass};
+    use crate::engine::{BackendKind, Engine};
+    use std::time::{Duration, Instant};
+
+    let requests = requests.max(16);
+    let devices = devices.max(2);
+    let net = Network::synthetic(&mobilenet_v2_small(), 0x5EED);
+    let engine = Engine::builder()
+        .network(net)
+        .backend(BackendKind::Reference)
+        .build()?;
+    // aggressive elasticity so the whole envelope fits in one run
+    let cfg = FleetConfig {
+        latency: PoolScale { min_workers: 1, max_workers: 2 },
+        throughput: PoolScale { min_workers: 1, max_workers: 2 },
+        max_batch: 8,
+        max_wait: Duration::from_micros(200),
+        queue_depth: 4 * requests,
+        retry_budget: 2,
+        rebuild_backoff: Duration::from_millis(1),
+        scale_tick: Duration::from_millis(2),
+        high_water: 4,
+        up_ticks: 2,
+        idle_ticks: 25,
+    };
+    let fleet = Fleet::start(&engine, devices, cfg)?;
+    let images = engine.images(requests)?;
+    println!(
+        "fleet report: {} | {requests} requests | latency pool = executor replicas, \
+         throughput pool = sharded x{devices} chains",
+        engine.source().label(),
+    );
+
+    // phase 1 — mixed-class serving: 3:1 latency:throughput
+    let t0 = Instant::now();
+    let tickets: Vec<_> = images
+        .iter()
+        .enumerate()
+        .map(|(i, img)| {
+            let class =
+                if i % 4 == 3 { RequestClass::Throughput } else { RequestClass::Latency };
+            fleet.try_submit(img.clone(), None, class).map(|t| (i, t))
+        })
+        .collect::<Result<Vec<_>, _>>()
+        .map_err(|e| anyhow::anyhow!("fleet admission failed: {e}"))?;
+    let mut ok = 0usize;
+    for (i, t) in tickets {
+        t.wait().map_err(|e| anyhow::anyhow!("mixed request {i} lost: {e}"))?;
+        ok += 1;
+    }
+    println!("phase mixed: {ok}/{requests} served across both classes in {:.2?}", t0.elapsed());
+
+    // phase 2 — chaos: kill the next throughput batch mid-flight; every
+    // drained request must re-run on the rebuilt chain
+    fleet.chaos_kill(RequestClass::Throughput);
+    let n_chaos = (requests / 4).max(4);
+    let tickets: Vec<_> = images
+        .iter()
+        .take(n_chaos)
+        .map(|img| fleet.try_submit(img.clone(), None, RequestClass::Throughput))
+        .collect::<Result<Vec<_>, _>>()
+        .map_err(|e| anyhow::anyhow!("fleet admission failed: {e}"))?;
+    for (i, t) in tickets.into_iter().enumerate() {
+        t.wait().map_err(|e| anyhow::anyhow!("request {i} lost to the chaos kill: {e}"))?;
+    }
+    let rebuilds = fleet.rebuilds(RequestClass::Throughput);
+    println!(
+        "phase chaos: killed one throughput batch mid-flight; {n_chaos}/{n_chaos} served, \
+         {rebuilds} rebuild(s)"
+    );
+    anyhow::ensure!(rebuilds >= 1, "the chaos kill never drove a rebuild");
+
+    // phase 3 — burst: a deep latency backlog must trip the autoscaler
+    let n_burst = 2 * requests;
+    let tickets: Vec<_> = (0..n_burst)
+        .map(|i| {
+            fleet.try_submit(images[i % images.len()].clone(), None, RequestClass::Latency)
+        })
+        .collect::<Result<Vec<_>, _>>()
+        .map_err(|e| anyhow::anyhow!("fleet admission failed: {e}"))?;
+    for (i, t) in tickets.into_iter().enumerate() {
+        t.wait().map_err(|e| anyhow::anyhow!("burst request {i} lost: {e}"))?;
+    }
+    let up = fleet.class_summary(RequestClass::Latency).scale_up;
+    println!("phase burst: {n_burst}/{n_burst} served | latency pool scale-ups {up}");
+    anyhow::ensure!(up >= 1, "the burst never drove a scale-up");
+
+    // phase 4 — idle: retire orders drain the pool back to the floor
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let cs = fleet.class_summary(RequestClass::Latency);
+        if cs.scale_down >= 1 && cs.workers == cfg.latency.min_workers {
+            println!(
+                "phase idle: latency pool retired to {} worker(s) ({} scale-down(s))",
+                cs.workers, cs.scale_down
+            );
+            break;
+        }
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "the idle pool never retired to the floor (workers {}, scale_down {})",
+            cs.workers,
+            cs.scale_down
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // per-class table + gates
+    let summary = fleet.summary();
+    println!(
+        "\n{:<11}{:<12}{:>8}{:>9}{:>9}{:>9}{:>9}{:>9}{:>11}{:>10}{:>10}",
+        "class", "backend", "workers", "spawned", "scale+", "scale-", "rebuilds", "retried",
+        "completed", "p50(us)", "p99(us)"
+    );
+    for c in &summary.classes {
+        println!(
+            "{:<11}{:<12}{:>8}{:>9}{:>9}{:>9}{:>9}{:>9}{:>11}{:>10}{:>10}",
+            c.class.label(),
+            c.backend,
+            c.workers,
+            c.spawned,
+            c.scale_up,
+            c.scale_down,
+            c.rebuilds,
+            c.retried,
+            c.summary.completed,
+            c.summary.p50_us,
+            c.summary.p99_us,
+        );
+    }
+    for class in RequestClass::ALL {
+        let c = summary.class(class).expect("summary covers both classes");
+        anyhow::ensure!(c.summary.completed > 0, "{class} pool never served");
+        anyhow::ensure!(c.summary.failed == 0, "{class} pool failed requests");
+    }
+    anyhow::ensure!(summary.scale_events() >= 2, "autoscaler never cycled");
+    fleet.shutdown();
+    println!("report fleet: OK");
+    Ok(())
+}

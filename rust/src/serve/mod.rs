@@ -1,18 +1,23 @@
-//! Network-facing serving tier (DESIGN.md S21).
+//! Network-facing serving tier (DESIGN.md S21/S25).
 //!
 //! Puts a TCP front end over the [`Coordinator`]'s batch-forming
-//! window so remote clients and in-process submitters share one
-//! admission path, one batcher, and one metrics surface:
+//! window — or the class-routed [`Fleet`]'s pools — so remote clients
+//! and in-process submitters share one admission path, one batcher,
+//! and one metrics surface:
 //!
-//! * [`proto`] — the length-prefixed binary wire protocol (and the
-//!   invariant that lets an HTTP/1.1 request share the same port);
+//! * [`proto`] — the length-prefixed binary wire protocol, v2 carrying
+//!   a per-request [`RequestClass`] byte (and the invariant that lets
+//!   an HTTP/1.1 request share the same port);
 //! * [`server`] — acceptor + per-connection reader/writer threads,
-//!   deadline propagation, and admission-control status mapping.
+//!   deadline + class propagation, and admission-control status
+//!   mapping, generic over the single-pool coordinator and the fleet.
 //!
 //! Everything here is `std`-only: `TcpListener`, OS threads, and
 //! channels — no async runtime, matching the repo's no-new-deps rule.
 //!
 //! [`Coordinator`]: crate::coordinator::Coordinator
+//! [`Fleet`]: crate::coordinator::Fleet
+//! [`RequestClass`]: crate::coordinator::RequestClass
 
 pub mod proto;
 pub mod server;

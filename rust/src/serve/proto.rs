@@ -6,6 +6,7 @@
 //!   u8   version        (PROTO_VERSION)
 //!   u64  request id     (LE; echoed verbatim in the response)
 //!   u32  deadline_us    (LE; 0 = no deadline, else relative to receipt)
+//!   u8   class          (RequestClass: 0 latency, 1 throughput)
 //!   u8[] codes          (one activation code per byte, H*W*C of them)
 //! ```
 //!
@@ -33,8 +34,11 @@
 
 use std::io::{self, Read, Write};
 
-/// Protocol version byte; bumped on any layout change.
-pub const PROTO_VERSION: u8 = 1;
+use crate::coordinator::RequestClass;
+
+/// Protocol version byte; bumped on any layout change. v2 added the
+/// request-class byte after the deadline (DESIGN.md S25 fleet routing).
+pub const PROTO_VERSION: u8 = 2;
 
 /// Hard cap on one frame's payload (4 MiB — a full-ImageNet 224x224x3
 /// image is ~150 KiB of codes; anything near the cap is hostile or
@@ -58,6 +62,9 @@ pub enum Status {
     /// The worker's backend failed mid-batch, or the server is shutting
     /// down with the request in flight.
     Failed = 4,
+    /// The fleet drained the request from failed batches until its
+    /// retry budget ran out (DESIGN.md S25).
+    RetriesExhausted = 5,
 }
 
 impl Status {
@@ -68,6 +75,7 @@ impl Status {
             2 => Some(Status::Rejected),
             3 => Some(Status::Malformed),
             4 => Some(Status::Failed),
+            5 => Some(Status::RetriesExhausted),
             _ => None,
         }
     }
@@ -79,6 +87,9 @@ pub struct RequestFrame {
     pub id: u64,
     /// Relative deadline in microseconds; 0 = none.
     pub deadline_us: u32,
+    /// Which fleet pool serves the request (ignored by single-pool
+    /// servers). An unknown class byte is a malformed frame.
+    pub class: RequestClass,
     /// One activation code per byte.
     pub codes: Vec<u8>,
 }
@@ -92,8 +103,8 @@ pub struct ResponseFrame {
     pub logits: Vec<f32>,
 }
 
-/// Fixed request header size (version + id + deadline).
-const REQ_HEADER: usize = 1 + 8 + 4;
+/// Fixed request header size (version + id + deadline + class).
+const REQ_HEADER: usize = 1 + 8 + 4 + 1;
 /// Fixed response header size (version + status + id + class + count).
 const RESP_HEADER: usize = 1 + 1 + 8 + 4 + 4;
 
@@ -105,6 +116,7 @@ pub fn encode_request(req: &RequestFrame) -> Vec<u8> {
     buf.push(PROTO_VERSION);
     buf.extend_from_slice(&req.id.to_le_bytes());
     buf.extend_from_slice(&req.deadline_us.to_le_bytes());
+    buf.push(req.class as u8);
     buf.extend_from_slice(&req.codes);
     buf
 }
@@ -127,7 +139,9 @@ pub fn decode_request(payload: &[u8]) -> Result<RequestFrame, String> {
     }
     let id = u64::from_le_bytes(payload[1..9].try_into().unwrap());
     let deadline_us = u32::from_le_bytes(payload[9..13].try_into().unwrap());
-    Ok(RequestFrame { id, deadline_us, codes: payload[REQ_HEADER..].to_vec() })
+    let class = RequestClass::from_u8(payload[13])
+        .ok_or_else(|| format!("unknown request class byte {}", payload[13]))?;
+    Ok(RequestFrame { id, deadline_us, class, codes: payload[REQ_HEADER..].to_vec() })
 }
 
 /// Encode one response as a complete frame (length prefix included).
@@ -238,10 +252,36 @@ mod tests {
 
     #[test]
     fn request_round_trips() {
-        let req = RequestFrame { id: 0xDEAD_BEEF_0042, deadline_us: 1500, codes: vec![0, 7, 15, 3] };
+        let req = RequestFrame {
+            id: 0xDEAD_BEEF_0042,
+            deadline_us: 1500,
+            class: RequestClass::Latency,
+            codes: vec![0, 7, 15, 3],
+        };
         let wire = encode_request(&req);
         let payload = read_frame(&mut wire.as_slice(), None).unwrap().unwrap();
         assert_eq!(decode_request(&payload).unwrap(), req);
+    }
+
+    #[test]
+    fn request_class_rides_the_wire() {
+        for class in RequestClass::ALL {
+            let req = RequestFrame { id: 3, deadline_us: 0, class, codes: vec![1, 2] };
+            let wire = encode_request(&req);
+            let payload = read_frame(&mut wire.as_slice(), None).unwrap().unwrap();
+            assert_eq!(decode_request(&payload).unwrap().class, class);
+        }
+        // an unknown class byte is malformed, not silently defaulted
+        let mut wire = encode_request(&RequestFrame {
+            id: 3,
+            deadline_us: 0,
+            class: RequestClass::Latency,
+            codes: vec![1, 2],
+        });
+        wire[4 + 13] = 9; // class byte of the payload
+        let payload = read_frame(&mut wire.as_slice(), None).unwrap().unwrap();
+        let err = decode_request(&payload).unwrap_err();
+        assert!(err.contains("class byte 9"), "{err}");
     }
 
     #[test]
@@ -277,7 +317,12 @@ mod tests {
 
     #[test]
     fn bad_version_and_status_are_loud() {
-        let mut wire = encode_request(&RequestFrame { id: 1, deadline_us: 0, codes: vec![1] });
+        let mut wire = encode_request(&RequestFrame {
+            id: 1,
+            deadline_us: 0,
+            class: RequestClass::Latency,
+            codes: vec![1],
+        });
         wire[4] = 99; // version byte of the payload
         let payload = read_frame(&mut wire.as_slice(), None).unwrap().unwrap();
         let err = decode_request(&payload).unwrap_err();

@@ -41,10 +41,65 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{Coordinator, MetricsSummary, ServeConfig, ServeError, SubmitError, Ticket};
+use crate::coordinator::{
+    Coordinator, Fleet, FleetConfig, FleetSummary, MetricsSummary, RequestClass, ServeConfig,
+    ServeError, SubmitError, Ticket,
+};
 use crate::engine::Engine;
 
 use super::proto::{self, RequestFrame, ResponseFrame, Status};
+
+/// What the network layer serves: the single-pool S21 coordinator or
+/// the class-routed S25 fleet. Connections never branch on this beyond
+/// `try_submit` — both resolve tickets over the same waiting contract,
+/// so the reader/writer machinery is shared verbatim.
+enum FrontEnd {
+    Single(Coordinator),
+    Fleet(Fleet),
+}
+
+impl FrontEnd {
+    /// Typed submission; single-pool front ends ignore the class.
+    fn try_submit(
+        &self,
+        image: Vec<i32>,
+        deadline: Option<Duration>,
+        class: RequestClass,
+    ) -> std::result::Result<Ticket, SubmitError> {
+        match self {
+            FrontEnd::Single(c) => c.try_submit(image, deadline),
+            FrontEnd::Fleet(f) => f.try_submit(image, deadline, class),
+        }
+    }
+
+    fn metrics(&self) -> MetricsSummary {
+        match self {
+            FrontEnd::Single(c) => c.metrics(),
+            FrontEnd::Fleet(f) => f.metrics(),
+        }
+    }
+
+    fn rejected(&self) -> u64 {
+        match self {
+            FrontEnd::Single(c) => c.rejected(),
+            FrontEnd::Fleet(f) => f.rejected(),
+        }
+    }
+
+    fn fleet(&self) -> Option<&Fleet> {
+        match self {
+            FrontEnd::Single(_) => None,
+            FrontEnd::Fleet(f) => Some(f),
+        }
+    }
+
+    fn shutdown(self) {
+        match self {
+            FrontEnd::Single(c) => c.shutdown(),
+            FrontEnd::Fleet(f) => f.shutdown(),
+        }
+    }
+}
 
 /// Network configuration; the batching/worker knobs live in
 /// [`ServeConfig`].
@@ -80,7 +135,7 @@ pub struct NetStats {
 /// stop-and-join.
 pub struct Server {
     addr: SocketAddr,
-    coord: Option<Arc<Coordinator>>,
+    front: Option<Arc<FrontEnd>>,
     stop: Arc<AtomicBool>,
     stats: Arc<NetStats>,
     accept_thread: Option<JoinHandle<()>>,
@@ -95,14 +150,37 @@ impl Server {
         Self::over(Coordinator::start(engine, serve_cfg)?, cfg)
     }
 
+    /// Start a heterogeneous fleet over `engine` (executor replicas for
+    /// latency traffic, `devices`-way shard chains for throughput) and
+    /// put this network front end on it (DESIGN.md S25).
+    pub fn start_fleet(
+        engine: &Engine,
+        devices: usize,
+        fleet_cfg: FleetConfig,
+        cfg: ServerConfig,
+    ) -> Result<Server> {
+        Self::over_fleet(Fleet::start(engine, devices, fleet_cfg)?, cfg)
+    }
+
     /// Put the network front end over an already-running coordinator
     /// (the chaos suite injects flaky backends through
     /// `Coordinator::start_with` and serves them here).
     pub fn over(coord: Coordinator, cfg: ServerConfig) -> Result<Server> {
+        Self::over_front(FrontEnd::Single(coord), cfg)
+    }
+
+    /// Put the network front end over an already-running fleet (the
+    /// fleet chaos suite injects per-class backends through
+    /// `Fleet::start_with` and serves them here).
+    pub fn over_fleet(fleet: Fleet, cfg: ServerConfig) -> Result<Server> {
+        Self::over_front(FrontEnd::Fleet(fleet), cfg)
+    }
+
+    fn over_front(front: FrontEnd, cfg: ServerConfig) -> Result<Server> {
         let listener = TcpListener::bind(&cfg.addr)
             .with_context(|| format!("binding lutmul serve to {}", cfg.addr))?;
         let addr = listener.local_addr()?;
-        let coord = Arc::new(coord);
+        let coord = Arc::new(front);
         let stop = Arc::new(AtomicBool::new(false));
         let stats = Arc::new(NetStats::default());
         let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
@@ -160,7 +238,7 @@ impl Server {
 
         Ok(Server {
             addr,
-            coord: Some(coord),
+            front: Some(coord),
             stop,
             stats,
             accept_thread: Some(accept_thread),
@@ -173,15 +251,33 @@ impl Server {
         self.addr
     }
 
-    /// Serving metrics snapshot (the coordinator's, `rejected`
-    /// included).
+    /// Serving metrics snapshot (`rejected` included; merged across
+    /// pools when serving a fleet).
     pub fn metrics(&self) -> MetricsSummary {
-        self.coord.as_ref().expect("server running").metrics()
+        self.front.as_ref().expect("server running").metrics()
     }
 
     /// Requests bounced at admission (queue full).
     pub fn rejected(&self) -> u64 {
-        self.coord.as_ref().expect("server running").rejected()
+        self.front.as_ref().expect("server running").rejected()
+    }
+
+    /// Per-class fleet snapshot, when this server fronts a fleet.
+    pub fn fleet_summary(&self) -> Option<FleetSummary> {
+        self.front.as_ref().expect("server running").fleet().map(|f| f.summary())
+    }
+
+    /// Arm one injected mid-batch failure on `class`'s pool (fleet
+    /// front ends only); returns whether a fleet was armed. The
+    /// loadgen's fleet smoke drives its kill through this.
+    pub fn chaos_kill(&self, class: RequestClass) -> bool {
+        match self.front.as_ref().expect("server running").fleet() {
+            Some(f) => {
+                f.chaos_kill(class);
+                true
+            }
+            None => false,
+        }
     }
 
     /// Socket-level counters.
@@ -208,10 +304,10 @@ impl Server {
         }
         // every connection thread has exited, so this is the last Arc;
         // fall back to a plain drop if something still races
-        if let Some(coord) = self.coord.take() {
-            match Arc::try_unwrap(coord) {
-                Ok(c) => c.shutdown(),
-                Err(_) => eprintln!("lutmul serve: coordinator still referenced at shutdown"),
+        if let Some(front) = self.front.take() {
+            match Arc::try_unwrap(front) {
+                Ok(f) => f.shutdown(),
+                Err(_) => eprintln!("lutmul serve: front end still referenced at shutdown"),
             }
         }
     }
@@ -259,7 +355,7 @@ enum Outcome {
 
 fn handle_connection(
     stream: TcpStream,
-    coord: &Arc<Coordinator>,
+    coord: &Arc<FrontEnd>,
     stop: &Arc<AtomicBool>,
     stats: &Arc<NetStats>,
 ) {
@@ -291,7 +387,7 @@ fn handle_connection(
 fn handle_binary(
     stream: &TcpStream,
     first4: [u8; 4],
-    coord: &Arc<Coordinator>,
+    coord: &Arc<FrontEnd>,
     stop: &Arc<AtomicBool>,
     stats: &Arc<NetStats>,
 ) {
@@ -324,7 +420,15 @@ fn handle_binary(
                             class: 0,
                             logits: Vec::new(),
                         },
-                        Err(ServeError::WorkerFailed(_)) | Err(ServeError::Disconnected) => {
+                        Err(ServeError::RetriesExhausted { .. }) => ResponseFrame {
+                            id,
+                            status: Status::RetriesExhausted,
+                            class: 0,
+                            logits: Vec::new(),
+                        },
+                        Err(ServeError::WorkerFailed(_))
+                        | Err(ServeError::Shutdown)
+                        | Err(ServeError::Disconnected) => {
                             ResponseFrame { id, status: Status::Failed, class: 0, logits: Vec::new() }
                         }
                     },
@@ -377,11 +481,11 @@ fn handle_binary(
 }
 
 /// Submit one decoded frame; admission misses become immediate statuses.
-fn submit_frame(coord: &Coordinator, req: RequestFrame, stats: &NetStats) -> Outcome {
+fn submit_frame(coord: &FrontEnd, req: RequestFrame, stats: &NetStats) -> Outcome {
     let image: Vec<i32> = req.codes.iter().map(|&c| c as i32).collect();
     let deadline =
         (req.deadline_us > 0).then(|| Duration::from_micros(req.deadline_us as u64));
-    match coord.try_submit(image, deadline) {
+    match coord.try_submit(image, deadline, req.class) {
         Ok(ticket) => Outcome::Pending(req.id, ticket),
         Err(SubmitError::Rejected) => Outcome::Immediate(req.id, Status::Rejected),
         Err(SubmitError::BadShape { .. }) => {
@@ -393,12 +497,13 @@ fn submit_frame(coord: &Coordinator, req: RequestFrame, stats: &NetStats) -> Out
 }
 
 /// Minimal HTTP/1.1 fallback: `POST /infer` (body = one code byte per
-/// activation, optional `X-Deadline-Us` header), `GET /metrics`,
-/// `GET /healthz`. One request per connection (`Connection: close`).
+/// activation, optional `X-Deadline-Us` and `X-Request-Class` headers
+/// — "latency" or "throughput"), `GET /metrics`, `GET /healthz`. One
+/// request per connection (`Connection: close`).
 fn handle_http(
     stream: &TcpStream,
     first4: &[u8; 4],
-    coord: &Arc<Coordinator>,
+    coord: &Arc<FrontEnd>,
     stop: &Arc<AtomicBool>,
     stats: &Arc<NetStats>,
 ) {
@@ -426,12 +531,18 @@ fn handle_http(
 
     let mut content_length = 0usize;
     let mut deadline_us = 0u64;
+    let mut class = RequestClass::Latency;
+    let mut bad_class = false;
     for line in lines {
         let Some((k, v)) = line.split_once(':') else { continue };
         let v = v.trim();
         match k.to_ascii_lowercase().as_str() {
             "content-length" => content_length = v.parse().unwrap_or(0),
             "x-deadline-us" => deadline_us = v.parse().unwrap_or(0),
+            "x-request-class" => match RequestClass::parse(v) {
+                Some(c) => class = c,
+                None => bad_class = true,
+            },
             _ => {}
         }
     }
@@ -440,15 +551,27 @@ fn handle_http(
         ("GET", "/healthz") => respond_http(stream, 200, "ok"),
         ("GET", "/metrics") => {
             let m = coord.metrics();
-            let body = format!(
+            let mut body = format!(
                 "{m}\nrejected {}\nshed_deadline {}\nfailed {}\n",
                 m.rejected, m.shed_deadline, m.failed
             );
+            if let Some(fleet) = coord.fleet() {
+                body.push_str(&format!("{}\n", fleet.summary()));
+            }
             respond_http(stream, 200, &body);
         }
         ("POST", _) => {
             if content_length == 0 || content_length > proto::MAX_FRAME {
                 respond_http(stream, 400, "{\"error\":\"bad content-length\"}");
+                return;
+            }
+            if bad_class {
+                stats.malformed.fetch_add(1, Ordering::Relaxed);
+                respond_http(
+                    stream,
+                    400,
+                    "{\"error\":\"x-request-class must be latency or throughput\"}",
+                );
                 return;
             }
             let mut body = vec![0u8; content_length];
@@ -457,7 +580,7 @@ fn handle_http(
             }
             let image: Vec<i32> = body.iter().map(|&c| c as i32).collect();
             let deadline = (deadline_us > 0).then(|| Duration::from_micros(deadline_us));
-            match coord.try_submit(image, deadline) {
+            match coord.try_submit(image, deadline, class) {
                 Ok(ticket) => match ticket.wait() {
                     Ok(res) => {
                         let logits: Vec<String> =
@@ -474,6 +597,9 @@ fn handle_http(
                     }
                     Err(ServeError::DeadlineExceeded { .. }) => {
                         respond_http(stream, 504, "{\"error\":\"deadline exceeded\"}")
+                    }
+                    Err(ServeError::RetriesExhausted { .. }) => {
+                        respond_http(stream, 503, "{\"error\":\"retry budget exhausted\"}")
                     }
                     Err(_) => respond_http(stream, 500, "{\"error\":\"worker failed\"}"),
                 },

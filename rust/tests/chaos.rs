@@ -17,7 +17,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use lutmul::coordinator::{Coordinator, MetricsSummary, ServeConfig, ServeError};
+use lutmul::coordinator::{Coordinator, MetricsSummary, RequestClass, ServeConfig, ServeError};
 use lutmul::engine::{BackendFactory, BatchOutput, InferenceBackend};
 use lutmul::serve::proto::{self, RequestFrame, Status};
 use lutmul::serve::{Server, ServerConfig};
@@ -180,7 +180,12 @@ fn socket_flood_drives_rejected_with_every_request_answered() {
     let mut w = BufWriter::new(stream.try_clone().unwrap());
     for id in 0..FLOOD {
         let codes: Vec<u8> = img(id as i32).iter().map(|&c| c as u8).collect();
-        let frame = proto::encode_request(&RequestFrame { id, deadline_us: 0, codes });
+        let frame = proto::encode_request(&RequestFrame {
+            id,
+            deadline_us: 0,
+            class: RequestClass::Latency,
+            codes,
+        });
         proto::write_frame(&mut w, &frame).unwrap();
     }
     w.flush().unwrap();
@@ -228,7 +233,12 @@ fn malformed_frames_answer_without_killing_connection_or_server() {
 
     let send_valid = |w: &mut dyn Write, id: u64| {
         let codes: Vec<u8> = img(id as i32).iter().map(|&c| c as u8).collect();
-        let frame = proto::encode_request(&RequestFrame { id, deadline_us: 0, codes });
+        let frame = proto::encode_request(&RequestFrame {
+            id,
+            deadline_us: 0,
+            class: RequestClass::Latency,
+            codes,
+        });
         proto::write_frame(w, &frame).unwrap();
         w.flush().unwrap();
     };
@@ -251,6 +261,7 @@ fn malformed_frames_answer_without_killing_connection_or_server() {
     let mut bad = proto::encode_request(&RequestFrame {
         id: 2,
         deadline_us: 0,
+        class: RequestClass::Latency,
         codes: vec![1; IMAGE_PX],
     });
     bad[4] = 99; // corrupt the version byte inside the payload
@@ -263,7 +274,12 @@ fn malformed_frames_answer_without_killing_connection_or_server() {
     // Malformed with the request's own id, connection survives
     send_valid(&mut w, 3); // keep ordering observable
     let codes = vec![1u8; IMAGE_PX + 3];
-    let frame = proto::encode_request(&RequestFrame { id: 4, deadline_us: 0, codes });
+    let frame = proto::encode_request(&RequestFrame {
+        id: 4,
+        deadline_us: 0,
+        class: RequestClass::Latency,
+        codes,
+    });
     w.write_all(&frame).unwrap();
     w.flush().unwrap();
     let resp = read_one(&mut r);

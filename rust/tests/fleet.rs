@@ -1,0 +1,531 @@
+//! Chaos + elasticity suite for the heterogeneous fleet (DESIGN.md
+//! S25). The invariants under test:
+//!
+//!  * killing a ShardChain worker mid-batch loses zero requests: every
+//!    drained request re-runs on the rebuilt backend, logits stay
+//!    bit-identical to a direct `Executor` run, `rebuilds` counts
+//!    exactly the injected kill, and shard occupancy stays monotonic
+//!    across the rebuild;
+//!  * a request drained past its retry budget resolves to the typed
+//!    [`ServeError::RetriesExhausted`] — never a hang, never a silent
+//!    drop;
+//!  * the autoscaler grows a pool under a sustained burst and
+//!    drain-then-retires back to the floor once the queue goes idle;
+//!  * each [`RequestClass`] routes to its own pool's backend;
+//!  * shutdown (fleet or single-pool coordinator) resolves every
+//!    admitted ticket even when every worker has died — the regression
+//!    for the admission/shutdown race.
+//!
+//! Deterministic backends are injected through `Fleet::start_with` /
+//! `Coordinator::start_with`, mirroring `tests/chaos.rs`; the one
+//! real-engine test drives `Fleet::start` over a synthetic network so
+//! both backend kinds (executor replicas, sharded chains) serve live.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lutmul::coordinator::{
+    Coordinator, Fleet, FleetConfig, MetricsSummary, PoolScale, RequestClass, ServeConfig,
+    ServeError, SubmitError,
+};
+use lutmul::engine::{BackendFactory, BackendKind, BatchOutput, Engine, InferenceBackend};
+use lutmul::graph::executor::{Datapath, Executor, Tensor};
+use lutmul::graph::mobilenet_v2_small;
+use lutmul::graph::network::Network;
+use lutmul::util::prop::Rng;
+
+/// Codes per image for the injected backends (the elasticity tests
+/// exercise the pool machinery, not the math).
+const IMAGE_PX: usize = 4;
+
+fn img(seed: i32) -> Vec<i32> {
+    (0..IMAGE_PX as i32).map(|i| (seed + i) & 15).collect()
+}
+
+/// Shared control block for every backend a factory builds, across
+/// rebuilds (same shape as the S21 chaos suite's).
+#[derive(Default)]
+struct Control {
+    builds: AtomicU64,
+    calls: AtomicU64,
+    /// Fail this many upcoming batches (decremented per failure);
+    /// `u64::MAX` fails every batch.
+    fail_next: AtomicU64,
+    /// Sleep this long per batch (a worker bottleneck, so queue depth
+    /// builds and the autoscaler has a signal).
+    slow_ms: AtomicU64,
+    /// Factory calls beyond this many return an error (0 = unlimited):
+    /// how the rebuild-permanently-fails path is staged.
+    max_builds: AtomicU64,
+}
+
+struct FlakyBackend {
+    ctl: Arc<Control>,
+    /// Logit tag so class-routing is observable: `logits[2]` carries it.
+    tag: f32,
+}
+
+fn tagged_logits(img: &[i32], tag: f32) -> Vec<f32> {
+    vec![img.iter().sum::<i32>() as f32, img[0] as f32, tag]
+}
+
+impl InferenceBackend for FlakyBackend {
+    fn name(&self) -> &str {
+        "flaky"
+    }
+
+    fn infer_batch(&mut self, images: &[Vec<i32>]) -> anyhow::Result<BatchOutput> {
+        self.ctl.calls.fetch_add(1, Ordering::SeqCst);
+        let armed = self
+            .ctl
+            .fail_next
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1));
+        if armed.is_ok() {
+            anyhow::bail!("injected backend fault");
+        }
+        let slow = self.ctl.slow_ms.load(Ordering::Relaxed);
+        if slow > 0 {
+            std::thread::sleep(Duration::from_millis(slow));
+        }
+        Ok(BatchOutput {
+            logits: images.iter().map(|i| tagged_logits(i, self.tag)).collect(),
+            cycles: 0,
+            counters: Vec::new(),
+        })
+    }
+}
+
+fn flaky_factory(ctl: Arc<Control>, tag: f32) -> BackendFactory {
+    Arc::new(move || {
+        let n = ctl.builds.fetch_add(1, Ordering::SeqCst);
+        let cap = ctl.max_builds.load(Ordering::SeqCst);
+        if cap > 0 && n >= cap {
+            anyhow::bail!("injected factory outage (build {n} refused)");
+        }
+        Ok(Box::new(FlakyBackend { ctl: ctl.clone(), tag }))
+    })
+}
+
+/// A fleet config with the supervisor effectively quiesced, so tests of
+/// the retry/rebuild path see no autoscale noise.
+fn quiet_cfg() -> FleetConfig {
+    FleetConfig {
+        latency: PoolScale { min_workers: 1, max_workers: 1 },
+        throughput: PoolScale { min_workers: 1, max_workers: 1 },
+        max_batch: 4,
+        max_wait: Duration::from_millis(2),
+        queue_depth: 256,
+        retry_budget: 2,
+        rebuild_backoff: Duration::from_micros(200),
+        scale_tick: Duration::from_millis(50),
+        high_water: 1_000,
+        up_ticks: 1_000,
+        idle_ticks: 1_000_000,
+    }
+}
+
+/// The cumulative counters a summary must never decrease.
+fn assert_monotonic(prev: &MetricsSummary, next: &MetricsSummary, label: &str) {
+    assert!(next.completed >= prev.completed, "{label}: completed rolled back");
+    assert!(next.batches >= prev.batches, "{label}: batches rolled back");
+    assert!(next.failed >= prev.failed, "{label}: failed rolled back");
+    assert!(next.shed_deadline >= prev.shed_deadline, "{label}: shed rolled back");
+    assert!(next.rejected >= prev.rejected, "{label}: rejected rolled back");
+}
+
+fn shard_fires(s: &MetricsSummary) -> u64 {
+    s.shards.iter().map(|c| c.fires).sum()
+}
+
+// ---------------------------------------------------------------------
+// tentpole acceptance: kill a ShardChain mid-batch on a real engine
+// ---------------------------------------------------------------------
+
+#[test]
+fn chaos_kill_mid_batch_loses_nothing_on_real_engine() {
+    let net = Network::synthetic(&mobilenet_v2_small(), 0x17);
+    let (s, c) = (net.meta.image_size, net.meta.in_ch);
+    let engine = Engine::builder()
+        .network(net.clone())
+        .backend(BackendKind::Reference)
+        .build()
+        .unwrap();
+    let fleet = Fleet::start(&engine, 2, quiet_cfg()).unwrap();
+
+    let mut rng = Rng::new(0xF1EE7);
+    let images: Vec<Vec<i32>> = (0..12).map(|_| rng.vec_i32(s * s * c, 0, 15)).collect();
+    let ex = Executor::new(&net, Datapath::Arithmetic);
+    let want: Vec<Vec<f32>> = ex.run_batch(
+        &images.iter().map(|i| Tensor::from_hwc(s, s, c, i.clone())).collect::<Vec<_>>(),
+    );
+
+    // warm wave: the throughput pool serves bit-exactly before any chaos
+    for (i, image) in images.iter().take(4).enumerate() {
+        let r = fleet.infer(image.clone(), RequestClass::Throughput).unwrap();
+        assert_eq!(r.logits, want[i], "warm request {i} diverged");
+    }
+    assert_eq!(fleet.rebuilds(RequestClass::Throughput), 0);
+    let before = fleet.class_summary(RequestClass::Throughput).summary;
+    let fires_before = shard_fires(&before);
+    assert!(fires_before > 0, "sharded occupancy never recorded");
+
+    // kill the chain mid-batch: every drained request must re-run on the
+    // rebuilt backend and still match the executor bit-for-bit
+    fleet.chaos_kill(RequestClass::Throughput);
+    let tickets: Vec<_> = images
+        .iter()
+        .skip(4)
+        .map(|i| fleet.try_submit(i.clone(), None, RequestClass::Throughput).unwrap())
+        .collect();
+    for (i, t) in tickets.into_iter().enumerate() {
+        let r = t.wait().unwrap_or_else(|e| panic!("request {i} lost to the kill: {e}"));
+        assert_eq!(r.logits, want[i + 4], "request {i} diverged after the kill");
+    }
+    assert_eq!(
+        fleet.rebuilds(RequestClass::Throughput),
+        1,
+        "exactly the injected kill rebuilds"
+    );
+
+    // occupancy banked across the rebuild: cumulative fires never shrink
+    let after = fleet.class_summary(RequestClass::Throughput).summary;
+    assert!(
+        shard_fires(&after) >= fires_before,
+        "shard occupancy rolled back across the rebuild ({} -> {})",
+        fires_before,
+        shard_fires(&after)
+    );
+    assert_monotonic(&before, &after, "throughput pool across chaos");
+
+    // the latency pool is untouched by throughput-class chaos, serves
+    // from its own (executor) backend, and both classes report serving
+    let lat = fleet.infer(images[0].clone(), RequestClass::Latency).unwrap();
+    assert_eq!(lat.logits, want[0], "latency pool diverged");
+    assert_eq!(fleet.rebuilds(RequestClass::Latency), 0);
+    let summary = fleet.summary();
+    let lat_s = summary.class(RequestClass::Latency).unwrap();
+    let thr_s = summary.class(RequestClass::Throughput).unwrap();
+    assert!(lat_s.summary.completed >= 1 && thr_s.summary.completed >= 12);
+    assert_ne!(lat_s.backend, thr_s.backend, "pools share a backend kind");
+    assert!(thr_s.retried >= 1, "the killed batch was never drained into retries");
+    assert_eq!(
+        fleet.metrics().completed,
+        lat_s.summary.completed + thr_s.summary.completed,
+        "merged metrics disagree with the per-class sums"
+    );
+    fleet.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// retry budget
+// ---------------------------------------------------------------------
+
+#[test]
+fn retry_budget_exhaustion_sheds_typed() {
+    let ctl = Arc::new(Control::default());
+    ctl.fail_next.store(u64::MAX, Ordering::SeqCst); // every batch fails
+    let mut cfg = quiet_cfg();
+    cfg.retry_budget = 1;
+    let fleet = Fleet::start_with(
+        flaky_factory(ctl.clone(), 1.0),
+        flaky_factory(ctl.clone(), 2.0),
+        IMAGE_PX,
+        1_000,
+        cfg,
+    )
+    .unwrap();
+
+    match fleet.try_submit(img(3), None, RequestClass::Latency).unwrap().wait() {
+        Err(ServeError::RetriesExhausted { attempts }) => {
+            assert_eq!(attempts, 2, "budget 1 = one retry, two failed executions")
+        }
+        other => panic!("expected RetriesExhausted, got {other:?}"),
+    }
+    let cs = fleet.class_summary(RequestClass::Latency);
+    assert_eq!(cs.retried, 1, "exactly one re-enqueue within budget");
+    assert_eq!(cs.shed_retry, 1, "exactly one typed shed");
+    assert_eq!(cs.summary.failed, 1, "the shed counts as a failed request");
+    assert!(cs.rebuilds >= 1, "failed batches rebuild the backend");
+
+    // the pool survives: heal the backend and it serves again
+    ctl.fail_next.store(0, Ordering::SeqCst);
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        match fleet.try_submit(img(5), None, RequestClass::Latency).unwrap().wait() {
+            Ok(r) => {
+                assert_eq!(r.logits, tagged_logits(&img(5), 1.0));
+                break;
+            }
+            Err(ServeError::RetriesExhausted { .. }) if Instant::now() < deadline => {
+                // a straggler failure armed before the heal landed
+                continue;
+            }
+            other => panic!("pool never healed: {other:?}"),
+        }
+    }
+    fleet.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// autoscaling
+// ---------------------------------------------------------------------
+
+#[test]
+fn autoscale_grows_under_burst_and_retires_to_floor() {
+    let ctl = Arc::new(Control::default());
+    ctl.slow_ms.store(3, Ordering::Relaxed); // bottleneck => depth builds
+    let cfg = FleetConfig {
+        latency: PoolScale { min_workers: 1, max_workers: 3 },
+        throughput: PoolScale { min_workers: 1, max_workers: 1 },
+        max_batch: 1,
+        max_wait: Duration::from_micros(100),
+        queue_depth: 256,
+        retry_budget: 2,
+        rebuild_backoff: Duration::from_micros(200),
+        scale_tick: Duration::from_millis(1),
+        high_water: 2,
+        up_ticks: 2,
+        idle_ticks: 5,
+    };
+    let fleet = Fleet::start_with(
+        flaky_factory(ctl.clone(), 1.0),
+        flaky_factory(ctl.clone(), 2.0),
+        IMAGE_PX,
+        1_000,
+        cfg,
+    )
+    .unwrap();
+    assert_eq!(fleet.workers(RequestClass::Latency), 1);
+
+    // burst: 40 requests at 3ms each against one worker is ~120ms of
+    // backlog — the supervisor (1ms tick, 2 hot ticks) must scale up
+    let tickets: Vec<_> = (0..40)
+        .map(|i| fleet.try_submit(img(i), None, RequestClass::Latency).unwrap())
+        .collect();
+    for (i, t) in tickets.into_iter().enumerate() {
+        let r = t.wait().unwrap_or_else(|e| panic!("burst request {i} lost: {e}"));
+        assert_eq!(r.logits, tagged_logits(&img(i as i32), 1.0), "request {i} cross-wired");
+    }
+    let cs = fleet.class_summary(RequestClass::Latency);
+    assert!(cs.scale_up >= 1, "the burst never triggered a scale-up");
+    assert!(cs.spawned >= 2, "no worker beyond the initial one was spawned");
+    assert!(
+        fleet.workers(RequestClass::Latency) <= 3,
+        "autoscaler exceeded max_workers"
+    );
+
+    // idle: with the queue empty, retire orders must drain the pool
+    // back to min_workers (5 idle ticks at 1ms — poll generously)
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let workers = fleet.workers(RequestClass::Latency);
+        let down = fleet.class_summary(RequestClass::Latency).scale_down;
+        if workers == 1 && down >= 1 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "pool never retired to the floor (workers {workers}, scale_down {down})"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // the shrunk pool still serves
+    let r = fleet.infer(img(99), RequestClass::Latency).unwrap();
+    assert_eq!(r.logits, tagged_logits(&img(99), 1.0));
+    fleet.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// class routing
+// ---------------------------------------------------------------------
+
+#[test]
+fn classes_route_to_their_own_pools() {
+    // distinguishable backends per class: the logit tag proves which
+    // pool served each request
+    let lat_ctl = Arc::new(Control::default());
+    let thr_ctl = Arc::new(Control::default());
+    let fleet = Fleet::start_with(
+        flaky_factory(lat_ctl.clone(), 1.0),
+        flaky_factory(thr_ctl.clone(), 2.0),
+        IMAGE_PX,
+        1_000,
+        quiet_cfg(),
+    )
+    .unwrap();
+
+    for i in 0..6 {
+        let class = if i % 2 == 0 { RequestClass::Latency } else { RequestClass::Throughput };
+        let tag = if class == RequestClass::Latency { 1.0 } else { 2.0 };
+        let r = fleet.infer(img(i), class).unwrap();
+        assert_eq!(r.logits, tagged_logits(&img(i), tag), "request {i} routed to the wrong pool");
+    }
+    assert_eq!(fleet.class_summary(RequestClass::Latency).summary.completed, 3);
+    assert_eq!(fleet.class_summary(RequestClass::Throughput).summary.completed, 3);
+    assert!(lat_ctl.calls.load(Ordering::SeqCst) >= 3);
+    assert!(thr_ctl.calls.load(Ordering::SeqCst) >= 3);
+
+    // a misshapen image bounces at admission for either class
+    for class in RequestClass::ALL {
+        match fleet.try_submit(vec![1; IMAGE_PX + 1], None, class) {
+            Err(SubmitError::BadShape { got, want }) => {
+                assert_eq!((got, want), (IMAGE_PX + 1, IMAGE_PX))
+            }
+            other => panic!("bad shape admitted for {class}: {other:?}"),
+        }
+    }
+    fleet.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// total-loss chaos: every worker dies, nothing hangs
+// ---------------------------------------------------------------------
+
+#[test]
+fn fleet_resolves_all_tickets_when_rebuild_fails_permanently() {
+    // the latency factory builds exactly one (always-failing) backend,
+    // then refuses every rebuild/respawn: the pool's only worker dies
+    // permanently, and shutdown must still resolve every admitted ticket
+    let ctl = Arc::new(Control::default());
+    ctl.fail_next.store(u64::MAX, Ordering::SeqCst);
+    ctl.max_builds.store(1, Ordering::SeqCst);
+    let healthy = Arc::new(Control::default());
+    let mut cfg = quiet_cfg();
+    cfg.retry_budget = 0; // first failure sheds typed, no re-runs
+    let fleet = Fleet::start_with(
+        flaky_factory(ctl.clone(), 1.0),
+        flaky_factory(healthy.clone(), 2.0),
+        IMAGE_PX,
+        1_000,
+        cfg,
+    )
+    .unwrap();
+
+    let tickets: Vec<_> = (0..6)
+        .map(|i| fleet.try_submit(img(i), None, RequestClass::Latency).unwrap())
+        .collect();
+    // give the worker time to fail its first batch and exhaust the
+    // rebuild backoff (8 refused builds), then tear the fleet down with
+    // requests still queued
+    std::thread::sleep(Duration::from_millis(100));
+    fleet.shutdown();
+
+    let (mut exhausted, mut shutdown) = (0u64, 0u64);
+    for (i, t) in tickets.into_iter().enumerate() {
+        match t.wait() {
+            Err(ServeError::RetriesExhausted { attempts }) => {
+                assert_eq!(attempts, 1);
+                exhausted += 1;
+            }
+            Err(ServeError::Shutdown) | Err(ServeError::Disconnected) => shutdown += 1,
+            other => panic!("ticket {i} resolved to {other:?} with a dead pool"),
+        }
+    }
+    assert_eq!(exhausted + shutdown, 6, "a ticket vanished with the dead pool");
+    assert!(exhausted >= 1, "the armed fault never fired");
+    assert!(shutdown >= 1, "queued requests were not drained as Shutdown");
+}
+
+// ---------------------------------------------------------------------
+// regression: S21 coordinator shutdown/admission race (satellite fix)
+// ---------------------------------------------------------------------
+
+#[test]
+fn coordinator_resolves_tickets_when_every_worker_dies() {
+    // one worker whose backend always fails and whose rebuild is
+    // refused: before the fix, requests admitted between `try_submit`
+    // and the batcher's dispatch could hang forever once the worker's
+    // queue dropped — now they resolve typed and later submissions see
+    // `SubmitError::Shutdown`
+    let ctl = Arc::new(Control::default());
+    ctl.fail_next.store(u64::MAX, Ordering::SeqCst);
+    ctl.max_builds.store(1, Ordering::SeqCst);
+    let coord = Coordinator::start_with(
+        flaky_factory(ctl, 1.0),
+        IMAGE_PX,
+        1_000,
+        ServeConfig {
+            workers: 1,
+            max_batch: 2,
+            max_wait: Duration::from_micros(200),
+            queue_depth: 64,
+        },
+    )
+    .unwrap();
+
+    let tickets: Vec<_> = (0..8).map(|i| coord.submit(img(i)).unwrap()).collect();
+    let mut outcomes = [0u64; 3]; // [worker_failed, shutdown, disconnected]
+    for (i, t) in tickets.into_iter().enumerate() {
+        match t.wait() {
+            Err(ServeError::WorkerFailed(_)) => outcomes[0] += 1,
+            Err(ServeError::Shutdown) => outcomes[1] += 1,
+            Err(ServeError::Disconnected) => outcomes[2] += 1,
+            other => panic!("ticket {i} resolved to {other:?} with a dead pool"),
+        }
+    }
+    assert_eq!(outcomes.iter().sum::<u64>(), 8, "a ticket hung or vanished");
+    assert!(outcomes[0] >= 1, "the armed fault never fired");
+
+    // once the batcher observes the dead pool it exits, and admission
+    // itself turns into the typed shutdown error
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        match coord.try_submit(img(0), None) {
+            Err(SubmitError::Shutdown) => break,
+            Ok(t) => {
+                // still admitted: the ticket must resolve typed, not hang
+                match t.wait() {
+                    Err(
+                        ServeError::WorkerFailed(_)
+                        | ServeError::Shutdown
+                        | ServeError::Disconnected,
+                    ) => {}
+                    other => panic!("late ticket resolved to {other:?}"),
+                }
+            }
+            Err(e) => panic!("unexpected admission outcome: {e:?}"),
+        }
+        assert!(
+            Instant::now() < deadline,
+            "admission never surfaced SubmitError::Shutdown"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    coord.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// graceful shutdown drains queued traffic
+// ---------------------------------------------------------------------
+
+#[test]
+fn fleet_shutdown_drains_queued_requests() {
+    let ctl = Arc::new(Control::default());
+    ctl.slow_ms.store(5, Ordering::Relaxed);
+    let mut cfg = quiet_cfg();
+    cfg.max_batch = 2;
+    let fleet = Fleet::start_with(
+        flaky_factory(ctl.clone(), 1.0),
+        flaky_factory(ctl.clone(), 2.0),
+        IMAGE_PX,
+        1_000,
+        cfg,
+    )
+    .unwrap();
+
+    // queue more work than one slow worker can have started, then shut
+    // down immediately: workers drain the queue before exiting, so every
+    // ticket completes (shutdown waits, it does not drop)
+    let tickets: Vec<_> = (0..8)
+        .map(|i| fleet.try_submit(img(i), None, RequestClass::Latency).unwrap())
+        .collect();
+    fleet.shutdown();
+    for (i, t) in tickets.into_iter().enumerate() {
+        let r = t
+            .wait()
+            .unwrap_or_else(|e| panic!("request {i} dropped by graceful shutdown: {e}"));
+        assert_eq!(r.logits, tagged_logits(&img(i as i32), 1.0));
+    }
+}

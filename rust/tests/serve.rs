@@ -18,7 +18,7 @@ use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::TcpStream;
 use std::time::Duration;
 
-use lutmul::coordinator::{Coordinator, ServeConfig, ServeError};
+use lutmul::coordinator::{Coordinator, RequestClass, ServeConfig, ServeError};
 use lutmul::engine::{BackendKind, Engine};
 use lutmul::graph::executor::{Datapath, Executor, Tensor};
 use lutmul::graph::mobilenet_v2_small;
@@ -54,10 +54,17 @@ fn engine_over(net: &Network) -> Engine {
         .unwrap()
 }
 
-/// Put one request frame on the wire.
+/// Put one request frame on the wire (latency class — these suites
+/// exercise the single-pool coordinator; fleet routing lives in
+/// `tests/fleet.rs`).
 fn send_req(w: &mut impl Write, id: u64, deadline_us: u32, image: &[i32]) {
     let codes: Vec<u8> = image.iter().map(|&c| c as u8).collect();
-    let frame = proto::encode_request(&RequestFrame { id, deadline_us, codes });
+    let frame = proto::encode_request(&RequestFrame {
+        id,
+        deadline_us,
+        class: RequestClass::Latency,
+        codes,
+    });
     proto::write_frame(w, &frame).unwrap();
     w.flush().unwrap();
 }
